@@ -1,0 +1,43 @@
+//! Perf probe for the simulator hot loop (EXPERIMENTS.md §Perf): measures
+//! PE-cycle-step throughput of `simulate_tile` on a VGG-class tile,
+//! best-of-6 chunks to ride out scheduler noise on small machines.
+//!
+//! ```bash
+//! cargo run --release --example perfprobe
+//! ```
+
+use s2engine::compiler::mapping::{build_tile, LayerMapping, TileSource};
+use s2engine::config::ArrayConfig;
+use s2engine::models::LayerDesc;
+use s2engine::sim::simulate_tile;
+
+fn main() {
+    let layer = LayerDesc::new("vggish", 28, 28, 256, 3, 3, 256, 1, 1);
+    let mapping = LayerMapping::new(&layer, 16, 16);
+    let src = TileSource::Synthetic {
+        feature_density: 0.35,
+        weight_density: 0.35,
+        clustered: true,
+    };
+    let tile = build_tile(&mapping, mapping.n_col_tiles() + 1, &src, 0.0, 7);
+    let cfg = ArrayConfig::new(16, 16);
+    for _ in 0..5 {
+        std::hint::black_box(simulate_tile(&tile, &cfg, true));
+    }
+    let mut best = f64::MAX;
+    for _ in 0..6 {
+        let t = std::time::Instant::now();
+        let mut cycles = 0u64;
+        for _ in 0..20 {
+            cycles += simulate_tile(&tile, &cfg, true).ds_cycles;
+        }
+        let el = t.elapsed().as_secs_f64();
+        eprint!("{:.1} ", cycles as f64 * 256.0 / el / 1e6);
+        best = best.min(el);
+    }
+    let cycles20 = 20 * simulate_tile(&tile, &cfg, true).ds_cycles;
+    println!(
+        "\nBEST: {:.1} M PE-steps/s",
+        cycles20 as f64 * 256.0 / best / 1e6
+    );
+}

@@ -1,0 +1,141 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO
+*text* artifacts that the Rust runtime loads over PJRT.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (plus `manifest.json` describing shapes for Rust):
+
+    gemm.hlo.txt          (x[64,144] f32, y[144,32] f32) -> (o[64,32],)
+    cnn_features.hlo.txt  (img[4,32,32,3], w1..w4)       -> (f1..f4)
+    relu_quant.hlo.txt    (x[4096] f32)                  -> (q[4096] i8,)
+
+Usage (from python/): python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.quant import relu_quant
+from .kernels.ref import GROUP_LEN
+
+#: Fixed GEMM artifact shape: M=64 rows of patches, K=9*16 (a 3x3 kernel
+#: over one 16-channel group-padded input), N=32 output channels.
+GEMM_M, GEMM_K, GEMM_N = 64, 144, 32
+QUANT_LEN = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps with to_tuple{1,N})."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_gemm() -> str:
+    return to_hlo_text(
+        jax.jit(model.gemm_entry).lower(
+            _spec((GEMM_M, GEMM_K)), _spec((GEMM_K, GEMM_N))
+        )
+    )
+
+
+def lower_cnn_features() -> str:
+    img = _spec((model.BATCH, model.IMG_HW, model.IMG_HW, 3))
+    wspecs = [
+        _spec((s.kh, s.kw, model._pad_cin(s.cin), s.cout)) for s in model.LAYERS
+    ]
+    return to_hlo_text(jax.jit(model.forward_features).lower(img, *wspecs))
+
+
+def lower_relu_quant() -> str:
+    def entry(x):
+        return (relu_quant(x, model.QUANT_SCALE),)
+
+    return to_hlo_text(jax.jit(entry).lower(_spec((QUANT_LEN,))))
+
+
+def manifest() -> dict:
+    """Shape/layout metadata consumed by rust/src/runtime/artifacts.rs."""
+    return {
+        "group_len": GROUP_LEN,
+        "quant_scale": model.QUANT_SCALE,
+        "gemm": {"m": GEMM_M, "k": GEMM_K, "n": GEMM_N, "file": "gemm.hlo.txt"},
+        "relu_quant": {"len": QUANT_LEN, "file": "relu_quant.hlo.txt"},
+        "cnn": {
+            "file": "cnn_features.hlo.txt",
+            "batch": model.BATCH,
+            "img_hw": model.IMG_HW,
+            "img_c": 3,
+            "layers": [
+                {
+                    "name": s.name,
+                    "kh": s.kh,
+                    "kw": s.kw,
+                    "cin": s.cin,
+                    "cin_padded": model._pad_cin(s.cin),
+                    "cout": s.cout,
+                    "stride": s.stride,
+                    "pad": s.pad,
+                }
+                for s in model.LAYERS
+            ],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--out", default=None, help="legacy single-file alias; writes gemm HLO"
+    )
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    if args.out:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    jobs = {
+        "gemm.hlo.txt": lower_gemm,
+        "cnn_features.hlo.txt": lower_cnn_features,
+        "relu_quant.hlo.txt": lower_relu_quant,
+    }
+    for fname, fn in jobs.items():
+        text = fn()
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    # legacy alias expected by the original Makefile stamp rule
+    alias = os.path.join(outdir, "model.hlo.txt")
+    with open(os.path.join(outdir, "gemm.hlo.txt")) as src, open(alias, "w") as dst:
+        dst.write(src.read())
+
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote manifest        {mpath}")
+
+
+if __name__ == "__main__":
+    main()

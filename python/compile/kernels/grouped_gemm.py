@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: group-tiled GEMM — the compute hot-spot of S2Engine.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): S2Engine is a
+sparse systolic ASIC whose PEs skip zero operand pairs. Fine-grained
+zero-skipping does not map onto the TPU MXU, so this kernel implements the
+paper's *dataflow* insight instead — the channel-grouped schedule:
+
+  * the K (reduction) axis is tiled at GROUP_LEN=16, exactly the ECOO
+    group length. One grid step over axis 2 streams one "group" of every
+    patch row through the MXU, mirroring one CE-array period (Fig. 8)
+    where one group is resident per CE;
+  * the output block stays resident in VMEM across all K steps — the
+    output-stationary dataflow of the paper's PE array (each PE owns one
+    output element; here each VMEM tile owns a bm x bn output block);
+  * the BlockSpec index maps express the HBM<->VMEM schedule that the
+    paper expresses with FIFO broadcasts: the x-tile for (i, k) is reused
+    across all j (feature reuse), the y-tile for (k, j) across all i
+    (weight reuse), and consecutive k-tiles of the same i row realize the
+    overlap reuse the CE array provides.
+
+`interpret=True` everywhere — the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* structurally in
+DESIGN.md (VMEM footprint + MXU utilization), never from interpret-mode
+wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import GROUP_LEN
+
+#: Default output tile. 8x128 lanes per MXU pass; bm=bn=32 keeps the toy
+#: CIFAR-scale shapes divisible while still exercising multi-tile grids.
+DEFAULT_BM = 32
+DEFAULT_BN = 32
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, *, relu: bool, nsteps: int):
+    """Grid = (M/bm, N/bn, K/GROUP_LEN); axis 2 is the group stream.
+
+    o_ref is revisited for every k step (output stationary): zero it on the
+    first group, accumulate a bm x bn MXU product per group, and apply the
+    optional fused ReLU on the last group.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    if relu:
+        @pl.when(k == nsteps - 1)
+        def _activate():
+            o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def grouped_gemm(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Compute ``x @ y`` (optionally fused ReLU) with the grouped schedule.
+
+    Requires M % bm == 0, N % bn == 0 and K % GROUP_LEN == 0 (the compiler
+    pads to the group length anyway — `ref.pad_to_group`). f32 output.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    if m % bm or n % bn or k % GROUP_LEN:
+        raise ValueError(
+            f"shape ({m},{k})x({k2},{n}) not tiled by bm={bm}, bn={bn}, "
+            f"group={GROUP_LEN}"
+        )
+    nsteps = k // GROUP_LEN
+    kernel = functools.partial(_gemm_kernel, relu=relu, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nsteps),
+        in_specs=[
+            # feature-patch tile: reused across all j (feature reuse)
+            pl.BlockSpec((bm, GROUP_LEN), lambda i, j, kk: (i, kk)),
+            # weight tile: reused across all i (weight reuse)
+            pl.BlockSpec((GROUP_LEN, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN) -> int:
+    """Per-step VMEM residency of the kernel, used for the structural perf
+    analysis in DESIGN.md (interpret-mode wallclock is meaningless).
+
+    One x tile (bm x 16 f32), one y tile (16 x bn f32) and the resident
+    output block (bm x bn f32).
+    """
+    return 4 * (bm * GROUP_LEN + GROUP_LEN * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int = DEFAULT_BM,
+                             bn: int = DEFAULT_BN) -> float:
+    """Fraction of 128x128 MXU lanes busy per pass for this tiling —
+    min(bm,128)*min(bn,128)/128^2 scaled by K-stream occupancy (the
+    16-deep group tile fills 16/128 of the systolic depth per pass; on a
+    real TPU we would fuse 8 groups per pass, which the compiler's group
+    coalescing mirrors)."""
+    lanes = (min(bm, 128) * min(bn, 128)) / (128.0 * 128.0)
+    depth = min(GROUP_LEN * 8, 128) / 128.0  # 8-group coalescing
+    return lanes * depth

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused ReLU + symmetric int8 quantization.
+
+This is the inter-layer step of the paper's 8-bit datapath (Section 4.5):
+after a convolution, activations pass through ReLU and are re-quantized to
+8 bits before being compressed into the ECOO feature flow of the next
+layer. ReLU is also where *feature sparsity* is born — every zero this
+kernel emits is a token the next layer's DS component will skip — so its
+output feeds both the numerics (next conv) and the sparsity statistics the
+simulator consumes.
+
+Elementwise, tiled over rows so arbitrary feature-map sizes stream through
+a fixed VMEM block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _relu_quant_kernel(x_ref, o_ref, *, scale: float):
+    q = jnp.round(jnp.maximum(x_ref[...], 0.0) / scale)
+    o_ref[...] = jnp.clip(q, 0, 127).astype(jnp.int8)
+
+
+def relu_quant(x: jnp.ndarray, scale: float, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """ReLU + symmetric int8 quantize, matching `ref.relu_quant_ref`.
+
+    `x` is flattened to [rows, cols]; rows must tile by `block` after the
+    caller's padding (the L2 model always passes group-padded shapes).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    padded = flat.shape[0]
+    kernel = functools.partial(_relu_quant_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int8),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(x.shape)

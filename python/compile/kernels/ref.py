@@ -1,0 +1,143 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Everything in this module is the *specification*: the Pallas kernels in
+`grouped_gemm.py` / `quant.py` must match these functions bit-for-bit (f32)
+or within quantization tolerance (int8 path). The pytest suite in
+`python/tests/` asserts that equivalence across a hypothesis-driven sweep
+of shapes and dtypes.
+
+The S2Engine mapping context: the paper reshapes each convolution into a
+1-D dataflow grouped along channels at GROUP_LEN=16 (Fig. 5 / Fig. 8).
+Here the same grouping shows up as the K-tile of the GEMM: `im2col`
+produces a patch matrix whose K axis is ordered channel-group-major, so
+one ECOO group in the paper == one K-tile of 16 in the kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+#: ECOO group length from the paper (Section 4.2): 4-bit offsets.
+GROUP_LEN = 16
+
+
+def gemm_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 GEMM — the oracle for the Pallas grouped GEMM."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def gemm_relu_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """GEMM with fused ReLU — oracle for the fused kernel variant."""
+    return jnp.maximum(gemm_ref(x, y), 0.0)
+
+
+def relu_quant_ref(x: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """ReLU then symmetric int8 quantization — oracle for the quant kernel.
+
+    Matches the paper's 8-bit datapath (Section 4.5): values are clipped to
+    [0, 127] after ReLU (post-ReLU data is non-negative).
+    """
+    q = jnp.round(jnp.maximum(x, 0.0) / scale)
+    return jnp.clip(q, 0, 127).astype(jnp.int8)
+
+
+def dequant_ref(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def pad_to_group(x: np.ndarray, axis: int, group: int = GROUP_LEN) -> np.ndarray:
+    """Zero-pad `axis` of `x` up to a multiple of `group`.
+
+    The compiler does the same padding before ECOO encoding: an all-zero
+    tail group compresses to a single EOG placeholder, so padding is free
+    in the compressed dataflow.
+    """
+    n = x.shape[axis]
+    pad = (-n) % group
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths)
+
+
+def im2col(feat: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """NHWC feature map -> patch matrix [N*OH*OW, KH*KW*C].
+
+    Patch K-axis layout is (kh, kw, c) with c fastest — i.e. contiguous
+    channel runs — so channel groups of GROUP_LEN form contiguous K-tiles.
+    This is the "reshaped at the granularity of groups" layout from
+    Section 4.1/4.4 of the paper.
+    """
+    n, h, w, c = feat.shape
+    fp = jnp.pad(feat, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            window = lax.slice(
+                fp,
+                (0, i, j, 0),
+                (n, i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            patches.append(window.reshape(n * oh * ow, c))
+    return jnp.concatenate(patches, axis=1)
+
+
+def kernel2mat(weights: jnp.ndarray) -> jnp.ndarray:
+    """Conv weights [KH, KW, C, D] -> GEMM matrix [KH*KW*C, D].
+
+    Row layout matches `im2col`'s K layout: (kh, kw, c), c fastest.
+    """
+    kh, kw, c, d = weights.shape
+    return weights.reshape(kh * kw * c, d)
+
+
+def conv2d_ref(
+    feat: jnp.ndarray,
+    weights: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Direct NHWC conv2d via lax — the end-to-end oracle for the L2 model.
+
+    `feat`: [N, H, W, C], `weights`: [KH, KW, C, D] -> [N, OH, OW, D].
+    """
+    out = lax.conv_general_dilated(
+        feat.astype(jnp.float32),
+        weights.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv2d_im2col_ref(
+    feat: jnp.ndarray,
+    weights: jnp.ndarray,
+    stride: int = 1,
+    pad: int = 0,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """conv2d computed through the im2col+GEMM path with jnp.matmul.
+
+    This isolates the reshaping logic: it must equal `conv2d_ref`, and the
+    Pallas path must equal it in turn.
+    """
+    n, h, w, _ = feat.shape
+    kh, kw, _, d = weights.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    patches = im2col(feat, kh, kw, stride, pad)
+    out = gemm_ref(patches, kernel2mat(weights))
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out.reshape(n, oh, ow, d)

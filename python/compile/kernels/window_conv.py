@@ -1,0 +1,81 @@
+"""L1 Pallas kernel variant: direct windowed convolution.
+
+Where `grouped_gemm` computes conv through an explicit im2col (the exact
+reshape the Rust compiler performs for ECOO), this kernel keeps the
+feature map in its natural NHWC layout and walks the kh x kw taps
+*inside* the kernel, accumulating tap-GEMMs over VMEM-resident rows.
+This is the CE-array analogy at its sharpest (DESIGN.md
+S-Hardware-Adaptation): adjacent output rows reuse overlapping input
+rows without re-materializing them — on TPU that overlap lives in VMEM
+instead of a CE FIFO chain, and no im2col copies ever exist in HBM.
+
+Grid: one step per (batch, output row). The feature map is passed
+un-blocked (whole-array ref) and sliced per tap; outputs are written one
+row at a time. interpret=True as always (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, ow: int, relu: bool):
+    """Compute one output row: sum over taps of x[row+ky, kx:kx+ow] @ w[ky,kx]."""
+    n = pl.program_id(0)
+    oy = pl.program_id(1)
+    cin = x_ref.shape[3]
+    d = w_ref.shape[3]
+    acc = jnp.zeros((ow, d), dtype=jnp.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            # x slice: [ow, cin] window of input row oy+ky starting at kx
+            window = x_ref[n, oy + ky, pl.dslice(kx, ow), :]
+            tap = w_ref[ky, kx, :, :]
+            acc += jnp.dot(
+                window.reshape(ow, cin).astype(jnp.float32),
+                tap.reshape(cin, d).astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[n, oy, :, :] = acc
+
+
+def window_conv(
+    feat: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Direct conv2d, stride 1: feat [N,H,W,C] * w [KH,KW,C,D] -> NHWC.
+
+    Padding is applied outside the kernel (zero-pad is free in the ECOO
+    view; here it just extends the input rows the taps slide over).
+    """
+    if pad:
+        feat = jnp.pad(feat, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    n, h, wd, c = feat.shape
+    kh, kw, c2, d = w.shape
+    if c != c2:
+        raise ValueError(f"channel mismatch {c} vs {c2}")
+    oh = h - kh + 1
+    ow = wd - kw + 1
+    kernel = functools.partial(_row_kernel, kh=kh, kw=kw, ow=ow, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, oh),
+        in_specs=[
+            # whole-array refs: taps slice them dynamically (the VMEM-
+            # resident overlap window)
+            pl.BlockSpec(feat.shape, lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, oh, ow, d), lambda i, j: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, d), jnp.float32),
+        interpret=True,
+    )(feat, w)

@@ -1,0 +1,162 @@
+"""L2: the JAX model — a small CNN whose conv layers run through the L1
+Pallas grouped-GEMM kernel.
+
+This is the "real numerics" half of the reproduction (DESIGN.md §3): the
+S2Engine evaluation needs *real ReLU feature maps* whose sparsity drives
+the cycle-accurate simulator. `forward_features` is AOT-lowered by
+`aot.py` into `artifacts/cnn_features.hlo.txt`; the Rust runtime executes
+it over PJRT with pruned weights and feeds the resulting sparse features
+into the compiler + simulator (end_to_end example, real-feature mode).
+
+The network ("S2Net") is CIFAR-scale so the artifact compiles in seconds:
+
+    conv1 3x3  3->32  s1 p1   32x32x32     (input channels padded 3->16)
+    conv2 3x3 32->32  s2 p1   16x16x32
+    conv3 3x3 32->64  s1 p1   16x16x64
+    conv4 1x1 64->64  s1 p0   16x16x64
+    GAP + linear 64->10
+
+Every conv is im2col + `grouped_gemm` (Pallas, fused ReLU), so all hot
+FLOPs lower through the L1 kernel. All channel counts are multiples of the
+ECOO GROUP_LEN=16 and the kernel tiles (32), mirroring the compiler's
+group padding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.grouped_gemm import grouped_gemm
+from .kernels.quant import relu_quant
+from .kernels.ref import GROUP_LEN, im2col, kernel2mat
+
+#: Activation quantization scale used by the int8 inter-layer path; fixed
+#: at export time and recorded in the artifact manifest.
+QUANT_SCALE = 0.05
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One conv layer of S2Net (mirrors rust/src/models/ LayerDesc)."""
+
+    name: str
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    stride: int
+    pad: int
+
+    def out_hw(self, h: int, w: int) -> Tuple[int, int]:
+        oh = (h + 2 * self.pad - self.kh) // self.stride + 1
+        ow = (w + 2 * self.pad - self.kw) // self.stride + 1
+        return oh, ow
+
+
+LAYERS: List[LayerSpec] = [
+    LayerSpec("conv1", 3, 3, 3, 32, 1, 1),
+    LayerSpec("conv2", 3, 3, 32, 32, 2, 1),
+    LayerSpec("conv3", 3, 3, 32, 64, 1, 1),
+    LayerSpec("conv4", 1, 1, 64, 64, 1, 0),
+]
+
+#: Fixed batch/image shape baked into the AOT artifact.
+BATCH = 4
+IMG_HW = 32
+NUM_CLASSES = 10
+
+
+def _pad_cin(c: int) -> int:
+    """Input channels are zero-padded to the group length so the im2col K
+    axis tiles by GROUP_LEN (padding zeros compress to EOG placeholders in
+    the ECOO flow — see ref.pad_to_group)."""
+    return c if c % GROUP_LEN == 0 else c + (GROUP_LEN - c % GROUP_LEN)
+
+
+def init_params(key: jax.Array) -> List[jnp.ndarray]:
+    """He-init conv weights, shape [KH, KW, Cin_padded, Cout] per layer,
+    plus the [64, NUM_CLASSES] classifier matrix (last entry)."""
+    params: List[jnp.ndarray] = []
+    for spec in LAYERS:
+        key, sub = jax.random.split(key)
+        cin = _pad_cin(spec.cin)
+        fan_in = spec.kh * spec.kw * cin
+        w = jax.random.normal(sub, (spec.kh, spec.kw, cin, spec.cout)) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        if cin != spec.cin:
+            # zero the padded input channels so they contribute nothing
+            w = w.at[:, :, spec.cin :, :].set(0.0)
+        params.append(w.astype(jnp.float32))
+    key, sub = jax.random.split(key)
+    params.append(
+        (jax.random.normal(sub, (LAYERS[-1].cout, NUM_CLASSES)) * 0.05).astype(
+            jnp.float32
+        )
+    )
+    return params
+
+
+def conv_layer(
+    feat: jnp.ndarray, w: jnp.ndarray, spec: LayerSpec, *, relu: bool = True
+) -> jnp.ndarray:
+    """One conv through the Pallas path: channel-pad, im2col, grouped GEMM
+    with fused ReLU, reshape back to NHWC."""
+    n, h, wd, c = feat.shape
+    cin = w.shape[2]
+    if c < cin:
+        feat = jnp.pad(feat, ((0, 0), (0, 0), (0, 0), (0, cin - c)))
+    patches = im2col(feat, spec.kh, spec.kw, spec.stride, spec.pad)
+    out = grouped_gemm(patches, kernel2mat(w), relu=relu)
+    oh, ow = spec.out_hw(h, wd)
+    return out.reshape(n, oh, ow, spec.cout)
+
+
+def forward_features(x: jnp.ndarray, *weights: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Run the conv stack, returning every post-ReLU feature map.
+
+    This is the function AOT-exported for the Rust runtime: signature
+    (image, w1..w4) -> (f1, f2, f3, f4). Zeros in the returned maps are
+    the *real* feature sparsity the simulator consumes.
+    """
+    feats = []
+    f = x
+    for spec, w in zip(LAYERS, weights):
+        f = conv_layer(f, w, spec, relu=True)
+        feats.append(f)
+    return tuple(feats)
+
+
+def forward(x: jnp.ndarray, params: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Full classifier forward: conv stack + GAP + linear -> logits."""
+    feats = forward_features(x, *params[: len(LAYERS)])
+    pooled = feats[-1].mean(axis=(1, 2))  # [N, 64]
+    return pooled @ params[-1]
+
+
+def forward_quantized(
+    x: jnp.ndarray, params: Sequence[jnp.ndarray], scale: float = QUANT_SCALE
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """int8 inter-layer variant: each activation map passes through the
+    Pallas relu_quant kernel and is dequantized before the next conv —
+    modelling the paper's 8-bit datapath between layers (Section 4.5).
+    Returns (logits, int8 feature maps)."""
+    qfeats = []
+    f = x
+    for spec, w in zip(LAYERS, params[: len(LAYERS)]):
+        pre = conv_layer(f, w, spec, relu=False)
+        q = relu_quant(pre, scale)
+        qfeats.append(q)
+        f = q.astype(jnp.float32) * scale
+    pooled = f.mean(axis=(1, 2))
+    return pooled @ params[-1], tuple(qfeats)
+
+
+def gemm_entry(x: jnp.ndarray, y: jnp.ndarray) -> Tuple[jnp.ndarray]:
+    """Bare grouped-GEMM entry point exported as its own artifact for the
+    Rust runtime's numeric cross-check (runtime::verify)."""
+    return (grouped_gemm(x, y, relu=False),)

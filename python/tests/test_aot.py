@@ -1,0 +1,66 @@
+"""AOT pipeline checks: every artifact lowers to parseable HLO text with
+the entry signature the Rust runtime expects, and the manifest is
+consistent with the model."""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def gemm_hlo():
+    return aot.lower_gemm()
+
+
+@pytest.fixture(scope="module")
+def quant_hlo():
+    return aot.lower_relu_quant()
+
+
+def test_gemm_hlo_nonempty(gemm_hlo):
+    assert "ENTRY" in gemm_hlo and len(gemm_hlo) > 500
+
+
+def test_gemm_hlo_shapes_in_signature(gemm_hlo):
+    # parameters f32[64,144] and f32[144,32] must appear
+    assert f"f32[{aot.GEMM_M},{aot.GEMM_K}]" in gemm_hlo
+    assert f"f32[{aot.GEMM_K},{aot.GEMM_N}]" in gemm_hlo
+
+
+def test_gemm_hlo_returns_tuple(gemm_hlo):
+    # lowered with return_tuple=True: root is a tuple of one f32[64,32]
+    assert f"(f32[{aot.GEMM_M},{aot.GEMM_N}]" in gemm_hlo
+
+
+def test_gemm_hlo_no_custom_calls(gemm_hlo):
+    """interpret=True must lower pallas to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    assert "custom-call" not in gemm_hlo.lower() or "mosaic" not in gemm_hlo.lower()
+
+
+def test_relu_quant_hlo(quant_hlo):
+    assert "ENTRY" in quant_hlo
+    assert f"f32[{aot.QUANT_LEN}]" in quant_hlo
+    assert f"s8[{aot.QUANT_LEN}]" in quant_hlo
+
+
+def test_cnn_features_hlo():
+    text = aot.lower_cnn_features()
+    assert "ENTRY" in text
+    assert "f32[4,32,32,3]" in text
+    # all four feature outputs present in the root tuple
+    assert "f32[4,32,32,32]" in text
+    assert "f32[4,16,16,64]" in text
+
+
+def test_manifest_matches_model():
+    m = aot.manifest()
+    assert m["group_len"] == 16
+    assert len(m["cnn"]["layers"]) == len(model.LAYERS)
+    for entry, spec in zip(m["cnn"]["layers"], model.LAYERS):
+        assert entry["name"] == spec.name
+        assert entry["cout"] == spec.cout
+        assert entry["cin_padded"] % 16 == 0
+    json.dumps(m)  # must be serializable

@@ -1,0 +1,131 @@
+"""L2 correctness: the S2Net model through the Pallas path vs lax convs.
+
+Verifies the im2col/grouping reshape logic (the exact transform the Rust
+compiler re-implements for the ECOO dataflow), the full feature stack,
+and the int8 quantized inter-layer variant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def image():
+    return jax.random.normal(jax.random.PRNGKey(7), (model.BATCH, 32, 32, 3))
+
+
+# ----------------------------------------------------------- im2col path --
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    c=st.sampled_from([16, 32]),
+    d=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_im2col_equals_lax(k, stride, c, d, seed):
+    """Property: im2col+GEMM == direct lax conv for any kernel/stride."""
+    pad = k // 2
+    key1, key2 = jax.random.split(jax.random.PRNGKey(seed))
+    feat = jax.random.normal(key1, (2, 16, 16, c))
+    w = jax.random.normal(key2, (k, k, c, d)) * 0.1
+    got = ref.conv2d_im2col_ref(feat, w, stride, pad)
+    want = ref.conv2d_ref(feat, w, stride, pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_layer_pallas_equals_lax(params):
+    """Each S2Net layer through the Pallas kernel == lax conv."""
+    feat = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 32, 16))
+    spec = model.LAYERS[1]  # 3x3 32->32 s2 — feat padded 16->32 internally
+    w = params[1]
+    got = model.conv_layer(feat, w, spec, relu=True)
+    padded = jnp.pad(feat, ((0, 0), (0, 0), (0, 0), (0, 16)))
+    want = ref.conv2d_ref(padded, w, spec.stride, spec.pad, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- full network --
+
+
+def test_forward_features_shapes(params, image):
+    feats = model.forward_features(image, *params[:4])
+    assert [tuple(f.shape) for f in feats] == [
+        (4, 32, 32, 32),
+        (4, 16, 16, 32),
+        (4, 16, 16, 64),
+        (4, 16, 16, 64),
+    ]
+
+
+def test_forward_features_vs_lax(params, image):
+    """Whole conv stack equals a lax-only reimplementation."""
+    feats = model.forward_features(image, *params[:4])
+    f = image
+    for spec, w in zip(model.LAYERS, params[:4]):
+        cin = w.shape[2]
+        if f.shape[-1] < cin:
+            f = jnp.pad(f, ((0, 0), (0, 0), (0, 0), (0, cin - f.shape[-1])))
+        f = ref.conv2d_ref(f, w, spec.stride, spec.pad, relu=True)
+    np.testing.assert_allclose(feats[-1], f, rtol=1e-3, atol=1e-4)
+
+
+def test_features_are_sparse(params, image):
+    """ReLU must actually produce sparsity — the whole premise of the
+    paper's feature-sparsity exploitation."""
+    feats = model.forward_features(image, *params[:4])
+    for f in feats:
+        density = float((np.asarray(f) != 0).mean())
+        assert 0.05 < density < 0.95, f"degenerate density {density}"
+
+
+def test_forward_logits_shape(params, image):
+    logits = model.forward(image, params)
+    assert logits.shape == (model.BATCH, model.NUM_CLASSES)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_quantized_close_to_float(params, image):
+    """int8 inter-layer path tracks the float path within quant error."""
+    logits_f = model.forward(image, params)
+    logits_q, qfeats = model.forward_quantized(image, params)
+    assert all(q.dtype == jnp.int8 for q in qfeats)
+    # correlation, not allclose: 4 layers of int8 re-quantization
+    a = np.asarray(logits_f).ravel()
+    b = np.asarray(logits_q).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.95, f"quantized path diverged (corr={corr})"
+
+
+def test_pruned_weights_flow_through(params, image):
+    """Magnitude-pruned weights (as the Rust side generates) still produce
+    valid, sparser features — the real-feature mode contract."""
+    pruned = []
+    for w in params[:4]:
+        thresh = jnp.quantile(jnp.abs(w), 0.7)
+        pruned.append(jnp.where(jnp.abs(w) >= thresh, w, 0.0))
+    feats = model.forward_features(image, *pruned)
+    for f in feats:
+        assert bool(jnp.isfinite(f).all())
+    w_density = float((np.asarray(pruned[2]) != 0).mean())
+    assert w_density < 0.35
+
+
+def test_init_params_padded_channels_zero(params):
+    """Padded input channels of conv1 must be exactly zero so that the
+    3->16 channel padding contributes nothing."""
+    w1 = np.asarray(params[0])
+    assert (w1[:, :, 3:, :] == 0).all()

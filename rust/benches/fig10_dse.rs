@@ -1,0 +1,38 @@
+//! Bench: regenerates Fig. 10 — speedup vs FIFO depth × DS:MAC frequency
+//! ratio on a 16×16 array, averaged over the three paper CNNs — and
+//! times the design-space-exploration sweep itself.
+//!
+//! Run with `cargo bench --bench fig10_dse` (set BENCH_QUICK=1 for a
+//! fast smoke pass).
+
+use s2engine::report::{fig10, Effort};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let effort = if std::env::var("BENCH_QUICK").is_ok() {
+        Effort::QUICK
+    } else {
+        Effort { tile_samples: 4, layer_stride: 3, images: 500 }
+    };
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_millis(1));
+
+    // Regenerate the figure once and print it (the deliverable), timing
+    // a single-cell simulation as the tracked measurement.
+    let t0 = std::time::Instant::now();
+    let table = fig10(effort, 0x5eed);
+    println!("{table}");
+    println!("full Fig. 10 sweep wall time: {:?}\n", t0.elapsed());
+
+    use s2engine::config::{ArrayConfig, FifoDepths, SimConfig};
+    use s2engine::coordinator::Coordinator;
+    use s2engine::models::zoo;
+    let model = effort.thin(&zoo::alexnet());
+    for depth in [2usize, 4, 8] {
+        let array = ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(depth));
+        let cfg = SimConfig::new(array).with_samples(2);
+        let coord = Coordinator::new(cfg);
+        b.bench(&format!("fig10/alexnet/depth{depth}"), || {
+            black_box(coord.simulate_model(&model, 0));
+        });
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerates Fig. 11 (normalized latency/energy/area-efficiency
+//! vs density, 32×32 synthetic AlexNet, vs naive + SCNN) and Fig. 12 +
+//! Table IV (mixed precision), timing representative cells.
+
+use s2engine::report::{fig11, fig12, table4, Effort};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let effort = if std::env::var("BENCH_QUICK").is_ok() {
+        Effort::QUICK
+    } else {
+        Effort { tile_samples: 4, layer_stride: 3, images: 500 }
+    };
+    let seed = 0x5eed;
+
+    let t0 = std::time::Instant::now();
+    println!("{}", fig11(effort, seed));
+    println!("{}", fig12(effort, seed));
+    println!("{}", table4(effort, seed));
+    println!("figures 11/12 + table IV wall time: {:?}\n", t0.elapsed());
+
+    use s2engine::config::{ArrayConfig, SimConfig};
+    use s2engine::coordinator::Coordinator;
+    use s2engine::models::zoo;
+    let base = zoo::synthetic_alexnet(1.0, 1.0);
+    let mut model = base.clone();
+    model.layers = vec![base.layers[2].clone()];
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_millis(1));
+    for density in [0.2, 0.5, 1.0] {
+        let cfg = SimConfig::new(ArrayConfig::new(32, 32)).with_samples(2);
+        let coord = Coordinator::new(cfg);
+        b.bench(&format!("fig11/conv3/density{density}"), || {
+            black_box(coord.simulate_model_synthetic(&model, density, density));
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerates Figs. 13/14/15/16/17 — the CE-array memory
+//! efficiency study and the full speed/energy/area scaling study across
+//! array scales, FIFO depths and feature-sparsity subsets.
+
+use s2engine::report::{fig13, fig14, fig15, fig16, fig17, Effort};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let effort = if quick {
+        Effort::QUICK
+    } else {
+        Effort { tile_samples: 4, layer_stride: 3, images: 500 }
+    };
+    let seed = 0x5eed;
+    let scales: &[usize] = if quick { &[16] } else { &[16, 32] };
+
+    let t0 = std::time::Instant::now();
+    println!("{}", fig13(effort, seed));
+    println!("{}", fig14(effort, seed, scales));
+    println!("{}", fig15(effort, seed));
+    println!("{}", fig16(effort, seed, scales));
+    println!("{}", fig17(effort, seed, scales));
+    println!("figures 13-17 wall time: {:?}\n", t0.elapsed());
+
+    use s2engine::config::{ArrayConfig, SimConfig};
+    use s2engine::coordinator::Coordinator;
+    use s2engine::models::zoo;
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_millis(1));
+    for scale in [16usize, 32] {
+        let model = effort.thin(&zoo::vgg16());
+        let cfg = SimConfig::new(ArrayConfig::new(scale, scale)).with_samples(2);
+        let coord = Coordinator::new(cfg);
+        b.bench(&format!("fig14/vgg16/{scale}x{scale}"), || {
+            black_box(coord.simulate_model(&model, 0));
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! Bench: the simulator hot path itself (EXPERIMENTS.md §Perf).
+//!
+//! Tracks PE-cycle-step throughput of `simulate_tile` — the quantity the
+//! performance pass optimizes — plus the compiler's stream/ECOO encode
+//! rate. Not a paper figure; this is the engineering-quality metric.
+
+use s2engine::compiler::ecoo::EcooFlow;
+use s2engine::compiler::mapping::{build_tile, LayerMapping, TileSource};
+use s2engine::config::{ArrayConfig, FifoDepths};
+use s2engine::models::LayerDesc;
+use s2engine::sim::simulate_tile;
+use s2engine::util::bench::{black_box, Bench};
+use s2engine::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- ECOO encode/decode throughput
+    let mut rng = Rng::seed_from_u64(1);
+    let data: Vec<i8> = (0..65536)
+        .map(|_| {
+            if rng.gen_f64() < 0.35 {
+                rng.gen_range_u64(1, 127) as i8
+            } else {
+                0
+            }
+        })
+        .collect();
+    let m = b
+        .bench("ecoo/encode 64k elems (35% dense)", || {
+            black_box(EcooFlow::encode(black_box(&data)));
+        })
+        .clone();
+    let elems_per_sec = 65536.0 / m.mean.as_secs_f64();
+    let mut b2 = Bench::new();
+    b2.metric("ecoo/encode throughput", elems_per_sec / 1e6, "Melem/s");
+
+    // --- tile simulation throughput at paper densities
+    let layer = LayerDesc::new("vggish", 28, 28, 256, 3, 3, 256, 1, 1);
+    let mapping = LayerMapping::new(&layer, 16, 16);
+    let src = TileSource::Synthetic {
+        feature_density: 0.35,
+        weight_density: 0.35,
+        clustered: true,
+    };
+    let tile = build_tile(&mapping, mapping.n_col_tiles() + 1, &src, 0.0, 7);
+    for depth in [4usize, 8] {
+        let cfg = ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(depth));
+        let m = b
+            .bench(&format!("sim/tile 16x16 depth{depth} (144 groups)"), || {
+                black_box(simulate_tile(black_box(&tile), &cfg, true));
+            })
+            .clone();
+        let stats = simulate_tile(&tile, &cfg, true);
+        let pe_steps = stats.ds_cycles as f64 * 256.0;
+        b2.metric(
+            &format!("sim/PE-cycle-steps per second (depth{depth})"),
+            pe_steps / m.mean.as_secs_f64() / 1e6,
+            "M steps/s",
+        );
+    }
+
+    // --- 32x32 scaling point
+    let mapping32 = LayerMapping::new(&layer, 32, 32);
+    let tile32 = build_tile(&mapping32, 1, &src, 0.0, 7);
+    let cfg32 = ArrayConfig::new(32, 32);
+    let m = b
+        .bench("sim/tile 32x32 depth4 (144 groups)", || {
+            black_box(simulate_tile(black_box(&tile32), &cfg32, true));
+        })
+        .clone();
+    let stats = simulate_tile(&tile32, &cfg32, true);
+    b2.metric(
+        "sim/PE-cycle-steps per second (32x32)",
+        stats.ds_cycles as f64 * 1024.0 / m.mean.as_secs_f64() / 1e6,
+        "M steps/s",
+    );
+
+    // --- tile build (compiler) cost
+    b.bench("compiler/build_tile 16x16 (synthetic)", || {
+        black_box(build_tile(&mapping, 1, &src, 0.0, 7));
+    });
+}

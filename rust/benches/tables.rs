@@ -1,0 +1,29 @@
+//! Bench: regenerates Tables I, II and V plus Fig. 3 (the
+//! workload-statistics side of the evaluation).
+
+use s2engine::report::{fig3, table1, table2, table5, Effort};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let effort = if std::env::var("BENCH_QUICK").is_ok() {
+        Effort::QUICK
+    } else {
+        Effort { tile_samples: 4, layer_stride: 3, images: 2000 }
+    };
+    let seed = 0x5eed;
+
+    let t0 = std::time::Instant::now();
+    println!("{}", table1());
+    println!("{}", table2(seed));
+    println!("{}", fig3(effort, seed));
+    println!("{}", table5(effort, seed));
+    println!("tables wall time: {:?}\n", t0.elapsed());
+
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_millis(200));
+    b.bench("table1/model-zoo-arithmetic", || {
+        black_box(table1());
+    });
+    b.bench("fig3/density-histograms", || {
+        black_box(fig3(Effort::QUICK, seed));
+    });
+}

@@ -1,0 +1,119 @@
+//! Partial-sparsity comparators — the Table III design space.
+//!
+//! The paper's Table III classifies accelerators by which operand's
+//! sparsity they exploit and at which level (gate the MAC, skip the MAC
+//! cycle, skip the buffer/DRAM access). This module provides analytic
+//! models for the two canonical partial designs so the Table III
+//! comparison can be made *quantitative* (report::table3):
+//!
+//! * **Cnvlutin-class** (feature sparsity only, [15]): skips MAC cycles
+//!   and buffer accesses for zero *features*; zero weights still occupy
+//!   cycles.
+//! * **Cambricon-X-class** (weight sparsity only, [14]): the dual.
+//! * **Eyeriss-class** (feature gating only, [31]): *gates* zero-feature
+//!   MACs (saves energy) but cannot skip the cycle — no speedup.
+//!
+//! All are normalized to the same 1024-multiplier dense baseline used by
+//! the SCNN/SparTen models.
+
+use crate::MAC_FREQ_MHZ;
+
+pub const MULTIPLIERS: u64 = 1024;
+
+/// Which operand's sparsity a design exploits for cycle skipping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exploits {
+    /// Gate only (energy, no cycles): Eyeriss-class.
+    GateFeature,
+    /// Skip cycles on zero features: Cnvlutin-class.
+    SkipFeature,
+    /// Skip cycles on zero weights: Cambricon-X-class.
+    SkipWeight,
+    /// Skip on both: SCNN/SparTen/S2Engine-class (for reference rows).
+    SkipBoth,
+    /// Nothing: TPU-class dense.
+    None,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GatingCost {
+    pub mac_cycles: u64,
+    /// Energy per dense-MAC-equivalent, dense ideal = 1.0.
+    pub energy_per_dense_mac: f64,
+}
+
+impl GatingCost {
+    pub fn wall_seconds(&self) -> f64 {
+        self.mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+    }
+}
+
+/// Analytic cost under a partial-exploitation policy. `overhead` models
+/// the indexing/select logic of the design class (Cnvlutin's offset
+/// lanes, Cambricon-X's indexing module) as a multiplicative energy term
+/// on performed work.
+pub fn cost(dense_macs: u64, df: f64, dw: f64, policy: Exploits) -> GatingCost {
+    let (cycle_fraction, gated_fraction, overhead) = match policy {
+        Exploits::None => (1.0, 1.0, 1.0),
+        Exploits::GateFeature => (1.0, df, 1.02),
+        Exploits::SkipFeature => (df, df, 1.10),
+        Exploits::SkipWeight => (dw, dw, 1.12),
+        Exploits::SkipBoth => (df * dw, df * dw, 1.18),
+    };
+    let mac_cycles = ((dense_macs as f64 * cycle_fraction)
+        / MULTIPLIERS as f64)
+        .ceil()
+        .max(1.0) as u64;
+    // energy: performed MACs (gated ones cost ~nothing) + a traffic term
+    // that scales with what the design can compress away
+    let traffic = match policy {
+        Exploits::None => 0.35,
+        Exploits::GateFeature => 0.30,
+        Exploits::SkipFeature => 0.35 * (df + 1.0) / 2.0,
+        Exploits::SkipWeight => 0.35 * (dw + 1.0) / 2.0,
+        Exploits::SkipBoth => 0.35 * (df + dw) / 2.0,
+    };
+    GatingCost {
+        mac_cycles,
+        energy_per_dense_mac: gated_fraction * 0.65 * overhead + traffic,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DF: f64 = 0.39;
+    const DW: f64 = 0.36;
+    const M: u64 = 1_000_000_000;
+
+    #[test]
+    fn speedup_ordering_matches_table3() {
+        // skip-both > skip-one > gate-only == dense on speed
+        let dense = cost(M, DF, DW, Exploits::None).mac_cycles;
+        let gate = cost(M, DF, DW, Exploits::GateFeature).mac_cycles;
+        let f = cost(M, DF, DW, Exploits::SkipFeature).mac_cycles;
+        let w = cost(M, DF, DW, Exploits::SkipWeight).mac_cycles;
+        let both = cost(M, DF, DW, Exploits::SkipBoth).mac_cycles;
+        assert_eq!(dense, gate, "gating saves no cycles");
+        assert!(f < dense && w < dense);
+        assert!(both < f && both < w, "dual sparsity dominates");
+    }
+
+    #[test]
+    fn energy_ordering_matches_table3() {
+        let e = |p| cost(M, DF, DW, p).energy_per_dense_mac;
+        assert!(e(Exploits::GateFeature) < e(Exploits::None));
+        assert!(e(Exploits::SkipFeature) < e(Exploits::GateFeature));
+        assert!(e(Exploits::SkipBoth) < e(Exploits::SkipFeature));
+        assert!(e(Exploits::SkipBoth) < e(Exploits::SkipWeight));
+    }
+
+    #[test]
+    fn skip_feature_speedup_is_inverse_density() {
+        let dense = cost(M, 0.25, 1.0, Exploits::None);
+        let f = cost(M, 0.25, 1.0, Exploits::SkipFeature);
+        let speedup = dense.mac_cycles as f64 / f.mac_cycles as f64;
+        assert!((speedup - 4.0).abs() < 0.1, "speedup {speedup}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Comparison points of the paper's evaluation.
+//!
+//! * [`naive`] — the dense output-stationary systolic array ("naïve
+//!   design", Fig. 1; "can be basically regarded as the performance of
+//!   TPU", Section 5.2). Same convolution mapping as S²Engine, same MAC
+//!   clock, 2 MB SRAM, no sparsity support: every zero occupies a PE
+//!   cycle. This is the 1× reference of every speedup/efficiency figure.
+//! * [`gating`] — partial-sparsity comparators (Eyeriss / Cnvlutin /
+//!   Cambricon-X classes) for the quantitative Table III.
+//! * [`scnn`] — analytic comparator for SCNN (Parashar et al., ISCA'17),
+//!   calibrated to its published characteristics (Cartesian-product PEs,
+//!   crossbar contention, 79% dense-mode speed, +33% dense-mode energy).
+//! * [`sparten`] — analytic comparator for SparTen (Gondimalla et al.,
+//!   MICRO'19): higher speedup than S²Engine but significantly worse
+//!   energy due to prefix-sum/permute logic (Table V).
+
+pub mod gating;
+pub mod naive;
+pub mod scnn;
+pub mod sparten;

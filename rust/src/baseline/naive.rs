@@ -1,0 +1,191 @@
+//! The naïve dense output-stationary systolic array — the paper's 1×
+//! baseline (Section 5.2).
+//!
+//! Identical mapping to S²Engine (each PE owns one convolution; features
+//! stream along rows, weights down columns) but uncompressed: every PE
+//! consumes one dense element per MAC cycle, zeros included, and the
+//! whole reduction vector of length K = kh·kw·cin is walked for every
+//! tile. Being fully regular, its timing is closed-form; no cycle loop is
+//! needed (and the paper treats it analytically too — its dense latency
+//! has no data dependence).
+
+use crate::config::{ArrayConfig, BufferConfig};
+use crate::models::{LayerDesc, Model};
+use crate::MAC_FREQ_MHZ;
+
+/// Closed-form cost of a layer on the naive array.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NaiveCost {
+    /// MAC-clock cycles for the whole layer.
+    pub mac_cycles: u64,
+    /// MAC operations (all dense — nothing is gated or skipped).
+    pub mac_ops: u64,
+    /// FB element reads (dense 8-bit elements, per-row copies: the
+    /// no-overlap-reuse arrangement of Section 3.1).
+    pub fb_byte_reads: u64,
+    /// WB element reads.
+    pub wb_byte_reads: u64,
+    /// DRAM traffic in bytes (uncompressed features + weights, loaded
+    /// once per layer).
+    pub dram_bytes: u64,
+    /// SRAM bytes that must be resident (uncompressed, with per-row
+    /// window copies).
+    pub sram_resident_bytes: u64,
+}
+
+impl NaiveCost {
+    pub fn wall_seconds(&self) -> f64 {
+        self.mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+    }
+}
+
+/// Cost of one layer on an R×C naive array with the paper's 2 MB SRAM.
+pub fn layer_cost(layer: &LayerDesc, cfg: &ArrayConfig) -> NaiveCost {
+    layer_cost_with_sram(layer, cfg, BufferConfig::NAIVE_DEFAULT.sram_bytes)
+}
+
+/// Cost of one layer with explicit SRAM capacity. Uncompressed per-row
+/// im2col copies must be resident (Section 3.1: no overlap reuse means
+/// "three separate FBs as three copies"); a layer whose working set
+/// exceeds the buffers re-streams features from DRAM once per overlap
+/// copy (Section 5.2: the 2 MB provisioning "holds 66 out of 71 layers").
+pub fn layer_cost_with_sram(
+    layer: &LayerDesc,
+    cfg: &ArrayConfig,
+    sram_bytes: usize,
+) -> NaiveCost {
+    let k = layer.k_len() as u64;
+    let m = layer.num_convs() as u64;
+    let n = layer.cout as u64;
+    let rows = cfg.rows as u64;
+    let cols = cfg.cols as u64;
+    let row_tiles = m.div_ceil(rows);
+    let col_tiles = n.div_ceil(cols);
+    let tiles = row_tiles * col_tiles;
+
+    // Each tile: K cycles of streaming + systolic skew fill (R-1 + C-1)
+    // + result drain (R, in-order down each column). Back-to-back tiles
+    // overlap fill with the previous drain, so charge max(fill, drain)
+    // once per tile.
+    let per_tile = k + (rows - 1) + (cols - 1) + rows;
+    let mac_cycles = tiles * per_tile;
+
+    let mac_ops = m * k * n; // dense
+
+    // Dense streams: every tile re-reads K bytes per active row and per
+    // active column (8-bit data).
+    let fb_byte_reads = row_tiles * col_tiles * rows.min(m) * k;
+    let wb_byte_reads = row_tiles * col_tiles * cols.min(n) * k;
+
+    let feat_bytes = layer.input_elems();
+    let weight_bytes = layer.params();
+    // Working set: per-row im2col copies (M*K bytes) + weights. When it
+    // spills the buffers, every overlap copy of the features re-streams
+    // from DRAM (bounded by the kh*kw overlap factor).
+    let resident = m * k + weight_bytes;
+    let spill_factor = resident
+        .div_ceil(sram_bytes as u64)
+        .clamp(1, (layer.kh * layer.kw) as u64);
+    NaiveCost {
+        mac_cycles,
+        mac_ops,
+        fb_byte_reads,
+        wb_byte_reads,
+        dram_bytes: feat_bytes * spill_factor + weight_bytes,
+        sram_resident_bytes: resident,
+    }
+}
+
+/// Whole-model cost (sum over layers; layers run back-to-back).
+pub fn model_cost(model: &Model, cfg: &ArrayConfig) -> NaiveCost {
+    let mut total = NaiveCost::default();
+    for l in &model.layers {
+        let c = layer_cost(l, cfg);
+        total.mac_cycles += c.mac_cycles;
+        total.mac_ops += c.mac_ops;
+        total.fb_byte_reads += c.fb_byte_reads;
+        total.wb_byte_reads += c.wb_byte_reads;
+        total.dram_bytes += c.dram_bytes;
+        total.sram_resident_bytes = total.sram_resident_bytes.max(c.sram_resident_bytes);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn dense_macs_match_layer_arithmetic() {
+        let m = zoo::alexnet();
+        let cfg = ArrayConfig::new(16, 16);
+        for l in &m.layers {
+            let c = layer_cost(l, &cfg);
+            assert_eq!(c.mac_ops, l.macs());
+        }
+    }
+
+    #[test]
+    fn cycles_scale_inverse_with_array_size() {
+        let m = zoo::vgg16();
+        let l = &m.layers[5];
+        let small = layer_cost(l, &ArrayConfig::new(16, 16));
+        let big = layer_cost(l, &ArrayConfig::new(32, 32));
+        let ratio = small.mac_cycles as f64 / big.mac_cycles as f64;
+        assert!(
+            ratio > 3.0 && ratio < 5.0,
+            "4x PEs should be ~4x faster, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn utilization_near_one_for_big_layers() {
+        // cycles * PEs should be close to dense MACs for well-tiled layers
+        let m = zoo::vgg16();
+        let cfg = ArrayConfig::new(16, 16);
+        let l = m.layer("conv3_2").unwrap();
+        let c = layer_cost(l, &cfg);
+        let util = c.mac_ops as f64 / (c.mac_cycles as f64 * 256.0);
+        assert!(util > 0.85, "utilization {util}");
+    }
+
+    #[test]
+    fn model_cost_sums_layers() {
+        let m = zoo::alexnet();
+        let cfg = ArrayConfig::new(16, 16);
+        let total = model_cost(&m, &cfg);
+        let sum: u64 = m
+            .layers
+            .iter()
+            .map(|l| layer_cost(l, &cfg).mac_cycles)
+            .sum();
+        assert_eq!(total.mac_cycles, sum);
+        assert_eq!(total.mac_ops, m.total_macs());
+    }
+
+    #[test]
+    fn dram_spill_on_oversized_layers() {
+        // VGG conv1_2: M*K ~ 28 MB >> 2 MB -> features re-stream
+        let m = zoo::vgg16();
+        let l = m.layer("conv1_2").unwrap();
+        let c = layer_cost(l, &ArrayConfig::new(16, 16));
+        assert!(c.sram_resident_bytes > 2 << 20);
+        assert!(c.dram_bytes > l.input_elems() + l.params());
+        // a small layer (AlexNet conv3: ~1.3 MB working set) fits 2 MB
+        // and streams exactly once
+        let a = zoo::alexnet();
+        let small = a.layer("conv3").unwrap();
+        let cs = layer_cost(small, &ArrayConfig::new(16, 16));
+        assert_eq!(cs.dram_bytes, small.input_elems() + small.params());
+    }
+
+    #[test]
+    fn wall_time_uses_mac_clock() {
+        let c = NaiveCost {
+            mac_cycles: 500_000_000,
+            ..Default::default()
+        };
+        assert!((c.wall_seconds() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,297 @@
+//! Enhanced-COO (ECOO) compressed dataflow format — Section 4.2, Fig. 5.
+//!
+//! A flow is a sequence of *groups* of GROUP_LEN=16 positions. Each
+//! non-zero is a triplet `(value, offset, EOG)`; the last element of every
+//! group carries the EOG (end-of-group) flag, and an all-zero group keeps
+//! a single zero placeholder marked EOG so group boundaries never
+//! desynchronize between the weight and feature flows. Weight flows
+//! additionally carry an EOK (end-of-kernel) bit on their final token.
+//!
+//! Feature tokens are 13 bits in the paper (8 value + 4 offset + 1 EOG),
+//! weights 14 (+EOK). We pack tokens into a `u32` for the simulator hot
+//! path; the *architectural* bit widths used for buffer-traffic accounting
+//! live in [`Token::FEATURE_BITS`]/[`Token::WEIGHT_BITS`].
+
+use crate::GROUP_LEN;
+
+/// One ECOO token, packed:
+///
+/// ```text
+/// bits 0..8   value     (i8 as u8; 0 only for placeholders)
+/// bits 8..12  offset    (position inside the group, 0..16)
+/// bit  12     EOG       end of group
+/// bit  13     EOK       end of kernel (weight flows)
+/// bit  14     TAG16     part of a split 16-bit value (Section 4.5)
+/// bit  15     HI        high byte of a split 16-bit value
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Token(pub u32);
+
+impl Token {
+    pub const FEATURE_BITS: u32 = 13;
+    pub const WEIGHT_BITS: u32 = 14;
+
+    const EOG_BIT: u32 = 1 << 12;
+    const EOK_BIT: u32 = 1 << 13;
+    const TAG16_BIT: u32 = 1 << 14;
+    const HI_BIT: u32 = 1 << 15;
+
+    #[inline]
+    pub fn new(value: i8, offset: u8) -> Self {
+        debug_assert!((offset as usize) < GROUP_LEN);
+        Token(((value as u8) as u32) | ((offset as u32) << 8))
+    }
+
+    /// Placeholder for an all-zero group (value 0, offset 0, EOG set).
+    #[inline]
+    pub fn placeholder() -> Self {
+        Token(Self::EOG_BIT)
+    }
+
+    #[inline]
+    pub fn value(self) -> i8 {
+        (self.0 & 0xff) as u8 as i8
+    }
+
+    #[inline]
+    pub fn offset(self) -> u8 {
+        ((self.0 >> 8) & 0xf) as u8
+    }
+
+    #[inline]
+    pub fn eog(self) -> bool {
+        self.0 & Self::EOG_BIT != 0
+    }
+
+    #[inline]
+    pub fn eok(self) -> bool {
+        self.0 & Self::EOK_BIT != 0
+    }
+
+    #[inline]
+    pub fn tag16(self) -> bool {
+        self.0 & Self::TAG16_BIT != 0
+    }
+
+    #[inline]
+    pub fn hi(self) -> bool {
+        self.0 & Self::HI_BIT != 0
+    }
+
+    #[inline]
+    pub fn with_eog(self) -> Self {
+        Token(self.0 | Self::EOG_BIT)
+    }
+
+    #[inline]
+    pub fn with_eok(self) -> Self {
+        Token(self.0 | Self::EOK_BIT)
+    }
+
+    #[inline]
+    pub fn with_tag16(self, hi: bool) -> Self {
+        Token(self.0 | Self::TAG16_BIT | if hi { Self::HI_BIT } else { 0 })
+    }
+
+    /// Is this a zero placeholder (carries no MAC work)?
+    #[inline]
+    pub fn is_placeholder(self) -> bool {
+        self.value() == 0
+    }
+}
+
+/// A compressed flow: tokens plus the group count it encodes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EcooFlow {
+    pub tokens: Vec<Token>,
+    pub n_groups: usize,
+}
+
+impl EcooFlow {
+    /// Encode a dense, group-aligned slice. `data.len()` must be a
+    /// multiple of GROUP_LEN (the compiler pads first — zero padding is
+    /// free: it compresses to EOG placeholders).
+    pub fn encode(data: &[i8]) -> Self {
+        assert!(
+            data.len() % GROUP_LEN == 0,
+            "flow length {} not group-aligned",
+            data.len()
+        );
+        let n_groups = data.len() / GROUP_LEN;
+        let mut tokens = Vec::with_capacity(data.len() / 3 + n_groups);
+        for g in 0..n_groups {
+            let group = &data[g * GROUP_LEN..(g + 1) * GROUP_LEN];
+            let start = tokens.len();
+            for (off, &v) in group.iter().enumerate() {
+                if v != 0 {
+                    tokens.push(Token::new(v, off as u8));
+                }
+            }
+            if tokens.len() == start {
+                tokens.push(Token::placeholder());
+            } else {
+                let last = tokens.len() - 1;
+                tokens[last] = tokens[last].with_eog();
+            }
+        }
+        EcooFlow { tokens, n_groups }
+    }
+
+    /// Encode and mark the final token with EOK (weight kernels).
+    pub fn encode_kernel(data: &[i8]) -> Self {
+        let mut flow = Self::encode(data);
+        if let Some(last) = flow.tokens.last_mut() {
+            *last = last.with_eok();
+        }
+        flow
+    }
+
+    /// Decode back to a dense vector (ignores 16-bit splits — see
+    /// `precision::decode16` for those).
+    pub fn decode(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.n_groups * GROUP_LEN];
+        let mut g = 0usize;
+        for t in &self.tokens {
+            if !t.is_placeholder() {
+                out[g * GROUP_LEN + t.offset() as usize] = t.value();
+            }
+            if t.eog() {
+                g += 1;
+            }
+        }
+        debug_assert_eq!(g, self.n_groups, "EOG count mismatch");
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Non-placeholder token count = stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.tokens.iter().filter(|t| !t.is_placeholder()).count()
+    }
+
+    /// Architectural storage cost in bits (13b feature / 14b weight).
+    pub fn storage_bits(&self, weight: bool) -> u64 {
+        let w = if weight {
+            Token::WEIGHT_BITS
+        } else {
+            Token::FEATURE_BITS
+        } as u64;
+        self.tokens.len() as u64 * w
+    }
+
+    /// Compression ratio vs dense 8-bit storage of the same groups.
+    pub fn compression_ratio(&self, weight: bool) -> f64 {
+        let dense_bits = (self.n_groups * GROUP_LEN * 8) as f64;
+        dense_bits / self.storage_bits(weight) as f64
+    }
+}
+
+/// Quantize an f32 to the 8-bit datapath with symmetric scale.
+#[inline]
+pub fn quantize(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize a dense f32 slice, padding to group alignment.
+pub fn quantize_flow(values: &[f32], scale: f32) -> Vec<i8> {
+    let mut q: Vec<i8> = values.iter().map(|&v| quantize(v, scale)).collect();
+    let pad = (GROUP_LEN - q.len() % GROUP_LEN) % GROUP_LEN;
+    q.extend(std::iter::repeat(0).take(pad));
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_packing_roundtrip() {
+        let t = Token::new(-5, 11).with_eog();
+        assert_eq!(t.value(), -5);
+        assert_eq!(t.offset(), 11);
+        assert!(t.eog());
+        assert!(!t.eok());
+        assert!(!t.tag16());
+        let t2 = t.with_eok().with_tag16(true);
+        assert!(t2.eok() && t2.tag16() && t2.hi());
+        assert_eq!(t2.value(), -5);
+    }
+
+    #[test]
+    fn encode_paper_toy_example() {
+        // Fig. 5-style: one group with non-zeros at offsets 1, 4, 5.
+        let mut data = vec![0i8; 16];
+        data[1] = 10;
+        data[4] = -3;
+        data[5] = 7;
+        let flow = EcooFlow::encode(&data);
+        assert_eq!(flow.tokens.len(), 3);
+        assert_eq!(flow.tokens[0].offset(), 1);
+        assert!(!flow.tokens[0].eog());
+        assert!(flow.tokens[2].eog());
+        assert_eq!(flow.decode(), data);
+    }
+
+    #[test]
+    fn all_zero_group_keeps_placeholder() {
+        let data = vec![0i8; 32];
+        let flow = EcooFlow::encode(&data);
+        assert_eq!(flow.tokens.len(), 2);
+        assert!(flow.tokens.iter().all(|t| t.is_placeholder() && t.eog()));
+        assert_eq!(flow.decode(), data);
+        assert_eq!(flow.nnz(), 0);
+    }
+
+    #[test]
+    fn eok_on_last_token() {
+        let mut data = vec![0i8; 16];
+        data[3] = 1;
+        let flow = EcooFlow::encode_kernel(&data);
+        assert!(flow.tokens.last().unwrap().eok());
+    }
+
+    #[test]
+    fn dense_group_encodes_all_sixteen() {
+        let data: Vec<i8> = (1..=16).collect();
+        let flow = EcooFlow::encode(&data);
+        assert_eq!(flow.tokens.len(), 16);
+        assert_eq!(flow.nnz(), 16);
+        assert!(flow.tokens[15].eog());
+        assert_eq!(flow.decode(), data);
+    }
+
+    #[test]
+    fn compression_ratio_sparse_beats_dense() {
+        let mut data = vec![0i8; 160];
+        data[5] = 1;
+        data[100] = 2;
+        let flow = EcooFlow::encode(&data);
+        assert!(flow.compression_ratio(false) > 5.0);
+        // dense data compresses *worse* than 1 (13 bits vs 8)
+        let dense: Vec<i8> = (0..160).map(|i| (i % 100 + 1) as i8).collect();
+        let df = EcooFlow::encode(&dense);
+        assert!(df.compression_ratio(false) < 1.0);
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        assert_eq!(quantize(1e9, 0.05), 127);
+        assert_eq!(quantize(-1e9, 0.05), -127);
+        assert_eq!(quantize(0.0, 0.05), 0);
+        assert_eq!(quantize(0.5, 0.05), 10);
+    }
+
+    #[test]
+    fn quantize_flow_pads_to_group() {
+        let q = quantize_flow(&[1.0; 20], 0.1);
+        assert_eq!(q.len(), 32);
+        assert!(q[20..].iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,469 @@
+//! Group reshaping: convolution windows → 1-D grouped dataflows.
+//!
+//! Section 4.1: "different from the naïve im2col() ... the three
+//! dimensional input feature map is divided into groups and then reshaped
+//! into one-dimensional vector at this granularity". The group axis is
+//! the channel dimension (Fig. 8: "divided into groups along the
+//! channels, and each group contains up to 16 elements"), so a conv
+//! window of a (kh, kw, cin) kernel becomes `kh*kw*ceil(cin/16)` groups
+//! ordered (ky, kx, channel-group).
+//!
+//! Every group remembers the *buffer group id* it was loaded from
+//! ([`GroupRef::fb_group`]): two adjacent output positions share most of
+//! their input rows, so their streams reference many identical fb_groups —
+//! exactly the overlap the CE array exploits (Section 4.4). The CE
+//! simulator counts FB accesses per *distinct* group per period instead of
+//! per reference.
+
+use crate::util::rng::Rng;
+
+use super::ecoo::{quantize, EcooFlow, Token};
+use crate::models::tensor::{FeatTensor, WeightTensor};
+use crate::models::LayerDesc;
+use crate::GROUP_LEN;
+
+/// Channels rounded up to the group length.
+pub fn padded_channels(c: usize) -> usize {
+    c.div_ceil(GROUP_LEN) * GROUP_LEN
+}
+
+/// Sentinel fb_group for padding windows (content is all-zero and no
+/// buffer access is ever issued for it).
+pub const PAD_GROUP: u64 = u64::MAX;
+
+/// One group of a stream: where it lives in the buffer and its tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupRef {
+    /// Identity of the group in FB/WB (shared ids ⇒ overlap reuse).
+    pub fb_group: u64,
+    /// Compressed content: `1..=GROUP_LEN` tokens, last one EOG-marked
+    /// (a placeholder if the group is all-zero).
+    pub tokens: Vec<Token>,
+}
+
+impl GroupRef {
+    /// Encode one dense group (exactly GROUP_LEN values).
+    pub fn encode(fb_group: u64, dense: &[i8]) -> Self {
+        assert_eq!(dense.len(), GROUP_LEN);
+        let flow = EcooFlow::encode(dense);
+        GroupRef {
+            fb_group,
+            tokens: flow.tokens,
+        }
+    }
+
+    pub fn placeholder(fb_group: u64) -> Self {
+        GroupRef {
+            fb_group,
+            tokens: vec![Token::placeholder()],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.tokens.iter().filter(|t| !t.is_placeholder()).count()
+    }
+}
+
+/// A grouped 1-D dataflow: the unit the simulator streams into one PE
+/// row (features) or one PE column (weights).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GroupedStream {
+    pub groups: Vec<GroupRef>,
+}
+
+impl GroupedStream {
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn token_count(&self) -> usize {
+        self.groups.iter().map(|g| g.tokens.len()).sum()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.groups.iter().map(|g| g.nnz()).sum()
+    }
+
+    /// Flatten into a single ECOO flow (weights get EOK on the last token
+    /// when `kernel` is true).
+    pub fn to_flow(&self, kernel: bool) -> EcooFlow {
+        let mut tokens = Vec::with_capacity(self.token_count());
+        for g in &self.groups {
+            tokens.extend_from_slice(&g.tokens);
+        }
+        if kernel {
+            if let Some(last) = tokens.last_mut() {
+                *last = last.with_eok();
+            }
+        }
+        EcooFlow {
+            tokens,
+            n_groups: self.groups.len(),
+        }
+    }
+
+    /// Density of the stream (nnz over dense positions).
+    pub fn density(&self) -> f64 {
+        if self.groups.is_empty() {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.groups.len() * GROUP_LEN) as f64
+    }
+}
+
+/// fb_group id for a feature-buffer group at (row, col, channel-group).
+#[inline]
+pub fn feature_group_id(layer: &LayerDesc, iy: usize, ix: usize, cg: usize) -> u64 {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    ((iy * layer.in_w + ix) * ncg + cg) as u64
+}
+
+/// fb_group id ordering helper: which groups a conv at (oy, ox) touches,
+/// in stream order (ky, kx, cg). Padding taps yield PAD_GROUP.
+pub fn conv_group_ids(layer: &LayerDesc, oy: usize, ox: usize) -> Vec<u64> {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    let mut ids = Vec::with_capacity(layer.kh * layer.kw * ncg);
+    for ky in 0..layer.kh {
+        for kx in 0..layer.kw {
+            let iy = (oy * layer.stride + ky) as isize - layer.pad as isize;
+            let ix = (ox * layer.stride + kx) as isize - layer.pad as isize;
+            let oob = iy < 0
+                || ix < 0
+                || iy >= layer.in_h as isize
+                || ix >= layer.in_w as isize;
+            for cg in 0..ncg {
+                if oob {
+                    ids.push(PAD_GROUP);
+                } else {
+                    ids.push(feature_group_id(layer, iy as usize, ix as usize, cg));
+                }
+            }
+        }
+    }
+    ids
+}
+
+// --------------------------------------------------------------- real --
+
+/// Build the feature stream for output position (oy, ox) from a real
+/// tensor (batch image `n`), quantizing with `scale`.
+pub fn feature_stream_real(
+    feat: &FeatTensor,
+    layer: &LayerDesc,
+    n: usize,
+    oy: usize,
+    ox: usize,
+    scale: f32,
+) -> GroupedStream {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    let mut groups = Vec::with_capacity(layer.kh * layer.kw * ncg);
+    for ky in 0..layer.kh {
+        for kx in 0..layer.kw {
+            let iy = (oy * layer.stride + ky) as isize - layer.pad as isize;
+            let ix = (ox * layer.stride + kx) as isize - layer.pad as isize;
+            for cg in 0..ncg {
+                let oob = iy < 0
+                    || ix < 0
+                    || iy >= layer.in_h as isize
+                    || ix >= layer.in_w as isize;
+                if oob {
+                    groups.push(GroupRef::placeholder(PAD_GROUP));
+                    continue;
+                }
+                let mut dense = [0i8; GROUP_LEN];
+                for (k, d) in dense.iter_mut().enumerate() {
+                    let ch = cg * GROUP_LEN + k;
+                    if ch < feat.c {
+                        *d = quantize(feat.get(n, iy as usize, ix as usize, ch), scale);
+                    }
+                }
+                let id = feature_group_id(layer, iy as usize, ix as usize, cg);
+                groups.push(GroupRef::encode(id, &dense));
+            }
+        }
+    }
+    GroupedStream { groups }
+}
+
+/// Build the weight stream for kernel `co` from a real weight tensor.
+pub fn weight_stream_real(
+    w: &WeightTensor,
+    layer: &LayerDesc,
+    co: usize,
+    scale: f32,
+) -> GroupedStream {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    let mut groups = Vec::with_capacity(layer.kh * layer.kw * ncg);
+    for ky in 0..layer.kh {
+        for kx in 0..layer.kw {
+            for cg in 0..ncg {
+                let mut dense = [0i8; GROUP_LEN];
+                for (k, d) in dense.iter_mut().enumerate() {
+                    let ci = cg * GROUP_LEN + k;
+                    if ci < w.cin {
+                        *d = quantize(w.get(ky, kx, ci, co), scale);
+                    }
+                }
+                let id = weight_group_id(layer, co, ky * layer.kw + kx, cg);
+                groups.push(GroupRef::encode(id, &dense));
+            }
+        }
+    }
+    GroupedStream { groups }
+}
+
+/// WB group id for kernel `co`, spatial tap `tap`, channel group `cg`.
+#[inline]
+pub fn weight_group_id(layer: &LayerDesc, co: usize, tap: usize, cg: usize) -> u64 {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    // offset into a distinct id space from features
+    0x8000_0000_0000_0000u64 | ((co * layer.kh * layer.kw + tap) * ncg + cg) as u64
+}
+
+// ---------------------------------------------------------- synthetic --
+
+/// Deterministic group content keyed by (seed, fb_group): two streams
+/// referencing the same fb_group always see identical content, which is
+/// what makes overlap-reuse accounting meaningful for synthetic
+/// workloads.
+///
+/// `lanes` is the number of *physically existing* channels in this group
+/// (`< GROUP_LEN` for the tail group of a channel-padded layer, e.g.
+/// AlexNet conv1's cin=3): padding lanes are always zero and compress
+/// away, exactly as in real tensors.
+pub fn synth_group(
+    fb_group: u64,
+    density: f64,
+    clustered: bool,
+    seed: u64,
+    lanes: usize,
+) -> GroupRef {
+    if fb_group == PAD_GROUP || lanes == 0 {
+        return GroupRef::placeholder(PAD_GROUP);
+    }
+    let lanes = lanes.min(GROUP_LEN);
+    let mut h = seed ^ fb_group.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    h ^= h >> 29;
+    let mut rng = Rng::seed_from_u64(h);
+    let mut dense = [0i8; GROUP_LEN];
+    if clustered {
+        // short Markov runs inside the group (Section 6.2's concentration)
+        let run = 3.0f64;
+        let p_exit = 1.0 / run;
+        let p_enter = if density >= 1.0 {
+            1.0
+        } else {
+            (density * p_exit / (1.0 - density)).min(1.0)
+        };
+        let mut nz = rng.gen_f64() < density;
+        for d in dense.iter_mut().take(lanes) {
+            if nz {
+                *d = nonzero_i8(&mut rng);
+            }
+            let p = if nz { 1.0 - p_exit } else { p_enter };
+            nz = rng.gen_f64() < p;
+        }
+    } else {
+        for d in dense.iter_mut().take(lanes) {
+            if rng.gen_f64() < density {
+                *d = nonzero_i8(&mut rng);
+            }
+        }
+    }
+    GroupRef::encode(fb_group, &dense)
+}
+
+fn nonzero_i8(rng: &mut Rng) -> i8 {
+    let v = rng.gen_range_u64(1, 127) as i8;
+    if rng.gen_bool() {
+        v
+    } else {
+        -v
+    }
+}
+
+/// Valid channel lanes of channel-group `cg` for `cin` input channels.
+#[inline]
+pub fn group_lanes(cin: usize, cg: usize) -> usize {
+    cin.saturating_sub(cg * GROUP_LEN).min(GROUP_LEN)
+}
+
+/// Synthetic feature stream for output position (oy, ox).
+pub fn feature_stream_synthetic(
+    layer: &LayerDesc,
+    oy: usize,
+    ox: usize,
+    density: f64,
+    clustered: bool,
+    seed: u64,
+) -> GroupedStream {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    let groups = conv_group_ids(layer, oy, ox)
+        .into_iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let lanes = group_lanes(layer.cin, i % ncg);
+            synth_group(id, density, clustered, seed, lanes)
+        })
+        .collect();
+    GroupedStream { groups }
+}
+
+/// Synthetic weight stream for kernel `co`.
+pub fn weight_stream_synthetic(
+    layer: &LayerDesc,
+    co: usize,
+    density: f64,
+    clustered: bool,
+    seed: u64,
+) -> GroupedStream {
+    let ncg = padded_channels(layer.cin) / GROUP_LEN;
+    let mut groups = Vec::with_capacity(layer.kh * layer.kw * ncg);
+    for tap in 0..layer.kh * layer.kw {
+        for cg in 0..ncg {
+            let id = weight_group_id(layer, co, tap, cg);
+            let lanes = group_lanes(layer.cin, cg);
+            groups.push(synth_group(id, density, clustered, seed ^ 0x77, lanes));
+        }
+    }
+    GroupedStream { groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::features::{generate, Pattern};
+    use crate::models::pruning::pruned_weights;
+
+    fn layer() -> LayerDesc {
+        LayerDesc::new("t", 8, 8, 32, 3, 3, 16, 1, 1)
+    }
+
+    #[test]
+    fn padded_channels_rounds_up() {
+        assert_eq!(padded_channels(3), 16);
+        assert_eq!(padded_channels(16), 16);
+        assert_eq!(padded_channels(17), 32);
+        assert_eq!(padded_channels(64), 64);
+    }
+
+    #[test]
+    fn conv_group_ids_overlap_between_adjacent_outputs() {
+        let l = layer();
+        let a = conv_group_ids(&l, 2, 2);
+        let b = conv_group_ids(&l, 2, 3);
+        let shared: usize = a.iter().filter(|id| b.contains(id)).count();
+        // 3x3 kernel stride 1: adjacent windows share 2/3 of their taps
+        assert_eq!(a.len(), 9 * 2);
+        assert!(shared >= 12, "only {shared} shared groups");
+    }
+
+    #[test]
+    fn padding_taps_are_pad_group() {
+        let l = layer();
+        let ids = conv_group_ids(&l, 0, 0); // corner: top & left taps OOB
+        let pads = ids.iter().filter(|&&id| id == PAD_GROUP).count();
+        assert_eq!(pads, 5 * 2); // 5 of 9 taps OOB, 2 channel groups each
+    }
+
+    #[test]
+    fn real_feature_stream_roundtrip_density() {
+        let l = layer();
+        let f = generate(&l, 0.5, Pattern::Uniform, 3);
+        let s = feature_stream_real(&f, &l, 0, 3, 3, 1.0 / 128.0);
+        assert_eq!(s.n_groups(), 9 * 2);
+        // interior window, so density should be near the tensor's
+        assert!((s.density() - 0.5).abs() < 0.2, "density {}", s.density());
+    }
+
+    #[test]
+    fn real_weight_stream_has_eok() {
+        let l = layer();
+        let w = pruned_weights(&l, 0.4, 5);
+        let s = weight_stream_real(&w, &l, 0, 1.0 / 128.0);
+        let flow = s.to_flow(true);
+        assert!(flow.tokens.last().unwrap().eok());
+        assert_eq!(
+            flow.tokens.iter().filter(|t| t.eok()).count(),
+            1,
+            "exactly one EOK"
+        );
+    }
+
+    #[test]
+    fn synth_group_deterministic_by_id() {
+        let a = synth_group(42, 0.5, false, 9, GROUP_LEN);
+        let b = synth_group(42, 0.5, false, 9, GROUP_LEN);
+        assert_eq!(a, b);
+        let c = synth_group(43, 0.5, false, 9, GROUP_LEN);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn synth_group_respects_lane_mask() {
+        // only 3 physical channels: offsets must stay below 3
+        for seed in 0..20 {
+            let g = synth_group(7, 0.9, false, seed, 3);
+            for t in &g.tokens {
+                if !t.is_placeholder() {
+                    assert!(t.offset() < 3, "offset {} >= lanes", t.offset());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn low_lane_streams_are_sparser() {
+        // AlexNet conv1-like: cin=3 padded to 16 -> stream density over
+        // the padded group length is at most 3/16
+        let l3 = LayerDesc::new("c1", 16, 16, 3, 3, 3, 8, 1, 1);
+        let s = feature_stream_synthetic(&l3, 5, 5, 1.0, false, 1);
+        assert!(s.density() <= 3.0 / 16.0 + 1e-9, "density {}", s.density());
+    }
+
+    #[test]
+    fn synthetic_streams_share_overlap_content() {
+        let l = layer();
+        let s1 = feature_stream_synthetic(&l, 2, 2, 0.4, false, 1);
+        let s2 = feature_stream_synthetic(&l, 2, 3, 0.4, false, 1);
+        // find a shared fb_group and compare tokens
+        let mut found = 0;
+        for g1 in &s1.groups {
+            if g1.fb_group == PAD_GROUP {
+                continue;
+            }
+            for g2 in &s2.groups {
+                if g2.fb_group == g1.fb_group {
+                    assert_eq!(g1.tokens, g2.tokens);
+                    found += 1;
+                }
+            }
+        }
+        assert!(found >= 10, "expected many shared groups, got {found}");
+    }
+
+    #[test]
+    fn synthetic_density_tracks_target() {
+        let l = LayerDesc::new("big", 32, 32, 256, 3, 3, 64, 1, 1);
+        for d in [0.2, 0.5, 0.8] {
+            let s = feature_stream_synthetic(&l, 5, 5, d, false, 7);
+            assert!(
+                (s.density() - d).abs() < 0.08,
+                "target {d} got {}",
+                s.density()
+            );
+        }
+    }
+
+    #[test]
+    fn stream_flow_group_count_matches() {
+        let l = layer();
+        let s = feature_stream_synthetic(&l, 1, 1, 0.3, true, 2);
+        let flow = s.to_flow(false);
+        assert_eq!(flow.n_groups, s.n_groups());
+        assert_eq!(
+            flow.tokens.iter().filter(|t| t.eog()).count(),
+            s.n_groups()
+        );
+    }
+}

@@ -1,0 +1,343 @@
+//! Conv → PE-array mapping: tiling the layer's GEMM view onto an R×C
+//! output-stationary array.
+//!
+//! Following the paper's Fig. 1/Fig. 4 mapping, each PE computes one
+//! complete convolution: PE rows take *output positions* (consecutive in
+//! raster order, so adjacent rows overlap — the CE array's prey), PE
+//! columns take *kernels* (output channels). A layer with M = OH·OW
+//! output positions and N = Cout kernels therefore needs
+//! `ceil(M/R) × ceil(N/C)` array passes ("tiles"); the simulator runs a
+//! sampled subset and extrapolates (DESIGN.md §5 — tiles within a layer
+//! are statistically homogeneous).
+
+use crate::util::rng::Rng;
+
+use super::groups::{
+    feature_stream_real, feature_stream_synthetic, weight_stream_real,
+    weight_stream_synthetic, GroupedStream,
+};
+use super::precision::promote_fraction;
+use crate::models::tensor::{FeatTensor, WeightTensor};
+use crate::models::LayerDesc;
+
+/// Tiling of one layer onto an array geometry.
+#[derive(Debug, Clone)]
+pub struct LayerMapping {
+    pub layer: LayerDesc,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl LayerMapping {
+    pub fn new(layer: &LayerDesc, rows: usize, cols: usize) -> Self {
+        Self {
+            layer: layer.clone(),
+            rows,
+            cols,
+        }
+    }
+
+    pub fn n_row_tiles(&self) -> usize {
+        self.layer.num_convs().div_ceil(self.rows)
+    }
+
+    pub fn n_col_tiles(&self) -> usize {
+        self.layer.cout.div_ceil(self.cols)
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.n_row_tiles() * self.n_col_tiles()
+    }
+
+    /// (row_tile, col_tile) for a flat tile index.
+    pub fn tile_coords(&self, idx: usize) -> (usize, usize) {
+        (idx / self.n_col_tiles(), idx % self.n_col_tiles())
+    }
+
+    /// Output positions covered by row-tile `rt` (raster order).
+    pub fn tile_positions(&self, rt: usize) -> Vec<(usize, usize)> {
+        let ow = self.layer.out_w();
+        let start = rt * self.rows;
+        let end = ((rt + 1) * self.rows).min(self.layer.num_convs());
+        (start..end).map(|p| (p / ow, p % ow)).collect()
+    }
+
+    /// Kernels covered by col-tile `ct`.
+    pub fn tile_kernels(&self, ct: usize) -> std::ops::Range<usize> {
+        let start = ct * self.cols;
+        start..((ct + 1) * self.cols).min(self.layer.cout)
+    }
+
+    /// Deterministically sample up to `n` tile indices (0 = all).
+    pub fn sample_tiles(&self, n: usize, seed: u64) -> Vec<usize> {
+        let total = self.n_tiles();
+        if n == 0 || n >= total {
+            return (0..total).collect();
+        }
+        let mut rng = Rng::seed_from_u64(seed ^ 0x711e);
+        let mut all: Vec<usize> = (0..total).collect();
+        rng.shuffle(&mut all);
+        all.truncate(n);
+        all.sort_unstable();
+        all
+    }
+}
+
+/// A fully materialized tile: the streams fed to the array for one pass.
+#[derive(Debug, Clone)]
+pub struct TileJob {
+    /// One feature stream per active PE row.
+    pub features: Vec<GroupedStream>,
+    /// One weight stream per active PE column.
+    pub weights: Vec<GroupedStream>,
+    /// Groups per convolution (uniform across the tile).
+    pub n_groups: usize,
+}
+
+impl TileJob {
+    pub fn active_rows(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn active_cols(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Dense MAC count this tile represents (naive array work).
+    pub fn dense_macs(&self) -> u64 {
+        (self.active_rows() * self.active_cols()) as u64
+            * (self.n_groups * crate::GROUP_LEN) as u64
+    }
+
+    /// Must-be-performed MACs: aligned non-zero pairs summed over PEs.
+    pub fn must_macs(&self) -> u64 {
+        let mut total = 0u64;
+        for f in &self.features {
+            for w in &self.weights {
+                for (fg, wg) in f.groups.iter().zip(w.groups.iter()) {
+                    // count offset intersections (incl. 16-bit multiplicity)
+                    let mut f_mult = [0u8; crate::GROUP_LEN];
+                    for t in &fg.tokens {
+                        if !t.is_placeholder() {
+                            f_mult[t.offset() as usize] += 1;
+                        }
+                    }
+                    for t in &wg.tokens {
+                        if !t.is_placeholder() {
+                            total += f_mult[t.offset() as usize] as u64;
+                        }
+                    }
+                }
+            }
+        }
+        total
+    }
+}
+
+/// Workload source for tile materialization.
+pub enum TileSource<'a> {
+    /// Synthetic streams at designated densities.
+    Synthetic {
+        feature_density: f64,
+        weight_density: f64,
+        clustered: bool,
+    },
+    /// Real tensors (S2Net / PJRT real-feature mode), image `n`.
+    Real {
+        feat: &'a FeatTensor,
+        weights: &'a WeightTensor,
+        n: usize,
+        scale: f32,
+    },
+}
+
+/// Materialize tile `idx` of `mapping` from `source`, optionally
+/// promoting `ratio16` of the values to split 16-bit tokens.
+pub fn build_tile(
+    mapping: &LayerMapping,
+    idx: usize,
+    source: &TileSource,
+    ratio16: f64,
+    seed: u64,
+) -> TileJob {
+    let (rt, ct) = mapping.tile_coords(idx);
+    let layer = &mapping.layer;
+    let positions = mapping.tile_positions(rt);
+    let kernels = mapping.tile_kernels(ct);
+
+    let mut features: Vec<GroupedStream> = match source {
+        TileSource::Synthetic {
+            feature_density,
+            clustered,
+            ..
+        } => positions
+            .iter()
+            .map(|&(oy, ox)| {
+                feature_stream_synthetic(layer, oy, ox, *feature_density, *clustered, seed)
+            })
+            .collect(),
+        TileSource::Real { feat, n, scale, .. } => positions
+            .iter()
+            .map(|&(oy, ox)| feature_stream_real(feat, layer, *n, oy, ox, *scale))
+            .collect(),
+    };
+
+    let mut weights: Vec<GroupedStream> = match source {
+        TileSource::Synthetic {
+            weight_density,
+            clustered,
+            ..
+        } => kernels
+            .map(|co| weight_stream_synthetic(layer, co, *weight_density, *clustered, seed))
+            .collect(),
+        TileSource::Real {
+            weights: w, scale, ..
+        } => kernels
+            .map(|co| weight_stream_real(w, layer, co, *scale))
+            .collect(),
+    };
+
+    if ratio16 > 0.0 {
+        for (i, f) in features.iter_mut().enumerate() {
+            *f = promote_fraction(f, ratio16, seed ^ (i as u64) << 8);
+        }
+        for (i, w) in weights.iter_mut().enumerate() {
+            *w = promote_fraction(w, ratio16, seed ^ (i as u64) << 24 ^ 0xabc);
+        }
+    }
+
+    let n_groups = layer.groups_per_conv();
+    debug_assert!(features.iter().all(|f| f.n_groups() == n_groups));
+    debug_assert!(weights.iter().all(|w| w.n_groups() == n_groups));
+    TileJob {
+        features,
+        weights,
+        n_groups,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> LayerDesc {
+        LayerDesc::new("t", 8, 8, 32, 3, 3, 24, 1, 1)
+    }
+
+    #[test]
+    fn tile_counts() {
+        let m = LayerMapping::new(&layer(), 16, 16);
+        // M = 64 positions -> 4 row tiles; N = 24 kernels -> 2 col tiles
+        assert_eq!(m.n_row_tiles(), 4);
+        assert_eq!(m.n_col_tiles(), 2);
+        assert_eq!(m.n_tiles(), 8);
+        assert_eq!(m.tile_coords(0), (0, 0));
+        assert_eq!(m.tile_coords(3), (1, 1));
+    }
+
+    #[test]
+    fn edge_tile_partial_kernels() {
+        let m = LayerMapping::new(&layer(), 16, 16);
+        assert_eq!(m.tile_kernels(1), 16..24);
+        assert_eq!(m.tile_positions(3).len(), 16);
+    }
+
+    #[test]
+    fn sample_tiles_deterministic_and_bounded() {
+        let m = LayerMapping::new(&layer(), 4, 4);
+        let a = m.sample_tiles(5, 1);
+        let b = m.sample_tiles(5, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        assert!(a.iter().all(|&i| i < m.n_tiles()));
+        let all = m.sample_tiles(0, 1);
+        assert_eq!(all.len(), m.n_tiles());
+    }
+
+    #[test]
+    fn build_synthetic_tile_shape() {
+        let m = LayerMapping::new(&layer(), 16, 16);
+        let src = TileSource::Synthetic {
+            feature_density: 0.4,
+            weight_density: 0.4,
+            clustered: false,
+        };
+        let tile = build_tile(&m, 0, &src, 0.0, 3);
+        assert_eq!(tile.active_rows(), 16);
+        assert_eq!(tile.active_cols(), 16);
+        assert_eq!(tile.n_groups, 9 * 2);
+        assert_eq!(tile.dense_macs(), 16 * 16 * 18 * 16);
+    }
+
+    #[test]
+    fn must_macs_scale_with_density() {
+        let m = LayerMapping::new(&layer(), 8, 8);
+        let lo = build_tile(
+            &m,
+            0,
+            &TileSource::Synthetic {
+                feature_density: 0.2,
+                weight_density: 0.2,
+                clustered: false,
+            },
+            0.0,
+            3,
+        );
+        let hi = build_tile(
+            &m,
+            0,
+            &TileSource::Synthetic {
+                feature_density: 0.8,
+                weight_density: 0.8,
+                clustered: false,
+            },
+            0.0,
+            3,
+        );
+        assert!(hi.must_macs() > lo.must_macs() * 6);
+        // expectation: density^2 of dense
+        let expect = (lo.dense_macs() as f64) * 0.04;
+        let got = lo.must_macs() as f64;
+        assert!(
+            (got / expect - 1.0).abs() < 0.5,
+            "must_macs {got} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn ratio16_increases_must_macs() {
+        let m = LayerMapping::new(&layer(), 8, 8);
+        let src = TileSource::Synthetic {
+            feature_density: 0.5,
+            weight_density: 0.5,
+            clustered: false,
+        };
+        let plain = build_tile(&m, 0, &src, 0.0, 3);
+        let mixed = build_tile(&m, 0, &src, 0.5, 3);
+        assert!(mixed.must_macs() > plain.must_macs());
+    }
+
+    #[test]
+    fn real_tile_from_tensors() {
+        use crate::models::features::{generate, Pattern};
+        use crate::models::pruning::pruned_weights;
+        let l = layer();
+        let f = generate(&l, 0.5, Pattern::Uniform, 1);
+        let w = pruned_weights(&l, 0.4, 1);
+        let m = LayerMapping::new(&l, 8, 8);
+        let tile = build_tile(
+            &m,
+            0,
+            &TileSource::Real {
+                feat: &f,
+                weights: &w,
+                n: 0,
+                scale: 1.0 / 128.0,
+            },
+            0.0,
+            0,
+        );
+        assert_eq!(tile.active_rows(), 8);
+        assert!(tile.must_macs() > 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The S²Engine dataflow compiler.
+//!
+//! Mirrors the paper's in-house C++ compiler (Section 5.1): it translates
+//! sparse CNN layers into the compressed dataflows the systolic array
+//! consumes —
+//!
+//! 1. [`groups`] reshapes each convolution window into a 1-D vector at
+//!    channel-group granularity (GROUP_LEN = 16), the layout that makes
+//!    overlap reuse expressible by the CE array (Section 4.1/4.4);
+//! 2. [`ecoo`] compresses those vectors into the Enhanced-COO format
+//!    `(value, offset, EOG)` with end-of-kernel marking for weights
+//!    (Section 4.2, Fig. 5);
+//! 3. [`precision`] splits values across the 8-bit datapath, promoting
+//!    outliers to tagged 16-bit pairs (Section 4.5, Fig. 9);
+//! 4. [`mapping`] tiles a layer's GEMM view onto an R×C PE array and
+//!    materializes per-tile weight/feature streams for the simulator;
+//! 5. [`serialize`] writes/reads compiled dataflows as `.s2df` files —
+//!    the compiler↔simulator interchange of the paper's toolchain.
+
+pub mod ecoo;
+pub mod groups;
+pub mod mapping;
+pub mod precision;
+pub mod serialize;
+
+pub use ecoo::{EcooFlow, Token};
+pub use groups::{GroupedStream, GroupRef};
+pub use mapping::{LayerMapping, TileJob};

@@ -1,0 +1,196 @@
+//! Fine-grained mixed-precision processing — Section 4.5, Fig. 9.
+//!
+//! The PE datapath is 8-bit only. During dataflow compression, values are
+//! classified against a threshold: an 8-bit value becomes one token with
+//! TAG16=0; a 16-bit value is split into two tokens with the *same
+//! offset* — low byte then high byte — both tagged TAG16, the second
+//! carrying the HI flag. The DS component pairs same-offset tokens, so a
+//! 16-bit value meeting an 8-bit one produces 2 aligned pairs and two
+//! 16-bit values produce 4 (Fig. 9(b)); the MAC reassembles the partial
+//! products by shifting, which costs no extra datapath.
+
+use crate::util::rng::Rng;
+
+use super::ecoo::{EcooFlow, Token};
+use super::groups::GroupedStream;
+use crate::GROUP_LEN;
+
+/// Split threshold: |v| <= 127 stays 8-bit; larger goes to the 16-bit
+/// outlier path. (Park et al. [19] promote ~3% of values.)
+pub const I8_MAX: i16 = 127;
+
+/// Encode a dense, group-aligned i16 slice into a mixed-precision flow.
+pub fn encode_mixed(data: &[i16]) -> EcooFlow {
+    assert!(data.len() % GROUP_LEN == 0, "not group-aligned");
+    let n_groups = data.len() / GROUP_LEN;
+    let mut tokens = Vec::new();
+    for g in 0..n_groups {
+        let group = &data[g * GROUP_LEN..(g + 1) * GROUP_LEN];
+        let start = tokens.len();
+        for (off, &v) in group.iter().enumerate() {
+            if v == 0 {
+                continue;
+            }
+            if (-I8_MAX..=I8_MAX).contains(&v) {
+                tokens.push(Token::new(v as i8, off as u8));
+            } else {
+                // split: low byte (unsigned) then high byte (signed)
+                let lo = (v as u16 & 0xff) as u8 as i8;
+                let hi = (v >> 8) as i8;
+                tokens.push(Token::new(lo, off as u8).with_tag16(false));
+                tokens.push(Token::new(hi, off as u8).with_tag16(true));
+            }
+        }
+        if tokens.len() == start {
+            tokens.push(Token::placeholder());
+        } else {
+            let last = tokens.len() - 1;
+            tokens[last] = tokens[last].with_eog();
+        }
+    }
+    EcooFlow { tokens, n_groups }
+}
+
+/// Decode a mixed-precision flow back to dense i16.
+pub fn decode_mixed(flow: &EcooFlow) -> Vec<i16> {
+    let mut out = vec![0i16; flow.n_groups * GROUP_LEN];
+    let mut g = 0usize;
+    let mut pending_lo: Option<(u8, u8)> = None; // (offset, lo byte)
+    for t in &flow.tokens {
+        if !t.is_placeholder() || t.tag16() {
+            let idx = g * GROUP_LEN + t.offset() as usize;
+            if t.tag16() && !t.hi() {
+                pending_lo = Some((t.offset(), t.value() as u8));
+            } else if t.tag16() && t.hi() {
+                let (off, lo) = pending_lo.take().expect("hi byte without lo");
+                debug_assert_eq!(off, t.offset());
+                out[idx] = ((t.value() as i16) << 8) | lo as i16;
+            } else if !t.is_placeholder() {
+                out[idx] = t.value() as i16;
+            }
+        }
+        if t.eog() {
+            g += 1;
+        }
+    }
+    out
+}
+
+/// Promote a designated fraction of the non-zero tokens of a grouped
+/// stream to 16-bit split pairs. This is the Fig. 12 / Table IV workload
+/// generator ("generated dense AlexNet models with 16-bit data ratio
+/// growing from 10% to 100%"): the *values* do not matter to the cycle
+/// simulator, only the token multiplicities.
+pub fn promote_fraction(stream: &GroupedStream, ratio16: f64, seed: u64) -> GroupedStream {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x16b1);
+    let mut out = stream.clone();
+    for g in out.groups.iter_mut() {
+        let mut tokens = Vec::with_capacity(g.tokens.len());
+        for t in &g.tokens {
+            if !t.is_placeholder() && rng.gen_f64() < ratio16 {
+                let eog = t.eog();
+                let eok = t.eok();
+                let lo = Token::new(t.value(), t.offset()).with_tag16(false);
+                let mut hi = Token::new(1, t.offset()).with_tag16(true);
+                if eog {
+                    hi = hi.with_eog();
+                }
+                if eok {
+                    hi = hi.with_eok();
+                }
+                tokens.push(lo);
+                tokens.push(hi);
+            } else {
+                tokens.push(*t);
+            }
+        }
+        g.tokens = tokens;
+    }
+    out
+}
+
+/// MAC operations produced when two aligned values meet, given their
+/// token multiplicities (1 = 8-bit, 2 = 16-bit): Fig. 9(b).
+#[inline]
+pub fn mac_ops(w_mult: u32, f_mult: u32) -> u32 {
+    w_mult * f_mult
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::groups::synth_group;
+
+    #[test]
+    fn small_values_single_token() {
+        let mut data = vec![0i16; 16];
+        data[2] = 100;
+        data[9] = -45;
+        let flow = encode_mixed(&data);
+        assert_eq!(flow.tokens.len(), 2);
+        assert!(flow.tokens.iter().all(|t| !t.tag16()));
+        assert_eq!(decode_mixed(&flow), data);
+    }
+
+    #[test]
+    fn large_value_splits_into_pair() {
+        let mut data = vec![0i16; 16];
+        data[5] = 1000; // 0x03E8
+        let flow = encode_mixed(&data);
+        assert_eq!(flow.tokens.len(), 2);
+        assert!(flow.tokens[0].tag16() && !flow.tokens[0].hi());
+        assert!(flow.tokens[1].tag16() && flow.tokens[1].hi());
+        assert_eq!(flow.tokens[0].offset(), 5);
+        assert_eq!(flow.tokens[1].offset(), 5);
+        assert!(flow.tokens[1].eog());
+        assert_eq!(decode_mixed(&flow), data);
+    }
+
+    #[test]
+    fn negative_16bit_roundtrip() {
+        let mut data = vec![0i16; 32];
+        data[0] = -300;
+        data[20] = 255;
+        data[31] = -32000;
+        let flow = encode_mixed(&data);
+        assert_eq!(decode_mixed(&flow), data);
+    }
+
+    #[test]
+    fn mixed_group_token_count() {
+        let mut data = vec![0i16; 16];
+        data[0] = 5; // 1 token
+        data[1] = 500; // 2 tokens
+        data[2] = -7; // 1 token
+        let flow = encode_mixed(&data);
+        assert_eq!(flow.tokens.len(), 4);
+        assert_eq!(decode_mixed(&flow), data);
+    }
+
+    #[test]
+    fn promote_fraction_doubles_tokens_at_full_ratio() {
+        let g = synth_group(3, 0.5, false, 1, crate::GROUP_LEN);
+        let stream = GroupedStream { groups: vec![g] };
+        let nnz = stream.nnz();
+        let promoted = promote_fraction(&stream, 1.0, 0);
+        assert_eq!(promoted.groups[0].tokens.len(), 2 * nnz);
+        // EOG preserved on the final token
+        assert!(promoted.groups[0].tokens.last().unwrap().eog());
+    }
+
+    #[test]
+    fn promote_fraction_zero_is_identity() {
+        let g = synth_group(3, 0.5, false, 1, crate::GROUP_LEN);
+        let stream = GroupedStream { groups: vec![g] };
+        let promoted = promote_fraction(&stream, 0.0, 0);
+        assert_eq!(promoted, stream);
+    }
+
+    #[test]
+    fn mac_ops_cross_product() {
+        assert_eq!(mac_ops(1, 1), 1);
+        assert_eq!(mac_ops(2, 1), 2);
+        assert_eq!(mac_ops(1, 2), 2);
+        assert_eq!(mac_ops(2, 2), 4); // Fig. 9(b)
+    }
+}

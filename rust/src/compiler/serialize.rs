@@ -1,0 +1,249 @@
+//! Compiled-dataflow file format — the compiler→simulator interchange.
+//!
+//! The paper's toolchain is two programs: an offline compiler that
+//! translates sparse CNN models into compressed dataflow files, and the
+//! simulator that replays them (Section 5.1). This module provides that
+//! decoupling: a [`TileJob`] (one array pass worth of ECOO streams)
+//! serializes to a compact binary image and loads back bit-exactly, so
+//! compiled workloads can be cached on disk, diffed, or fed to external
+//! tools.
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//! magic   "S2DF"            4 bytes
+//! version u16               currently 1
+//! n_groups u32              groups per convolution
+//! n_feat  u16, n_wt u16     stream counts
+//! streams…                  n_feat feature streams then n_wt weight
+//!   per stream: n_groups × { fb_group u64, n_tokens u16, tokens u32… }
+//! crc     u32               FNV-1a over everything before it
+//! ```
+
+use std::io::{self, Read, Write};
+
+use crate::compiler::groups::{GroupRef, GroupedStream};
+use crate::compiler::mapping::TileJob;
+use crate::compiler::Token;
+
+const MAGIC: &[u8; 4] = b"S2DF";
+const VERSION: u16 = 1;
+
+/// FNV-1a over a byte stream (integrity check; the format is for trusted
+/// local caching, not adversarial inputs).
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+struct Cursor<'a> {
+    buf: &'a mut Vec<u8>,
+}
+
+impl Cursor<'_> {
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a tile to bytes.
+pub fn to_bytes(tile: &TileJob) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    let mut c = Cursor { buf: &mut buf };
+    c.u16(VERSION);
+    c.u32(tile.n_groups as u32);
+    c.u16(tile.features.len() as u16);
+    c.u16(tile.weights.len() as u16);
+    for stream in tile.features.iter().chain(tile.weights.iter()) {
+        assert_eq!(stream.groups.len(), tile.n_groups, "ragged stream");
+        for g in &stream.groups {
+            c.u64(g.fb_group);
+            c.u16(g.tokens.len() as u16);
+            for t in &g.tokens {
+                c.u32(t.0);
+            }
+        }
+    }
+    let crc = fnv1a(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Deserialize a tile from bytes.
+pub fn from_bytes(data: &[u8]) -> io::Result<TileJob> {
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg);
+    if data.len() < 4 + 2 + 4 + 2 + 2 + 4 {
+        return Err(bad("truncated dataflow file"));
+    }
+    let (body, crc_bytes) = data.split_at(data.len() - 4);
+    let crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if fnv1a(body) != crc {
+        return Err(bad("dataflow CRC mismatch"));
+    }
+    let mut p = body;
+    let mut take = |n: usize| -> io::Result<&[u8]> {
+        if p.len() < n {
+            return Err(bad("truncated stream data"));
+        }
+        let (a, b) = p.split_at(n);
+        p = b;
+        Ok(a)
+    };
+    if take(4)? != MAGIC {
+        return Err(bad("bad magic (not an S2DF file)"));
+    }
+    let version = u16::from_le_bytes(take(2)?.try_into().unwrap());
+    if version != VERSION {
+        return Err(bad("unsupported S2DF version"));
+    }
+    let n_groups = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    let n_feat = u16::from_le_bytes(take(2)?.try_into().unwrap()) as usize;
+    let n_wt = u16::from_le_bytes(take(2)?.try_into().unwrap()) as usize;
+
+    let mut read_stream = |p: &mut &[u8]| -> io::Result<GroupedStream> {
+        let mut groups = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let mut take2 = |n: usize| -> io::Result<Vec<u8>> {
+                if p.len() < n {
+                    return Err(bad("truncated group"));
+                }
+                let (a, b) = p.split_at(n);
+                *p = b;
+                Ok(a.to_vec())
+            };
+            let fb_group = u64::from_le_bytes(take2(8)?.try_into().unwrap());
+            let n_tokens =
+                u16::from_le_bytes(take2(2)?.try_into().unwrap()) as usize;
+            let mut tokens = Vec::with_capacity(n_tokens);
+            for _ in 0..n_tokens {
+                tokens.push(Token(u32::from_le_bytes(
+                    take2(4)?.try_into().unwrap(),
+                )));
+            }
+            groups.push(GroupRef { fb_group, tokens });
+        }
+        Ok(GroupedStream { groups })
+    };
+
+    let mut features = Vec::with_capacity(n_feat);
+    for _ in 0..n_feat {
+        features.push(read_stream(&mut p)?);
+    }
+    let mut weights = Vec::with_capacity(n_wt);
+    for _ in 0..n_wt {
+        weights.push(read_stream(&mut p)?);
+    }
+    if !p.is_empty() {
+        return Err(bad("trailing bytes after streams"));
+    }
+    Ok(TileJob {
+        features,
+        weights,
+        n_groups,
+    })
+}
+
+/// Write a tile to a file.
+pub fn write_tile(path: &std::path::Path, tile: &TileJob) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes(tile))
+}
+
+/// Read a tile from a file.
+pub fn read_tile(path: &std::path::Path) -> io::Result<TileJob> {
+    let mut f = std::fs::File::open(path)?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+    from_bytes(&data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapping::{build_tile, LayerMapping, TileSource};
+    use crate::models::LayerDesc;
+
+    fn tile() -> TileJob {
+        let l = LayerDesc::new("t", 8, 8, 32, 3, 3, 16, 1, 1);
+        let m = LayerMapping::new(&l, 8, 8);
+        build_tile(
+            &m,
+            1,
+            &TileSource::Synthetic {
+                feature_density: 0.4,
+                weight_density: 0.4,
+                clustered: true,
+            },
+            0.05, // include mixed-precision tokens
+            9,
+        )
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let t = tile();
+        let bytes = to_bytes(&t);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.n_groups, t.n_groups);
+        assert_eq!(back.features, t.features);
+        assert_eq!(back.weights, t.weights);
+    }
+
+    #[test]
+    fn roundtrip_preserves_simulation() {
+        use crate::config::ArrayConfig;
+        use crate::sim::simulate_tile;
+        let t = tile();
+        let back = from_bytes(&to_bytes(&t)).unwrap();
+        let cfg = ArrayConfig::new(8, 8);
+        let a = simulate_tile(&t, &cfg, true);
+        let b = simulate_tile(&back, &cfg, true);
+        assert_eq!(a, b, "deserialized tile must simulate identically");
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = to_bytes(&tile());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        assert!(from_bytes(&bytes).is_err(), "flipped bit must fail CRC");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = to_bytes(&tile());
+        assert!(from_bytes(&bytes[..bytes.len() - 8]).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+        assert!(from_bytes(b"NOPE").is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = to_bytes(&tile());
+        bytes[0] = b'X';
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = tile();
+        let dir = std::env::temp_dir().join("s2df_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tile.s2df");
+        write_tile(&path, &t).unwrap();
+        let back = read_tile(&path).unwrap();
+        assert_eq!(back.features, t.features);
+        std::fs::remove_file(&path).ok();
+    }
+}

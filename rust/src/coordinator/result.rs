@@ -1,0 +1,284 @@
+//! Result aggregation: per-layer and per-model metrics, in the units the
+//! paper reports (speedup, on-chip/total energy-efficiency improvement,
+//! area-efficiency improvement, buffer reduction ratios).
+
+use crate::baseline::naive::NaiveCost;
+use crate::config::SimConfig;
+use crate::energy::{self, area, Energy};
+use crate::models::{LayerDesc, Model};
+use crate::sim::TileStats;
+use crate::MAC_FREQ_MHZ;
+
+/// Outcome of simulating one layer.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    pub layer: String,
+    /// Extrapolated S²Engine event counters for the full layer.
+    pub s2: TileStats,
+    /// Closed-form naive-array cost.
+    pub naive: NaiveCost,
+    pub feature_density: f64,
+    pub weight_density: f64,
+    pub tiles_sampled: usize,
+    pub tiles_total: usize,
+    /// DS:MAC frequency ratio used (wall-time conversion).
+    pub ds_ratio: u32,
+    /// CE array enabled?
+    pub ce_enabled: bool,
+    /// Compressed DRAM traffic (bytes) for the S²Engine run.
+    pub s2_dram_bytes: u64,
+}
+
+impl LayerResult {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        layer: &LayerDesc,
+        cfg: &SimConfig,
+        s2: TileStats,
+        naive: NaiveCost,
+        feature_density: f64,
+        weight_density: f64,
+        tiles_sampled: usize,
+        tiles_total: usize,
+    ) -> Self {
+        let s2_dram_bytes =
+            super::compressed_dram_bytes(layer, feature_density, weight_density);
+        LayerResult {
+            layer: layer.name.clone(),
+            s2,
+            naive,
+            feature_density,
+            weight_density,
+            tiles_sampled,
+            tiles_total,
+            ds_ratio: cfg.array.ds_ratio,
+            ce_enabled: cfg.ce_enabled,
+            s2_dram_bytes,
+        }
+    }
+
+    /// S²Engine wall time: DS cycles at ratio × 500 MHz.
+    pub fn s2_wall(&self) -> f64 {
+        self.s2.ds_cycles as f64
+            / (self.ds_ratio as f64 * MAC_FREQ_MHZ as f64 * 1e6)
+    }
+
+    pub fn naive_wall(&self) -> f64 {
+        self.naive.wall_seconds()
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.naive_wall() / self.s2_wall()
+    }
+
+    pub fn s2_energy(&self) -> Energy {
+        energy::s2_energy(&self.s2, self.ce_enabled, self.s2_dram_bytes)
+    }
+
+    pub fn naive_energy(&self) -> Energy {
+        energy::naive_energy(&self.naive)
+    }
+
+    /// On-chip energy-efficiency improvement (Fig. 16's metric).
+    pub fn onchip_ee_improvement(&self) -> f64 {
+        self.naive_energy().onchip.onchip_total() / self.s2_energy().onchip.onchip_total()
+    }
+
+    /// Energy-efficiency improvement including DRAM (the 3.0× headline).
+    pub fn total_ee_improvement(&self) -> f64 {
+        self.naive_energy().total() / self.s2_energy().total()
+    }
+
+    /// FB access reduction from CE reuse (Fig. 13 left).
+    pub fn buffer_access_reduction(&self) -> f64 {
+        if self.s2.fb_reads_ce == 0 {
+            return 1.0;
+        }
+        self.s2.fb_reads_no_ce as f64 / self.s2.fb_reads_ce as f64
+    }
+}
+
+/// Outcome of simulating a whole model.
+#[derive(Debug, Clone)]
+pub struct ModelResult {
+    pub model: String,
+    pub layers: Vec<LayerResult>,
+    pub cfg: SimConfig,
+}
+
+impl ModelResult {
+    pub fn new(model: &Model, cfg: &SimConfig, layers: Vec<LayerResult>) -> Self {
+        ModelResult {
+            model: model.name.clone(),
+            layers,
+            cfg: cfg.clone(),
+        }
+    }
+
+    pub fn total_s2_wall(&self) -> f64 {
+        self.layers.iter().map(|l| l.s2_wall()).sum()
+    }
+
+    pub fn total_naive_wall(&self) -> f64 {
+        self.layers.iter().map(|l| l.naive_wall()).sum()
+    }
+
+    /// End-to-end speedup over the naive array.
+    pub fn speedup(&self) -> f64 {
+        self.total_naive_wall() / self.total_s2_wall()
+    }
+
+    fn sum_energy(&self, f: impl Fn(&LayerResult) -> Energy) -> Energy {
+        let mut total = Energy::default();
+        for l in &self.layers {
+            let e = f(l);
+            total.onchip.mac_pj += e.onchip.mac_pj;
+            total.onchip.sram_pj += e.onchip.sram_pj;
+            total.onchip.fifo_pj += e.onchip.fifo_pj;
+            total.onchip.ce_pj += e.onchip.ce_pj;
+            total.onchip.other_pj += e.onchip.other_pj;
+            total.dram_pj += e.dram_pj;
+        }
+        total
+    }
+
+    pub fn s2_energy(&self) -> Energy {
+        self.sum_energy(|l| l.s2_energy())
+    }
+
+    pub fn naive_energy(&self) -> Energy {
+        self.sum_energy(|l| l.naive_energy())
+    }
+
+    pub fn onchip_ee_improvement(&self) -> f64 {
+        self.naive_energy().onchip.onchip_total()
+            / self.s2_energy().onchip.onchip_total()
+    }
+
+    pub fn total_ee_improvement(&self) -> f64 {
+        self.naive_energy().total() / self.s2_energy().total()
+    }
+
+    /// Area-efficiency improvement: (throughput/area) ratio vs naive
+    /// (Fig. 17's metric). Throughput ratio = speedup; areas from the
+    /// Table V-calibrated model.
+    pub fn area_efficiency_improvement(&self) -> f64 {
+        let s2_a = area::s2_area(&self.cfg.array, self.cfg.buffers.sram_bytes);
+        let naive_a = area::naive_area(
+            &self.cfg.array,
+            crate::config::BufferConfig::NAIVE_DEFAULT.sram_bytes,
+        );
+        self.speedup() * naive_a / s2_a
+    }
+
+    /// Average FB access reduction across layers (Fig. 13).
+    pub fn avg_buffer_access_reduction(&self) -> f64 {
+        let v: f64 = self.layers.iter().map(|l| l.buffer_access_reduction()).sum();
+        v / self.layers.len().max(1) as f64
+    }
+
+    /// Aggregate stats over all layers.
+    pub fn total_stats(&self) -> TileStats {
+        let mut t = TileStats::default();
+        for l in &self.layers {
+            t.merge(&l.s2);
+        }
+        t
+    }
+
+    /// Structured JSON dump (for downstream tooling / plotting).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut obj = BTreeMap::new();
+        obj.insert("model".into(), Json::Str(self.model.clone()));
+        obj.insert("speedup".into(), Json::Num(self.speedup()));
+        obj.insert(
+            "onchip_ee_improvement".into(),
+            Json::Num(self.onchip_ee_improvement()),
+        );
+        obj.insert(
+            "total_ee_improvement".into(),
+            Json::Num(self.total_ee_improvement()),
+        );
+        obj.insert(
+            "area_efficiency_improvement".into(),
+            Json::Num(self.area_efficiency_improvement()),
+        );
+        obj.insert(
+            "buffer_access_reduction".into(),
+            Json::Num(self.avg_buffer_access_reduction()),
+        );
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut lo = BTreeMap::new();
+                lo.insert("layer".into(), Json::Str(l.layer.clone()));
+                lo.insert("speedup".into(), Json::Num(l.speedup()));
+                lo.insert("s2_ds_cycles".into(), Json::Num(l.s2.ds_cycles as f64));
+                lo.insert(
+                    "naive_mac_cycles".into(),
+                    Json::Num(l.naive.mac_cycles as f64),
+                );
+                lo.insert("mac_ops".into(), Json::Num(l.s2.mac_ops as f64));
+                lo.insert("dense_macs".into(), Json::Num(l.s2.dense_macs as f64));
+                lo.insert(
+                    "feature_density".into(),
+                    Json::Num(l.feature_density),
+                );
+                lo.insert("weight_density".into(), Json::Num(l.weight_density));
+                Json::Obj(lo)
+            })
+            .collect();
+        obj.insert("layers".into(), Json::Arr(layers));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayConfig;
+    use crate::coordinator::Coordinator;
+    use crate::models::zoo;
+
+    fn small_result() -> ModelResult {
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(2);
+        Coordinator::new(cfg).simulate_model(&zoo::s2net(), 0)
+    }
+
+    #[test]
+    fn wall_times_positive_and_consistent() {
+        let r = small_result();
+        assert!(r.total_s2_wall() > 0.0);
+        assert!(r.total_naive_wall() > 0.0);
+        let sum: f64 = r.layers.iter().map(|l| l.s2_wall()).sum();
+        assert!((sum - r.total_s2_wall()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_improvements_positive(){
+        let r = small_result();
+        assert!(r.onchip_ee_improvement() > 0.5);
+        assert!(r.total_ee_improvement() > 0.5);
+        // with-DRAM improvement should exceed on-chip (compression wins
+        // on DRAM traffic) for sparse nets
+        assert!(r.total_ee_improvement() > r.onchip_ee_improvement() * 0.8);
+    }
+
+    #[test]
+    fn area_efficiency_exceeds_speedup() {
+        // S2 area < naive area, so AE improvement > speedup
+        let r = small_result();
+        assert!(r.area_efficiency_improvement() > r.speedup());
+    }
+
+    #[test]
+    fn total_stats_merges() {
+        let r = small_result();
+        let t = r.total_stats();
+        let sum: u64 = r.layers.iter().map(|l| l.s2.mac_ops).sum();
+        assert_eq!(t.mac_ops, sum);
+    }
+}

@@ -1,0 +1,115 @@
+//! Area model, calibrated to the paper's Table V breakdown (mm², GF 14nm).
+//!
+//! Table V anchors (32×32 array, 1024 multipliers):
+//!
+//! | component                | S²Engine          | naive |
+//! |--------------------------|-------------------|-------|
+//! | FIFO+DS  (12/22/32 KB)   | 0.43 / 0.56 / 0.81| —     |
+//! | MULs (1024)              | 0.12              | 0.51  |
+//! | SRAM (1 MB / 2 MB)       | 1.44              | 2.89  |
+//!
+//! The naive MUL block is larger because each naive PE carries the full
+//! dense-path accumulator/registering; S²Engine PEs share that cost with
+//! the DS block (accounted in the FIFO+DS line).
+
+use crate::config::{ArrayConfig, FifoDepths};
+
+/// mm² per 8-bit multiplier+accumulator in the S²Engine PE (DS logic
+/// accounted separately).
+pub const MUL_AREA_S2: f64 = 0.12 / 1024.0;
+/// mm² per naive dense PE (MAC + dense control/registers).
+pub const MUL_AREA_NAIVE: f64 = 0.51 / 1024.0;
+/// DS control logic per PE, excluding FIFO storage (base of the
+/// FIFO+DS line: ~0.25 mm² / 1024 PEs at depth→0 extrapolation).
+pub const DS_LOGIC_AREA: f64 = 0.25 / 1024.0;
+/// FIFO storage per KB (linear fit through Table V's three points).
+pub const FIFO_AREA_PER_KB: f64 = 0.0155;
+/// SRAM per MB (Table V: 1 MB → 1.44 mm²).
+pub const SRAM_AREA_PER_MB: f64 = 1.44;
+
+/// Total FIFO capacity of an array in KB.
+pub fn fifo_kb(cfg: &ArrayConfig) -> f64 {
+    let per_pe = cfg.fifo.bytes_per_pe();
+    if per_pe.is_infinite() {
+        // (∞,∞,∞) is an idealization; area reported as depth-16
+        return FifoDepths::uniform(16).bytes_per_pe() * cfg.num_pes() as f64 / 1024.0;
+    }
+    per_pe * cfg.num_pes() as f64 / 1024.0
+}
+
+/// S²Engine die area for a configuration (mm²).
+pub fn s2_area(cfg: &ArrayConfig, sram_bytes: usize) -> f64 {
+    let pes = cfg.num_pes() as f64;
+    pes * (MUL_AREA_S2 + DS_LOGIC_AREA)
+        + fifo_kb(cfg) * FIFO_AREA_PER_KB
+        + (sram_bytes as f64 / (1 << 20) as f64) * SRAM_AREA_PER_MB
+}
+
+/// Naive array die area (mm²).
+pub fn naive_area(cfg: &ArrayConfig, sram_bytes: usize) -> f64 {
+    cfg.num_pes() as f64 * MUL_AREA_NAIVE
+        + (sram_bytes as f64 / (1 << 20) as f64) * SRAM_AREA_PER_MB
+}
+
+/// SCNN area at its published 16nm point (7.9 mm²), node-scaled to 14nm
+/// for Fig. 17 / Table V comparisons.
+pub const SCNN_AREA_MM2: f64 = 7.9 * 0.8;
+
+/// SparTen at 45nm is 24.5 mm²; scaled to 14nm-class (~(14/45)²).
+pub const SPARTEN_AREA_MM2: f64 = 24.5 * (14.0 * 14.0) / (45.0 * 45.0);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BufferConfig;
+
+    #[test]
+    fn table5_total_area_band() {
+        // Table V: S²Engine 32x32 totals 2.03 / 2.15 / 2.39 mm² for FIFO
+        // depths 2/4/8 with 1 MB SRAM.
+        for (depth, want) in [(2usize, 2.03), (4, 2.15), (8, 2.39)] {
+            let cfg = ArrayConfig::new(32, 32).with_fifo(FifoDepths::uniform(depth));
+            let got = s2_area(&cfg, BufferConfig::S2_DEFAULT.sram_bytes);
+            assert!(
+                (got - want).abs() / want < 0.15,
+                "depth {depth}: got {got:.2}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn naive_area_matches_table5() {
+        let cfg = ArrayConfig::new(32, 32);
+        let got = naive_area(&cfg, BufferConfig::NAIVE_DEFAULT.sram_bytes);
+        // paper: 0.51 + 2.89 = 3.40 (Table V total row prints 3.04;
+        // component sum is what we reproduce)
+        assert!((got - 3.40).abs() < 0.2, "naive area {got:.2}");
+    }
+
+    #[test]
+    fn s2_smaller_than_naive_at_default_buffers() {
+        let cfg = ArrayConfig::new(32, 32);
+        assert!(
+            s2_area(&cfg, 1 << 20) < naive_area(&cfg, 2 << 20),
+            "compressed buffers must shrink total die"
+        );
+    }
+
+    #[test]
+    fn fifo_kb_scales_with_depth_and_pes() {
+        let a = fifo_kb(&ArrayConfig::new(16, 16));
+        let b = fifo_kb(&ArrayConfig::new(32, 32));
+        assert!((b / a - 4.0).abs() < 0.01);
+        let deep =
+            fifo_kb(&ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(8)));
+        assert!(deep > a);
+    }
+
+    #[test]
+    fn comparator_areas_larger_than_s2() {
+        let cfg = ArrayConfig::new(32, 32);
+        let s2 = s2_area(&cfg, 1 << 20);
+        assert!(SCNN_AREA_MM2 > s2);
+        assert!(SPARTEN_AREA_MM2 < 24.5); // scaling applied
+    }
+}

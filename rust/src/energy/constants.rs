@@ -1,0 +1,75 @@
+//! Per-event energy constants, 14nm-class, in picojoules.
+//!
+//! Sources and calibration:
+//! * MAC / register-file costs follow the Horowitz ISSCC'14 survey
+//!   ("Computing's energy problem") scaled from 45nm to a 14nm FinFET
+//!   node (~3.5× reduction), the same scaling practice the paper's
+//!   PCACTI flow applies.
+//! * SRAM per-byte costs are CACTI-class values for 1–2 MB banks; the
+//!   2 MB (naive) bank pays a modestly higher per-access cost than the
+//!   1 MB (S²Engine) bank — wire dominated.
+//! * DRAM per-byte follows the usual LPDDR estimate (~20 pJ/bit class at
+//!   the interface), dwarfing on-chip events — which is exactly why the
+//!   paper reports its 3.0× headline *with* DRAM and the 1.8×
+//!   architectural number without.
+//!
+//! Absolute values matter much less than ratios here: every number the
+//! reproduction reports is an improvement factor vs the naive array
+//! evaluated under the *same* constants.
+
+/// 8-bit multiply-accumulate (multiplier + 24-bit accumulator update).
+pub const E_MAC8: f64 = 0.2;
+
+/// One token pushed into / popped from a small register-file FIFO,
+/// including the DS compare/advance switching it triggers. Register-file
+/// access is ~1 pJ at 45nm (Horowitz), ~0.3 pJ scaled to 14nm; the paper's
+/// Fig. 15 shows the FIFO slice is a visible fraction of on-chip energy,
+/// which calibrates this to 0.2.
+pub const E_FIFO_PUSH: f64 = 0.2;
+
+/// DS controller compare/advance logic per active DS cycle (amortized
+/// per PE; also used as the naive array's per-cycle control proxy).
+pub const E_DS_CYCLE_CONTROL: f64 = 0.01;
+
+/// One group read served from a CE's internal FIFO (replaces an FB read
+/// of a whole compressed group — the energy win of Fig. 15).
+pub const E_CE_GROUP_READ: f64 = 0.6;
+
+/// SRAM read, per byte, 1 MB bank (S²Engine's FB+WB).
+pub const E_SRAM_BYTE_1MB: f64 = 2.0;
+
+/// SRAM read, per byte, 2 MB bank (naive array's FB+WB): wire-dominated,
+/// ~50% above the 1 MB bank per PCACTI-class scaling.
+pub const E_SRAM_BYTE_2MB: f64 = 3.0;
+
+/// DRAM traffic, per byte (~20 pJ/bit-class LPDDR interface energy,
+/// amortized to ~60 pJ/byte including row activation).
+pub const E_DRAM_BYTE: f64 = 60.0;
+
+/// Result forwarding per result (RF register hops).
+pub const E_RESULT_FORWARD: f64 = 0.1;
+
+/// Architectural token widths in bytes for traffic accounting
+/// (13-/14-bit tokens — Section 4.2).
+pub const FEATURE_TOKEN_BYTES: f64 = 13.0 / 8.0;
+pub const WEIGHT_TOKEN_BYTES: f64 = 14.0 / 8.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_hierarchy_holds() {
+        // The Horowitz hierarchy: register < SRAM < DRAM, each ~an order
+        // of magnitude — the premise of the paper's data-reuse argument
+        // (Section 3.1).
+        assert!(E_FIFO_PUSH < E_SRAM_BYTE_1MB);
+        assert!(E_SRAM_BYTE_1MB * 10.0 < E_DRAM_BYTE * 1.0 + 1e-9);
+        assert!(E_CE_GROUP_READ < E_SRAM_BYTE_1MB * 2.0);
+    }
+
+    #[test]
+    fn bigger_sram_costs_more_per_byte() {
+        assert!(E_SRAM_BYTE_2MB > E_SRAM_BYTE_1MB);
+    }
+}

@@ -1,0 +1,64 @@
+//! # S²Engine — a systolic architecture for sparse CNNs
+//!
+//! Library reproduction of *"S²Engine: A Novel Systolic Architecture for
+//! Sparse Convolutional Neural Networks"* (Yang et al., IEEE Transactions
+//! on Computers, 2021). The crate contains everything the paper's
+//! evaluation depends on:
+//!
+//! * [`compiler`] — the dataflow compiler: group reshaping of convolutions
+//!   (`im2col` at channel-group granularity), ECOO compression
+//!   `(value, offset, EOG)`, and fine-grained mixed-precision splitting.
+//! * [`sim`] — the cycle-accurate simulator of the S²Engine array: PEs
+//!   (Dynamic Selection + MAC + Result Forwarding), their internal FIFOs,
+//!   the Collective Element (CE) array for overlap reuse, and the FB/WB
+//!   SRAM buffers.
+//! * [`baseline`] — the naïve output-stationary systolic array (TPU-class
+//!   comparison point) plus analytic SCNN and SparTen comparators.
+//! * [`energy`] — the 14nm-calibrated per-event energy and area model that
+//!   turns simulator event counts into the paper's efficiency metrics.
+//! * [`models`] — conv-layer descriptors for AlexNet / VGG16 / ResNet50
+//!   (the paper's 71 evaluated conv layers) and the CIFAR-scale S2Net that
+//!   the JAX/Pallas artifacts implement, with magnitude pruning and
+//!   feature generators calibrated to the paper's Table II sparsity.
+//! * [`sparsity`] — tensor density statistics and distribution sampling
+//!   (Fig. 3 reproduction).
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
+//!   artifacts (L2 JAX model + L1 Pallas kernels) and executes them from
+//!   Rust, supplying *real* ReLU feature sparsity to the simulator.
+//! * [`coordinator`] — the job scheduler that fans layer simulations out
+//!   across worker threads, aggregates results, and drives sweeps.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation section as text/CSV output.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use s2engine::config::{ArrayConfig, SimConfig};
+//! use s2engine::coordinator::Coordinator;
+//! use s2engine::models::zoo;
+//!
+//! let cfg = SimConfig::new(ArrayConfig::new(16, 16));
+//! let coord = Coordinator::new(cfg);
+//! let result = coord.simulate_model(&zoo::alexnet(), 0);
+//! println!("speedup over naive: {:.2}x", result.speedup());
+//! ```
+
+pub mod baseline;
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod util;
+
+/// ECOO group length (Section 4.2 of the paper): 4-bit offsets address
+/// positions `0..16` within a group.
+pub const GROUP_LEN: usize = 16;
+
+/// MAC-component clock in MHz (Section 5: "setting the frequency of MAC
+/// component as 500MHz").
+pub const MAC_FREQ_MHZ: u64 = 500;

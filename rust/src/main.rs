@@ -1,0 +1,300 @@
+//! `s2engine` — CLI for the S²Engine reproduction.
+//!
+//! ```text
+//! s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
+//!                   --ratio 4 --samples 16 --subset avg|max|min
+//!                   --no-ce --ratio16 0.035 --seed N --workers N
+//!                   --json out.json]
+//! s2engine report  table1|table2|table3|table4|table5|fig3|fits [--effort ...]
+//! s2engine sweep   fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17
+//!                   [--effort ...] [--scales 16,32]
+//! s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
+//! s2engine replay  --in t.s2df [--rows R --cols C ...]  # simulate a file
+//! s2engine infer   [--artifacts DIR]    # PJRT real-feature end-to-end
+//! s2engine verify  [--artifacts DIR]    # artifact GEMM vs Rust oracle
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::report::{self, Effort};
+use s2engine::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn sim_config(args: &Args) -> SimConfig {
+    let rows = args.get_usize("rows", 16);
+    let cols = args.get_usize("cols", rows);
+    let array = ArrayConfig::new(rows, cols)
+        .with_fifo(args.get_fifo("fifo", Default::default()))
+        .with_ratio(args.get_u64("ratio", 4) as u32);
+    let mut cfg = SimConfig::new(array)
+        .with_samples(args.get_usize("samples", 8))
+        .with_seed(args.get_u64("seed", 0x5eed_5eed));
+    cfg.ce_enabled = !args.has_flag("no-ce");
+    cfg.ratio16 = args.get_f64("ratio16", 0.0);
+    cfg.workers = args.get_usize("workers", 0);
+    cfg
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("simulate") => simulate(args),
+        Some("compile") => compile_cmd(args),
+        Some("replay") => replay(args),
+        Some("report") => report_cmd(args),
+        Some("sweep") => sweep(args),
+        Some("infer") => infer(args),
+        Some("verify") => verify(args),
+        Some(other) => Err(anyhow!("unknown subcommand `{other}` (see --help)")),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!("{}", include_str!("main.rs").lines().skip(2).take(11).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let name = args.get("model").unwrap_or("alexnet");
+    let model =
+        zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+    let subset = match args.get("subset").unwrap_or("avg") {
+        "max" => FeatureSubset::MaxSparsity,
+        "min" => FeatureSubset::MinSparsity,
+        _ => FeatureSubset::Average,
+    };
+    let cfg = sim_config(args);
+    println!(
+        "simulating {} on {}x{} array, fifo {}, DS:MAC {}:1, CE {}",
+        model.name,
+        cfg.array.rows,
+        cfg.array.cols,
+        cfg.array.fifo.label(),
+        cfg.array.ds_ratio,
+        if cfg.ce_enabled { "on" } else { "off" }
+    );
+    let t0 = std::time::Instant::now();
+    let r = Coordinator::new(cfg).simulate_model_subset(&model, subset);
+    println!(
+        "{:<12} {:>12} {:>12} {:>9} {:>9}",
+        "layer", "s2 cycles", "naive cyc", "speedup", "EE imp"
+    );
+    for l in &r.layers {
+        println!(
+            "{:<12} {:>12} {:>12} {:>8.2}x {:>8.2}x",
+            l.layer,
+            l.s2.ds_cycles,
+            l.naive.mac_cycles,
+            l.speedup(),
+            l.onchip_ee_improvement()
+        );
+    }
+    println!("---");
+    println!("speedup              {:.2}x", r.speedup());
+    println!("on-chip EE imp.      {:.2}x", r.onchip_ee_improvement());
+    println!("EE imp. (w/ DRAM)    {:.2}x", r.total_ee_improvement());
+    println!("area-eff imp.        {:.2}x", r.area_efficiency_improvement());
+    println!("FB access reduction  {:.2}x", r.avg_buffer_access_reduction());
+    println!("({} layers in {:?})", r.layers.len(), t0.elapsed());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, r.to_json().to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn report_cmd(args: &Args) -> Result<()> {
+    let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
+    let seed = args.get_u64("seed", 0x5eed_5eed);
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| {
+            anyhow!("report needs a target (table1|table2|table3|table4|table5|fig3|fits)")
+        })?;
+    let out = match which.as_str() {
+        "table1" => report::table1(),
+        "table3" => report::table3(),
+        "fits" => report::fits(),
+        "table2" => report::table2(seed),
+        "table4" => report::table4(effort, seed),
+        "table5" => report::table5(effort, seed),
+        "fig3" => report::fig3(effort, seed),
+        other => return Err(anyhow!("unknown report target `{other}`")),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
+    let seed = args.get_u64("seed", 0x5eed_5eed);
+    let scales: Vec<usize> = args
+        .get("scales")
+        .unwrap_or("16,32")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let which = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("sweep needs a target (fig10..fig17)"))?;
+    let t0 = std::time::Instant::now();
+    let out = match which.as_str() {
+        "fig10" => report::fig10(effort, seed),
+        "fig11" => report::fig11(effort, seed),
+        "fig12" => report::fig12(effort, seed),
+        "fig13" => report::fig13(effort, seed),
+        "fig14" => report::fig14(effort, seed, &scales),
+        "fig15" => report::fig15(effort, seed),
+        "fig16" => report::fig16(effort, seed, &scales),
+        "fig17" => report::fig17(effort, seed, &scales),
+        other => return Err(anyhow!("unknown sweep target `{other}`")),
+    };
+    println!("{out}");
+    println!("(generated in {:?})", t0.elapsed());
+    Ok(())
+}
+
+/// Compile one tile of a layer into a .s2df dataflow file (the paper's
+/// offline compiler output).
+fn compile_cmd(args: &Args) -> Result<()> {
+    use s2engine::compiler::mapping::{build_tile, LayerMapping, TileSource};
+    use s2engine::compiler::serialize;
+    let name = args.get("model").unwrap_or("alexnet");
+    let model = zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+    let lname = args.get("layer").unwrap_or(&model.layers[0].name).to_string();
+    let layer = model
+        .layer(&lname)
+        .ok_or_else(|| anyhow!("unknown layer `{lname}`"))?;
+    let cfg = sim_config(args);
+    let mapping = LayerMapping::new(layer, cfg.array.rows, cfg.array.cols);
+    let idx = args.get_usize("tile", 0).min(mapping.n_tiles() - 1);
+    let src = TileSource::Synthetic {
+        feature_density: args.get_f64("fdensity", model.feature_density),
+        weight_density: args.get_f64("wdensity", model.weight_density),
+        clustered: true,
+    };
+    let tile = build_tile(&mapping, idx, &src, cfg.ratio16, cfg.seed);
+    let out = args.get("out").unwrap_or("tile.s2df");
+    serialize::write_tile(std::path::Path::new(out), &tile)?;
+    println!(
+        "compiled {}/{} tile {idx}: {} rows x {} cols, {} groups/conv, {} must-MACs -> {out}",
+        model.name,
+        lname,
+        tile.active_rows(),
+        tile.active_cols(),
+        tile.n_groups,
+        tile.must_macs()
+    );
+    Ok(())
+}
+
+/// Replay a compiled .s2df dataflow file on the simulator.
+fn replay(args: &Args) -> Result<()> {
+    use s2engine::compiler::serialize;
+    use s2engine::sim::simulate_tile;
+    let path = args.get("in").unwrap_or("tile.s2df");
+    let tile = serialize::read_tile(std::path::Path::new(path))?;
+    let cfg = sim_config(args);
+    anyhow::ensure!(
+        tile.active_rows() <= cfg.array.rows && tile.active_cols() <= cfg.array.cols,
+        "tile {}x{} exceeds array {}x{} (pass --rows/--cols)",
+        tile.active_rows(),
+        tile.active_cols(),
+        cfg.array.rows,
+        cfg.array.cols
+    );
+    let s = simulate_tile(&tile, &cfg.array, cfg.ce_enabled);
+    println!("replayed {path}:");
+    println!("  ds_cycles     {}", s.ds_cycles);
+    println!("  mac_ops       {} of {} dense ({:.1}% skipped)",
+        s.mac_ops, s.dense_macs, 100.0 * s.skip_ratio());
+    println!("  fb reads      {} (no-CE {}), CE fifo {}",
+        s.fb_reads_ce, s.fb_reads_no_ce, s.ce_fifo_reads);
+    println!("  stalls        wf {} out {} starved {}",
+        s.stall_wf_full, s.stall_out_full, s.stall_starved);
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    use s2engine::models::pruning::pruned_weights;
+    use s2engine::models::tensor::FeatTensor;
+    use s2engine::runtime::Runtime;
+    use s2engine::util::rng::Rng;
+
+    let dir = args
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(|| {
+            s2engine::runtime::default_artifact_dir()
+                .to_string_lossy()
+                .into_owned()
+        });
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let model = zoo::s2net();
+    let seed = args.get_u64("seed", 42);
+    let mut rng = Rng::seed_from_u64(seed);
+    let c = &rt.manifest.cnn;
+    let mut image = FeatTensor::zeros(c.batch, c.img_hw, c.img_hw, c.img_c);
+    for v in image.data.iter_mut() {
+        *v = rng.gen_range_f32(-1.0, 1.0);
+    }
+    let weights: Vec<_> = rt
+        .manifest
+        .cnn
+        .layers
+        .iter()
+        .zip(&model.layers)
+        .map(|(spec, l)| {
+            let mut padded = l.clone();
+            padded.cin = spec.cin_padded;
+            pruned_weights(&padded, model.weight_density, seed)
+        })
+        .collect();
+    let feats = rt.run_cnn_features(&image, &weights)?;
+    for (f, spec) in feats.iter().zip(&rt.manifest.cnn.layers) {
+        println!(
+            "{:<8} {}x{}x{}x{}  density {:.3}",
+            spec.name, f.n, f.h, f.w, f.c,
+            f.density()
+        );
+    }
+    Ok(())
+}
+
+fn verify(args: &Args) -> Result<()> {
+    use s2engine::runtime::Runtime;
+    let dir = args
+        .get("artifacts")
+        .map(String::from)
+        .unwrap_or_else(|| {
+            s2engine::runtime::default_artifact_dir()
+                .to_string_lossy()
+                .into_owned()
+        });
+    let rt = Runtime::load(&dir)?;
+    let err = rt.verify_gemm(7)?;
+    println!("gemm artifact max |err| vs Rust oracle: {err:.3e}");
+    anyhow::ensure!(err < 1e-3, "artifact numerics diverged");
+    println!("verify OK");
+    Ok(())
+}

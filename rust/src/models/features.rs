@@ -1,0 +1,204 @@
+//! Feature-map substrates: synthetic generators calibrated to the paper's
+//! Fig. 3 density distributions, and adapters for *real* feature maps
+//! produced by the PJRT artifacts (runtime real-feature mode).
+//!
+//! Why a generator at all: feature sparsity is input-dependent. The paper
+//! samples 50 000 ImageNet images; we sample synthetic images (we have no
+//! ImageNet) whose post-ReLU density is drawn per-image from the model's
+//! calibrated (mean, sigma) and whose non-zeros are *clustered* — Section
+//! 6.2 notes "the large data tends to concentrate" in actual CNNs, unlike
+//! uniform synthetic patterns — using a two-state Markov chain along the
+//! channel axis.
+
+use crate::util::rng::Rng;
+
+use super::tensor::FeatTensor;
+use super::{FeatureSubset, LayerDesc, Model};
+
+/// How non-zero positions are laid out inside generated tensors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// i.i.d. Bernoulli(density) per element — the synthetic-model setting
+    /// of Fig. 11/12.
+    Uniform,
+    /// Markov-clustered runs of non-zeros (mean run length `run`): matches
+    /// the concentration of real feature maps noted in Section 6.2.
+    Clustered { run: f64 },
+}
+
+impl Pattern {
+    /// Default clustering for "actual model" emulation.
+    pub const ACTUAL: Pattern = Pattern::Clustered { run: 3.0 };
+}
+
+/// Per-image density draw: truncated Gaussian around the model mean.
+pub fn sample_image_density(model: &Model, rng: &mut Rng) -> f64 {
+    let z = rng.gen_normal() * 0.7;
+    (model.feature_density + z * model.feature_density_sigma).clamp(0.02, 0.98)
+}
+
+/// Generate a feature tensor for `layer` at the given density/pattern.
+/// Values are positive (post-ReLU) with magnitude in (0, 1].
+pub fn generate(
+    layer: &LayerDesc,
+    density: f64,
+    pattern: Pattern,
+    seed: u64,
+) -> FeatTensor {
+    let mut rng = Rng::seed_from_u64(seed ^ 0xfea7);
+    let n = layer.in_h * layer.in_w * layer.cin;
+    let mut data = vec![0.0f32; n];
+    fill_sparse(&mut data, density, pattern, &mut rng);
+    FeatTensor::from_vec(1, layer.in_h, layer.in_w, layer.cin, data)
+}
+
+/// Fill `data` with non-zeros at `density` under `pattern`.
+pub fn fill_sparse(
+    data: &mut [f32],
+    density: f64,
+    pattern: Pattern,
+    rng: &mut Rng,
+) {
+    let density = density.clamp(0.0, 1.0);
+    match pattern {
+        Pattern::Uniform => {
+            for v in data.iter_mut() {
+                *v = if rng.gen_f64() < density {
+                    rng.gen_range_u64(1, 255) as f32 / 255.0
+                } else {
+                    0.0
+                };
+            }
+        }
+        Pattern::Clustered { run } => {
+            // Two-state Markov chain with stationary probability =
+            // density and mean non-zero run length = run:
+            //   p(stay in nz)  = 1 - 1/run
+            //   p(enter nz)    chosen so stationary dist = density
+            let run = run.max(1.0);
+            let p_exit = 1.0 / run;
+            let p_enter = if density >= 1.0 {
+                1.0
+            } else {
+                (density * p_exit / (1.0 - density)).min(1.0)
+            };
+            let mut nz = rng.gen_f64() < density;
+            for v in data.iter_mut() {
+                *v = if nz {
+                    rng.gen_range_u64(1, 255) as f32 / 255.0
+                } else {
+                    0.0
+                };
+                let p = if nz { 1.0 - p_exit } else { p_enter };
+                nz = rng.gen_f64() < p;
+            }
+        }
+    }
+}
+
+/// The per-image evaluation set for a model/subset: a list of per-image
+/// feature densities, as the paper's ImageNet subsets provide.
+pub fn image_densities(
+    model: &Model,
+    subset: FeatureSubset,
+    n_images: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x01_0a6e);
+    let center = subset.density(model);
+    let sigma = if model.feature_density_sigma == 0.0 {
+        0.0
+    } else {
+        model.feature_density_sigma * 0.35 // within-subset spread
+    };
+    (0..n_images)
+        .map(|_| {
+            let z = rng.gen_normal() * 0.7;
+            (center + z * sigma).clamp(0.02, 0.98)
+        })
+        .collect()
+}
+
+/// Must-be-performed MAC ratio (Fig. 3 bottom): the probability that both
+/// operands of a MAC are non-zero. For independent patterns this is
+/// `df * dw`; clustering leaves the product unchanged in expectation (it
+/// correlates positions *within* a flow, not across flows).
+pub fn must_mac_ratio(feature_density: f64, weight_density: f64) -> f64 {
+    (feature_density * weight_density).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn uniform_density_converges() {
+        let l = LayerDesc::new("t", 64, 64, 64, 3, 3, 64, 1, 1);
+        for d in [0.1, 0.39, 0.7] {
+            let f = generate(&l, d, Pattern::Uniform, 5);
+            assert!((f.density() - d).abs() < 0.02, "want {d} got {}", f.density());
+        }
+    }
+
+    #[test]
+    fn clustered_density_converges() {
+        let l = LayerDesc::new("t", 64, 64, 64, 3, 3, 64, 1, 1);
+        for d in [0.2, 0.5] {
+            let f = generate(&l, d, Pattern::ACTUAL, 5);
+            assert!(
+                (f.density() - d).abs() < 0.03,
+                "want {d} got {}",
+                f.density()
+            );
+        }
+    }
+
+    #[test]
+    fn clustered_has_longer_runs() {
+        let l = LayerDesc::new("t", 32, 32, 64, 3, 3, 64, 1, 1);
+        let runs = |f: &FeatTensor| {
+            let mut total = 0usize;
+            let mut count = 0usize;
+            let mut cur = 0usize;
+            for v in &f.data {
+                if *v != 0.0 {
+                    cur += 1;
+                } else if cur > 0 {
+                    total += cur;
+                    count += 1;
+                    cur = 0;
+                }
+            }
+            total as f64 / count.max(1) as f64
+        };
+        let u = generate(&l, 0.4, Pattern::Uniform, 9);
+        let c = generate(&l, 0.4, Pattern::ACTUAL, 9);
+        assert!(runs(&c) > runs(&u) * 1.3, "{} vs {}", runs(&c), runs(&u));
+    }
+
+    #[test]
+    fn image_density_subsets_ordered() {
+        let m = zoo::alexnet();
+        let avg = |v: Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        let lo = avg(image_densities(&m, FeatureSubset::MaxSparsity, 200, 1));
+        let mid = avg(image_densities(&m, FeatureSubset::Average, 200, 1));
+        let hi = avg(image_densities(&m, FeatureSubset::MinSparsity, 200, 1));
+        assert!(lo < mid && mid < hi, "{lo} {mid} {hi}");
+    }
+
+    #[test]
+    fn must_mac_ratio_matches_table_ii_band() {
+        // AlexNet: 0.39 * 0.36 ~ 0.14 — the paper's Fig. 3 shows
+        // must-MAC ratios concentrated well below 0.3 for all nets.
+        let r = must_mac_ratio(0.39, 0.36);
+        assert!(r > 0.1 && r < 0.2);
+    }
+
+    #[test]
+    fn values_are_positive_post_relu() {
+        let l = LayerDesc::new("t", 16, 16, 32, 3, 3, 32, 1, 1);
+        let f = generate(&l, 0.5, Pattern::Uniform, 2);
+        assert!(f.data.iter().all(|v| *v >= 0.0));
+    }
+}

@@ -1,0 +1,219 @@
+//! CNN model descriptors and workload substrates.
+//!
+//! The paper evaluates 71 convolutional layers across AlexNet (5), VGG16
+//! (13) and ResNet50 (53); [`zoo`] reproduces those exact layer shapes.
+//! [`pruning`] generates magnitude-pruned weight tensors at the paper's
+//! Table II sparsity levels, and [`features`] generates/derives feature
+//! maps with per-image density variation calibrated to Fig. 3.
+
+pub mod features;
+pub mod pruning;
+pub mod tensor;
+pub mod zoo;
+
+/// A single convolutional layer: everything the compiler and simulator
+/// need to know about its geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerDesc {
+    pub name: String,
+    /// Input feature map height/width (square maps throughout the zoo).
+    pub in_h: usize,
+    pub in_w: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Kernel spatial size.
+    pub kh: usize,
+    pub kw: usize,
+    /// Output channels (number of kernels).
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl LayerDesc {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        in_h: usize,
+        in_w: usize,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            in_h,
+            in_w,
+            cin,
+            kh,
+            kw,
+            cout,
+            stride,
+            pad,
+        }
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Output positions = convolutions = GEMM rows (M).
+    pub fn num_convs(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// GEMM reduction length before group padding (K).
+    pub fn k_len(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// K padded so each (kh,kw) tap spans whole channel groups — the
+    /// compiler's reshaping granularity (Section 4.1/4.4).
+    pub fn k_len_padded(&self) -> usize {
+        self.kh * self.kw * crate::compiler::groups::padded_channels(self.cin)
+    }
+
+    /// Channel groups per spatial tap.
+    pub fn groups_per_tap(&self) -> usize {
+        crate::compiler::groups::padded_channels(self.cin) / crate::GROUP_LEN
+    }
+
+    /// Total ECOO groups per convolution window.
+    pub fn groups_per_conv(&self) -> usize {
+        self.kh * self.kw * self.groups_per_tap()
+    }
+
+    /// Dense multiply-accumulate count for the layer.
+    pub fn macs(&self) -> u64 {
+        self.num_convs() as u64 * self.k_len() as u64 * self.cout as u64
+    }
+
+    /// Parameter count (weights only; the zoo nets are conv-only views).
+    pub fn params(&self) -> u64 {
+        (self.kh * self.kw * self.cin * self.cout) as u64
+    }
+
+    /// Dense feature-map elements consumed (with padding overlap).
+    pub fn input_elems(&self) -> u64 {
+        (self.in_h * self.in_w * self.cin) as u64
+    }
+
+    pub fn output_elems(&self) -> u64 {
+        (self.num_convs() * self.cout) as u64
+    }
+}
+
+/// A CNN = an ordered list of conv layers plus bookkeeping totals.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+    /// Target weight density (non-zero fraction) after pruning, per
+    /// Table II of the paper.
+    pub weight_density: f64,
+    /// Mean feature density (post-ReLU non-zero fraction), per Table II.
+    pub feature_density: f64,
+    /// Std-dev of per-image feature density — wider for AlexNet per the
+    /// Fig. 3 distributions; drives the max/avg/min bands of Fig. 14.
+    pub feature_density_sigma: f64,
+}
+
+impl Model {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Table I metric: average accesses per parameter by MACs.
+    pub fn avg_param_usage(&self) -> f64 {
+        self.total_macs() as f64 / self.total_params() as f64
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerDesc> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+/// Which of the paper's per-image feature-sparsity subsets to evaluate
+/// (Section 5.3: ImageNet divided by resulting feature sparsity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureSubset {
+    /// Maximum feature sparsity (lowest density) subset.
+    MaxSparsity,
+    /// Average subset — the default for all headline numbers.
+    Average,
+    /// Minimum feature sparsity (highest density) subset.
+    MinSparsity,
+}
+
+impl FeatureSubset {
+    /// Effective mean density for a model under this subset.
+    pub fn density(&self, model: &Model) -> f64 {
+        let d = model.feature_density;
+        let s = model.feature_density_sigma;
+        match self {
+            FeatureSubset::MaxSparsity => (d - s).max(0.02),
+            FeatureSubset::Average => d,
+            FeatureSubset::MinSparsity => (d + s).min(0.98),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(k: usize, s: usize, p: usize) -> LayerDesc {
+        LayerDesc::new("t", 14, 14, 32, k, k, 64, s, p)
+    }
+
+    #[test]
+    fn out_dims_same_padding() {
+        let layer = l(3, 1, 1);
+        assert_eq!(layer.out_h(), 14);
+        assert_eq!(layer.out_w(), 14);
+    }
+
+    #[test]
+    fn out_dims_stride2() {
+        let layer = l(3, 2, 1);
+        assert_eq!(layer.out_h(), 7);
+    }
+
+    #[test]
+    fn macs_and_params() {
+        let layer = l(1, 1, 0);
+        assert_eq!(layer.params(), 32 * 64);
+        assert_eq!(layer.macs(), (14 * 14) as u64 * 32 * 64);
+    }
+
+    #[test]
+    fn groups_per_conv_group_padding() {
+        // cin=32 -> 2 groups per tap, 3x3 taps -> 18 groups
+        let layer = l(3, 1, 1);
+        assert_eq!(layer.groups_per_conv(), 18);
+        // cin=3 pads to 16 -> 1 group per tap
+        let l2 = LayerDesc::new("t", 8, 8, 3, 3, 3, 64, 1, 1);
+        assert_eq!(l2.groups_per_tap(), 1);
+        assert_eq!(l2.k_len_padded(), 9 * 16);
+    }
+
+    #[test]
+    fn subset_density_ordering() {
+        let m = zoo::alexnet();
+        let lo = FeatureSubset::MaxSparsity.density(&m);
+        let avg = FeatureSubset::Average.density(&m);
+        let hi = FeatureSubset::MinSparsity.density(&m);
+        assert!(lo < avg && avg < hi);
+    }
+}

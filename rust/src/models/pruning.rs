@@ -1,0 +1,138 @@
+//! Weight generation + magnitude pruning.
+//!
+//! The paper trains its sparse models with Han et al.'s prune-retrain
+//! pipeline ([11]) via the neural-network distiller [40]. We do not have
+//! ImageNet or a training budget (see DESIGN.md §Hardware-substitution),
+//! so we generate Gaussian weights and magnitude-prune them to the exact
+//! Table II density — the property the simulator actually consumes is the
+//! *non-zero pattern statistics*, which magnitude pruning of a Gaussian
+//! matches well for unstructured pruning (zeros spread irregularly, no
+//! structural pattern — precisely the irregularity S2Engine targets).
+
+use crate::util::rng::{hash_seed, Rng};
+
+use super::tensor::WeightTensor;
+use super::LayerDesc;
+
+/// Deterministic per-(seed, layer) RNG so every component (compiler,
+/// simulator, runtime verification) sees identical weights.
+pub fn layer_rng(seed: u64, layer_name: &str) -> Rng {
+    Rng::seed_from_u64(hash_seed(seed, layer_name))
+}
+
+/// Generate He-initialized weights for a layer.
+pub fn random_weights(layer: &LayerDesc, seed: u64) -> WeightTensor {
+    let mut rng = layer_rng(seed, &layer.name);
+    let fan_in = (layer.kh * layer.kw * layer.cin) as f64;
+    let std = (2.0 / fan_in).sqrt();
+    let n = layer.kh * layer.kw * layer.cin * layer.cout;
+    let data: Vec<f32> = (0..n).map(|_| (rng.gen_normal() * std) as f32).collect();
+    WeightTensor::from_vec(layer.kh, layer.kw, layer.cin, layer.cout, data)
+}
+
+/// Magnitude-prune `w` in place to the target density (non-zero
+/// fraction): the smallest-|w| elements are zeroed, exactly the
+/// unstructured criterion of Han et al. [11].
+pub fn magnitude_prune(w: &mut WeightTensor, density: f64) {
+    let density = density.clamp(0.0, 1.0);
+    let keep = ((w.data.len() as f64) * density).round() as usize;
+    if keep >= w.data.len() {
+        return;
+    }
+    if keep == 0 {
+        w.data.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+    // threshold = keep-th largest magnitude
+    let idx = mags.len() - keep;
+    mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let thresh = mags[idx];
+    // Values strictly above the threshold always survive; threshold ties
+    // survive in scan order until the keep quota is exact.
+    let above = w.data.iter().filter(|v| v.abs() > thresh).count();
+    let mut tie_quota = keep - above;
+    for v in w.data.iter_mut() {
+        let a = v.abs();
+        if a > thresh {
+            continue;
+        }
+        if a == thresh && a != 0.0 && tie_quota > 0 {
+            tie_quota -= 1;
+            continue;
+        }
+        *v = 0.0;
+    }
+}
+
+/// Generate-and-prune in one step, to the model's Table II density.
+pub fn pruned_weights(layer: &LayerDesc, density: f64, seed: u64) -> WeightTensor {
+    let mut w = random_weights(layer, seed);
+    magnitude_prune(&mut w, density);
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn small_layer() -> LayerDesc {
+        LayerDesc::new("t", 8, 8, 32, 3, 3, 64, 1, 1)
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let l = small_layer();
+        let a = random_weights(&l, 7);
+        let b = random_weights(&l, 7);
+        assert_eq!(a.data, b.data);
+        let c = random_weights(&l, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn prune_hits_target_density() {
+        let l = small_layer();
+        for target in [0.1, 0.25, 0.36, 0.5, 0.9] {
+            let w = pruned_weights(&l, target, 3);
+            let got = w.density();
+            assert!(
+                (got - target).abs() < 0.02,
+                "target {target} got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn prune_keeps_largest() {
+        let mut w = WeightTensor::from_vec(
+            1,
+            1,
+            2,
+            2,
+            vec![0.1, -5.0, 0.2, 3.0],
+        );
+        magnitude_prune(&mut w, 0.5);
+        assert_eq!(w.data[0], 0.0);
+        assert_eq!(w.data[1], -5.0);
+        assert_eq!(w.data[2], 0.0);
+        assert_eq!(w.data[3], 3.0);
+    }
+
+    #[test]
+    fn prune_extremes() {
+        let l = small_layer();
+        let w0 = pruned_weights(&l, 0.0, 1);
+        assert_eq!(w0.density(), 0.0);
+        let w1 = pruned_weights(&l, 1.0, 1);
+        assert!(w1.density() > 0.999);
+    }
+
+    #[test]
+    fn paper_density_on_real_layers() {
+        let m = zoo::alexnet();
+        let w = pruned_weights(&m.layers[2], m.weight_density, 42);
+        assert!((w.density() - 0.36).abs() < 0.01);
+    }
+}

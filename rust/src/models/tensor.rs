@@ -1,0 +1,213 @@
+//! Minimal dense tensor types for the numeric paths (real-feature mode,
+//! verification against the PJRT artifacts, small-model simulation).
+//!
+//! The cycle simulator itself never touches these for the big zoo nets —
+//! it consumes sampled [`crate::compiler::groups::GroupedStream`]s — but
+//! S2Net real-feature mode and the quantizer do.
+
+/// NHWC feature tensor (f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatTensor {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatTensor {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Self {
+            n,
+            h,
+            w,
+            c,
+            data: vec![0.0; n * h * w * c],
+        }
+    }
+
+    pub fn from_vec(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * h * w * c, "shape/data mismatch");
+        Self { n, h, w, c, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, y: usize, x: usize, ch: usize) -> usize {
+        ((n * self.h + y) * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[self.idx(n, y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, y: usize, x: usize, ch: usize, v: f32) {
+        let i = self.idx(n, y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Padded read: coordinates outside [0,h)x[0,w) return 0 — the conv
+    /// padding semantics.
+    #[inline]
+    pub fn get_padded(&self, n: usize, y: isize, x: isize, ch: usize) -> f32 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0.0
+        } else {
+            self.get(n, y as usize, x as usize, ch)
+        }
+    }
+
+    /// Non-zero fraction.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let nz = self.data.iter().filter(|v| **v != 0.0).count();
+        nz as f64 / self.data.len() as f64
+    }
+}
+
+/// HWIO conv weight tensor (f32), matching the JAX artifact layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightTensor {
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn zeros(kh: usize, kw: usize, cin: usize, cout: usize) -> Self {
+        Self {
+            kh,
+            kw,
+            cin,
+            cout,
+            data: vec![0.0; kh * kw * cin * cout],
+        }
+    }
+
+    pub fn from_vec(
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        data: Vec<f32>,
+    ) -> Self {
+        assert_eq!(data.len(), kh * kw * cin * cout, "shape/data mismatch");
+        Self {
+            kh,
+            kw,
+            cin,
+            cout,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, ky: usize, kx: usize, ci: usize, co: usize) -> usize {
+        ((ky * self.kw + kx) * self.cin + ci) * self.cout + co
+    }
+
+    #[inline]
+    pub fn get(&self, ky: usize, kx: usize, ci: usize, co: usize) -> f32 {
+        self.data[self.idx(ky, kx, ci, co)]
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let nz = self.data.iter().filter(|v| **v != 0.0).count();
+        nz as f64 / self.data.len() as f64
+    }
+}
+
+/// Reference conv2d (NHWC x HWIO -> NHWC) with optional ReLU — the Rust
+/// oracle used to cross-check the PJRT artifact numerics and the
+/// simulator's value-carrying mode.
+pub fn conv2d_ref(
+    feat: &FeatTensor,
+    w: &WeightTensor,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+) -> FeatTensor {
+    assert!(feat.c <= w.cin, "input channels exceed kernel channels");
+    let oh = (feat.h + 2 * pad - w.kh) / stride + 1;
+    let ow = (feat.w + 2 * pad - w.kw) / stride + 1;
+    let mut out = FeatTensor::zeros(feat.n, oh, ow, w.cout);
+    for n in 0..feat.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for co in 0..w.cout {
+                    let mut acc = 0.0f32;
+                    for ky in 0..w.kh {
+                        for kx in 0..w.kw {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            for ci in 0..feat.c {
+                                acc += feat.get_padded(n, iy, ix, ci)
+                                    * w.get(ky, kx, ci, co);
+                            }
+                        }
+                    }
+                    if relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    out.set(n, oy, ox, co, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1_conv() {
+        let mut f = FeatTensor::zeros(1, 2, 2, 2);
+        f.set(0, 0, 0, 0, 1.0);
+        f.set(0, 1, 1, 1, -2.0);
+        // 1x1 kernel, identity over 2 channels
+        let mut w = WeightTensor::zeros(1, 1, 2, 2);
+        let i00 = w.idx(0, 0, 0, 0);
+        w.data[i00] = 1.0;
+        let i11 = w.idx(0, 0, 1, 1);
+        w.data[i11] = 1.0;
+        let out = conv2d_ref(&f, &w, 1, 0, false);
+        assert_eq!(out.get(0, 0, 0, 0), 1.0);
+        assert_eq!(out.get(0, 1, 1, 1), -2.0);
+        let relu_out = conv2d_ref(&f, &w, 1, 0, true);
+        assert_eq!(relu_out.get(0, 1, 1, 1), 0.0);
+    }
+
+    #[test]
+    fn conv_3x3_known_values() {
+        // all-ones 3x3 input, all-ones 3x3 kernel, pad 1: center = 9
+        let f = FeatTensor::from_vec(1, 3, 3, 1, vec![1.0; 9]);
+        let w = WeightTensor::from_vec(3, 3, 1, 1, vec![1.0; 9]);
+        let out = conv2d_ref(&f, &w, 1, 1, false);
+        assert_eq!(out.get(0, 1, 1, 0), 9.0);
+        assert_eq!(out.get(0, 0, 0, 0), 4.0); // corner sees 2x2
+    }
+
+    #[test]
+    fn stride_two_output_dims() {
+        let f = FeatTensor::zeros(1, 8, 8, 4);
+        let w = WeightTensor::zeros(3, 3, 4, 8);
+        let out = conv2d_ref(&f, &w, 2, 1, false);
+        assert_eq!((out.h, out.w, out.c), (4, 4, 8));
+    }
+
+    #[test]
+    fn density_counts_zeros() {
+        let f = FeatTensor::from_vec(1, 1, 2, 2, vec![0.0, 1.0, 0.0, 2.0]);
+        assert!((f.density() - 0.5).abs() < 1e-12);
+    }
+}

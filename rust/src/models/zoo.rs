@@ -1,0 +1,247 @@
+//! The model zoo: exact conv-layer geometry of the paper's three
+//! evaluation networks (71 conv layers total — Section 5.2 reports 71
+//! layers evaluated: AlexNet 5 + VGG16 13 + ResNet50 53) plus the
+//! CIFAR-scale S2Net implemented by the JAX/Pallas artifacts.
+//!
+//! Sparsity targets come from Table II of the paper:
+//!
+//! | net      | weight sparsity | feature sparsity |
+//! |----------|-----------------|------------------|
+//! | AlexNet  | 64%             | 61%              |
+//! | VGG16    | 68%             | 72%              |
+//! | ResNet50 | 76%             | 66%              |
+
+use super::{LayerDesc, Model};
+
+/// AlexNet's five conv layers (Krizhevsky et al., 2012), ImageNet shapes.
+/// conv2/4/5 are the original two-GPU *grouped* convolutions: each kernel
+/// sees half the input channels (cin below is per-group), which is what
+/// makes the paper's Table I total come out at ~666M MACs / 2.33M params.
+pub fn alexnet() -> Model {
+    let layers = vec![
+        LayerDesc::new("conv1", 224, 224, 3, 11, 11, 96, 4, 2),
+        LayerDesc::new("conv2", 27, 27, 48, 5, 5, 256, 1, 2),
+        LayerDesc::new("conv3", 13, 13, 256, 3, 3, 384, 1, 1),
+        LayerDesc::new("conv4", 13, 13, 192, 3, 3, 384, 1, 1),
+        LayerDesc::new("conv5", 13, 13, 192, 3, 3, 256, 1, 1),
+    ];
+    Model {
+        name: "alexnet".into(),
+        layers,
+        weight_density: 0.36,
+        feature_density: 0.39,
+        // AlexNet has the widest per-image density spread (Fig. 3), which
+        // is why its Fig. 14 error bars are the largest.
+        feature_density_sigma: 0.13,
+    }
+}
+
+/// VGG16's thirteen conv layers (Simonyan & Zisserman, 2014).
+pub fn vgg16() -> Model {
+    let mut layers = Vec::new();
+    let stages: &[(usize, usize, usize, usize)] = &[
+        // (spatial, cin of first conv, cout, convs in stage)
+        (224, 3, 64, 2),
+        (112, 64, 128, 2),
+        (56, 128, 256, 3),
+        (28, 256, 512, 3),
+        (14, 512, 512, 3),
+    ];
+    for (si, &(hw, cin0, cout, n)) in stages.iter().enumerate() {
+        let mut cin = cin0;
+        for i in 0..n {
+            layers.push(LayerDesc::new(
+                format!("conv{}_{}", si + 1, i + 1),
+                hw,
+                hw,
+                cin,
+                3,
+                3,
+                cout,
+                1,
+                1,
+            ));
+            cin = cout;
+        }
+    }
+    Model {
+        name: "vgg16".into(),
+        layers,
+        weight_density: 0.32,
+        feature_density: 0.28,
+        feature_density_sigma: 0.08,
+    }
+}
+
+/// ResNet50's 53 conv layers (He et al., 2016): the 7x7 stem, 16
+/// bottleneck blocks (1x1 / 3x3 / 1x1) and 4 projection shortcuts.
+pub fn resnet50() -> Model {
+    let mut layers = vec![LayerDesc::new("conv1", 224, 224, 3, 7, 7, 64, 2, 3)];
+    // (stage spatial after downsample, bottleneck width, out channels, blocks)
+    let stages: &[(usize, usize, usize, usize)] = &[
+        (56, 64, 256, 3),
+        (28, 128, 512, 4),
+        (14, 256, 1024, 6),
+        (7, 512, 2048, 3),
+    ];
+    let mut cin = 64; // stem output channels (after maxpool, 56x56)
+    for (si, &(hw, width, cout, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stage = si + 2;
+            // First block of stages 3..5 downsamples with stride 2 on the
+            // 3x3 (and on the projection shortcut).
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            let in_hw = if b == 0 && si > 0 { hw * 2 } else { hw };
+            layers.push(LayerDesc::new(
+                format!("conv{stage}_{}a", b + 1),
+                in_hw, in_hw, cin, 1, 1, width, 1, 0,
+            ));
+            layers.push(LayerDesc::new(
+                format!("conv{stage}_{}b", b + 1),
+                in_hw, in_hw, width, 3, 3, width, stride, 1,
+            ));
+            layers.push(LayerDesc::new(
+                format!("conv{stage}_{}c", b + 1),
+                hw, hw, width, 1, 1, cout, 1, 0,
+            ));
+            if b == 0 {
+                layers.push(LayerDesc::new(
+                    format!("conv{stage}_proj"),
+                    in_hw, in_hw, cin, 1, 1, cout, stride, 0,
+                ));
+            }
+            cin = cout;
+        }
+    }
+    Model {
+        name: "resnet50".into(),
+        layers,
+        weight_density: 0.24,
+        feature_density: 0.34,
+        feature_density_sigma: 0.09,
+    }
+}
+
+/// The CIFAR-scale network implemented by the JAX/Pallas artifacts
+/// (python/compile/model.py). Used by the real-feature end-to-end path.
+pub fn s2net() -> Model {
+    let layers = vec![
+        LayerDesc::new("conv1", 32, 32, 3, 3, 3, 32, 1, 1),
+        LayerDesc::new("conv2", 32, 32, 32, 3, 3, 32, 2, 1),
+        LayerDesc::new("conv3", 16, 16, 32, 3, 3, 64, 1, 1),
+        LayerDesc::new("conv4", 16, 16, 64, 1, 1, 64, 1, 0),
+    ];
+    Model {
+        name: "s2net".into(),
+        layers,
+        weight_density: 0.35,
+        feature_density: 0.45,
+        feature_density_sigma: 0.10,
+    }
+}
+
+/// A synthetic AlexNet clone with designated uniform densities — the
+/// workload of the paper's sensitivity studies (Fig. 11/12, Section 6.2:
+/// "a series of synthetic AlexNet models ... varying the sparsity levels
+/// both on features and weights from 10% to 100%").
+pub fn synthetic_alexnet(feature_density: f64, weight_density: f64) -> Model {
+    let mut m = alexnet();
+    m.name = format!(
+        "alexnet-syn-f{:.2}-w{:.2}",
+        feature_density, weight_density
+    );
+    m.feature_density = feature_density;
+    m.weight_density = weight_density;
+    m.feature_density_sigma = 0.0; // designated, not image-dependent
+    m
+}
+
+/// All three paper networks.
+pub fn paper_models() -> Vec<Model> {
+    vec![alexnet(), vgg16(), resnet50()]
+}
+
+pub fn by_name(name: &str) -> Option<Model> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "vgg16" => Some(vgg16()),
+        "resnet50" => Some(resnet50()),
+        "s2net" => Some(s2net()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seventy_one_layers_total() {
+        // Section 5.2: "66 out of 71 convolution layers we evaluated".
+        let total: usize = paper_models().iter().map(|m| m.layers.len()).sum();
+        assert_eq!(total, 71);
+        assert_eq!(alexnet().layers.len(), 5);
+        assert_eq!(vgg16().layers.len(), 13);
+        assert_eq!(resnet50().layers.len(), 53);
+    }
+
+    #[test]
+    fn table1_mac_totals_match_paper() {
+        // Table I: AlexNet 666M MACs / 2.33M params; VGG16 15.3G / 14.7M;
+        // ResNet50 3.86G / 23.5M. Conv-only counts, so we check the conv
+        // share: AlexNet convs ~655M MACs/2.3M params, VGG16 conv
+        // ~15.3G/14.7M, ResNet50 ~3.86G/23.5M (FC layers excluded).
+        let a = alexnet();
+        assert!((a.total_macs() as f64 / 1e6 - 655.0).abs() < 30.0,
+            "alexnet MACs {}", a.total_macs());
+        let v = vgg16();
+        assert!((v.total_macs() as f64 / 1e9 - 15.3).abs() < 0.3,
+            "vgg16 MACs {}", v.total_macs());
+        let r = resnet50();
+        assert!((r.total_macs() as f64 / 1e9 - 3.86).abs() < 0.5,
+            "resnet50 MACs {}", r.total_macs());
+    }
+
+    #[test]
+    fn table1_param_usage_ordering() {
+        // Table I "Avg. Usage of Param.": VGG16 (2082) >> AlexNet (572 for
+        // full net; higher conv-only) > ResNet50 (336 full net).
+        let v = vgg16().avg_param_usage();
+        let r = resnet50().avg_param_usage();
+        assert!(v > r, "VGG param reuse {v} should exceed ResNet {r}");
+    }
+
+    #[test]
+    fn resnet_block_chaining_consistent() {
+        let r = resnet50();
+        // every 1x1a input channel count equals previous block's output
+        let c2_1a = r.layer("conv2_1a").unwrap();
+        assert_eq!(c2_1a.cin, 64);
+        let c3_1a = r.layer("conv3_1a").unwrap();
+        assert_eq!(c3_1a.cin, 256);
+        let c5_3c = r.layer("conv5_3c").unwrap();
+        assert_eq!(c5_3c.cout, 2048);
+    }
+
+    #[test]
+    fn vgg_spatial_chain() {
+        let v = vgg16();
+        assert_eq!(v.layer("conv1_1").unwrap().out_h(), 224);
+        assert_eq!(v.layer("conv5_3").unwrap().out_h(), 14);
+    }
+
+    #[test]
+    fn synthetic_densities_applied() {
+        let m = synthetic_alexnet(0.3, 0.5);
+        assert_eq!(m.feature_density, 0.3);
+        assert_eq!(m.weight_density, 0.5);
+        assert_eq!(m.feature_density_sigma, 0.0);
+        assert_eq!(m.layers.len(), 5);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("vgg16").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,337 @@
+//! Figure regeneration: Figs. 3 and 10–17 of the paper. Each function
+//! prints the series the paper plots (one row per x-value, one column
+//! per curve).
+
+use super::{fx, pct, Effort, TextTable};
+use crate::baseline::scnn;
+use crate::config::{ArrayConfig, FifoDepths, SimConfig};
+use crate::coordinator::{Coordinator, ModelResult};
+use crate::energy::area;
+use crate::models::{zoo, FeatureSubset, Model};
+use crate::sparsity;
+
+fn run(
+    model: &Model,
+    array: ArrayConfig,
+    effort: Effort,
+    seed: u64,
+    ce: bool,
+    subset: FeatureSubset,
+) -> ModelResult {
+    let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
+    cfg.seed = seed;
+    cfg.ce_enabled = ce;
+    Coordinator::new(cfg).simulate_model_subset(model, subset)
+}
+
+/// Fig. 3: distribution of feature density and must-be-performed MAC
+/// ratio per network (histogram mean ± std and deciles).
+pub fn fig3(effort: Effort, seed: u64) -> String {
+    let mut t = TextTable::new(
+        "Fig. 3 — Feature density and must-MAC ratio distributions",
+        &["model", "density mean", "density std", "must-MAC mean", "must-MAC std"],
+    );
+    for m in zoo::paper_models() {
+        let s = sparsity::fig3(&m, effort.images, 50, seed);
+        t.row(vec![
+            m.name.clone(),
+            format!("{:.3}", s.feature_density.mean()),
+            format!("{:.3}", s.feature_density.std()),
+            format!("{:.3}", s.must_mac.mean()),
+            format!("{:.3}", s.must_mac.std()),
+        ]);
+    }
+    t.render()
+        + "\nPaper shape: densities centred at Table II values; AlexNet \
+           visibly wider; must-MAC concentrated well below density.\n"
+}
+
+/// Fig. 10: PE-array speedup vs FIFO depth × DS:MAC frequency ratio
+/// (16×16 array, average of the three CNNs).
+pub fn fig10(effort: Effort, seed: u64) -> String {
+    let depths = [
+        FifoDepths::uniform(2),
+        FifoDepths::uniform(4),
+        FifoDepths::uniform(8),
+        FifoDepths::infinite(),
+    ];
+    let ratios = [2u32, 4, 8];
+    let mut t = TextTable::new(
+        "Fig. 10 — Speedup vs FIFO depth and DS:MAC ratio (16x16)",
+        &["FIFO depth", "ratio 2:1", "ratio 4:1", "ratio 8:1"],
+    );
+    let models: Vec<Model> = zoo::paper_models().iter().map(|m| effort.thin(m)).collect();
+    for d in depths {
+        let mut row = vec![d.label()];
+        for r in ratios {
+            let array = ArrayConfig::new(16, 16).with_fifo(d).with_ratio(r);
+            let avg: f64 = models
+                .iter()
+                .map(|m| run(m, array, effort, seed, true, FeatureSubset::Average).speedup())
+                .sum::<f64>()
+                / models.len() as f64;
+            row.push(fx(avg));
+        }
+        t.row(row);
+    }
+    t.render()
+        + "\nPaper shape: ~1.5x from ratio 2->4, only ~1.1x from 4->8 \
+           (saturation); ~1.2x from depth (2,2,2)->(4,4,4), ~1.1x further \
+           to (8,8,8); (inf,inf,inf) is the ceiling.\n"
+}
+
+/// Fig. 11: normalized latency / on-chip energy / area efficiency vs
+/// density (synthetic AlexNet, 32×32, vs naive and SCNN).
+pub fn fig11(effort: Effort, seed: u64) -> String {
+    let mut t = TextTable::new(
+        "Fig. 11 — Normalized metrics vs density (32x32, synthetic AlexNet)",
+        &[
+            "density f/w",
+            "S2 latency",
+            "SCNN latency",
+            "S2 energy",
+            "SCNN energy",
+            "S2 area-eff",
+        ],
+    );
+    let base_model = zoo::synthetic_alexnet(1.0, 1.0);
+    let model = effort.thin(&base_model);
+    let array = ArrayConfig::new(32, 32);
+    for d in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
+        cfg.seed = seed;
+        let r = Coordinator::new(cfg).simulate_model_synthetic(&model, d, d);
+        // normalized latency: S2 wall / naive wall (lower is better)
+        let lat = r.total_s2_wall() / r.total_naive_wall();
+        let energy = 1.0 / r.onchip_ee_improvement();
+        let ae = r.area_efficiency_improvement();
+        let sc = scnn::cost(model.total_macs(), d, d);
+        let sc_lat = sc.mac_cycles as f64
+            / (model.total_macs() as f64 / 1024.0); // vs dense ideal @1024 muls
+        t.row(vec![
+            format!("{d:.1}/{d:.1}"),
+            format!("{lat:.3}"),
+            format!("{sc_lat:.3}"),
+            format!("{energy:.3}"),
+            format!("{:.3}", sc.energy_per_dense_mac),
+            fx(ae),
+        ]);
+    }
+    t.render()
+        + "\nPaper shape: S2 beats naive (latency < 1) everywhere below \
+           ~0.7 density and beats SCNN's energy below ~0.5/0.5; at 1.0/1.0 \
+           sparse designs pay overhead (latency/energy >= 1).\n"
+}
+
+/// Fig. 12: normalized latency vs 16-bit data ratio per FIFO depth
+/// (dense synthetic AlexNet).
+pub fn fig12(effort: Effort, seed: u64) -> String {
+    let model = effort.thin(&zoo::synthetic_alexnet(1.0, 1.0));
+    let mut t = TextTable::new(
+        "Fig. 12 — Normalized latency vs 16-bit ratio",
+        &["16-bit ratio", "(2,2,2)", "(4,4,4)", "(8,8,8)"],
+    );
+    let mut base = Vec::new();
+    for depth in [2usize, 4, 8] {
+        let array = ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(depth));
+        let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
+        cfg.seed = seed;
+        base.push(
+            Coordinator::new(cfg)
+                .simulate_model_synthetic(&model, 1.0, 1.0)
+                .total_s2_wall(),
+        );
+    }
+    for r16 in [0.1, 0.25, 0.5, 0.75, 1.0] {
+        let mut row = vec![pct(r16)];
+        for (i, depth) in [2usize, 4, 8].iter().enumerate() {
+            let array =
+                ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(*depth));
+            let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
+            cfg.seed = seed;
+            cfg.ratio16 = r16;
+            let wall = Coordinator::new(cfg)
+                .simulate_model_synthetic(&model, 1.0, 1.0)
+                .total_s2_wall();
+            row.push(format!("{:.3}", wall / base[i]));
+        }
+        t.row(row);
+    }
+    t.render()
+        + "\nPaper shape: latency grows smoothly with 16-bit ratio (the \
+           shared 8-bit datapath absorbs splits); deeper FIFOs flatten \
+           the curve.\n"
+}
+
+/// Fig. 13: reduction of buffer accesses and buffer capacity from the CE
+/// array, per model and array scale.
+pub fn fig13(effort: Effort, seed: u64) -> String {
+    let mut t = TextTable::new(
+        "Fig. 13 — CE-array reduction of FB accesses / capacity",
+        &["model", "scale", "access reduction", "capacity reduction"],
+    );
+    for m in zoo::paper_models() {
+        let model = effort.thin(&m);
+        for scale in [16usize, 64] {
+            let array = ArrayConfig::new(scale, scale);
+            let r = run(&model, array, effort, seed, true, FeatureSubset::Average);
+            // capacity reduction: naive dense per-row copies vs compressed
+            // distinct groups — approximate with access reduction times the
+            // compression ratio of the streams (13-bit tokens at density).
+            let access = r.avg_buffer_access_reduction();
+            let comp = 8.0 / (13.0 * r.layers[0].feature_density.max(0.05));
+            let capacity = access * comp.min(3.0) / 1.6;
+            t.row(vec![
+                model.name.clone(),
+                format!("{scale}x{scale}"),
+                fx(access),
+                fx(capacity),
+            ]);
+        }
+    }
+    t.render()
+        + "\nPaper shape: large reduction for AlexNet/VGG16 (3x3-heavy), \
+           much smaller for ResNet50 (1x1-heavy); slightly larger arrays \
+           reduce slightly more.\n"
+}
+
+/// Fig. 14: speedup vs array scale × FIFO depth, with max/avg/min
+/// feature-sparsity bands per model.
+pub fn fig14(effort: Effort, seed: u64, scales: &[usize]) -> String {
+    let mut t = TextTable::new(
+        "Fig. 14 — Speedup vs scale and FIFO depth (bands: max/avg/min sparsity)",
+        &["model", "scale", "depth", "max-spars.", "average", "min-spars."],
+    );
+    for m in zoo::paper_models() {
+        let model = effort.thin(&m);
+        for &scale in scales {
+            for depth in [2usize, 4, 8] {
+                let array =
+                    ArrayConfig::new(scale, scale).with_fifo(FifoDepths::uniform(depth));
+                let hi = run(&model, array, effort, seed, true, FeatureSubset::MaxSparsity);
+                let avg = run(&model, array, effort, seed, true, FeatureSubset::Average);
+                let lo = run(&model, array, effort, seed, true, FeatureSubset::MinSparsity);
+                t.row(vec![
+                    model.name.clone(),
+                    format!("{scale}x{scale}"),
+                    format!("({depth},{depth},{depth})"),
+                    fx(hi.speedup()),
+                    fx(avg.speedup()),
+                    fx(lo.speedup()),
+                ]);
+            }
+        }
+    }
+    t.render()
+        + "\nPaper shape: ~3.2x average overall; larger arrays degrade \
+           speedup slightly; AlexNet has the widest max/min band (widest \
+           density distribution in Fig. 3).\n"
+}
+
+/// Fig. 15: on-chip energy breakdown with and without the CE array
+/// (16×16, per model).
+pub fn fig15(effort: Effort, seed: u64) -> String {
+    let mut t = TextTable::new(
+        "Fig. 15 — On-chip energy breakdown (pJ fractions), w/ and w/o CE",
+        &["model", "CE", "MAC", "SRAM", "FIFO", "CE-arr", "other", "total (norm.)"],
+    );
+    for m in zoo::paper_models() {
+        let model = effort.thin(&m);
+        let array = ArrayConfig::new(16, 16);
+        let with = run(&model, array, effort, seed, true, FeatureSubset::Average);
+        let without = run(&model, array, effort, seed, false, FeatureSubset::Average);
+        let wo_total = without.s2_energy().onchip.onchip_total();
+        for (tag, r) in [("w/", &with), ("w/o", &without)] {
+            let e = r.s2_energy().onchip;
+            let tot = e.onchip_total();
+            t.row(vec![
+                model.name.clone(),
+                tag.to_string(),
+                pct(e.mac_pj / tot),
+                pct(e.sram_pj / tot),
+                pct(e.fifo_pj / tot),
+                pct(e.ce_pj / tot),
+                pct(e.other_pj / tot),
+                format!("{:.3}", tot / wo_total),
+            ]);
+        }
+    }
+    t.render()
+        + "\nPaper shape: CE cuts the SRAM (FB) slice substantially; MAC \
+           and SRAM dominate; FIFO overhead visible but smaller than the \
+           savings.\n"
+}
+
+/// Fig. 16: on-chip energy-efficiency improvement vs scale × depth.
+pub fn fig16(effort: Effort, seed: u64, scales: &[usize]) -> String {
+    let mut t = TextTable::new(
+        "Fig. 16 — On-chip energy-efficiency improvement vs naive",
+        &["model", "scale", "(2,2,2)", "(4,4,4)", "(8,8,8)"],
+    );
+    for m in zoo::paper_models() {
+        let model = effort.thin(&m);
+        for &scale in scales {
+            let mut row = vec![model.name.clone(), format!("{scale}x{scale}")];
+            for depth in [2usize, 4, 8] {
+                let array =
+                    ArrayConfig::new(scale, scale).with_fifo(FifoDepths::uniform(depth));
+                let r = run(&model, array, effort, seed, true, FeatureSubset::Average);
+                row.push(fx(r.onchip_ee_improvement()));
+            }
+            t.row(row);
+        }
+    }
+    t.render()
+        + "\nPaper shape: ~1.8x average, best (~1.9x) at depth (2,2,2); \
+           improvement scales well with array size; CE contributes ~1.3x \
+           (compare Fig. 15 w/o).\n"
+}
+
+/// Fig. 17: area-efficiency improvement vs scale × depth.
+pub fn fig17(effort: Effort, seed: u64, scales: &[usize]) -> String {
+    let mut t = TextTable::new(
+        "Fig. 17 — Area-efficiency improvement vs naive",
+        &["model", "scale", "(2,2,2)", "(4,4,4)", "(8,8,8)", "SCNN A.E."],
+    );
+    for m in zoo::paper_models() {
+        let model = effort.thin(&m);
+        for &scale in scales {
+            let mut row = vec![model.name.clone(), format!("{scale}x{scale}")];
+            for depth in [2usize, 4, 8] {
+                let array =
+                    ArrayConfig::new(scale, scale).with_fifo(FifoDepths::uniform(depth));
+                let r = run(&model, array, effort, seed, true, FeatureSubset::Average);
+                row.push(fx(r.area_efficiency_improvement()));
+            }
+            // SCNN AE vs naive at this workload (area-scaled)
+            let sc = scnn::cost(model.total_macs(), model.feature_density, model.weight_density);
+            let naive_cycles = model.total_macs() as f64 / 1024.0;
+            let sc_speed = naive_cycles / sc.mac_cycles as f64;
+            let naive_a = area::naive_area(&ArrayConfig::new(32, 32), 2 << 20);
+            row.push(fx(sc_speed * naive_a / area::SCNN_AREA_MM2));
+            t.row(row);
+        }
+    }
+    t.render()
+        + "\nPaper shape: ~2.9x average, larger for small arrays (SRAM \
+           savings dominate) shrinking toward ~1.2x at 128x128; beats \
+           SCNN's area efficiency.\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_quick() {
+        let s = fig3(Effort::QUICK, 1);
+        assert!(s.contains("alexnet") && s.contains("must-MAC"));
+    }
+
+    #[test]
+    fn fig13_quick_resnet_lower() {
+        let s = fig13(Effort::QUICK, 1);
+        assert!(s.contains("resnet50"));
+        // (shape assertions live in the integration tests)
+    }
+}

@@ -1,0 +1,189 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (Section 6). Each function runs the required simulations and returns a
+//! text rendering (the same rows/series the paper plots); the benches and
+//! the CLI (`s2engine report ...` / `s2engine sweep ...`) call these.
+//!
+//! Effort control: the full paper evaluation is hours of simulation; the
+//! [`Effort`] knob trades tile-sample count and layer coverage for
+//! wall-time while preserving the reported ratios (tiles and layers are
+//! sampled deterministically).
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::*;
+pub use tables::*;
+
+use crate::models::Model;
+
+/// Simulation effort for report generation.
+#[derive(Debug, Clone, Copy)]
+pub struct Effort {
+    /// Tiles sampled per layer (0 = every tile).
+    pub tile_samples: usize,
+    /// Keep every `layer_stride`-th layer of each model (1 = all).
+    pub layer_stride: usize,
+    /// Images sampled for distribution plots.
+    pub images: usize,
+}
+
+impl Effort {
+    /// Quick smoke effort: seconds per figure.
+    pub const QUICK: Effort = Effort {
+        tile_samples: 2,
+        layer_stride: 4,
+        images: 500,
+    };
+    /// Default effort: tens of seconds per figure.
+    pub const DEFAULT: Effort = Effort {
+        tile_samples: 6,
+        layer_stride: 2,
+        images: 2000,
+    };
+    /// Full effort (paper-grade averaging).
+    pub const FULL: Effort = Effort {
+        tile_samples: 16,
+        layer_stride: 1,
+        images: 10000,
+    };
+
+    pub fn from_name(name: &str) -> Effort {
+        match name {
+            "quick" => Effort::QUICK,
+            "full" => Effort::FULL,
+            _ => Effort::DEFAULT,
+        }
+    }
+
+    /// Thin a model's layer list by the stride (always keeps the first
+    /// and last layers — they bound the shape spectrum).
+    pub fn thin(&self, model: &Model) -> Model {
+        if self.layer_stride <= 1 || model.layers.len() <= 2 {
+            return model.clone();
+        }
+        let mut m = model.clone();
+        let last = model.layers.len() - 1;
+        m.layers = model
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i == 0 || *i == last || i % self.layer_stride == 0)
+            .map(|(_, l)| l.clone())
+            .collect();
+        m
+    }
+}
+
+/// Plain-text table builder (fixed-width columns).
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl TextTable {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        TextTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.into(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push_str(&format!(
+            "|{}\n",
+            widths
+                .iter()
+                .map(|w| format!("{}-|", "-".repeat(w + 2)))
+                .collect::<String>()
+                .trim_end_matches('|')
+        ));
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format helper: `3.14x`.
+pub fn fx(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+/// Format helper: percent.
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn thin_keeps_first_and_last() {
+        let m = zoo::resnet50();
+        let t = Effort::QUICK.thin(&m);
+        assert!(t.layers.len() < m.layers.len());
+        assert_eq!(t.layers[0].name, m.layers[0].name);
+        assert_eq!(
+            t.layers.last().unwrap().name,
+            m.layers.last().unwrap().name
+        );
+    }
+
+    #[test]
+    fn thin_stride_one_is_identity() {
+        let m = zoo::vgg16();
+        let t = Effort::FULL.thin(&m);
+        assert_eq!(t.layers.len(), m.layers.len());
+    }
+
+    #[test]
+    fn text_table_renders() {
+        let mut t = TextTable::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| a "));
+        assert!(s.contains("| 1 "));
+    }
+
+    #[test]
+    #[should_panic]
+    fn text_table_checks_columns() {
+        let mut t = TextTable::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn effort_lookup() {
+        assert_eq!(Effort::from_name("quick").tile_samples, 2);
+        assert_eq!(Effort::from_name("full").layer_stride, 1);
+        assert_eq!(Effort::from_name("whatever").tile_samples, 6);
+    }
+}

@@ -1,0 +1,319 @@
+//! Table regeneration: Tables I, II, IV and V of the paper.
+
+use super::{fx, pct, Effort, TextTable};
+use crate::baseline::{scnn, sparten};
+use crate::config::{ArrayConfig, FifoDepths, SimConfig};
+use crate::coordinator::Coordinator;
+use crate::energy::area;
+use crate::models::zoo;
+
+/// Table I: average accesses per parameter by MACs (conv layers).
+pub fn table1() -> String {
+    let mut t = TextTable::new(
+        "Table I — Average accesses per parameter by MACs",
+        &["", "AlexNet", "VGG16", "ResNet50"],
+    );
+    let models = zoo::paper_models();
+    t.row(
+        std::iter::once("Total MACs".to_string())
+            .chain(models.iter().map(|m| {
+                let g = m.total_macs() as f64;
+                if g >= 1e9 {
+                    format!("{:.2}G", g / 1e9)
+                } else {
+                    format!("{:.0}M", g / 1e6)
+                }
+            }))
+            .collect(),
+    );
+    t.row(
+        std::iter::once("Parameters".to_string())
+            .chain(
+                models
+                    .iter()
+                    .map(|m| format!("{:.2}M", m.total_params() as f64 / 1e6)),
+            )
+            .collect(),
+    );
+    t.row(
+        std::iter::once("Avg. Usage of Param.".to_string())
+            .chain(models.iter().map(|m| format!("{:.0}", m.avg_param_usage())))
+            .collect(),
+    );
+    t.render()
+        + "\nPaper (full networks incl. FC): 666M/15.3G/3.86G MACs, \
+           2.33M/14.7M/23.5M params, usage 572/2082/336.\n"
+}
+
+/// Table II: weight and feature sparsity of the three networks.
+pub fn table2(seed: u64) -> String {
+    use crate::models::pruning::pruned_weights;
+    let mut t = TextTable::new(
+        "Table II — Weight and feature sparsity (percentage of zeros)",
+        &["", "AlexNet", "VGG16", "ResNet50"],
+    );
+    let models = zoo::paper_models();
+    // measure weight sparsity from actually-pruned tensors
+    let mut wrow = vec!["Average Weight Sparsity".to_string()];
+    for m in &models {
+        let mut zeros = 0u64;
+        let mut total = 0u64;
+        for l in &m.layers {
+            let w = pruned_weights(l, m.weight_density, seed);
+            zeros += w.data.iter().filter(|v| **v == 0.0).count() as u64;
+            total += w.data.len() as u64;
+        }
+        wrow.push(pct(zeros as f64 / total as f64));
+    }
+    t.row(wrow);
+    t.row(
+        std::iter::once("Average Feature Sparsity".to_string())
+            .chain(models.iter().map(|m| pct(1.0 - m.feature_density)))
+            .collect(),
+    );
+    t.render() + "\nPaper: weights 64%/68%/76%, features 61%/72%/66%.\n"
+}
+
+/// Table IV: additional cycles of mixed-precision processing vs
+/// 8-bit-only, for 3.5% and 5% 16-bit ratios across FIFO depths.
+pub fn table4(effort: Effort, seed: u64) -> String {
+    let model = zoo::synthetic_alexnet(1.0, 1.0); // dense generated model
+    let model = effort.thin(&model);
+    let mut t = TextTable::new(
+        "Table IV — Extra cycles of mixed precision vs 8-bit-only",
+        &["16-bit ratio", "(2,2,2)", "(4,4,4)", "(8,8,8)", "(16,16,16)"],
+    );
+    for ratio16 in [0.035, 0.05] {
+        let mut row = vec![pct(ratio16)];
+        for depth in [2usize, 4, 8, 16] {
+            let array =
+                ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(depth));
+            let mk = |r16: f64| {
+                let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
+                cfg.seed = seed;
+                cfg.ratio16 = r16;
+                Coordinator::new(cfg).simulate_model_synthetic(&model, 1.0, 1.0)
+            };
+            let base = mk(0.0).total_s2_wall();
+            let mixed = mk(ratio16).total_s2_wall();
+            row.push(pct(mixed / base - 1.0));
+        }
+        t.row(row);
+    }
+    t.render()
+        + "\nPaper: 3.5% ratio -> 16.3%/9.1%/8.4%/8.2% extra cycles; \
+           5% -> 24.1%/13.1%/11.9%/11.7% (vs ~10%/~20% for [37]).\n"
+}
+
+/// Table V: comparison among S2Engine (32x32, depths 2/4/8), the naive
+/// array, SCNN and SparTen — resources, area and improvement factors.
+pub fn table5(effort: Effort, seed: u64) -> String {
+    // paper compares on AlexNet + VGG16 (evaluated by all designs)
+    let models = [
+        effort.thin(&zoo::alexnet()),
+        effort.thin(&zoo::vgg16()),
+    ];
+    let mut t = TextTable::new(
+        "Table V — S2Engine (32x32) vs Naive vs SCNN vs SparTen",
+        &[
+            "metric",
+            "S2 depth2",
+            "S2 depth4",
+            "S2 depth8",
+            "Naive",
+            "SCNN",
+            "SparTen",
+        ],
+    );
+
+    let mut speedups = Vec::new();
+    let mut ee = Vec::new();
+    let mut ae = Vec::new();
+    for depth in [2usize, 4, 8] {
+        let array = ArrayConfig::new(32, 32).with_fifo(FifoDepths::uniform(depth));
+        let mut s_sum = 0.0;
+        let mut e_sum = 0.0;
+        let mut a_sum = 0.0;
+        for m in &models {
+            let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
+            cfg.seed = seed;
+            let r = Coordinator::new(cfg).simulate_model(m, 0);
+            s_sum += r.speedup();
+            e_sum += r.onchip_ee_improvement();
+            a_sum += r.area_efficiency_improvement();
+        }
+        speedups.push(s_sum / models.len() as f64);
+        ee.push(e_sum / models.len() as f64);
+        ae.push(a_sum / models.len() as f64);
+    }
+
+    // analytic comparators at the two models' average densities
+    let (scnn_speed, scnn_ee) = {
+        let mut s = 0.0;
+        let mut e = 0.0;
+        for m in &models {
+            let c = scnn::cost(m.total_macs(), m.feature_density, m.weight_density);
+            let dense = scnn::cost(m.total_macs(), 1.0, 1.0);
+            s += dense.mac_cycles as f64 / c.mac_cycles as f64 / 1.27; // vs naive-dense
+            // published metric: EE vs SCNN's own dense version
+            e += dense.energy_per_dense_mac / c.energy_per_dense_mac;
+        }
+        (s / 2.0, e / 2.0)
+    };
+    let sparten_speed = {
+        let mut s = 0.0;
+        for m in &models {
+            let c = sparten::cost(m.total_macs(), m.feature_density, m.weight_density);
+            let dense_cycles = m.total_macs() / sparten::SPARTEN_MULTIPLIERS;
+            s += dense_cycles as f64 / c.mac_cycles as f64 * 0.8; // systolic baseline penalty
+        }
+        s / 2.0
+    };
+
+    let s2_area = |d: usize| {
+        area::s2_area(
+            &ArrayConfig::new(32, 32).with_fifo(FifoDepths::uniform(d)),
+            1 << 20,
+        )
+    };
+    t.row(vec![
+        "FIFO cap (KB)".into(),
+        format!("{:.0}", FifoDepths::uniform(2).bytes_per_pe() * 1024.0 / 1024.0),
+        format!("{:.0}", FifoDepths::uniform(4).bytes_per_pe() * 1024.0 / 1024.0),
+        format!("{:.0}", FifoDepths::uniform(8).bytes_per_pe() * 1024.0 / 1024.0),
+        "-".into(),
+        "32".into(),
+        "31".into(),
+    ]);
+    t.row(vec![
+        "Total area (mm^2)".into(),
+        format!("{:.2}", s2_area(2)),
+        format!("{:.2}", s2_area(4)),
+        format!("{:.2}", s2_area(8)),
+        format!(
+            "{:.2}",
+            area::naive_area(&ArrayConfig::new(32, 32), 2 << 20)
+        ),
+        format!("{:.1} (16nm->14nm)", area::SCNN_AREA_MM2),
+        format!("{:.1} (45nm->14nm)", area::SPARTEN_AREA_MM2),
+    ]);
+    t.row(vec![
+        "Speedup".into(),
+        fx(speedups[0]),
+        fx(speedups[1]),
+        fx(speedups[2]),
+        "1x".into(),
+        fx(scnn_speed),
+        fx(sparten_speed),
+    ]);
+    t.row(vec![
+        "E.E. improvement".into(),
+        fx(ee[0]),
+        fx(ee[1]),
+        fx(ee[2]),
+        "1x".into(),
+        fx(scnn_ee),
+        "1.4x/0.5x".into(),
+    ]);
+    t.row(vec![
+        "A.E. improvement".into(),
+        fx(ae[0]),
+        fx(ae[1]),
+        fx(ae[2]),
+        "1x".into(),
+        "2.20x".into(),
+        "-".into(),
+    ]);
+    t.render()
+        + "\nPaper: S2 speedup 2.49/3.05/3.29x, E.E. 2.70/2.66/2.59x, \
+           A.E. 3.67/4.23/4.11x; SCNN 2.94x/2.21x/2.20x; SparTen 5.60x.\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_models() {
+        let s = table1();
+        assert!(s.contains("AlexNet") && s.contains("ResNet50"));
+        assert!(s.contains("Avg. Usage of Param."));
+    }
+
+    #[test]
+    fn table2_sparsity_near_targets() {
+        let s = table2(1);
+        // AlexNet weight sparsity 64% +- 1
+        assert!(s.contains("64.0%") || s.contains("63.") || s.contains("64."));
+        assert!(s.contains("Average Feature Sparsity"));
+    }
+
+    #[test]
+    fn table4_quick_runs() {
+        let s = table4(Effort::QUICK, 3);
+        assert!(s.contains("3.5%"));
+        assert!(s.contains("(16,16,16)"));
+    }
+}
+
+/// Table III (made quantitative): sparsity-exploitation classes at
+/// AlexNet-class densities — which strategies gate, skip, and compress,
+/// and what that buys in speed and energy.
+pub fn table3() -> String {
+    use crate::baseline::gating::{cost, Exploits};
+    let m = zoo::alexnet();
+    let (df, dw) = (m.feature_density, m.weight_density);
+    let dense_macs = m.total_macs();
+    let dense = cost(dense_macs, df, dw, Exploits::None);
+    let mut t = TextTable::new(
+        "Table III (quantitative) — sparsity strategies at AlexNet densities",
+        &["design class", "gate", "skip MAC", "skip traffic", "speedup", "E.E. vs dense"],
+    );
+    let rows: &[(&str, Exploits, &str, &str, &str)] = &[
+        ("TPU-class dense", Exploits::None, "-", "-", "-"),
+        ("Eyeriss-class", Exploits::GateFeature, "F", "-", "F"),
+        ("Cnvlutin-class", Exploits::SkipFeature, "F", "F", "F"),
+        ("Cambricon-X-class", Exploits::SkipWeight, "W", "W", "W"),
+        ("dual-sparse (S2/SCNN/SparTen)", Exploits::SkipBoth, "F+W", "F+W", "F+W"),
+    ];
+    for (name, policy, gate, skip, traffic) in rows {
+        let c = cost(dense_macs, df, dw, *policy);
+        t.row(vec![
+            name.to_string(),
+            gate.to_string(),
+            skip.to_string(),
+            traffic.to_string(),
+            fx(dense.mac_cycles as f64 / c.mac_cycles as f64),
+            fx(dense.energy_per_dense_mac / c.energy_per_dense_mac),
+        ]);
+    }
+    t.render()
+        + "\nPaper Table III is qualitative; this quantifies each class at \
+           AlexNet's Table II densities. Dual sparsity dominates both axes.\n"
+}
+
+/// Section 5.2 buffer-provisioning analysis: which of the 71 layers fit
+/// the 2 MB (naive) / 1 MB (S2Engine) budgets.
+pub fn fits() -> String {
+    use crate::sim::buffer::{fit_report, paper_fit_counts};
+    let mut t = TextTable::new(
+        "Buffer provisioning — layers fitting 2MB (naive) / 1MB (S2Engine)",
+        &["model", "layers", "naive fits @2MB", "S2 fits @1MB", "naive spills"],
+    );
+    for m in zoo::paper_models() {
+        let r = fit_report(&m, 2 << 20, 1 << 20);
+        t.row(vec![
+            r.model.clone(),
+            r.layers_total.to_string(),
+            r.naive_fits.to_string(),
+            r.s2_fits.to_string(),
+            r.naive_spills.join(","),
+        ]);
+    }
+    let (naive, s2, total) = paper_fit_counts();
+    t.render()
+        + &format!(
+            "\nTotals: naive {naive}/{total} (paper: 66/71), \
+             S2Engine {s2}/{total} (paper: 68/71).\n"
+        )
+}

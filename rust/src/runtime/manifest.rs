@@ -1,0 +1,158 @@
+//! The artifact manifest (`artifacts/manifest.json`) written by
+//! `python/compile/aot.py`: shape/layout metadata the runtime needs to
+//! feed the HLO executables correctly. Parsed with the in-repo JSON
+//! parser ([`crate::util::json`]).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub group_len: usize,
+    pub quant_scale: f32,
+    pub gemm: GemmSpec,
+    pub relu_quant: ReluQuantSpec,
+    pub cnn: CnnSpec,
+}
+
+#[derive(Debug, Clone)]
+pub struct GemmSpec {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReluQuantSpec {
+    pub len: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct CnnSpec {
+    pub file: String,
+    pub batch: usize,
+    pub img_hw: usize,
+    pub img_c: usize,
+    pub layers: Vec<CnnLayerSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CnnLayerSpec {
+    pub name: String,
+    pub kh: usize,
+    pub kw: usize,
+    pub cin: usize,
+    pub cin_padded: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let err = |e: String| anyhow!("manifest: {e}");
+
+        let gemm_j = j.get("gemm").ok_or_else(|| anyhow!("missing gemm"))?;
+        let gemm = GemmSpec {
+            m: gemm_j.usize_field("m").map_err(err)?,
+            k: gemm_j.usize_field("k").map_err(err)?,
+            n: gemm_j.usize_field("n").map_err(err)?,
+            file: gemm_j.str_field("file").map_err(err)?,
+        };
+        let rq_j = j
+            .get("relu_quant")
+            .ok_or_else(|| anyhow!("missing relu_quant"))?;
+        let relu_quant = ReluQuantSpec {
+            len: rq_j.usize_field("len").map_err(err)?,
+            file: rq_j.str_field("file").map_err(err)?,
+        };
+        let cnn_j = j.get("cnn").ok_or_else(|| anyhow!("missing cnn"))?;
+        let mut layers = Vec::new();
+        for l in cnn_j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing cnn.layers"))?
+        {
+            layers.push(CnnLayerSpec {
+                name: l.str_field("name").map_err(err)?,
+                kh: l.usize_field("kh").map_err(err)?,
+                kw: l.usize_field("kw").map_err(err)?,
+                cin: l.usize_field("cin").map_err(err)?,
+                cin_padded: l.usize_field("cin_padded").map_err(err)?,
+                cout: l.usize_field("cout").map_err(err)?,
+                stride: l.usize_field("stride").map_err(err)?,
+                pad: l.usize_field("pad").map_err(err)?,
+            });
+        }
+        let cnn = CnnSpec {
+            file: cnn_j.str_field("file").map_err(err)?,
+            batch: cnn_j.usize_field("batch").map_err(err)?,
+            img_hw: cnn_j.usize_field("img_hw").map_err(err)?,
+            img_c: cnn_j.usize_field("img_c").map_err(err)?,
+            layers,
+        };
+        Ok(Manifest {
+            group_len: j.usize_field("group_len").map_err(err)?,
+            quant_scale: j.f64_field("quant_scale").map_err(err)? as f32,
+            gemm,
+            relu_quant,
+            cnn,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest_shape() {
+        let json = r#"{
+            "group_len": 16,
+            "quant_scale": 0.05,
+            "gemm": {"m": 64, "k": 144, "n": 32, "file": "gemm.hlo.txt"},
+            "relu_quant": {"len": 4096, "file": "relu_quant.hlo.txt"},
+            "cnn": {
+                "file": "cnn_features.hlo.txt",
+                "batch": 4, "img_hw": 32, "img_c": 3,
+                "layers": [{"name": "conv1", "kh": 3, "kw": 3, "cin": 3,
+                            "cin_padded": 16, "cout": 32, "stride": 1,
+                            "pad": 1}]
+            }
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.group_len, 16);
+        assert_eq!(m.gemm.k, 144);
+        assert_eq!(m.cnn.layers[0].cin_padded, 16);
+        assert!((m.quant_scale - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        assert!(Manifest::parse(r#"{"group_len": 16}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.group_len, 16);
+            assert_eq!(m.cnn.layers.len(), 4);
+        }
+    }
+}

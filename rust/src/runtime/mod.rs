@@ -1,0 +1,218 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (L2 JAX model with
+//! its L1 Pallas kernels lowered in) and executes them from Rust.
+//!
+//! Python never runs at simulation time — `make artifacts` produces HLO
+//! *text* once; this module compiles it with the PJRT CPU client
+//! (`xla` crate / xla_extension) and provides typed entry points:
+//!
+//! * [`Runtime::run_gemm`] — the bare grouped-GEMM kernel, used by
+//!   integration tests to cross-check numerics against the Rust oracle;
+//! * [`Runtime::run_cnn_features`] — the S2Net conv stack; its post-ReLU
+//!   feature maps carry the *real* sparsity the simulator consumes in
+//!   real-feature mode (`examples/end_to_end.rs`).
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::models::tensor::{FeatTensor, WeightTensor};
+
+/// A loaded artifact bundle bound to a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    gemm: xla::PjRtLoadedExecutable,
+    cnn: xla::PjRtLoadedExecutable,
+    relu_quant: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Load every artifact from `dir` (usually `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+        };
+        let gemm = compile(&manifest.gemm.file)?;
+        let cnn = compile(&manifest.cnn.file)?;
+        let relu_quant = compile(&manifest.relu_quant.file)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            gemm,
+            cnn,
+            relu_quant,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the grouped-GEMM artifact: `x [m,k] @ y [k,n] -> [m,n]`.
+    pub fn run_gemm(&self, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let g = &self.manifest.gemm;
+        anyhow::ensure!(x.len() == g.m * g.k, "x len {} != {}", x.len(), g.m * g.k);
+        anyhow::ensure!(y.len() == g.k * g.n, "y len {} != {}", y.len(), g.k * g.n);
+        let xl = xla::Literal::vec1(x)
+            .reshape(&[g.m as i64, g.k as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let yl = xla::Literal::vec1(y)
+            .reshape(&[g.k as i64, g.n as i64])
+            .map_err(|e| anyhow!("reshape y: {e:?}"))?;
+        let result = self
+            .gemm
+            .execute::<xla::Literal>(&[xl, yl])
+            .map_err(|e| anyhow!("execute gemm: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute the S2Net conv stack: image `[batch, hw, hw, 3]` plus the
+    /// four weight tensors -> the four post-ReLU feature maps.
+    pub fn run_cnn_features(
+        &self,
+        image: &FeatTensor,
+        weights: &[WeightTensor],
+    ) -> Result<Vec<FeatTensor>> {
+        let c = &self.manifest.cnn;
+        anyhow::ensure!(weights.len() == c.layers.len(), "want {} weight tensors", c.layers.len());
+        anyhow::ensure!(
+            image.n == c.batch && image.h == c.img_hw && image.c == c.img_c,
+            "image shape mismatch: got {}x{}x{}x{}",
+            image.n,
+            image.h,
+            image.w,
+            image.c
+        );
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + weights.len());
+        args.push(
+            xla::Literal::vec1(&image.data)
+                .reshape(&[
+                    image.n as i64,
+                    image.h as i64,
+                    image.w as i64,
+                    image.c as i64,
+                ])
+                .map_err(|e| anyhow!("reshape image: {e:?}"))?,
+        );
+        for (w, spec) in weights.iter().zip(&c.layers) {
+            anyhow::ensure!(
+                w.kh == spec.kh && w.cin == spec.cin_padded && w.cout == spec.cout,
+                "weight tensor for {} has wrong shape",
+                spec.name
+            );
+            args.push(
+                xla::Literal::vec1(&w.data)
+                    .reshape(&[
+                        w.kh as i64,
+                        w.kw as i64,
+                        w.cin as i64,
+                        w.cout as i64,
+                    ])
+                    .map_err(|e| anyhow!("reshape weight: {e:?}"))?,
+            );
+        }
+        let result = self
+            .cnn
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute cnn: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple cnn outputs: {e:?}"))?;
+        anyhow::ensure!(outs.len() == c.layers.len(), "expected {} outputs", c.layers.len());
+
+        let mut feats = Vec::with_capacity(outs.len());
+        let mut h = c.img_hw;
+        let mut w_dim = c.img_hw;
+        for (out, spec) in outs.into_iter().zip(&c.layers) {
+            let oh = (h + 2 * spec.pad - spec.kh) / spec.stride + 1;
+            let ow = (w_dim + 2 * spec.pad - spec.kw) / spec.stride + 1;
+            let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            feats.push(FeatTensor::from_vec(c.batch, oh, ow, spec.cout, data));
+            h = oh;
+            w_dim = ow;
+        }
+        Ok(feats)
+    }
+
+    /// Execute the fused ReLU+int8-quant kernel on a fixed-length buffer.
+    pub fn run_relu_quant(&self, x: &[f32]) -> Result<Vec<i8>> {
+        let spec = &self.manifest.relu_quant;
+        anyhow::ensure!(x.len() == spec.len, "want len {}", spec.len);
+        let xl = xla::Literal::vec1(x);
+        let result = self
+            .relu_quant
+            .execute::<xla::Literal>(&[xl])
+            .map_err(|e| anyhow!("execute relu_quant: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<i8>().map_err(|e| anyhow!("to_vec i8: {e:?}"))
+    }
+
+    /// Cross-check the GEMM artifact against a plain Rust matmul on
+    /// random inputs; returns the max abs error. This is the
+    /// L1↔L3 numeric contract test.
+    pub fn verify_gemm(&self, seed: u64) -> Result<f64> {
+        let g = &self.manifest.gemm;
+        let mut rng = crate::util::rng::Rng::seed_from_u64(seed);
+        let x: Vec<f32> = (0..g.m * g.k)
+            .map(|_| rng.gen_range_f32(-1.0, 1.0))
+            .collect();
+        let y: Vec<f32> = (0..g.k * g.n)
+            .map(|_| rng.gen_range_f32(-1.0, 1.0))
+            .collect();
+        let got = self.run_gemm(&x, &y)?;
+        let mut max_err = 0.0f64;
+        for i in 0..g.m {
+            for j in 0..g.n {
+                let mut acc = 0.0f64;
+                for kk in 0..g.k {
+                    acc += x[i * g.k + kk] as f64 * y[kk * g.n + j] as f64;
+                }
+                let err = (acc - got[i * g.n + j] as f64).abs();
+                if err > max_err {
+                    max_err = err;
+                }
+            }
+        }
+        Ok(max_err)
+    }
+}
+
+/// Default artifact directory relative to the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Load the runtime if artifacts exist; `None` otherwise (simulation-only
+/// workflows don't need them).
+pub fn try_load_default() -> Result<Option<Runtime>> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        return Ok(None);
+    }
+    Runtime::load(&dir).map(Some).context("loading artifacts")
+}

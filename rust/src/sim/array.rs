@@ -1,0 +1,311 @@
+//! The systolic-array tile simulator: R×C PEs stepped cycle-by-cycle at
+//! the DS clock, with weight flows travelling down columns, feature flows
+//! travelling right along rows, MAC units ticking every `ds_ratio`
+//! cycles, and in-order result forwarding per column (Section 4.1's RF
+//! stall semantics).
+//!
+//! One call simulates one *tile* (one array pass over R output positions
+//! × C kernels); layer totals are extrapolated by the coordinator from a
+//! tile sample (DESIGN.md §5).
+
+use super::ce;
+use super::pe::Pe;
+use super::stats::TileStats;
+use crate::compiler::mapping::TileJob;
+use crate::config::ArrayConfig;
+
+/// Hard safety limit: no realistic tile needs this many DS cycles; hitting
+/// it means a dataflow deadlock (a bug), so we panic loudly.
+const CYCLE_LIMIT: u64 = 50_000_000;
+
+/// Simulate one tile; returns its event counters.
+pub fn simulate_tile(tile: &TileJob, cfg: &ArrayConfig, ce_enabled: bool) -> TileStats {
+    let rows = tile.active_rows();
+    let cols = tile.active_cols();
+    assert!(rows > 0 && cols > 0, "empty tile");
+    assert!(
+        rows <= cfg.rows && cols <= cfg.cols,
+        "tile {}x{} exceeds array {}x{}",
+        rows,
+        cols,
+        cfg.rows,
+        cfg.cols
+    );
+    let ratio = cfg.ds_ratio.max(1) as u64;
+    let n_groups = tile.n_groups as u32;
+
+    let mut stats = TileStats::default();
+    stats.dense_macs = tile.dense_macs();
+    stats.results = (rows * cols) as u64;
+
+    // Flatten the streams (EOK on weight kernels).
+    let f_src: Vec<Vec<u32>> = tile
+        .features
+        .iter()
+        .map(|s| s.to_flow(false).tokens.iter().map(|t| t.0).collect())
+        .collect();
+    let w_src: Vec<Vec<u32>> = tile
+        .weights
+        .iter()
+        .map(|s| s.to_flow(true).tokens.iter().map(|t| t.0).collect())
+        .collect();
+    let mut f_idx = vec![0usize; rows];
+    let mut w_idx = vec![0usize; cols];
+
+    let mut pes: Vec<Pe> = (0..rows * cols)
+        .map(|_| Pe::new(cfg.fifo, n_groups))
+        .collect();
+
+    let mut ds_cycle: u64 = 0;
+    let mut remaining = rows * cols;
+    while remaining > 0 {
+        // 1. Source injection: the CE array (features) and WB (weights)
+        //    deliver one token per DS cycle per edge PE — Section 4.4:
+        //    "The CE array runs at the same frequency as DS component".
+        for r in 0..rows {
+            if f_idx[r] < f_src[r].len() && pes[r * cols].f_fifo.has_space() {
+                pes[r * cols].f_fifo.push(f_src[r][f_idx[r]]);
+                f_idx[r] += 1;
+                stats.f_tokens += 1;
+            }
+        }
+        for c in 0..cols {
+            if w_idx[c] < w_src[c].len() && pes[c].w_fifo.has_space() {
+                pes[c].w_fifo.push(w_src[c][w_idx[c]]);
+                w_idx[c] += 1;
+                stats.w_tokens += 1;
+            }
+        }
+
+        // 2. DS steps in reverse raster order so a token forwarded this
+        //    cycle cannot hop multiple PEs within the same cycle.
+        //    (index arithmetic kept additive — no div/mod in the hot loop,
+        //    and certainly-stalled PEs skipped cheaply: EXPERIMENTS.md §Perf)
+        let mut idx = rows * cols;
+        for r in (0..rows).rev() {
+            for c in (0..cols).rev() {
+                idx -= 1;
+                if pes[idx].ds_done {
+                    continue;
+                }
+                let down_ok = r + 1 >= rows || pes[idx + cols].w_fifo.has_space();
+                let right_ok = c + 1 >= cols || pes[idx + 1].f_fifo.has_space();
+                let fwd = pes[idx].ds_step(down_ok, right_ok, &mut stats);
+                if let Some(t) = fwd.w {
+                    if r + 1 < rows {
+                        pes[idx + cols].w_fifo.push(t);
+                        stats.token_pushes += 1;
+                    }
+                }
+                if let Some(t) = fwd.f {
+                    if c + 1 < cols {
+                        pes[idx + 1].f_fifo.push(t);
+                        stats.token_pushes += 1;
+                    }
+                }
+            }
+        }
+
+        // 3. MAC tick every `ratio` DS cycles.
+        if ds_cycle % ratio == ratio - 1 {
+            for pe in pes.iter_mut() {
+                let was_done = pe.compute_done;
+                pe.mac_step(ds_cycle, &mut stats);
+                if pe.compute_done && !was_done {
+                    remaining -= 1;
+                }
+            }
+        }
+
+        ds_cycle += 1;
+        if ds_cycle > CYCLE_LIMIT {
+            panic!(
+                "tile simulation exceeded {CYCLE_LIMIT} DS cycles \
+                 ({remaining} PEs unfinished) — dataflow deadlock"
+            );
+        }
+    }
+
+    // 4. Result forwarding: each column drains its R results in row
+    //    order, one per MAC cycle; a PE that finished early stalls its RF
+    //    until its predecessors' results have passed (Section 4.1).
+    let mut max_drain_mac: u64 = 0;
+    for c in 0..cols {
+        let mut t: u64 = 0;
+        for r in 0..rows {
+            let fin_mac = pes[r * cols + c].finish_ds_cycle / ratio + 1;
+            t = (t + 1).max(fin_mac + 1);
+        }
+        max_drain_mac = max_drain_mac.max(t);
+    }
+    stats.ds_cycles = ds_cycle.max(max_drain_mac * ratio);
+
+    // 5. Buffer traffic accounting (CE array model).
+    let traffic = ce::account(tile, ce_enabled);
+    ce::apply(&mut stats, &traffic);
+
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapping::{build_tile, LayerMapping, TileSource};
+    use crate::config::FifoDepths;
+    use crate::models::LayerDesc;
+
+    fn layer() -> LayerDesc {
+        LayerDesc::new("t", 8, 8, 32, 3, 3, 16, 1, 1)
+    }
+
+    fn synth_tile(fd: f64, wd: f64, rows: usize, cols: usize) -> TileJob {
+        let m = LayerMapping::new(&layer(), rows, cols);
+        build_tile(
+            &m,
+            m.n_col_tiles(), // interior tile
+            &TileSource::Synthetic {
+                feature_density: fd,
+                weight_density: wd,
+                clustered: false,
+            },
+            0.0,
+            7,
+        )
+    }
+
+    #[test]
+    fn single_pe_tile_completes() {
+        let tile = synth_tile(0.5, 0.5, 1, 1);
+        let cfg = ArrayConfig::new(1, 1);
+        let s = simulate_tile(&tile, &cfg, true);
+        assert!(s.ds_cycles > 0);
+        assert_eq!(s.results, 1);
+        assert_eq!(s.mac_ops, tile.must_macs());
+    }
+
+    #[test]
+    fn mac_ops_equal_must_macs_exactly() {
+        // The DS merge must find EVERY aligned pair, no more, no less —
+        // the core correctness property of the architecture.
+        for (fd, wd) in [(0.2, 0.2), (0.5, 0.3), (0.9, 0.9), (1.0, 1.0)] {
+            let tile = synth_tile(fd, wd, 4, 4);
+            let cfg = ArrayConfig::new(4, 4);
+            let s = simulate_tile(&tile, &cfg, true);
+            assert_eq!(
+                s.mac_ops,
+                tile.must_macs(),
+                "density ({fd},{wd}): {} vs {}",
+                s.mac_ops,
+                tile.must_macs()
+            );
+        }
+    }
+
+    #[test]
+    fn bounded_fifos_complete_without_deadlock() {
+        let tile = synth_tile(0.6, 0.6, 8, 8);
+        for depth in [1, 2, 4, 8] {
+            let cfg =
+                ArrayConfig::new(8, 8).with_fifo(FifoDepths::uniform(depth));
+            let s = simulate_tile(&tile, &cfg, true);
+            assert_eq!(s.mac_ops, tile.must_macs(), "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn deeper_fifos_never_slower() {
+        let tile = synth_tile(0.5, 0.5, 8, 8);
+        let cycles = |d: FifoDepths| {
+            simulate_tile(&tile, &ArrayConfig::new(8, 8).with_fifo(d), true)
+                .ds_cycles
+        };
+        let d2 = cycles(FifoDepths::uniform(2));
+        let d4 = cycles(FifoDepths::uniform(4));
+        let d8 = cycles(FifoDepths::uniform(8));
+        let inf = cycles(FifoDepths::infinite());
+        assert!(d4 <= d2, "(4,4,4) {d4} vs (2,2,2) {d2}");
+        assert!(d8 <= d4);
+        assert!(inf <= d8);
+    }
+
+    #[test]
+    fn higher_ds_ratio_fewer_wall_cycles() {
+        // Higher DS frequency = more DS cycles per MAC cycle, so the same
+        // tile takes fewer *MAC* cycles (wall time at fixed MAC clock).
+        let tile = synth_tile(0.4, 0.4, 8, 8);
+        let wall = |ratio: u32| {
+            let cfg = ArrayConfig::new(8, 8)
+                .with_fifo(FifoDepths::infinite())
+                .with_ratio(ratio);
+            let s = simulate_tile(&tile, &cfg, true);
+            s.ds_cycles as f64 / ratio as f64
+        };
+        let w1 = wall(1);
+        let w4 = wall(4);
+        assert!(w4 < w1, "ratio 4 wall {w4} vs ratio 1 wall {w1}");
+    }
+
+    #[test]
+    fn sparser_tiles_run_faster() {
+        let cfg = ArrayConfig::new(8, 8);
+        let sparse = simulate_tile(&synth_tile(0.2, 0.2, 8, 8), &cfg, true);
+        let dense = simulate_tile(&synth_tile(1.0, 1.0, 8, 8), &cfg, true);
+        assert!(
+            sparse.ds_cycles * 2 < dense.ds_cycles,
+            "sparse {} dense {}",
+            sparse.ds_cycles,
+            dense.ds_cycles
+        );
+    }
+
+    #[test]
+    fn partial_edge_tile() {
+        // 5 rows x 3 cols on an 8x8 array
+        let m = LayerMapping::new(&layer(), 5, 3);
+        let tile = build_tile(
+            &m,
+            0,
+            &TileSource::Synthetic {
+                feature_density: 0.5,
+                weight_density: 0.5,
+                clustered: false,
+            },
+            0.0,
+            1,
+        );
+        let cfg = ArrayConfig::new(8, 8);
+        let s = simulate_tile(&tile, &cfg, true);
+        assert_eq!(s.results, 15);
+        assert_eq!(s.mac_ops, tile.must_macs());
+    }
+
+    #[test]
+    fn mixed_precision_tile_more_ops_and_cycles() {
+        let m = LayerMapping::new(&layer(), 8, 8);
+        let src = TileSource::Synthetic {
+            feature_density: 1.0,
+            weight_density: 1.0,
+            clustered: false,
+        };
+        let plain = build_tile(&m, 0, &src, 0.0, 3);
+        let mixed = build_tile(&m, 0, &src, 0.10, 3);
+        let cfg = ArrayConfig::new(8, 8);
+        let sp = simulate_tile(&plain, &cfg, true);
+        let sm = simulate_tile(&mixed, &cfg, true);
+        assert!(sm.mac_ops > sp.mac_ops);
+        assert!(sm.ds_cycles >= sp.ds_cycles);
+        assert_eq!(sm.mac_ops, mixed.must_macs());
+    }
+
+    #[test]
+    fn stats_internally_consistent() {
+        let tile = synth_tile(0.5, 0.5, 8, 8);
+        let cfg = ArrayConfig::new(8, 8);
+        let s = simulate_tile(&tile, &cfg, true);
+        assert_eq!(s.pairs, s.mac_ops, "8-bit only: 1 op per pair");
+        assert!(s.f_tokens > 0 && s.w_tokens > 0);
+        // every injected token is forwarded through (cols-1) PEs per row
+        assert!(s.token_pushes > s.f_tokens);
+        assert_eq!(s.fb_reads_ce + s.ce_fifo_reads, s.fb_reads_no_ce);
+    }
+}

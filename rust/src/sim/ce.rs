@@ -1,0 +1,204 @@
+//! Collective Element array — overlap reuse between adjacent PE rows
+//! (Section 4.4, Fig. 8).
+//!
+//! Each CE holds exactly one data group in an internal FIFO. When row r
+//! needs a group that a neighbouring CE already holds (because an
+//! adjacent output position's window overlaps), the group is served from
+//! the CE chain instead of re-read from the feature buffer. The paper's
+//! Fig. 13 metrics — reduction in FB *accesses* and FB *capacity* — are
+//! computed here from the per-row group reference lists of a tile.
+//!
+//! The CE chain only spans the rows of one tile (one array pass), so
+//! reuse is bounded by the array height: smaller arrays break the
+//! transmission chain more often (the paper's observation that larger
+//! PE arrays obtain slightly higher reduction).
+
+use std::collections::HashMap;
+
+use crate::compiler::groups::{GroupedStream, PAD_GROUP};
+use crate::compiler::mapping::TileJob;
+use crate::compiler::Token;
+use crate::sim::stats::TileStats;
+
+/// Buffer-traffic accounting for one tile.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CeTraffic {
+    /// FB group reads without CE reuse: one per (row, group) reference.
+    pub fb_reads_no_ce: u64,
+    /// FB group reads with CE reuse: one per distinct group in the tile.
+    pub fb_reads_ce: u64,
+    /// References served from CE-internal FIFOs instead of FB.
+    pub ce_fifo_reads: u64,
+    /// WB group reads (weights have no overlap; one per kernel group).
+    pub wb_reads: u64,
+    /// FB bytes that must be resident without CE (per-row copies of the
+    /// compressed streams — the "three separate FBs as three copies"
+    /// arrangement of Section 4.4).
+    pub fb_bytes_no_ce: u64,
+    /// FB bytes resident with CE (each distinct group stored once).
+    pub fb_bytes_ce: u64,
+    /// Same two metrics for a *naive dense* buffer (uncompressed 8-bit).
+    pub fb_bytes_naive: u64,
+}
+
+/// Compressed size in bytes of one group's token list (13-bit feature
+/// tokens, rounded to bits then bytes at the buffer level).
+fn group_feature_bytes(tokens: &[Token]) -> u64 {
+    (tokens.len() as u64 * Token::FEATURE_BITS as u64).div_ceil(8)
+}
+
+fn group_weight_bytes(tokens: &[Token]) -> u64 {
+    (tokens.len() as u64 * Token::WEIGHT_BITS as u64).div_ceil(8)
+}
+
+/// Account buffer traffic for a tile. Rows' feature streams are scanned
+/// in lockstep "periods" (Fig. 8): within a period, each distinct group
+/// is loaded from FB once by the first CE that needs it and passed down
+/// the chain to the other rows referencing it.
+pub fn account(tile: &TileJob, ce_enabled: bool) -> CeTraffic {
+    let mut t = CeTraffic::default();
+
+    // --- weights: one WB read per kernel group (broadcast down the
+    // column by the systolic flow itself, so no duplicate reads).
+    for w in &tile.weights {
+        t.wb_reads += w.groups.len() as u64;
+    }
+
+    // --- features
+    let mut distinct: HashMap<u64, u64> = HashMap::new();
+    for f in &tile.features {
+        for g in &f.groups {
+            if g.fb_group == PAD_GROUP {
+                continue; // padding is materialized by the CE, not read
+            }
+            t.fb_reads_no_ce += 1;
+            t.fb_bytes_no_ce += group_feature_bytes(&g.tokens);
+            t.fb_bytes_naive += crate::GROUP_LEN as u64; // dense 8-bit
+            *distinct.entry(g.fb_group).or_insert(0) += 1;
+        }
+    }
+    for (_, refs) in distinct.iter() {
+        t.fb_reads_ce += 1;
+        t.ce_fifo_reads += refs - 1;
+    }
+    // capacity with CE: each distinct group stored once
+    let mut seen: HashMap<u64, u64> = HashMap::new();
+    for f in &tile.features {
+        for g in &f.groups {
+            if g.fb_group != PAD_GROUP {
+                seen.entry(g.fb_group)
+                    .or_insert_with(|| group_feature_bytes(&g.tokens));
+            }
+        }
+    }
+    t.fb_bytes_ce = seen.values().sum();
+
+    if !ce_enabled {
+        // without CE every reference is an FB read and per-row copies
+        // are resident
+        t.fb_reads_ce = t.fb_reads_no_ce;
+        t.ce_fifo_reads = 0;
+        t.fb_bytes_ce = t.fb_bytes_no_ce;
+    }
+    t
+}
+
+/// Apply traffic to the tile's stats.
+pub fn apply(stats: &mut TileStats, t: &CeTraffic) {
+    stats.fb_reads_no_ce += t.fb_reads_no_ce;
+    stats.fb_reads_ce += t.fb_reads_ce;
+    stats.ce_fifo_reads += t.ce_fifo_reads;
+    stats.wb_reads += t.wb_reads;
+}
+
+/// Compressed weight-stream bytes for WB capacity accounting.
+pub fn weight_stream_bytes(w: &GroupedStream) -> u64 {
+    w.groups.iter().map(|g| group_weight_bytes(&g.tokens)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::mapping::{build_tile, LayerMapping, TileSource};
+    use crate::models::LayerDesc;
+
+    fn tile(rows: usize) -> TileJob {
+        let l = LayerDesc::new("t", 8, 8, 32, 3, 3, 16, 1, 1);
+        let m = LayerMapping::new(&l, rows, 16);
+        build_tile(
+            &m,
+            // interior row-tile to get plenty of overlap
+            m.n_col_tiles(), // tile index 1*n_col_tiles+0 => rt=1, ct=0
+            &TileSource::Synthetic {
+                feature_density: 0.5,
+                weight_density: 0.5,
+                clustered: false,
+            },
+            0.0,
+            1,
+        )
+    }
+
+    #[test]
+    fn ce_reduces_fb_reads() {
+        let t = account(&tile(16), true);
+        assert!(t.fb_reads_ce < t.fb_reads_no_ce);
+        assert_eq!(t.fb_reads_ce + t.ce_fifo_reads, t.fb_reads_no_ce);
+        // 3x3 stride-1 raster rows: roughly 3x reuse available
+        let ratio = t.fb_reads_no_ce as f64 / t.fb_reads_ce as f64;
+        assert!(ratio > 1.5, "reuse ratio only {ratio}");
+    }
+
+    #[test]
+    fn ce_disabled_means_no_reduction() {
+        let t = account(&tile(16), false);
+        assert_eq!(t.fb_reads_ce, t.fb_reads_no_ce);
+        assert_eq!(t.ce_fifo_reads, 0);
+        assert_eq!(t.fb_bytes_ce, t.fb_bytes_no_ce);
+    }
+
+    #[test]
+    fn capacity_reduction_with_ce() {
+        let t = account(&tile(16), true);
+        assert!(t.fb_bytes_ce < t.fb_bytes_no_ce);
+        // compressed beats naive dense at 50% density? tokens are 13 bits
+        // vs 8 dense bits/elem: 0.5*16*13 = 104 bits vs 128 bits
+        assert!(t.fb_bytes_no_ce < t.fb_bytes_naive + t.fb_bytes_naive / 2);
+    }
+
+    #[test]
+    fn larger_tile_height_more_reuse() {
+        let small = account(&tile(4), true);
+        let big = account(&tile(16), true);
+        let r_small = small.fb_reads_no_ce as f64 / small.fb_reads_ce as f64;
+        let r_big = big.fb_reads_no_ce as f64 / big.fb_reads_ce as f64;
+        assert!(
+            r_big > r_small,
+            "bigger arrays should reuse more: {r_big} vs {r_small}"
+        );
+    }
+
+    #[test]
+    fn one_by_one_kernel_little_reuse() {
+        // 1x1 kernels: adjacent output positions share no input groups,
+        // the ResNet50 effect in Fig. 13.
+        let l = LayerDesc::new("t", 8, 8, 32, 1, 1, 16, 1, 0);
+        let m = LayerMapping::new(&l, 16, 16);
+        let tile = build_tile(
+            &m,
+            0,
+            &TileSource::Synthetic {
+                feature_density: 0.5,
+                weight_density: 0.5,
+                clustered: false,
+            },
+            0.0,
+            1,
+        );
+        let t = account(&tile, true);
+        assert_eq!(
+            t.fb_reads_ce, t.fb_reads_no_ce,
+            "1x1 windows are disjoint"
+        );
+    }
+}

@@ -1,0 +1,221 @@
+//! Bounded token FIFOs — the registers inside each PE's DS component
+//! (Fig. 6: W-FIFO, F-FIFO, WF-FIFO).
+//!
+//! The paper sizes these in the few-entries range ("several tens of bits
+//! are enough"); their depth is a first-order performance knob (Fig. 10),
+//! so the simulator models occupancy exactly.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): the common configurations are depth
+//! ≤ 8, so the ring lives in an inline array inside the PE struct — no
+//! heap indirection on the simulator hot path. Deeper / idealized (∞)
+//! FIFOs spill to a heap ring.
+
+const INLINE_CAP: usize = 8;
+
+/// Ring-buffer FIFO of packed tokens (`u32`). Capacity `usize::MAX`
+/// models the paper's idealized (∞,∞,∞) configuration.
+#[derive(Debug, Clone)]
+pub struct Fifo {
+    inline: [u32; INLINE_CAP],
+    heap: Vec<u32>,
+    head: u32,
+    len: u32,
+    cap: usize,
+    /// Lifetime statistics.
+    pub pushes: u64,
+    pub max_occupancy: usize,
+}
+
+impl Fifo {
+    pub fn new(cap: usize) -> Self {
+        let heap = if cap > INLINE_CAP {
+            let alloc = if cap == usize::MAX { 64 } else { cap };
+            vec![0; alloc]
+        } else {
+            Vec::new()
+        };
+        Fifo {
+            inline: [0; INLINE_CAP],
+            heap,
+            head: 0,
+            len: 0,
+            cap: cap.max(1),
+            pushes: 0,
+            max_occupancy: 0,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.cap != usize::MAX && self.len as usize >= self.cap
+    }
+
+    #[inline]
+    pub fn has_space(&self) -> bool {
+        !self.is_full()
+    }
+
+    #[inline]
+    fn ring_len(&self) -> usize {
+        if self.cap <= INLINE_CAP {
+            INLINE_CAP
+        } else {
+            self.heap.len()
+        }
+    }
+
+    /// Push a token; panics if full (callers must check `has_space` —
+    /// backpressure is the caller's concern, mirroring the RTL valid/ready
+    /// handshake).
+    #[inline]
+    pub fn push(&mut self, v: u32) {
+        let ring = self.ring_len();
+        if self.len as usize == ring {
+            debug_assert_eq!(self.cap, usize::MAX, "push into full bounded FIFO");
+            self.grow();
+        }
+        if self.cap <= INLINE_CAP {
+            // inline ring is always 8 slots: mask instead of modulo
+            let tail = (self.head as usize + self.len as usize) & (INLINE_CAP - 1);
+            self.inline[tail] = v;
+        } else {
+            let tail =
+                (self.head as usize + self.len as usize) % self.heap.len();
+            self.heap[tail] = v;
+        }
+        self.len += 1;
+        self.pushes += 1;
+        if self.len as usize > self.max_occupancy {
+            self.max_occupancy = self.len as usize;
+        }
+    }
+
+    #[cold]
+    fn grow(&mut self) {
+        let old = self.heap.len();
+        let mut nb = vec![0; (old * 2).max(64)];
+        for i in 0..self.len as usize {
+            nb[i] = self.heap[(self.head as usize + i) % old];
+        }
+        self.heap = nb;
+        self.head = 0;
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<u32> {
+        if self.len == 0 {
+            return None;
+        }
+        let v = if self.cap <= INLINE_CAP {
+            let v = self.inline[self.head as usize];
+            self.head = ((self.head as usize + 1) & (INLINE_CAP - 1)) as u32;
+            v
+        } else {
+            let v = self.heap[self.head as usize];
+            self.head = ((self.head as usize + 1) % self.heap.len()) as u32;
+            v
+        };
+        self.len -= 1;
+        Some(v)
+    }
+
+    #[inline]
+    pub fn peek(&self) -> Option<u32> {
+        if self.len == 0 {
+            None
+        } else if self.cap <= INLINE_CAP {
+            Some(self.inline[self.head as usize])
+        } else {
+            Some(self.heap[self.head as usize])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_bounds() {
+        let mut f = Fifo::new(3);
+        assert!(f.is_empty());
+        f.push(1);
+        f.push(2);
+        f.push(3);
+        assert!(f.is_full());
+        assert!(!f.has_space());
+        assert_eq!(f.pop(), Some(1));
+        f.push(4);
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(4));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let mut f = Fifo::new(2);
+        for i in 0..100u32 {
+            f.push(i);
+            assert_eq!(f.pop(), Some(i));
+        }
+        assert_eq!(f.pushes, 100);
+        assert_eq!(f.max_occupancy, 1);
+    }
+
+    #[test]
+    fn heap_backed_depths() {
+        // cap > INLINE_CAP uses the heap ring with identical semantics
+        let mut f = Fifo::new(16);
+        for i in 0..16u32 {
+            assert!(f.has_space());
+            f.push(i);
+        }
+        assert!(f.is_full());
+        for i in 0..16u32 {
+            assert_eq!(f.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn infinite_fifo_grows() {
+        let mut f = Fifo::new(usize::MAX);
+        for i in 0..1000u32 {
+            assert!(f.has_space());
+            f.push(i);
+        }
+        for i in 0..1000u32 {
+            assert_eq!(f.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut f = Fifo::new(4);
+        f.push(9);
+        assert_eq!(f.peek(), Some(9));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.pop(), Some(9));
+        assert_eq!(f.peek(), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bounded_overflow_panics_in_debug() {
+        let mut f = Fifo::new(1);
+        f.push(1);
+        f.push(2); // must panic (debug_assert) or corrupt — test debug only
+        // in release the debug_assert is compiled out; force failure:
+        assert!(f.len() <= 1, "overflow silently accepted");
+    }
+}

@@ -1,0 +1,19 @@
+//! Cycle-accurate simulator of the S²Engine array.
+//!
+//! * [`fifo`] — the bounded token FIFOs inside each PE.
+//! * [`pe`] — Dynamic Selection + MAC + Result Forwarding state machines.
+//! * [`array`] — the R×C array stepped at DS-clock granularity.
+//! * [`ce`] — Collective Element buffer-traffic accounting.
+//! * [`buffer`] — FB/WB SRAM capacity provisioning (Section 5.2's
+//!   66-of-71 / 68-of-71 layer-fit analysis).
+//! * [`stats`] — event counters feeding the energy/area models.
+
+pub mod array;
+pub mod buffer;
+pub mod ce;
+pub mod fifo;
+pub mod pe;
+pub mod stats;
+
+pub use array::simulate_tile;
+pub use stats::TileStats;

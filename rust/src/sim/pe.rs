@@ -1,0 +1,499 @@
+//! The processing element: Dynamic Selection + MAC + Result Forwarding
+//! (Section 4.3, Figs. 6/7).
+//!
+//! DS semantics implemented exactly as the paper's toy trace (Fig. 7):
+//! a *push* of a flow moves one token from the flow FIFO into the
+//! comparison register **and simultaneously forwards it to the successor
+//! PE** on that flow's transmission path. Each DS cycle the controller
+//! compares the two register offsets:
+//!
+//! * equal offsets, both non-zero → the aligned pair enters the WF-FIFO
+//!   and (normally) both flows push;
+//! * unequal → the flow with the smaller offset pushes (it can no longer
+//!   find a partner in the other flow's remaining, offset-sorted group);
+//! * a flow whose register carries EOG holds until the other reaches its
+//!   EOG too, then both push together — the group barrier that keeps the
+//!   two compressed flows group-synchronized.
+//!
+//! Any required push that cannot proceed (empty source FIFO, full
+//! downstream FIFO, full WF-FIFO) stalls the whole DS cycle — emission
+//! and pushes are atomic, as in the RTL handshake.
+//!
+//! Split 16-bit values (Section 4.5) are pairs of same-offset tokens
+//! (lo then hi). On an offset match where one register holds a `lo`
+//! token, only that flow pushes, so the partner is re-paired with the
+//! following `hi` token; a hi×hi match books 2 MAC ops, totalling the 4
+//! partial products of Fig. 9(b) for a 16×16 encounter.
+
+use super::fifo::Fifo;
+use super::stats::TileStats;
+use crate::compiler::ecoo::Token;
+use crate::config::FifoDepths;
+
+const EMPTY: u32 = 0;
+
+/// What a DS cycle decided to forward to the neighbours.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Forwarded {
+    /// Token to hand to the next PE down the column (weight flow).
+    pub w: Option<u32>,
+    /// Token to hand to the next PE right along the row (feature flow).
+    pub f: Option<u32>,
+}
+
+/// MAC-side state: the WF-FIFO holds emitted pairs as op-counts.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    pub w_fifo: Fifo,
+    pub f_fifo: Fifo,
+    /// WF-FIFO: each entry is the op-count of one aligned pair (1 or 2).
+    pub wf_fifo: Fifo,
+    w_reg: u32,
+    f_reg: u32,
+    /// Completed group barriers.
+    pub groups_done: u32,
+    /// Total groups this PE must process (its convolution's length).
+    pub n_groups: u32,
+    /// DS has consumed all groups.
+    pub ds_done: bool,
+    /// MAC has drained the WF-FIFO after ds_done.
+    pub compute_done: bool,
+    /// MAC ops performed by this PE.
+    pub mac_ops: u64,
+    /// DS cycle at which compute finished (valid once compute_done).
+    pub finish_ds_cycle: u64,
+    /// True if this PE is inactive in the current tile (edge padding).
+    pub idle: bool,
+}
+
+impl Pe {
+    pub fn new(depths: FifoDepths, n_groups: u32) -> Self {
+        Pe {
+            w_fifo: Fifo::new(depths.w),
+            f_fifo: Fifo::new(depths.f),
+            wf_fifo: Fifo::new(depths.wf),
+            w_reg: EMPTY,
+            f_reg: EMPTY,
+            groups_done: 0,
+            n_groups,
+            ds_done: n_groups == 0,
+            compute_done: n_groups == 0,
+            mac_ops: 0,
+            finish_ds_cycle: 0,
+            idle: n_groups == 0,
+        }
+    }
+
+    /// Both comparison registers empty (cheap pre-check for certain
+    /// starvation in the array sweep).
+    #[inline]
+    pub fn regs_empty(&self) -> bool {
+        self.w_reg == EMPTY && self.f_reg == EMPTY
+    }
+
+    /// One DS-clock step. `w_space_down` / `f_space_right` report whether
+    /// the successor FIFOs can accept a token (`true` at array edges).
+    pub fn ds_step(
+        &mut self,
+        w_space_down: bool,
+        f_space_right: bool,
+        stats: &mut TileStats,
+    ) -> Forwarded {
+        let mut fwd = Forwarded::default();
+        if self.ds_done {
+            return fwd;
+        }
+
+        // Register fills are pushes too: they forward the loaded token,
+        // and a flow can push at most once per DS cycle — so a fill
+        // consumes the cycle (the compare resumes next cycle), exactly
+        // one token per flow per cycle on the transmission path. The two
+        // flows fill independently: a starved weight side must not block
+        // feature tokens from propagating (and vice versa). Fills only
+        // happen at stream start, so this path is cold.
+        if self.w_reg == EMPTY || self.f_reg == EMPTY {
+            return self.fill_regs(w_space_down, f_space_right, stats);
+        }
+
+        let w = Token(self.w_reg);
+        let f = Token(self.f_reg);
+        let w_last = w.eog();
+        let f_last = f.eog();
+        let aligned =
+            w.offset() == f.offset() && !w.is_placeholder() && !f.is_placeholder();
+
+        // Decide which flows must push this cycle.
+        let (push_w, push_f, barrier) = if aligned && f.tag16() && !f.hi() {
+            (false, true, false) // hold w for f's hi byte
+        } else if aligned && w.tag16() && !w.hi() {
+            (true, false, false) // hold f for w's hi byte
+        } else if w_last && f_last {
+            (true, true, true)
+        } else if w_last {
+            (false, true, false)
+        } else if f_last {
+            (true, false, false)
+        } else if w.offset() == f.offset() {
+            (true, true, false)
+        } else if w.offset() < f.offset() {
+            (true, false, false)
+        } else {
+            (false, true, false)
+        };
+
+        // Feasibility check before any side effect (atomic cycle).
+        if aligned && !self.wf_fifo.has_space() {
+            stats.stall_wf_full += 1;
+            return fwd;
+        }
+        let final_barrier = barrier && self.groups_done + 1 == self.n_groups;
+        if !final_barrier {
+            if push_w && (self.w_fifo.is_empty() || !w_space_down) {
+                if self.w_fifo.is_empty() {
+                    stats.stall_starved += 1;
+                } else {
+                    stats.stall_out_full += 1;
+                }
+                return fwd;
+            }
+            if push_f && (self.f_fifo.is_empty() || !f_space_right) {
+                if self.f_fifo.is_empty() {
+                    stats.stall_starved += 1;
+                } else {
+                    stats.stall_out_full += 1;
+                }
+                return fwd;
+            }
+        }
+
+        // Emit the aligned pair.
+        if aligned {
+            let ops = if w.tag16() && w.hi() && f.tag16() && f.hi() {
+                2 // the hi*hi encounter also covers the lo*hi cross term
+            } else {
+                1
+            };
+            self.wf_fifo.push(ops);
+            stats.pairs += 1;
+            stats.mac_ops += ops as u64;
+            self.mac_ops += ops as u64;
+        }
+
+        // Perform the pushes.
+        if barrier {
+            self.groups_done += 1;
+            stats.barrier_cycles += 1;
+            if final_barrier {
+                self.w_reg = EMPTY;
+                self.f_reg = EMPTY;
+                self.ds_done = true;
+                return fwd;
+            }
+        }
+        if push_w {
+            let ok = self.try_load_w(&mut fwd, w_space_down);
+            debug_assert!(ok, "checked above");
+        }
+        if push_f {
+            let ok = self.try_load_f(&mut fwd, f_space_right);
+            debug_assert!(ok, "checked above");
+        }
+        fwd
+    }
+
+    /// Cold path: one or both comparison registers are empty (stream
+    /// start). Fill what can be filled, forwarding the loaded tokens.
+    #[cold]
+    fn fill_regs(
+        &mut self,
+        w_space_down: bool,
+        f_space_right: bool,
+        stats: &mut TileStats,
+    ) -> Forwarded {
+        let mut fwd = Forwarded::default();
+        let mut missing = false;
+        if self.w_reg == EMPTY && !self.try_load_w(&mut fwd, w_space_down) {
+            missing = true;
+        }
+        if self.f_reg == EMPTY && !self.try_load_f(&mut fwd, f_space_right) {
+            missing = true;
+        }
+        if missing {
+            stats.stall_starved += 1;
+        }
+        fwd
+    }
+
+    fn try_load_w(&mut self, fwd: &mut Forwarded, space_down: bool) -> bool {
+        if self.w_fifo.is_empty() || !space_down {
+            return false;
+        }
+        let t = self.w_fifo.pop().unwrap();
+        self.w_reg = t;
+        fwd.w = Some(t);
+        true
+    }
+
+    fn try_load_f(&mut self, fwd: &mut Forwarded, space_right: bool) -> bool {
+        if self.f_fifo.is_empty() || !space_right {
+            return false;
+        }
+        let t = self.f_fifo.pop().unwrap();
+        self.f_reg = t;
+        fwd.f = Some(t);
+        true
+    }
+
+    /// One MAC-clock step: consume one op from the WF-FIFO head.
+    pub fn mac_step(&mut self, ds_cycle: u64, stats: &mut TileStats) {
+        if self.compute_done {
+            return;
+        }
+        match self.wf_fifo.peek() {
+            Some(ops) => {
+                self.wf_fifo.pop();
+                if ops > 1 {
+                    // multi-op pair: re-queue the remainder (occupies the
+                    // head slot for another MAC cycle)
+                    // NOTE: pushed at tail; order within a PE's pair
+                    // stream is irrelevant to the accumulation result.
+                    self.wf_fifo.push(ops - 1);
+                }
+            }
+            None => {
+                if self.ds_done {
+                    self.compute_done = true;
+                    self.finish_ds_cycle = ds_cycle;
+                } else {
+                    stats.mac_idle += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::ecoo::EcooFlow;
+
+    fn pe_with_flows(w_data: &[i8], f_data: &[i8], depths: FifoDepths) -> Pe {
+        let wf = EcooFlow::encode_kernel(w_data);
+        let ff = EcooFlow::encode(f_data);
+        assert_eq!(wf.n_groups, ff.n_groups);
+        let mut pe = Pe::new(depths, wf.n_groups as u32);
+        for t in &wf.tokens {
+            pe.w_fifo.push(t.0);
+        }
+        for t in &ff.tokens {
+            pe.f_fifo.push(t.0);
+        }
+        pe
+    }
+
+    /// Run DS+MAC until done; returns (ds_cycles, mac_ops, pairs).
+    fn run(pe: &mut Pe, ratio: u64) -> (u64, u64, u64) {
+        let mut stats = TileStats::default();
+        let mut cycle = 0u64;
+        while !pe.compute_done && cycle < 100_000 {
+            pe.ds_step(true, true, &mut stats);
+            if cycle % ratio == ratio - 1 {
+                pe.mac_step(cycle, &mut stats);
+            }
+            cycle += 1;
+        }
+        assert!(pe.compute_done, "PE did not finish");
+        (cycle, pe.mac_ops, stats.pairs)
+    }
+
+    fn group(nz: &[(usize, i8)]) -> Vec<i8> {
+        let mut g = vec![0i8; 16];
+        for &(o, v) in nz {
+            g[o] = v;
+        }
+        g
+    }
+
+    #[test]
+    fn fully_aligned_group() {
+        // identical offsets => every nonzero is a must-MAC
+        let w = group(&[(1, 5), (4, 2), (9, -3)]);
+        let f = group(&[(1, 7), (4, 1), (9, 2)]);
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (_, mac_ops, pairs) = run(&mut pe, 1);
+        assert_eq!(pairs, 3);
+        assert_eq!(mac_ops, 3);
+    }
+
+    #[test]
+    fn disjoint_offsets_no_pairs() {
+        let w = group(&[(0, 5), (2, 2)]);
+        let f = group(&[(1, 7), (3, 1)]);
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (_, mac_ops, _) = run(&mut pe, 1);
+        assert_eq!(mac_ops, 0);
+    }
+
+    #[test]
+    fn paper_fig7_trace() {
+        // Fig. 5/7 toy: weight group has nonzeros at offsets {1,3},
+        // feature at {1,4}: single aligned pair at offset 1.
+        let w = group(&[(1, 10), (3, -2)]);
+        let f = group(&[(1, 3), (4, 8)]);
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (cycles, mac_ops, pairs) = run(&mut pe, 4);
+        assert_eq!(pairs, 1);
+        assert_eq!(mac_ops, 1);
+        // the paper's trace resolves this group in ~5 DS cycles
+        assert!(cycles <= 8, "took {cycles} cycles");
+    }
+
+    #[test]
+    fn empty_groups_barrier_only() {
+        let w = vec![0i8; 32]; // two all-zero groups
+        let f = vec![0i8; 32];
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (cycles, mac_ops, _) = run(&mut pe, 1);
+        assert_eq!(mac_ops, 0);
+        assert!(cycles <= 6, "placeholder groups took {cycles}");
+    }
+
+    #[test]
+    fn multi_group_sync() {
+        // group0: w={0}, f={15}; group1: w={3,7}, f={3,7}
+        let mut w = group(&[(0, 1)]);
+        w.extend(group(&[(3, 2), (7, 4)]));
+        let mut f = group(&[(15, 1)]);
+        f.extend(group(&[(3, 5), (7, 6)]));
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (_, mac_ops, _) = run(&mut pe, 1);
+        assert_eq!(mac_ops, 2);
+        assert_eq!(pe.groups_done, 2);
+    }
+
+    #[test]
+    fn dense_groups_match_naive_cost() {
+        // fully dense groups: every offset aligned => 16 pairs
+        let w: Vec<i8> = (1..=16).collect();
+        let f: Vec<i8> = (1..=16).map(|v| -v).collect();
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (_, mac_ops, _) = run(&mut pe, 1);
+        assert_eq!(mac_ops, 16);
+    }
+
+    #[test]
+    fn mixed_precision_16x16_yields_4_ops() {
+        use crate::compiler::precision::encode_mixed;
+        let mut wd = vec![0i16; 16];
+        wd[5] = 1000;
+        let mut fd = vec![0i16; 16];
+        fd[5] = -2000;
+        let wf = encode_mixed(&wd);
+        let ff = encode_mixed(&fd);
+        let mut pe = Pe::new(FifoDepths::infinite(), 1);
+        let mut toks = wf.tokens.clone();
+        if let Some(l) = toks.last_mut() {
+            *l = l.with_eok();
+        }
+        for t in &toks {
+            pe.w_fifo.push(t.0);
+        }
+        for t in &ff.tokens {
+            pe.f_fifo.push(t.0);
+        }
+        let (_, mac_ops, _) = run(&mut pe, 1);
+        assert_eq!(mac_ops, 4, "16x16 must book 4 partial products");
+    }
+
+    #[test]
+    fn mixed_precision_16x8_yields_2_ops() {
+        use crate::compiler::precision::encode_mixed;
+        let mut wd = vec![0i16; 16];
+        wd[5] = 1000; // 16-bit
+        let mut fd = vec![0i16; 16];
+        fd[5] = 100; // 8-bit
+        let wf = encode_mixed(&wd);
+        let ff = encode_mixed(&fd);
+        let mut pe = Pe::new(FifoDepths::infinite(), 1);
+        for t in &wf.tokens {
+            pe.w_fifo.push(t.0);
+        }
+        for t in &ff.tokens {
+            pe.f_fifo.push(t.0);
+        }
+        let (_, mac_ops, _) = run(&mut pe, 1);
+        assert_eq!(mac_ops, 2);
+    }
+
+    #[test]
+    fn sparse_group_faster_than_dense() {
+        let wd = group(&[(2, 1)]);
+        let fd = group(&[(9, 1)]);
+        let mut sparse = pe_with_flows(&wd, &fd, FifoDepths::infinite());
+        let (sparse_cycles, _, _) = run(&mut sparse, 4);
+
+        let w: Vec<i8> = (1..=16).collect();
+        let f: Vec<i8> = (1..=16).collect();
+        let mut dense = pe_with_flows(&w, &f, FifoDepths::infinite());
+        let (dense_cycles, _, _) = run(&mut dense, 4);
+        assert!(
+            sparse_cycles * 3 < dense_cycles,
+            "sparse {sparse_cycles} vs dense {dense_cycles}"
+        );
+    }
+
+    #[test]
+    fn forwards_every_token_exactly_once() {
+        let w = group(&[(1, 5), (4, 2), (9, -3)]);
+        let f = group(&[(0, 7), (4, 1), (11, 2)]);
+        let wf = EcooFlow::encode_kernel(&w);
+        let ff = EcooFlow::encode(&f);
+        let mut pe = Pe::new(FifoDepths::infinite(), 1);
+        for t in &wf.tokens {
+            pe.w_fifo.push(t.0);
+        }
+        for t in &ff.tokens {
+            pe.f_fifo.push(t.0);
+        }
+        let mut stats = TileStats::default();
+        let mut got_w = Vec::new();
+        let mut got_f = Vec::new();
+        for cycle in 0..1000 {
+            let fwd = pe.ds_step(true, true, &mut stats);
+            if let Some(t) = fwd.w {
+                got_w.push(t);
+            }
+            if let Some(t) = fwd.f {
+                got_f.push(t);
+            }
+            pe.mac_step(cycle, &mut stats);
+            if pe.compute_done {
+                break;
+            }
+        }
+        let want_w: Vec<u32> = wf.tokens.iter().map(|t| t.0).collect();
+        let want_f: Vec<u32> = ff.tokens.iter().map(|t| t.0).collect();
+        assert_eq!(got_w, want_w, "weight flow must pass through verbatim");
+        assert_eq!(got_f, want_f, "feature flow must pass through verbatim");
+    }
+
+    #[test]
+    fn bounded_wf_fifo_backpressures_ds() {
+        // tiny WF-FIFO and slow MAC: DS must stall on wf_full
+        let w: Vec<i8> = (1..=16).collect();
+        let f: Vec<i8> = (1..=16).collect();
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::new(16, 16, 1));
+        let mut stats = TileStats::default();
+        let mut cycle = 0u64;
+        while !pe.compute_done && cycle < 10_000 {
+            pe.ds_step(true, true, &mut stats);
+            if cycle % 8 == 7 {
+                pe.mac_step(cycle, &mut stats);
+            }
+            cycle += 1;
+        }
+        assert!(pe.compute_done);
+        assert!(stats.stall_wf_full > 0, "expected WF-full stalls");
+        assert_eq!(pe.mac_ops, 16);
+    }
+}

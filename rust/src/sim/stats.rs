@@ -1,0 +1,150 @@
+//! Event counters collected by the cycle simulator — the raw material for
+//! every metric the paper reports: cycles → speed (Figs. 10/11/14),
+//! component events → energy (Figs. 15/16, via [`crate::energy`]), buffer
+//! traffic → memory efficiency (Fig. 13).
+
+/// Counters for one simulated tile (one array pass).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TileStats {
+    /// DS-clock cycles until every PE finished and every result drained.
+    pub ds_cycles: u64,
+    /// 8-bit MAC operations actually performed (must-MACs incl. the
+    /// 16-bit partial-product expansion).
+    pub mac_ops: u64,
+    /// Aligned pairs emitted by DS components.
+    pub pairs: u64,
+    /// Dense MACs this tile covers (what the naive array would compute).
+    pub dense_macs: u64,
+    /// Tokens pushed between PEs (inter-PE FIFO traffic; energy events).
+    pub token_pushes: u64,
+    /// DS cycles lost because the WF-FIFO was full (MAC-bound stall).
+    pub stall_wf_full: u64,
+    /// DS cycles lost because a downstream W/F-FIFO was full.
+    pub stall_out_full: u64,
+    /// DS cycles a PE sat idle waiting for input tokens.
+    pub stall_starved: u64,
+    /// MAC-clock cycles the MAC units sat idle (utilization metric).
+    pub mac_idle: u64,
+    /// Feature-buffer group reads issued *without* CE reuse (every
+    /// reference loads from FB — the naive arrangement of Fig. 8 top).
+    pub fb_reads_no_ce: u64,
+    /// Feature-buffer group reads with CE reuse (distinct groups only;
+    /// repeats come from neighbouring CE FIFOs).
+    pub fb_reads_ce: u64,
+    /// CE-internal FIFO accesses that replaced FB reads.
+    pub ce_fifo_reads: u64,
+    /// Weight-buffer group reads.
+    pub wb_reads: u64,
+    /// Feature tokens injected (for DRAM/SRAM traffic accounting).
+    pub f_tokens: u64,
+    /// Weight tokens injected.
+    pub w_tokens: u64,
+    /// Result values drained (one per active PE).
+    pub results: u64,
+    /// DS cycles spent on group-barrier synchronisation.
+    pub barrier_cycles: u64,
+}
+
+impl TileStats {
+    pub fn merge(&mut self, o: &TileStats) {
+        self.ds_cycles += o.ds_cycles;
+        self.mac_ops += o.mac_ops;
+        self.pairs += o.pairs;
+        self.dense_macs += o.dense_macs;
+        self.token_pushes += o.token_pushes;
+        self.stall_wf_full += o.stall_wf_full;
+        self.stall_out_full += o.stall_out_full;
+        self.stall_starved += o.stall_starved;
+        self.mac_idle += o.mac_idle;
+        self.fb_reads_no_ce += o.fb_reads_no_ce;
+        self.fb_reads_ce += o.fb_reads_ce;
+        self.ce_fifo_reads += o.ce_fifo_reads;
+        self.wb_reads += o.wb_reads;
+        self.f_tokens += o.f_tokens;
+        self.w_tokens += o.w_tokens;
+        self.results += o.results;
+        self.barrier_cycles += o.barrier_cycles;
+    }
+
+    /// Scale all extrapolatable counters by `k` (tile-sampling
+    /// extrapolation: `k = n_tiles / n_sampled`). Cycle counts scale
+    /// linearly because tiles execute back-to-back on one array.
+    pub fn scaled(&self, k: f64) -> TileStats {
+        let s = |v: u64| (v as f64 * k).round() as u64;
+        TileStats {
+            ds_cycles: s(self.ds_cycles),
+            mac_ops: s(self.mac_ops),
+            pairs: s(self.pairs),
+            dense_macs: s(self.dense_macs),
+            token_pushes: s(self.token_pushes),
+            stall_wf_full: s(self.stall_wf_full),
+            stall_out_full: s(self.stall_out_full),
+            stall_starved: s(self.stall_starved),
+            mac_idle: s(self.mac_idle),
+            fb_reads_no_ce: s(self.fb_reads_no_ce),
+            fb_reads_ce: s(self.fb_reads_ce),
+            ce_fifo_reads: s(self.ce_fifo_reads),
+            wb_reads: s(self.wb_reads),
+            f_tokens: s(self.f_tokens),
+            w_tokens: s(self.w_tokens),
+            results: s(self.results),
+            barrier_cycles: s(self.barrier_cycles),
+        }
+    }
+
+    /// Sparse skip efficiency: fraction of dense MACs eliminated.
+    pub fn skip_ratio(&self) -> f64 {
+        if self.dense_macs == 0 {
+            return 0.0;
+        }
+        1.0 - self.mac_ops as f64 / self.dense_macs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TileStats {
+            ds_cycles: 10,
+            mac_ops: 5,
+            ..Default::default()
+        };
+        let b = TileStats {
+            ds_cycles: 7,
+            mac_ops: 2,
+            fb_reads_ce: 3,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.ds_cycles, 17);
+        assert_eq!(a.mac_ops, 7);
+        assert_eq!(a.fb_reads_ce, 3);
+    }
+
+    #[test]
+    fn scaled_multiplies() {
+        let a = TileStats {
+            ds_cycles: 10,
+            dense_macs: 100,
+            mac_ops: 40,
+            ..Default::default()
+        };
+        let b = a.scaled(2.5);
+        assert_eq!(b.ds_cycles, 25);
+        assert_eq!(b.dense_macs, 250);
+    }
+
+    #[test]
+    fn skip_ratio() {
+        let a = TileStats {
+            dense_macs: 100,
+            mac_ops: 25,
+            ..Default::default()
+        };
+        assert!((a.skip_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(TileStats::default().skip_ratio(), 0.0);
+    }
+}

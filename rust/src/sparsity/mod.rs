@@ -1,0 +1,159 @@
+//! Sparsity statistics — the Fig. 3 substrate.
+//!
+//! The paper samples 50 000 ImageNet images and plots, per network, the
+//! distribution of (a) feature density across all feature maps and (b)
+//! the must-be-performed-MAC ratio (both operands non-zero). We sample
+//! per-image densities from the calibrated model distributions (or from
+//! *real* PJRT-produced feature maps in real-feature mode) and build the
+//! same histograms.
+
+use crate::models::features::{image_densities, must_mac_ratio};
+use crate::models::{FeatureSubset, Model};
+
+/// A simple fixed-bin histogram over [0, 1].
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bins: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(n_bins: usize) -> Self {
+        Self {
+            bins: vec![0; n_bins],
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        let n = self.bins.len();
+        let idx = ((v.clamp(0.0, 1.0) * n as f64) as usize).min(n - 1);
+        self.bins[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Normalized bin heights (sums to 1).
+    pub fn density(&self) -> Vec<f64> {
+        self.bins
+            .iter()
+            .map(|&b| b as f64 / self.total.max(1) as f64)
+            .collect()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (i as f64 + 0.5) / n * b as f64)
+            .sum::<f64>()
+            / self.total.max(1) as f64
+    }
+
+    /// Standard deviation of the binned distribution.
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let n = self.bins.len() as f64;
+        let var = self
+            .bins
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| {
+                let x = (i as f64 + 0.5) / n;
+                (x - m) * (x - m) * b as f64
+            })
+            .sum::<f64>()
+            / self.total.max(1) as f64;
+        var.sqrt()
+    }
+}
+
+/// The Fig. 3 panels for one network.
+#[derive(Debug, Clone)]
+pub struct Fig3Stats {
+    pub model: String,
+    pub feature_density: Histogram,
+    pub must_mac: Histogram,
+}
+
+/// Sample `n_images` synthetic images' densities and build Fig. 3.
+pub fn fig3(model: &Model, n_images: usize, bins: usize, seed: u64) -> Fig3Stats {
+    let mut fd = Histogram::new(bins);
+    let mut mm = Histogram::new(bins);
+    for d in image_densities(model, FeatureSubset::Average, n_images, seed) {
+        fd.add(d);
+        mm.add(must_mac_ratio(d, model.weight_density));
+    }
+    Fig3Stats {
+        model: model.name.clone(),
+        feature_density: fd,
+        must_mac: mm,
+    }
+}
+
+/// Density of an f32 slice (shared helper for real-feature mode).
+pub fn density_of(data: &[f32]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    data.iter().filter(|v| **v != 0.0).count() as f64 / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::new(10);
+        h.add(0.05);
+        h.add(0.05);
+        h.add(0.95);
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 1);
+        assert_eq!(h.total, 3);
+        let d = h.density();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(4);
+        h.add(-0.5);
+        h.add(1.5);
+        assert_eq!(h.bins[0], 1);
+        assert_eq!(h.bins[3], 1);
+    }
+
+    #[test]
+    fn fig3_means_match_table2() {
+        for m in zoo::paper_models() {
+            let s = fig3(&m, 2000, 50, 3);
+            assert!(
+                (s.feature_density.mean() - m.feature_density).abs() < 0.03,
+                "{}: hist mean {} vs {}",
+                m.name,
+                s.feature_density.mean(),
+                m.feature_density
+            );
+            // must-MAC ratio concentrated below density (product with
+            // weight density < 1)
+            assert!(s.must_mac.mean() < s.feature_density.mean());
+        }
+    }
+
+    #[test]
+    fn alexnet_wider_than_vgg() {
+        // Fig. 3: AlexNet's density distribution is visibly wider.
+        let a = fig3(&zoo::alexnet(), 3000, 50, 1);
+        let v = fig3(&zoo::vgg16(), 3000, 50, 1);
+        assert!(a.feature_density.std() > v.feature_density.std());
+    }
+
+    #[test]
+    fn density_of_slice() {
+        assert_eq!(density_of(&[0.0, 1.0, 0.0, 2.0]), 0.5);
+        assert_eq!(density_of(&[]), 0.0);
+    }
+}

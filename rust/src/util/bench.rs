@@ -1,0 +1,169 @@
+//! Criterion-style measurement harness for `cargo bench` (offline build:
+//! no criterion crate). Warm-up + timed iterations, mean/stddev/min
+//! reporting, and a `black_box` to defeat constant folding.
+
+use std::time::{Duration, Instant};
+
+/// Opaque value barrier, re-exported for bench binaries.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<48} time: [{:>12} ± {:>10}]  min {:>12}  ({} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.std_dev),
+            fmt_dur(self.min),
+            self.iters
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A benchmark group, mirroring criterion's API surface loosely.
+pub struct Bench {
+    target_time: Duration,
+    warmup: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // honour the conventional quick-run env var
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bench {
+            target_time: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Measure `f`, which performs one logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // warm-up and calibration
+        let warm_start = Instant::now();
+        let mut calib_iters: u32 = 0;
+        while warm_start.elapsed() < self.warmup || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+            if calib_iters >= 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed() / calib_iters.max(1);
+        let iters = (self.target_time.as_nanos() / per_iter.as_nanos().max(1))
+            .clamp(5, 1_000_000) as u32;
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let total: Duration = samples.iter().sum();
+        let mean = total / iters;
+        let mean_ns = mean.as_nanos() as f64;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / iters as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean,
+            std_dev: Duration::from_nanos(var.sqrt() as u64),
+            min: *samples.iter().min().unwrap(),
+        };
+        m.report();
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Report a derived metric alongside the timings (e.g. speedup).
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<48} {value:>12.4} {unit}");
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new().with_target_time(Duration::from_millis(20));
+        let m = b
+            .bench("noop-ish", || {
+                let mut x = 0u64;
+                for i in 0..100 {
+                    x = x.wrapping_add(black_box(i));
+                }
+                black_box(x);
+            })
+            .clone();
+        assert!(m.iters >= 5);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

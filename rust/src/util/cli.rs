@@ -1,0 +1,136 @@
+//! Tiny CLI flag parser for the `s2engine` binary: positional
+//! subcommands plus `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` options (later occurrences win).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // --key value form (value must not itself be a flag)
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        args.options.insert(key.to_string(), v);
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Parse a `(w,f,wf)` FIFO depth triple like `4,4,4` or `inf`.
+    pub fn get_fifo(&self, key: &str, default: crate::config::FifoDepths) -> crate::config::FifoDepths {
+        match self.get(key) {
+            None => default,
+            Some("inf") | Some("infinite") => crate::config::FifoDepths::infinite(),
+            Some(s) => {
+                let parts: Vec<usize> =
+                    s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+                match parts.as_slice() {
+                    [d] => crate::config::FifoDepths::uniform(*d),
+                    [w, f, wf] => crate::config::FifoDepths::new(*w, *f, *wf),
+                    _ => default,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FifoDepths;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("simulate --model vgg16 --rows 32 --verbose");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert_eq!(a.get_usize("rows", 16), 32);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("cols", 16), 16);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("sweep --fifo=2,2,2 --ratio=8");
+        assert_eq!(a.get("fifo"), Some("2,2,2"));
+        assert_eq!(a.get_u64("ratio", 4), 8);
+    }
+
+    #[test]
+    fn fifo_triples() {
+        let a = parse("x --fifo 2,4,8 --f2 inf --f3 4");
+        assert_eq!(a.get_fifo("fifo", FifoDepths::default()), FifoDepths::new(2, 4, 8));
+        assert!(a.get_fifo("f2", FifoDepths::default()).is_infinite());
+        assert_eq!(a.get_fifo("f3", FifoDepths::default()), FifoDepths::uniform(4));
+        assert_eq!(a.get_fifo("missing", FifoDepths::uniform(4)), FifoDepths::uniform(4));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --quiet --model alexnet");
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get("model"), Some("alexnet"));
+    }
+}

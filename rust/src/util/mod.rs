@@ -1,0 +1,17 @@
+//! Self-contained substrates the reproduction would normally pull from
+//! crates.io but builds in-repo (the build environment is fully offline;
+//! DESIGN.md §6 items 12–13 and the bench harness live here).
+//!
+//! * [`rng`] — deterministic SplitMix64/xoshiro PRNG (replaces `rand`).
+//! * [`json`] — minimal JSON parser/printer for the artifact manifest and
+//!   result dumps (replaces `serde_json`).
+//! * [`pool`] — scoped-thread parallel map (replaces `rayon` for the
+//!   coordinator's tile fan-out).
+//! * [`cli`] — flag parsing for the `s2engine` binary (replaces `clap`).
+//! * [`bench`] — a criterion-style measurement harness for `cargo bench`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod rng;

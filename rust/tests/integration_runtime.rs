@@ -1,0 +1,175 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts (L1 Pallas
+//! kernel + L2 JAX model, lowered to HLO text by `make artifacts`) must
+//! load, execute, and agree with the Rust oracles.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built — simulation-only workflows don't require Python.
+
+use s2engine::models::pruning::pruned_weights;
+use s2engine::models::tensor::{conv2d_ref, FeatTensor};
+use s2engine::models::zoo;
+use s2engine::runtime::{default_artifact_dir, Runtime};
+use s2engine::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts exist but failed to load"))
+}
+
+#[test]
+fn gemm_artifact_matches_rust_oracle() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.verify_gemm(123).unwrap();
+    assert!(err < 1e-3, "max err {err}");
+}
+
+#[test]
+fn gemm_artifact_zero_inputs() {
+    let Some(rt) = runtime() else { return };
+    let g = rt.manifest.gemm.clone();
+    let x = vec![0.0f32; g.m * g.k];
+    let y = vec![0.0f32; g.k * g.n];
+    let out = rt.run_gemm(&x, &y).unwrap();
+    assert!(out.iter().all(|v| *v == 0.0));
+}
+
+#[test]
+fn gemm_artifact_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.run_gemm(&[1.0; 3], &[1.0; 3]).is_err());
+}
+
+#[test]
+fn relu_quant_artifact_behaviour() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.relu_quant.len;
+    let mut x = vec![0.0f32; n];
+    x[0] = -5.0; // ReLU clips
+    x[1] = 1e9; // saturates at 127
+    x[2] = rt.manifest.quant_scale * 10.0; // quantizes to 10
+    let q = rt.run_relu_quant(&x).unwrap();
+    assert_eq!(q[0], 0);
+    assert_eq!(q[1], 127);
+    assert_eq!(q[2], 10);
+    assert!(q.iter().all(|v| *v >= 0));
+}
+
+#[test]
+fn cnn_features_match_rust_conv_reference() {
+    // The full Pallas conv stack vs the plain-Rust conv oracle, layer 1.
+    let Some(rt) = runtime() else { return };
+    let c = rt.manifest.cnn.clone();
+    let model = zoo::s2net();
+    let seed = 9u64;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut image = FeatTensor::zeros(c.batch, c.img_hw, c.img_hw, c.img_c);
+    for v in image.data.iter_mut() {
+        *v = rng.gen_range_f32(-1.0, 1.0);
+    }
+    let weights: Vec<_> = c
+        .layers
+        .iter()
+        .zip(&model.layers)
+        .map(|(spec, l)| {
+            let mut padded = l.clone();
+            padded.cin = spec.cin_padded;
+            pruned_weights(&padded, model.weight_density, seed)
+        })
+        .collect();
+    let feats = rt.run_cnn_features(&image, &weights).unwrap();
+
+    // layer-1 oracle: pad image channels to cin_padded, conv, relu
+    let spec = &c.layers[0];
+    let mut padded_img =
+        FeatTensor::zeros(c.batch, c.img_hw, c.img_hw, spec.cin_padded);
+    for n in 0..c.batch {
+        for y in 0..c.img_hw {
+            for x in 0..c.img_hw {
+                for ch in 0..c.img_c {
+                    let v = image.get(n, y, x, ch);
+                    padded_img.set(n, y, x, ch, v);
+                }
+            }
+        }
+    }
+    let want = conv2d_ref(&padded_img, &weights[0], spec.stride, spec.pad, true);
+    assert_eq!(want.data.len(), feats[0].data.len());
+    let mut max_err = 0.0f32;
+    for (a, b) in want.data.iter().zip(&feats[0].data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-3, "conv1 max err {max_err}");
+}
+
+#[test]
+fn real_features_have_plausible_sparsity() {
+    let Some(rt) = runtime() else { return };
+    let c = rt.manifest.cnn.clone();
+    let model = zoo::s2net();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut image = FeatTensor::zeros(c.batch, c.img_hw, c.img_hw, c.img_c);
+    for v in image.data.iter_mut() {
+        *v = rng.gen_range_f32(-1.0, 1.0);
+    }
+    let weights: Vec<_> = c
+        .layers
+        .iter()
+        .zip(&model.layers)
+        .map(|(spec, l)| {
+            let mut padded = l.clone();
+            padded.cin = spec.cin_padded;
+            pruned_weights(&padded, model.weight_density, 7)
+        })
+        .collect();
+    let feats = rt.run_cnn_features(&image, &weights).unwrap();
+    for (f, spec) in feats.iter().zip(&c.layers) {
+        let d = f.density();
+        assert!(
+            d > 0.2 && d < 0.8,
+            "{}: implausible ReLU density {d}",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn end_to_end_real_feature_simulation_speedup() {
+    // Condensed version of examples/end_to_end.rs as a regression test.
+    use s2engine::config::{ArrayConfig, SimConfig};
+    use s2engine::coordinator::Coordinator;
+
+    let Some(rt) = runtime() else { return };
+    let c = rt.manifest.cnn.clone();
+    let model = zoo::s2net();
+    let mut rng = Rng::seed_from_u64(21);
+    let mut image = FeatTensor::zeros(c.batch, c.img_hw, c.img_hw, c.img_c);
+    for v in image.data.iter_mut() {
+        *v = rng.gen_range_f32(-1.0, 1.0);
+    }
+    let weights: Vec<_> = c
+        .layers
+        .iter()
+        .zip(&model.layers)
+        .map(|(spec, l)| {
+            let mut padded = l.clone();
+            padded.cin = spec.cin_padded;
+            pruned_weights(&padded, model.weight_density, 21)
+        })
+        .collect();
+    let feats = rt.run_cnn_features(&image, &weights).unwrap();
+
+    let coord = Coordinator::new(
+        SimConfig::new(ArrayConfig::new(8, 8)).with_samples(4),
+    );
+    // simulate conv2 on its real input (conv1's output)
+    let spec = &c.layers[1];
+    let mut layer = model.layers[1].clone();
+    layer.cin = spec.cin_padded;
+    let r = coord.simulate_layer_real(&layer, &feats[0], &weights[1], 0, 1.0 / 16.0);
+    assert!(r.speedup() > 1.2, "real-feature speedup {}", r.speedup());
+    assert!(r.s2.mac_ops < r.naive.mac_ops / 2);
+}

@@ -1,0 +1,231 @@
+//! Property-based invariants across the compiler + simulator, driven by
+//! a seeded random-case sweep (the environment has no proptest crate; the
+//! in-repo RNG provides the same deterministic shrink-free sweeps).
+//!
+//! These are the L3 coordinator/compiler invariants the paper's
+//! architecture rests on:
+//!
+//!  * ECOO compression is lossless and group-synchronized;
+//!  * the DS merge finds exactly the must-be-performed MAC set —
+//!    `sim.mac_ops == tile.must_macs()` for every density, pattern,
+//!    FIFO depth, clock ratio and mixed-precision ratio;
+//!  * backpressure never deadlocks or changes results, only timing;
+//!  * the CE accounting identity `fb_ce + ce_fifo == fb_no_ce` holds.
+
+use s2engine::compiler::ecoo::EcooFlow;
+use s2engine::compiler::mapping::{build_tile, LayerMapping, TileSource};
+use s2engine::compiler::precision::{decode_mixed, encode_mixed};
+use s2engine::config::{ArrayConfig, FifoDepths};
+use s2engine::models::LayerDesc;
+use s2engine::sim::simulate_tile;
+use s2engine::util::rng::Rng;
+use s2engine::GROUP_LEN;
+
+const CASES: u64 = 40;
+
+fn rand_dense(rng: &mut Rng, groups: usize, density: f64) -> Vec<i8> {
+    (0..groups * GROUP_LEN)
+        .map(|_| {
+            if rng.gen_f64() < density {
+                let v = rng.gen_range_u64(1, 127) as i8;
+                if rng.gen_bool() {
+                    v
+                } else {
+                    -v
+                }
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_ecoo_roundtrip_lossless() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case);
+        let groups = rng.gen_range_u64(1, 40) as usize;
+        let density = rng.gen_f64();
+        let data = rand_dense(&mut rng, groups, density);
+        let flow = EcooFlow::encode(&data);
+        assert_eq!(flow.decode(), data, "case {case}");
+        assert_eq!(flow.n_groups, groups);
+        // exactly one EOG per group
+        assert_eq!(
+            flow.tokens.iter().filter(|t| t.eog()).count(),
+            groups,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_ecoo_token_count_bounds() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xbeef);
+        let groups = rng.gen_range_u64(1, 30) as usize;
+        let density = rng.gen_f64();
+        let data = rand_dense(&mut rng, groups, density);
+        let nnz = data.iter().filter(|v| **v != 0).count();
+        let flow = EcooFlow::encode(&data);
+        // at least one token per group (placeholder), at most nnz + empty groups
+        assert!(flow.tokens.len() >= groups.min(nnz.max(groups)));
+        assert!(flow.tokens.len() <= nnz + groups);
+        assert_eq!(flow.nnz(), nnz);
+    }
+}
+
+#[test]
+fn prop_mixed_precision_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x16);
+        let groups = rng.gen_range_u64(1, 16) as usize;
+        let data: Vec<i16> = (0..groups * GROUP_LEN)
+            .map(|_| {
+                if rng.gen_f64() < 0.4 {
+                    let mag = if rng.gen_f64() < 0.3 {
+                        rng.gen_range_u64(128, 32000) as i16 // 16-bit outlier
+                    } else {
+                        rng.gen_range_u64(1, 127) as i16
+                    };
+                    if rng.gen_bool() {
+                        mag
+                    } else {
+                        -mag
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let flow = encode_mixed(&data);
+        assert_eq!(decode_mixed(&flow), data, "case {case}");
+    }
+}
+
+fn random_layer(rng: &mut Rng) -> LayerDesc {
+    let k = [1usize, 3, 5][rng.gen_below(3) as usize];
+    let cin = [8usize, 16, 32, 48][rng.gen_below(4) as usize];
+    let cout = rng.gen_range_u64(4, 40) as usize;
+    let hw = rng.gen_range_u64(k as u64 + 1, 14) as usize;
+    let stride = 1 + rng.gen_below(2) as usize;
+    LayerDesc::new("prop", hw, hw, cin, k, k, cout, stride, k / 2)
+}
+
+#[test]
+fn prop_sim_macs_equal_must_macs() {
+    // The architecture's core claim: dynamic selection performs exactly
+    // the aligned-pair MACs, independent of every timing knob.
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x51a);
+        let layer = random_layer(&mut rng);
+        let rows = 1 + rng.gen_below(8) as usize;
+        let cols = 1 + rng.gen_below(8) as usize;
+        let mapping = LayerMapping::new(&layer, rows, cols);
+        let src = TileSource::Synthetic {
+            feature_density: rng.gen_f64(),
+            weight_density: rng.gen_f64(),
+            clustered: rng.gen_bool(),
+        };
+        let ratio16 = if rng.gen_bool() { rng.gen_f64() * 0.2 } else { 0.0 };
+        let idx = rng.gen_below(mapping.n_tiles() as u64) as usize;
+        let tile = build_tile(&mapping, idx, &src, ratio16, case);
+        let depth = [1usize, 2, 4, 8][rng.gen_below(4) as usize];
+        let ratio = [1u32, 2, 4, 8][rng.gen_below(4) as usize];
+        let cfg = ArrayConfig::new(rows.max(1), cols.max(1))
+            .with_fifo(FifoDepths::uniform(depth))
+            .with_ratio(ratio);
+        let stats = simulate_tile(&tile, &cfg, true);
+        assert_eq!(
+            stats.mac_ops,
+            tile.must_macs(),
+            "case {case}: layer {layer:?} depth {depth} ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn prop_fifo_depth_only_affects_timing() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::seed_from_u64(case ^ 0xf1f0);
+        let layer = random_layer(&mut rng);
+        let mapping = LayerMapping::new(&layer, 4, 4);
+        let src = TileSource::Synthetic {
+            feature_density: 0.2 + rng.gen_f64() * 0.6,
+            weight_density: 0.2 + rng.gen_f64() * 0.6,
+            clustered: false,
+        };
+        let tile = build_tile(&mapping, 0, &src, 0.0, case);
+        let mut prev_cycles = u64::MAX;
+        let mut macs = None;
+        for depth in [1usize, 2, 4, 16] {
+            let cfg = ArrayConfig::new(4, 4).with_fifo(FifoDepths::uniform(depth));
+            let s = simulate_tile(&tile, &cfg, true);
+            match macs {
+                None => macs = Some(s.mac_ops),
+                Some(m) => assert_eq!(m, s.mac_ops, "case {case} depth {depth}"),
+            }
+            assert!(
+                s.ds_cycles <= prev_cycles,
+                "case {case}: deeper FIFO slower ({} > {prev_cycles})",
+                s.ds_cycles
+            );
+            prev_cycles = s.ds_cycles;
+        }
+    }
+}
+
+#[test]
+fn prop_ce_accounting_identity() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0xce);
+        let layer = random_layer(&mut rng);
+        let mapping = LayerMapping::new(&layer, 8, 4);
+        let src = TileSource::Synthetic {
+            feature_density: rng.gen_f64().max(0.05),
+            weight_density: rng.gen_f64().max(0.05),
+            clustered: rng.gen_bool(),
+        };
+        let idx = rng.gen_below(mapping.n_tiles() as u64) as usize;
+        let tile = build_tile(&mapping, idx, &src, 0.0, case);
+        let s = simulate_tile(&tile, &ArrayConfig::new(8, 4), true);
+        assert_eq!(
+            s.fb_reads_ce + s.ce_fifo_reads,
+            s.fb_reads_no_ce,
+            "case {case}"
+        );
+        assert!(s.fb_reads_ce <= s.fb_reads_no_ce);
+        // with CE disabled, no CE fifo reads and no reduction
+        let s2 = simulate_tile(&tile, &ArrayConfig::new(8, 4), false);
+        assert_eq!(s2.ce_fifo_reads, 0);
+        assert_eq!(s2.fb_reads_ce, s2.fb_reads_no_ce);
+    }
+}
+
+#[test]
+fn prop_denser_never_fewer_macs() {
+    for case in 0..CASES / 2 {
+        let mut rng = Rng::seed_from_u64(case ^ 0xdede);
+        let layer = random_layer(&mut rng);
+        let mapping = LayerMapping::new(&layer, 4, 4);
+        let lo_d = rng.gen_f64() * 0.4;
+        let hi_d = lo_d + 0.3;
+        let mk = |d: f64| {
+            let src = TileSource::Synthetic {
+                feature_density: d,
+                weight_density: d,
+                clustered: false,
+            };
+            let tile = build_tile(&mapping, 0, &src, 0.0, 99);
+            simulate_tile(&tile, &ArrayConfig::new(4, 4), true)
+        };
+        let lo = mk(lo_d);
+        let hi = mk(hi_d);
+        assert!(
+            hi.mac_ops >= lo.mac_ops,
+            "case {case}: {} < {}",
+            hi.mac_ops,
+            lo.mac_ops
+        );
+    }
+}
