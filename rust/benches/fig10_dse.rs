@@ -35,4 +35,11 @@ fn main() {
             black_box(coord.simulate_model(&model, 0));
         });
     }
+
+    let (hits, misses) = s2engine::coordinator::memo::TileCache::global().counters();
+    b.metric("fig10/tile-cache hits", hits as f64, "lookups");
+    b.metric("fig10/tile-cache misses", misses as f64, "lookups");
+    if let Err(e) = b.write_json("BENCH_fig10.json") {
+        eprintln!("failed to write BENCH_fig10.json: {e}");
+    }
 }

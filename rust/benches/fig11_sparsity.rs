@@ -33,4 +33,8 @@ fn main() {
             black_box(coord.simulate_model_synthetic(&model, density, density));
         });
     }
+
+    if let Err(e) = b.write_json("BENCH_fig11.json") {
+        eprintln!("failed to write BENCH_fig11.json: {e}");
+    }
 }

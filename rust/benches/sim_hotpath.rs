@@ -3,12 +3,17 @@
 //! Tracks PE-cycle-step throughput of `simulate_tile` — the quantity the
 //! performance pass optimizes — plus the compiler's stream/ECOO encode
 //! rate. Not a paper figure; this is the engineering-quality metric.
+//!
+//! Emits `BENCH_sim.json` (mean/p50 per bench + derived metrics via
+//! `util::bench`) so the perf trajectory is tracked across PRs; the
+//! reference sweep engine is measured alongside the event-driven one so
+//! the speedup ratio is recorded too.
 
 use s2engine::compiler::ecoo::EcooFlow;
 use s2engine::compiler::mapping::{build_tile, LayerMapping, TileSource};
 use s2engine::config::{ArrayConfig, FifoDepths};
 use s2engine::models::LayerDesc;
-use s2engine::sim::simulate_tile;
+use s2engine::sim::{simulate_tile, simulate_tile_reference};
 use s2engine::util::bench::{black_box, Bench};
 use s2engine::util::rng::Rng;
 
@@ -32,8 +37,7 @@ fn main() {
         })
         .clone();
     let elems_per_sec = 65536.0 / m.mean.as_secs_f64();
-    let mut b2 = Bench::new();
-    b2.metric("ecoo/encode throughput", elems_per_sec / 1e6, "Melem/s");
+    b.metric("ecoo/encode throughput", elems_per_sec / 1e6, "Melem/s");
 
     // --- tile simulation throughput at paper densities
     let layer = LayerDesc::new("vggish", 28, 28, 256, 3, 3, 256, 1, 1);
@@ -53,10 +57,24 @@ fn main() {
             .clone();
         let stats = simulate_tile(&tile, &cfg, true);
         let pe_steps = stats.ds_cycles as f64 * 256.0;
-        b2.metric(
+        b.metric(
             &format!("sim/PE-cycle-steps per second (depth{depth})"),
             pe_steps / m.mean.as_secs_f64() / 1e6,
             "M steps/s",
+        );
+        // the retained full-sweep engine, as the speedup baseline
+        let mr = b
+            .bench(
+                &format!("sim/tile 16x16 depth{depth} (reference sweep)"),
+                || {
+                    black_box(simulate_tile_reference(black_box(&tile), &cfg, true));
+                },
+            )
+            .clone();
+        b.metric(
+            &format!("sim/event-vs-sweep speedup (depth{depth})"),
+            mr.mean.as_secs_f64() / m.mean.as_secs_f64(),
+            "x",
         );
     }
 
@@ -70,7 +88,7 @@ fn main() {
         })
         .clone();
     let stats = simulate_tile(&tile32, &cfg32, true);
-    b2.metric(
+    b.metric(
         "sim/PE-cycle-steps per second (32x32)",
         stats.ds_cycles as f64 * 1024.0 / m.mean.as_secs_f64() / 1e6,
         "M steps/s",
@@ -80,4 +98,8 @@ fn main() {
     b.bench("compiler/build_tile 16x16 (synthetic)", || {
         black_box(build_tile(&mapping, 1, &src, 0.0, 7));
     });
+
+    if let Err(e) = b.write_json("BENCH_sim.json") {
+        eprintln!("failed to write BENCH_sim.json: {e}");
+    }
 }

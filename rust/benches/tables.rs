@@ -26,4 +26,8 @@ fn main() {
     b.bench("fig3/density-histograms", || {
         black_box(fig3(Effort::QUICK, seed));
     });
+
+    if let Err(e) = b.write_json("BENCH_tables.json") {
+        eprintln!("failed to write BENCH_tables.json: {e}");
+    }
 }

@@ -155,6 +155,12 @@ pub struct SimConfig {
     pub ratio16: f64,
     /// Worker threads for the coordinator (0 = all cores).
     pub workers: usize,
+    /// Memoize synthetic tile simulations in the process-wide stats cache
+    /// ([`crate::coordinator::memo`]): sweeps that revisit identical
+    /// (layer-shape, densities, seed, array-config) tiles become lookups.
+    /// Results are bit-identical either way; disable to force fresh
+    /// simulation (e.g. when benchmarking the simulator itself).
+    pub memoize: bool,
 }
 
 impl SimConfig {
@@ -167,6 +173,7 @@ impl SimConfig {
             seed: 0x5eed_5eed,
             ratio16: 0.0,
             workers: 0,
+            memoize: true,
         }
     }
 
@@ -177,6 +184,11 @@ impl SimConfig {
 
     pub fn with_samples(mut self, n: usize) -> Self {
         self.tile_samples = n;
+        self
+    }
+
+    pub fn with_memoize(mut self, on: bool) -> Self {
+        self.memoize = on;
         self
     }
 }

@@ -1,0 +1,237 @@
+//! Coordinator-level tile memoization (EXPERIMENTS.md §Perf).
+//!
+//! The report sweeps (`fig10_dse`, `fig11_sparsity`, `fig14_speedup`, the
+//! CLI `sweep` subcommand) re-simulate byte-identical tiles over and over:
+//! synthetic tile content is a pure function of
+//! `(layer geometry, tile index, densities, pattern, ratio16, seed)` and
+//! its [`TileStats`] additionally depend only on
+//! `(array geometry, FIFO depths, DS ratio, CE flag)`. A process-wide
+//! sharded cache keyed on exactly that tuple turns every repeat into a
+//! lookup. Layer *names* are deliberately excluded from the key, so
+//! same-shaped layers (ubiquitous in VGG/ResNet) share entries too.
+//!
+//! Real-tensor tiles (PJRT feature mode) are never memoized — their
+//! content is not captured by a small key.
+//!
+//! Hits serve a stored [`TileStats`] verbatim; because the key covers
+//! every input of `build_tile` + `simulate_tile`, cached results are
+//! bit-identical to a fresh simulation (asserted by the coordinator
+//! tests). The cache is bounded (`N_SHARDS × SHARD_CAP` entries); beyond
+//! the cap new entries are simply not stored.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::config::SimConfig;
+use crate::models::LayerDesc;
+use crate::sim::TileStats;
+
+/// Everything that determines a synthetic tile's `TileStats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileKey {
+    // layer geometry (name excluded: identical shapes share entries)
+    in_h: u32,
+    in_w: u32,
+    cin: u32,
+    kh: u32,
+    kw: u32,
+    cout: u32,
+    stride: u32,
+    pad: u32,
+    // array / mapping configuration
+    rows: u32,
+    cols: u32,
+    fifo_w: u64,
+    fifo_f: u64,
+    fifo_wf: u64,
+    ds_ratio: u32,
+    ce_enabled: bool,
+    // tile + workload identity
+    tile_idx: u64,
+    fd_bits: u64,
+    wd_bits: u64,
+    clustered: bool,
+    ratio16_bits: u64,
+    seed: u64,
+}
+
+impl TileKey {
+    /// Key for a synthetic-source tile under `cfg`.
+    pub fn synthetic(
+        layer: &LayerDesc,
+        cfg: &SimConfig,
+        tile_idx: usize,
+        feature_density: f64,
+        weight_density: f64,
+        clustered: bool,
+    ) -> TileKey {
+        TileKey {
+            in_h: layer.in_h as u32,
+            in_w: layer.in_w as u32,
+            cin: layer.cin as u32,
+            kh: layer.kh as u32,
+            kw: layer.kw as u32,
+            cout: layer.cout as u32,
+            stride: layer.stride as u32,
+            pad: layer.pad as u32,
+            rows: cfg.array.rows as u32,
+            cols: cfg.array.cols as u32,
+            fifo_w: cfg.array.fifo.w as u64,
+            fifo_f: cfg.array.fifo.f as u64,
+            fifo_wf: cfg.array.fifo.wf as u64,
+            ds_ratio: cfg.array.ds_ratio,
+            ce_enabled: cfg.ce_enabled,
+            tile_idx: tile_idx as u64,
+            fd_bits: feature_density.to_bits(),
+            wd_bits: weight_density.to_bits(),
+            clustered,
+            ratio16_bits: cfg.ratio16.to_bits(),
+            seed: cfg.seed,
+        }
+    }
+}
+
+const N_SHARDS: usize = 16;
+/// Per-shard entry cap (~300 B/entry worst case ⇒ ≲80 MB total).
+const SHARD_CAP: usize = 1 << 14;
+
+/// Sharded, process-wide stats cache.
+pub struct TileCache {
+    shards: Vec<Mutex<HashMap<TileKey, TileStats>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TileCache {
+    fn new() -> Self {
+        TileCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache instance (shared by every Coordinator, so
+    /// sweeps across configurations reuse each other's work).
+    pub fn global() -> &'static TileCache {
+        static CACHE: OnceLock<TileCache> = OnceLock::new();
+        CACHE.get_or_init(TileCache::new)
+    }
+
+    fn shard(&self, key: &TileKey) -> &Mutex<HashMap<TileKey, TileStats>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % N_SHARDS]
+    }
+
+    pub fn get(&self, key: &TileKey) -> Option<TileStats> {
+        let hit = self.shard(key).lock().unwrap().get(key).copied();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    pub fn insert(&self, key: TileKey, stats: TileStats) {
+        let mut shard = self.shard(&key).lock().unwrap();
+        if shard.len() < SHARD_CAP {
+            shard.insert(key, stats);
+        }
+    }
+
+    /// `(hits, misses)` since process start.
+    pub fn counters(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries (counters are kept: they describe lifetime
+    /// behaviour, not contents).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+/// Look up `key`, simulating and caching on miss.
+pub fn get_or_simulate<F: FnOnce() -> TileStats>(key: TileKey, sim: F) -> TileStats {
+    let cache = TileCache::global();
+    if let Some(s) = cache.get(&key) {
+        return s;
+    }
+    let s = sim();
+    cache.insert(key, s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(seed: u64) -> TileKey {
+        let layer = LayerDesc::new("k", 8, 8, 32, 3, 3, 16, 1, 1);
+        let cfg = SimConfig::new(crate::config::ArrayConfig::new(8, 8)).with_seed(seed);
+        TileKey::synthetic(&layer, &cfg, 3, 0.35, 0.35, true)
+    }
+
+    #[test]
+    fn key_ignores_layer_name_but_not_geometry() {
+        let a = LayerDesc::new("conv3_1", 28, 28, 256, 3, 3, 256, 1, 1);
+        let b = LayerDesc::new("conv3_2", 28, 28, 256, 3, 3, 256, 1, 1);
+        let c = LayerDesc::new("conv4_1", 14, 14, 512, 3, 3, 512, 1, 1);
+        let cfg = SimConfig::new(crate::config::ArrayConfig::new(16, 16));
+        let ka = TileKey::synthetic(&a, &cfg, 0, 0.4, 0.3, true);
+        let kb = TileKey::synthetic(&b, &cfg, 0, 0.4, 0.3, true);
+        let kc = TileKey::synthetic(&c, &cfg, 0, 0.4, 0.3, true);
+        assert_eq!(ka, kb, "same shape must share a cache entry");
+        assert_ne!(ka, kc);
+    }
+
+    #[test]
+    fn key_separates_configs_and_workloads() {
+        let layer = LayerDesc::new("l", 8, 8, 32, 3, 3, 16, 1, 1);
+        let base = SimConfig::new(crate::config::ArrayConfig::new(8, 8));
+        let k0 = TileKey::synthetic(&layer, &base, 0, 0.5, 0.5, false);
+        let mut deeper = base.clone();
+        deeper.array = deeper.array.with_fifo(crate::config::FifoDepths::uniform(8));
+        assert_ne!(k0, TileKey::synthetic(&layer, &deeper, 0, 0.5, 0.5, false));
+        let mut no_ce = base.clone();
+        no_ce.ce_enabled = false;
+        assert_ne!(k0, TileKey::synthetic(&layer, &no_ce, 0, 0.5, 0.5, false));
+        assert_ne!(k0, TileKey::synthetic(&layer, &base, 1, 0.5, 0.5, false));
+        assert_ne!(k0, TileKey::synthetic(&layer, &base, 0, 0.5001, 0.5, false));
+        assert_ne!(k0, TileKey::synthetic(&layer, &base, 0, 0.5, 0.5, true));
+    }
+
+    #[test]
+    fn get_or_simulate_caches_and_serves() {
+        let k = key(0xfeed_0001);
+        let cache = TileCache::global();
+        let (_, m0) = cache.counters();
+        let mut stats = TileStats::default();
+        stats.ds_cycles = 1234;
+        stats.mac_ops = 99;
+        let first = get_or_simulate(k, || stats);
+        assert_eq!(first, stats);
+        let second = get_or_simulate(k, || panic!("must be served from cache"));
+        assert_eq!(second, stats);
+        let (_, m1) = cache.counters();
+        assert!(m1 > m0, "first lookup must count as a miss");
+    }
+}

@@ -7,6 +7,7 @@
 //! [`ModelResult`]. Jobs are independent, so they run on a scoped-thread worker
 //! pool sized by [`crate::config::SimConfig::workers`].
 
+pub mod memo;
 pub mod result;
 
 pub use result::{LayerResult, ModelResult};
@@ -17,7 +18,7 @@ use crate::config::SimConfig;
 use crate::energy;
 use crate::models::tensor::{FeatTensor, WeightTensor};
 use crate::models::{FeatureSubset, LayerDesc, Model};
-use crate::sim::{simulate_tile, TileStats};
+use crate::sim::{simulate_tile_with_scratch, SimScratch, TileStats};
 
 /// Drives simulations under a fixed configuration.
 #[derive(Debug, Clone)]
@@ -47,10 +48,40 @@ impl Coordinator {
             clustered,
         };
 
-        let per_tile = crate::util::pool::par_map(&sample, self.cfg.workers, |&idx| {
-            let tile = build_tile(&mapping, idx, &source, self.cfg.ratio16, self.cfg.seed);
-            simulate_tile(&tile, &self.cfg.array, self.cfg.ce_enabled)
-        });
+        // Sweeps re-simulate identical (layer-shape, source, seed, cfg)
+        // tiles; the memo cache answers repeats without even rebuilding
+        // the tile. Each worker carries one reusable SimScratch arena.
+        let memoize = self.cfg.memoize;
+        let per_tile = crate::util::pool::par_map_with(
+            &sample,
+            self.cfg.workers,
+            SimScratch::new,
+            |scratch, &idx| {
+                let run = |scratch: &mut SimScratch| {
+                    let tile =
+                        build_tile(&mapping, idx, &source, self.cfg.ratio16, self.cfg.seed);
+                    simulate_tile_with_scratch(
+                        &tile,
+                        &self.cfg.array,
+                        self.cfg.ce_enabled,
+                        scratch,
+                    )
+                };
+                if memoize {
+                    let key = memo::TileKey::synthetic(
+                        layer,
+                        &self.cfg,
+                        idx,
+                        feature_density,
+                        weight_density,
+                        clustered,
+                    );
+                    memo::get_or_simulate(key, || run(scratch))
+                } else {
+                    run(scratch)
+                }
+            },
+        );
         let mut stats = TileStats::default();
         for s in &per_tile {
             stats.merge(s);
@@ -90,10 +121,23 @@ impl Coordinator {
             scale,
         };
 
-        let per_tile = crate::util::pool::par_map(&sample, self.cfg.workers, |&idx| {
-            let tile = build_tile(&mapping, idx, &source, self.cfg.ratio16, self.cfg.seed);
-            simulate_tile(&tile, &self.cfg.array, self.cfg.ce_enabled)
-        });
+        // Real-tensor tiles are not memoizable (content lives in the
+        // tensors, not in a small key), but still reuse scratch arenas.
+        let per_tile = crate::util::pool::par_map_with(
+            &sample,
+            self.cfg.workers,
+            SimScratch::new,
+            |scratch, &idx| {
+                let tile =
+                    build_tile(&mapping, idx, &source, self.cfg.ratio16, self.cfg.seed);
+                simulate_tile_with_scratch(
+                    &tile,
+                    &self.cfg.array,
+                    self.cfg.ce_enabled,
+                    scratch,
+                )
+            },
+        );
         let mut stats = TileStats::default();
         for s in &per_tile {
             stats.merge(s);
@@ -278,6 +322,47 @@ mod tests {
             min < avg * 1.25 && max > avg * 0.8,
             "distribution {min}..{max} should bracket avg {avg}"
         );
+    }
+
+    #[test]
+    fn memoized_results_bit_identical_and_hit_cache() {
+        let m = zoo::alexnet();
+        let layer = &m.layers[2];
+        let mk = |memoize: bool, seed: u64| {
+            let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+                .with_samples(3)
+                .with_seed(seed)
+                .with_memoize(memoize);
+            Coordinator::new(cfg)
+        };
+        // distinctive seed so this test's entries are its own
+        let seed = 0xc0de_cafe_0001;
+        let cold = mk(false, seed).simulate_layer(layer, 0.42, 0.37, true);
+        let (h0, _) = memo::TileCache::global().counters();
+        let warm1 = mk(true, seed).simulate_layer(layer, 0.42, 0.37, true);
+        let warm2 = mk(true, seed).simulate_layer(layer, 0.42, 0.37, true);
+        assert_eq!(cold.s2, warm1.s2, "memoization must not change results");
+        assert_eq!(warm1.s2, warm2.s2);
+        let (h1, _) = memo::TileCache::global().counters();
+        assert!(h1 > h0, "second memoized run must hit the cache");
+    }
+
+    #[test]
+    fn same_shape_layers_share_cache_entries() {
+        // Two layers identical in geometry but differently named must
+        // produce identical results (and the second one via cache hits).
+        let a = crate::models::LayerDesc::new("x1", 14, 14, 64, 3, 3, 32, 1, 1);
+        let b = crate::models::LayerDesc::new("totally-different", 14, 14, 64, 3, 3, 32, 1, 1);
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+            .with_samples(2)
+            .with_seed(0xc0de_cafe_0002);
+        let c = Coordinator::new(cfg);
+        let ra = c.simulate_layer(&a, 0.5, 0.5, false);
+        let (h0, _) = memo::TileCache::global().counters();
+        let rb = c.simulate_layer(&b, 0.5, 0.5, false);
+        let (h1, _) = memo::TileCache::global().counters();
+        assert_eq!(ra.s2, rb.s2);
+        assert!(h1 >= h0 + 2, "shape-sharing layers must hit the cache");
     }
 
     #[test]

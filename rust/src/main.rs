@@ -4,7 +4,7 @@
 //! s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
 //!                   --ratio 4 --samples 16 --subset avg|max|min
 //!                   --no-ce --ratio16 0.035 --seed N --workers N
-//!                   --json out.json]
+//!                   --no-memo --json out.json]
 //! s2engine report  table1|table2|table3|table4|table5|fig3|fits [--effort ...]
 //! s2engine sweep   fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17
 //!                   [--effort ...] [--scales 16,32]
@@ -46,6 +46,7 @@ fn sim_config(args: &Args) -> SimConfig {
     cfg.ce_enabled = !args.has_flag("no-ce");
     cfg.ratio16 = args.get_f64("ratio16", 0.0);
     cfg.workers = args.get_usize("workers", 0);
+    cfg.memoize = !args.has_flag("no-memo");
     cfg
 }
 

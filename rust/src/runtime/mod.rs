@@ -22,6 +22,12 @@ use anyhow::{anyhow, Context, Result};
 use crate::models::tensor::{FeatTensor, WeightTensor};
 
 /// A loaded artifact bundle bound to a PJRT CPU client.
+///
+/// Requires the `pjrt` cargo feature (the external `xla` bindings); the
+/// default offline build substitutes a stub whose `load` fails with an
+/// explanatory error, so simulation-only workflows build and run
+/// everywhere.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -30,6 +36,7 @@ pub struct Runtime {
     relu_quant: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load every artifact from `dir` (usually `artifacts/`).
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -199,6 +206,59 @@ impl Runtime {
             }
         }
         Ok(max_err)
+    }
+}
+
+/// Offline stub: same public surface as the PJRT-backed `Runtime`, but
+/// `load` always fails (after validating the manifest, so configuration
+/// errors still surface early). Gated out when the `pjrt` feature
+/// provides the real implementation above.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    fn unavailable() -> anyhow::Error {
+        anyhow!(
+            "s2engine was built without the `pjrt` feature; HLO artifacts \
+             cannot be executed. Enabling it requires an environment with \
+             the `xla` PJRT bindings: add `xla` as an (optional) dependency \
+             in rust/Cargo.toml, then rebuild with --features pjrt"
+        )
+    }
+
+    /// Load every artifact from `dir` (usually `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        // Parse the manifest so shape/config errors surface even without
+        // PJRT, then report the missing backend.
+        let _manifest = Manifest::load(dir.as_ref())?;
+        Err(Self::unavailable())
+    }
+
+    pub fn platform(&self) -> String {
+        "none (pjrt feature disabled)".to_string()
+    }
+
+    pub fn run_gemm(&self, _x: &[f32], _y: &[f32]) -> Result<Vec<f32>> {
+        Err(Self::unavailable())
+    }
+
+    pub fn run_cnn_features(
+        &self,
+        _image: &FeatTensor,
+        _weights: &[WeightTensor],
+    ) -> Result<Vec<FeatTensor>> {
+        Err(Self::unavailable())
+    }
+
+    pub fn run_relu_quant(&self, _x: &[f32]) -> Result<Vec<i8>> {
+        Err(Self::unavailable())
+    }
+
+    pub fn verify_gemm(&self, _seed: u64) -> Result<f64> {
+        Err(Self::unavailable())
     }
 }
 

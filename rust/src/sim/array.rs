@@ -1,25 +1,100 @@
-//! The systolic-array tile simulator: R×C PEs stepped cycle-by-cycle at
-//! the DS clock, with weight flows travelling down columns, feature flows
-//! travelling right along rows, MAC units ticking every `ds_ratio`
-//! cycles, and in-order result forwarding per column (Section 4.1's RF
-//! stall semantics).
+//! The systolic-array tile simulator — event-driven engine.
 //!
-//! One call simulates one *tile* (one array pass over R output positions
-//! × C kernels); layer totals are extrapolated by the coordinator from a
-//! tile sample (DESIGN.md §5).
+//! Semantics are the paper's (Section 4.1/4.3): R×C PEs at the DS clock,
+//! weight flows travelling down columns, feature flows travelling right
+//! along rows, MAC units ticking every `ds_ratio` cycles, and in-order
+//! result forwarding per column. One call simulates one *tile* (one array
+//! pass over R output positions × C kernels); layer totals are
+//! extrapolated by the coordinator from a tile sample (DESIGN.md §5).
+//!
+//! ## Scheduling (EXPERIMENTS.md §Perf)
+//!
+//! The original engine (retained in [`super::reference`] as the oracle)
+//! swept all R×C PEs every DS cycle even though many of them are provably
+//! stalled on any given cycle. This engine steps a PE only when an event
+//! could change its decision. Each stalled ("parked") PE records the
+//! *need* that blocks it ([`super::pe::need`]) and only a matching
+//! resource event re-steps it:
+//!
+//! * a token arriving in an input FIFO it is starved on — *next* cycle
+//!   for in-array pushes (reverse-raster visibility: the upstream PE
+//!   steps later in the same cycle, so its push was never visible until
+//!   the next one), *this* cycle for source injection;
+//! * space freed in the downstream FIFO it is blocked pushing into —
+//!   *this* cycle (downstream PEs step earlier in reverse raster order);
+//! * a MAC tick popping its WF-FIFO while it is blocked on WF space;
+//! * its own previous step made progress (it stays on the worklist).
+//!
+//! The worklist is a bitset drained highest-index-first, reproducing the
+//! reference's reverse raster order exactly while making wakes O(1) and
+//! duplicate-free, and parked/finished PEs completely free to skip
+//! (whole-word skips). Parked PEs accrue their per-cycle stall counters
+//! in O(1) via per-category population counts, so [`TileStats`] stay
+//! bit-identical to the reference — enforced by
+//! `tests/sim_equivalence.rs`. When the DS frontier is globally stalled
+//! the engine skips straight to the next MAC tick, batching the idle
+//! cycles' stall accounting.
+//!
+//! All per-tile state lives in a reusable [`SimScratch`] arena (flat token
+//! buffer + SoA scheduler arrays): zero steady-state allocation per tile.
+
+use std::cell::RefCell;
 
 use super::ce;
-use super::pe::Pe;
+use super::pe::{need, Pe, Stall};
+use super::reference::CYCLE_LIMIT;
+use super::scratch::{
+    SimScratch, PARK_NONE, PARK_OUT_FULL, PARK_STARVED, PARK_WF_FULL,
+};
 use super::stats::TileStats;
+use crate::compiler::ecoo::Token;
 use crate::compiler::mapping::TileJob;
 use crate::config::ArrayConfig;
 
-/// Hard safety limit: no realistic tile needs this many DS cycles; hitting
-/// it means a dataflow deadlock (a bug), so we panic loudly.
-const CYCLE_LIMIT: u64 = 50_000_000;
+thread_local! {
+    /// Fallback workspace for direct `simulate_tile` calls (benches, CLI
+    /// replay, tests). The coordinator threads explicit per-worker
+    /// scratches instead.
+    static SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::new());
+}
 
 /// Simulate one tile; returns its event counters.
 pub fn simulate_tile(tile: &TileJob, cfg: &ArrayConfig, ce_enabled: bool) -> TileStats {
+    SCRATCH.with(|s| {
+        simulate_tile_with_scratch(tile, cfg, ce_enabled, &mut s.borrow_mut())
+    })
+}
+
+/// Wake PE `j` (set its worklist bit) if the event `ev` can change its
+/// decision: always for active PEs, by need-mask for parked ones. An
+/// event that does not match a parked PE's need provably reproduces the
+/// identical stall, which the parked accrual already accounts for.
+#[inline]
+fn wake(bits: &mut [u64], park_cat: &[u8], park_need: &[u8], j: usize, ev: u8) {
+    if park_cat[j] != PARK_NONE && park_need[j] & ev == 0 {
+        return;
+    }
+    bits[j >> 6] |= 1u64 << (j & 63);
+}
+
+/// Shared diagnostic for the cycle-limit / no-event-source aborts (the
+/// reference engine spins to the limit and dies with the same message).
+#[cold]
+#[inline(never)]
+fn deadlock_panic(remaining: usize) -> ! {
+    panic!(
+        "tile simulation exceeded {CYCLE_LIMIT} DS cycles \
+         ({remaining} PEs unfinished) — dataflow deadlock"
+    );
+}
+
+/// Event-driven tile simulation against a caller-owned workspace.
+pub fn simulate_tile_with_scratch(
+    tile: &TileJob,
+    cfg: &ArrayConfig,
+    ce_enabled: bool,
+    scratch: &mut SimScratch,
+) -> TileStats {
     let rows = tile.active_rows();
     let cols = tile.active_cols();
     assert!(rows > 0 && cols > 0, "empty tile");
@@ -33,102 +108,298 @@ pub fn simulate_tile(tile: &TileJob, cfg: &ArrayConfig, ce_enabled: bool) -> Til
     );
     let ratio = cfg.ds_ratio.max(1) as u64;
     let n_groups = tile.n_groups as u32;
+    let n = rows * cols;
 
     let mut stats = TileStats::default();
     stats.dense_macs = tile.dense_macs();
-    stats.results = (rows * cols) as u64;
+    stats.results = n as u64;
 
-    // Flatten the streams (EOK on weight kernels).
-    let f_src: Vec<Vec<u32>> = tile
-        .features
-        .iter()
-        .map(|s| s.to_flow(false).tokens.iter().map(|t| t.0).collect())
-        .collect();
-    let w_src: Vec<Vec<u32>> = tile
-        .weights
-        .iter()
-        .map(|s| s.to_flow(true).tokens.iter().map(|t| t.0).collect())
-        .collect();
-    let mut f_idx = vec![0usize; rows];
-    let mut w_idx = vec![0usize; cols];
+    scratch.reset_for(rows, cols);
 
-    let mut pes: Vec<Pe> = (0..rows * cols)
-        .map(|_| Pe::new(cfg.fifo, n_groups))
-        .collect();
+    // --- flatten the streams into the token arena (EOK on weight kernels)
+    for s in &tile.features {
+        let start = scratch.tokens.len() as u32;
+        for g in &s.groups {
+            for t in &g.tokens {
+                scratch.tokens.push(t.0);
+            }
+        }
+        scratch.f_range.push((start, scratch.tokens.len() as u32));
+        scratch.f_idx.push(start);
+    }
+    for s in &tile.weights {
+        let start = scratch.tokens.len() as u32;
+        for g in &s.groups {
+            for t in &g.tokens {
+                scratch.tokens.push(t.0);
+            }
+        }
+        let end = scratch.tokens.len() as u32;
+        if end > start {
+            let last = (end - 1) as usize;
+            scratch.tokens[last] = Token(scratch.tokens[last]).with_eok().0;
+        }
+        scratch.w_range.push((start, end));
+        scratch.w_idx.push(start);
+    }
 
+    // --- PE state, reused across tiles
+    let have = scratch.pes.len().min(n);
+    for pe in scratch.pes[..have].iter_mut() {
+        pe.reset(cfg.fifo, n_groups);
+    }
+    while scratch.pes.len() < n {
+        scratch.pes.push(Pe::new(cfg.fifo, n_groups));
+    }
+
+    let SimScratch {
+        tokens,
+        f_range,
+        w_range,
+        f_idx,
+        w_idx,
+        live_rows,
+        live_cols,
+        pes,
+        cur,
+        nxt,
+        park_cat,
+        park_need,
+        edge_flags,
+        wf_busy,
+        finishing,
+    } = scratch;
+
+    // Parked-population counts per PARK_* category: stalled PEs accrue
+    // their per-cycle counters through these instead of being stepped.
+    let mut counts: [u64; 4] = [0; 4];
+    // Parks that happened *this* cycle (the PE's own ds_step already
+    // bumped the counter for this cycle; accrual starts next cycle).
+    let mut fresh: [u64; 4] = [0; 4];
+    let mut n_mac_idle: u64 = n as u64;
+    let mut remaining = n;
     let mut ds_cycle: u64 = 0;
-    let mut remaining = rows * cols;
+    // Decrementing tick counter instead of `ds_cycle % ratio` (ISSUE 1).
+    let mut mac_countdown = ratio;
+
+    // Cycle 0: every PE steps (register-fill cold start), as in the sweep.
+    for i in 0..n {
+        cur[i >> 6] |= 1u64 << (i & 63);
+    }
+
     while remaining > 0 {
-        // 1. Source injection: the CE array (features) and WB (weights)
-        //    deliver one token per DS cycle per edge PE — Section 4.4:
-        //    "The CE array runs at the same frequency as DS component".
-        for r in 0..rows {
-            if f_idx[r] < f_src[r].len() && pes[r * cols].f_fifo.has_space() {
-                pes[r * cols].f_fifo.push(f_src[r][f_idx[r]]);
+        // 1. Source injection: one token per DS cycle per edge PE.
+        let mut ri = 0;
+        while ri < live_rows.len() {
+            let r = live_rows[ri] as usize;
+            let edge = r * cols;
+            if pes[edge].f_fifo.has_space() {
+                pes[edge].f_fifo.push(tokens[f_idx[r] as usize]);
                 f_idx[r] += 1;
                 stats.f_tokens += 1;
-            }
-        }
-        for c in 0..cols {
-            if w_idx[c] < w_src[c].len() && pes[c].w_fifo.has_space() {
-                pes[c].w_fifo.push(w_src[c][w_idx[c]]);
-                w_idx[c] += 1;
-                stats.w_tokens += 1;
-            }
-        }
-
-        // 2. DS steps in reverse raster order so a token forwarded this
-        //    cycle cannot hop multiple PEs within the same cycle.
-        //    (index arithmetic kept additive — no div/mod in the hot loop,
-        //    and certainly-stalled PEs skipped cheaply: EXPERIMENTS.md §Perf)
-        let mut idx = rows * cols;
-        for r in (0..rows).rev() {
-            for c in (0..cols).rev() {
-                idx -= 1;
-                if pes[idx].ds_done {
+                wake(cur, park_cat, park_need, edge, need::F_TOKEN);
+                if f_idx[r] == f_range[r].1 {
+                    live_rows.swap_remove(ri);
                     continue;
                 }
-                let down_ok = r + 1 >= rows || pes[idx + cols].w_fifo.has_space();
-                let right_ok = c + 1 >= cols || pes[idx + 1].f_fifo.has_space();
-                let fwd = pes[idx].ds_step(down_ok, right_ok, &mut stats);
-                if let Some(t) = fwd.w {
-                    if r + 1 < rows {
-                        pes[idx + cols].w_fifo.push(t);
+            }
+            ri += 1;
+        }
+        let mut ci = 0;
+        while ci < live_cols.len() {
+            let c = live_cols[ci] as usize;
+            if pes[c].w_fifo.has_space() {
+                pes[c].w_fifo.push(tokens[w_idx[c] as usize]);
+                w_idx[c] += 1;
+                stats.w_tokens += 1;
+                wake(cur, park_cat, park_need, c, need::W_TOKEN);
+                if w_idx[c] == w_range[c].1 {
+                    live_cols.swap_remove(ci);
+                    continue;
+                }
+            }
+            ci += 1;
+        }
+
+        // 2. DS phase: drain the worklist bitset from the highest set bit
+        //    down — the reference's reverse raster order over the PEs
+        //    that step this cycle. Same-cycle wakes only ever set bits
+        //    below the scan position, so the live re-read of each word
+        //    picks them up in order.
+        let mut wi = cur.len();
+        while wi > 0 {
+            wi -= 1;
+            while cur[wi] != 0 {
+                let b = 63 - cur[wi].leading_zeros() as usize;
+                cur[wi] &= !(1u64 << b);
+                let i = (wi << 6) + b;
+                // Unpark on activation: the PE steps this cycle, so its
+                // counter comes from ds_step, not the parked accrual.
+                let cat = park_cat[i] as usize;
+                if cat != PARK_NONE as usize {
+                    counts[cat] -= 1;
+                    park_cat[i] = PARK_NONE;
+                }
+                if pes[i].ds_done {
+                    continue;
+                }
+                let first_col = edge_flags[i] & 1 != 0;
+                let last_col = edge_flags[i] & 2 != 0;
+                let down_ok = i + cols >= n || pes[i + cols].w_fifo.has_space();
+                let right_ok = last_col || pes[i + 1].f_fifo.has_space();
+                let wf_was_empty = pes[i].wf_fifo.is_empty();
+                let out = pes[i].ds_step(down_ok, right_ok, &mut stats);
+
+                if let Some(tk) = out.fwd.w {
+                    // i popped its W-FIFO: upstream may push this cycle.
+                    if i >= cols {
+                        wake(cur, park_cat, park_need, i - cols, need::W_SPACE);
+                    }
+                    if i + cols < n {
+                        pes[i + cols].w_fifo.push(tk);
                         stats.token_pushes += 1;
+                        wake(nxt, park_cat, park_need, i + cols, need::W_TOKEN);
                     }
                 }
-                if let Some(t) = fwd.f {
-                    if c + 1 < cols {
-                        pes[idx + 1].f_fifo.push(t);
-                        stats.token_pushes += 1;
+                if let Some(tk) = out.fwd.f {
+                    if !first_col {
+                        wake(cur, park_cat, park_need, i - 1, need::F_SPACE);
                     }
+                    if !last_col {
+                        pes[i + 1].f_fifo.push(tk);
+                        stats.token_pushes += 1;
+                        wake(nxt, park_cat, park_need, i + 1, need::F_TOKEN);
+                    }
+                }
+
+                if wf_was_empty && !pes[i].wf_fifo.is_empty() {
+                    n_mac_idle -= 1;
+                    wf_busy.push(i as u32);
+                }
+                if pes[i].ds_done {
+                    if pes[i].wf_fifo.is_empty() {
+                        n_mac_idle -= 1;
+                        finishing.push(i as u32);
+                    }
+                } else if out.progressed {
+                    nxt[wi] |= 1u64 << b;
+                } else {
+                    let cat = match out.stall {
+                        Stall::Starved => PARK_STARVED,
+                        Stall::OutFull => PARK_OUT_FULL,
+                        Stall::WfFull => PARK_WF_FULL,
+                        Stall::None => {
+                            debug_assert!(false, "no-progress step named no stall");
+                            PARK_STARVED
+                        }
+                    };
+                    park_cat[i] = cat;
+                    park_need[i] = out.need;
+                    fresh[cat as usize] += 1;
                 }
             }
         }
 
-        // 3. MAC tick every `ratio` DS cycles.
-        if ds_cycle % ratio == ratio - 1 {
-            for pe in pes.iter_mut() {
-                let was_done = pe.compute_done;
-                pe.mac_step(ds_cycle, &mut stats);
-                if pe.compute_done && !was_done {
-                    remaining -= 1;
+        // 3. Parked PEs accrue this cycle's stall counters in O(1);
+        //    PEs that parked during this cycle start accruing next cycle.
+        stats.stall_starved += counts[PARK_STARVED as usize];
+        stats.stall_out_full += counts[PARK_OUT_FULL as usize];
+        stats.stall_wf_full += counts[PARK_WF_FULL as usize];
+        for k in 1..4 {
+            counts[k] += fresh[k];
+            fresh[k] = 0;
+        }
+
+        // 4. MAC tick every `ratio` DS cycles.
+        mac_countdown -= 1;
+        if mac_countdown == 0 {
+            mac_countdown = ratio;
+            stats.mac_idle += n_mac_idle;
+            for &j in finishing.iter() {
+                let pe = &mut pes[j as usize];
+                pe.compute_done = true;
+                pe.finish_ds_cycle = ds_cycle;
+                remaining -= 1;
+            }
+            finishing.clear();
+            let mut k = 0;
+            while k < wf_busy.len() {
+                let j = wf_busy[k] as usize;
+                let ops = pes[j].wf_fifo.pop().expect("busy implies non-empty");
+                if ops > 1 {
+                    // multi-op pair occupies the head for another MAC cycle
+                    pes[j].wf_fifo.push(ops - 1);
+                }
+                if park_cat[j] == PARK_WF_FULL {
+                    // freed WF space: the DS can emit again next cycle
+                    nxt[j >> 6] |= 1u64 << (j & 63);
+                }
+                if pes[j].wf_fifo.is_empty() {
+                    wf_busy.swap_remove(k);
+                    if pes[j].ds_done {
+                        finishing.push(j as u32);
+                    } else {
+                        n_mac_idle += 1;
+                    }
+                } else {
+                    k += 1;
                 }
             }
         }
 
         ds_cycle += 1;
         if ds_cycle > CYCLE_LIMIT {
-            panic!(
-                "tile simulation exceeded {CYCLE_LIMIT} DS cycles \
-                 ({remaining} PEs unfinished) — dataflow deadlock"
-            );
+            deadlock_panic(remaining);
         }
+        if remaining == 0 {
+            break;
+        }
+
+        // 5. Skip-ahead: if no PE will step next cycle and no source can
+        //    inject, nothing changes until the next MAC tick — batch the
+        //    idle cycles' stall accounting and jump.
+        if nxt.iter().all(|&w| w == 0) {
+            let mut injectable = false;
+            for &r in live_rows.iter() {
+                if pes[r as usize * cols].f_fifo.has_space() {
+                    injectable = true;
+                    break;
+                }
+            }
+            if !injectable {
+                for &c in live_cols.iter() {
+                    if pes[c as usize].w_fifo.has_space() {
+                        injectable = true;
+                        break;
+                    }
+                }
+            }
+            if !injectable {
+                if wf_busy.is_empty() && finishing.is_empty() {
+                    // No event source left at all.
+                    deadlock_panic(remaining);
+                }
+                let skip = mac_countdown - 1;
+                if skip > 0 {
+                    stats.stall_starved += skip * counts[PARK_STARVED as usize];
+                    stats.stall_out_full += skip * counts[PARK_OUT_FULL as usize];
+                    stats.stall_wf_full += skip * counts[PARK_WF_FULL as usize];
+                    ds_cycle += skip;
+                    mac_countdown = 1;
+                    if ds_cycle > CYCLE_LIMIT {
+                        deadlock_panic(remaining);
+                    }
+                }
+            }
+        }
+
+        // `cur` is fully drained (all zero); it becomes the next cycle's
+        // empty `nxt`, and the queued `nxt` becomes `cur`.
+        std::mem::swap(cur, nxt);
     }
 
-    // 4. Result forwarding: each column drains its R results in row
-    //    order, one per MAC cycle; a PE that finished early stalls its RF
-    //    until its predecessors' results have passed (Section 4.1).
+    // --- Result forwarding: each column drains its R results in row
+    //     order, one per MAC cycle (Section 4.1).
     let mut max_drain_mac: u64 = 0;
     for c in 0..cols {
         let mut t: u64 = 0;
@@ -140,7 +411,7 @@ pub fn simulate_tile(tile: &TileJob, cfg: &ArrayConfig, ce_enabled: bool) -> Til
     }
     stats.ds_cycles = ds_cycle.max(max_drain_mac * ratio);
 
-    // 5. Buffer traffic accounting (CE array model).
+    // --- Buffer traffic accounting (CE array model).
     let traffic = ce::account(tile, ce_enabled);
     ce::apply(&mut stats, &traffic);
 
@@ -153,6 +424,7 @@ mod tests {
     use crate::compiler::mapping::{build_tile, LayerMapping, TileSource};
     use crate::config::FifoDepths;
     use crate::models::LayerDesc;
+    use crate::sim::reference::simulate_tile_reference;
 
     fn layer() -> LayerDesc {
         LayerDesc::new("t", 8, 8, 32, 3, 3, 16, 1, 1)
@@ -307,5 +579,51 @@ mod tests {
         // every injected token is forwarded through (cols-1) PEs per row
         assert!(s.token_pushes > s.f_tokens);
         assert_eq!(s.fb_reads_ce + s.ce_fifo_reads, s.fb_reads_no_ce);
+    }
+
+    #[test]
+    fn event_engine_matches_reference_spot_checks() {
+        // Broad randomized coverage lives in tests/sim_equivalence.rs;
+        // these pin the headline configurations in-unit.
+        for (fd, wd, rows, cols) in
+            [(0.35, 0.35, 8, 8), (0.2, 0.6, 4, 7), (1.0, 1.0, 4, 4)]
+        {
+            let tile = synth_tile(fd, wd, rows, cols);
+            for depth in [2usize, 4, 8] {
+                let cfg = ArrayConfig::new(rows, cols)
+                    .with_fifo(FifoDepths::uniform(depth));
+                let fast = simulate_tile(&tile, &cfg, true);
+                let slow = simulate_tile_reference(&tile, &cfg, true);
+                assert_eq!(fast, slow, "({fd},{wd}) {rows}x{cols} depth{depth}");
+            }
+            let cfg =
+                ArrayConfig::new(rows, cols).with_fifo(FifoDepths::infinite());
+            assert_eq!(
+                simulate_tile(&tile, &cfg, true),
+                simulate_tile_reference(&tile, &cfg, true),
+                "infinite depth"
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_configs_is_clean() {
+        // One scratch, wildly different consecutive configurations: the
+        // reset path must leave no state behind.
+        let mut scratch = SimScratch::new();
+        let tile_a = synth_tile(0.3, 0.3, 8, 8);
+        let tile_b = synth_tile(0.9, 0.9, 3, 5);
+        let cfgs = [
+            ArrayConfig::new(8, 8).with_fifo(FifoDepths::infinite()),
+            ArrayConfig::new(8, 8).with_fifo(FifoDepths::uniform(2)),
+            ArrayConfig::new(8, 8).with_ratio(1),
+        ];
+        for cfg in &cfgs {
+            let warm = simulate_tile_with_scratch(&tile_a, cfg, true, &mut scratch);
+            assert_eq!(warm, simulate_tile_reference(&tile_a, cfg, true));
+            let warm_b =
+                simulate_tile_with_scratch(&tile_b, cfg, true, &mut scratch);
+            assert_eq!(warm_b, simulate_tile_reference(&tile_b, cfg, true));
+        }
     }
 }

@@ -45,6 +45,31 @@ impl Fifo {
         }
     }
 
+    /// Reinitialize in place for a (possibly different) capacity, keeping
+    /// the heap ring allocation when it is already large enough — the
+    /// SimScratch reuse path, so repeated tile simulations allocate
+    /// nothing per tile.
+    pub fn reset(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        self.head = 0;
+        self.len = 0;
+        self.pushes = 0;
+        self.max_occupancy = 0;
+        if cap > INLINE_CAP {
+            let need = if cap == usize::MAX {
+                // idealized FIFO: keep whatever the ring grew to
+                self.heap.len().max(64)
+            } else {
+                // bounded ring arithmetic only needs len >= cap; a larger
+                // leftover ring from a previous (deeper/∞) config is fine
+                self.heap.len().max(cap)
+            };
+            if self.heap.len() < need {
+                self.heap.resize(need, 0);
+            }
+        }
+    }
+
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0
@@ -197,6 +222,84 @@ mod tests {
         for i in 0..1000u32 {
             assert_eq!(f.pop(), Some(i));
         }
+    }
+
+    #[test]
+    fn infinite_ring_grows_past_64_with_wrapped_head() {
+        // Regression (ISSUE 1 audit): the idealized (∞) FIFO pre-allocates
+        // only 64 heap slots; growth must preserve FIFO order and
+        // max_occupancy even when the ring head has wrapped mid-buffer.
+        let mut f = Fifo::new(usize::MAX);
+        for i in 0..64u32 {
+            f.push(i);
+        }
+        for i in 0..30u32 {
+            assert_eq!(f.pop(), Some(i)); // head now at slot 30
+        }
+        // refill past the 64-slot ring: forces grow() with head != 0
+        for i in 64..200u32 {
+            assert!(f.has_space());
+            f.push(i);
+        }
+        assert_eq!(f.len(), 170);
+        assert_eq!(f.max_occupancy, 170);
+        for i in 30..200u32 {
+            assert_eq!(f.pop(), Some(i), "order broken at {i}");
+        }
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.pushes, 200);
+    }
+
+    #[test]
+    fn infinite_ring_multiple_growth_rounds() {
+        let mut f = Fifo::new(usize::MAX);
+        // 64 -> 128 -> 256 -> 512: three grow() calls, interleaved pops
+        for i in 0..400u32 {
+            f.push(i);
+            if i % 3 == 0 {
+                let expect = (i / 3) as u32;
+                assert_eq!(f.pop(), Some(expect));
+            }
+        }
+        let mut expect = 134u32; // 401 pushes? no: 400 pushes, 134 pops
+        while let Some(v) = f.pop() {
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        assert_eq!(expect, 400);
+    }
+
+    #[test]
+    fn reset_reuses_ring_and_clears_stats() {
+        let mut f = Fifo::new(usize::MAX);
+        for i in 0..100u32 {
+            f.push(i);
+        }
+        f.reset(usize::MAX);
+        assert!(f.is_empty());
+        assert_eq!(f.pushes, 0);
+        assert_eq!(f.max_occupancy, 0);
+        for i in 0..100u32 {
+            f.push(i);
+        }
+        for i in 0..100u32 {
+            assert_eq!(f.pop(), Some(i));
+        }
+        // reset to a bounded depth: bounds enforced again
+        f.reset(3);
+        f.push(1);
+        f.push(2);
+        f.push(3);
+        assert!(f.is_full());
+        assert_eq!(f.pop(), Some(1));
+        // and back down to an inline depth
+        f.reset(2);
+        assert!(f.is_empty());
+        f.push(7);
+        f.push(8);
+        assert!(f.is_full());
+        assert_eq!(f.pop(), Some(7));
+        assert_eq!(f.pop(), Some(8));
     }
 
     #[test]

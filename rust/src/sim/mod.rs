@@ -2,7 +2,12 @@
 //!
 //! * [`fifo`] — the bounded token FIFOs inside each PE.
 //! * [`pe`] — Dynamic Selection + MAC + Result Forwarding state machines.
-//! * [`array`] — the R×C array stepped at DS-clock granularity.
+//! * [`array`] — the R×C array at DS-clock granularity (event-driven
+//!   active-PE scheduler, EXPERIMENTS.md §Perf).
+//! * [`reference`] — the original full-sweep engine, retained as the
+//!   bit-exactness oracle for the event-driven one.
+//! * [`scratch`] — reusable flat-arena workspace threaded through the
+//!   coordinator's worker pool.
 //! * [`ce`] — Collective Element buffer-traffic accounting.
 //! * [`buffer`] — FB/WB SRAM capacity provisioning (Section 5.2's
 //!   66-of-71 / 68-of-71 layer-fit analysis).
@@ -13,7 +18,11 @@ pub mod buffer;
 pub mod ce;
 pub mod fifo;
 pub mod pe;
+pub mod reference;
+pub mod scratch;
 pub mod stats;
 
-pub use array::simulate_tile;
+pub use array::{simulate_tile, simulate_tile_with_scratch};
+pub use reference::simulate_tile_reference;
+pub use scratch::SimScratch;
 pub use stats::TileStats;

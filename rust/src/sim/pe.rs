@@ -41,6 +41,65 @@ pub struct Forwarded {
     pub f: Option<u32>,
 }
 
+/// Which stall counter a DS cycle bumped (at most one per cycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stall {
+    None,
+    /// `stall_starved` — waiting on an input token (or, during register
+    /// fill, on downstream space for the fill's forward).
+    Starved,
+    /// `stall_out_full` — a required push found the successor FIFO full.
+    OutFull,
+    /// `stall_wf_full` — an aligned pair found the WF-FIFO full.
+    WfFull,
+}
+
+/// Wake-need bits for a stalled step: which resource event could change
+/// this PE's decision. The event scheduler only re-steps a parked PE on a
+/// matching event; any *other* event provably reproduces the same stall
+/// (the paper semantics make the blocking resource unambiguous), which is
+/// what keeps parked accrual bit-identical to the sweep.
+pub mod need {
+    /// A token arriving in the PE's own W-FIFO.
+    pub const W_TOKEN: u8 = 1;
+    /// Space freed in the downstream PE's W-FIFO.
+    pub const W_SPACE: u8 = 2;
+    /// A token arriving in the PE's own F-FIFO.
+    pub const F_TOKEN: u8 = 4;
+    /// Space freed in the right-hand PE's F-FIFO.
+    pub const F_SPACE: u8 = 8;
+    /// Space freed in the PE's own WF-FIFO (MAC tick pop).
+    pub const WF_SPACE: u8 = 16;
+}
+
+/// Full result of one DS-clock step, consumed by the event scheduler
+/// ([`super::array`]): `fwd` carries inter-PE token movement, `progressed`
+/// says whether any architectural state changed (register fill, pair
+/// emission, barrier, ds_done), `stall` names the counter bumped, and
+/// `need` the wake events that could unblock a stalled step. A register
+/// fill can both progress *and* stall (one flow filled, the other
+/// missing), so `progressed` and `stall` are independent.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutcome {
+    pub fwd: Forwarded,
+    pub progressed: bool,
+    pub stall: Stall,
+    /// OR of [`need`] bits; 0 unless `stall != Stall::None`.
+    pub need: u8,
+}
+
+impl StepOutcome {
+    #[inline]
+    fn stalled(stall: Stall, need: u8) -> Self {
+        StepOutcome {
+            fwd: Forwarded::default(),
+            progressed: false,
+            stall,
+            need,
+        }
+    }
+}
+
 /// MAC-side state: the WF-FIFO holds emitted pairs as op-counts.
 #[derive(Debug, Clone)]
 pub struct Pe {
@@ -91,6 +150,23 @@ impl Pe {
         self.w_reg == EMPTY && self.f_reg == EMPTY
     }
 
+    /// Reinitialize in place to the `Pe::new` state, keeping any heap
+    /// allocations inside the FIFOs (SimScratch reuse across tiles).
+    pub fn reset(&mut self, depths: FifoDepths, n_groups: u32) {
+        self.w_fifo.reset(depths.w);
+        self.f_fifo.reset(depths.f);
+        self.wf_fifo.reset(depths.wf);
+        self.w_reg = EMPTY;
+        self.f_reg = EMPTY;
+        self.groups_done = 0;
+        self.n_groups = n_groups;
+        self.ds_done = n_groups == 0;
+        self.compute_done = n_groups == 0;
+        self.mac_ops = 0;
+        self.finish_ds_cycle = 0;
+        self.idle = n_groups == 0;
+    }
+
     /// One DS-clock step. `w_space_down` / `f_space_right` report whether
     /// the successor FIFOs can accept a token (`true` at array edges).
     pub fn ds_step(
@@ -98,10 +174,9 @@ impl Pe {
         w_space_down: bool,
         f_space_right: bool,
         stats: &mut TileStats,
-    ) -> Forwarded {
-        let mut fwd = Forwarded::default();
+    ) -> StepOutcome {
         if self.ds_done {
-            return fwd;
+            return StepOutcome::stalled(Stall::None, 0);
         }
 
         // Register fills are pushes too: they forward the loaded token,
@@ -115,6 +190,7 @@ impl Pe {
             return self.fill_regs(w_space_down, f_space_right, stats);
         }
 
+        let mut fwd = Forwarded::default();
         let w = Token(self.w_reg);
         let f = Token(self.f_reg);
         let w_last = w.eog();
@@ -144,25 +220,27 @@ impl Pe {
         // Feasibility check before any side effect (atomic cycle).
         if aligned && !self.wf_fifo.has_space() {
             stats.stall_wf_full += 1;
-            return fwd;
+            return StepOutcome::stalled(Stall::WfFull, need::WF_SPACE);
         }
         let final_barrier = barrier && self.groups_done + 1 == self.n_groups;
         if !final_barrier {
             if push_w && (self.w_fifo.is_empty() || !w_space_down) {
-                if self.w_fifo.is_empty() {
+                return if self.w_fifo.is_empty() {
                     stats.stall_starved += 1;
+                    StepOutcome::stalled(Stall::Starved, need::W_TOKEN)
                 } else {
                     stats.stall_out_full += 1;
-                }
-                return fwd;
+                    StepOutcome::stalled(Stall::OutFull, need::W_SPACE)
+                };
             }
             if push_f && (self.f_fifo.is_empty() || !f_space_right) {
-                if self.f_fifo.is_empty() {
+                return if self.f_fifo.is_empty() {
                     stats.stall_starved += 1;
+                    StepOutcome::stalled(Stall::Starved, need::F_TOKEN)
                 } else {
                     stats.stall_out_full += 1;
-                }
-                return fwd;
+                    StepOutcome::stalled(Stall::OutFull, need::F_SPACE)
+                };
             }
         }
 
@@ -187,7 +265,12 @@ impl Pe {
                 self.w_reg = EMPTY;
                 self.f_reg = EMPTY;
                 self.ds_done = true;
-                return fwd;
+                return StepOutcome {
+                    fwd,
+                    progressed: true,
+                    stall: Stall::None,
+                    need: 0,
+                };
             }
         }
         if push_w {
@@ -198,7 +281,12 @@ impl Pe {
             let ok = self.try_load_f(&mut fwd, f_space_right);
             debug_assert!(ok, "checked above");
         }
-        fwd
+        StepOutcome {
+            fwd,
+            progressed: true,
+            stall: Stall::None,
+            need: 0,
+        }
     }
 
     /// Cold path: one or both comparison registers are empty (stream
@@ -209,19 +297,25 @@ impl Pe {
         w_space_down: bool,
         f_space_right: bool,
         stats: &mut TileStats,
-    ) -> Forwarded {
+    ) -> StepOutcome {
         let mut fwd = Forwarded::default();
-        let mut missing = false;
+        let mut needs: u8 = 0;
         if self.w_reg == EMPTY && !self.try_load_w(&mut fwd, w_space_down) {
-            missing = true;
+            // blocked on either a W token or downstream W space
+            needs |= need::W_TOKEN | need::W_SPACE;
         }
         if self.f_reg == EMPTY && !self.try_load_f(&mut fwd, f_space_right) {
-            missing = true;
+            needs |= need::F_TOKEN | need::F_SPACE;
         }
-        if missing {
+        if needs != 0 {
             stats.stall_starved += 1;
         }
-        fwd
+        StepOutcome {
+            progressed: fwd.w.is_some() || fwd.f.is_some(),
+            stall: if needs != 0 { Stall::Starved } else { Stall::None },
+            need: needs,
+            fwd,
+        }
     }
 
     fn try_load_w(&mut self, fwd: &mut Forwarded, space_down: bool) -> bool {
@@ -459,11 +553,11 @@ mod tests {
         let mut got_w = Vec::new();
         let mut got_f = Vec::new();
         for cycle in 0..1000 {
-            let fwd = pe.ds_step(true, true, &mut stats);
-            if let Some(t) = fwd.w {
+            let out = pe.ds_step(true, true, &mut stats);
+            if let Some(t) = out.fwd.w {
                 got_w.push(t);
             }
-            if let Some(t) = fwd.f {
+            if let Some(t) = out.fwd.f {
                 got_f.push(t);
             }
             pe.mac_step(cycle, &mut stats);
@@ -495,5 +589,22 @@ mod tests {
         assert!(pe.compute_done);
         assert!(stats.stall_wf_full > 0, "expected WF-full stalls");
         assert_eq!(pe.mac_ops, 16);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let w = group(&[(1, 5)]);
+        let f = group(&[(1, 7)]);
+        let mut pe = pe_with_flows(&w, &f, FifoDepths::uniform(4));
+        let _ = run(&mut pe, 1);
+        assert!(pe.compute_done);
+        pe.reset(FifoDepths::uniform(4), 3);
+        assert!(!pe.ds_done && !pe.compute_done);
+        assert_eq!(pe.mac_ops, 0);
+        assert_eq!(pe.groups_done, 0);
+        assert_eq!(pe.n_groups, 3);
+        assert!(pe.w_fifo.is_empty());
+        assert!(pe.f_fifo.is_empty());
+        assert!(pe.wf_fifo.is_empty());
     }
 }

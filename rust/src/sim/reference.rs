@@ -1,0 +1,156 @@
+//! Reference tile simulator: the original full-array sweep engine.
+//!
+//! Every DS cycle steps *all* R×C PEs in reverse raster order, whether or
+//! not they can make progress. This is the simplest faithful encoding of
+//! the Section 4.1/4.3 semantics and is retained as the oracle for the
+//! event-driven engine in [`super::array`]: the randomized equivalence
+//! suite (`tests/sim_equivalence.rs`) asserts the two produce bit-identical
+//! [`TileStats`] for the same tile. Keep this implementation boring and
+//! obviously correct — the fast engine is the one allowed to be clever.
+
+use super::ce;
+use super::pe::Pe;
+use super::stats::TileStats;
+use crate::compiler::mapping::TileJob;
+use crate::config::ArrayConfig;
+
+/// Hard safety limit: no realistic tile needs this many DS cycles; hitting
+/// it means a dataflow deadlock (a bug), so we panic loudly.
+pub(crate) const CYCLE_LIMIT: u64 = 50_000_000;
+
+/// Simulate one tile with the full-sweep reference engine.
+pub fn simulate_tile_reference(
+    tile: &TileJob,
+    cfg: &ArrayConfig,
+    ce_enabled: bool,
+) -> TileStats {
+    let rows = tile.active_rows();
+    let cols = tile.active_cols();
+    assert!(rows > 0 && cols > 0, "empty tile");
+    assert!(
+        rows <= cfg.rows && cols <= cfg.cols,
+        "tile {}x{} exceeds array {}x{}",
+        rows,
+        cols,
+        cfg.rows,
+        cfg.cols
+    );
+    let ratio = cfg.ds_ratio.max(1) as u64;
+    let n_groups = tile.n_groups as u32;
+
+    let mut stats = TileStats::default();
+    stats.dense_macs = tile.dense_macs();
+    stats.results = (rows * cols) as u64;
+
+    // Flatten the streams (EOK on weight kernels).
+    let f_src: Vec<Vec<u32>> = tile
+        .features
+        .iter()
+        .map(|s| s.to_flow(false).tokens.iter().map(|t| t.0).collect())
+        .collect();
+    let w_src: Vec<Vec<u32>> = tile
+        .weights
+        .iter()
+        .map(|s| s.to_flow(true).tokens.iter().map(|t| t.0).collect())
+        .collect();
+    let mut f_idx = vec![0usize; rows];
+    let mut w_idx = vec![0usize; cols];
+
+    let mut pes: Vec<Pe> = (0..rows * cols)
+        .map(|_| Pe::new(cfg.fifo, n_groups))
+        .collect();
+
+    let mut ds_cycle: u64 = 0;
+    // MAC tick countdown instead of `ds_cycle % ratio` (ISSUE 1 satellite:
+    // no div/mod in the per-cycle loop). Reaches 0 exactly on the cycles
+    // where `ds_cycle % ratio == ratio - 1` held.
+    let mut mac_countdown = ratio;
+    let mut remaining = rows * cols;
+    while remaining > 0 {
+        // 1. Source injection: the CE array (features) and WB (weights)
+        //    deliver one token per DS cycle per edge PE — Section 4.4:
+        //    "The CE array runs at the same frequency as DS component".
+        for r in 0..rows {
+            if f_idx[r] < f_src[r].len() && pes[r * cols].f_fifo.has_space() {
+                pes[r * cols].f_fifo.push(f_src[r][f_idx[r]]);
+                f_idx[r] += 1;
+                stats.f_tokens += 1;
+            }
+        }
+        for c in 0..cols {
+            if w_idx[c] < w_src[c].len() && pes[c].w_fifo.has_space() {
+                pes[c].w_fifo.push(w_src[c][w_idx[c]]);
+                w_idx[c] += 1;
+                stats.w_tokens += 1;
+            }
+        }
+
+        // 2. DS steps in reverse raster order so a token forwarded this
+        //    cycle cannot hop multiple PEs within the same cycle.
+        let mut idx = rows * cols;
+        for r in (0..rows).rev() {
+            for c in (0..cols).rev() {
+                idx -= 1;
+                if pes[idx].ds_done {
+                    continue;
+                }
+                let down_ok = r + 1 >= rows || pes[idx + cols].w_fifo.has_space();
+                let right_ok = c + 1 >= cols || pes[idx + 1].f_fifo.has_space();
+                let out = pes[idx].ds_step(down_ok, right_ok, &mut stats);
+                if let Some(t) = out.fwd.w {
+                    if r + 1 < rows {
+                        pes[idx + cols].w_fifo.push(t);
+                        stats.token_pushes += 1;
+                    }
+                }
+                if let Some(t) = out.fwd.f {
+                    if c + 1 < cols {
+                        pes[idx + 1].f_fifo.push(t);
+                        stats.token_pushes += 1;
+                    }
+                }
+            }
+        }
+
+        // 3. MAC tick every `ratio` DS cycles.
+        mac_countdown -= 1;
+        if mac_countdown == 0 {
+            mac_countdown = ratio;
+            for pe in pes.iter_mut() {
+                let was_done = pe.compute_done;
+                pe.mac_step(ds_cycle, &mut stats);
+                if pe.compute_done && !was_done {
+                    remaining -= 1;
+                }
+            }
+        }
+
+        ds_cycle += 1;
+        if ds_cycle > CYCLE_LIMIT {
+            panic!(
+                "tile simulation exceeded {CYCLE_LIMIT} DS cycles \
+                 ({remaining} PEs unfinished) — dataflow deadlock"
+            );
+        }
+    }
+
+    // 4. Result forwarding: each column drains its R results in row
+    //    order, one per MAC cycle; a PE that finished early stalls its RF
+    //    until its predecessors' results have passed (Section 4.1).
+    let mut max_drain_mac: u64 = 0;
+    for c in 0..cols {
+        let mut t: u64 = 0;
+        for r in 0..rows {
+            let fin_mac = pes[r * cols + c].finish_ds_cycle / ratio + 1;
+            t = (t + 1).max(fin_mac + 1);
+        }
+        max_drain_mac = max_drain_mac.max(t);
+    }
+    stats.ds_cycles = ds_cycle.max(max_drain_mac * ratio);
+
+    // 5. Buffer traffic accounting (CE array model).
+    let traffic = ce::account(tile, ce_enabled);
+    ce::apply(&mut stats, &traffic);
+
+    stats
+}

@@ -1,0 +1,113 @@
+//! Reusable per-worker simulation workspace (EXPERIMENTS.md §Perf).
+//!
+//! `simulate_tile` used to allocate per tile: one `Vec<Vec<u32>>` per
+//! flow side (a heap allocation per PE row/column), a fresh `Vec<Pe>`,
+//! and — for deep/idealized FIFOs — a heap ring per FIFO. Under the
+//! coordinator's worker pool that multiplied into thousands of
+//! allocations per layer. `SimScratch` owns all of that state as flat
+//! arenas (one token buffer + `(start, end)` ranges instead of nested
+//! vectors; SoA scheduler arrays alongside the PE structs) and is reused
+//! across tiles: the coordinator threads one instance per worker via
+//! [`crate::util::pool::par_map_with`], and direct `simulate_tile` calls
+//! fall back to a thread-local instance.
+
+use super::pe::Pe;
+
+/// Park-category encoding for the event scheduler's SoA state
+/// (mirrors [`super::pe::Stall`]; 0 = not parked).
+pub(crate) const PARK_NONE: u8 = 0;
+pub(crate) const PARK_STARVED: u8 = 1;
+pub(crate) const PARK_OUT_FULL: u8 = 2;
+pub(crate) const PARK_WF_FULL: u8 = 3;
+
+/// Flat, reusable buffers for one in-flight tile simulation.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    /// Token arena: every row's feature flow followed by every column's
+    /// weight flow, addressed by the `(start, end)` ranges below.
+    pub(crate) tokens: Vec<u32>,
+    pub(crate) f_range: Vec<(u32, u32)>,
+    pub(crate) w_range: Vec<(u32, u32)>,
+    /// Next-token cursor per row/column (absolute index into `tokens`).
+    pub(crate) f_idx: Vec<u32>,
+    pub(crate) w_idx: Vec<u32>,
+    /// Rows/columns whose source stream is not yet exhausted.
+    pub(crate) live_rows: Vec<u32>,
+    pub(crate) live_cols: Vec<u32>,
+
+    /// PE state, reused across tiles via [`Pe::reset`].
+    pub(crate) pes: Vec<Pe>,
+
+    // --- event-scheduler state (SoA over PE index) ---
+    /// Worklist bitset for the current DS cycle: the scan drains the
+    /// highest set bit first, reproducing the reference's reverse raster
+    /// order; set-bit = O(1) dedup'd wake. Same-cycle wakes always target
+    /// indices below the scan position, so they are picked up in order.
+    pub(crate) cur: Vec<u64>,
+    /// Worklist bitset for the next DS cycle.
+    pub(crate) nxt: Vec<u64>,
+    /// PARK_* category of each stalled PE (0 = active or DS-done).
+    pub(crate) park_cat: Vec<u8>,
+    /// Wake-need mask ([`super::pe::need`]) of each parked PE: only a
+    /// matching resource event re-steps it.
+    pub(crate) park_need: Vec<u8>,
+    /// Bit 0: PE is in the first column, bit 1: last column — precomputed
+    /// so the DS hot loop needs no div/mod for neighbour lookups.
+    pub(crate) edge_flags: Vec<u8>,
+
+    // --- MAC-side state ---
+    /// PEs with a non-empty WF-FIFO (popped once per MAC tick).
+    pub(crate) wf_busy: Vec<u32>,
+    /// PEs that are DS-done with a drained WF-FIFO: they complete at the
+    /// next MAC tick.
+    pub(crate) finishing: Vec<u32>,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset every buffer for a tile of `n` PEs with `rows`×`cols`
+    /// geometry, keeping allocations.
+    pub(crate) fn reset_for(&mut self, rows: usize, cols: usize) {
+        let n = rows * cols;
+        self.tokens.clear();
+        self.f_range.clear();
+        self.w_range.clear();
+        self.f_idx.clear();
+        self.w_idx.clear();
+        self.live_rows.clear();
+        self.live_cols.clear();
+        let words = n.div_ceil(64);
+        self.cur.clear();
+        self.cur.resize(words, 0);
+        self.nxt.clear();
+        self.nxt.resize(words, 0);
+        self.park_cat.clear();
+        self.park_cat.resize(n, PARK_NONE);
+        self.park_need.clear();
+        self.park_need.resize(n, 0);
+        self.edge_flags.clear();
+        self.edge_flags.reserve(n);
+        let mut cc = 0usize;
+        for _ in 0..n {
+            let mut fl = 0u8;
+            if cc == 0 {
+                fl |= 1;
+            }
+            if cc + 1 == cols {
+                fl |= 2;
+            }
+            self.edge_flags.push(fl);
+            cc += 1;
+            if cc == cols {
+                cc = 0;
+            }
+        }
+        self.wf_busy.clear();
+        self.finishing.clear();
+        self.live_rows.extend(0..rows as u32);
+        self.live_cols.extend(0..cols as u32);
+    }
+}

@@ -92,6 +92,32 @@ impl TileStats {
         }
     }
 
+    /// First field (name, self-value, other-value) on which two stats
+    /// disagree — diagnostics for the engine-equivalence suite, which
+    /// requires every field to match bit-for-bit.
+    pub fn first_difference(&self, o: &TileStats) -> Option<(&'static str, u64, u64)> {
+        let fields: [(&'static str, u64, u64); 17] = [
+            ("ds_cycles", self.ds_cycles, o.ds_cycles),
+            ("mac_ops", self.mac_ops, o.mac_ops),
+            ("pairs", self.pairs, o.pairs),
+            ("dense_macs", self.dense_macs, o.dense_macs),
+            ("token_pushes", self.token_pushes, o.token_pushes),
+            ("stall_wf_full", self.stall_wf_full, o.stall_wf_full),
+            ("stall_out_full", self.stall_out_full, o.stall_out_full),
+            ("stall_starved", self.stall_starved, o.stall_starved),
+            ("mac_idle", self.mac_idle, o.mac_idle),
+            ("fb_reads_no_ce", self.fb_reads_no_ce, o.fb_reads_no_ce),
+            ("fb_reads_ce", self.fb_reads_ce, o.fb_reads_ce),
+            ("ce_fifo_reads", self.ce_fifo_reads, o.ce_fifo_reads),
+            ("wb_reads", self.wb_reads, o.wb_reads),
+            ("f_tokens", self.f_tokens, o.f_tokens),
+            ("w_tokens", self.w_tokens, o.w_tokens),
+            ("results", self.results, o.results),
+            ("barrier_cycles", self.barrier_cycles, o.barrier_cycles),
+        ];
+        fields.into_iter().find(|(_, a, b)| a != b)
+    }
+
     /// Sparse skip efficiency: fraction of dense MACs eliminated.
     pub fn skip_ratio(&self) -> f64 {
         if self.dense_macs == 0 {
@@ -135,6 +161,19 @@ mod tests {
         let b = a.scaled(2.5);
         assert_eq!(b.ds_cycles, 25);
         assert_eq!(b.dense_macs, 250);
+    }
+
+    #[test]
+    fn first_difference_names_the_field() {
+        let a = TileStats {
+            ds_cycles: 10,
+            mac_ops: 5,
+            ..Default::default()
+        };
+        let mut b = a;
+        assert_eq!(a.first_difference(&b), None);
+        b.stall_starved = 7;
+        assert_eq!(a.first_difference(&b), Some(("stall_starved", 0, 7)));
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Criterion-style measurement harness for `cargo bench` (offline build:
-//! no criterion crate). Warm-up + timed iterations, mean/stddev/min
-//! reporting, and a `black_box` to defeat constant folding.
+//! no criterion crate). Warm-up + timed iterations, mean/p50/stddev/min
+//! reporting, a `black_box` to defeat constant folding, and a JSON dump
+//! (`write_json`) so CI can track the perf trajectory across PRs —
+//! `benches/sim_hotpath.rs` writes `BENCH_sim.json` this way
+//! (EXPERIMENTS.md §Perf).
 
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// Opaque value barrier, re-exported for bench binaries.
 #[inline]
@@ -16,6 +21,8 @@ pub struct Measurement {
     pub name: String,
     pub iters: u32,
     pub mean: Duration,
+    /// Median of the per-iteration samples.
+    pub p50: Duration,
     pub std_dev: Duration,
     pub min: Duration,
 }
@@ -23,10 +30,11 @@ pub struct Measurement {
 impl Measurement {
     pub fn report(&self) {
         println!(
-            "{:<48} time: [{:>12} ± {:>10}]  min {:>12}  ({} iters)",
+            "{:<48} time: [{:>12} ± {:>10}]  p50 {:>12}  min {:>12}  ({} iters)",
             self.name,
             fmt_dur(self.mean),
             fmt_dur(self.std_dev),
+            fmt_dur(self.p50),
             fmt_dur(self.min),
             self.iters
         );
@@ -46,11 +54,20 @@ fn fmt_dur(d: Duration) -> String {
     }
 }
 
+/// A derived scalar reported alongside the timings (throughput, speedup).
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
 /// A benchmark group, mirroring criterion's API surface loosely.
 pub struct Bench {
     target_time: Duration,
     warmup: Duration,
     results: Vec<Measurement>,
+    metrics: Vec<Metric>,
 }
 
 impl Default for Bench {
@@ -75,6 +92,7 @@ impl Bench {
                 Duration::from_millis(500)
             },
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -116,12 +134,17 @@ impl Bench {
             })
             .sum::<f64>()
             / iters as f64;
+        let min = *samples.iter().min().unwrap();
+        let mut sorted = samples;
+        sorted.sort_unstable();
+        let p50 = sorted[sorted.len() / 2];
         let m = Measurement {
             name: name.to_string(),
             iters,
             mean,
+            p50,
             std_dev: Duration::from_nanos(var.sqrt() as u64),
-            min: *samples.iter().min().unwrap(),
+            min,
         };
         m.report();
         self.results.push(m);
@@ -131,10 +154,57 @@ impl Bench {
     /// Report a derived metric alongside the timings (e.g. speedup).
     pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
         println!("{name:<48} {value:>12.4} {unit}");
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
     }
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// Everything measured so far as a JSON document:
+    /// `{"benches": {name: {mean_ns, p50_ns, min_ns, std_dev_ns, iters}},
+    ///   "metrics": {name: {value, unit}}}`.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut benches = BTreeMap::new();
+        for m in &self.results {
+            let mut o = BTreeMap::new();
+            o.insert("mean_ns".to_string(), Json::Num(m.mean.as_nanos() as f64));
+            o.insert("p50_ns".to_string(), Json::Num(m.p50.as_nanos() as f64));
+            o.insert("min_ns".to_string(), Json::Num(m.min.as_nanos() as f64));
+            o.insert(
+                "std_dev_ns".to_string(),
+                Json::Num(m.std_dev.as_nanos() as f64),
+            );
+            o.insert("iters".to_string(), Json::Num(m.iters as f64));
+            benches.insert(m.name.clone(), Json::Obj(o));
+        }
+        let mut metrics = BTreeMap::new();
+        for m in &self.metrics {
+            let mut o = BTreeMap::new();
+            o.insert("value".to_string(), Json::Num(m.value));
+            o.insert("unit".to_string(), Json::Str(m.unit.clone()));
+            metrics.insert(m.name.clone(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("benches".to_string(), Json::Obj(benches));
+        root.insert("metrics".to_string(), Json::Obj(metrics));
+        Json::Obj(root)
+    }
+
+    /// Write the JSON document to `path` (CI perf-trajectory artifact).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        println!("wrote {path}");
+        Ok(())
     }
 }
 
@@ -157,6 +227,24 @@ mod tests {
         assert!(m.iters >= 5);
         assert!(m.mean.as_nanos() > 0);
         assert!(m.min <= m.mean);
+        assert!(m.min <= m.p50);
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        let mut b = Bench::new().with_target_time(Duration::from_millis(5));
+        b.bench("j", || {
+            black_box(1u64 + black_box(2));
+        });
+        b.metric("throughput", 12.5, "M steps/s");
+        let j = b.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let bench = parsed.get("benches").unwrap().get("j").unwrap();
+        assert!(bench.f64_field("mean_ns").unwrap() > 0.0);
+        assert!(bench.f64_field("p50_ns").unwrap() > 0.0);
+        let metric = parsed.get("metrics").unwrap().get("throughput").unwrap();
+        assert!((metric.f64_field("value").unwrap() - 12.5).abs() < 1e-9);
+        assert_eq!(metric.str_field("unit").unwrap(), "M steps/s");
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Scoped-thread parallel map — the coordinator's worker pool.
 //!
-//! `par_map` splits `items` into contiguous chunks across up to
-//! `workers` OS threads (0 = available parallelism) and applies `f`,
-//! preserving order. Jobs are CPU-bound tile simulations of similar
-//! size, so static chunking balances well; an atomic work-stealing index
-//! handles the residual imbalance.
+//! `par_map` splits `items` across up to `workers` OS threads (0 =
+//! available parallelism) and applies `f`, preserving order; an atomic
+//! work-stealing index balances the CPU-bound tile-simulation jobs.
+//! `par_map_with` additionally gives every worker a private, reusable
+//! state value (the simulator's arena workspace), created once per
+//! thread by an `init` closure.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -15,13 +16,29 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_with(items, workers, || (), |_state, t| f(t))
+}
+
+/// Parallel, order-preserving map with per-worker mutable state: `init`
+/// runs once on each worker thread and the resulting value is threaded
+/// through every job that worker claims. The coordinator uses this to
+/// give each worker one reusable [`crate::sim::SimScratch`] so tile
+/// simulations allocate nothing in steady state.
+pub fn par_map_with<T, S, R, G, F>(items: &[T], workers: usize, init: G, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    G: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = effective_workers(workers).min(n);
     if workers <= 1 {
-        return items.iter().map(|t| f(t)).collect();
+        let mut state = init();
+        return items.iter().map(|t| f(&mut state, t)).collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -31,19 +48,23 @@ where
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let next = &next;
+            let init = &init;
             let f = &f;
             let out_ptr = out_ptr;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                // SAFETY: each index i is claimed exactly once by the
-                // atomic counter, so no two threads write the same slot,
-                // and the scope guarantees the buffer outlives workers.
-                unsafe {
-                    *out_ptr.get().add(i) = Some(r);
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&mut state, &items[i]);
+                    // SAFETY: each index i is claimed exactly once by the
+                    // atomic counter, so no two threads write the same slot,
+                    // and the scope guarantees the buffer outlives workers.
+                    unsafe {
+                        *out_ptr.get().add(i) = Some(r);
+                    }
                 }
             });
         }
@@ -110,6 +131,49 @@ mod tests {
     fn more_workers_than_items() {
         let items = vec![5];
         assert_eq!(par_map(&items, 64, |x| x * x), vec![25]);
+    }
+
+    #[test]
+    fn with_state_reuses_per_worker_state() {
+        // Each worker's state counts the jobs it ran; totals must cover
+        // every item exactly once and states must actually accumulate.
+        use std::sync::atomic::AtomicUsize;
+        static TOTAL: AtomicUsize = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..200).collect();
+        let out = par_map_with(
+            &items,
+            4,
+            || 0usize,
+            |state, x| {
+                *state += 1;
+                TOTAL.fetch_add(1, Ordering::SeqCst);
+                (*x, *state)
+            },
+        );
+        assert_eq!(TOTAL.load(Ordering::SeqCst), 200);
+        assert_eq!(out.len(), 200);
+        // order preserved
+        for (i, (x, seen)) in out.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+            assert!(*seen >= 1);
+        }
+        // at least one worker handled more than one job (state reuse)
+        assert!(out.iter().any(|(_, seen)| *seen > 1));
+    }
+
+    #[test]
+    fn with_state_single_worker() {
+        let items = vec![10, 20, 30];
+        let out = par_map_with(
+            &items,
+            1,
+            || 100,
+            |acc, x| {
+                *acc += x;
+                *acc
+            },
+        );
+        assert_eq!(out, vec![110, 130, 160]);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Randomized equivalence suite: the event-driven engine
+//! (`sim::array::simulate_tile`) must produce **bit-identical**
+//! [`TileStats`] to the retained full-sweep reference
+//! (`sim::reference::simulate_tile_reference`) — field for field — on
+//! every tile, because every figure of the paper reproduction is derived
+//! from these counters (ISSUE 1 acceptance criterion: ≥200 sampled tile
+//! configurations across densities 0.1–1.0, ratio16 ∈ {0, 0.2}, FIFO
+//! depths {2, 4, 8, ∞}, clock ratios, CE on/off, and edge tiles).
+
+use s2engine::compiler::mapping::{build_tile, LayerMapping, TileSource};
+use s2engine::config::{ArrayConfig, FifoDepths};
+use s2engine::models::LayerDesc;
+use s2engine::sim::{
+    simulate_tile, simulate_tile_reference, simulate_tile_with_scratch, SimScratch,
+};
+use s2engine::util::rng::Rng;
+
+const CASES: usize = 220;
+
+#[test]
+fn randomized_tiles_bit_identical_to_reference() {
+    let mut rng = Rng::seed_from_u64(0x0e9e_17_e9e1);
+    let depths = [
+        FifoDepths::uniform(2),
+        FifoDepths::uniform(4),
+        FifoDepths::uniform(8),
+        FifoDepths::infinite(),
+    ];
+    let ratios = [1u32, 2, 4, 8];
+    let cins = [8usize, 16, 24, 32];
+    // one scratch across all cases: also proves cross-config reuse is clean
+    let mut scratch = SimScratch::new();
+
+    for case in 0..CASES {
+        let in_hw = rng.gen_range_u64(4, 8) as usize;
+        let cin = cins[rng.gen_below(4) as usize];
+        let k = if rng.gen_bool() { 3 } else { 1 };
+        let pad = if k == 3 { rng.gen_below(2) as usize } else { 0 };
+        let stride = if rng.gen_bool() { 1 } else { 2 };
+        let cout = rng.gen_range_u64(4, 20) as usize;
+        let layer =
+            LayerDesc::new("eq", in_hw, in_hw, cin, k, k, cout, stride, pad);
+
+        let rows = rng.gen_range_u64(1, 8) as usize;
+        let cols = rng.gen_range_u64(1, 8) as usize;
+        let mapping = LayerMapping::new(&layer, rows, cols);
+        // bias toward edge tiles (partial rows/cols): they exercise the
+        // scheduler's boundary handling
+        let idx = if rng.gen_bool() {
+            mapping.n_tiles() - 1
+        } else {
+            rng.gen_below(mapping.n_tiles() as u64) as usize
+        };
+
+        let fd = 0.1 + 0.9 * rng.gen_f64();
+        let wd = 0.1 + 0.9 * rng.gen_f64();
+        let clustered = rng.gen_bool();
+        let ratio16 = if rng.gen_below(3) == 0 { 0.2 } else { 0.0 };
+        let seed = rng.next_u64();
+        let tile = build_tile(
+            &mapping,
+            idx,
+            &TileSource::Synthetic {
+                feature_density: fd,
+                weight_density: wd,
+                clustered,
+            },
+            ratio16,
+            seed,
+        );
+
+        let depth = depths[rng.gen_below(4) as usize];
+        let ds_ratio = ratios[rng.gen_below(4) as usize];
+        let ce = rng.gen_bool();
+        let cfg = ArrayConfig::new(rows, cols)
+            .with_fifo(depth)
+            .with_ratio(ds_ratio);
+
+        let fast = simulate_tile_with_scratch(&tile, &cfg, ce, &mut scratch);
+        let slow = simulate_tile_reference(&tile, &cfg, ce);
+        assert_eq!(
+            fast,
+            slow,
+            "case {case} diverged on {:?}: {rows}x{cols} k{k} cin{cin} \
+             stride{stride} fd{fd:.3} wd{wd:.3} clustered {clustered} \
+             r16 {ratio16} depth {} ds_ratio {ds_ratio} ce {ce} tile {idx} \
+             seed {seed:#x}",
+            fast.first_difference(&slow),
+            depth.label()
+        );
+        // belt and braces: the architecture's core invariant holds too
+        assert_eq!(fast.mac_ops, tile.must_macs(), "case {case} must-MACs");
+    }
+}
+
+#[test]
+fn public_entry_point_matches_reference() {
+    // `simulate_tile` (thread-local scratch path) on the headline
+    // configurations, including repeated calls over the same scratch.
+    let layer = LayerDesc::new("hot", 12, 12, 64, 3, 3, 32, 1, 1);
+    let mapping = LayerMapping::new(&layer, 8, 8);
+    let src = TileSource::Synthetic {
+        feature_density: 0.35,
+        weight_density: 0.35,
+        clustered: true,
+    };
+    for idx in [0, mapping.n_col_tiles() + 1, mapping.n_tiles() - 1] {
+        let tile = build_tile(&mapping, idx, &src, 0.0, 11);
+        for depth in [FifoDepths::uniform(4), FifoDepths::uniform(8)] {
+            let cfg = ArrayConfig::new(8, 8).with_fifo(depth);
+            for _ in 0..2 {
+                assert_eq!(
+                    simulate_tile(&tile, &cfg, true),
+                    simulate_tile_reference(&tile, &cfg, true),
+                    "tile {idx} depth {}",
+                    depth.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_precision_tiles_bit_identical() {
+    // dedicated 16-bit split coverage at a meaningful promote ratio
+    let layer = LayerDesc::new("mp", 8, 8, 32, 3, 3, 16, 1, 1);
+    let mapping = LayerMapping::new(&layer, 6, 6);
+    let src = TileSource::Synthetic {
+        feature_density: 0.5,
+        weight_density: 0.5,
+        clustered: false,
+    };
+    for ratio16 in [0.05, 0.2, 0.5] {
+        let tile = build_tile(&mapping, 1, &src, ratio16, 23);
+        for ds_ratio in [1u32, 4] {
+            let cfg = ArrayConfig::new(6, 6)
+                .with_fifo(FifoDepths::uniform(2))
+                .with_ratio(ds_ratio);
+            assert_eq!(
+                simulate_tile(&tile, &cfg, true),
+                simulate_tile_reference(&tile, &cfg, true),
+                "ratio16 {ratio16} ds_ratio {ds_ratio}"
+            );
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal, dependency-free shim for the subset of the `anyhow` API used
+//! by this workspace (the build environment is fully offline, so the real
+//! crates.io `anyhow` cannot be fetched). Error values are flattened to
+//! strings — good enough for CLI diagnostics, which is all the callers do
+//! with them.
+
+use std::fmt;
+
+/// A string-backed error value. Context layers are flattened into the
+/// message as `context: cause`, mirroring anyhow's `{:#}` rendering.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that keeps the blanket `From` below coherent (same trick as real
+// anyhow) so `?` converts any std error into `Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on any `Result` whose error is
+/// displayable (std errors and `anyhow::Error` alike).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{c}: {e:#}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e:#}", f())))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($msg)));
+        }
+    };
+    ($cond:expr, $fmt:literal, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($fmt, $($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("root cause {}", 42))
+    }
+
+    #[test]
+    fn macro_and_context() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: root cause 42");
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn ensure_forms() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n > 0);
+            ensure!(n > 1, "too small");
+            ensure!(n > 2, "n was {}", n);
+            Ok(n)
+        }
+        assert!(check(3).is_ok());
+        assert!(check(2).unwrap_err().to_string().contains("n was 2"));
+        assert!(check(0).unwrap_err().to_string().contains("condition failed"));
+    }
+}

@@ -1,0 +1,488 @@
+"""Python transcription of rust/src/sim/{pe,fifo,reference,array}.rs to
+fuzz the event-driven scheduler against the reference sweep.
+
+Faithful to the Rust CODE as written (not to intent): any logic bug in the
+event engine should show up as a stats divergence here.
+"""
+import heapq
+import random
+from collections import deque
+
+EOG = 1 << 12
+EOK = 1 << 13
+TAG16 = 1 << 14
+HI = 1 << 15
+INF = None  # infinite cap
+
+def tok(value, offset, eog=False, eok=False, tag16=False, hi=False):
+    t = (value & 0xFF) | (offset << 8)
+    if eog: t |= EOG
+    if eok: t |= EOK
+    if tag16: t |= TAG16
+    if hi: t |= HI
+    return t
+
+def t_value(t): return t & 0xFF
+def t_offset(t): return (t >> 8) & 0xF
+def t_eog(t): return bool(t & EOG)
+def t_tag16(t): return bool(t & TAG16)
+def t_hi(t): return bool(t & HI)
+def t_placeholder(t): return (t & 0xFF) == 0
+
+
+class Fifo:
+    def __init__(self, cap):
+        self.cap = cap  # None = infinite
+        self.q = deque()
+
+    def is_empty(self): return not self.q
+    def has_space(self):
+        return self.cap is None or len(self.q) < self.cap
+    def push(self, v):
+        assert self.has_space() or self.cap is None
+        self.q.append(v)
+    def pop(self):
+        return self.q.popleft() if self.q else None
+    def peek(self):
+        return self.q[0] if self.q else None
+
+
+NONE, STARVED, OUT_FULL, WF_FULL = 0, 1, 2, 3
+# wake-need bits (mirrors rust/src/sim/pe.rs `need`)
+NW_TOK, NW_SPC, NF_TOK, NF_SPC, N_WF = 1, 2, 4, 8, 16
+
+
+class Pe:
+    def __init__(self, depths, n_groups):
+        dw, df, dwf = depths
+        self.w_fifo = Fifo(dw)
+        self.f_fifo = Fifo(df)
+        self.wf_fifo = Fifo(dwf)
+        self.w_reg = 0
+        self.f_reg = 0
+        self.groups_done = 0
+        self.n_groups = n_groups
+        self.ds_done = n_groups == 0
+        self.compute_done = n_groups == 0
+        self.mac_ops = 0
+        self.finish_ds_cycle = 0
+
+    # returns (fwd_w, fwd_f, progressed, stall, need_mask)
+    def ds_step(self, w_space_down, f_space_right, stats):
+        if self.ds_done:
+            return (None, None, False, NONE, 0)
+        if self.w_reg == 0 or self.f_reg == 0:
+            return self.fill_regs(w_space_down, f_space_right, stats)
+
+        fwd_w = fwd_f = None
+        w, f = self.w_reg, self.f_reg
+        w_last, f_last = t_eog(w), t_eog(f)
+        aligned = (t_offset(w) == t_offset(f)
+                   and not t_placeholder(w) and not t_placeholder(f))
+
+        if aligned and t_tag16(f) and not t_hi(f):
+            push_w, push_f, barrier = False, True, False
+        elif aligned and t_tag16(w) and not t_hi(w):
+            push_w, push_f, barrier = True, False, False
+        elif w_last and f_last:
+            push_w, push_f, barrier = True, True, True
+        elif w_last:
+            push_w, push_f, barrier = False, True, False
+        elif f_last:
+            push_w, push_f, barrier = True, False, False
+        elif t_offset(w) == t_offset(f):
+            push_w, push_f, barrier = True, True, False
+        elif t_offset(w) < t_offset(f):
+            push_w, push_f, barrier = True, False, False
+        else:
+            push_w, push_f, barrier = False, True, False
+
+        if aligned and not self.wf_fifo.has_space():
+            stats['stall_wf_full'] += 1
+            return (None, None, False, WF_FULL, N_WF)
+        final_barrier = barrier and self.groups_done + 1 == self.n_groups
+        if not final_barrier:
+            if push_w and (self.w_fifo.is_empty() or not w_space_down):
+                if self.w_fifo.is_empty():
+                    stats['stall_starved'] += 1
+                    return (None, None, False, STARVED, NW_TOK)
+                stats['stall_out_full'] += 1
+                return (None, None, False, OUT_FULL, NW_SPC)
+            if push_f and (self.f_fifo.is_empty() or not f_space_right):
+                if self.f_fifo.is_empty():
+                    stats['stall_starved'] += 1
+                    return (None, None, False, STARVED, NF_TOK)
+                stats['stall_out_full'] += 1
+                return (None, None, False, OUT_FULL, NF_SPC)
+
+        if aligned:
+            ops = 2 if (t_tag16(w) and t_hi(w) and t_tag16(f) and t_hi(f)) else 1
+            self.wf_fifo.push(ops)
+            stats['pairs'] += 1
+            stats['mac_ops'] += ops
+            self.mac_ops += ops
+
+        if barrier:
+            self.groups_done += 1
+            stats['barrier_cycles'] += 1
+            if final_barrier:
+                self.w_reg = 0
+                self.f_reg = 0
+                self.ds_done = True
+                return (None, None, True, NONE, 0)
+        if push_w:
+            fwd_w = self.try_load_w(w_space_down)
+            assert fwd_w is not None
+        if push_f:
+            fwd_f = self.try_load_f(f_space_right)
+            assert fwd_f is not None
+        return (fwd_w, fwd_f, True, NONE, 0)
+
+    def fill_regs(self, w_space_down, f_space_right, stats):
+        fwd_w = fwd_f = None
+        needs = 0
+        if self.w_reg == 0:
+            fwd_w = self.try_load_w(w_space_down)
+            if fwd_w is None:
+                needs |= NW_TOK | NW_SPC
+        if self.f_reg == 0:
+            fwd_f = self.try_load_f(f_space_right)
+            if fwd_f is None:
+                needs |= NF_TOK | NF_SPC
+        if needs:
+            stats['stall_starved'] += 1
+        progressed = fwd_w is not None or fwd_f is not None
+        return (fwd_w, fwd_f, progressed, STARVED if needs else NONE, needs)
+
+    def try_load_w(self, space_down):
+        if self.w_fifo.is_empty() or not space_down:
+            return None
+        t = self.w_fifo.pop()
+        self.w_reg = t
+        return t
+
+    def try_load_f(self, space_right):
+        if self.f_fifo.is_empty() or not space_right:
+            return None
+        t = self.f_fifo.pop()
+        self.f_reg = t
+        return t
+
+    def mac_step(self, ds_cycle, stats):
+        if self.compute_done:
+            return
+        ops = self.wf_fifo.peek()
+        if ops is not None:
+            self.wf_fifo.pop()
+            if ops > 1:
+                self.wf_fifo.push(ops - 1)
+        else:
+            if self.ds_done:
+                self.compute_done = True
+                self.finish_ds_cycle = ds_cycle
+            else:
+                stats['mac_idle'] += 1
+
+
+def new_stats():
+    return dict(ds_cycles=0, mac_ops=0, pairs=0, token_pushes=0,
+                stall_wf_full=0, stall_out_full=0, stall_starved=0,
+                mac_idle=0, f_tokens=0, w_tokens=0, barrier_cycles=0)
+
+CYCLE_LIMIT = 2_000_000
+
+
+def reference(f_src, w_src, n_groups, rows, cols, depths, ratio):
+    stats = new_stats()
+    f_idx = [0] * rows
+    w_idx = [0] * cols
+    pes = [Pe(depths, n_groups) for _ in range(rows * cols)]
+    ds_cycle = 0
+    mac_countdown = ratio
+    remaining = rows * cols
+    while remaining > 0:
+        for r in range(rows):
+            if f_idx[r] < len(f_src[r]) and pes[r * cols].f_fifo.has_space():
+                pes[r * cols].f_fifo.push(f_src[r][f_idx[r]])
+                f_idx[r] += 1
+                stats['f_tokens'] += 1
+        for c in range(cols):
+            if w_idx[c] < len(w_src[c]) and pes[c].w_fifo.has_space():
+                pes[c].w_fifo.push(w_src[c][w_idx[c]])
+                w_idx[c] += 1
+                stats['w_tokens'] += 1
+
+        idx = rows * cols
+        for r in reversed(range(rows)):
+            for c in reversed(range(cols)):
+                idx -= 1
+                if pes[idx].ds_done:
+                    continue
+                down_ok = r + 1 >= rows or pes[idx + cols].w_fifo.has_space()
+                right_ok = c + 1 >= cols or pes[idx + 1].f_fifo.has_space()
+                fwd_w, fwd_f, _, _, _ = pes[idx].ds_step(down_ok, right_ok, stats)
+                if fwd_w is not None and r + 1 < rows:
+                    pes[idx + cols].w_fifo.push(fwd_w)
+                    stats['token_pushes'] += 1
+                if fwd_f is not None and c + 1 < cols:
+                    pes[idx + 1].f_fifo.push(fwd_f)
+                    stats['token_pushes'] += 1
+
+        mac_countdown -= 1
+        if mac_countdown == 0:
+            mac_countdown = ratio
+            for pe in pes:
+                was = pe.compute_done
+                pe.mac_step(ds_cycle, stats)
+                if pe.compute_done and not was:
+                    remaining -= 1
+
+        ds_cycle += 1
+        if ds_cycle > CYCLE_LIMIT:
+            raise RuntimeError("reference deadlock")
+
+    max_drain = 0
+    for c in range(cols):
+        t = 0
+        for r in range(rows):
+            fin = pes[r * cols + c].finish_ds_cycle // ratio + 1
+            t = max(t + 1, fin + 1)
+        max_drain = max(max_drain, t)
+    stats['ds_cycles'] = max(ds_cycle, max_drain * ratio)
+    return stats
+
+
+def event(f_src, w_src, n_groups, rows, cols, depths, ratio):
+    """Bitset worklist + precise-need wakes (mirrors sim/array.rs)."""
+    stats = new_stats()
+    n = rows * cols
+    words = (n + 63) // 64
+    pes = [Pe(depths, n_groups) for _ in range(n)]
+    f_idx = [0] * rows
+    w_idx = [0] * cols
+    live_rows = list(range(rows))
+    live_cols = list(range(cols))
+    cur = [0] * words
+    nxt = [0] * words
+    park_cat = [NONE] * n
+    park_need = [0] * n
+    wf_busy = []
+    finishing = []
+    counts = [0, 0, 0, 0]
+    fresh = [0, 0, 0, 0]
+    n_mac_idle = n
+    remaining = n
+    ds_cycle = 0
+    mac_countdown = ratio
+
+    def wake(bits, j, ev):
+        if park_cat[j] != NONE and not (park_need[j] & ev):
+            return
+        bits[j >> 6] |= 1 << (j & 63)
+
+    for i in range(n):
+        cur[i >> 6] |= 1 << (i & 63)
+
+    while remaining > 0:
+        # 1. injection
+        ri = 0
+        while ri < len(live_rows):
+            r = live_rows[ri]
+            edge = r * cols
+            if pes[edge].f_fifo.has_space():
+                pes[edge].f_fifo.push(f_src[r][f_idx[r]])
+                f_idx[r] += 1
+                stats['f_tokens'] += 1
+                wake(cur, edge, NF_TOK)
+                if f_idx[r] == len(f_src[r]):
+                    live_rows[ri] = live_rows[-1]
+                    live_rows.pop()
+                    continue
+            ri += 1
+        ci = 0
+        while ci < len(live_cols):
+            c = live_cols[ci]
+            if pes[c].w_fifo.has_space():
+                pes[c].w_fifo.push(w_src[c][w_idx[c]])
+                w_idx[c] += 1
+                stats['w_tokens'] += 1
+                wake(cur, c, NW_TOK)
+                if w_idx[c] == len(w_src[c]):
+                    live_cols[ci] = live_cols[-1]
+                    live_cols.pop()
+                    continue
+            ci += 1
+
+        # 2. DS scan: highest set bit first (reverse raster order)
+        wi = words
+        while wi > 0:
+            wi -= 1
+            while cur[wi]:
+                b = cur[wi].bit_length() - 1
+                cur[wi] &= ~(1 << b)
+                i = (wi << 6) + b
+                cat = park_cat[i]
+                if cat != NONE:
+                    counts[cat] -= 1
+                    park_cat[i] = NONE
+                if pes[i].ds_done:
+                    continue
+                first_col = i % cols == 0
+                last_col = i % cols == cols - 1
+                down_ok = i + cols >= n or pes[i + cols].w_fifo.has_space()
+                right_ok = last_col or pes[i + 1].f_fifo.has_space()
+                wf_was_empty = pes[i].wf_fifo.is_empty()
+                fwd_w, fwd_f, progressed, stall, needm = \
+                    pes[i].ds_step(down_ok, right_ok, stats)
+                if fwd_w is not None:
+                    if i >= cols:
+                        wake(cur, i - cols, NW_SPC)
+                    if i + cols < n:
+                        pes[i + cols].w_fifo.push(fwd_w)
+                        stats['token_pushes'] += 1
+                        wake(nxt, i + cols, NW_TOK)
+                if fwd_f is not None:
+                    if not first_col:
+                        wake(cur, i - 1, NF_SPC)
+                    if not last_col:
+                        pes[i + 1].f_fifo.push(fwd_f)
+                        stats['token_pushes'] += 1
+                        wake(nxt, i + 1, NF_TOK)
+                if wf_was_empty and not pes[i].wf_fifo.is_empty():
+                    n_mac_idle -= 1
+                    wf_busy.append(i)
+                if pes[i].ds_done:
+                    if pes[i].wf_fifo.is_empty():
+                        n_mac_idle -= 1
+                        finishing.append(i)
+                elif progressed:
+                    nxt[wi] |= 1 << b
+                else:
+                    assert stall != NONE
+                    park_cat[i] = stall
+                    park_need[i] = needm
+                    fresh[stall] += 1
+
+        # 3. parked accrual + fold fresh parks
+        stats['stall_starved'] += counts[STARVED]
+        stats['stall_out_full'] += counts[OUT_FULL]
+        stats['stall_wf_full'] += counts[WF_FULL]
+        for k in (1, 2, 3):
+            counts[k] += fresh[k]
+            fresh[k] = 0
+
+        # 4. MAC tick
+        mac_countdown -= 1
+        if mac_countdown == 0:
+            mac_countdown = ratio
+            stats['mac_idle'] += n_mac_idle
+            for j in finishing:
+                pes[j].compute_done = True
+                pes[j].finish_ds_cycle = ds_cycle
+                remaining -= 1
+            finishing.clear()
+            k = 0
+            while k < len(wf_busy):
+                j = wf_busy[k]
+                ops = pes[j].wf_fifo.pop()
+                if ops > 1:
+                    pes[j].wf_fifo.push(ops - 1)
+                if park_cat[j] == WF_FULL:
+                    nxt[j >> 6] |= 1 << (j & 63)
+                if pes[j].wf_fifo.is_empty():
+                    wf_busy[k] = wf_busy[-1]
+                    wf_busy.pop()
+                    if pes[j].ds_done:
+                        finishing.append(j)
+                    else:
+                        n_mac_idle += 1
+                else:
+                    k += 1
+
+        ds_cycle += 1
+        if ds_cycle > CYCLE_LIMIT:
+            raise RuntimeError("event overrun")
+        if remaining == 0:
+            break
+
+        # 5. skip-ahead when globally stalled
+        if not any(nxt):
+            injectable = any(pes[r * cols].f_fifo.has_space() for r in live_rows) \
+                or any(pes[c].w_fifo.has_space() for c in live_cols)
+            if not injectable:
+                if not wf_busy and not finishing:
+                    raise RuntimeError("event deadlock")
+                skip = mac_countdown - 1
+                if skip > 0:
+                    stats['stall_starved'] += skip * counts[STARVED]
+                    stats['stall_out_full'] += skip * counts[OUT_FULL]
+                    stats['stall_wf_full'] += skip * counts[WF_FULL]
+                    ds_cycle += skip
+                    mac_countdown = 1
+
+        # cur is drained: swap with the queued next-cycle set
+        cur, nxt = nxt, cur
+
+    max_drain = 0
+    for c in range(cols):
+        t = 0
+        for r in range(rows):
+            fin = pes[r * cols + c].finish_ds_cycle // ratio + 1
+            t = max(t + 1, fin + 1)
+        max_drain = max(max_drain, t)
+    stats['ds_cycles'] = max(ds_cycle, max_drain * ratio)
+    return stats
+
+
+def gen_stream(rng, n_groups, density, p16, kernel):
+    toks = []
+    for g in range(n_groups):
+        start = len(toks)
+        off = 0
+        while off < 16:
+            if rng.random() < density:
+                v = rng.randrange(1, 128)
+                if rng.random() < p16:
+                    toks.append(tok(v, off, tag16=True, hi=False))
+                    toks.append(tok(rng.randrange(1, 128), off, tag16=True, hi=True))
+                else:
+                    toks.append(tok(v, off))
+            off += 1
+        if len(toks) == start:
+            toks.append(tok(0, 0, eog=True))
+        else:
+            toks[-1] |= EOG
+    if kernel and toks:
+        toks[-1] |= EOK
+    return toks
+
+
+def run_fuzz(cases=400, seed=7):
+    rng = random.Random(seed)
+    for case in range(cases):
+        rows = rng.randrange(1, 6)
+        cols = rng.randrange(1, 6)
+        n_groups = rng.randrange(1, 5)
+        density = rng.choice([0.1, 0.3, 0.5, 0.8, 1.0])
+        p16 = rng.choice([0.0, 0.0, 0.2])
+        depth = rng.choice([1, 2, 4, 8, INF])
+        depths = (depth, depth, depth)
+        ratio = rng.choice([1, 2, 4, 8])
+        f_src = [gen_stream(rng, n_groups, density, p16, False) for _ in range(rows)]
+        w_src = [gen_stream(rng, n_groups, density, p16, True) for _ in range(cols)]
+        a = reference(f_src, w_src, n_groups, rows, cols, depths, ratio)
+        b = event(f_src, w_src, n_groups, rows, cols, depths, ratio)
+        if a != b:
+            diff = {k: (a[k], b[k]) for k in a if a[k] != b[k]}
+            print(f"case {case} DIVERGED rows={rows} cols={cols} groups={n_groups} "
+                  f"density={density} p16={p16} depth={depth} ratio={ratio}")
+            print("  diff:", diff)
+            return False
+    print(f"all {cases} fuzz cases bit-identical")
+    return True
+
+
+if __name__ == "__main__":
+    ok = run_fuzz(400, 7)
+    ok = run_fuzz(400, 1234) and ok
+    raise SystemExit(0 if ok else 1)

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate: release build, full test suite, and a
+# compile-check of every bench target (they are plain binaries with
+# harness = false, so --no-run is the build-only mode).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+cargo bench --no-run
+echo "tier1 OK"
