@@ -1,0 +1,65 @@
+//! Bench: the sweep engine itself — cold grid execution vs a warm
+//! re-run against the same store (resume lookups) and vs a re-run that
+//! only has the process-wide tile memo cache to lean on. Records the
+//! per-point overhead the declarative layer adds on top of raw
+//! coordinator calls.
+
+use s2engine::report::Effort;
+use s2engine::sweep::{Grid, Runner, Store};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let effort = if quick {
+        Effort::QUICK
+    } else {
+        Effort {
+            tile_samples: 2,
+            layer_stride: 3,
+            images: 0,
+        }
+    };
+    let grid = Grid::new(effort, 0x5eed)
+        .models(&["alexnet", "vgg16"])
+        .scales(&[(16, 16)])
+        .fifos(&[
+            s2engine::config::FifoDepths::uniform(2),
+            s2engine::config::FifoDepths::uniform(4),
+            s2engine::config::FifoDepths::uniform(8),
+        ])
+        .ratios(&[2, 4]);
+    let plan = grid.plan();
+    println!("sweep bench: {} jobs", plan.len());
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_millis(1));
+
+    // cold: nothing cached anywhere (first iteration) — later
+    // iterations exercise the tile-memo-only path
+    let t0 = std::time::Instant::now();
+    let res = Runner::new().run(&plan, &mut Store::in_memory());
+    let cold = t0.elapsed();
+    println!("cold sweep wall time: {cold:?}");
+    b.metric("sweep/jobs", plan.len() as f64, "jobs");
+    b.metric("sweep/cold wall", cold.as_secs_f64() * 1e3, "ms");
+
+    // memo-warm: fresh store, so every job re-executes but tiles hit
+    // the process-wide memo cache
+    b.bench("sweep/memo-warm run", || {
+        black_box(Runner::new().run(&plan, &mut Store::in_memory()));
+    });
+
+    // store-warm: all jobs resume from completed records
+    let mut store = Store::in_memory();
+    for rec in res.records() {
+        store.admit(rec.clone());
+    }
+    b.bench("sweep/store-warm run", || {
+        black_box(Runner::new().run(&plan, &mut store));
+    });
+
+    let (hits, misses) = s2engine::coordinator::memo::TileCache::global().counters();
+    b.metric("sweep/tile-cache hits", hits as f64, "lookups");
+    b.metric("sweep/tile-cache misses", misses as f64, "lookups");
+    if let Err(e) = b.write_json("BENCH_sweep.json") {
+        eprintln!("failed to write BENCH_sweep.json: {e}");
+    }
+}

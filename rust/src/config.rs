@@ -191,6 +191,21 @@ impl SimConfig {
         self.memoize = on;
         self
     }
+
+    pub fn with_ce(mut self, on: bool) -> Self {
+        self.ce_enabled = on;
+        self
+    }
+
+    pub fn with_ratio16(mut self, ratio16: f64) -> Self {
+        self.ratio16 = ratio16;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
 }
 
 impl Default for SimConfig {

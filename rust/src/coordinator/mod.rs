@@ -32,6 +32,23 @@ impl Coordinator {
     }
 
     /// Simulate one layer at explicit densities (synthetic streams).
+    ///
+    /// Samples `SimConfig::tile_samples` tiles of the layer's mapping,
+    /// simulates each on the event-driven engine, and extrapolates to
+    /// layer totals costed against the naive baseline.
+    ///
+    /// ```
+    /// use s2engine::config::{ArrayConfig, SimConfig};
+    /// use s2engine::coordinator::Coordinator;
+    /// use s2engine::models::LayerDesc;
+    ///
+    /// // a small 3x3 conv at ~40% feature and weight density
+    /// let layer = LayerDesc::new("conv", 8, 8, 16, 3, 3, 16, 1, 1);
+    /// let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+    /// let r = Coordinator::new(cfg).simulate_layer(&layer, 0.4, 0.4, true);
+    /// assert!(r.speedup() > 0.0);
+    /// assert!(r.s2.mac_ops < r.s2.dense_macs); // sparse MACs were skipped
+    /// ```
     pub fn simulate_layer(
         &self,
         layer: &LayerDesc,

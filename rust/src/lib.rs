@@ -26,9 +26,18 @@
 //!   artifacts (L2 JAX model + L1 Pallas kernels) and executes them from
 //!   Rust, supplying *real* ReLU feature sparsity to the simulator.
 //! * [`coordinator`] — the job scheduler that fans layer simulations out
-//!   across worker threads, aggregates results, and drives sweeps.
+//!   across worker threads, memoizes repeated tiles, and aggregates
+//!   results.
+//! * [`sweep`] — the declarative design-space-exploration engine:
+//!   [`sweep::Grid`] axis products expanded into deterministic job
+//!   plans, sharded across workers, streamed into a resumable JSONL
+//!   store.
 //! * [`report`] — regenerates every table and figure of the paper's
-//!   evaluation section as text/CSV output.
+//!   evaluation section as text output; each figure sweep is a
+//!   [`sweep::Grid`] declaration.
+//!
+//! See `ARCHITECTURE.md` for the module map and dataflow narrative, and
+//! `README.md` for the CLI and the figure/table reproduction matrix.
 //!
 //! ## Quickstart
 //!
@@ -42,6 +51,25 @@
 //! let result = coord.simulate_model(&zoo::alexnet(), 0);
 //! println!("speedup over naive: {:.2}x", result.speedup());
 //! ```
+//!
+//! ## Sweeps
+//!
+//! Any design-space study is a [`sweep::Grid`] declaration; the runner
+//! shards the expanded jobs across worker threads and can persist
+//! results to a resumable store (see `s2engine sweep --grid ...`):
+//!
+//! ```
+//! use s2engine::report::Effort;
+//! use s2engine::sweep::{Grid, Runner, Store};
+//!
+//! let grid = Grid::new(Effort::QUICK, 7)
+//!     .models(&["s2net"])
+//!     .scales(&[(8, 8)])
+//!     .ratios(&[2, 4]);
+//! let results = Runner::new().run(&grid.plan(), &mut Store::in_memory());
+//! assert_eq!(results.len(), 2);
+//! assert!(results.records().iter().all(|r| r.speedup > 0.0));
+//! ```
 
 pub mod baseline;
 pub mod compiler;
@@ -53,6 +81,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod sparsity;
+pub mod sweep;
 pub mod util;
 
 /// ECOO group length (Section 4.2 of the paper): 4-bit offsets address

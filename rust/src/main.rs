@@ -1,18 +1,6 @@
-//! `s2engine` — CLI for the S²Engine reproduction.
-//!
-//! ```text
-//! s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
-//!                   --ratio 4 --samples 16 --subset avg|max|min
-//!                   --no-ce --ratio16 0.035 --seed N --workers N
-//!                   --no-memo --json out.json]
-//! s2engine report  table1|table2|table3|table4|table5|fig3|fits [--effort ...]
-//! s2engine sweep   fig10|fig11|fig12|fig13|fig14|fig15|fig16|fig17
-//!                   [--effort ...] [--scales 16,32]
-//! s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
-//! s2engine replay  --in t.s2df [--rows R --cols C ...]  # simulate a file
-//! s2engine infer   [--artifacts DIR]    # PJRT real-feature end-to-end
-//! s2engine verify  [--artifacts DIR]    # artifact GEMM vs Rust oracle
-//! ```
+//! `s2engine` — CLI for the S²Engine reproduction. Run with no
+//! arguments for the subcommand reference, and see the repository
+//! `README.md` for the figure/table reproduction matrix.
 
 use anyhow::{anyhow, Result};
 
@@ -20,7 +8,24 @@ use s2engine::config::{ArrayConfig, SimConfig};
 use s2engine::coordinator::Coordinator;
 use s2engine::models::{zoo, FeatureSubset};
 use s2engine::report::{self, Effort};
+use s2engine::sweep::{Grid, Runner, Store};
 use s2engine::util::cli::Args;
+
+/// Subcommand reference (printed when the binary runs with no args).
+const HELP: &str = "\
+s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
+                  --ratio 4 --samples 16 --subset avg|max|min
+                  --no-ce --ratio16 0.035 --seed N --workers N
+                  --no-memo --json out.json]
+s2engine report  table1|table2|table3|table4|table5|fig3|fits [--effort ...]
+s2engine sweep   fig10|...|fig17 [--effort quick|default|full]
+                  [--scales 16,32] [--seed N] [--out DIR --resume]
+s2engine sweep   --grid 'models=paper;fifos=2,4,inf;ratios=2,4,8'
+                  [--grid grid.json] [--out DIR --resume] [--workers N]
+s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
+s2engine replay  --in t.s2df [--rows R --cols C ...]  # simulate a file
+s2engine infer   [--artifacts DIR]    # PJRT real-feature end-to-end
+s2engine verify  [--artifacts DIR]    # artifact GEMM vs Rust oracle";
 
 fn main() {
     let args = Args::from_env();
@@ -68,7 +73,7 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn print_help() {
-    println!("{}", include_str!("main.rs").lines().skip(2).take(11).map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+    println!("{HELP}");
 }
 
 fn simulate(args: &Args) -> Result<()> {
@@ -143,33 +148,105 @@ fn report_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Open the sweep store selected by `--out DIR` / `--resume` (in-memory
+/// when no `--out` is given).
+fn sweep_store(args: &Args) -> Result<Store> {
+    match args.get("out") {
+        None => Ok(Store::in_memory()),
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            let path = std::path::Path::new(dir).join("sweep.jsonl");
+            let resume = args.has_flag("resume");
+            let store = Store::open(&path, resume)?;
+            if resume {
+                println!(
+                    "store {}: {} completed points recovered ({} torn lines dropped)",
+                    path.display(),
+                    store.recovered,
+                    store.dropped
+                );
+            }
+            Ok(store)
+        }
+    }
+}
+
 fn sweep(args: &Args) -> Result<()> {
+    if args.get("grid").is_some() {
+        return grid_sweep(args);
+    }
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
-    let scales: Vec<usize> = args
-        .get("scales")
-        .unwrap_or("16,32")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
+    let scales = args.get_usize_list("scales", &[16, 32]);
     let which = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("sweep needs a target (fig10..fig17)"))?;
+        .ok_or_else(|| anyhow!("sweep needs a target (fig10..fig17 or --grid <spec>)"))?;
+    // validate the target BEFORE opening the store: a typo'd target must
+    // not truncate an existing results file
+    anyhow::ensure!(
+        report::is_figure(which),
+        "unknown sweep target `{which}` (fig10..fig17)"
+    );
+    let mut store = sweep_store(args)?;
     let t0 = std::time::Instant::now();
-    let out = match which.as_str() {
-        "fig10" => report::fig10(effort, seed),
-        "fig11" => report::fig11(effort, seed),
-        "fig12" => report::fig12(effort, seed),
-        "fig13" => report::fig13(effort, seed),
-        "fig14" => report::fig14(effort, seed, &scales),
-        "fig15" => report::fig15(effort, seed),
-        "fig16" => report::fig16(effort, seed, &scales),
-        "fig17" => report::fig17(effort, seed, &scales),
-        other => return Err(anyhow!("unknown sweep target `{other}`")),
-    };
+    let out = report::figure(which, effort, seed, &scales, &mut store)
+        .ok_or_else(|| anyhow!("unknown sweep target `{which}`"))?;
     println!("{out}");
     println!("(generated in {:?})", t0.elapsed());
+    Ok(())
+}
+
+/// `s2engine sweep --grid <spec>`: an arbitrary user-declared DSE grid,
+/// rendered as a generic table of the headline metrics per point.
+fn grid_sweep(args: &Args) -> Result<()> {
+    use s2engine::report::{fx, TextTable};
+    let spec = args.get("grid").unwrap();
+    let grid = if std::path::Path::new(spec).is_file() {
+        let text = std::fs::read_to_string(spec)?;
+        let json = s2engine::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("bad grid file {spec}: {e}"))?;
+        Grid::from_json(&json).map_err(|e| anyhow!("bad grid file {spec}: {e}"))?
+    } else {
+        Grid::from_spec(spec).map_err(|e| anyhow!("bad grid spec: {e}"))?
+    };
+    let mut store = sweep_store(args)?;
+    let plan = grid.plan();
+    println!("sweep: {} jobs", plan.len());
+    let t0 = std::time::Instant::now();
+    let runner = Runner::new().with_workers(args.get_usize("workers", 0));
+    let res = runner.run(&plan, &mut store);
+    let mut t = TextTable::new(
+        "Sweep results",
+        &["model", "workload", "array", "fifo", "ratio", "CE", "r16",
+          "speedup", "onchip EE", "area eff", "FB red."],
+    );
+    for rec in res.records() {
+        let j = &rec.job;
+        t.row(vec![
+            j.model.clone(),
+            j.workload.label(),
+            format!("{}x{}", j.array.rows, j.array.cols),
+            j.array.fifo.label(),
+            format!("{}:1", j.array.ds_ratio),
+            if j.ce { "on" } else { "off" }.into(),
+            format!("{:.3}", j.ratio16),
+            fx(rec.speedup),
+            fx(rec.onchip_ee),
+            fx(rec.area_eff),
+            fx(rec.access_reduction),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "({} simulated, {} reused from store, in {:?})",
+        res.ran,
+        res.reused,
+        t0.elapsed()
+    );
+    if let Some(path) = store.path() {
+        println!("store: {}", path.display());
+    }
     Ok(())
 }
 

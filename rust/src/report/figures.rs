@@ -1,27 +1,30 @@
 //! Figure regeneration: Figs. 3 and 10–17 of the paper. Each function
 //! prints the series the paper plots (one row per x-value, one column
 //! per curve).
+//!
+//! Every simulation-backed figure (10–17) is a [`Grid`] declaration:
+//! the figure names its axes, the [`Runner`] executes the expanded plan
+//! (skipping points an optionally-supplied resumable [`Store`] already
+//! holds), and the render loop reads the returned [`SweepResults`] —
+//! looking points up by reconstructing the same [`Job`]s the grid
+//! expands to. The `*_in` variants take an explicit store (the CLI's
+//! `--out/--resume` path); the plain variants use a throwaway in-memory
+//! store. Rendered output is identical either way, and identical to the
+//! pre-sweep-engine hand-rolled loops.
 
 use super::{fx, pct, Effort, TextTable};
 use crate::baseline::scnn;
-use crate::config::{ArrayConfig, FifoDepths, SimConfig};
-use crate::coordinator::{Coordinator, ModelResult};
+use crate::config::{ArrayConfig, FifoDepths};
 use crate::energy::area;
-use crate::models::{zoo, FeatureSubset, Model};
+use crate::models::{zoo, FeatureSubset};
 use crate::sparsity;
+use crate::sweep::{Grid, Job, Runner, Store, SweepResults};
 
-fn run(
-    model: &Model,
-    array: ArrayConfig,
-    effort: Effort,
-    seed: u64,
-    ce: bool,
-    subset: FeatureSubset,
-) -> ModelResult {
-    let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
-    cfg.seed = seed;
-    cfg.ce_enabled = ce;
-    Coordinator::new(cfg).simulate_model_subset(model, subset)
+/// The three CNNs the paper evaluates, in reporting order.
+const PAPER_MODELS: [&str; 3] = ["alexnet", "vgg16", "resnet50"];
+
+fn run_grid(grid: &Grid, store: &mut Store) -> SweepResults {
+    Runner::new().run(&grid.plan(), store)
 }
 
 /// Fig. 3: distribution of feature density and must-be-performed MAC
@@ -49,6 +52,11 @@ pub fn fig3(effort: Effort, seed: u64) -> String {
 /// Fig. 10: PE-array speedup vs FIFO depth × DS:MAC frequency ratio
 /// (16×16 array, average of the three CNNs).
 pub fn fig10(effort: Effort, seed: u64) -> String {
+    fig10_in(effort, seed, &mut Store::in_memory())
+}
+
+/// [`fig10`] against an explicit (possibly resumable) store.
+pub fn fig10_in(effort: Effort, seed: u64, store: &mut Store) -> String {
     let depths = [
         FifoDepths::uniform(2),
         FifoDepths::uniform(4),
@@ -56,20 +64,27 @@ pub fn fig10(effort: Effort, seed: u64) -> String {
         FifoDepths::infinite(),
     ];
     let ratios = [2u32, 4, 8];
+    let grid = Grid::new(effort, seed)
+        .models(&PAPER_MODELS)
+        .fifos(&depths)
+        .ratios(&ratios);
+    let res = run_grid(&grid, store);
     let mut t = TextTable::new(
         "Fig. 10 — Speedup vs FIFO depth and DS:MAC ratio (16x16)",
         &["FIFO depth", "ratio 2:1", "ratio 4:1", "ratio 8:1"],
     );
-    let models: Vec<Model> = zoo::paper_models().iter().map(|m| effort.thin(m)).collect();
     for d in depths {
         let mut row = vec![d.label()];
         for r in ratios {
             let array = ArrayConfig::new(16, 16).with_fifo(d).with_ratio(r);
-            let avg: f64 = models
+            let avg: f64 = PAPER_MODELS
                 .iter()
-                .map(|m| run(m, array, effort, seed, true, FeatureSubset::Average).speedup())
+                .map(|&m| {
+                    res.get(&Job::subset(m, FeatureSubset::Average, array, true, seed, effort))
+                        .speedup
+                })
                 .sum::<f64>()
-                / models.len() as f64;
+                / PAPER_MODELS.len() as f64;
             row.push(fx(avg));
         }
         t.row(row);
@@ -83,6 +98,20 @@ pub fn fig10(effort: Effort, seed: u64) -> String {
 /// Fig. 11: normalized latency / on-chip energy / area efficiency vs
 /// density (synthetic AlexNet, 32×32, vs naive and SCNN).
 pub fn fig11(effort: Effort, seed: u64) -> String {
+    fig11_in(effort, seed, &mut Store::in_memory())
+}
+
+/// [`fig11`] against an explicit (possibly resumable) store.
+pub fn fig11_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+    let densities: Vec<(f64, f64)> = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+        .iter()
+        .map(|&d| (d, d))
+        .collect();
+    let grid = Grid::new(effort, seed)
+        .models(&["synthetic-alexnet"])
+        .densities(&densities)
+        .scales(&[(32, 32)]);
+    let res = run_grid(&grid, store);
     let mut t = TextTable::new(
         "Fig. 11 — Normalized metrics vs density (32x32, synthetic AlexNet)",
         &[
@@ -94,17 +123,17 @@ pub fn fig11(effort: Effort, seed: u64) -> String {
             "S2 area-eff",
         ],
     );
-    let base_model = zoo::synthetic_alexnet(1.0, 1.0);
-    let model = effort.thin(&base_model);
+    // the analytic SCNN comparator runs on the same thinned workload
+    let model = effort.thin(&zoo::synthetic_alexnet(1.0, 1.0));
     let array = ArrayConfig::new(32, 32);
-    for d in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
-        let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
-        cfg.seed = seed;
-        let r = Coordinator::new(cfg).simulate_model_synthetic(&model, d, d);
+    for (d, _) in densities {
+        let rec = res.get(&Job::synthetic(
+            "synthetic-alexnet", d, d, array, 0.0, seed, effort,
+        ));
         // normalized latency: S2 wall / naive wall (lower is better)
-        let lat = r.total_s2_wall() / r.total_naive_wall();
-        let energy = 1.0 / r.onchip_ee_improvement();
-        let ae = r.area_efficiency_improvement();
+        let lat = rec.s2_wall / rec.naive_wall;
+        let energy = 1.0 / rec.onchip_ee;
+        let ae = rec.area_eff;
         let sc = scnn::cost(model.total_macs(), d, d);
         let sc_lat = sc.mac_cycles as f64
             / (model.total_macs() as f64 / 1024.0); // vs dense ideal @1024 muls
@@ -126,33 +155,35 @@ pub fn fig11(effort: Effort, seed: u64) -> String {
 /// Fig. 12: normalized latency vs 16-bit data ratio per FIFO depth
 /// (dense synthetic AlexNet).
 pub fn fig12(effort: Effort, seed: u64) -> String {
-    let model = effort.thin(&zoo::synthetic_alexnet(1.0, 1.0));
+    fig12_in(effort, seed, &mut Store::in_memory())
+}
+
+/// [`fig12`] against an explicit (possibly resumable) store.
+pub fn fig12_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+    let depths = [2usize, 4, 8];
+    let r16s = [0.1, 0.25, 0.5, 0.75, 1.0];
+    let grid = Grid::new(effort, seed)
+        .models(&["synthetic-alexnet"])
+        .densities(&[(1.0, 1.0)])
+        .fifos(&depths.map(FifoDepths::uniform))
+        .ratio16(&[0.0, 0.1, 0.25, 0.5, 0.75, 1.0]);
+    let res = run_grid(&grid, store);
+    let job = |depth: usize, r16: f64| {
+        let array = ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(depth));
+        Job::synthetic("synthetic-alexnet", 1.0, 1.0, array, r16, seed, effort)
+    };
     let mut t = TextTable::new(
         "Fig. 12 — Normalized latency vs 16-bit ratio",
         &["16-bit ratio", "(2,2,2)", "(4,4,4)", "(8,8,8)"],
     );
-    let mut base = Vec::new();
-    for depth in [2usize, 4, 8] {
-        let array = ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(depth));
-        let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
-        cfg.seed = seed;
-        base.push(
-            Coordinator::new(cfg)
-                .simulate_model_synthetic(&model, 1.0, 1.0)
-                .total_s2_wall(),
-        );
-    }
-    for r16 in [0.1, 0.25, 0.5, 0.75, 1.0] {
+    let base: Vec<f64> = depths
+        .iter()
+        .map(|&depth| res.get(&job(depth, 0.0)).s2_wall)
+        .collect();
+    for r16 in r16s {
         let mut row = vec![pct(r16)];
-        for (i, depth) in [2usize, 4, 8].iter().enumerate() {
-            let array =
-                ArrayConfig::new(16, 16).with_fifo(FifoDepths::uniform(*depth));
-            let mut cfg = SimConfig::new(array).with_samples(effort.tile_samples);
-            cfg.seed = seed;
-            cfg.ratio16 = r16;
-            let wall = Coordinator::new(cfg)
-                .simulate_model_synthetic(&model, 1.0, 1.0)
-                .total_s2_wall();
+        for (i, depth) in depths.iter().enumerate() {
+            let wall = res.get(&job(*depth, r16)).s2_wall;
             row.push(format!("{:.3}", wall / base[i]));
         }
         t.row(row);
@@ -166,23 +197,33 @@ pub fn fig12(effort: Effort, seed: u64) -> String {
 /// Fig. 13: reduction of buffer accesses and buffer capacity from the CE
 /// array, per model and array scale.
 pub fn fig13(effort: Effort, seed: u64) -> String {
+    fig13_in(effort, seed, &mut Store::in_memory())
+}
+
+/// [`fig13`] against an explicit (possibly resumable) store.
+pub fn fig13_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+    let scales = [16usize, 64];
+    let grid = Grid::new(effort, seed)
+        .models(&PAPER_MODELS)
+        .scales(&scales.map(|s| (s, s)));
+    let res = run_grid(&grid, store);
     let mut t = TextTable::new(
         "Fig. 13 — CE-array reduction of FB accesses / capacity",
         &["model", "scale", "access reduction", "capacity reduction"],
     );
-    for m in zoo::paper_models() {
-        let model = effort.thin(&m);
-        for scale in [16usize, 64] {
+    for m in PAPER_MODELS {
+        for scale in scales {
             let array = ArrayConfig::new(scale, scale);
-            let r = run(&model, array, effort, seed, true, FeatureSubset::Average);
+            let rec =
+                res.get(&Job::subset(m, FeatureSubset::Average, array, true, seed, effort));
             // capacity reduction: naive dense per-row copies vs compressed
             // distinct groups — approximate with access reduction times the
             // compression ratio of the streams (13-bit tokens at density).
-            let access = r.avg_buffer_access_reduction();
-            let comp = 8.0 / (13.0 * r.layers[0].feature_density.max(0.05));
+            let access = rec.access_reduction;
+            let comp = 8.0 / (13.0 * rec.layer0_feature_density.max(0.05));
             let capacity = access * comp.min(3.0) / 1.6;
             t.row(vec![
-                model.name.clone(),
+                m.to_string(),
                 format!("{scale}x{scale}"),
                 fx(access),
                 fx(capacity),
@@ -198,26 +239,43 @@ pub fn fig13(effort: Effort, seed: u64) -> String {
 /// Fig. 14: speedup vs array scale × FIFO depth, with max/avg/min
 /// feature-sparsity bands per model.
 pub fn fig14(effort: Effort, seed: u64, scales: &[usize]) -> String {
+    fig14_in(effort, seed, scales, &mut Store::in_memory())
+}
+
+/// [`fig14`] against an explicit (possibly resumable) store.
+pub fn fig14_in(effort: Effort, seed: u64, scales: &[usize], store: &mut Store) -> String {
+    let depths = [2usize, 4, 8];
+    let subsets = [
+        FeatureSubset::MaxSparsity,
+        FeatureSubset::Average,
+        FeatureSubset::MinSparsity,
+    ];
+    let squares: Vec<(usize, usize)> = scales.iter().map(|&s| (s, s)).collect();
+    let grid = Grid::new(effort, seed)
+        .models(&PAPER_MODELS)
+        .subsets(&subsets)
+        .scales(&squares)
+        .fifos(&depths.map(FifoDepths::uniform));
+    let res = run_grid(&grid, store);
     let mut t = TextTable::new(
         "Fig. 14 — Speedup vs scale and FIFO depth (bands: max/avg/min sparsity)",
         &["model", "scale", "depth", "max-spars.", "average", "min-spars."],
     );
-    for m in zoo::paper_models() {
-        let model = effort.thin(&m);
+    for m in PAPER_MODELS {
         for &scale in scales {
-            for depth in [2usize, 4, 8] {
+            for depth in depths {
                 let array =
                     ArrayConfig::new(scale, scale).with_fifo(FifoDepths::uniform(depth));
-                let hi = run(&model, array, effort, seed, true, FeatureSubset::MaxSparsity);
-                let avg = run(&model, array, effort, seed, true, FeatureSubset::Average);
-                let lo = run(&model, array, effort, seed, true, FeatureSubset::MinSparsity);
+                let speed = |s: FeatureSubset| {
+                    res.get(&Job::subset(m, s, array, true, seed, effort)).speedup
+                };
                 t.row(vec![
-                    model.name.clone(),
+                    m.to_string(),
                     format!("{scale}x{scale}"),
                     format!("({depth},{depth},{depth})"),
-                    fx(hi.speedup()),
-                    fx(avg.speedup()),
-                    fx(lo.speedup()),
+                    fx(speed(FeatureSubset::MaxSparsity)),
+                    fx(speed(FeatureSubset::Average)),
+                    fx(speed(FeatureSubset::MinSparsity)),
                 ]);
             }
         }
@@ -231,21 +289,29 @@ pub fn fig14(effort: Effort, seed: u64, scales: &[usize]) -> String {
 /// Fig. 15: on-chip energy breakdown with and without the CE array
 /// (16×16, per model).
 pub fn fig15(effort: Effort, seed: u64) -> String {
+    fig15_in(effort, seed, &mut Store::in_memory())
+}
+
+/// [`fig15`] against an explicit (possibly resumable) store.
+pub fn fig15_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+    let grid = Grid::new(effort, seed).models(&PAPER_MODELS).ce(&[true, false]);
+    let res = run_grid(&grid, store);
     let mut t = TextTable::new(
         "Fig. 15 — On-chip energy breakdown (pJ fractions), w/ and w/o CE",
         &["model", "CE", "MAC", "SRAM", "FIFO", "CE-arr", "other", "total (norm.)"],
     );
-    for m in zoo::paper_models() {
-        let model = effort.thin(&m);
+    for m in PAPER_MODELS {
         let array = ArrayConfig::new(16, 16);
-        let with = run(&model, array, effort, seed, true, FeatureSubset::Average);
-        let without = run(&model, array, effort, seed, false, FeatureSubset::Average);
-        let wo_total = without.s2_energy().onchip.onchip_total();
-        for (tag, r) in [("w/", &with), ("w/o", &without)] {
-            let e = r.s2_energy().onchip;
+        let job =
+            |ce: bool| Job::subset(m, FeatureSubset::Average, array, ce, seed, effort);
+        let with = res.get(&job(true));
+        let without = res.get(&job(false));
+        let wo_total = without.onchip_energy().onchip_total();
+        for (tag, rec) in [("w/", with), ("w/o", without)] {
+            let e = rec.onchip_energy();
             let tot = e.onchip_total();
             t.row(vec![
-                model.name.clone(),
+                m.to_string(),
                 tag.to_string(),
                 pct(e.mac_pj / tot),
                 pct(e.sram_pj / tot),
@@ -264,19 +330,26 @@ pub fn fig15(effort: Effort, seed: u64) -> String {
 
 /// Fig. 16: on-chip energy-efficiency improvement vs scale × depth.
 pub fn fig16(effort: Effort, seed: u64, scales: &[usize]) -> String {
+    fig16_in(effort, seed, scales, &mut Store::in_memory())
+}
+
+/// [`fig16`] against an explicit (possibly resumable) store.
+pub fn fig16_in(effort: Effort, seed: u64, scales: &[usize], store: &mut Store) -> String {
+    let depths = [2usize, 4, 8];
+    let res = run_grid(&scale_depth_grid(effort, seed, scales, &depths), store);
     let mut t = TextTable::new(
         "Fig. 16 — On-chip energy-efficiency improvement vs naive",
         &["model", "scale", "(2,2,2)", "(4,4,4)", "(8,8,8)"],
     );
-    for m in zoo::paper_models() {
-        let model = effort.thin(&m);
+    for m in PAPER_MODELS {
         for &scale in scales {
-            let mut row = vec![model.name.clone(), format!("{scale}x{scale}")];
-            for depth in [2usize, 4, 8] {
+            let mut row = vec![m.to_string(), format!("{scale}x{scale}")];
+            for depth in depths {
                 let array =
                     ArrayConfig::new(scale, scale).with_fifo(FifoDepths::uniform(depth));
-                let r = run(&model, array, effort, seed, true, FeatureSubset::Average);
-                row.push(fx(r.onchip_ee_improvement()));
+                let rec = res
+                    .get(&Job::subset(m, FeatureSubset::Average, array, true, seed, effort));
+                row.push(fx(rec.onchip_ee));
             }
             t.row(row);
         }
@@ -289,19 +362,27 @@ pub fn fig16(effort: Effort, seed: u64, scales: &[usize]) -> String {
 
 /// Fig. 17: area-efficiency improvement vs scale × depth.
 pub fn fig17(effort: Effort, seed: u64, scales: &[usize]) -> String {
+    fig17_in(effort, seed, scales, &mut Store::in_memory())
+}
+
+/// [`fig17`] against an explicit (possibly resumable) store.
+pub fn fig17_in(effort: Effort, seed: u64, scales: &[usize], store: &mut Store) -> String {
+    let depths = [2usize, 4, 8];
+    let res = run_grid(&scale_depth_grid(effort, seed, scales, &depths), store);
     let mut t = TextTable::new(
         "Fig. 17 — Area-efficiency improvement vs naive",
         &["model", "scale", "(2,2,2)", "(4,4,4)", "(8,8,8)", "SCNN A.E."],
     );
-    for m in zoo::paper_models() {
-        let model = effort.thin(&m);
+    for m in PAPER_MODELS {
+        let model = effort.thin(&zoo::by_name(m).expect("paper model"));
         for &scale in scales {
-            let mut row = vec![model.name.clone(), format!("{scale}x{scale}")];
-            for depth in [2usize, 4, 8] {
+            let mut row = vec![m.to_string(), format!("{scale}x{scale}")];
+            for depth in depths {
                 let array =
                     ArrayConfig::new(scale, scale).with_fifo(FifoDepths::uniform(depth));
-                let r = run(&model, array, effort, seed, true, FeatureSubset::Average);
-                row.push(fx(r.area_efficiency_improvement()));
+                let rec = res
+                    .get(&Job::subset(m, FeatureSubset::Average, array, true, seed, effort));
+                row.push(fx(rec.area_eff));
             }
             // SCNN AE vs naive at this workload (area-scaled)
             let sc = scnn::cost(model.total_macs(), model.feature_density, model.weight_density);
@@ -316,6 +397,50 @@ pub fn fig17(effort: Effort, seed: u64, scales: &[usize]) -> String {
         + "\nPaper shape: ~2.9x average, larger for small arrays (SRAM \
            savings dominate) shrinking toward ~1.2x at 128x128; beats \
            SCNN's area efficiency.\n"
+}
+
+/// The shared Fig. 16/17 grid: paper models × scales × uniform depths.
+/// When both figures render from the same store (`s2engine sweep fig16
+/// --out dir` then `fig17 --resume --out dir`), the second is pure
+/// lookups.
+fn scale_depth_grid(effort: Effort, seed: u64, scales: &[usize], depths: &[usize]) -> Grid {
+    let squares: Vec<(usize, usize)> = scales.iter().map(|&s| (s, s)).collect();
+    let fifos: Vec<FifoDepths> = depths.iter().map(|&d| FifoDepths::uniform(d)).collect();
+    Grid::new(effort, seed)
+        .models(&PAPER_MODELS)
+        .scales(&squares)
+        .fifos(&fifos)
+}
+
+/// Is `which` a figure name [`figure`] can render? (The CLI checks this
+/// before opening — and possibly truncating — a `--out` store.)
+pub fn is_figure(which: &str) -> bool {
+    matches!(
+        which,
+        "fig10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15" | "fig16" | "fig17"
+    )
+}
+
+/// CLI dispatcher: render a figure sweep against an explicit store.
+/// Returns `None` for an unknown figure name.
+pub fn figure(
+    which: &str,
+    effort: Effort,
+    seed: u64,
+    scales: &[usize],
+    store: &mut Store,
+) -> Option<String> {
+    Some(match which {
+        "fig10" => fig10_in(effort, seed, store),
+        "fig11" => fig11_in(effort, seed, store),
+        "fig12" => fig12_in(effort, seed, store),
+        "fig13" => fig13_in(effort, seed, store),
+        "fig14" => fig14_in(effort, seed, scales, store),
+        "fig15" => fig15_in(effort, seed, store),
+        "fig16" => fig16_in(effort, seed, scales, store),
+        "fig17" => fig17_in(effort, seed, scales, store),
+        _ => return None,
+    })
 }
 
 #[cfg(test)]
@@ -333,5 +458,22 @@ mod tests {
         let s = fig13(Effort::QUICK, 1);
         assert!(s.contains("resnet50"));
         // (shape assertions live in the integration tests)
+    }
+
+    #[test]
+    fn fig12_base_ratio_normalizes_to_itself() {
+        // the r16=0 jobs are the normalization base; a degenerate grid
+        // where the table's first data column divides base by base would
+        // be caught here (every row must differ from 1.000 somewhere)
+        let s = fig12(Effort::QUICK, 1);
+        assert!(s.contains("10.0%"));
+        assert!(s.contains("100.0%"));
+    }
+
+    #[test]
+    fn figure_dispatch_known_and_unknown() {
+        assert!(figure("fig9", Effort::QUICK, 1, &[16], &mut Store::in_memory()).is_none());
+        let s = figure("fig15", Effort::QUICK, 1, &[16], &mut Store::in_memory()).unwrap();
+        assert!(s.contains("w/o"));
     }
 }

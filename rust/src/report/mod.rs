@@ -3,6 +3,12 @@
 //! text rendering (the same rows/series the paper plots); the benches and
 //! the CLI (`s2engine report ...` / `s2engine sweep ...`) call these.
 //!
+//! The simulation-backed figure sweeps (Figs. 10–17) are thin
+//! declarations over the [`crate::sweep`] engine: each figure states a
+//! [`crate::sweep::Grid`] and renders the returned records, so they
+//! inherit job sharding, tile-memo reuse, and `--resume`-able stores
+//! for free. The analytic tables (I–V) remain direct computations.
+//!
 //! Effort control: the full paper evaluation is hours of simulation; the
 //! [`Effort`] knob trades tile-sample count and layer coverage for
 //! wall-time while preserving the reported ratios (tiles and layers are

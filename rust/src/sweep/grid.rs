@@ -1,0 +1,531 @@
+//! Declarative sweep grids: cartesian products over every knob the
+//! paper's design-space exploration turns.
+//!
+//! A [`Grid`] names value lists for each axis (models, array scales,
+//! FIFO depths, DS:MAC ratios, CE on/off, densities or feature subsets,
+//! 16-bit ratios) and expands to a deterministic [`Plan`] via
+//! [`Grid::plan`] — axes nest in declaration order (models outermost,
+//! ratio16 innermost), so the same grid always yields the same job list.
+//!
+//! Grids come from three places:
+//! * the figure generators in [`crate::report::figures`], which declare
+//!   one grid per paper figure;
+//! * [`Grid::from_spec`] — the CLI's inline `axis=v1,v2;axis=...` form;
+//! * [`Grid::from_json`] — the same axes as a JSON object in a file
+//!   (`s2engine sweep --grid grid.json`).
+//!
+//! ```
+//! use s2engine::report::Effort;
+//! use s2engine::sweep::Grid;
+//!
+//! let grid = Grid::from_spec("models=alexnet,vgg16;scales=16,32;fifos=2,inf").unwrap();
+//! assert_eq!(grid.plan().len(), 2 * 2 * 2);
+//! // the same sweep, declared programmatically:
+//! let same = Grid::new(Effort::DEFAULT, 0x5eed_5eed)
+//!     .models(&["alexnet", "vgg16"])
+//!     .scales(&[(16, 16), (32, 32)])
+//!     .fifos(&[s2engine::config::FifoDepths::uniform(2),
+//!              s2engine::config::FifoDepths::infinite()]);
+//! assert_eq!(grid.plan().jobs, same.plan().jobs);
+//! ```
+
+use super::plan::{resolve_model, Job, Plan};
+use crate::config::{ArrayConfig, FifoDepths};
+use crate::models::FeatureSubset;
+use crate::report::Effort;
+use crate::util::json::Json;
+
+/// A declarative design-space grid. Every axis defaults to the paper's
+/// working point (single value), so a grid only names the axes it
+/// actually sweeps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    /// Model names ([`resolve_model`]); `paper` in a spec expands to the
+    /// three evaluated CNNs.
+    pub models: Vec<String>,
+    /// Feature subsets — used when `densities` is empty (Table II mode).
+    pub subsets: Vec<FeatureSubset>,
+    /// Synthetic `(feature, weight)` density points — when non-empty the
+    /// grid is a sensitivity study and `subsets` is ignored.
+    pub densities: Vec<(f64, f64)>,
+    /// Array geometries `(rows, cols)`.
+    pub scales: Vec<(usize, usize)>,
+    /// FIFO depth triples.
+    pub fifos: Vec<FifoDepths>,
+    /// DS:MAC frequency ratios.
+    pub ratios: Vec<u32>,
+    /// Collective-Element array on/off.
+    pub ce: Vec<bool>,
+    /// 16-bit promotion ratios (Section 4.5).
+    pub ratio16: Vec<f64>,
+    pub seed: u64,
+    pub tile_samples: usize,
+    pub layer_stride: usize,
+}
+
+impl Grid {
+    pub fn new(effort: Effort, seed: u64) -> Grid {
+        Grid {
+            models: vec!["alexnet".into()],
+            subsets: vec![FeatureSubset::Average],
+            densities: Vec::new(),
+            scales: vec![(16, 16)],
+            fifos: vec![FifoDepths::default()],
+            ratios: vec![4],
+            ce: vec![true],
+            ratio16: vec![0.0],
+            seed,
+            tile_samples: effort.tile_samples,
+            layer_stride: effort.layer_stride,
+        }
+    }
+
+    pub fn models(mut self, names: &[&str]) -> Grid {
+        self.models = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn subsets(mut self, subsets: &[FeatureSubset]) -> Grid {
+        self.subsets = subsets.to_vec();
+        self
+    }
+
+    pub fn densities(mut self, points: &[(f64, f64)]) -> Grid {
+        self.densities = points.to_vec();
+        self
+    }
+
+    pub fn scales(mut self, scales: &[(usize, usize)]) -> Grid {
+        self.scales = scales.to_vec();
+        self
+    }
+
+    pub fn fifos(mut self, fifos: &[FifoDepths]) -> Grid {
+        self.fifos = fifos.to_vec();
+        self
+    }
+
+    pub fn ratios(mut self, ratios: &[u32]) -> Grid {
+        self.ratios = ratios.to_vec();
+        self
+    }
+
+    pub fn ce(mut self, ce: &[bool]) -> Grid {
+        self.ce = ce.to_vec();
+        self
+    }
+
+    pub fn ratio16(mut self, ratios: &[f64]) -> Grid {
+        self.ratio16 = ratios.to_vec();
+        self
+    }
+
+    fn effort(&self) -> Effort {
+        Effort {
+            tile_samples: self.tile_samples,
+            layer_stride: self.layer_stride,
+            images: 0,
+        }
+    }
+
+    /// Number of jobs [`Grid::plan`] will produce.
+    pub fn size(&self) -> usize {
+        let workloads = if self.densities.is_empty() {
+            self.subsets.len()
+        } else {
+            self.densities.len()
+        };
+        self.models.len()
+            * workloads
+            * self.scales.len()
+            * self.fifos.len()
+            * self.ratios.len()
+            * self.ce.len()
+            * self.ratio16.len()
+    }
+
+    /// Expand to the deterministic job list. Nesting order (outermost
+    /// first): model, workload, scale, fifo, ratio, ce, ratio16.
+    pub fn plan(&self) -> Plan {
+        let effort = self.effort();
+        let mut jobs = Vec::with_capacity(self.size());
+        for model in &self.models {
+            let workloads: Vec<(Option<FeatureSubset>, Option<(f64, f64)>)> =
+                if self.densities.is_empty() {
+                    self.subsets.iter().map(|s| (Some(*s), None)).collect()
+                } else {
+                    self.densities.iter().map(|d| (None, Some(*d))).collect()
+                };
+            for (subset, density) in workloads {
+                for &(rows, cols) in &self.scales {
+                    for &fifo in &self.fifos {
+                        for &ratio in &self.ratios {
+                            for &ce in &self.ce {
+                                for &r16 in &self.ratio16 {
+                                    let array = ArrayConfig::new(rows, cols)
+                                        .with_fifo(fifo)
+                                        .with_ratio(ratio);
+                                    let job = match (subset, density) {
+                                        (Some(s), _) => Job::subset(
+                                            model, s, array, ce, self.seed, effort,
+                                        )
+                                        .with_ratio16(r16),
+                                        (_, Some((fd, wd))) => Job::synthetic(
+                                            model, fd, wd, array, r16, self.seed, effort,
+                                        )
+                                        .with_ce(ce),
+                                        _ => unreachable!(),
+                                    };
+                                    jobs.push(job);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Plan::from_jobs(jobs)
+    }
+
+    /// Parse the CLI's inline spec: semicolon-separated `axis=v1,v2,...`
+    /// pairs. Axes and value forms:
+    ///
+    /// | axis        | values                                              |
+    /// |-------------|-----------------------------------------------------|
+    /// | `models`    | zoo names, `synthetic-alexnet`, or `paper` (all 3)  |
+    /// | `subsets`   | `avg`, `max`, `min`                                 |
+    /// | `densities` | `0.5` (feature=weight) or `0.3:0.6` (feature:weight)|
+    /// | `scales`    | `16` (square) or `16x8` (rows x cols)               |
+    /// | `fifos`     | `4` (uniform), `2/4/8` (w/f/wf), `inf`              |
+    /// | `ratios`    | DS:MAC integers                                     |
+    /// | `ce`        | `on`, `off`, `both`                                 |
+    /// | `ratio16`   | fractions in `[0,1]`                                |
+    /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
+    /// | `samples`   | tiles sampled per layer (overrides effort)          |
+    /// | `stride`    | layer thinning stride (overrides effort)            |
+    /// | `seed`      | RNG seed                                            |
+    pub fn from_spec(spec: &str) -> Result<Grid, String> {
+        let mut grid = Grid::new(Effort::DEFAULT, 0x5eed_5eed);
+        let pairs: Vec<(&str, &str)> = spec
+            .split(';')
+            .filter(|p| !p.trim().is_empty())
+            .map(|part| {
+                part.split_once('=')
+                    .ok_or_else(|| format!("grid axis `{part}` is not `axis=values`"))
+            })
+            .collect::<Result<_, _>>()?;
+        // `effort` is a preset, applied first so that explicit `samples`
+        // / `stride` override it regardless of declaration order
+        for pass in [true, false] {
+            for &(key, value) in &pairs {
+                if (key.trim() == "effort") == pass {
+                    grid.set_axis(key.trim(), &split_values(value))?;
+                }
+            }
+        }
+        grid.validate()?;
+        Ok(grid)
+    }
+
+    /// Parse a JSON grid file: an object with the same axes as
+    /// [`Grid::from_spec`], values as arrays of numbers/strings (scalars
+    /// also accepted), e.g.
+    /// `{"models": ["paper"], "fifos": [2, "2/4/8", "inf"], "seed": 7}`.
+    pub fn from_json(j: &Json) -> Result<Grid, String> {
+        let Json::Obj(map) = j else {
+            return Err("grid file must be a JSON object of axes".into());
+        };
+        let mut grid = Grid::new(Effort::DEFAULT, 0x5eed_5eed);
+        // same two-pass order as `from_spec`: effort preset first
+        for pass in [true, false] {
+            for (key, value) in map {
+                if (key == "effort") != pass {
+                    continue;
+                }
+                let values: Vec<String> = match value {
+                    Json::Arr(items) => {
+                        items.iter().map(json_scalar).collect::<Result<_, _>>()?
+                    }
+                    scalar => vec![json_scalar(scalar)?],
+                };
+                let refs: Vec<&str> = values.iter().map(|s| s.as_str()).collect();
+                grid.set_axis(key, &refs)?;
+            }
+        }
+        grid.validate()?;
+        Ok(grid)
+    }
+
+    fn set_axis(&mut self, key: &str, values: &[&str]) -> Result<(), String> {
+        if values.is_empty() {
+            return Err(format!("grid axis `{key}` has no values"));
+        }
+        let bad = |what: &str, v: &str| format!("bad {what} value `{v}`");
+        match key {
+            "models" | "model" => {
+                self.models = Vec::new();
+                for v in values {
+                    if *v == "paper" {
+                        self.models.extend(
+                            ["alexnet", "vgg16", "resnet50"].map(String::from),
+                        );
+                    } else {
+                        self.models.push(v.to_string());
+                    }
+                }
+            }
+            "subsets" | "subset" => {
+                self.subsets = values
+                    .iter()
+                    .map(|v| super::plan::subset_from_tag(v).ok_or_else(|| bad("subset", v)))
+                    .collect::<Result<_, _>>()?;
+            }
+            "densities" | "density" => {
+                self.densities = values
+                    .iter()
+                    .map(|v| match v.split_once(':') {
+                        Some((f, w)) => {
+                            let fd = f.trim().parse().map_err(|_| bad("density", v))?;
+                            let wd = w.trim().parse().map_err(|_| bad("density", v))?;
+                            Ok((fd, wd))
+                        }
+                        None => {
+                            let d: f64 = v.trim().parse().map_err(|_| bad("density", v))?;
+                            Ok((d, d))
+                        }
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "scales" | "scale" => {
+                self.scales = values
+                    .iter()
+                    .map(|v| match v.split_once('x') {
+                        Some((r, c)) => {
+                            let rows = r.trim().parse().map_err(|_| bad("scale", v))?;
+                            let cols = c.trim().parse().map_err(|_| bad("scale", v))?;
+                            Ok((rows, cols))
+                        }
+                        None => {
+                            let s: usize = v.trim().parse().map_err(|_| bad("scale", v))?;
+                            Ok((s, s))
+                        }
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "fifos" | "fifo" => {
+                self.fifos = values
+                    .iter()
+                    .map(|v| parse_fifo(v).ok_or_else(|| bad("fifo", v)))
+                    .collect::<Result<_, _>>()?;
+            }
+            "ratios" | "ratio" => {
+                self.ratios = values
+                    .iter()
+                    .map(|v| v.trim().parse().map_err(|_| bad("ratio", v)))
+                    .collect::<Result<_, _>>()?;
+            }
+            "ce" => {
+                self.ce = Vec::new();
+                for v in values {
+                    match *v {
+                        "on" | "true" | "1" => self.ce.push(true),
+                        "off" | "false" | "0" => self.ce.push(false),
+                        "both" => self.ce.extend([true, false]),
+                        other => return Err(bad("ce", other)),
+                    }
+                }
+            }
+            "ratio16" => {
+                self.ratio16 = values
+                    .iter()
+                    .map(|v| v.trim().parse().map_err(|_| bad("ratio16", v)))
+                    .collect::<Result<_, _>>()?;
+            }
+            "effort" => {
+                let e = Effort::from_name(values.first().copied().unwrap_or("default"));
+                self.tile_samples = e.tile_samples;
+                self.layer_stride = e.layer_stride;
+            }
+            "samples" => {
+                self.tile_samples = one_usize(values).ok_or_else(|| bad("samples", ""))?;
+            }
+            "stride" => {
+                self.layer_stride = one_usize(values).ok_or_else(|| bad("stride", ""))?;
+            }
+            "seed" => {
+                self.seed = values
+                    .first()
+                    .and_then(|v| v.trim().parse().ok())
+                    .ok_or_else(|| bad("seed", ""))?;
+            }
+            other => return Err(format!("unknown grid axis `{other}`")),
+        }
+        Ok(())
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for m in &self.models {
+            if resolve_model(m).is_none() {
+                return Err(format!("unknown model `{m}` in grid"));
+            }
+        }
+        if self.size() == 0 {
+            return Err("grid expands to zero jobs (an axis is empty)".into());
+        }
+        Ok(())
+    }
+}
+
+fn split_values(v: &str) -> Vec<&str> {
+    v.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
+}
+
+fn one_usize(values: &[&str]) -> Option<usize> {
+    values.first().and_then(|v| v.trim().parse().ok())
+}
+
+fn json_scalar(j: &Json) -> Result<String, String> {
+    match j {
+        Json::Str(s) => Ok(s.clone()),
+        Json::Num(_) | Json::Bool(_) => Ok(j.to_string()),
+        other => Err(format!("bad grid value {other}")),
+    }
+}
+
+/// `4` (uniform), `2/4/8` (w/f/wf), or `inf`.
+fn parse_fifo(v: &str) -> Option<FifoDepths> {
+    match v.trim() {
+        "inf" | "infinite" => Some(FifoDepths::infinite()),
+        s => {
+            let parts: Vec<usize> =
+                s.split('/').map(|p| p.trim().parse().ok()).collect::<Option<_>>()?;
+            match parts.as_slice() {
+                [d] => Some(FifoDepths::uniform(*d)),
+                [w, f, wf] => Some(FifoDepths::new(*w, *f, *wf)),
+                _ => None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::Workload;
+
+    #[test]
+    fn defaults_are_single_point() {
+        let g = Grid::new(Effort::QUICK, 1);
+        assert_eq!(g.size(), 1);
+        let plan = g.plan();
+        assert_eq!(plan.len(), 1);
+        let job = &plan.jobs[0];
+        assert_eq!(job.model, "alexnet");
+        assert_eq!(job.workload, Workload::Subset(FeatureSubset::Average));
+        assert!(job.ce);
+        assert_eq!(job.array.ds_ratio, 4);
+    }
+
+    #[test]
+    fn expansion_order_and_size() {
+        let g = Grid::new(Effort::QUICK, 1)
+            .models(&["alexnet", "vgg16"])
+            .scales(&[(8, 8), (16, 16)])
+            .ratios(&[2, 4]);
+        assert_eq!(g.size(), 8);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 8);
+        // models outermost, then scale, then ratio
+        assert_eq!(jobs[0].model, "alexnet");
+        assert_eq!(jobs[0].array.rows, 8);
+        assert_eq!(jobs[0].array.ds_ratio, 2);
+        assert_eq!(jobs[1].array.ds_ratio, 4);
+        assert_eq!(jobs[2].array.rows, 16);
+        assert_eq!(jobs[4].model, "vgg16");
+        // distinct keys throughout
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8);
+    }
+
+    #[test]
+    fn densities_make_synthetic_jobs() {
+        let g = Grid::new(Effort::QUICK, 1)
+            .models(&["synthetic-alexnet"])
+            .densities(&[(0.1, 0.1), (0.5, 0.9)]);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(
+            jobs[1].workload,
+            Workload::Synthetic {
+                feature_density: 0.5,
+                weight_density: 0.9
+            }
+        );
+    }
+
+    #[test]
+    fn spec_parses_every_axis() {
+        let g = Grid::from_spec(
+            "models=paper;subsets=avg,max;scales=16,32x8;fifos=2,2/4/8,inf;\
+             ratios=2,8;ce=both;ratio16=0,0.035;effort=quick;seed=9",
+        )
+        .unwrap();
+        assert_eq!(g.models, vec!["alexnet", "vgg16", "resnet50"]);
+        assert_eq!(g.subsets.len(), 2);
+        assert_eq!(g.scales, vec![(16, 16), (32, 8)]);
+        assert_eq!(
+            g.fifos,
+            vec![
+                FifoDepths::uniform(2),
+                FifoDepths::new(2, 4, 8),
+                FifoDepths::infinite()
+            ]
+        );
+        assert_eq!(g.ratios, vec![2, 8]);
+        assert_eq!(g.ce, vec![true, false]);
+        assert_eq!(g.ratio16, vec![0.0, 0.035]);
+        assert_eq!(g.seed, 9);
+        assert_eq!(g.tile_samples, Effort::QUICK.tile_samples);
+        assert_eq!(g.size(), 3 * 2 * 2 * 3 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn explicit_samples_override_effort_in_any_order() {
+        // documented precedence: samples/stride beat the effort preset
+        // even when `effort` is declared after them
+        let g = Grid::from_spec("samples=32;effort=quick;stride=3").unwrap();
+        assert_eq!(g.tile_samples, 32);
+        assert_eq!(g.layer_stride, 3);
+        let j = Json::parse(r#"{"samples": 32, "stride": 3, "effort": "quick"}"#).unwrap();
+        let g = Grid::from_json(&j).unwrap();
+        assert_eq!(g.tile_samples, 32);
+        assert_eq!(g.layer_stride, 3);
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(Grid::from_spec("models=martiannet").is_err());
+        assert!(Grid::from_spec("flux=1,2").is_err());
+        assert!(Grid::from_spec("scales").is_err());
+        assert!(Grid::from_spec("fifos=2|4").is_err());
+        assert!(Grid::from_spec("ce=maybe").is_err());
+        assert!(Grid::from_spec("densities=").is_err());
+    }
+
+    #[test]
+    fn json_spec_equivalent_to_inline() {
+        let inline =
+            Grid::from_spec("models=alexnet;scales=16;fifos=2/4/8,inf;ratios=2;seed=5")
+                .unwrap();
+        let json = Json::parse(
+            r#"{"models": ["alexnet"], "scales": [16], "fifos": ["2/4/8", "inf"],
+                "ratios": [2], "seed": 5}"#,
+        )
+        .unwrap();
+        let from_json = Grid::from_json(&json).unwrap();
+        assert_eq!(inline, from_json);
+        assert_eq!(inline.plan().jobs, from_json.plan().jobs);
+    }
+}

@@ -1,0 +1,47 @@
+//! Declarative design-space exploration: grids → plans → sharded,
+//! resumable execution.
+//!
+//! The paper's evaluation (Section 6, Figs. 10–17) is one large sweep
+//! over array shape, FIFO depth, DS:MAC ratio, sparsity and precision.
+//! This subsystem makes that sweep a *declaration* instead of a
+//! hand-rolled loop:
+//!
+//! * [`Grid`] ([`grid`]) — a cartesian product over the design axes,
+//!   declarable in code, as an inline CLI spec, or as a JSON file;
+//! * [`Plan`] / [`Job`] ([`plan`]) — the grid's deterministic expansion
+//!   into hashed, self-describing jobs;
+//! * [`Runner`] ([`runner`]) — shards jobs across the
+//!   [`crate::util::pool`] workers, reusing the process-wide tile memo
+//!   cache ([`crate::coordinator::memo`]) across sweep points;
+//! * [`Store`] / [`SweepRecord`] ([`store`]) — a JSONL results store,
+//!   streamed as jobs finish and keyed by [`Job::key`] so a killed
+//!   sweep resumes by skipping completed points (`--resume`).
+//!
+//! Every figure sweep in [`crate::report::figures`] is a `Grid`
+//! declaration rendered from the returned [`SweepResults`]; the
+//! `s2engine sweep --grid <spec>` subcommand exposes the same engine
+//! for arbitrary user-defined studies.
+//!
+//! ```
+//! use s2engine::report::Effort;
+//! use s2engine::sweep::{Grid, Runner, Store};
+//!
+//! // Speedup of the CIFAR-scale S2Net on a tiny array, two DS:MAC ratios.
+//! let grid = Grid::new(Effort::QUICK, 1)
+//!     .models(&["s2net"])
+//!     .scales(&[(8, 8)])
+//!     .ratios(&[2, 4]);
+//! let results = Runner::new().run(&grid.plan(), &mut Store::in_memory());
+//! assert_eq!(results.len(), 2);
+//! assert!(results.records().iter().all(|r| r.speedup > 0.0));
+//! ```
+
+pub mod grid;
+pub mod plan;
+pub mod runner;
+pub mod store;
+
+pub use grid::Grid;
+pub use plan::{resolve_model, Job, Plan, Workload};
+pub use runner::{Runner, SweepResults};
+pub use store::{Store, SweepRecord};

@@ -1,0 +1,432 @@
+//! Jobs and plans: the unit of sweep execution and its stable identity.
+//!
+//! A [`Job`] is one fully-specified model evaluation — everything the
+//! [`crate::coordinator::Coordinator`] needs to produce a
+//! [`crate::coordinator::ModelResult`], and nothing it doesn't. Jobs are
+//! value types with a canonical text form ([`Job::canonical`]) and a
+//! stable 64-bit key ([`Job::key`], FNV-1a over the canonical form) that
+//! identifies them across processes: the resumable store
+//! ([`super::store::Store`]) is keyed on it, so a restarted sweep can
+//! recognise completed points from a previous run.
+//!
+//! A [`Plan`] is the deterministic expansion of a [`super::Grid`] —
+//! the ordered job list a [`super::Runner`] executes.
+
+use crate::config::ArrayConfig;
+use crate::models::{zoo, FeatureSubset, Model};
+use crate::report::Effort;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// What to simulate for a given model: one of the paper's per-image
+/// feature subsets at the model's calibrated (Table II) densities, or a
+/// synthetic workload at designated uniform densities (the Fig. 11/12
+/// sensitivity studies).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Workload {
+    /// `Coordinator::simulate_model_subset` at Table II densities.
+    Subset(FeatureSubset),
+    /// `Coordinator::simulate_model_synthetic` at explicit densities.
+    Synthetic {
+        feature_density: f64,
+        weight_density: f64,
+    },
+}
+
+/// The one subset ↔ tag table: the canonical key, the JSON store form,
+/// and display labels all go through these two functions, so a renamed
+/// or added subset cannot silently desynchronise them (which would
+/// change [`Job::key`] and break resume of existing stores).
+fn subset_tag(s: FeatureSubset) -> &'static str {
+    match s {
+        FeatureSubset::Average => "avg",
+        FeatureSubset::MaxSparsity => "max",
+        FeatureSubset::MinSparsity => "min",
+    }
+}
+
+pub(super) fn subset_from_tag(tag: &str) -> Option<FeatureSubset> {
+    match tag {
+        "avg" | "average" => Some(FeatureSubset::Average),
+        "max" => Some(FeatureSubset::MaxSparsity),
+        "min" => Some(FeatureSubset::MinSparsity),
+        _ => None,
+    }
+}
+
+impl Workload {
+    /// Short tag for tables and the canonical key.
+    pub fn label(&self) -> String {
+        match self {
+            Workload::Subset(s) => subset_tag(*s).into(),
+            Workload::Synthetic {
+                feature_density,
+                weight_density,
+            } => format!("syn {feature_density:.2}/{weight_density:.2}"),
+        }
+    }
+}
+
+/// One sweep point: a model evaluation under a fixed configuration.
+///
+/// Two jobs with equal [`Job::key`] produce bit-identical metrics (the
+/// simulator is deterministic in exactly these fields), which is what
+/// makes the store's completed-point skipping sound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    /// Model name resolvable by [`resolve_model`] (zoo name,
+    /// `paper`-expanded, or `synthetic-alexnet`).
+    pub model: String,
+    pub workload: Workload,
+    /// Array geometry, FIFO depths and DS:MAC ratio.
+    pub array: ArrayConfig,
+    /// Collective-Element array enabled?
+    pub ce: bool,
+    /// Fraction of values promoted to 16-bit (Section 4.5).
+    pub ratio16: f64,
+    pub seed: u64,
+    /// Tiles sampled per layer (`SimConfig::tile_samples`).
+    pub tile_samples: usize,
+    /// Layer thinning stride ([`Effort::thin`]).
+    pub layer_stride: usize,
+}
+
+impl Job {
+    /// A Table II-density job under a feature subset (`ratio16 = 0`).
+    pub fn subset(
+        model: &str,
+        subset: FeatureSubset,
+        array: ArrayConfig,
+        ce: bool,
+        seed: u64,
+        effort: Effort,
+    ) -> Job {
+        Job {
+            model: model.to_string(),
+            workload: Workload::Subset(subset),
+            array,
+            ce,
+            ratio16: 0.0,
+            seed,
+            tile_samples: effort.tile_samples,
+            layer_stride: effort.layer_stride,
+        }
+    }
+
+    /// A synthetic-density job (`ce = true`, the simulator default).
+    pub fn synthetic(
+        model: &str,
+        feature_density: f64,
+        weight_density: f64,
+        array: ArrayConfig,
+        ratio16: f64,
+        seed: u64,
+        effort: Effort,
+    ) -> Job {
+        Job {
+            model: model.to_string(),
+            workload: Workload::Synthetic {
+                feature_density,
+                weight_density,
+            },
+            array,
+            ce: true,
+            ratio16,
+            seed,
+            tile_samples: effort.tile_samples,
+            layer_stride: effort.layer_stride,
+        }
+    }
+
+    pub fn with_ce(mut self, ce: bool) -> Job {
+        self.ce = ce;
+        self
+    }
+
+    pub fn with_ratio16(mut self, ratio16: f64) -> Job {
+        self.ratio16 = ratio16;
+        self
+    }
+
+    /// Canonical text form: every field that determines the result, with
+    /// floats rendered as exact bit patterns. Stable across processes
+    /// and Rust versions (unlike `DefaultHasher`), so it is safe to key
+    /// the on-disk store on its hash.
+    pub fn canonical(&self) -> String {
+        let fifo = |d: usize| {
+            if d == usize::MAX {
+                "inf".to_string()
+            } else {
+                d.to_string()
+            }
+        };
+        let workload = match self.workload {
+            Workload::Subset(s) => subset_tag(s).to_string(),
+            Workload::Synthetic {
+                feature_density,
+                weight_density,
+            } => format!(
+                "syn:{:016x}:{:016x}",
+                feature_density.to_bits(),
+                weight_density.to_bits()
+            ),
+        };
+        format!(
+            "{}|{}|{}x{}|{},{},{}|r{}|ce{}|r16:{:016x}|seed{}|n{}|t{}",
+            self.model,
+            workload,
+            self.array.rows,
+            self.array.cols,
+            fifo(self.array.fifo.w),
+            fifo(self.array.fifo.f),
+            fifo(self.array.fifo.wf),
+            self.array.ds_ratio,
+            self.ce as u8,
+            self.ratio16.to_bits(),
+            self.seed,
+            self.tile_samples,
+            self.layer_stride,
+        )
+    }
+
+    /// Stable job identity: FNV-1a 64 over [`Job::canonical`]. The store
+    /// and the runner's skip logic key on this.
+    pub fn key(&self) -> u64 {
+        fnv1a(self.canonical().as_bytes())
+    }
+
+    /// The key as fixed-width hex (the store's on-disk form).
+    pub fn key_hex(&self) -> String {
+        format!("{:016x}", self.key())
+    }
+
+    /// The effort this job was declared at (`images` is not part of a
+    /// job's identity — it only affects distribution plots).
+    pub fn effort(&self) -> Effort {
+        Effort {
+            tile_samples: self.tile_samples,
+            layer_stride: self.layer_stride,
+            images: 0,
+        }
+    }
+
+    /// Serialize to the store's JSON object form.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        match self.workload {
+            Workload::Subset(s) => {
+                o.insert("workload".into(), Json::Str(subset_tag(s).into()));
+            }
+            Workload::Synthetic {
+                feature_density,
+                weight_density,
+            } => {
+                o.insert("workload".into(), Json::Str("synthetic".into()));
+                o.insert("fd".into(), Json::Num(feature_density));
+                o.insert("wd".into(), Json::Num(weight_density));
+            }
+        }
+        o.insert("rows".into(), Json::Num(self.array.rows as f64));
+        o.insert("cols".into(), Json::Num(self.array.cols as f64));
+        let depth = |d: usize| {
+            if d == usize::MAX {
+                Json::Num(-1.0)
+            } else {
+                Json::Num(d as f64)
+            }
+        };
+        o.insert(
+            "fifo".into(),
+            Json::Arr(vec![
+                depth(self.array.fifo.w),
+                depth(self.array.fifo.f),
+                depth(self.array.fifo.wf),
+            ]),
+        );
+        o.insert("ratio".into(), Json::Num(self.array.ds_ratio as f64));
+        o.insert("ce".into(), Json::Bool(self.ce));
+        o.insert("ratio16".into(), Json::Num(self.ratio16));
+        // u64 seeds don't fit f64 exactly above 2^53 — store as a string
+        o.insert("seed".into(), Json::Str(self.seed.to_string()));
+        o.insert("samples".into(), Json::Num(self.tile_samples as f64));
+        o.insert("stride".into(), Json::Num(self.layer_stride as f64));
+        Json::Obj(o)
+    }
+
+    /// Parse back from the store's JSON object form.
+    pub fn from_json(j: &Json) -> Result<Job, String> {
+        let model = j.str_field("model")?;
+        let workload = match j.str_field("workload")?.as_str() {
+            "synthetic" => Workload::Synthetic {
+                feature_density: j.f64_field("fd")?,
+                weight_density: j.f64_field("wd")?,
+            },
+            tag => match subset_from_tag(tag) {
+                Some(s) => Workload::Subset(s),
+                None => return Err(format!("unknown workload `{tag}`")),
+            },
+        };
+        let fifo = j
+            .get("fifo")
+            .and_then(|f| f.as_arr())
+            .ok_or("missing/invalid field `fifo`")?;
+        if fifo.len() != 3 {
+            return Err("fifo must be a [w,f,wf] triple".into());
+        }
+        let depth = |v: &Json| -> Result<usize, String> {
+            let n = v.as_f64().ok_or("non-numeric fifo depth")?;
+            if n < 0.0 {
+                Ok(usize::MAX)
+            } else {
+                Ok(n as usize)
+            }
+        };
+        let array = ArrayConfig::new(j.usize_field("rows")?, j.usize_field("cols")?)
+            .with_fifo(crate::config::FifoDepths::new(
+                depth(&fifo[0])?,
+                depth(&fifo[1])?,
+                depth(&fifo[2])?,
+            ))
+            .with_ratio(j.usize_field("ratio")? as u32);
+        let ce = match j.get("ce") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("missing/invalid field `ce`".into()),
+        };
+        Ok(Job {
+            model,
+            workload,
+            array,
+            ce,
+            ratio16: j.f64_field("ratio16")?,
+            seed: j
+                .str_field("seed")?
+                .parse()
+                .map_err(|e| format!("bad seed: {e}"))?,
+            tile_samples: j.usize_field("samples")?,
+            layer_stride: j.usize_field("stride")?,
+        })
+    }
+}
+
+/// The deterministic, ordered expansion of a grid: what a
+/// [`super::Runner`] executes.
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub jobs: Vec<Job>,
+}
+
+impl Plan {
+    pub fn from_jobs(jobs: Vec<Job>) -> Plan {
+        Plan { jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+/// Resolve a sweep model name: any [`zoo::by_name`] network, or
+/// `synthetic-alexnet` (the dense AlexNet clone the Fig. 11/12
+/// sensitivity studies rescale).
+pub fn resolve_model(name: &str) -> Option<Model> {
+    match name {
+        "synthetic-alexnet" => Some(zoo::synthetic_alexnet(1.0, 1.0)),
+        other => zoo::by_name(other),
+    }
+}
+
+/// FNV-1a 64-bit — a stable, dependency-free hash for job keys.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FifoDepths;
+
+    fn job() -> Job {
+        Job::subset(
+            "alexnet",
+            FeatureSubset::Average,
+            ArrayConfig::new(16, 16),
+            true,
+            0x5eed,
+            Effort::QUICK,
+        )
+    }
+
+    #[test]
+    fn key_is_stable_and_field_sensitive() {
+        let j = job();
+        assert_eq!(j.key(), job().key(), "key must be deterministic");
+        assert_ne!(j.key(), j.clone().with_ce(false).key());
+        assert_ne!(j.key(), j.clone().with_ratio16(0.035).key());
+        let mut other = j.clone();
+        other.array = other.array.with_fifo(FifoDepths::infinite());
+        assert_ne!(j.key(), other.key());
+        let mut seeded = j.clone();
+        seeded.seed = 1;
+        assert_ne!(j.key(), seeded.key());
+    }
+
+    #[test]
+    fn key_matches_known_fnv_vector() {
+        // Lock the hash function itself: FNV-1a("") and FNV-1a("a") are
+        // published constants. If this breaks, stored sweeps from older
+        // versions silently stop resuming.
+        assert_eq!(super::fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let jobs = [
+            job(),
+            Job::synthetic(
+                "synthetic-alexnet",
+                0.1,
+                0.7,
+                ArrayConfig::new(32, 32).with_fifo(FifoDepths::infinite()),
+                0.035,
+                42,
+                Effort::FULL,
+            ),
+            Job::subset(
+                "vgg16",
+                FeatureSubset::MaxSparsity,
+                ArrayConfig::new(8, 4).with_ratio(8),
+                false,
+                u64::MAX, // seeds above 2^53 must survive the store
+                Effort::DEFAULT,
+            ),
+        ];
+        for j in jobs {
+            let text = j.to_json().to_string();
+            let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(j, back, "job must round-trip through JSON: {text}");
+            assert_eq!(j.key(), back.key());
+        }
+    }
+
+    #[test]
+    fn resolve_models() {
+        assert!(resolve_model("alexnet").is_some());
+        assert!(resolve_model("synthetic-alexnet").is_some());
+        assert_eq!(
+            resolve_model("synthetic-alexnet").unwrap().feature_density,
+            1.0
+        );
+        assert!(resolve_model("nope").is_none());
+    }
+}

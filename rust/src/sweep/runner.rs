@@ -1,0 +1,256 @@
+//! Sweep execution: shard a [`Plan`]'s jobs across the worker pool,
+//! skip points the [`Store`] already holds, and stream finished records
+//! to it.
+//!
+//! Jobs are independent model evaluations, so the runner fans them out
+//! with [`crate::util::pool::par_map`]. When more than one sweep worker
+//! runs, each job's coordinator is pinned to a single inner thread
+//! (`SimConfig::workers = 1`) so parallelism lives at the job level
+//! instead of oversubscribing cores with nested pools; a single-worker
+//! run leaves the coordinator's own tile fan-out at full width. Either
+//! way results are bit-identical — the simulator is deterministic in the
+//! job's fields, and the process-wide tile memo cache
+//! ([`crate::coordinator::memo`]) is shared across sweep points, so jobs
+//! that revisit a (layer shape × config) tile reuse each other's work
+//! no matter which worker claims them.
+
+use super::plan::{resolve_model, Job, Plan, Workload};
+use super::store::{Store, SweepRecord};
+use crate::config::SimConfig;
+use crate::coordinator::Coordinator;
+use crate::util::pool;
+use std::collections::HashMap;
+
+/// Executes plans against a store.
+#[derive(Debug, Clone, Default)]
+pub struct Runner {
+    /// Sweep-level worker threads (0 = all cores).
+    pub workers: usize,
+}
+
+impl Runner {
+    pub fn new() -> Runner {
+        Runner::default()
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Runner {
+        self.workers = workers;
+        self
+    }
+
+    /// Execute every job of `plan` that `store` does not already hold,
+    /// streaming each finished record into the store as it completes.
+    /// Returns all of the plan's records — reused and fresh — in plan
+    /// order. Jobs with equal keys (a grid can legitimately repeat a
+    /// point, e.g. `models=paper,alexnet`) are simulated once.
+    pub fn run(&self, plan: &Plan, store: &mut Store) -> SweepResults {
+        let mut seen = std::collections::HashSet::new();
+        let pending: Vec<usize> = plan
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, job)| {
+                let key = job.key();
+                !store.contains(key) && seen.insert(key)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let reused = plan.jobs.len() - pending.len();
+
+        let outer = pool::effective_workers(self.workers).min(pending.len().max(1));
+        let inner_workers = if outer > 1 { 1 } else { 0 };
+        let shared: &Store = store;
+        let fresh: Vec<SweepRecord> = pool::par_map(&pending, self.workers, |&i| {
+            let rec = execute(&plan.jobs[i], inner_workers);
+            if let Err(e) = shared.append(&rec) {
+                eprintln!("sweep: store append failed: {e}");
+            }
+            rec
+        });
+
+        let ran = fresh.len();
+        for rec in fresh {
+            store.admit(rec);
+        }
+        let records = plan
+            .jobs
+            .iter()
+            .map(|job| {
+                store
+                    .get(job.key())
+                    .cloned()
+                    .expect("every planned job is in the store after the run")
+            })
+            .collect();
+        SweepResults::new(records, ran, reused)
+    }
+}
+
+/// Run one job to completion (the coordinator does the per-tile
+/// fan-out/memoization; this resolves the model, thins it to the job's
+/// effort, and applies the configuration).
+///
+/// Panics on an unresolvable model name — [`crate::sweep::Grid`]
+/// validation rejects those before a plan ever reaches the runner.
+pub fn execute(job: &Job, inner_workers: usize) -> SweepRecord {
+    let model = resolve_model(&job.model)
+        .unwrap_or_else(|| panic!("sweep job names unknown model `{}`", job.model));
+    let model = job.effort().thin(&model);
+    let cfg = SimConfig::new(job.array)
+        .with_samples(job.tile_samples)
+        .with_seed(job.seed)
+        .with_ce(job.ce)
+        .with_ratio16(job.ratio16)
+        .with_workers(inner_workers);
+    let coord = Coordinator::new(cfg);
+    let result = match job.workload {
+        Workload::Subset(subset) => coord.simulate_model_subset(&model, subset),
+        Workload::Synthetic {
+            feature_density,
+            weight_density,
+        } => coord.simulate_model_synthetic(&model, feature_density, weight_density),
+    };
+    SweepRecord::from_result(job.clone(), &result)
+}
+
+/// A completed sweep: records in plan order, indexed by job key.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    records: Vec<SweepRecord>,
+    index: HashMap<u64, usize>,
+    /// Jobs simulated by this run.
+    pub ran: usize,
+    /// Jobs served from the store (resume hits).
+    pub reused: usize,
+}
+
+impl SweepResults {
+    fn new(records: Vec<SweepRecord>, ran: usize, reused: usize) -> SweepResults {
+        let index = records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.job.key(), i))
+            .collect();
+        SweepResults {
+            records,
+            index,
+            ran,
+            reused,
+        }
+    }
+
+    /// Fetch the record for a job (by its key). Panics if the job was
+    /// not part of the executed plan — figure renderers construct their
+    /// lookup jobs through the same constructors as their grids, so a
+    /// miss is a declaration bug, not a runtime condition.
+    pub fn get(&self, job: &Job) -> &SweepRecord {
+        let i = self
+            .index
+            .get(&job.key())
+            .unwrap_or_else(|| panic!("no sweep record for job {}", job.canonical()));
+        &self.records[*i]
+    }
+
+    /// All records, in plan order.
+    pub fn records(&self) -> &[SweepRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::Effort;
+    use crate::sweep::Grid;
+
+    fn tiny() -> Effort {
+        Effort {
+            tile_samples: 1,
+            layer_stride: 2,
+            images: 0,
+        }
+    }
+
+    // distinct seed so these tests own their memo entries
+    const SEED: u64 = 0xc0de_cafe_0003;
+
+    fn grid() -> Grid {
+        Grid::new(tiny(), SEED)
+            .models(&["s2net"])
+            .scales(&[(8, 8)])
+            .ratios(&[2, 4])
+    }
+
+    #[test]
+    fn run_fills_plan_order_and_counts() {
+        let g = grid();
+        let plan = g.plan();
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&plan, &mut store);
+        assert_eq!(res.len(), 2);
+        assert_eq!(res.ran, 2);
+        assert_eq!(res.reused, 0);
+        for (job, rec) in plan.jobs.iter().zip(res.records()) {
+            assert_eq!(job.key(), rec.job.key());
+            assert!(rec.speedup > 0.0);
+            assert!(rec.s2_wall > 0.0 && rec.naive_wall > 0.0);
+        }
+        // re-running against the same store reuses everything, identically
+        let res2 = Runner::new().run(&plan, &mut store);
+        assert_eq!(res2.ran, 0);
+        assert_eq!(res2.reused, 2);
+        assert_eq!(res.records(), res2.records());
+    }
+
+    #[test]
+    fn get_finds_records_by_reconstructed_job() {
+        let g = grid();
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&g.plan(), &mut store);
+        let job = crate::sweep::Job::subset(
+            "s2net",
+            crate::models::FeatureSubset::Average,
+            crate::config::ArrayConfig::new(8, 8).with_ratio(4),
+            true,
+            SEED,
+            tiny(),
+        );
+        let rec = res.get(&job);
+        assert_eq!(rec.job.array.ds_ratio, 4);
+    }
+
+    #[test]
+    fn duplicate_jobs_simulated_once() {
+        // `models=paper,alexnet`-style grids repeat points; the runner
+        // must execute each distinct key once and fan the record out
+        let mut plan = grid().plan();
+        let dup = plan.jobs.clone();
+        plan.jobs.extend(dup);
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&plan, &mut store);
+        assert_eq!(res.len(), 4);
+        assert_eq!(res.ran, 2, "each distinct key simulated exactly once");
+        assert_eq!(res.reused, 2);
+        assert_eq!(store.len(), 2, "store holds one record per key");
+        assert_eq!(res.records()[0], res.records()[2]);
+        assert_eq!(res.records()[1], res.records()[3]);
+    }
+
+    #[test]
+    fn serial_and_sharded_results_identical() {
+        // worker count must never change metrics
+        let g = grid();
+        let plan = g.plan();
+        let a = Runner::new().with_workers(1).run(&plan, &mut Store::in_memory());
+        let b = Runner::new().with_workers(4).run(&plan, &mut Store::in_memory());
+        assert_eq!(a.records(), b.records());
+    }
+}

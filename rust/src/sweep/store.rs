@@ -1,0 +1,361 @@
+//! The resumable sweep store: one JSONL line per completed job.
+//!
+//! Each line is a self-contained record `{"key": ..., "job": {...},
+//! "metrics": {...}}` keyed by [`Job::key_hex`]. The runner appends (and
+//! flushes) a line the moment a job finishes, so a killed sweep loses at
+//! most the jobs that were still in flight. Reopening the store with
+//! `resume = true` recovers every intact line — a torn final line from
+//! the kill is dropped and the file is compacted — and the runner then
+//! skips every recovered key. Metrics round-trip exactly (Rust's float
+//! formatting is shortest-round-trip), so a resumed sweep's output is
+//! bit-identical to an uninterrupted one; `rust/tests/sweep_resume.rs`
+//! asserts this end to end.
+
+use super::plan::Job;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Everything the report layer reads out of one model evaluation —
+/// enough to render every figure the paper plots without re-running the
+/// simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRecord {
+    pub job: Job,
+    /// End-to-end speedup over the naive array.
+    pub speedup: f64,
+    /// Total S²Engine wall time (seconds).
+    pub s2_wall: f64,
+    /// Total naive-array wall time (seconds).
+    pub naive_wall: f64,
+    /// On-chip energy-efficiency improvement (Fig. 16's metric).
+    pub onchip_ee: f64,
+    /// Energy-efficiency improvement including DRAM.
+    pub total_ee: f64,
+    /// Area-efficiency improvement (Fig. 17's metric).
+    pub area_eff: f64,
+    /// Average FB access reduction from CE reuse (Fig. 13).
+    pub access_reduction: f64,
+    /// Feature density of the first simulated layer (Fig. 13's
+    /// compression-ratio proxy).
+    pub layer0_feature_density: f64,
+    /// S²Engine on-chip energy breakdown, summed over layers (pJ) —
+    /// Fig. 15's categories — plus DRAM.
+    pub e_mac: f64,
+    pub e_sram: f64,
+    pub e_fifo: f64,
+    pub e_ce: f64,
+    pub e_other: f64,
+    pub e_dram: f64,
+}
+
+impl SweepRecord {
+    /// Extract the report-layer metrics from a finished evaluation.
+    pub fn from_result(job: Job, r: &crate::coordinator::ModelResult) -> SweepRecord {
+        let energy = r.s2_energy();
+        SweepRecord {
+            speedup: r.speedup(),
+            s2_wall: r.total_s2_wall(),
+            naive_wall: r.total_naive_wall(),
+            onchip_ee: r.onchip_ee_improvement(),
+            total_ee: r.total_ee_improvement(),
+            area_eff: r.area_efficiency_improvement(),
+            access_reduction: r.avg_buffer_access_reduction(),
+            layer0_feature_density: r
+                .layers
+                .first()
+                .map(|l| l.feature_density)
+                .unwrap_or(0.0),
+            e_mac: energy.onchip.mac_pj,
+            e_sram: energy.onchip.sram_pj,
+            e_fifo: energy.onchip.fifo_pj,
+            e_ce: energy.onchip.ce_pj,
+            e_other: energy.onchip.other_pj,
+            e_dram: energy.dram_pj,
+            job,
+        }
+    }
+
+    /// Reassemble the stored on-chip breakdown (Fig. 15 renders from
+    /// this, via the same `onchip_total()` the live path uses).
+    pub fn onchip_energy(&self) -> crate::energy::EnergyBreakdown {
+        crate::energy::EnergyBreakdown {
+            mac_pj: self.e_mac,
+            sram_pj: self.e_sram,
+            fifo_pj: self.e_fifo,
+            ce_pj: self.e_ce,
+            other_pj: self.e_other,
+        }
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_json_line(&self) -> String {
+        let mut m = BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        num("speedup", self.speedup);
+        num("s2_wall", self.s2_wall);
+        num("naive_wall", self.naive_wall);
+        num("onchip_ee", self.onchip_ee);
+        num("total_ee", self.total_ee);
+        num("area_eff", self.area_eff);
+        num("access_reduction", self.access_reduction);
+        num("layer0_fd", self.layer0_feature_density);
+        num("e_mac", self.e_mac);
+        num("e_sram", self.e_sram);
+        num("e_fifo", self.e_fifo);
+        num("e_ce", self.e_ce);
+        num("e_other", self.e_other);
+        num("e_dram", self.e_dram);
+        let mut o = BTreeMap::new();
+        o.insert("key".into(), Json::Str(self.job.key_hex()));
+        o.insert("job".into(), self.job.to_json());
+        o.insert("metrics".into(), Json::Obj(m));
+        Json::Obj(o).to_string()
+    }
+
+    /// Parse one JSONL line.
+    pub fn from_json_line(line: &str) -> Result<SweepRecord, String> {
+        let j = Json::parse(line)?;
+        let job = Job::from_json(j.get("job").ok_or("missing `job`")?)?;
+        let m = j.get("metrics").ok_or("missing `metrics`")?;
+        Ok(SweepRecord {
+            speedup: m.f64_field("speedup")?,
+            s2_wall: m.f64_field("s2_wall")?,
+            naive_wall: m.f64_field("naive_wall")?,
+            onchip_ee: m.f64_field("onchip_ee")?,
+            total_ee: m.f64_field("total_ee")?,
+            area_eff: m.f64_field("area_eff")?,
+            access_reduction: m.f64_field("access_reduction")?,
+            layer0_feature_density: m.f64_field("layer0_fd")?,
+            e_mac: m.f64_field("e_mac")?,
+            e_sram: m.f64_field("e_sram")?,
+            e_fifo: m.f64_field("e_fifo")?,
+            e_ce: m.f64_field("e_ce")?,
+            e_other: m.f64_field("e_other")?,
+            e_dram: m.f64_field("e_dram")?,
+            job,
+        })
+    }
+}
+
+/// Completed-job storage: an in-memory index plus (optionally) a JSONL
+/// file that records stream into as they complete.
+pub struct Store {
+    records: BTreeMap<u64, SweepRecord>,
+    sink: Option<Mutex<std::fs::File>>,
+    path: Option<PathBuf>,
+    /// Intact records recovered from disk at open.
+    pub recovered: usize,
+    /// Corrupt lines (e.g. a torn tail from a killed run) dropped at open.
+    pub dropped: usize,
+}
+
+impl Store {
+    /// A store with no backing file — results live only in the returned
+    /// [`super::SweepResults`]. This is what the figure generators use by
+    /// default.
+    pub fn in_memory() -> Store {
+        Store {
+            records: BTreeMap::new(),
+            sink: None,
+            path: None,
+            recovered: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Open a file-backed store.
+    ///
+    /// With `resume = true`, every intact line of an existing file is
+    /// recovered (keyed by the job's recomputed hash, so a file from a
+    /// different plan simply contributes nothing) and the file is
+    /// compacted — a torn trailing line from a killed run is dropped so
+    /// subsequent appends stay well-formed. With `resume = false` the
+    /// file is truncated.
+    pub fn open(path: impl AsRef<Path>, resume: bool) -> std::io::Result<Store> {
+        let path = path.as_ref().to_path_buf();
+        let mut records = BTreeMap::new();
+        let mut dropped = 0usize;
+        if resume && path.exists() {
+            let text = std::fs::read_to_string(&path)?;
+            for line in text.split('\n').filter(|l| !l.trim().is_empty()) {
+                match SweepRecord::from_json_line(line) {
+                    Ok(rec) => {
+                        records.insert(rec.job.key(), rec);
+                    }
+                    Err(_) => dropped += 1,
+                }
+            }
+        }
+        // Rewrite the surviving records so the file never carries a torn
+        // tail into the next append — via a temp file + rename, so a
+        // crash mid-compaction cannot lose already-completed points —
+        // then hold it open for streaming.
+        let tmp = path.with_extension("jsonl.tmp");
+        {
+            let mut out = std::fs::File::create(&tmp)?;
+            for rec in records.values() {
+                writeln!(out, "{}", rec.to_json_line())?;
+            }
+            out.flush()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        let file = std::fs::OpenOptions::new().append(true).open(&path)?;
+        let recovered = records.len();
+        Ok(Store {
+            records,
+            sink: Some(Mutex::new(file)),
+            path: Some(path),
+            recovered,
+            dropped,
+        })
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn get(&self, key: u64) -> Option<&SweepRecord> {
+        self.records.get(&key)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.records.contains_key(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Stream one finished record to the backing file (no-op for
+    /// in-memory stores). Takes `&self` so workers can append
+    /// concurrently; the line is written and flushed under a lock.
+    pub fn append(&self, rec: &SweepRecord) -> std::io::Result<()> {
+        if let Some(sink) = &self.sink {
+            let mut f = sink.lock().unwrap();
+            writeln!(f, "{}", rec.to_json_line())?;
+            f.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Admit a finished record into the in-memory index (the runner does
+    /// this after the parallel phase; [`Store::append`] already persisted
+    /// it).
+    pub fn admit(&mut self, rec: SweepRecord) {
+        self.records.insert(rec.job.key(), rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayConfig;
+    use crate::models::FeatureSubset;
+    use crate::report::Effort;
+
+    fn record(seed: u64, speedup: f64) -> SweepRecord {
+        let job = Job::subset(
+            "alexnet",
+            FeatureSubset::Average,
+            ArrayConfig::new(8, 8),
+            true,
+            seed,
+            Effort::QUICK,
+        );
+        SweepRecord {
+            job,
+            speedup,
+            s2_wall: 1.25e-3,
+            naive_wall: 4.5e-3,
+            onchip_ee: 1.8,
+            total_ee: 2.9,
+            area_eff: 3.3,
+            access_reduction: 2.1,
+            layer0_feature_density: 0.39,
+            e_mac: 1.0e9,
+            e_sram: 2.0e9,
+            e_fifo: 3.0e8,
+            e_ce: 1.0e8,
+            e_other: 0.5e8,
+            e_dram: 7.0e9,
+        }
+    }
+
+    #[test]
+    fn record_line_roundtrip_exact() {
+        let r = record(1, 3.604999999999999);
+        let back = SweepRecord::from_json_line(&r.to_json_line()).unwrap();
+        assert_eq!(r, back, "all f64 metrics must round-trip bit-exactly");
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("s2store-{}-{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn open_resume_recovers_and_drops_torn_tail() {
+        let path = tmp("torn");
+        let a = record(1, 2.0);
+        let b = record(2, 3.0);
+        let mut text = format!("{}\n{}\n", a.to_json_line(), b.to_json_line());
+        // a third record torn mid-line by a kill
+        let torn = record(3, 4.0).to_json_line();
+        text.push_str(&torn[..torn.len() / 2]);
+        std::fs::write(&path, &text).unwrap();
+
+        let store = Store::open(&path, true).unwrap();
+        assert_eq!(store.recovered, 2);
+        assert_eq!(store.dropped, 1);
+        assert!(store.contains(a.job.key()) && store.contains(b.job.key()));
+        assert!(!store.contains(record(3, 4.0).job.key()));
+
+        // compaction: the file now holds exactly the two intact lines
+        let compacted = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(compacted.lines().count(), 2);
+        drop(store);
+
+        // appending after recovery keeps the file parseable end to end
+        let mut store = Store::open(&path, true).unwrap();
+        let c = record(3, 4.0);
+        store.append(&c).unwrap();
+        store.admit(c.clone());
+        assert_eq!(store.len(), 3);
+        drop(store);
+        let reread = Store::open(&path, true).unwrap();
+        assert_eq!(reread.recovered, 3);
+        assert_eq!(reread.dropped, 0);
+        assert_eq!(reread.get(c.job.key()), Some(&c));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_without_resume_truncates() {
+        let path = tmp("trunc");
+        std::fs::write(&path, format!("{}\n", record(1, 2.0).to_json_line())).unwrap();
+        let store = Store::open(&path, false).unwrap();
+        assert_eq!(store.recovered, 0);
+        assert!(store.is_empty());
+        drop(store);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn in_memory_append_is_noop() {
+        let mut s = Store::in_memory();
+        let r = record(9, 1.5);
+        s.append(&r).unwrap();
+        s.admit(r.clone());
+        assert_eq!(s.get(r.job.key()), Some(&r));
+        assert!(s.path().is_none());
+    }
+}

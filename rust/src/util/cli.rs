@@ -74,6 +74,23 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Parse a comma-separated integer list like `16,32` (unparseable
+    /// elements are skipped; a missing/empty option yields `default`).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => {
+                let v: Vec<usize> =
+                    s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+                if v.is_empty() {
+                    default.to_vec()
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
     /// Parse a `(w,f,wf)` FIFO depth triple like `4,4,4` or `inf`.
     pub fn get_fifo(&self, key: &str, default: crate::config::FifoDepths) -> crate::config::FifoDepths {
         match self.get(key) {
@@ -125,6 +142,14 @@ mod tests {
         assert!(a.get_fifo("f2", FifoDepths::default()).is_infinite());
         assert_eq!(a.get_fifo("f3", FifoDepths::default()), FifoDepths::uniform(4));
         assert_eq!(a.get_fifo("missing", FifoDepths::uniform(4)), FifoDepths::uniform(4));
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = parse("sweep --scales 16,32 --bad x,y");
+        assert_eq!(a.get_usize_list("scales", &[8]), vec![16, 32]);
+        assert_eq!(a.get_usize_list("missing", &[8]), vec![8]);
+        assert_eq!(a.get_usize_list("bad", &[8]), vec![8]);
     }
 
     #[test]

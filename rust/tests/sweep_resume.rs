@@ -1,0 +1,169 @@
+//! Sweep resume semantics: a sweep killed mid-run (simulated by
+//! truncating its JSONL store, torn final line included) must, under
+//! `--resume`, complete to a store and a result set bit-identical to an
+//! uninterrupted run — and must not re-execute the recovered points.
+
+use s2engine::config::ArrayConfig;
+use s2engine::models::FeatureSubset;
+use s2engine::report::{fig10, fig10_in, Effort};
+use s2engine::sweep::{Grid, Job, Runner, Store};
+use std::path::PathBuf;
+
+fn tiny() -> Effort {
+    Effort {
+        tile_samples: 1,
+        layer_stride: 2,
+        images: 0,
+    }
+}
+
+const SEED: u64 = 0xc0de_cafe_0010;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("s2resume-{}-{name}.jsonl", std::process::id()))
+}
+
+/// 8 fast jobs: s2net on an 8x8 array, 2 FIFO depths x 2 ratios x CE on/off.
+fn grid() -> Grid {
+    Grid::new(tiny(), SEED)
+        .models(&["s2net"])
+        .scales(&[(8, 8)])
+        .fifos(&[
+            s2engine::config::FifoDepths::uniform(2),
+            s2engine::config::FifoDepths::uniform(4),
+        ])
+        .ratios(&[2, 4])
+        .ce(&[true, false])
+}
+
+#[test]
+fn killed_sweep_resumes_to_identical_results() {
+    let plan = grid().plan();
+    assert_eq!(plan.len(), 8);
+
+    // uninterrupted reference run, streaming to a file store
+    let full_path = tmp("full");
+    let mut full_store = Store::open(&full_path, false).unwrap();
+    let reference = Runner::new().run(&plan, &mut full_store);
+    assert_eq!(reference.ran, 8);
+    drop(full_store);
+    let full_text = std::fs::read_to_string(&full_path).unwrap();
+    let lines: Vec<&str> = full_text.lines().collect();
+    assert_eq!(lines.len(), 8, "one JSONL line per completed job");
+
+    // simulate a kill after 5 completed appends, torn mid-way through
+    // the 6th line
+    let partial_path = tmp("partial");
+    let mut partial = lines[..5].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[5][..lines[5].len() / 2]);
+    std::fs::write(&partial_path, &partial).unwrap();
+
+    // resume: the 5 intact points are recovered, the torn one is dropped
+    let mut resumed_store = Store::open(&partial_path, true).unwrap();
+    assert_eq!(resumed_store.recovered, 5);
+    assert_eq!(resumed_store.dropped, 1);
+    let resumed = Runner::new().run(&plan, &mut resumed_store);
+    assert_eq!(resumed.reused, 5, "recovered points must not re-run");
+    assert_eq!(resumed.ran, 3);
+    drop(resumed_store);
+
+    // the merged results are bit-identical to the uninterrupted run
+    assert_eq!(reference.records(), resumed.records());
+
+    // and so is the merged store: every job present exactly once, with
+    // metrics equal to the reference run's
+    let merged = Store::open(&partial_path, true).unwrap();
+    assert_eq!(merged.recovered, 8);
+    assert_eq!(merged.dropped, 0);
+    for (job, reference_rec) in plan.jobs.iter().zip(reference.records()) {
+        assert_eq!(merged.get(job.key()), Some(reference_rec));
+    }
+
+    std::fs::remove_file(&full_path).ok();
+    std::fs::remove_file(&partial_path).ok();
+}
+
+#[test]
+fn resume_ignores_foreign_records() {
+    // a store holding points from a *different* grid (other seed) must
+    // not satisfy this plan's jobs
+    let path = tmp("foreign");
+    let mut foreign_grid = grid();
+    foreign_grid.seed = SEED ^ 1;
+    let mut store = Store::open(&path, false).unwrap();
+    Runner::new().run(&foreign_grid.plan(), &mut store);
+    drop(store);
+
+    let mut store = Store::open(&path, true).unwrap();
+    assert_eq!(store.recovered, 8);
+    let res = Runner::new().run(&grid().plan(), &mut store);
+    assert_eq!(res.reused, 0, "other-seed records must not be reused");
+    assert_eq!(res.ran, 8);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn figure_render_identical_direct_stored_and_resumed() {
+    // Fig. 10 at minimal effort: direct in-memory render, a store-backed
+    // render, and a render resumed from a truncated store must all be
+    // byte-identical.
+    let effort = Effort {
+        tile_samples: 1,
+        layer_stride: 6,
+        images: 0,
+    };
+    let seed = 0xc0de_cafe_0011;
+    let direct = fig10(effort, seed);
+
+    let path = tmp("fig10");
+    let mut store = Store::open(&path, false).unwrap();
+    let stored = fig10_in(effort, seed, &mut store);
+    drop(store);
+    assert_eq!(direct, stored);
+
+    // keep only the first third of the store (plus a torn tail) and resume
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 36, "4 depths x 3 ratios x 3 models");
+    let keep = lines.len() / 3;
+    let mut partial = lines[..keep].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[keep][..lines[keep].len() / 3]);
+    std::fs::write(&path, &partial).unwrap();
+
+    let mut store = Store::open(&path, true).unwrap();
+    assert_eq!(store.recovered, keep);
+    let resumed = fig10_in(effort, seed, &mut store);
+    assert_eq!(direct, resumed);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn store_reuse_across_figures_with_shared_grid() {
+    // Figs. 16 and 17 share a grid; rendering both against one store
+    // must simulate each point once.
+    use s2engine::report::{fig16_in, fig17_in};
+    let effort = tiny();
+    let seed = 0xc0de_cafe_0012;
+    let path = tmp("shared");
+    let mut store = Store::open(&path, false).unwrap();
+    let first = fig16_in(effort, seed, &[16], &mut store);
+    let n_after_fig16 = store.len();
+    assert_eq!(n_after_fig16, 9, "3 models x 1 scale x 3 depths");
+    let second = fig17_in(effort, seed, &[16], &mut store);
+    assert_eq!(store.len(), n_after_fig16, "fig17 must be pure lookups");
+    assert!(first.contains("Fig. 16") && second.contains("Fig. 17"));
+
+    // job construction for the lookup is reconstructible out-of-band
+    let job = Job::subset(
+        "vgg16",
+        FeatureSubset::Average,
+        ArrayConfig::new(16, 16).with_fifo(s2engine::config::FifoDepths::uniform(4)),
+        true,
+        seed,
+        effort,
+    );
+    assert!(store.get(job.key()).is_some());
+    std::fs::remove_file(&path).ok();
+}

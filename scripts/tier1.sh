@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verification gate: release build, full test suite, and a
-# compile-check of every bench target (they are plain binaries with
-# harness = false, so --no-run is the build-only mode).
+# Tier-1 verification gate: release build, full test suite (unit +
+# integration + doc tests), a compile-check of every bench target (they
+# are plain binaries with harness = false, so --no-run is the build-only
+# mode), and a warning-free rustdoc build (EXPERIMENTS.md §Docs).
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
+cargo test --doc -q
 cargo bench --no-run
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 echo "tier1 OK"
