@@ -1,0 +1,72 @@
+//! Bench: the network-level serving pipeline (EXPERIMENTS.md §Serving).
+//!
+//! Two costs matter separately:
+//! * the *scheduler* — pure arithmetic placing (requests × layers) jobs
+//!   on the array; it must stay cheap enough to sweep over thousands of
+//!   serving points (`schedule/...` rows);
+//! * the *end-to-end* serve call — layer simulation (tile-memoized after
+//!   the first run) plus scheduling (`serve/...` rows).
+//!
+//! Alongside the timings it records the modeled serving metrics for
+//! AlexNet — throughput at batch 1 vs 8 and the pipeline gain — so the
+//! perf trajectory of the *model* (not just the simulator) is tracked in
+//! `BENCH_serve.json`.
+
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::{Arrivals, LayerDag, PipelineSchedule, ServeConfig};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let samples = if quick { 1 } else { 4 };
+    let mut b = Bench::new();
+
+    // --- scheduler-only: alexnet-shaped chain, large request counts ---
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(16, 16)).with_samples(samples);
+    let coord = Coordinator::new(cfg);
+    let layers = coord.layer_results_subset(&model, FeatureSubset::Average);
+    let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+    let dag = LayerDag::chain(durations.len());
+    for &requests in &[64usize, 1024] {
+        let arrivals = Arrivals::open_loop(requests, 0.0, 7);
+        b.bench(&format!("schedule/alexnet-b8-r{requests}"), || {
+            black_box(PipelineSchedule::build(
+                &dag,
+                &durations,
+                &arrivals.times,
+                8,
+                0.6,
+            ));
+        });
+    }
+
+    // --- end-to-end serve (layer sims memo-warm after the first call) ---
+    let serve = ServeConfig::new(8, 0.6).with_requests(64);
+    b.bench("serve/alexnet-e2e-b8-r64", || {
+        black_box(coord.simulate_model_pipelined(&model, FeatureSubset::Average, &serve));
+    });
+
+    // --- modeled serving metrics (the numbers the ROADMAP cares about) ---
+    let serial = coord.simulate_model_pipelined(
+        &model,
+        FeatureSubset::Average,
+        &ServeConfig::new(1, 0.0).with_requests(64),
+    );
+    let piped = coord.simulate_model_pipelined(&model, FeatureSubset::Average, &serve);
+    b.metric("model/throughput-b1", serial.throughput(), "img/s");
+    b.metric("model/throughput-b8-ov0.6", piped.throughput(), "img/s");
+    b.metric(
+        "model/pipeline-gain",
+        piped.throughput() / serial.throughput(),
+        "x",
+    );
+    b.metric("model/p99-latency-b8", piped.latency.p99 * 1e3, "ms");
+    b.metric("model/occupancy-b8", piped.occupancy(), "frac");
+
+    if let Err(e) = b.write_json("BENCH_serve.json") {
+        eprintln!("failed to write BENCH_serve.json: {e}");
+    }
+}

@@ -98,20 +98,37 @@ const N_SHARDS: usize = 16;
 /// Per-shard entry cap (~300 B/entry worst case ⇒ ≲80 MB total).
 const SHARD_CAP: usize = 1 << 14;
 
-/// Sharded, process-wide stats cache.
+/// Sharded, bounded stats cache.
 pub struct TileCache {
     shards: Vec<Mutex<HashMap<TileKey, TileStats>>>,
+    shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
 impl TileCache {
     fn new() -> Self {
+        Self::bounded(N_SHARDS, SHARD_CAP)
+    }
+
+    /// A cache with explicit bounds: at most `n_shards × shard_cap`
+    /// entries, ever. The process-wide instance uses the module
+    /// defaults; tests (and future per-sweep caches) can build small
+    /// ones to exercise the bound directly.
+    pub fn bounded(n_shards: usize, shard_cap: usize) -> Self {
         TileCache {
-            shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..n_shards.max(1))
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            shard_cap,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
+    }
+
+    /// Hard entry ceiling (shards × per-shard cap).
+    pub fn capacity(&self) -> usize {
+        self.shards.len() * self.shard_cap
     }
 
     /// The process-wide cache instance (shared by every Coordinator, so
@@ -124,7 +141,7 @@ impl TileCache {
     fn shard(&self, key: &TileKey) -> &Mutex<HashMap<TileKey, TileStats>> {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
-        &self.shards[(h.finish() as usize) % N_SHARDS]
+        &self.shards[(h.finish() as usize) % self.shards.len()]
     }
 
     pub fn get(&self, key: &TileKey) -> Option<TileStats> {
@@ -139,7 +156,7 @@ impl TileCache {
 
     pub fn insert(&self, key: TileKey, stats: TileStats) {
         let mut shard = self.shard(&key).lock().unwrap();
-        if shard.len() < SHARD_CAP {
+        if shard.len() < self.shard_cap {
             shard.insert(key, stats);
         }
     }
@@ -217,6 +234,98 @@ mod tests {
         assert_ne!(k0, TileKey::synthetic(&layer, &base, 1, 0.5, 0.5, false));
         assert_ne!(k0, TileKey::synthetic(&layer, &base, 0, 0.5001, 0.5, false));
         assert_ne!(k0, TileKey::synthetic(&layer, &base, 0, 0.5, 0.5, true));
+    }
+
+    #[test]
+    fn bounded_cache_never_exceeds_capacity() {
+        // the size bound must hold under arbitrary insertion pressure —
+        // a private instance, so this cannot pollute the global cache
+        // other tests rely on
+        let cache = TileCache::bounded(4, 8);
+        assert_eq!(cache.capacity(), 32);
+        let layer = LayerDesc::new("cap", 8, 8, 32, 3, 3, 16, 1, 1);
+        let cfg = SimConfig::new(crate::config::ArrayConfig::new(8, 8));
+        let mut stored: Vec<TileKey> = Vec::new();
+        for i in 0..500u64 {
+            let key = TileKey::synthetic(&layer, &cfg, i as usize, 0.4, 0.4, true);
+            let stats = TileStats {
+                ds_cycles: i,
+                ..Default::default()
+            };
+            cache.insert(key, stats);
+            if cache.get(&key).is_some() {
+                stored.push(key);
+            }
+            assert!(
+                cache.len() <= cache.capacity(),
+                "after {} inserts: {} entries > cap {}",
+                i + 1,
+                cache.len(),
+                cache.capacity()
+            );
+        }
+        assert!(cache.len() <= 32);
+        assert!(!stored.is_empty(), "some inserts must land");
+        // entries that were admitted stay retrievable and intact
+        for key in &stored {
+            let s = cache.get(key).expect("admitted entry evaporated");
+            assert_eq!(s.ds_cycles, key.tile_idx);
+        }
+        // clearing resets contents but keeps the bound
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity(), 32);
+    }
+
+    #[test]
+    fn global_cache_uses_module_defaults() {
+        let g = TileCache::global();
+        assert_eq!(g.capacity(), N_SHARDS * SHARD_CAP);
+    }
+
+    #[test]
+    fn memo_on_off_identical_across_randomized_configs() {
+        // results must be bit-identical with memoization on vs off for
+        // random (geometry, density, seed, array) draws — and a renamed
+        // same-shape layer must reuse the very same entries
+        use crate::config::{ArrayConfig, FifoDepths};
+        use crate::coordinator::Coordinator;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0040);
+        for case in 0..6u64 {
+            let rows = [4usize, 8][rng.gen_below(2) as usize];
+            let cols = [4usize, 8][rng.gen_below(2) as usize];
+            let depth = [2usize, 4, 8][rng.gen_below(3) as usize];
+            let ratio = [2u32, 4][rng.gen_below(2) as usize];
+            let hw = 6 + rng.gen_below(8) as usize;
+            let cin = [8usize, 16, 32][rng.gen_below(3) as usize];
+            let cout = 4 + rng.gen_below(24) as usize;
+            let fd = 0.1 + rng.gen_f64() * 0.8;
+            let wd = 0.1 + rng.gen_f64() * 0.8;
+            let seed = 0xc0de_cafe_1000 + case;
+            let layer = LayerDesc::new("rand-a", hw, hw, cin, 3, 3, cout, 1, 1);
+            let renamed = LayerDesc::new("rand-b", hw, hw, cin, 3, 3, cout, 1, 1);
+            let mk = |memoize: bool| {
+                let array = ArrayConfig::new(rows, cols)
+                    .with_fifo(FifoDepths::uniform(depth))
+                    .with_ratio(ratio);
+                let cfg = SimConfig::new(array)
+                    .with_samples(2)
+                    .with_seed(seed)
+                    .with_memoize(memoize);
+                Coordinator::new(cfg)
+            };
+            let off = mk(false).simulate_layer(&layer, fd, wd, true);
+            let on = mk(true).simulate_layer(&layer, fd, wd, true);
+            let on2 = mk(true).simulate_layer(&layer, fd, wd, true);
+            assert_eq!(off.s2, on.s2, "case {case}: memoization changed results");
+            assert_eq!(on.s2, on2.s2, "case {case}: cached replay diverged");
+            let shared = mk(true).simulate_layer(&renamed, fd, wd, true);
+            assert_eq!(
+                on.s2, shared.s2,
+                "case {case}: same-shape rename must share entries"
+            );
+        }
     }
 
     #[test]

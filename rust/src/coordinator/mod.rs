@@ -175,11 +175,17 @@ impl Coordinator {
         )
     }
 
-    /// Simulate a whole model under a feature subset, at its Table II
-    /// densities, clustered non-zero patterns (actual-model emulation).
-    pub fn simulate_model_subset(&self, model: &Model, subset: FeatureSubset) -> ModelResult {
+    /// Per-layer results of a whole model under a feature subset, at its
+    /// Table II densities, clustered non-zero patterns (actual-model
+    /// emulation). Shared by [`Coordinator::simulate_model_subset`] and
+    /// the pipelined serving path, so both see bit-identical layers.
+    pub fn layer_results_subset(
+        &self,
+        model: &Model,
+        subset: FeatureSubset,
+    ) -> Vec<LayerResult> {
         let base_density = subset.density(model);
-        let layers: Vec<LayerResult> = model
+        model
             .layers
             .iter()
             .enumerate()
@@ -195,8 +201,62 @@ impl Coordinator {
                 let fd = (base_density + jitter).clamp(0.02, 0.98);
                 self.simulate_layer(layer, fd, model.weight_density, true)
             })
-            .collect();
+            .collect()
+    }
+
+    /// Per-layer results at designated uniform densities (the synthetic
+    /// sensitivity workloads).
+    pub fn layer_results_synthetic(
+        &self,
+        model: &Model,
+        feature_density: f64,
+        weight_density: f64,
+    ) -> Vec<LayerResult> {
+        model
+            .layers
+            .iter()
+            .map(|layer| self.simulate_layer(layer, feature_density, weight_density, false))
+            .collect()
+    }
+
+    /// Simulate a whole model under a feature subset, at its Table II
+    /// densities, clustered non-zero patterns (actual-model emulation).
+    pub fn simulate_model_subset(&self, model: &Model, subset: FeatureSubset) -> ModelResult {
+        let layers = self.layer_results_subset(model, subset);
         ModelResult::new(model, &self.cfg, layers)
+    }
+
+    /// Pipelined network-level serving run ([`crate::serve`]): simulate
+    /// the model's layers once (tile-memoized), then schedule
+    /// `serve.requests` images through the layer DAG with batch windows
+    /// of `serve.batch` and double-buffered inter-execution overlap
+    /// `serve.overlap`.
+    ///
+    /// With `batch = 1`, `overlap = 0` and one request the report's
+    /// layers and makespan reproduce [`Coordinator::simulate_model`]
+    /// bit-exactly (`rust/tests/serve_equivalence.rs`).
+    ///
+    /// ```
+    /// use s2engine::config::{ArrayConfig, SimConfig};
+    /// use s2engine::coordinator::Coordinator;
+    /// use s2engine::models::{zoo, FeatureSubset};
+    /// use s2engine::serve::ServeConfig;
+    ///
+    /// let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+    /// let serve = ServeConfig::new(4, 0.5).with_requests(8);
+    /// let r = Coordinator::new(cfg).simulate_model_pipelined(
+    ///     &zoo::s2net(), FeatureSubset::Average, &serve);
+    /// assert!(r.pipeline_speedup() > 1.0); // batching + overlap pay off
+    /// assert!(r.latency.p99 >= r.latency.p50);
+    /// ```
+    pub fn simulate_model_pipelined(
+        &self,
+        model: &Model,
+        subset: FeatureSubset,
+        serve: &crate::serve::ServeConfig,
+    ) -> crate::serve::ServeReport {
+        let layers = self.layer_results_subset(model, subset);
+        crate::serve::ServeReport::assemble(model.name.clone(), *serve, layers)
     }
 
     /// Average-subset convenience (the paper's default reporting mode).
@@ -235,11 +295,7 @@ impl Coordinator {
         feature_density: f64,
         weight_density: f64,
     ) -> ModelResult {
-        let layers: Vec<LayerResult> = model
-            .layers
-            .iter()
-            .map(|layer| self.simulate_layer(layer, feature_density, weight_density, false))
-            .collect();
+        let layers = self.layer_results_synthetic(model, feature_density, weight_density);
         ModelResult::new(model, &self.cfg, layers)
     }
 }

@@ -32,6 +32,10 @@
 //!   [`sweep::Grid`] axis products expanded into deterministic job
 //!   plans, sharded across workers, streamed into a resumable JSONL
 //!   store.
+//! * [`serve`] — network-level pipelined serving: the layer dependency
+//!   DAG, batched open-loop request arrivals, and the double-buffered
+//!   pipeline scheduler that turns per-layer walls into request latency
+//!   percentiles, throughput and array occupancy.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section as text output; each figure sweep is a
 //!   [`sweep::Grid`] declaration.
@@ -79,6 +83,7 @@ pub mod energy;
 pub mod models;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sparsity;
 pub mod sweep;

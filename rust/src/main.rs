@@ -17,10 +17,13 @@ s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
                   --ratio 4 --samples 16 --subset avg|max|min
                   --no-ce --ratio16 0.035 --seed N --workers N
                   --no-memo --json out.json]
-s2engine report  table1|table2|table3|table4|table5|fig3|fits [--effort ...]
-s2engine sweep   fig10|...|fig17 [--effort quick|default|full]
+s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
+                  --rate IMGS_PER_S --subset avg|max|min --out serve.json
+                  plus the simulate array/effort options]
+s2engine report  table1|...|table5|fig3|fits|serving [--effort ...]
+s2engine sweep   fig10|...|fig17|serving [--effort quick|default|full]
                   [--scales 16,32] [--seed N] [--out DIR --resume]
-s2engine sweep   --grid 'models=paper;fifos=2,4,inf;ratios=2,4,8'
+s2engine sweep   --grid 'models=paper;fifos=2,4,inf;batch=1,4,8;overlap=0,0.6'
                   [--grid grid.json] [--out DIR --resume] [--workers N]
 s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
 s2engine replay  --in t.s2df [--rows R --cols C ...]  # simulate a file
@@ -58,6 +61,7 @@ fn sim_config(args: &Args) -> SimConfig {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("simulate") => simulate(args),
+        Some("serve") => serve_cmd(args),
         Some("compile") => compile_cmd(args),
         Some("replay") => replay(args),
         Some("report") => report_cmd(args),
@@ -125,6 +129,83 @@ fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `s2engine serve <model>`: pipelined network-level serving simulation
+/// — schedule a batched request workload through the layer DAG and
+/// report latency percentiles, throughput and occupancy.
+fn serve_cmd(args: &Args) -> Result<()> {
+    use s2engine::serve::ServeConfig;
+    let name = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("model"))
+        .unwrap_or("alexnet");
+    let model =
+        zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
+    let subset = match args.get("subset").unwrap_or("avg") {
+        "max" => FeatureSubset::MaxSparsity,
+        "min" => FeatureSubset::MinSparsity,
+        _ => FeatureSubset::Average,
+    };
+    let cfg = sim_config(args);
+    let batch = args.get_usize("batch", 1).max(1);
+    let overlap = args.get_f64("overlap", 0.0);
+    anyhow::ensure!(
+        (0.0..=s2engine::serve::MAX_OVERLAP).contains(&overlap),
+        "--overlap must be in [0, {}], got {overlap}",
+        s2engine::serve::MAX_OVERLAP
+    );
+    let serve = ServeConfig::new(batch, overlap)
+        .with_requests(args.get_usize("requests", 4 * batch).max(1))
+        .with_rate(args.get_f64("rate", 0.0))
+        .with_seed(cfg.seed);
+    println!(
+        "serving {} on {}x{} array: {} requests, batch {}, overlap {:.2}, {}",
+        model.name,
+        cfg.array.rows,
+        cfg.array.cols,
+        serve.requests,
+        serve.batch,
+        serve.overlap,
+        if serve.rate > 0.0 {
+            format!("open-loop {:.1} img/s", serve.rate)
+        } else {
+            "closed-loop (all queued at t=0)".into()
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let r = Coordinator::new(cfg).simulate_model_pipelined(&model, subset, &serve);
+    println!("{:<12} {:>12} {:>12}", "layer", "ds cycles", "wall (ms)");
+    for l in &r.layers {
+        println!(
+            "{:<12} {:>12} {:>12.4}",
+            l.layer,
+            l.s2.ds_cycles,
+            l.s2_wall() * 1e3
+        );
+    }
+    println!("---");
+    let ms = |s: f64| s * 1e3;
+    println!("latency p50          {:.4} ms", ms(r.latency.p50));
+    println!("latency p95          {:.4} ms", ms(r.latency.p95));
+    println!("latency p99          {:.4} ms", ms(r.latency.p99));
+    println!("latency mean/max     {:.4} / {:.4} ms", ms(r.latency.mean), ms(r.latency.max));
+    println!("makespan             {:.4} ms", ms(r.makespan()));
+    println!("throughput           {:.1} images/s", r.throughput());
+    println!("array occupancy      {:.1}%", r.occupancy() * 100.0);
+    println!("pipeline speedup     {:.2}x vs serial serving", r.pipeline_speedup());
+    println!(
+        "({} layer executions in {:?})",
+        r.schedule.jobs.len(),
+        t0.elapsed()
+    );
+    if let Some(path) = args.get("out").or_else(|| args.get("json")) {
+        std::fs::write(path, format!("{}\n", r.to_json()))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn report_cmd(args: &Args) -> Result<()> {
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
@@ -132,7 +213,9 @@ fn report_cmd(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .ok_or_else(|| {
-            anyhow!("report needs a target (table1|table2|table3|table4|table5|fig3|fits)")
+            anyhow!(
+                "report needs a target (table1|table2|table3|table4|table5|fig3|fits|serving)"
+            )
         })?;
     let out = match which.as_str() {
         "table1" => report::table1(),
@@ -142,6 +225,7 @@ fn report_cmd(args: &Args) -> Result<()> {
         "table4" => report::table4(effort, seed),
         "table5" => report::table5(effort, seed),
         "fig3" => report::fig3(effort, seed),
+        "serving" => report::serving(effort, seed),
         other => return Err(anyhow!("unknown report target `{other}`")),
     };
     println!("{out}");
@@ -181,12 +265,14 @@ fn sweep(args: &Args) -> Result<()> {
     let which = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("sweep needs a target (fig10..fig17 or --grid <spec>)"))?;
+        .ok_or_else(|| {
+            anyhow!("sweep needs a target (fig10..fig17, serving, or --grid <spec>)")
+        })?;
     // validate the target BEFORE opening the store: a typo'd target must
     // not truncate an existing results file
     anyhow::ensure!(
         report::is_figure(which),
-        "unknown sweep target `{which}` (fig10..fig17)"
+        "unknown sweep target `{which}` (fig10..fig17, serving)"
     );
     let mut store = sweep_store(args)?;
     let t0 = std::time::Instant::now();
@@ -219,7 +305,8 @@ fn grid_sweep(args: &Args) -> Result<()> {
     let mut t = TextTable::new(
         "Sweep results",
         &["model", "workload", "array", "fifo", "ratio", "CE", "r16",
-          "speedup", "onchip EE", "area eff", "FB red."],
+          "batch", "ovl", "speedup", "onchip EE", "area eff", "FB red.",
+          "p99 (ms)", "img/s"],
     );
     for rec in res.records() {
         let j = &rec.job;
@@ -231,10 +318,14 @@ fn grid_sweep(args: &Args) -> Result<()> {
             format!("{}:1", j.array.ds_ratio),
             if j.ce { "on" } else { "off" }.into(),
             format!("{:.3}", j.ratio16),
+            j.batch.to_string(),
+            format!("{:.2}", j.overlap),
             fx(rec.speedup),
             fx(rec.onchip_ee),
             fx(rec.area_eff),
             fx(rec.access_reduction),
+            format!("{:.3}", rec.p99_latency * 1e3),
+            format!("{:.1}", rec.throughput),
         ]);
     }
     println!("{}", t.render());

@@ -412,12 +412,21 @@ fn scale_depth_grid(effort: Effort, seed: u64, scales: &[usize], depths: &[usize
         .fifos(&fifos)
 }
 
-/// Is `which` a figure name [`figure`] can render? (The CLI checks this
-/// before opening — and possibly truncating — a `--out` store.)
+/// Is `which` a sweep target [`figure`] can render — a paper figure or
+/// the `serving` summary? (The CLI checks this before opening — and
+/// possibly truncating — a `--out` store.)
 pub fn is_figure(which: &str) -> bool {
     matches!(
         which,
-        "fig10" | "fig11" | "fig12" | "fig13" | "fig14" | "fig15" | "fig16" | "fig17"
+        "fig10"
+            | "fig11"
+            | "fig12"
+            | "fig13"
+            | "fig14"
+            | "fig15"
+            | "fig16"
+            | "fig17"
+            | "serving"
     )
 }
 
@@ -439,6 +448,7 @@ pub fn figure(
         "fig15" => fig15_in(effort, seed, store),
         "fig16" => fig16_in(effort, seed, scales, store),
         "fig17" => fig17_in(effort, seed, scales, store),
+        "serving" => super::serving::serving_in(effort, seed, store),
         _ => return None,
     })
 }

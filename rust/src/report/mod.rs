@@ -15,9 +15,11 @@
 //! sampled deterministically).
 
 pub mod figures;
+pub mod serving;
 pub mod tables;
 
 pub use figures::*;
+pub use serving::{serving, serving_in};
 pub use tables::*;
 
 use crate::models::Model;

@@ -1,0 +1,187 @@
+//! Layer dependency DAGs — the precedence structure the pipelined
+//! serving scheduler respects.
+//!
+//! Every CNN in the zoo is a linear chain today ([`LayerDag::chain`] /
+//! [`LayerDag::from_model`]), but the scheduler is written against a
+//! general DAG ([`LayerDag::new`]) so branchy topologies (ResNet-style
+//! residual forks, multi-head outputs) schedule correctly the day the
+//! model descriptors grow edges. Construction validates the graph: edges
+//! must name existing nodes and the graph must be acyclic; a
+//! deterministic topological order (Kahn's algorithm, lowest-index-first
+//! among ready nodes) is computed once and reused by the scheduler, so
+//! wave order never depends on iteration incidentals.
+
+use crate::models::Model;
+
+/// An immutable, validated layer-precedence DAG.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerDag {
+    /// `deps[n]` = indices of nodes that must finish before `n` starts.
+    deps: Vec<Vec<usize>>,
+    /// Deterministic topological order (validated acyclic).
+    topo: Vec<usize>,
+}
+
+impl LayerDag {
+    /// Build from explicit dependency lists. Errors on an out-of-range
+    /// or self dependency, or on a cycle.
+    pub fn new(deps: Vec<Vec<usize>>) -> Result<LayerDag, String> {
+        let n = deps.len();
+        for (i, d) in deps.iter().enumerate() {
+            for &p in d {
+                if p >= n {
+                    return Err(format!("node {i} depends on missing node {p}"));
+                }
+                if p == i {
+                    return Err(format!("node {i} depends on itself"));
+                }
+            }
+        }
+        // Kahn's algorithm with a lowest-index-first ready set: the order
+        // is a pure function of the graph.
+        let mut indegree: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, d) in deps.iter().enumerate() {
+            for &p in d {
+                dependents[p].push(i);
+            }
+        }
+        let mut ready: Vec<usize> =
+            (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(&next) = ready.iter().min() {
+            ready.retain(|&x| x != next);
+            topo.push(next);
+            for &dep in &dependents[next] {
+                indegree[dep] -= 1;
+                if indegree[dep] == 0 {
+                    ready.push(dep);
+                }
+            }
+        }
+        if topo.len() != n {
+            return Err("layer DAG contains a cycle".into());
+        }
+        Ok(LayerDag { deps, topo })
+    }
+
+    /// A linear chain of `n` nodes (node `i` depends on `i - 1`) — the
+    /// topology of every sequential CNN.
+    pub fn chain(n: usize) -> LayerDag {
+        let deps = (0..n)
+            .map(|i| if i == 0 { Vec::new() } else { vec![i - 1] })
+            .collect();
+        LayerDag::new(deps).expect("a chain is always a valid DAG")
+    }
+
+    /// The DAG of a zoo model (currently: its layer chain).
+    pub fn from_model(model: &Model) -> LayerDag {
+        LayerDag::chain(model.layers.len())
+    }
+
+    pub fn len(&self) -> usize {
+        self.deps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deps.is_empty()
+    }
+
+    /// Prerequisites of node `n`.
+    pub fn deps(&self, n: usize) -> &[usize] {
+        &self.deps[n]
+    }
+
+    /// The deterministic topological order the scheduler walks.
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Nodes no other node depends on (a request is complete when all of
+    /// its sink executions have finished).
+    pub fn sinks(&self) -> Vec<usize> {
+        let mut is_dep = vec![false; self.len()];
+        for d in &self.deps {
+            for &p in d {
+                is_dep[p] = true;
+            }
+        }
+        (0..self.len()).filter(|&i| !is_dep[i]).collect()
+    }
+
+    /// Length of the longest dependency path under per-node `durations`
+    /// — the lower bound no schedule of a single request can beat.
+    /// Summation follows the topological order with left-fold adds, the
+    /// same association the scheduler's chained `start + duration`
+    /// updates produce, so a chain's critical path is bit-identical to
+    /// its serial makespan.
+    pub fn critical_path(&self, durations: &[f64]) -> f64 {
+        assert_eq!(durations.len(), self.len(), "one duration per node");
+        let mut longest = vec![0.0f64; self.len()];
+        let mut best = 0.0f64;
+        for &n in &self.topo {
+            let mut at = 0.0f64;
+            for &p in &self.deps[n] {
+                at = at.max(longest[p]);
+            }
+            longest[n] = at + durations[n];
+            best = best.max(longest[n]);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_topology() {
+        let d = LayerDag::chain(4);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.deps(0), &[] as &[usize]);
+        assert_eq!(d.deps(3), &[2]);
+        assert_eq!(d.topo_order(), &[0, 1, 2, 3]);
+        assert_eq!(d.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn chain_critical_path_is_sum() {
+        let d = LayerDag::chain(3);
+        let durations = [0.1, 0.2, 0.3];
+        let serial: f64 = durations.iter().sum();
+        assert_eq!(d.critical_path(&durations), serial);
+    }
+
+    #[test]
+    fn diamond_critical_path_takes_longest_branch() {
+        // 0 -> {1, 2} -> 3
+        let d = LayerDag::new(vec![vec![], vec![0], vec![0], vec![1, 2]]).unwrap();
+        assert_eq!(d.topo_order(), &[0, 1, 2, 3]);
+        assert_eq!(d.sinks(), vec![3]);
+        let cp = d.critical_path(&[1.0, 5.0, 2.0, 1.0]);
+        assert!((cp - 7.0).abs() < 1e-12, "cp {cp}");
+    }
+
+    #[test]
+    fn rejects_cycles_and_bad_edges() {
+        assert!(LayerDag::new(vec![vec![1], vec![0]]).is_err());
+        assert!(LayerDag::new(vec![vec![0]]).is_err());
+        assert!(LayerDag::new(vec![vec![7]]).is_err());
+    }
+
+    #[test]
+    fn from_model_matches_layer_count() {
+        let m = crate::models::zoo::alexnet();
+        let d = LayerDag::from_model(&m);
+        assert_eq!(d.len(), m.layers.len());
+    }
+
+    #[test]
+    fn empty_dag_is_valid() {
+        let d = LayerDag::chain(0);
+        assert!(d.is_empty());
+        assert_eq!(d.critical_path(&[]), 0.0);
+        assert!(d.sinks().is_empty());
+    }
+}

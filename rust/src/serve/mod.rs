@@ -1,0 +1,310 @@
+//! Network-level pipelined serving simulation.
+//!
+//! The paper evaluates S²Engine layer by layer; this subsystem models
+//! what the ROADMAP actually targets — *whole-network inference under
+//! load*. A CNN becomes a layer dependency DAG ([`dag::LayerDag`]); a
+//! deterministic open-loop request workload ([`workload::Arrivals`])
+//! batches images into windows; and the pipelined scheduler
+//! ([`pipeline::PipelineSchedule`]) places every (request × layer)
+//! execution on the array with double-buffered weight/feature handoff
+//! and a configurable inter-execution overlap. Out the other end come
+//! the serving metrics a deployment cares about: per-request latency
+//! percentiles (p50/p95/p99), steady-state throughput (images/s at the
+//! modeled clock), and array occupancy.
+//!
+//! Layer durations and energies come from the same
+//! [`crate::coordinator::LayerResult`]s the per-layer evaluation
+//! produces (tile-memoized event-engine simulations) — the serving layer
+//! is pure deterministic arithmetic on top, which is what makes its
+//! load-bearing invariant checkable: with `batch = 1`, `overlap = 0`
+//! and a single request, [`ServeReport`] reproduces
+//! `Coordinator::simulate_model` bit-exactly
+//! (`rust/tests/serve_equivalence.rs`).
+//!
+//! Entry points: [`crate::coordinator::Coordinator::simulate_model_pipelined`],
+//! the `s2engine serve` CLI subcommand, the `batch`/`overlap` sweep axes,
+//! and `report::serving`.
+
+pub mod dag;
+pub mod pipeline;
+pub mod workload;
+
+pub use dag::LayerDag;
+pub use pipeline::{serial_makespan, PipelineSchedule, ScheduledJob, MAX_OVERLAP};
+pub use workload::{Arrivals, LatencyStats};
+
+use crate::coordinator::LayerResult;
+use crate::energy::Energy;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Serving-run parameters (the simulation knobs that are not part of
+/// [`crate::config::SimConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeConfig {
+    /// Images per batch window (>= 1): the server collects this many
+    /// requests before issuing a layer-major wave through the network.
+    pub batch: usize,
+    /// Inter-execution double-buffer overlap fraction in
+    /// `[0, MAX_OVERLAP]`; `0` = strictly serial executions.
+    pub overlap: f64,
+    /// Total requests in the workload.
+    pub requests: usize,
+    /// Offered load in images/s; `0` = closed batch (all requests queued
+    /// at t = 0).
+    pub rate: f64,
+    /// Arrival-jitter seed ([`Arrivals::open_loop`]).
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    pub fn new(batch: usize, overlap: f64) -> ServeConfig {
+        ServeConfig {
+            batch: batch.max(1),
+            overlap,
+            requests: batch.max(1),
+            rate: 0.0,
+            seed: 0x5eed_5eed,
+        }
+    }
+
+    pub fn with_requests(mut self, requests: usize) -> ServeConfig {
+        self.requests = requests;
+        self
+    }
+
+    pub fn with_rate(mut self, rate: f64) -> ServeConfig {
+        self.rate = rate;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> ServeConfig {
+        self.seed = seed;
+        self
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig::new(1, 0.0)
+    }
+}
+
+/// Outcome of one pipelined serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub cfg: ServeConfig,
+    /// The per-layer simulation shared by every request (bit-identical
+    /// to the per-layer path's results).
+    pub layers: Vec<LayerResult>,
+    /// The request timeline the run was driven by.
+    pub arrivals: Arrivals,
+    /// Every placed (request × layer) execution.
+    pub schedule: PipelineSchedule,
+    /// Per-request latency distribution (arrival -> last-layer finish).
+    pub latency: LatencyStats,
+}
+
+impl ServeReport {
+    /// Schedule `cfg.requests` images of the network described by
+    /// `layers` (durations = simulated per-layer walls) and summarize.
+    pub fn assemble(
+        model: impl Into<String>,
+        cfg: ServeConfig,
+        layers: Vec<LayerResult>,
+    ) -> ServeReport {
+        let dag = LayerDag::chain(layers.len());
+        let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+        let arrivals = Arrivals::open_loop(cfg.requests.max(1), cfg.rate, cfg.seed);
+        let schedule =
+            PipelineSchedule::build(&dag, &durations, &arrivals.times, cfg.batch, cfg.overlap);
+        let latency = LatencyStats::from_latencies(&schedule.latencies(&arrivals.times));
+        ServeReport {
+            model: model.into(),
+            cfg,
+            layers,
+            arrivals,
+            schedule,
+            latency,
+        }
+    }
+
+    /// The layer DAG this run scheduled against.
+    pub fn dag(&self) -> LayerDag {
+        LayerDag::chain(self.layers.len())
+    }
+
+    /// Per-layer walls, in layer order (the schedule's durations).
+    pub fn durations(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.s2_wall()).collect()
+    }
+
+    /// Wall-clock of the whole run at the modeled clock (seconds).
+    pub fn makespan(&self) -> f64 {
+        self.schedule.makespan
+    }
+
+    /// Steady-state throughput: completed images per modeled second.
+    pub fn throughput(&self) -> f64 {
+        if self.schedule.makespan > 0.0 {
+            self.arrivals.len() as f64 / self.schedule.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Array occupancy over the run (active / makespan).
+    pub fn occupancy(&self) -> f64 {
+        self.schedule.occupancy()
+    }
+
+    /// The unpipelined reference makespan: same batch-forming policy,
+    /// zero overlap, one execution at a time (total work per image).
+    pub fn serial_makespan(&self) -> f64 {
+        serial_makespan(&self.durations(), &self.arrivals.times, self.cfg.batch)
+    }
+
+    /// End-to-end gain of overlap pipelining over serial serving of the
+    /// same batched workload.
+    pub fn pipeline_speedup(&self) -> f64 {
+        let m = self.makespan();
+        if m > 0.0 {
+            self.serial_makespan() / m
+        } else {
+            1.0
+        }
+    }
+
+    /// Dependency-path lower bound no schedule can beat:
+    /// `max_i(arrival_i + critical_path)`.
+    pub fn critical_path_bound(&self) -> f64 {
+        let chain = self.dag().critical_path(&self.durations());
+        self.arrivals
+            .times
+            .iter()
+            .map(|a| a + chain)
+            .fold(0.0, f64::max)
+    }
+
+    /// Energy of serving one image (sum of layer energies — schedule
+    /// independent, identical to the per-layer path).
+    pub fn per_image_energy(&self) -> Energy {
+        let mut total = Energy::default();
+        for l in &self.layers {
+            let e = l.s2_energy();
+            total.onchip.mac_pj += e.onchip.mac_pj;
+            total.onchip.sram_pj += e.onchip.sram_pj;
+            total.onchip.fifo_pj += e.onchip.fifo_pj;
+            total.onchip.ce_pj += e.onchip.ce_pj;
+            total.onchip.other_pj += e.onchip.other_pj;
+            total.dram_pj += e.dram_pj;
+        }
+        total
+    }
+
+    /// Structured JSON dump (`s2engine serve --out`).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("batch".into(), Json::Num(self.cfg.batch as f64));
+        o.insert("overlap".into(), Json::Num(self.cfg.overlap));
+        o.insert("requests".into(), Json::Num(self.arrivals.len() as f64));
+        o.insert("rate".into(), Json::Num(self.cfg.rate));
+        o.insert("makespan_s".into(), Json::Num(self.makespan()));
+        o.insert("throughput_img_s".into(), Json::Num(self.throughput()));
+        o.insert("occupancy".into(), Json::Num(self.occupancy()));
+        o.insert(
+            "pipeline_speedup".into(),
+            Json::Num(self.pipeline_speedup()),
+        );
+        o.insert("latency_p50_s".into(), Json::Num(self.latency.p50));
+        o.insert("latency_p95_s".into(), Json::Num(self.latency.p95));
+        o.insert("latency_p99_s".into(), Json::Num(self.latency.p99));
+        o.insert("latency_mean_s".into(), Json::Num(self.latency.mean));
+        o.insert("latency_max_s".into(), Json::Num(self.latency.max));
+        o.insert(
+            "per_image_energy_pj".into(),
+            Json::Num(self.per_image_energy().total()),
+        );
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut lo = BTreeMap::new();
+                lo.insert("layer".into(), Json::Str(l.layer.clone()));
+                lo.insert("wall_s".into(), Json::Num(l.s2_wall()));
+                lo.insert("ds_cycles".into(), Json::Num(l.s2.ds_cycles as f64));
+                Json::Obj(lo)
+            })
+            .collect();
+        o.insert("layers".into(), Json::Arr(layers));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrayConfig, SimConfig};
+    use crate::coordinator::Coordinator;
+    use crate::models::zoo;
+
+    fn quick_layers() -> Vec<LayerResult> {
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+        Coordinator::new(cfg)
+            .layer_results_subset(&zoo::s2net(), crate::models::FeatureSubset::Average)
+    }
+
+    #[test]
+    fn assemble_single_request_matches_serial() {
+        let layers = quick_layers();
+        let serial: f64 = layers.iter().map(|l| l.s2_wall()).sum();
+        let r = ServeReport::assemble("s2net", ServeConfig::default(), layers);
+        assert_eq!(r.makespan(), serial);
+        assert_eq!(r.latency.p50, serial);
+        assert_eq!(r.latency.p99, serial);
+        assert!((r.pipeline_speedup() - 1.0).abs() < 1e-12);
+        assert!((r.occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batched_overlapped_run_beats_serial_and_respects_bounds() {
+        let layers = quick_layers();
+        let cfg = ServeConfig::new(4, 0.6).with_requests(16);
+        let r = ServeReport::assemble("s2net", cfg, layers);
+        assert!(r.makespan() <= r.serial_makespan() + 1e-15);
+        assert!(r.makespan() >= r.critical_path_bound() - 1e-15);
+        assert!(r.pipeline_speedup() > 1.0);
+        assert!(r.throughput() > 0.0);
+        let t = r.throughput() * r.makespan();
+        assert!((t - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn open_loop_rate_spreads_latency() {
+        let layers = quick_layers();
+        let chain: f64 = layers.iter().map(|l| l.s2_wall()).sum();
+        // offered load ~80% of single-stream capacity, batch 2: the
+        // batch-forming wait makes later percentiles exceed the median
+        let rate = 0.8 / chain;
+        let cfg = ServeConfig::new(2, 0.0)
+            .with_requests(32)
+            .with_rate(rate)
+            .with_seed(9);
+        let r = ServeReport::assemble("s2net", cfg, layers);
+        assert!(r.latency.p99 >= r.latency.p50);
+        assert!(r.latency.min >= chain - 1e-12, "latency floor is the chain");
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let r = ServeReport::assemble("s2net", ServeConfig::new(2, 0.3), quick_layers());
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.str_field("model").unwrap(), "s2net");
+        assert!(parsed.f64_field("throughput_img_s").unwrap() > 0.0);
+        assert!(parsed.f64_field("latency_p99_s").unwrap() > 0.0);
+        assert_eq!(parsed.get("layers").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Serving workloads: deterministic request arrivals and latency
+//! statistics.
+//!
+//! Arrivals are *open-loop* (the client does not wait for responses) and
+//! Poisson-free deterministic: inter-arrival gaps are drawn from the
+//! repo's seeded [`crate::util::rng`], so the same `(requests, rate,
+//! seed)` triple always produces the same timeline — a serving study is
+//! exactly as reproducible as a tile simulation.
+
+use crate::util::rng::Rng;
+
+/// A sorted request-arrival timeline (seconds, first arrival at 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrivals {
+    pub times: Vec<f64>,
+}
+
+impl Arrivals {
+    /// Deterministic open-loop arrivals: `requests` requests at a mean
+    /// offered load of `rate` images/s, each gap jittered uniformly in
+    /// `[0.5, 1.5] / rate` from `seed`. `rate <= 0` is the closed-batch
+    /// limit: every request arrives at t = 0 (the whole batch is already
+    /// queued when the array starts).
+    pub fn open_loop(requests: usize, rate: f64, seed: u64) -> Arrivals {
+        if rate <= 0.0 || requests == 0 {
+            return Arrivals {
+                times: vec![0.0; requests],
+            };
+        }
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5e7e_a11a);
+        let mean_gap = 1.0 / rate;
+        let mut t = 0.0f64;
+        let mut times = Vec::with_capacity(requests);
+        times.push(0.0);
+        for _ in 1..requests {
+            t += mean_gap * (0.5 + rng.gen_f64());
+            times.push(t);
+        }
+        Arrivals { times }
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+}
+
+/// Latency distribution summary (seconds) over one serving run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub min: f64,
+    pub mean: f64,
+    /// Median (nearest-rank).
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    /// Summarize a latency sample (empty input yields all-zero stats).
+    pub fn from_latencies(xs: &[f64]) -> LatencyStats {
+        if xs.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        LatencyStats {
+            n: sorted.len(),
+            min: sorted[0],
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: percentile(&sorted, 50.0),
+            p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted non-empty sample: the
+/// smallest element with at least `p`% of the sample at or below it.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_batch_arrives_at_zero() {
+        let a = Arrivals::open_loop(5, 0.0, 42);
+        assert_eq!(a.times, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn open_loop_is_sorted_deterministic_and_rate_scaled() {
+        let a = Arrivals::open_loop(100, 10.0, 7);
+        let b = Arrivals::open_loop(100, 10.0, 7);
+        assert_eq!(a, b, "same seed, same timeline");
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.times[0], 0.0);
+        for w in a.times.windows(2) {
+            assert!(w[1] > w[0], "arrivals must strictly increase");
+        }
+        // 99 gaps at mean 0.1 s: span in [4.95, 14.85], centred near 9.9
+        let span = *a.times.last().unwrap();
+        assert!(span > 5.0 && span < 15.0, "span {span}");
+        let c = Arrivals::open_loop(100, 10.0, 8);
+        assert_ne!(a, c, "different seed, different jitter");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn stats_order_and_identities() {
+        let xs = [3.0, 1.0, 2.0, 10.0];
+        let s = LatencyStats::from_latencies(&xs);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.p50, 2.0);
+        assert!((s.mean - 4.0).abs() < 1e-12);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
+    }
+
+    #[test]
+    fn empty_sample_is_zero() {
+        assert_eq!(LatencyStats::from_latencies(&[]), LatencyStats::default());
+    }
+}

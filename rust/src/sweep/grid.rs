@@ -58,6 +58,11 @@ pub struct Grid {
     pub ce: Vec<bool>,
     /// 16-bit promotion ratios (Section 4.5).
     pub ratio16: Vec<f64>,
+    /// Serving batch-window sizes ([`crate::serve`]); `1` = the classic
+    /// per-layer evaluation point.
+    pub batches: Vec<usize>,
+    /// Serving double-buffer overlap fractions; `0` = serial handoff.
+    pub overlaps: Vec<f64>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -74,6 +79,8 @@ impl Grid {
             ratios: vec![4],
             ce: vec![true],
             ratio16: vec![0.0],
+            batches: vec![1],
+            overlaps: vec![0.0],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -120,6 +127,16 @@ impl Grid {
         self
     }
 
+    pub fn batches(mut self, batches: &[usize]) -> Grid {
+        self.batches = batches.to_vec();
+        self
+    }
+
+    pub fn overlaps(mut self, overlaps: &[f64]) -> Grid {
+        self.overlaps = overlaps.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -142,10 +159,13 @@ impl Grid {
             * self.ratios.len()
             * self.ce.len()
             * self.ratio16.len()
+            * self.batches.len()
+            * self.overlaps.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
-    /// first): model, workload, scale, fifo, ratio, ce, ratio16.
+    /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
+    /// overlap.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -162,21 +182,30 @@ impl Grid {
                         for &ratio in &self.ratios {
                             for &ce in &self.ce {
                                 for &r16 in &self.ratio16 {
-                                    let array = ArrayConfig::new(rows, cols)
-                                        .with_fifo(fifo)
-                                        .with_ratio(ratio);
-                                    let job = match (subset, density) {
-                                        (Some(s), _) => Job::subset(
-                                            model, s, array, ce, self.seed, effort,
-                                        )
-                                        .with_ratio16(r16),
-                                        (_, Some((fd, wd))) => Job::synthetic(
-                                            model, fd, wd, array, r16, self.seed, effort,
-                                        )
-                                        .with_ce(ce),
-                                        _ => unreachable!(),
-                                    };
-                                    jobs.push(job);
+                                    for &batch in &self.batches {
+                                        for &overlap in &self.overlaps {
+                                            let array = ArrayConfig::new(rows, cols)
+                                                .with_fifo(fifo)
+                                                .with_ratio(ratio);
+                                            let job = match (subset, density) {
+                                                (Some(s), _) => Job::subset(
+                                                    model, s, array, ce, self.seed,
+                                                    effort,
+                                                )
+                                                .with_ratio16(r16),
+                                                (_, Some((fd, wd))) => Job::synthetic(
+                                                    model, fd, wd, array, r16,
+                                                    self.seed, effort,
+                                                )
+                                                .with_ce(ce),
+                                                _ => unreachable!(),
+                                            };
+                                            jobs.push(
+                                                job.with_batch(batch)
+                                                    .with_overlap(overlap),
+                                            );
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -200,6 +229,8 @@ impl Grid {
     /// | `ratios`    | DS:MAC integers                                     |
     /// | `ce`        | `on`, `off`, `both`                                 |
     /// | `ratio16`   | fractions in `[0,1]`                                |
+    /// | `batch`     | serving batch-window sizes (integers >= 1)          |
+    /// | `overlap`   | serving overlap fractions in `[0, 0.95]`            |
     /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
     /// | `samples`   | tiles sampled per layer (overrides effort)          |
     /// | `stride`    | layer thinning stride (overrides effort)            |
@@ -339,6 +370,29 @@ impl Grid {
                 self.ratio16 = values
                     .iter()
                     .map(|v| v.trim().parse().map_err(|_| bad("ratio16", v)))
+                    .collect::<Result<_, _>>()?;
+            }
+            "batch" | "batches" => {
+                self.batches = values
+                    .iter()
+                    .map(|v| match v.trim().parse::<usize>() {
+                        Ok(b) if b >= 1 => Ok(b),
+                        _ => Err(bad("batch", v)),
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "overlap" | "overlaps" => {
+                // the scheduler's hard cap is the validation bound too:
+                // a silently-clamped value would make distinct job keys
+                // with bit-identical metrics
+                self.overlaps = values
+                    .iter()
+                    .map(|v| match v.trim().parse::<f64>() {
+                        Ok(o) if (0.0..=crate::serve::MAX_OVERLAP).contains(&o) => {
+                            Ok(o)
+                        }
+                        _ => Err(bad("overlap", v)),
+                    })
                     .collect::<Result<_, _>>()?;
             }
             "effort" => {
@@ -512,6 +566,41 @@ mod tests {
         assert!(Grid::from_spec("fifos=2|4").is_err());
         assert!(Grid::from_spec("ce=maybe").is_err());
         assert!(Grid::from_spec("densities=").is_err());
+        assert!(Grid::from_spec("batch=0").is_err());
+        assert!(Grid::from_spec("batch=two").is_err());
+        assert!(Grid::from_spec("overlap=1.0").is_err());
+        assert!(Grid::from_spec("overlap=-0.1").is_err());
+        // beyond the scheduler's hard cap: rejected, never silently
+        // clamped into a duplicate point
+        assert!(Grid::from_spec("overlap=0.96").is_err());
+        assert!(Grid::from_spec("overlap=0.95").is_ok());
+    }
+
+    #[test]
+    fn serving_axes_expand_innermost() {
+        let g = Grid::from_spec("models=s2net;batch=1,4;overlap=0,0.5").unwrap();
+        assert_eq!(g.batches, vec![1, 4]);
+        assert_eq!(g.overlaps, vec![0.0, 0.5]);
+        assert_eq!(g.size(), 4);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 4);
+        // overlap innermost, then batch
+        assert_eq!((jobs[0].batch, jobs[0].overlap), (1, 0.0));
+        assert_eq!((jobs[1].batch, jobs[1].overlap), (1, 0.5));
+        assert_eq!((jobs[2].batch, jobs[2].overlap), (4, 0.0));
+        assert_eq!((jobs[3].batch, jobs[3].overlap), (4, 0.5));
+        // the default point keeps the historical key shape
+        assert!(jobs[0].is_default_serving());
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 4, "serving axes must distinguish keys");
+        // JSON grid form parses identically
+        let j = Json::parse(
+            r#"{"models": ["s2net"], "batch": [1, 4], "overlap": [0, 0.5]}"#,
+        )
+        .unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
     }
 
     #[test]

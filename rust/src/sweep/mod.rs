@@ -42,6 +42,6 @@ pub mod runner;
 pub mod store;
 
 pub use grid::Grid;
-pub use plan::{resolve_model, Job, Plan, Workload};
+pub use plan::{resolve_model, Job, Plan, Workload, SERVE_WINDOWS};
 pub use runner::{Runner, SweepResults};
 pub use store::{Store, SweepRecord};

@@ -18,6 +18,11 @@ use crate::report::Effort;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+/// Closed-loop batch windows simulated per serving sweep point
+/// ([`Job::serve_config`]): enough back-to-back windows for the pipeline
+/// to reach steady state, few enough to stay cheap.
+pub const SERVE_WINDOWS: usize = 4;
+
 /// What to simulate for a given model: one of the paper's per-image
 /// feature subsets at the model's calibrated (Table II) densities, or a
 /// synthetic workload at designated uniform densities (the Fig. 11/12
@@ -89,6 +94,12 @@ pub struct Job {
     pub tile_samples: usize,
     /// Layer thinning stride ([`Effort::thin`]).
     pub layer_stride: usize,
+    /// Serving batch-window size ([`crate::serve::ServeConfig::batch`]).
+    /// `1` is the classic per-layer evaluation point.
+    pub batch: usize,
+    /// Serving double-buffer overlap fraction
+    /// ([`crate::serve::ServeConfig::overlap`]); `0` = serial handoff.
+    pub overlap: f64,
 }
 
 impl Job {
@@ -110,6 +121,8 @@ impl Job {
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
+            batch: 1,
+            overlap: 0.0,
         }
     }
 
@@ -135,6 +148,8 @@ impl Job {
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
+            batch: 1,
+            overlap: 0.0,
         }
     }
 
@@ -146,6 +161,34 @@ impl Job {
     pub fn with_ratio16(mut self, ratio16: f64) -> Job {
         self.ratio16 = ratio16;
         self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Job {
+        self.batch = batch.max(1);
+        self
+    }
+
+    pub fn with_overlap(mut self, overlap: f64) -> Job {
+        self.overlap = overlap;
+        self
+    }
+
+    /// Is this job a plain per-layer evaluation point (the pre-serving
+    /// default)? Such jobs keep their historical canonical form — and
+    /// therefore their [`Job::key`] — so stores written before the
+    /// serving axes existed still resume.
+    pub fn is_default_serving(&self) -> bool {
+        self.batch == 1 && self.overlap == 0.0
+    }
+
+    /// The serving protocol this job implies: `batch`-sized windows,
+    /// closed-loop arrivals, [`SERVE_WINDOWS`] full windows of requests
+    /// (enough for the pipeline to reach steady state while staying a
+    /// pure function of the job's fields).
+    pub fn serve_config(&self) -> crate::serve::ServeConfig {
+        crate::serve::ServeConfig::new(self.batch, self.overlap)
+            .with_requests(self.batch.max(1) * SERVE_WINDOWS)
+            .with_seed(self.seed)
     }
 
     /// Canonical text form: every field that determines the result, with
@@ -171,7 +214,7 @@ impl Job {
                 weight_density.to_bits()
             ),
         };
-        format!(
+        let base = format!(
             "{}|{}|{}x{}|{},{},{}|r{}|ce{}|r16:{:016x}|seed{}|n{}|t{}",
             self.model,
             workload,
@@ -186,7 +229,16 @@ impl Job {
             self.seed,
             self.tile_samples,
             self.layer_stride,
-        )
+        );
+        // Serving fields are appended only when non-default: default
+        // jobs keep the pre-serving canonical form, so keys — and
+        // therefore on-disk stores written before the `batch`/`overlap`
+        // axes existed — stay valid under `--resume`.
+        if self.is_default_serving() {
+            base
+        } else {
+            format!("{base}|b{}|ov:{:016x}", self.batch, self.overlap.to_bits())
+        }
     }
 
     /// Stable job identity: FNV-1a 64 over [`Job::canonical`]. The store
@@ -251,6 +303,12 @@ impl Job {
         o.insert("seed".into(), Json::Str(self.seed.to_string()));
         o.insert("samples".into(), Json::Num(self.tile_samples as f64));
         o.insert("stride".into(), Json::Num(self.layer_stride as f64));
+        // serving fields elided at their defaults (old stores carry
+        // neither; they parse back as batch=1 / overlap=0)
+        if !self.is_default_serving() {
+            o.insert("batch".into(), Json::Num(self.batch as f64));
+            o.insert("overlap".into(), Json::Num(self.overlap));
+        }
         Json::Obj(o)
     }
 
@@ -305,6 +363,12 @@ impl Job {
                 .map_err(|e| format!("bad seed: {e}"))?,
             tile_samples: j.usize_field("samples")?,
             layer_stride: j.usize_field("stride")?,
+            batch: j
+                .get("batch")
+                .and_then(Json::as_usize)
+                .unwrap_or(1)
+                .max(1),
+            overlap: j.get("overlap").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
 }
@@ -378,6 +442,57 @@ mod tests {
         let mut seeded = j.clone();
         seeded.seed = 1;
         assert_ne!(j.key(), seeded.key());
+    }
+
+    #[test]
+    fn default_serving_fields_keep_historical_keys() {
+        // Pre-serving stores must keep resuming: a batch=1/overlap=0 job
+        // keys exactly as it did before the serving axes existed. The
+        // canonical form and its hash are locked against independently
+        // computed constants.
+        let j = job();
+        assert!(j.is_default_serving());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        // non-default serving fields extend — and change — the key
+        let b = j.clone().with_batch(4);
+        assert!(b.canonical().ends_with("|b4|ov:0000000000000000"));
+        assert_ne!(b.key(), j.key());
+        let o = j.clone().with_overlap(0.5);
+        assert_ne!(o.key(), j.key());
+        assert_ne!(o.key(), b.key());
+        // with_batch(1) alone stays on the historical form
+        assert_eq!(j.clone().with_batch(1).key(), j.key());
+    }
+
+    #[test]
+    fn serving_job_json_roundtrip_and_legacy_parse() {
+        let j = job().with_batch(8).with_overlap(0.75);
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(j.key(), back.key());
+        // a legacy line (no batch/overlap keys) parses to the defaults
+        let legacy = job().to_json().to_string();
+        assert!(!legacy.contains("batch") && !legacy.contains("overlap"));
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(parsed.batch, 1);
+        assert_eq!(parsed.overlap, 0.0);
+        assert_eq!(parsed, job());
+    }
+
+    #[test]
+    fn serve_config_protocol_is_closed_loop_windows() {
+        let j = job().with_batch(4).with_overlap(0.5);
+        let sc = j.serve_config();
+        assert_eq!(sc.batch, 4);
+        assert_eq!(sc.overlap, 0.5);
+        assert_eq!(sc.requests, 4 * SERVE_WINDOWS);
+        assert_eq!(sc.rate, 0.0, "sweep serving points are closed-loop");
+        assert_eq!(sc.seed, j.seed);
     }
 
     #[test]

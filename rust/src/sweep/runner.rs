@@ -17,7 +17,7 @@
 use super::plan::{resolve_model, Job, Plan, Workload};
 use super::store::{Store, SweepRecord};
 use crate::config::SimConfig;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, ModelResult};
 use crate::util::pool;
 use std::collections::HashMap;
 
@@ -88,7 +88,10 @@ impl Runner {
 
 /// Run one job to completion (the coordinator does the per-tile
 /// fan-out/memoization; this resolves the model, thins it to the job's
-/// effort, and applies the configuration).
+/// effort, and applies the configuration). The layers are simulated
+/// once and feed both the per-layer metrics ([`ModelResult`]) and the
+/// job's pipelined serving run ([`Job::serve_config`]'s closed-loop
+/// window protocol), which is pure arithmetic on top.
 ///
 /// Panics on an unresolvable model name — [`crate::sweep::Grid`]
 /// validation rejects those before a plan ever reaches the runner.
@@ -103,14 +106,20 @@ pub fn execute(job: &Job, inner_workers: usize) -> SweepRecord {
         .with_ratio16(job.ratio16)
         .with_workers(inner_workers);
     let coord = Coordinator::new(cfg);
-    let result = match job.workload {
-        Workload::Subset(subset) => coord.simulate_model_subset(&model, subset),
+    let layers = match job.workload {
+        Workload::Subset(subset) => coord.layer_results_subset(&model, subset),
         Workload::Synthetic {
             feature_density,
             weight_density,
-        } => coord.simulate_model_synthetic(&model, feature_density, weight_density),
+        } => coord.layer_results_synthetic(&model, feature_density, weight_density),
     };
-    SweepRecord::from_result(job.clone(), &result)
+    let result = ModelResult::new(&model, &coord.cfg, layers.clone());
+    let serve = crate::serve::ServeReport::assemble(
+        model.name.clone(),
+        job.serve_config(),
+        layers,
+    );
+    SweepRecord::from_result(job.clone(), &result, &serve)
 }
 
 /// A completed sweep: records in plan order, indexed by job key.
@@ -242,6 +251,38 @@ mod tests {
         assert_eq!(store.len(), 2, "store holds one record per key");
         assert_eq!(res.records()[0], res.records()[2]);
         assert_eq!(res.records()[1], res.records()[3]);
+    }
+
+    #[test]
+    fn serving_axes_flow_through_to_record_metrics() {
+        // a batch/overlap grid produces serving metrics; the batched,
+        // overlapped point must beat the serial point on throughput
+        let g = Grid::new(tiny(), SEED ^ 0x5e)
+            .models(&["s2net"])
+            .scales(&[(8, 8)])
+            .batches(&[1, 4])
+            .overlaps(&[0.0, 0.5]);
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&g.plan(), &mut store);
+        assert_eq!(res.len(), 4);
+        for rec in res.records() {
+            assert!(rec.p50_latency > 0.0);
+            assert!(rec.p95_latency >= rec.p50_latency);
+            assert!(rec.p99_latency >= rec.p95_latency);
+            assert!(rec.throughput > 0.0);
+            assert!(rec.occupancy > 0.0 && rec.occupancy <= 1.0 + 1e-12);
+            // serving knobs never change the per-layer metrics
+            assert_eq!(rec.speedup, res.records()[0].speedup);
+            assert_eq!(rec.s2_wall, res.records()[0].s2_wall);
+        }
+        let serial = &res.records()[0]; // batch 1, overlap 0
+        let piped = &res.records()[3]; // batch 4, overlap 0.5
+        assert!(
+            piped.throughput > serial.throughput,
+            "batch+overlap must raise throughput: {} vs {}",
+            piped.throughput,
+            serial.throughput
+        );
     }
 
     #[test]

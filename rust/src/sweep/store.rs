@@ -18,6 +18,11 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+/// Optional metric field: 0.0 when the line predates the metric.
+fn opt(metrics: &Json, key: &str) -> f64 {
+    metrics.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
 /// Everything the report layer reads out of one model evaluation —
 /// enough to render every figure the paper plots without re-running the
 /// simulator.
@@ -49,13 +54,33 @@ pub struct SweepRecord {
     pub e_ce: f64,
     pub e_other: f64,
     pub e_dram: f64,
+    /// Serving metrics from the job's pipelined run
+    /// ([`Job::serve_config`]'s closed-loop window protocol): request
+    /// latency percentiles (seconds) ...
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    /// ... steady-state throughput (images per modeled second) ...
+    pub throughput: f64,
+    /// ... and array occupancy over the run.
+    pub occupancy: f64,
 }
 
 impl SweepRecord {
-    /// Extract the report-layer metrics from a finished evaluation.
-    pub fn from_result(job: Job, r: &crate::coordinator::ModelResult) -> SweepRecord {
+    /// Extract the report-layer metrics from a finished evaluation plus
+    /// its serving run.
+    pub fn from_result(
+        job: Job,
+        r: &crate::coordinator::ModelResult,
+        serve: &crate::serve::ServeReport,
+    ) -> SweepRecord {
         let energy = r.s2_energy();
         SweepRecord {
+            p50_latency: serve.latency.p50,
+            p95_latency: serve.latency.p95,
+            p99_latency: serve.latency.p99,
+            throughput: serve.throughput(),
+            occupancy: serve.occupancy(),
             speedup: r.speedup(),
             s2_wall: r.total_s2_wall(),
             naive_wall: r.total_naive_wall(),
@@ -76,6 +101,15 @@ impl SweepRecord {
             e_dram: energy.dram_pj,
             job,
         }
+    }
+
+    /// Does this record carry measured serving metrics? Lines recovered
+    /// from stores written before the serving axes existed parse those
+    /// fields as zeros; a real serving run always has positive
+    /// throughput (>= 1 request over a positive makespan). Renderers
+    /// must not present the zeros as measurements.
+    pub fn has_serving_metrics(&self) -> bool {
+        self.throughput > 0.0
     }
 
     /// Reassemble the stored on-chip breakdown (Fig. 15 renders from
@@ -110,6 +144,11 @@ impl SweepRecord {
         num("e_ce", self.e_ce);
         num("e_other", self.e_other);
         num("e_dram", self.e_dram);
+        num("p50", self.p50_latency);
+        num("p95", self.p95_latency);
+        num("p99", self.p99_latency);
+        num("throughput", self.throughput);
+        num("occupancy", self.occupancy);
         let mut o = BTreeMap::new();
         o.insert("key".into(), Json::Str(self.job.key_hex()));
         o.insert("job".into(), self.job.to_json());
@@ -137,6 +176,13 @@ impl SweepRecord {
             e_ce: m.f64_field("e_ce")?,
             e_other: m.f64_field("e_other")?,
             e_dram: m.f64_field("e_dram")?,
+            // serving metrics are absent from pre-serving stores; such
+            // lines stay resumable and parse to zeros
+            p50_latency: opt(m, "p50"),
+            p95_latency: opt(m, "p95"),
+            p99_latency: opt(m, "p99"),
+            throughput: opt(m, "throughput"),
+            occupancy: opt(m, "occupancy"),
             job,
         })
     }
@@ -287,6 +333,11 @@ mod tests {
             e_ce: 1.0e8,
             e_other: 0.5e8,
             e_dram: 7.0e9,
+            p50_latency: 1.3e-3,
+            p95_latency: 2.6e-3,
+            p99_latency: 2.9000000000000001e-3,
+            throughput: 812.5,
+            occupancy: 0.87,
         }
     }
 
@@ -295,6 +346,31 @@ mod tests {
         let r = record(1, 3.604999999999999);
         let back = SweepRecord::from_json_line(&r.to_json_line()).unwrap();
         assert_eq!(r, back, "all f64 metrics must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn legacy_line_without_serving_metrics_still_parses() {
+        // a store written before the serving metrics existed: drop the
+        // new keys from a freshly rendered line and re-parse
+        let r = record(1, 2.0);
+        let line = r.to_json_line();
+        let legacy: String = {
+            let j = Json::parse(&line).unwrap();
+            let Json::Obj(mut o) = j else { unreachable!() };
+            let Some(Json::Obj(m)) = o.get_mut("metrics") else {
+                unreachable!()
+            };
+            for k in ["p50", "p95", "p99", "throughput", "occupancy"] {
+                m.remove(k);
+            }
+            Json::Obj(o).to_string()
+        };
+        let back = SweepRecord::from_json_line(&legacy).unwrap();
+        assert_eq!(back.job, r.job);
+        assert_eq!(back.speedup, r.speedup);
+        assert_eq!(back.p50_latency, 0.0);
+        assert_eq!(back.throughput, 0.0);
+        assert_eq!(back.occupancy, 0.0);
     }
 
     fn tmp(name: &str) -> PathBuf {

@@ -1,0 +1,147 @@
+//! Golden analytic tests for the baseline models.
+//!
+//! Every reported speedup / energy-efficiency ratio in this repo has a
+//! baseline in its denominator. These tests pin the baselines to
+//! *hand-computed closed forms* on small layers, so a silent regression
+//! in `baseline::{naive,scnn,sparten,gating}` cannot skew every headline
+//! number at once. Each expectation is derived in a comment — if one of
+//! these fails, either the model changed deliberately (update the
+//! arithmetic here) or a real regression slipped in.
+
+use s2engine::baseline::{gating, naive, scnn, sparten};
+use s2engine::config::ArrayConfig;
+use s2engine::models::LayerDesc;
+
+const EPS: f64 = 1e-12;
+
+#[test]
+fn naive_small_layer_closed_form() {
+    // 4x4x16 input, 1x1 kernel, 16 output channels -> 4 kernels... no:
+    // cout = 4. M = out_h*out_w = 4*4 = 16 convs, K = 1*1*16 = 16,
+    // N = cout = 4. On an 8x8 array:
+    //   row_tiles = ceil(16/8) = 2, col_tiles = ceil(4/8) = 1
+    //   per_tile  = K + (R-1) + (C-1) + R = 16 + 7 + 7 + 8 = 38
+    //   mac_cycles = 2 * 1 * 38 = 76
+    //   mac_ops    = M*K*N = 16*16*4 = 1024 (dense)
+    //   fb reads   = tiles * min(R, M) * K = 2 * 8 * 16 = 256
+    //   wb reads   = tiles * min(C, N) * K = 2 * 4 * 16 = 128
+    //   resident   = M*K + params = 256 + 64 = 320 B  (fits 2 MB)
+    //   dram       = input_elems + params = 256 + 64 = 320 B
+    let layer = LayerDesc::new("g", 4, 4, 16, 1, 1, 4, 1, 0);
+    let c = naive::layer_cost(&layer, &ArrayConfig::new(8, 8));
+    assert_eq!(c.mac_cycles, 76);
+    assert_eq!(c.mac_ops, 1024);
+    assert_eq!(c.fb_byte_reads, 256);
+    assert_eq!(c.wb_byte_reads, 128);
+    assert_eq!(c.sram_resident_bytes, 320);
+    assert_eq!(c.dram_bytes, 320);
+    // wall time at the 500 MHz MAC clock
+    assert!((c.wall_seconds() - 76.0 / 500e6).abs() < 1e-18);
+}
+
+#[test]
+fn naive_spilling_layer_closed_form() {
+    // 64x64x64 input, 3x3 kernel pad 1, 8 kernels on a 16x16 array:
+    //   M = 64*64 = 4096, K = 9*64 = 576, N = 8
+    //   row_tiles = 4096/16 = 256, col_tiles = ceil(8/16) = 1
+    //   per_tile  = 576 + 15 + 15 + 16 = 622 -> mac_cycles = 256*622
+    //   resident  = M*K + params = 2359296 + 4608 = 2363904 B > 2 MB
+    //   spill     = ceil(2363904 / 2097152) = 2 (<= kh*kw = 9)
+    //   dram      = input_elems * 2 + params = 262144*2 + 4608
+    let layer = LayerDesc::new("spill", 64, 64, 64, 3, 3, 8, 1, 1);
+    let c = naive::layer_cost(&layer, &ArrayConfig::new(16, 16));
+    assert_eq!(c.mac_cycles, 256 * 622);
+    assert_eq!(c.mac_ops, 4096 * 576 * 8);
+    assert_eq!(c.fb_byte_reads, 256 * 16 * 576);
+    assert_eq!(c.wb_byte_reads, 256 * 8 * 576);
+    assert_eq!(c.sram_resident_bytes, 2_363_904);
+    assert_eq!(c.dram_bytes, 262_144 * 2 + 4608);
+}
+
+#[test]
+fn scnn_closed_form_at_half_density() {
+    // dense_macs = 1e6 at (0.5, 0.5):
+    //   must  = 1e6 * 0.25 = 250000
+    //   frag(0.5): nz = 8, slots = ceil(8/4)*4 = 8 -> 1.0
+    //   util  = 0.79 * 1 * 1 = 0.79
+    //   cycles = ceil(250000 / (1024*0.79)) = ceil(309.038...) = 310
+    //   energy = 0.506 + (1.33-0.506)*0.25
+    let c = scnn::cost(1_000_000, 0.5, 0.5);
+    assert_eq!(c.mac_ops, 250_000);
+    assert_eq!(c.mac_cycles, 310);
+    assert!((c.energy_per_dense_mac - (0.506 + (1.33 - 0.506) * 0.25)).abs() < EPS);
+    // fragmentation at 0.1: nz = 1.6, slots = 4 -> 0.4 per operand
+    assert!((scnn::utilization(0.1, 0.1) - 0.79 * 0.4 * 0.4).abs() < EPS);
+    // dense point: util exactly the published 0.79 speed factor
+    assert!((scnn::utilization(1.0, 1.0) - 0.79).abs() < EPS);
+    assert!((scnn::cost(1_000_000, 1.0, 1.0).energy_per_dense_mac - 1.33).abs() < EPS);
+}
+
+#[test]
+fn sparten_closed_form_at_half_density() {
+    // must = 250000; cycles = ceil(250000 / (1024*0.92)) = ceil(265.37) = 266
+    // energy = 0.6*0.25*2.0 + 0.4*0.5/1.4
+    let c = sparten::cost(1_000_000, 0.5, 0.5);
+    assert_eq!(c.mac_ops, 250_000);
+    assert_eq!(c.mac_cycles, 266);
+    let expect = 0.6 * 0.25 * 2.0 + 0.4 * 0.5 * (1.0 / 1.4);
+    assert!((c.energy_per_dense_mac - expect).abs() < EPS);
+}
+
+#[test]
+fn gating_closed_forms_per_policy() {
+    // 1_024_000 dense MACs -> exactly 1000 dense cycles at 1024 muls
+    let m = 1_024_000u64;
+    let (df, dw) = (0.5, 0.25);
+
+    // dense ideal: energy = 1.0*0.65*1.0 + 0.35 = 1.0 (the unit)
+    let dense = gating::cost(m, df, dw, gating::Exploits::None);
+    assert_eq!(dense.mac_cycles, 1000);
+    assert!((dense.energy_per_dense_mac - 1.0).abs() < EPS);
+
+    // gate-feature: same cycles, energy = df*0.65*1.02 + 0.30
+    let gate = gating::cost(m, df, dw, gating::Exploits::GateFeature);
+    assert_eq!(gate.mac_cycles, 1000);
+    assert!((gate.energy_per_dense_mac - (0.5 * 0.65 * 1.02 + 0.30)).abs() < EPS);
+
+    // skip-feature: cycles scale by df, energy df*0.65*1.10 + 0.35*(df+1)/2
+    let skip_f = gating::cost(m, df, dw, gating::Exploits::SkipFeature);
+    assert_eq!(skip_f.mac_cycles, 500);
+    assert!(
+        (skip_f.energy_per_dense_mac - (0.5 * 0.65 * 1.10 + 0.35 * 0.75)).abs() < EPS
+    );
+
+    // skip-weight: the dual, with dw = 0.25
+    let skip_w = gating::cost(m, df, dw, gating::Exploits::SkipWeight);
+    assert_eq!(skip_w.mac_cycles, 250);
+    assert!(
+        (skip_w.energy_per_dense_mac - (0.25 * 0.65 * 1.12 + 0.35 * 0.625)).abs() < EPS
+    );
+
+    // skip-both: df*dw = 0.125 of the cycles
+    let both = gating::cost(m, df, dw, gating::Exploits::SkipBoth);
+    assert_eq!(both.mac_cycles, 125);
+    assert!(
+        (both.energy_per_dense_mac - (0.125 * 0.65 * 1.18 + 0.35 * 0.375)).abs() < EPS
+    );
+}
+
+#[test]
+fn model_costs_sum_their_layers() {
+    // whole-model closed forms reduce to per-layer sums (naive) and to
+    // the total-MAC closed form (scnn / sparten)
+    let m = s2engine::models::zoo::alexnet();
+    let cfg = ArrayConfig::new(16, 16);
+    let total = naive::model_cost(&m, &cfg);
+    let by_layer: u64 = m.layers.iter().map(|l| naive::layer_cost(l, &cfg).mac_cycles).sum();
+    assert_eq!(total.mac_cycles, by_layer);
+
+    let sc = scnn::model_cost(&m);
+    let direct = scnn::cost(m.total_macs(), m.feature_density, m.weight_density);
+    assert_eq!(sc, direct);
+    let sp = sparten::model_cost(&m);
+    assert_eq!(
+        sp,
+        sparten::cost(m.total_macs(), m.feature_density, m.weight_density)
+    );
+}

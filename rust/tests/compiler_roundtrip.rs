@@ -1,0 +1,174 @@
+//! Property tests for the compressed-stream codec: ECOO and the
+//! mixed-precision split format must be lossless across the whole
+//! density range, and compressed size must respond monotonically to
+//! density.
+//!
+//! The environment ships no proptest crate; the in-repo seeded RNG
+//! drives the same deterministic shrink-free case sweeps
+//! (`proptest_invariants.rs` has the simulator-side properties — this
+//! file owns the codec).
+
+use s2engine::compiler::ecoo::{EcooFlow, Token};
+use s2engine::compiler::precision::{decode_mixed, encode_mixed};
+use s2engine::util::rng::Rng;
+use s2engine::GROUP_LEN;
+
+const CASES: u64 = 60;
+
+/// Dense data at an exact non-zero count: the first `nnz` positions of a
+/// seeded permutation carry non-zeros. Nested supports (same seed,
+/// growing nnz) make size monotonicity deterministic, not statistical.
+fn dense_with_support(groups: usize, nnz: usize, seed: u64) -> Vec<i8> {
+    let n = groups * GROUP_LEN;
+    assert!(nnz <= n);
+    let mut positions: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut positions);
+    let mut data = vec![0i8; n];
+    for &p in &positions[..nnz] {
+        let mag = rng.gen_range_u64(1, 127) as i8;
+        data[p] = if rng.gen_bool() { mag } else { -mag };
+    }
+    data
+}
+
+#[test]
+fn roundtrip_lossless_across_full_density_range() {
+    // densities swept exactly from 0.0 to 1.0 inclusive, several shapes
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x8077);
+        let groups = rng.gen_range_u64(1, 24) as usize;
+        let n = groups * GROUP_LEN;
+        for step in 0..=10 {
+            let nnz = n * step / 10; // 0%, 10%, ..., 100%
+            let data = dense_with_support(groups, nnz, case * 101 + step as u64);
+            let flow = EcooFlow::encode(&data);
+            assert_eq!(flow.decode(), data, "case {case} step {step}");
+            assert_eq!(flow.nnz(), nnz);
+            assert_eq!(flow.n_groups, groups);
+            // exactly one EOG per group, always
+            assert_eq!(
+                flow.tokens.iter().filter(|t| t.eog()).count(),
+                groups,
+                "case {case} step {step}"
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_and_full_tile_edge_cases() {
+    // empty flow: zero groups encode to zero tokens and decode to nothing
+    let empty = EcooFlow::encode(&[]);
+    assert_eq!(empty.n_groups, 0);
+    assert!(empty.is_empty());
+    assert_eq!(empty.decode(), Vec::<i8>::new());
+    assert_eq!(empty.nnz(), 0);
+
+    // all-zero tile: one placeholder per group
+    let zeros = vec![0i8; 5 * GROUP_LEN];
+    let zflow = EcooFlow::encode(&zeros);
+    assert_eq!(zflow.tokens.len(), 5);
+    assert!(zflow.tokens.iter().all(|t| t.is_placeholder() && t.eog()));
+    assert_eq!(zflow.decode(), zeros);
+
+    // full tile incl. the extremes of the i8 range
+    let mut full: Vec<i8> = (0..3 * GROUP_LEN as i32)
+        .map(|i| (i - 126) as i8) // -126..=-79: dense, no zeros
+        .collect();
+    full[0] = i8::MIN;
+    full[1] = i8::MAX;
+    let fflow = EcooFlow::encode(&full);
+    assert_eq!(fflow.nnz(), full.len());
+    assert_eq!(fflow.tokens.len(), full.len());
+    assert_eq!(fflow.decode(), full);
+
+    // mixed-precision: empty and full-outlier groups
+    let e16 = encode_mixed(&[]);
+    assert_eq!(decode_mixed(&e16), Vec::<i16>::new());
+    let outliers: Vec<i16> = (0..2 * GROUP_LEN as i32)
+        .map(|i| if i % 2 == 0 { 128 + i as i16 * 7 } else { -(200 + i as i16) })
+        .collect();
+    let oflow = encode_mixed(&outliers);
+    assert_eq!(
+        oflow.tokens.len(),
+        2 * outliers.len(),
+        "every 16-bit value splits into a lo/hi token pair"
+    );
+    assert_eq!(decode_mixed(&oflow), outliers);
+}
+
+#[test]
+fn mixed_precision_roundtrip_across_split_ratios() {
+    // 16-bit promotion fraction swept 0.0..=1.0; round-trip must hold at
+    // every split ratio and the token count must follow nnz8 + 2*nnz16
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case ^ 0x16bb);
+        let groups = 1 + (case as usize % 8);
+        let n = groups * GROUP_LEN;
+        for step in 0..=4 {
+            let ratio16 = step as f64 / 4.0;
+            let mut n8 = 0usize;
+            let mut n16 = 0usize;
+            let data: Vec<i16> = (0..n)
+                .map(|_| {
+                    if rng.gen_f64() < 0.45 {
+                        if rng.gen_f64() < ratio16 {
+                            n16 += 1;
+                            let mag = rng.gen_range_u64(128, 32000) as i16;
+                            if rng.gen_bool() { mag } else { -mag }
+                        } else {
+                            n8 += 1;
+                            let mag = rng.gen_range_u64(1, 127) as i16;
+                            if rng.gen_bool() { mag } else { -mag }
+                        }
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let flow = encode_mixed(&data);
+            assert_eq!(decode_mixed(&flow), data, "case {case} ratio {ratio16}");
+            let empty_groups = data
+                .chunks(GROUP_LEN)
+                .filter(|g| g.iter().all(|&v| v == 0))
+                .count();
+            assert_eq!(
+                flow.tokens.len(),
+                n8 + 2 * n16 + empty_groups,
+                "case {case} ratio {ratio16}"
+            );
+        }
+    }
+}
+
+#[test]
+fn compressed_size_monotone_in_density() {
+    // nested supports: adding non-zeros never shrinks the token stream,
+    // and strictly grows it once past one-per-group
+    for case in 0..CASES / 3 {
+        let groups = 2 + (case as usize % 10);
+        let n = groups * GROUP_LEN;
+        let seed = case ^ 0x3053;
+        let mut prev_tokens = 0usize;
+        let mut prev_bits = 0u64;
+        for step in 0..=16 {
+            let nnz = n * step / 16;
+            let data = dense_with_support(groups, nnz, seed);
+            let flow = EcooFlow::encode(&data);
+            if step > 0 {
+                assert!(
+                    flow.tokens.len() >= prev_tokens,
+                    "case {case} step {step}: {} < {prev_tokens}",
+                    flow.tokens.len()
+                );
+                assert!(flow.storage_bits(false) >= prev_bits);
+            }
+            prev_tokens = flow.tokens.len();
+            prev_bits = flow.storage_bits(false);
+        }
+        // the dense end is exactly one token per element
+        assert_eq!(prev_tokens, n);
+        assert_eq!(prev_bits, n as u64 * u64::from(Token::FEATURE_BITS));
+    }
+}

@@ -1,0 +1,208 @@
+//! Serving-path equivalence and schedule-bound invariants.
+//!
+//! The pipelined serving simulator is only trustworthy because of two
+//! properties this suite enforces:
+//!
+//! 1. **Degenerate equivalence** — with `batch = 1`, `overlap = 0` and a
+//!    single request, `Coordinator::simulate_model_pipelined` is
+//!    field-for-field identical to `Coordinator::simulate_model`: same
+//!    per-layer `TileStats`, same naive costs, bit-equal walls and
+//!    energies, and a makespan equal to the serial wall sum.
+//! 2. **Schedule bounds** — for *every* tested configuration the
+//!    pipelined makespan lies between the dependency critical path
+//!    (`max_i(arrival_i + chain)`) and the serial reference under the
+//!    same batch-forming policy (one execution at a time, no overlap).
+//!
+//! Plus: overlap monotonicity, throughput/makespan consistency, and the
+//! acceptance-path check that a `batch`-axis sweep grid runs end to end
+//! under a resumable store.
+
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::ServeConfig;
+use s2engine::sweep::{Grid, Runner, Store};
+
+fn coord(samples: usize, seed: u64) -> Coordinator {
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(samples)
+        .with_seed(seed);
+    Coordinator::new(cfg)
+}
+
+#[test]
+fn degenerate_pipelined_run_equals_simulate_model() {
+    for model in [zoo::s2net(), zoo::alexnet()] {
+        let c = coord(2, 0xc0de_cafe_0030);
+        let serial = c.simulate_model(&model, 0);
+        let piped = c.simulate_model_pipelined(
+            &model,
+            FeatureSubset::Average,
+            &ServeConfig::default(),
+        );
+
+        assert_eq!(serial.layers.len(), piped.layers.len());
+        for (a, b) in serial.layers.iter().zip(&piped.layers) {
+            assert_eq!(a.layer, b.layer);
+            assert_eq!(a.s2, b.s2, "TileStats must be bit-identical");
+            assert_eq!(a.naive, b.naive);
+            assert_eq!(a.feature_density.to_bits(), b.feature_density.to_bits());
+            assert_eq!(a.weight_density.to_bits(), b.weight_density.to_bits());
+            assert_eq!(a.tiles_sampled, b.tiles_sampled);
+            assert_eq!(a.tiles_total, b.tiles_total);
+            assert_eq!(a.ds_ratio, b.ds_ratio);
+            assert_eq!(a.ce_enabled, b.ce_enabled);
+            assert_eq!(a.s2_dram_bytes, b.s2_dram_bytes);
+            assert_eq!(a.s2_wall().to_bits(), b.s2_wall().to_bits());
+            assert_eq!(a.s2_energy(), b.s2_energy());
+            assert_eq!(a.naive_energy(), b.naive_energy());
+        }
+        // makespan is the serial per-layer wall sum, bit-exactly
+        assert_eq!(
+            piped.makespan().to_bits(),
+            serial.total_s2_wall().to_bits(),
+            "batch=1/overlap=0 makespan must equal the serial wall sum"
+        );
+        // and so are the aggregate energies
+        assert_eq!(piped.per_image_energy(), serial.s2_energy());
+        // a single request's latency *is* the makespan
+        assert_eq!(piped.latency.p50.to_bits(), piped.makespan().to_bits());
+        assert_eq!(piped.latency.p99.to_bits(), piped.makespan().to_bits());
+        assert!((piped.occupancy() - 1.0).abs() < 1e-12);
+        assert!((piped.pipeline_speedup() - 1.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn makespan_bounded_by_critical_path_and_serial_sum() {
+    let c = coord(1, 0xc0de_cafe_0031);
+    let model = zoo::s2net();
+    let chain_wall: f64 = c
+        .simulate_model(&model, 0)
+        .layers
+        .iter()
+        .map(|l| l.s2_wall())
+        .sum();
+    for &batch in &[1usize, 2, 4, 7] {
+        for &overlap in &[0.0, 0.3, 0.6, 0.9] {
+            for &requests in &[1usize, 5, 8] {
+                for &rate in &[0.0, 2.0 / chain_wall, 100.0 / chain_wall] {
+                    let serve = ServeConfig::new(batch, overlap)
+                        .with_requests(requests)
+                        .with_rate(rate)
+                        .with_seed(batch as u64 ^ requests as u64);
+                    let r = c.simulate_model_pipelined(
+                        &model,
+                        FeatureSubset::Average,
+                        &serve,
+                    );
+                    let lower = r.critical_path_bound();
+                    let upper = r.serial_makespan();
+                    let m = r.makespan();
+                    let eps = upper.abs() * 1e-12 + 1e-15;
+                    assert!(
+                        m >= lower - eps,
+                        "batch {batch} ov {overlap} req {requests} rate {rate}: \
+                         makespan {m} beats the critical path {lower}"
+                    );
+                    assert!(
+                        m <= upper + eps,
+                        "batch {batch} ov {overlap} req {requests} rate {rate}: \
+                         makespan {m} worse than serial {upper}"
+                    );
+                    // bookkeeping identities
+                    assert!((r.throughput() * m - requests as f64).abs() < 1e-9);
+                    assert!(r.occupancy() > 0.0 && r.occupancy() <= 1.0 + 1e-12);
+                    assert!(r.latency.n == requests);
+                    assert!(r.latency.min >= 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn more_overlap_never_slows_the_pipeline() {
+    let c = coord(1, 0xc0de_cafe_0032);
+    let model = zoo::s2net();
+    for &batch in &[1usize, 4] {
+        let mut prev = f64::MAX;
+        for &overlap in &[0.0, 0.2, 0.4, 0.6, 0.8] {
+            let serve = ServeConfig::new(batch, overlap).with_requests(8);
+            let r = c.simulate_model_pipelined(&model, FeatureSubset::Average, &serve);
+            let m = r.makespan();
+            assert!(
+                m <= prev + prev.min(1.0) * 1e-12,
+                "batch {batch}: overlap {overlap} slowed the run ({m} > {prev})"
+            );
+            prev = m;
+        }
+    }
+}
+
+#[test]
+fn batching_raises_throughput_with_overlap() {
+    // with overlap enabled, an 8-deep batch must serve strictly more
+    // images/s than one-at-a-time serving of the same request stream
+    let c = coord(1, 0xc0de_cafe_0033);
+    let model = zoo::alexnet();
+    let mk = |batch: usize, overlap: f64| {
+        let serve = ServeConfig::new(batch, overlap).with_requests(16);
+        c.simulate_model_pipelined(&model, FeatureSubset::Average, &serve)
+    };
+    let serial = mk(1, 0.0);
+    let piped = mk(8, 0.6);
+    assert!(
+        piped.throughput() > serial.throughput(),
+        "{} vs {}",
+        piped.throughput(),
+        serial.throughput()
+    );
+    assert!(piped.pipeline_speedup() > 1.0);
+}
+
+#[test]
+fn batch_axis_sweep_runs_end_to_end_with_resume() {
+    // the acceptance path: a serving sweep grid over the batch/overlap
+    // axes, streamed to a store, killed (torn tail), resumed — with
+    // bit-identical records and no re-execution of recovered points
+    let spec = "models=s2net;scales=8;effort=quick;batch=1,2,4;overlap=0,0.5;\
+                seed=3232382084";
+    let grid = Grid::from_spec(spec).unwrap();
+    let plan = grid.plan();
+    assert_eq!(plan.len(), 6);
+
+    let path = std::env::temp_dir().join(format!(
+        "s2serve-sweep-{}.jsonl",
+        std::process::id()
+    ));
+    let mut store = Store::open(&path, false).unwrap();
+    let reference = Runner::new().run(&plan, &mut store);
+    assert_eq!(reference.ran, 6);
+    drop(store);
+
+    // serving metrics present and consistent across the batch axis
+    for rec in reference.records() {
+        assert!(rec.p99_latency >= rec.p50_latency);
+        assert!(rec.throughput > 0.0);
+    }
+
+    // tear the store after 3 complete lines and resume
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 6);
+    let mut partial = lines[..3].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[3][..lines[3].len() / 2]);
+    std::fs::write(&path, &partial).unwrap();
+
+    let mut resumed_store = Store::open(&path, true).unwrap();
+    assert_eq!(resumed_store.recovered, 3);
+    assert_eq!(resumed_store.dropped, 1);
+    let resumed = Runner::new().run(&plan, &mut resumed_store);
+    assert_eq!(resumed.reused, 3);
+    assert_eq!(resumed.ran, 3);
+    assert_eq!(reference.records(), resumed.records());
+    drop(resumed_store);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""Line-for-line Python transcription of rust/src/serve/pipeline.rs
+(`PipelineSchedule::build`, `serial_makespan`) and the chain case of
+rust/src/serve/dag.rs (`critical_path`), fuzzed against the schedule
+invariants `rust/tests/serve_equivalence.rs` enforces in CI:
+
+  * critical path  max_i(arrival_i + chain) <= makespan;
+  * makespan <= serial reference under the same batch-forming policy;
+  * overlap = 0 equals that reference exactly (single resource:
+    batching alone only reorders, the gain comes from overlap);
+  * batch=1 / overlap=0 / one request == bit-exact serial wall sum;
+  * finishes strictly increase; busy union bounded; latency floor is
+    the dependency chain; makespan monotone non-increasing in overlap;
+  * general-DAG dependency respect (diamond topology).
+
+Run `python3 scripts/fuzz_serve_pipeline.py`; exits nonzero with the
+offending configuration on any violation. Keep this file in sync with
+rust/src/serve/pipeline.rs when touching scheduler semantics (see
+.claude/skills/verify/SKILL.md).
+"""
+
+import random
+
+MAX_OVERLAP = 0.95
+
+
+def topo_chain(n):
+    return list(range(n)), [([] if i == 0 else [i - 1]) for i in range(n)]
+
+
+def build(n_nodes, deps, topo, durations, arrivals, batch, overlap, sinks):
+    """Transcription of PipelineSchedule::build."""
+    overlap = min(max(overlap, 0.0), MAX_OVERLAP)
+    batch = max(batch, 1)
+    n_img = len(arrivals)
+    finish = [0.0] * (n_img * n_nodes)
+    jobs = []
+    finish_times = [0.0] * n_img
+    array_free = 0.0
+    prev_dur = 0.0
+    any_prev = False
+    busy = 0.0
+    makespan = 0.0
+    window = 0
+    while window * batch < n_img:
+        lo = window * batch
+        hi = min(lo + batch, n_img)
+        window_ready = 0.0
+        for a in arrivals[lo:hi]:
+            window_ready = max(window_ready, a)
+        for node in topo:
+            d = durations[node]
+            for img in range(lo, hi):
+                ready = window_ready
+                for p in deps[node]:
+                    ready = max(ready, finish[img * n_nodes + p])
+                if any_prev:
+                    start = max(ready, array_free - overlap * min(prev_dur, d))
+                else:
+                    start = ready
+                end = start + d
+                busy += end - (max(start, array_free) if any_prev else start)
+                finish[img * n_nodes + node] = end
+                jobs.append((img, node, start, end))
+                array_free = end
+                prev_dur = d
+                any_prev = True
+                makespan = max(makespan, end)
+        for img in range(lo, hi):
+            done = window_ready
+            for s in sinks:
+                done = max(done, finish[img * n_nodes + s])
+            finish_times[img] = done
+        window += 1
+    return jobs, finish_times, makespan, busy
+
+
+def critical_path_chain(durations):
+    """dag.critical_path on a chain (same left-fold association)."""
+    best = 0.0
+    longest = 0.0
+    for d in durations:
+        longest = longest + d
+        best = max(best, longest)
+    return best
+
+
+def serial_makespan(durations, arrivals, batch):
+    """Transcription of pipeline::serial_makespan (total work per
+    image — equals the critical path on chains, exceeds it on DAGs)."""
+    work = 0.0
+    for d in durations:
+        work = work + d
+    batch = max(batch, 1)
+    n = len(arrivals)
+    t = 0.0
+    w = 0
+    while w * batch < n:
+        lo = w * batch
+        hi = min(lo + batch, n)
+        ready = 0.0
+        for a in arrivals[lo:hi]:
+            ready = max(ready, a)
+        t = max(t, ready) + (hi - lo) * work
+        w += 1
+    return t
+
+
+def random_arrivals(rng, r):
+    if rng.random() < 0.3:
+        return [0.0] * r
+    t = 0.0
+    out = [0.0]
+    for _ in range(r - 1):
+        t += rng.uniform(0, 2e-2)
+        out.append(t)
+    return out
+
+
+def main():
+    rng = random.Random(98765)
+    cases = 0
+    for trial in range(30000):
+        length = rng.randint(1, 12)
+        durations = [rng.uniform(1e-6, 1e-2) for _ in range(length)]
+        topo, deps = topo_chain(length)
+        sinks = [length - 1]
+        arrivals = random_arrivals(rng, rng.randint(1, 24))
+        batch = rng.randint(1, 9)
+        overlap = rng.choice([0.0, 0.2, 0.5, 0.9, 0.95, 1.2])
+        jobs, ft, makespan, busy = build(
+            length, deps, topo, durations, arrivals, batch, overlap, sinks
+        )
+        chain = critical_path_chain(durations)
+        lower = max(a + chain for a in arrivals)
+        upper = serial_makespan(durations, arrivals, batch)
+        eps = abs(upper) * 1e-12 + 1e-15
+        ctx = (trial, length, batch, overlap, len(arrivals))
+        assert makespan >= lower - eps, (ctx, makespan, lower)
+        assert makespan <= upper + eps, (ctx, makespan, upper)
+        for a, b in zip(jobs, jobs[1:]):
+            assert b[3] > a[3], (ctx, a, b)
+        assert busy <= makespan + 1e-12, ctx
+        assert busy <= sum(durations) * len(arrivals) + 1e-9, ctx
+        for f, a in zip(ft, arrivals):
+            assert f - a >= chain - 1e-12, (ctx, f, a, chain)
+        if overlap == 0.0:
+            assert abs(makespan - upper) < eps, (ctx, makespan, upper)
+        if batch == 1 and overlap == 0.0 and len(arrivals) == 1:
+            s = 0.0
+            for d in durations:
+                s = s + d
+            assert makespan == s, (ctx, makespan, s)
+        cases += 1
+
+    # overlap monotonicity
+    rng = random.Random(424242)
+    for trial in range(5000):
+        length = rng.randint(1, 8)
+        durations = [rng.uniform(1e-6, 1e-2) for _ in range(length)]
+        topo, deps = topo_chain(length)
+        arrivals = random_arrivals(rng, rng.randint(1, 12))
+        batch = rng.randint(1, 6)
+        prev = float("inf")
+        for ov in [0.0, 0.2, 0.4, 0.6, 0.8, 0.95]:
+            _, _, m, _ = build(
+                length, deps, topo, durations, arrivals, batch, ov, [length - 1]
+            )
+            assert m <= prev + 1e-12, (trial, ov, m, prev)
+            prev = m
+        cases += 1
+
+    # diamond DAG: 0 -> {1, 2} -> 3 (general-DAG dependency respect)
+    rng = random.Random(777)
+    deps = [[], [0], [0], [1, 2]]
+    topo = [0, 1, 2, 3]
+    for trial in range(3000):
+        durations = [rng.uniform(1e-4, 1e-2) for _ in range(4)]
+        arrivals = sorted(rng.uniform(0, 5e-2) for _ in range(rng.randint(1, 10)))
+        arrivals[0] = 0.0
+        batch = rng.randint(1, 4)
+        overlap = rng.choice([0.0, 0.5, 0.95])
+        jobs, ft, makespan, busy = build(
+            4, deps, topo, durations, arrivals, batch, overlap, [3]
+        )
+        cp = durations[0] + max(durations[1], durations[2]) + durations[3]
+        lower = max(a + cp for a in arrivals)
+        upper = serial_makespan(durations, arrivals, batch)
+        assert makespan >= lower - 1e-12, (trial, makespan, lower)
+        assert makespan <= upper + abs(upper) * 1e-12 + 1e-15, (trial, makespan, upper)
+        if overlap == 0.0:
+            # total-work serial reference: exact on DAGs too
+            assert abs(makespan - upper) < abs(upper) * 1e-12 + 1e-15
+        fin = {}
+        for img, node, s, e in jobs:
+            for p in deps[node]:
+                assert s >= fin[(img, p)] - 1e-15, (trial, img, node, s)
+            fin[(img, node)] = e
+        cases += 1
+
+    print(f"all {cases} serve-pipeline fuzz cases satisfy the schedule invariants")
+
+
+if __name__ == "__main__":
+    main()

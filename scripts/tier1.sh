@@ -1,14 +1,29 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate: release build, full test suite (unit +
-# integration + doc tests), a compile-check of every bench target (they
-# are plain binaries with harness = false, so --no-run is the build-only
-# mode), and a warning-free rustdoc build (EXPERIMENTS.md §Docs).
+# integration + doc tests) under BOTH default parallelism and a single
+# test thread. The serial pass pins test-ORDER determinism: tests share
+# process-wide state (the tile memo cache), so the suite must pass under
+# any interleaving — a test that only passes when a neighbour warmed or
+# missed the cache fails one of the two runs. (Simulator WORKER-count
+# invariance is enforced inside the suite itself:
+# sweep::runner::tests::serial_and_sharded_results_identical and the
+# memo on/off equivalence tests.) Then: a compile-check of every bench
+# target (plain binaries with harness = false, so --no-run is the
+# build-only mode), a warning-free rustdoc build, and — when the clippy
+# component is installed — a warning-free clippy pass over every target
+# (EXPERIMENTS.md §Docs / §Tier-1).
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
+cargo test -q -- --test-threads=1
 cargo test --doc -q
 cargo bench --no-run
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "tier1: cargo clippy unavailable in this toolchain; lint pass skipped"
+fi
 echo "tier1 OK"
