@@ -1,0 +1,110 @@
+//! Bench: the scale-out cluster scheduler (EXPERIMENTS.md §Cluster).
+//!
+//! Two costs matter separately:
+//! * the *scheduler* — pure arithmetic placing a request workload on N
+//!   arrays; it must stay cheap enough to sweep over thousands of
+//!   cluster points (`cluster/...` rows);
+//! * the *end-to-end* cluster call — layer simulation (tile-memoized
+//!   after the first run) plus scheduling (`e2e/...` row).
+//!
+//! Alongside the timings it records the modeled scale-out trajectory
+//! for AlexNet — makespan and scale-out efficiency per strategy at
+//! N = 4, and the data-parallel efficiency at N = 8 — so
+//! `BENCH_cluster.json` tracks the *model's* scaling behaviour across
+//! PRs, not just the simulator's speed. `BENCH_QUICK=1` (or the
+//! `util::bench` quick mode) shrinks everything for CI smoke runs.
+
+use s2engine::cluster::{
+    build_cluster, feature_link_bytes, ClusterConfig, ShardStrategy,
+};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::{Arrivals, LayerDag, ServeConfig};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = s2engine::util::bench::is_quick();
+    let samples = if quick { 1 } else { 4 };
+    let requests = if quick { 64 } else { 256 };
+    let mut b = Bench::new();
+
+    // --- scheduler-only: alexnet-shaped chain across strategies / N ---
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(16, 16)).with_samples(samples);
+    let coord = Coordinator::new(cfg);
+    let layers = coord.layer_results_subset(&model, FeatureSubset::Average);
+    let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+    let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
+    let out_bytes = feature_link_bytes(&layers);
+    let dag = LayerDag::chain(durations.len());
+    let arrivals = Arrivals::open_loop(requests, 0.0, 7);
+    for strategy in ShardStrategy::ALL {
+        for &n in &[4usize, 16] {
+            b.bench(
+                &format!("cluster/alexnet-{}-n{n}-r{requests}", strategy.tag()),
+                || {
+                    black_box(build_cluster(
+                        strategy,
+                        &dag,
+                        &durations,
+                        &tiles,
+                        &out_bytes,
+                        &arrivals.times,
+                        8,
+                        0.6,
+                        n,
+                    ));
+                },
+            );
+        }
+    }
+
+    // --- end-to-end cluster call (layer sims memo-warm after 1st) ---
+    let serve = ServeConfig::new(8, 0.6).with_requests(requests);
+    let cluster = ClusterConfig::new(4, ShardStrategy::DataParallel);
+    b.bench("e2e/alexnet-data-n4", || {
+        black_box(coord.simulate_model_cluster(
+            &model,
+            FeatureSubset::Average,
+            &serve,
+            &cluster,
+        ));
+    });
+
+    // --- modeled scale-out metrics (the ROADMAP trajectory) ---
+    for strategy in ShardStrategy::ALL {
+        let r = coord.simulate_model_cluster(
+            &model,
+            FeatureSubset::Average,
+            &serve,
+            &ClusterConfig::new(4, strategy),
+        );
+        b.metric(
+            &format!("model/makespan-{}-n4", strategy.tag()),
+            r.makespan() * 1e3,
+            "ms",
+        );
+        b.metric(
+            &format!("model/scaleout-eff-{}-n4", strategy.tag()),
+            r.scaleout_efficiency(),
+            "frac",
+        );
+        b.metric(
+            &format!("model/link-traffic-{}-n4", strategy.tag()),
+            r.link_bytes() / 1e6,
+            "MB",
+        );
+    }
+    let wide = coord.simulate_model_cluster(
+        &model,
+        FeatureSubset::Average,
+        &serve,
+        &ClusterConfig::new(8, ShardStrategy::DataParallel),
+    );
+    b.metric("model/scaleout-eff-data-n8", wide.scaleout_efficiency(), "frac");
+
+    if let Err(e) = b.write_json("BENCH_cluster.json") {
+        eprintln!("failed to write BENCH_cluster.json: {e}");
+    }
+}

@@ -1,0 +1,343 @@
+//! Scale-out cluster serving: one request workload scheduled across
+//! **N** S²Engine arrays under a pluggable sharding strategy.
+//!
+//! The paper evaluates a single array; the ROADMAP's production target
+//! is a fleet of them. This subsystem is the layer above
+//! [`crate::serve`]: the same per-layer simulated walls
+//! ([`crate::coordinator::LayerResult`]) and the same batched request
+//! workload, but placed on `N` arrays connected by an explicit
+//! inter-array link (bandwidth + energy from
+//! [`crate::energy::constants`]). Three cuts of the work are modeled
+//! ([`ShardStrategy`]): whole-request replication (`DataParallel`),
+//! contiguous layer stages (`LayerPipeline`), and per-layer
+//! output-channel tile sharding with an all-gather (`TensorShard`) —
+//! the same axes SCNN's PE tiling and Sense's co-designed partitioning
+//! explore in the literature.
+//!
+//! Everything stays pure deterministic arithmetic on top of the tile
+//! simulations, which keeps the load-bearing invariants checkable
+//! (`rust/tests/cluster_equivalence.rs`, `scripts/fuzz_cluster.py`):
+//!
+//! * `arrays = 1` reproduces [`crate::serve::ServeReport`]'s schedule
+//!   **bit-identically** for every strategy;
+//! * DataParallel makespan is monotone non-increasing in `N` under
+//!   closed-loop load;
+//! * every strategy's makespan is floored by its dependency critical
+//!   path plus mandatory link time ([`ClusterSchedule::lower_bound`]).
+//!
+//! Entry points: [`crate::coordinator::Coordinator::simulate_model_cluster`],
+//! the `s2engine cluster` CLI subcommand, the `arrays`/`shard` sweep
+//! axes, and `report cluster`.
+
+pub mod schedule;
+pub mod shard;
+
+pub use schedule::{build_cluster, ClusterSchedule, LaneStats};
+pub use shard::{balanced_stages, feature_link_bytes, ShardStrategy};
+
+use crate::coordinator::LayerResult;
+use crate::serve::{Arrivals, LatencyStats, LayerDag, PipelineSchedule, ServeConfig};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Cluster-run parameters: how many arrays and how the work is cut.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Number of S²Engine arrays (>= 1).
+    pub arrays: usize,
+    /// How the serving workload is sharded across them.
+    pub shard: ShardStrategy,
+}
+
+impl ClusterConfig {
+    pub fn new(arrays: usize, shard: ShardStrategy) -> ClusterConfig {
+        ClusterConfig {
+            arrays: arrays.max(1),
+            shard,
+        }
+    }
+
+    /// A single array under any strategy is the plain serving pipeline.
+    pub fn is_single(&self) -> bool {
+        self.arrays <= 1
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig::new(1, ShardStrategy::DataParallel)
+    }
+}
+
+/// Outcome of one cluster serving run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub model: String,
+    pub cluster: ClusterConfig,
+    pub serve: ServeConfig,
+    /// The per-layer simulation every array shares (bit-identical to the
+    /// per-layer path's results).
+    pub layers: Vec<LayerResult>,
+    /// The request timeline the run was driven by.
+    pub arrivals: Arrivals,
+    /// The placed cluster schedule (per-array lanes, link traffic).
+    pub schedule: ClusterSchedule,
+    /// Per-request latency distribution (arrival -> completion).
+    pub latency: LatencyStats,
+    /// Makespan of the identical workload on ONE array (the scale-out
+    /// efficiency denominator), computed with the same scheduler.
+    pub single_makespan: f64,
+}
+
+impl ClusterReport {
+    /// Schedule `serve.requests` images of the network described by
+    /// `layers` across `cluster.arrays` arrays and summarize.
+    pub fn assemble(
+        model: impl Into<String>,
+        cluster: ClusterConfig,
+        serve: ServeConfig,
+        layers: Vec<LayerResult>,
+    ) -> ClusterReport {
+        let dag = LayerDag::chain(layers.len());
+        let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+        let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
+        let out_bytes = feature_link_bytes(&layers);
+        let arrivals = Arrivals::open_loop(serve.requests.max(1), serve.rate, serve.seed);
+        let schedule = build_cluster(
+            cluster.shard,
+            &dag,
+            &durations,
+            &tiles,
+            &out_bytes,
+            &arrivals.times,
+            serve.batch,
+            serve.overlap,
+            cluster.arrays,
+        );
+        let single = PipelineSchedule::build(
+            &dag,
+            &durations,
+            &arrivals.times,
+            serve.batch,
+            serve.overlap,
+        );
+        let latency = LatencyStats::from_latencies(
+            &schedule
+                .finish_times
+                .iter()
+                .zip(&arrivals.times)
+                .map(|(f, a)| f - a)
+                .collect::<Vec<f64>>(),
+        );
+        ClusterReport {
+            model: model.into(),
+            cluster,
+            serve,
+            layers,
+            arrivals,
+            latency,
+            single_makespan: single.makespan,
+            schedule,
+        }
+    }
+
+    /// Wall-clock of the whole run at the modeled clock (seconds).
+    pub fn makespan(&self) -> f64 {
+        self.schedule.makespan
+    }
+
+    /// Completed images per modeled second across the cluster.
+    pub fn throughput(&self) -> f64 {
+        if self.schedule.makespan > 0.0 {
+            self.arrivals.len() as f64 / self.schedule.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-array occupancy: each lane's busy union over the cluster
+    /// makespan (idle arrays report 0).
+    pub fn per_array_occupancy(&self) -> Vec<f64> {
+        let m = self.schedule.makespan;
+        self.schedule
+            .lanes
+            .iter()
+            .map(|l| if m > 0.0 { l.busy / m } else { 0.0 })
+            .collect()
+    }
+
+    /// Mean occupancy across all arrays (idle lanes drag it down — a
+    /// poorly balanced cut shows up here).
+    pub fn mean_occupancy(&self) -> f64 {
+        let occ = self.per_array_occupancy();
+        if occ.is_empty() {
+            0.0
+        } else {
+            occ.iter().sum::<f64>() / occ.len() as f64
+        }
+    }
+
+    /// Scale-out efficiency: speedup over the single-array run of the
+    /// same workload, normalized by the array count —
+    /// `T₁ / (N × T_N)`. `1.0` is perfect linear scaling; a single
+    /// array scores exactly `1.0` by construction.
+    pub fn scaleout_efficiency(&self) -> f64 {
+        let m = self.schedule.makespan;
+        if m > 0.0 {
+            self.single_makespan / (self.cluster.arrays as f64 * m)
+        } else {
+            0.0
+        }
+    }
+
+    /// Total inter-array link traffic over the run (bytes).
+    pub fn link_bytes(&self) -> f64 {
+        self.schedule.link_bytes
+    }
+
+    /// Link energy over the run (pJ) at the modeled per-byte cost.
+    pub fn link_energy_pj(&self) -> f64 {
+        shard::link_pj(self.schedule.link_bytes)
+    }
+
+    /// The provable makespan floor for this run: dependency critical
+    /// path (under the strategy's effective durations) plus mandatory
+    /// serialized link time.
+    pub fn lower_bound(&self) -> f64 {
+        self.schedule.lower_bound
+    }
+
+    /// Structured JSON dump (`s2engine cluster --out`).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("arrays".into(), Json::Num(self.cluster.arrays as f64));
+        o.insert("shard".into(), Json::Str(self.cluster.shard.tag().into()));
+        o.insert("batch".into(), Json::Num(self.serve.batch as f64));
+        o.insert("overlap".into(), Json::Num(self.serve.overlap));
+        o.insert("requests".into(), Json::Num(self.arrivals.len() as f64));
+        o.insert("rate".into(), Json::Num(self.serve.rate));
+        o.insert("makespan_s".into(), Json::Num(self.makespan()));
+        o.insert("single_makespan_s".into(), Json::Num(self.single_makespan));
+        o.insert("throughput_img_s".into(), Json::Num(self.throughput()));
+        o.insert(
+            "scaleout_efficiency".into(),
+            Json::Num(self.scaleout_efficiency()),
+        );
+        o.insert("link_bytes".into(), Json::Num(self.link_bytes()));
+        o.insert("link_energy_pj".into(), Json::Num(self.link_energy_pj()));
+        o.insert(
+            "mandatory_transfer_s".into(),
+            Json::Num(self.schedule.mandatory_transfer),
+        );
+        o.insert("latency_p50_s".into(), Json::Num(self.latency.p50));
+        o.insert("latency_p99_s".into(), Json::Num(self.latency.p99));
+        o.insert(
+            "occupancy".into(),
+            Json::Arr(
+                self.per_array_occupancy()
+                    .into_iter()
+                    .map(Json::Num)
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArrayConfig, SimConfig};
+    use crate::coordinator::Coordinator;
+    use crate::models::zoo;
+
+    fn quick_layers() -> Vec<LayerResult> {
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+        Coordinator::new(cfg)
+            .layer_results_subset(&zoo::s2net(), crate::models::FeatureSubset::Average)
+    }
+
+    #[test]
+    fn single_array_scores_perfect_efficiency() {
+        let layers = quick_layers();
+        for shard in ShardStrategy::ALL {
+            let r = ClusterReport::assemble(
+                "s2net",
+                ClusterConfig::new(1, shard),
+                ServeConfig::new(2, 0.5).with_requests(6),
+                layers.clone(),
+            );
+            assert_eq!(r.makespan().to_bits(), r.single_makespan.to_bits());
+            assert!((r.scaleout_efficiency() - 1.0).abs() < 1e-12);
+            assert_eq!(r.link_bytes(), 0.0);
+            assert_eq!(r.per_array_occupancy().len(), 1);
+        }
+    }
+
+    #[test]
+    fn data_parallel_scales_throughput() {
+        let layers = quick_layers();
+        let serve = ServeConfig::new(2, 0.5).with_requests(16);
+        let one = ClusterReport::assemble(
+            "s2net",
+            ClusterConfig::new(1, ShardStrategy::DataParallel),
+            serve,
+            layers.clone(),
+        );
+        let four = ClusterReport::assemble(
+            "s2net",
+            ClusterConfig::new(4, ShardStrategy::DataParallel),
+            serve,
+            layers,
+        );
+        assert!(four.throughput() > one.throughput());
+        assert!(four.scaleout_efficiency() <= 1.0 + 1e-12);
+        assert!(
+            four.scaleout_efficiency() > 0.5,
+            "near-linear for closed loop"
+        );
+        assert_eq!(four.per_array_occupancy().len(), 4);
+    }
+
+    #[test]
+    fn report_json_carries_cluster_fields() {
+        let r = ClusterReport::assemble(
+            "s2net",
+            ClusterConfig::new(2, ShardStrategy::LayerPipeline),
+            ServeConfig::new(2, 0.3).with_requests(4),
+            quick_layers(),
+        );
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.str_field("shard").unwrap(), "pipeline");
+        assert_eq!(j.f64_field("arrays").unwrap(), 2.0);
+        assert!(j.f64_field("link_bytes").unwrap() > 0.0);
+        assert!(j.f64_field("scaleout_efficiency").unwrap() > 0.0);
+        assert_eq!(j.get("occupancy").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn makespan_floored_by_lower_bound_everywhere() {
+        let layers = quick_layers();
+        for shard in ShardStrategy::ALL {
+            for arrays in [1usize, 2, 3, 8] {
+                for batch in [1usize, 4] {
+                    let serve = ServeConfig::new(batch, 0.6).with_requests(8);
+                    let r = ClusterReport::assemble(
+                        "s2net",
+                        ClusterConfig::new(arrays, shard),
+                        serve,
+                        layers.clone(),
+                    );
+                    let eps = r.makespan().abs() * 1e-12 + 1e-15;
+                    assert!(
+                        r.makespan() >= r.lower_bound() - eps,
+                        "{shard:?} x{arrays} b{batch}: {} < {}",
+                        r.makespan(),
+                        r.lower_bound()
+                    );
+                }
+            }
+        }
+    }
+}

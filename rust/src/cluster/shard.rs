@@ -1,0 +1,198 @@
+//! Sharding strategies and the inter-array link model.
+//!
+//! A cluster run distributes a serving workload over `N` S²Engine
+//! arrays; *how* the work is cut is the [`ShardStrategy`]:
+//!
+//! * [`ShardStrategy::DataParallel`] — every array holds a full model
+//!   replica; whole requests are placed round-robin (least-loaded under
+//!   uniform work) across replicas. No inter-array traffic.
+//! * [`ShardStrategy::LayerPipeline`] — the layer DAG is cut into
+//!   contiguous stages (balanced over simulated layer walls,
+//!   [`balanced_stages`]); each array owns one stage and feature maps
+//!   cross the inter-array link at every stage boundary.
+//! * [`ShardStrategy::TensorShard`] — every layer's output-channel tile
+//!   grid is split across all arrays working in lockstep; each layer
+//!   ends with a ring all-gather of the sharded output.
+//!
+//! The link is modeled as a point-to-point lane of
+//! [`crate::energy::constants::LINK_BYTES_PER_S`] bytes/s costing
+//! [`crate::energy::constants::E_LINK_BYTE`] pJ/byte — between on-chip
+//! SRAM and DRAM in the energy hierarchy, which is what makes the
+//! strategy choice a real trade-off instead of a free lunch.
+
+use crate::coordinator::LayerResult;
+use crate::energy::constants::{E_LINK_BYTE, FEATURE_TOKEN_BYTES, LINK_BYTES_PER_S};
+
+/// How a cluster cuts the serving workload across its arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardStrategy {
+    /// Full model replica per array, whole requests round-robin.
+    #[default]
+    DataParallel,
+    /// Contiguous layer stages, one per array, linked in a pipeline.
+    LayerPipeline,
+    /// Output-channel tile grid of every layer split across all arrays.
+    TensorShard,
+}
+
+impl ShardStrategy {
+    /// Every strategy, in reporting order.
+    pub const ALL: [ShardStrategy; 3] = [
+        ShardStrategy::DataParallel,
+        ShardStrategy::LayerPipeline,
+        ShardStrategy::TensorShard,
+    ];
+
+    /// The canonical short tag — the sweep key, store form, CLI value
+    /// and display label all go through this one table (mirroring the
+    /// subset tag discipline in [`crate::sweep`]).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ShardStrategy::DataParallel => "data",
+            ShardStrategy::LayerPipeline => "pipeline",
+            ShardStrategy::TensorShard => "tensor",
+        }
+    }
+
+    /// Parse a tag (CLI / grid spec / store form).
+    pub fn from_tag(tag: &str) -> Option<ShardStrategy> {
+        match tag {
+            "data" | "dp" => Some(ShardStrategy::DataParallel),
+            "pipeline" | "pipe" | "lp" => Some(ShardStrategy::LayerPipeline),
+            "tensor" | "ts" => Some(ShardStrategy::TensorShard),
+            _ => None,
+        }
+    }
+}
+
+/// Compressed feature-map bytes a layer's output puts on the wire: the
+/// dense output element count × the density the downstream layer
+/// actually consumes (the producer's sparsity is what the next layer
+/// sees) × the ECOO feature-token width. The last layer has no
+/// downstream consumer; its own density is the proxy.
+pub fn feature_link_bytes(layers: &[LayerResult]) -> Vec<f64> {
+    (0..layers.len())
+        .map(|i| {
+            let density = layers
+                .get(i + 1)
+                .map(|next| next.feature_density)
+                .unwrap_or(layers[i].feature_density);
+            layers[i].out_elems as f64 * density * FEATURE_TOKEN_BYTES
+        })
+        .collect()
+}
+
+/// Seconds to move `bytes` across one inter-array link.
+pub fn link_seconds(bytes: f64) -> f64 {
+    bytes / LINK_BYTES_PER_S
+}
+
+/// Energy (pJ) of `bytes` of link traffic.
+pub fn link_pj(bytes: f64) -> f64 {
+    bytes * E_LINK_BYTE
+}
+
+/// Cut `durations` (in topological order) into at most `n` contiguous
+/// stages minimizing the maximum stage duration — the classic linear
+/// partition, solved by binary search over the bottleneck with a greedy
+/// feasibility check. Deterministic: the greedy packs left-to-right at
+/// the optimal bottleneck, so equal-cost ties always resolve the same
+/// way. Returns the exclusive end index of each stage; stages are
+/// non-empty and cover `0..durations.len()`.
+pub fn balanced_stages(durations: &[f64], n: usize) -> Vec<usize> {
+    let len = durations.len();
+    let stages = n.clamp(1, len.max(1));
+    if len == 0 {
+        return vec![0];
+    }
+    let total: f64 = durations.iter().sum();
+    let longest = durations.iter().cloned().fold(0.0, f64::max);
+    // count the stages a greedy left-to-right pack needs at bottleneck
+    // `cap`; used both for feasibility and the final cut
+    let cut = |cap: f64| -> Vec<usize> {
+        let mut ends = Vec::new();
+        let mut acc = 0.0f64;
+        for (i, &d) in durations.iter().enumerate() {
+            if acc > 0.0 && acc + d > cap {
+                ends.push(i);
+                acc = 0.0;
+            }
+            acc += d;
+        }
+        ends.push(len);
+        ends
+    };
+    // binary search the optimal bottleneck in [longest, total]
+    let (mut lo, mut hi) = (longest, total);
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if cut(mid).len() <= stages {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let mut ends = cut(hi);
+    // the greedy may use fewer stages than allowed; that is fine (an
+    // array simply idles), but never more
+    while ends.len() > stages {
+        // numerically defensive: merge the two cheapest neighbours
+        let last = ends.pop().unwrap();
+        *ends.last_mut().unwrap() = last;
+    }
+    ends
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip_for_every_strategy() {
+        for s in ShardStrategy::ALL {
+            assert_eq!(ShardStrategy::from_tag(s.tag()), Some(s));
+        }
+        assert_eq!(ShardStrategy::from_tag("dp"), Some(ShardStrategy::DataParallel));
+        assert_eq!(ShardStrategy::from_tag("nope"), None);
+        assert_eq!(ShardStrategy::default(), ShardStrategy::DataParallel);
+    }
+
+    #[test]
+    fn balanced_stages_cover_and_balance() {
+        let d = [3.0, 1.0, 1.0, 1.0, 2.0, 2.0];
+        let ends = balanced_stages(&d, 3);
+        assert_eq!(*ends.last().unwrap(), d.len());
+        assert!(ends.len() <= 3);
+        assert!(ends.windows(2).all(|w| w[0] < w[1]), "stages non-empty");
+        // bottleneck never exceeds the single-stage total and never
+        // undercuts the longest layer
+        let mut lo = 0;
+        let mut worst = 0.0f64;
+        for &e in &ends {
+            worst = worst.max(d[lo..e].iter().sum());
+            lo = e;
+        }
+        assert!(worst >= 3.0 - 1e-12);
+        assert!(worst <= d.iter().sum::<f64>() + 1e-12);
+        // this instance has a perfect 4/4/... no: optimum is 4.0 ([3,1],[1,1,2],[2])
+        assert!(worst <= 4.0 + 1e-9, "bottleneck {worst} not optimal");
+    }
+
+    #[test]
+    fn one_stage_is_everything_and_n_caps_at_len() {
+        let d = [1.0, 2.0, 3.0];
+        assert_eq!(balanced_stages(&d, 1), vec![3]);
+        let ends = balanced_stages(&d, 10);
+        assert_eq!(*ends.last().unwrap(), 3);
+        assert!(ends.len() <= 3);
+        assert_eq!(balanced_stages(&[], 4), vec![0]);
+    }
+
+    #[test]
+    fn link_model_scales_linearly() {
+        assert_eq!(link_seconds(0.0), 0.0);
+        assert!(link_seconds(2e9) > link_seconds(1e9));
+        assert_eq!(link_pj(0.0), 0.0);
+        assert!((link_pj(10.0) - 100.0).abs() < 1e-12);
+    }
+}

@@ -259,6 +259,42 @@ impl Coordinator {
         crate::serve::ServeReport::assemble(model.name.clone(), *serve, layers)
     }
 
+    /// Scale-out cluster serving run ([`crate::cluster`]): simulate the
+    /// model's layers once (tile-memoized), then schedule
+    /// `serve.requests` images across `cluster.arrays` arrays under the
+    /// configured sharding strategy, with inter-array transfers charged
+    /// against the link model.
+    ///
+    /// With `cluster.arrays = 1` the schedule is bit-identical to
+    /// [`Coordinator::simulate_model_pipelined`] for every strategy
+    /// (`rust/tests/cluster_equivalence.rs`).
+    ///
+    /// ```
+    /// use s2engine::cluster::{ClusterConfig, ShardStrategy};
+    /// use s2engine::config::{ArrayConfig, SimConfig};
+    /// use s2engine::coordinator::Coordinator;
+    /// use s2engine::models::{zoo, FeatureSubset};
+    /// use s2engine::serve::ServeConfig;
+    ///
+    /// let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+    /// let serve = ServeConfig::new(4, 0.5).with_requests(16);
+    /// let cluster = ClusterConfig::new(4, ShardStrategy::DataParallel);
+    /// let r = Coordinator::new(cfg).simulate_model_cluster(
+    ///     &zoo::s2net(), FeatureSubset::Average, &serve, &cluster);
+    /// assert!(r.scaleout_efficiency() > 0.5); // near-linear closed-loop scaling
+    /// assert_eq!(r.per_array_occupancy().len(), 4);
+    /// ```
+    pub fn simulate_model_cluster(
+        &self,
+        model: &Model,
+        subset: FeatureSubset,
+        serve: &crate::serve::ServeConfig,
+        cluster: &crate::cluster::ClusterConfig,
+    ) -> crate::cluster::ClusterReport {
+        let layers = self.layer_results_subset(model, subset);
+        crate::cluster::ClusterReport::assemble(model.name.clone(), *cluster, *serve, layers)
+    }
+
     /// Average-subset convenience (the paper's default reporting mode).
     pub fn simulate_model(&self, model: &Model, _image: usize) -> ModelResult {
         self.simulate_model_subset(model, FeatureSubset::Average)

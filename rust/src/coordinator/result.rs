@@ -27,6 +27,9 @@ pub struct LayerResult {
     pub ce_enabled: bool,
     /// Compressed DRAM traffic (bytes) for the S²Engine run.
     pub s2_dram_bytes: u64,
+    /// Dense output feature-map element count (the tensor a downstream
+    /// layer — or an inter-array link in [`crate::cluster`] — consumes).
+    pub out_elems: u64,
 }
 
 impl LayerResult {
@@ -54,6 +57,7 @@ impl LayerResult {
             ds_ratio: cfg.array.ds_ratio,
             ce_enabled: cfg.ce_enabled,
             s2_dram_bytes,
+            out_elems: layer.output_elems(),
         }
     }
 

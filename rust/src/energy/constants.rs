@@ -49,6 +49,18 @@ pub const E_DRAM_BYTE: f64 = 60.0;
 /// Result forwarding per result (RF register hops).
 pub const E_RESULT_FORWARD: f64 = 0.1;
 
+/// Inter-array link traffic, per byte: chip-to-chip SerDes at ~1 pJ/bit
+/// plus packetization/flow-control overhead. Sits between on-chip SRAM
+/// and DRAM in the Horowitz hierarchy — crossing a package boundary is
+/// cheaper than a DRAM row but far from free, which is what makes the
+/// scale-out sharding trade-off ([`crate::cluster`]) non-trivial.
+pub const E_LINK_BYTE: f64 = 10.0;
+
+/// Inter-array link bandwidth in bytes/s (a 200 Gb/s SerDes-class
+/// point-to-point lane): transfer time of a sharded feature map is
+/// `bytes / LINK_BYTES_PER_S` at this modeled bandwidth.
+pub const LINK_BYTES_PER_S: f64 = 25.0e9;
+
 /// Architectural token widths in bytes for traffic accounting
 /// (13-/14-bit tokens — Section 4.2).
 pub const FEATURE_TOKEN_BYTES: f64 = 13.0 / 8.0;
@@ -71,5 +83,15 @@ mod tests {
     #[test]
     fn bigger_sram_costs_more_per_byte() {
         assert!(E_SRAM_BYTE_2MB > E_SRAM_BYTE_1MB);
+    }
+
+    #[test]
+    fn link_sits_between_sram_and_dram() {
+        // crossing a package boundary costs more than an on-chip SRAM
+        // byte but less than a DRAM byte — the premise of the cluster
+        // sharding trade-off
+        assert!(E_LINK_BYTE > E_SRAM_BYTE_2MB);
+        assert!(E_LINK_BYTE < E_DRAM_BYTE);
+        assert!(LINK_BYTES_PER_S > 0.0);
     }
 }

@@ -36,6 +36,11 @@
 //!   DAG, batched open-loop request arrivals, and the double-buffered
 //!   pipeline scheduler that turns per-layer walls into request latency
 //!   percentiles, throughput and array occupancy.
+//! * [`cluster`] — scale-out serving across N arrays: pluggable
+//!   sharding strategies (data-parallel replicas, layer-pipeline
+//!   stages, tensor sharding with all-gather) over an explicit
+//!   inter-array link model, with per-array occupancy, link traffic and
+//!   scale-out efficiency metrics.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section as text output; each figure sweep is a
 //!   [`sweep::Grid`] declaration.
@@ -76,6 +81,7 @@
 //! ```
 
 pub mod baseline;
+pub mod cluster;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;

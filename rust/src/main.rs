@@ -20,10 +20,12 @@ s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
 s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
                   --rate IMGS_PER_S --subset avg|max|min --out serve.json
                   plus the simulate array/effort options]
-s2engine report  table1|...|table5|fig3|fits|serving [--effort ...]
-s2engine sweep   fig10|...|fig17|serving [--effort quick|default|full]
+s2engine cluster <model> [--arrays 4 --shard data|pipeline|tensor
+                  plus every serve option]  # scale-out across N arrays
+s2engine report  table1|...|table5|fig3|fits|serving|cluster [--effort ...]
+s2engine sweep   fig10|...|fig17|serving|cluster [--effort quick|default|full]
                   [--scales 16,32] [--seed N] [--out DIR --resume]
-s2engine sweep   --grid 'models=paper;fifos=2,4,inf;batch=1,4,8;overlap=0,0.6'
+s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;batch=4'
                   [--grid grid.json] [--out DIR --resume] [--workers N]
 s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
 s2engine replay  --in t.s2df [--rows R --cols C ...]  # simulate a file
@@ -40,6 +42,48 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// The `--subset avg|max|min` flag (shared by simulate/serve/cluster).
+fn subset_arg(args: &Args) -> FeatureSubset {
+    match args.get("subset").unwrap_or("avg") {
+        "max" => FeatureSubset::MaxSparsity,
+        "min" => FeatureSubset::MinSparsity,
+        _ => FeatureSubset::Average,
+    }
+}
+
+/// The serve/cluster model argument: first positional or `--model`.
+fn model_arg(args: &Args) -> Result<s2engine::models::Model> {
+    let name = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("model"))
+        .unwrap_or("alexnet");
+    zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))
+}
+
+/// The shared serving knobs (`--batch --overlap --requests --rate`),
+/// validated once for every subcommand that serves requests. The
+/// default request count is `requests_per_batch × batch` (serve uses 4
+/// windows; cluster scales that by the array count).
+fn serve_config_arg(
+    args: &Args,
+    seed: u64,
+    requests_per_batch: usize,
+) -> Result<s2engine::serve::ServeConfig> {
+    let batch = args.get_usize("batch", 1).max(1);
+    let overlap = args.get_f64("overlap", 0.0);
+    anyhow::ensure!(
+        (0.0..=s2engine::serve::MAX_OVERLAP).contains(&overlap),
+        "--overlap must be in [0, {}], got {overlap}",
+        s2engine::serve::MAX_OVERLAP
+    );
+    Ok(s2engine::serve::ServeConfig::new(batch, overlap)
+        .with_requests(args.get_usize("requests", requests_per_batch * batch).max(1))
+        .with_rate(args.get_f64("rate", 0.0))
+        .with_seed(seed))
 }
 
 fn sim_config(args: &Args) -> SimConfig {
@@ -62,6 +106,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand() {
         Some("simulate") => simulate(args),
         Some("serve") => serve_cmd(args),
+        Some("cluster") => cluster_cmd(args),
         Some("compile") => compile_cmd(args),
         Some("replay") => replay(args),
         Some("report") => report_cmd(args),
@@ -84,11 +129,7 @@ fn simulate(args: &Args) -> Result<()> {
     let name = args.get("model").unwrap_or("alexnet");
     let model =
         zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
-    let subset = match args.get("subset").unwrap_or("avg") {
-        "max" => FeatureSubset::MaxSparsity,
-        "min" => FeatureSubset::MinSparsity,
-        _ => FeatureSubset::Average,
-    };
+    let subset = subset_arg(args);
     let cfg = sim_config(args);
     println!(
         "simulating {} on {}x{} array, fifo {}, DS:MAC {}:1, CE {}",
@@ -133,32 +174,10 @@ fn simulate(args: &Args) -> Result<()> {
 /// — schedule a batched request workload through the layer DAG and
 /// report latency percentiles, throughput and occupancy.
 fn serve_cmd(args: &Args) -> Result<()> {
-    use s2engine::serve::ServeConfig;
-    let name = args
-        .positional
-        .get(1)
-        .map(String::as_str)
-        .or_else(|| args.get("model"))
-        .unwrap_or("alexnet");
-    let model =
-        zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))?;
-    let subset = match args.get("subset").unwrap_or("avg") {
-        "max" => FeatureSubset::MaxSparsity,
-        "min" => FeatureSubset::MinSparsity,
-        _ => FeatureSubset::Average,
-    };
+    let model = model_arg(args)?;
+    let subset = subset_arg(args);
     let cfg = sim_config(args);
-    let batch = args.get_usize("batch", 1).max(1);
-    let overlap = args.get_f64("overlap", 0.0);
-    anyhow::ensure!(
-        (0.0..=s2engine::serve::MAX_OVERLAP).contains(&overlap),
-        "--overlap must be in [0, {}], got {overlap}",
-        s2engine::serve::MAX_OVERLAP
-    );
-    let serve = ServeConfig::new(batch, overlap)
-        .with_requests(args.get_usize("requests", 4 * batch).max(1))
-        .with_rate(args.get_f64("rate", 0.0))
-        .with_seed(cfg.seed);
+    let serve = serve_config_arg(args, cfg.seed, 4)?;
     println!(
         "serving {} on {}x{} array: {} requests, batch {}, overlap {:.2}, {}",
         model.name,
@@ -206,6 +225,62 @@ fn serve_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `s2engine cluster <model>`: scale-out serving simulation — schedule
+/// a batched request workload across N arrays under a sharding strategy
+/// and report cluster throughput, per-array occupancy, link traffic and
+/// scale-out efficiency.
+fn cluster_cmd(args: &Args) -> Result<()> {
+    use s2engine::cluster::{ClusterConfig, ShardStrategy};
+    let model = model_arg(args)?;
+    let subset = subset_arg(args);
+    let cfg = sim_config(args);
+    let arrays = args.get_usize("arrays", 4).max(1);
+    let shard_tag = args.get("shard").unwrap_or("data");
+    let shard = ShardStrategy::from_tag(shard_tag).ok_or_else(|| {
+        anyhow!("unknown shard strategy `{shard_tag}` (data|pipeline|tensor)")
+    })?;
+    let serve = serve_config_arg(args, cfg.seed, 4 * arrays)?;
+    let cluster = ClusterConfig::new(arrays, shard);
+    println!(
+        "cluster-serving {} on {} x {}x{} arrays ({} sharding): {} requests, \
+         batch {}, overlap {:.2}",
+        model.name,
+        cluster.arrays,
+        cfg.array.rows,
+        cfg.array.cols,
+        shard.tag(),
+        serve.requests,
+        serve.batch,
+        serve.overlap,
+    );
+    let t0 = std::time::Instant::now();
+    let r = Coordinator::new(cfg).simulate_model_cluster(&model, subset, &serve, &cluster);
+    println!("{:<8} {:>10} {:>12}", "array", "occupancy", "executions");
+    for (i, (occ, lane)) in r
+        .per_array_occupancy()
+        .iter()
+        .zip(&r.schedule.lanes)
+        .enumerate()
+    {
+        println!("{:<8} {:>9.1}% {:>12}", i, occ * 100.0, lane.jobs);
+    }
+    println!("---");
+    let ms = |s: f64| s * 1e3;
+    println!("makespan             {:.4} ms", ms(r.makespan()));
+    println!("single-array         {:.4} ms", ms(r.single_makespan));
+    println!("throughput           {:.1} images/s", r.throughput());
+    println!("latency p50/p99      {:.4} / {:.4} ms", ms(r.latency.p50), ms(r.latency.p99));
+    println!("link traffic         {:.3} MB", r.link_bytes() / 1e6);
+    println!("link energy          {:.3} uJ", r.link_energy_pj() / 1e6);
+    println!("scale-out efficiency {:.2} (1.00 = linear)", r.scaleout_efficiency());
+    println!("({} arrays in {:?})", r.schedule.lanes.len(), t0.elapsed());
+    if let Some(path) = args.get("out").or_else(|| args.get("json")) {
+        std::fs::write(path, format!("{}\n", r.to_json()))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn report_cmd(args: &Args) -> Result<()> {
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
@@ -214,7 +289,8 @@ fn report_cmd(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| {
             anyhow!(
-                "report needs a target (table1|table2|table3|table4|table5|fig3|fits|serving)"
+                "report needs a target \
+                 (table1|table2|table3|table4|table5|fig3|fits|serving|cluster)"
             )
         })?;
     let out = match which.as_str() {
@@ -226,6 +302,7 @@ fn report_cmd(args: &Args) -> Result<()> {
         "table5" => report::table5(effort, seed),
         "fig3" => report::fig3(effort, seed),
         "serving" => report::serving(effort, seed),
+        "cluster" => report::cluster(effort, seed),
         other => return Err(anyhow!("unknown report target `{other}`")),
     };
     println!("{out}");
@@ -266,13 +343,13 @@ fn sweep(args: &Args) -> Result<()> {
         .positional
         .get(1)
         .ok_or_else(|| {
-            anyhow!("sweep needs a target (fig10..fig17, serving, or --grid <spec>)")
+            anyhow!("sweep needs a target (fig10..fig17, serving, cluster, or --grid <spec>)")
         })?;
     // validate the target BEFORE opening the store: a typo'd target must
     // not truncate an existing results file
     anyhow::ensure!(
         report::is_figure(which),
-        "unknown sweep target `{which}` (fig10..fig17, serving)"
+        "unknown sweep target `{which}` (fig10..fig17, serving, cluster)"
     );
     let mut store = sweep_store(args)?;
     let t0 = std::time::Instant::now();
@@ -305,8 +382,8 @@ fn grid_sweep(args: &Args) -> Result<()> {
     let mut t = TextTable::new(
         "Sweep results",
         &["model", "workload", "array", "fifo", "ratio", "CE", "r16",
-          "batch", "ovl", "speedup", "onchip EE", "area eff", "FB red.",
-          "p99 (ms)", "img/s"],
+          "batch", "ovl", "N", "shard", "speedup", "onchip EE", "area eff",
+          "FB red.", "p99 (ms)", "img/s", "scale eff"],
     );
     for rec in res.records() {
         let j = &rec.job;
@@ -320,12 +397,29 @@ fn grid_sweep(args: &Args) -> Result<()> {
             format!("{:.3}", j.ratio16),
             j.batch.to_string(),
             format!("{:.2}", j.overlap),
+            j.arrays.to_string(),
+            j.shard.tag().to_string(),
             fx(rec.speedup),
             fx(rec.onchip_ee),
             fx(rec.area_eff),
             fx(rec.access_reduction),
-            format!("{:.3}", rec.p99_latency * 1e3),
-            format!("{:.1}", rec.throughput),
+            // serving/cluster metrics recovered from stores that predate
+            // them parse as zeros — render n/a, never fake measurements
+            if rec.has_serving_metrics() {
+                format!("{:.3}", rec.p99_latency * 1e3)
+            } else {
+                "n/a".into()
+            },
+            if rec.has_serving_metrics() {
+                format!("{:.1}", rec.throughput)
+            } else {
+                "n/a".into()
+            },
+            if rec.has_cluster_metrics() {
+                format!("{:.2}", rec.scaleout_eff)
+            } else {
+                "n/a".into()
+            },
         ]);
     }
     println!("{}", t.render());

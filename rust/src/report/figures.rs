@@ -413,8 +413,8 @@ fn scale_depth_grid(effort: Effort, seed: u64, scales: &[usize], depths: &[usize
 }
 
 /// Is `which` a sweep target [`figure`] can render — a paper figure or
-/// the `serving` summary? (The CLI checks this before opening — and
-/// possibly truncating — a `--out` store.)
+/// the `serving` / `cluster` summaries? (The CLI checks this before
+/// opening — and possibly truncating — a `--out` store.)
 pub fn is_figure(which: &str) -> bool {
     matches!(
         which,
@@ -427,6 +427,7 @@ pub fn is_figure(which: &str) -> bool {
             | "fig16"
             | "fig17"
             | "serving"
+            | "cluster"
     )
 }
 
@@ -449,6 +450,7 @@ pub fn figure(
         "fig16" => fig16_in(effort, seed, scales, store),
         "fig17" => fig17_in(effort, seed, scales, store),
         "serving" => super::serving::serving_in(effort, seed, store),
+        "cluster" => super::cluster::cluster_in(effort, seed, store),
         _ => return None,
     })
 }

@@ -14,10 +14,12 @@
 //! wall-time while preserving the reported ratios (tiles and layers are
 //! sampled deterministically).
 
+pub mod cluster;
 pub mod figures;
 pub mod serving;
 pub mod tables;
 
+pub use cluster::{cluster, cluster_in};
 pub use figures::*;
 pub use serving::{serving, serving_in};
 pub use tables::*;

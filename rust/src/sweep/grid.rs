@@ -30,6 +30,7 @@
 //! ```
 
 use super::plan::{resolve_model, Job, Plan};
+use crate::cluster::ShardStrategy;
 use crate::config::{ArrayConfig, FifoDepths};
 use crate::models::FeatureSubset;
 use crate::report::Effort;
@@ -63,6 +64,11 @@ pub struct Grid {
     pub batches: Vec<usize>,
     /// Serving double-buffer overlap fractions; `0` = serial handoff.
     pub overlaps: Vec<f64>,
+    /// Cluster sizes ([`crate::cluster`]); `1` = the classic
+    /// single-array evaluation point.
+    pub arrays: Vec<usize>,
+    /// Cluster sharding strategies.
+    pub shards: Vec<ShardStrategy>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -81,6 +87,8 @@ impl Grid {
             ratio16: vec![0.0],
             batches: vec![1],
             overlaps: vec![0.0],
+            arrays: vec![1],
+            shards: vec![ShardStrategy::DataParallel],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -137,6 +145,16 @@ impl Grid {
         self
     }
 
+    pub fn arrays(mut self, arrays: &[usize]) -> Grid {
+        self.arrays = arrays.to_vec();
+        self
+    }
+
+    pub fn shards(mut self, shards: &[ShardStrategy]) -> Grid {
+        self.shards = shards.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -161,11 +179,13 @@ impl Grid {
             * self.ratio16.len()
             * self.batches.len()
             * self.overlaps.len()
+            * self.arrays.len()
+            * self.shards.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
     /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
-    /// overlap.
+    /// overlap, arrays, shard.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -184,26 +204,35 @@ impl Grid {
                                 for &r16 in &self.ratio16 {
                                     for &batch in &self.batches {
                                         for &overlap in &self.overlaps {
-                                            let array = ArrayConfig::new(rows, cols)
-                                                .with_fifo(fifo)
-                                                .with_ratio(ratio);
-                                            let job = match (subset, density) {
-                                                (Some(s), _) => Job::subset(
-                                                    model, s, array, ce, self.seed,
-                                                    effort,
-                                                )
-                                                .with_ratio16(r16),
-                                                (_, Some((fd, wd))) => Job::synthetic(
-                                                    model, fd, wd, array, r16,
-                                                    self.seed, effort,
-                                                )
-                                                .with_ce(ce),
-                                                _ => unreachable!(),
-                                            };
-                                            jobs.push(
-                                                job.with_batch(batch)
-                                                    .with_overlap(overlap),
-                                            );
+                                            for &n_arrays in &self.arrays {
+                                                for &shard in &self.shards {
+                                                    let array =
+                                                        ArrayConfig::new(rows, cols)
+                                                            .with_fifo(fifo)
+                                                            .with_ratio(ratio);
+                                                    let job = match (subset, density) {
+                                                        (Some(s), _) => Job::subset(
+                                                            model, s, array, ce,
+                                                            self.seed, effort,
+                                                        )
+                                                        .with_ratio16(r16),
+                                                        (_, Some((fd, wd))) => {
+                                                            Job::synthetic(
+                                                                model, fd, wd, array,
+                                                                r16, self.seed, effort,
+                                                            )
+                                                            .with_ce(ce)
+                                                        }
+                                                        _ => unreachable!(),
+                                                    };
+                                                    jobs.push(
+                                                        job.with_batch(batch)
+                                                            .with_overlap(overlap)
+                                                            .with_arrays(n_arrays)
+                                                            .with_shard(shard),
+                                                    );
+                                                }
+                                            }
                                         }
                                     }
                                 }
@@ -231,6 +260,8 @@ impl Grid {
     /// | `ratio16`   | fractions in `[0,1]`                                |
     /// | `batch`     | serving batch-window sizes (integers >= 1)          |
     /// | `overlap`   | serving overlap fractions in `[0, 0.95]`            |
+    /// | `arrays`    | cluster sizes (integers >= 1)                       |
+    /// | `shard`     | `data`, `pipeline`, `tensor`, or `all` (all 3)      |
     /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
     /// | `samples`   | tiles sampled per layer (overrides effort)          |
     /// | `stride`    | layer thinning stride (overrides effort)            |
@@ -394,6 +425,27 @@ impl Grid {
                         _ => Err(bad("overlap", v)),
                     })
                     .collect::<Result<_, _>>()?;
+            }
+            "arrays" | "array" => {
+                self.arrays = values
+                    .iter()
+                    .map(|v| match v.trim().parse::<usize>() {
+                        Ok(n) if n >= 1 => Ok(n),
+                        _ => Err(bad("arrays", v)),
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "shard" | "shards" => {
+                self.shards = Vec::new();
+                for v in values {
+                    match *v {
+                        "all" => self.shards.extend(ShardStrategy::ALL),
+                        tag => match ShardStrategy::from_tag(tag) {
+                            Some(s) => self.shards.push(s),
+                            None => return Err(bad("shard", tag)),
+                        },
+                    }
+                }
             }
             "effort" => {
                 let e = Effort::from_name(values.first().copied().unwrap_or("default"));
@@ -574,6 +626,44 @@ mod tests {
         // clamped into a duplicate point
         assert!(Grid::from_spec("overlap=0.96").is_err());
         assert!(Grid::from_spec("overlap=0.95").is_ok());
+        assert!(Grid::from_spec("arrays=0").is_err());
+        assert!(Grid::from_spec("arrays=two").is_err());
+        assert!(Grid::from_spec("shard=mesh").is_err());
+    }
+
+    #[test]
+    fn cluster_axes_expand_innermost() {
+        let g = Grid::from_spec("models=s2net;arrays=1,4;shard=all").unwrap();
+        assert_eq!(g.arrays, vec![1, 4]);
+        assert_eq!(g.shards.len(), 3);
+        assert_eq!(g.size(), 6);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 6);
+        // shard innermost, then arrays
+        assert_eq!(
+            (jobs[0].arrays, jobs[0].shard),
+            (1, ShardStrategy::DataParallel)
+        );
+        assert_eq!(
+            (jobs[1].arrays, jobs[1].shard),
+            (1, ShardStrategy::LayerPipeline)
+        );
+        assert_eq!(
+            (jobs[3].arrays, jobs[3].shard),
+            (4, ShardStrategy::DataParallel)
+        );
+        // the default point keeps the historical key shape
+        assert!(jobs[0].is_default_cluster());
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 6, "cluster axes must distinguish keys");
+        // JSON grid form parses identically
+        let j = Json::parse(
+            r#"{"models": ["s2net"], "arrays": [1, 4], "shard": ["all"]}"#,
+        )
+        .unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
     }
 
     #[test]

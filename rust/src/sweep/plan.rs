@@ -12,6 +12,7 @@
 //! A [`Plan`] is the deterministic expansion of a [`super::Grid`] —
 //! the ordered job list a [`super::Runner`] executes.
 
+use crate::cluster::ShardStrategy;
 use crate::config::ArrayConfig;
 use crate::models::{zoo, FeatureSubset, Model};
 use crate::report::Effort;
@@ -100,6 +101,12 @@ pub struct Job {
     /// Serving double-buffer overlap fraction
     /// ([`crate::serve::ServeConfig::overlap`]); `0` = serial handoff.
     pub overlap: f64,
+    /// Cluster size ([`crate::cluster::ClusterConfig::arrays`]); `1` is
+    /// the classic single-array evaluation point.
+    pub arrays: usize,
+    /// Cluster sharding strategy; only meaningful with `arrays > 1`
+    /// (every strategy degenerates to the plain pipeline at one array).
+    pub shard: ShardStrategy,
 }
 
 impl Job {
@@ -123,6 +130,8 @@ impl Job {
             layer_stride: effort.layer_stride,
             batch: 1,
             overlap: 0.0,
+            arrays: 1,
+            shard: ShardStrategy::DataParallel,
         }
     }
 
@@ -150,6 +159,8 @@ impl Job {
             layer_stride: effort.layer_stride,
             batch: 1,
             overlap: 0.0,
+            arrays: 1,
+            shard: ShardStrategy::DataParallel,
         }
     }
 
@@ -173,12 +184,35 @@ impl Job {
         self
     }
 
+    pub fn with_arrays(mut self, arrays: usize) -> Job {
+        self.arrays = arrays.max(1);
+        self
+    }
+
+    pub fn with_shard(mut self, shard: ShardStrategy) -> Job {
+        self.shard = shard;
+        self
+    }
+
     /// Is this job a plain per-layer evaluation point (the pre-serving
     /// default)? Such jobs keep their historical canonical form — and
     /// therefore their [`Job::key`] — so stores written before the
     /// serving axes existed still resume.
     pub fn is_default_serving(&self) -> bool {
         self.batch == 1 && self.overlap == 0.0
+    }
+
+    /// Is this job a single-array point (the pre-cluster default)? Such
+    /// jobs keep their historical canonical form — and therefore their
+    /// [`Job::key`] — so stores written before the `arrays`/`shard` axes
+    /// existed still resume.
+    pub fn is_default_cluster(&self) -> bool {
+        self.arrays <= 1 && self.shard == ShardStrategy::DataParallel
+    }
+
+    /// The cluster configuration this job implies.
+    pub fn cluster_config(&self) -> crate::cluster::ClusterConfig {
+        crate::cluster::ClusterConfig::new(self.arrays, self.shard)
     }
 
     /// The serving protocol this job implies: `batch`-sized windows,
@@ -230,15 +264,24 @@ impl Job {
             self.tile_samples,
             self.layer_stride,
         );
-        // Serving fields are appended only when non-default: default
-        // jobs keep the pre-serving canonical form, so keys — and
-        // therefore on-disk stores written before the `batch`/`overlap`
-        // axes existed — stay valid under `--resume`.
-        if self.is_default_serving() {
-            base
-        } else {
-            format!("{base}|b{}|ov:{:016x}", self.batch, self.overlap.to_bits())
+        // Serving and cluster fields are appended only when non-default:
+        // default jobs keep the pre-serving/pre-cluster canonical form,
+        // so keys — and therefore on-disk stores written before the
+        // `batch`/`overlap`/`arrays`/`shard` axes existed — stay valid
+        // under `--resume`. The suffixes are prefix-distinct (`|b`, `|a`)
+        // so every elision combination stays injective.
+        let mut canon = base;
+        if !self.is_default_serving() {
+            canon = format!(
+                "{canon}|b{}|ov:{:016x}",
+                self.batch,
+                self.overlap.to_bits()
+            );
         }
+        if !self.is_default_cluster() {
+            canon = format!("{canon}|a{}|sh:{}", self.arrays, self.shard.tag());
+        }
+        canon
     }
 
     /// Stable job identity: FNV-1a 64 over [`Job::canonical`]. The store
@@ -309,6 +352,12 @@ impl Job {
             o.insert("batch".into(), Json::Num(self.batch as f64));
             o.insert("overlap".into(), Json::Num(self.overlap));
         }
+        // cluster fields likewise elided at their defaults (pre-cluster
+        // stores parse back as arrays=1 / shard=data)
+        if !self.is_default_cluster() {
+            o.insert("arrays".into(), Json::Num(self.arrays as f64));
+            o.insert("shard".into(), Json::Str(self.shard.tag().into()));
+        }
         Json::Obj(o)
     }
 
@@ -369,6 +418,16 @@ impl Job {
                 .unwrap_or(1)
                 .max(1),
             overlap: j.get("overlap").and_then(Json::as_f64).unwrap_or(0.0),
+            arrays: j
+                .get("arrays")
+                .and_then(Json::as_usize)
+                .unwrap_or(1)
+                .max(1),
+            shard: match j.get("shard") {
+                Some(Json::Str(tag)) => ShardStrategy::from_tag(tag)
+                    .ok_or_else(|| format!("unknown shard strategy `{tag}`"))?,
+                _ => ShardStrategy::DataParallel,
+            },
         })
     }
 }
@@ -466,6 +525,89 @@ mod tests {
         assert_ne!(o.key(), b.key());
         // with_batch(1) alone stays on the historical form
         assert_eq!(j.clone().with_batch(1).key(), j.key());
+    }
+
+    #[test]
+    fn default_cluster_fields_keep_historical_keys() {
+        // Pre-cluster stores must keep resuming: an arrays=1/shard=data
+        // job keys exactly as it did before the cluster axes existed —
+        // including when the serving axes are non-default. The canonical
+        // forms are locked against the PR-3-era constants.
+        let j = job();
+        assert!(j.is_default_cluster());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        assert_eq!(j.clone().with_arrays(1).key(), j.key());
+        assert_eq!(
+            j.clone().with_shard(ShardStrategy::DataParallel).key(),
+            j.key()
+        );
+        // a serving-only job keeps the PR-3 canonical (no cluster suffix)
+        let b = j.clone().with_batch(4);
+        assert!(b.canonical().ends_with("|b4|ov:0000000000000000"));
+        // non-default cluster fields extend — and change — the key
+        let a = j.clone().with_arrays(4);
+        assert!(a.canonical().ends_with("|a4|sh:data"));
+        assert_ne!(a.key(), j.key());
+        let t = j.clone().with_shard(ShardStrategy::TensorShard);
+        assert!(t.canonical().ends_with("|a1|sh:tensor"));
+        assert_ne!(t.key(), j.key());
+        assert_ne!(t.key(), a.key());
+        // serving + cluster suffixes compose in a fixed, injective order
+        let both = j
+            .clone()
+            .with_batch(4)
+            .with_arrays(2)
+            .with_shard(ShardStrategy::LayerPipeline);
+        assert!(both
+            .canonical()
+            .ends_with("|b4|ov:0000000000000000|a2|sh:pipeline"));
+        let keys = [
+            j.key(),
+            b.key(),
+            a.key(),
+            t.key(),
+            both.key(),
+            j.clone().with_arrays(2).key(),
+            j.clone().with_shard(ShardStrategy::LayerPipeline).key(),
+        ];
+        let mut uniq = keys.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "cluster axes must distinguish keys");
+    }
+
+    #[test]
+    fn cluster_job_json_roundtrip_and_legacy_parse() {
+        let j = job()
+            .with_batch(2)
+            .with_overlap(0.25)
+            .with_arrays(8)
+            .with_shard(ShardStrategy::TensorShard);
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(j.key(), back.key());
+        // a pre-cluster line (no arrays/shard keys) parses to the defaults
+        let legacy = job().with_batch(2).to_json().to_string();
+        assert!(!legacy.contains("arrays") && !legacy.contains("shard"));
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(parsed.arrays, 1);
+        assert_eq!(parsed.shard, ShardStrategy::DataParallel);
+        assert!(parsed.is_default_cluster());
+        // a garbage strategy tag is rejected, not silently defaulted
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("shard".into(), Json::Str("wat".into()));
+        }
+        assert!(Job::from_json(&bad).is_err());
+        // the implied cluster config clamps to >= 1 array
+        let cc = j.cluster_config();
+        assert_eq!(cc.arrays, 8);
+        assert_eq!(cc.shard, ShardStrategy::TensorShard);
     }
 
     #[test]

@@ -89,9 +89,10 @@ impl Runner {
 /// Run one job to completion (the coordinator does the per-tile
 /// fan-out/memoization; this resolves the model, thins it to the job's
 /// effort, and applies the configuration). The layers are simulated
-/// once and feed both the per-layer metrics ([`ModelResult`]) and the
-/// job's pipelined serving run ([`Job::serve_config`]'s closed-loop
-/// window protocol), which is pure arithmetic on top.
+/// once and feed the per-layer metrics ([`ModelResult`]), the job's
+/// pipelined serving run ([`Job::serve_config`]'s closed-loop window
+/// protocol), and its scale-out cluster run ([`Job::cluster_config`]) —
+/// all pure arithmetic on top.
 ///
 /// Panics on an unresolvable model name — [`crate::sweep::Grid`]
 /// validation rejects those before a plan ever reaches the runner.
@@ -114,12 +115,18 @@ pub fn execute(job: &Job, inner_workers: usize) -> SweepRecord {
         } => coord.layer_results_synthetic(&model, feature_density, weight_density),
     };
     let result = ModelResult::new(&model, &coord.cfg, layers.clone());
+    let cluster = crate::cluster::ClusterReport::assemble(
+        model.name.clone(),
+        job.cluster_config(),
+        job.serve_config(),
+        layers.clone(),
+    );
     let serve = crate::serve::ServeReport::assemble(
         model.name.clone(),
         job.serve_config(),
         layers,
     );
-    SweepRecord::from_result(job.clone(), &result, &serve)
+    SweepRecord::from_result(job.clone(), &result, &serve, &cluster)
 }
 
 /// A completed sweep: records in plan order, indexed by job key.
@@ -283,6 +290,41 @@ mod tests {
             piped.throughput,
             serial.throughput
         );
+    }
+
+    #[test]
+    fn cluster_axes_flow_through_to_record_metrics() {
+        // an arrays/shard grid produces cluster metrics; the replicated
+        // point must beat the single array on makespan-derived
+        // efficiency accounting while never exceeding perfect scaling
+        let g = Grid::new(tiny(), SEED ^ 0xc1)
+            .models(&["s2net"])
+            .scales(&[(8, 8)])
+            .batches(&[2])
+            .overlaps(&[0.5])
+            .arrays(&[1, 4])
+            .shards(&[
+                crate::cluster::ShardStrategy::DataParallel,
+                crate::cluster::ShardStrategy::TensorShard,
+            ]);
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&g.plan(), &mut store);
+        assert_eq!(res.len(), 4);
+        for rec in res.records() {
+            assert!(rec.has_cluster_metrics());
+            assert!(rec.scaleout_eff > 0.0 && rec.scaleout_eff <= 1.0 + 1e-12);
+            assert!(rec.cluster_occupancy > 0.0);
+            assert!(rec.cluster_p99_latency > 0.0);
+            // cluster knobs never change the per-layer metrics
+            assert_eq!(rec.speedup, res.records()[0].speedup);
+            assert_eq!(rec.s2_wall, res.records()[0].s2_wall);
+        }
+        // single-array points score exactly 1.0 by construction
+        assert!((res.records()[0].scaleout_eff - 1.0).abs() < 1e-12);
+        assert_eq!(res.records()[0].link_bytes, 0.0);
+        // the 4-way tensor shard moves bytes; data-parallel never does
+        assert_eq!(res.records()[2].link_bytes, 0.0);
+        assert!(res.records()[3].link_bytes > 0.0);
     }
 
     #[test]

@@ -64,18 +64,34 @@ pub struct SweepRecord {
     pub throughput: f64,
     /// ... and array occupancy over the run.
     pub occupancy: f64,
+    /// Cluster metrics from the job's scale-out run
+    /// ([`Job::cluster_config`]): mean per-array occupancy ...
+    pub cluster_occupancy: f64,
+    /// ... total inter-array link traffic (bytes) ...
+    pub link_bytes: f64,
+    /// ... the cluster's own p99 request latency (seconds — NOT the
+    /// single-array serving p99 above; sharding changes the tail) ...
+    pub cluster_p99_latency: f64,
+    /// ... and scale-out efficiency `T₁ / (N × T_N)` (1.0 = perfect
+    /// linear scaling; a single array is exactly 1.0).
+    pub scaleout_eff: f64,
 }
 
 impl SweepRecord {
     /// Extract the report-layer metrics from a finished evaluation plus
-    /// its serving run.
+    /// its serving and cluster runs.
     pub fn from_result(
         job: Job,
         r: &crate::coordinator::ModelResult,
         serve: &crate::serve::ServeReport,
+        cluster: &crate::cluster::ClusterReport,
     ) -> SweepRecord {
         let energy = r.s2_energy();
         SweepRecord {
+            cluster_occupancy: cluster.mean_occupancy(),
+            link_bytes: cluster.link_bytes(),
+            cluster_p99_latency: cluster.latency.p99,
+            scaleout_eff: cluster.scaleout_efficiency(),
             p50_latency: serve.latency.p50,
             p95_latency: serve.latency.p95,
             p99_latency: serve.latency.p99,
@@ -110,6 +126,15 @@ impl SweepRecord {
     /// must not present the zeros as measurements.
     pub fn has_serving_metrics(&self) -> bool {
         self.throughput > 0.0
+    }
+
+    /// Does this record carry measured cluster metrics? Lines recovered
+    /// from stores written before the `arrays`/`shard` axes existed
+    /// parse those fields as zeros; a real cluster run always has
+    /// positive scale-out efficiency (a single array scores exactly
+    /// 1.0). Renderers must not present the zeros as measurements.
+    pub fn has_cluster_metrics(&self) -> bool {
+        self.scaleout_eff > 0.0
     }
 
     /// Reassemble the stored on-chip breakdown (Fig. 15 renders from
@@ -149,6 +174,10 @@ impl SweepRecord {
         num("p99", self.p99_latency);
         num("throughput", self.throughput);
         num("occupancy", self.occupancy);
+        num("cluster_occ", self.cluster_occupancy);
+        num("link_bytes", self.link_bytes);
+        num("cluster_p99", self.cluster_p99_latency);
+        num("scaleout", self.scaleout_eff);
         let mut o = BTreeMap::new();
         o.insert("key".into(), Json::Str(self.job.key_hex()));
         o.insert("job".into(), self.job.to_json());
@@ -176,13 +205,18 @@ impl SweepRecord {
             e_ce: m.f64_field("e_ce")?,
             e_other: m.f64_field("e_other")?,
             e_dram: m.f64_field("e_dram")?,
-            // serving metrics are absent from pre-serving stores; such
-            // lines stay resumable and parse to zeros
+            // serving metrics are absent from pre-serving stores, and
+            // cluster metrics from pre-cluster stores; such lines stay
+            // resumable and parse to zeros
             p50_latency: opt(m, "p50"),
             p95_latency: opt(m, "p95"),
             p99_latency: opt(m, "p99"),
             throughput: opt(m, "throughput"),
             occupancy: opt(m, "occupancy"),
+            cluster_occupancy: opt(m, "cluster_occ"),
+            link_bytes: opt(m, "link_bytes"),
+            cluster_p99_latency: opt(m, "cluster_p99"),
+            scaleout_eff: opt(m, "scaleout"),
             job,
         })
     }
@@ -338,6 +372,10 @@ mod tests {
             p99_latency: 2.9000000000000001e-3,
             throughput: 812.5,
             occupancy: 0.87,
+            cluster_occupancy: 0.81,
+            link_bytes: 2.5e6,
+            cluster_p99_latency: 3.1e-3,
+            scaleout_eff: 0.93,
         }
     }
 
@@ -360,7 +398,10 @@ mod tests {
             let Some(Json::Obj(m)) = o.get_mut("metrics") else {
                 unreachable!()
             };
-            for k in ["p50", "p95", "p99", "throughput", "occupancy"] {
+            for k in [
+                "p50", "p95", "p99", "throughput", "occupancy", "cluster_occ",
+                "link_bytes", "cluster_p99", "scaleout",
+            ] {
                 m.remove(k);
             }
             Json::Obj(o).to_string()
@@ -371,6 +412,40 @@ mod tests {
         assert_eq!(back.p50_latency, 0.0);
         assert_eq!(back.throughput, 0.0);
         assert_eq!(back.occupancy, 0.0);
+        assert_eq!(back.cluster_occupancy, 0.0);
+        assert_eq!(back.link_bytes, 0.0);
+        assert_eq!(back.cluster_p99_latency, 0.0);
+        assert_eq!(back.scaleout_eff, 0.0);
+        assert!(!back.has_serving_metrics());
+        assert!(!back.has_cluster_metrics());
+    }
+
+    #[test]
+    fn golden_pre_cluster_line_parses_with_na_handling() {
+        // A literal JSONL line in the exact shape the PR-3 store wrote
+        // (serving metrics present, no cluster metrics, no arrays/shard
+        // job fields). This is the forward-compatibility contract: old
+        // stores must keep resuming, with the cluster fields reported as
+        // not-measured rather than as zeros.
+        let line = r#"{"key": "b6f23c1520d9bff9", "job": {"ce": true, "cols": 8, "fifo": [4, 4, 4], "model": "alexnet", "ratio": 4, "ratio16": 0, "rows": 8, "samples": 2, "seed": "1", "stride": 4, "workload": "avg", "batch": 4, "overlap": 0.5}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "naive_wall": 0.0045, "onchip_ee": 1.8, "total_ee": 2.9, "p50": 0.0013, "p95": 0.0026, "p99": 0.0029, "s2_wall": 0.00125, "speedup": 3.6, "throughput": 812.5, "occupancy": 0.87}}"#;
+        let rec = SweepRecord::from_json_line(line).unwrap();
+        // the job parses to the cluster defaults and keeps its key
+        assert_eq!(rec.job.model, "alexnet");
+        assert_eq!(rec.job.batch, 4);
+        assert_eq!(rec.job.arrays, 1);
+        assert!(rec.job.is_default_cluster());
+        // the recomputed FNV key matches the one the PR-3 store wrote:
+        // elision really does preserve pre-cluster identities
+        assert_eq!(rec.job.key_hex(), "b6f23c1520d9bff9");
+        // serving metrics are real measurements; cluster metrics are not
+        assert!(rec.has_serving_metrics());
+        assert!(!rec.has_cluster_metrics());
+        assert_eq!(rec.throughput, 812.5);
+        assert_eq!(rec.scaleout_eff, 0.0);
+        // re-rendering the record round-trips the job identically
+        let back = SweepRecord::from_json_line(&rec.to_json_line()).unwrap();
+        assert_eq!(back.job, rec.job);
+        assert_eq!(back.job.key(), rec.job.key());
     }
 
     fn tmp(name: &str) -> PathBuf {

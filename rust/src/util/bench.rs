@@ -15,6 +15,14 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Is the conventional quick-run mode active (`BENCH_QUICK` env var)?
+/// The CI bench-smoke job sets it; [`Bench::new`] shortens its warm-up
+/// and measurement windows under it, and bench binaries use it to
+/// shrink their own workload sizes to match.
+pub fn is_quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
 /// One measured benchmark.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -79,7 +87,7 @@ impl Default for Bench {
 impl Bench {
     pub fn new() -> Self {
         // honour the conventional quick-run env var
-        let quick = std::env::var("BENCH_QUICK").is_ok();
+        let quick = is_quick();
         Bench {
             target_time: if quick {
                 Duration::from_millis(200)

@@ -1,0 +1,258 @@
+//! Cluster-path equivalence and scale-out schedule invariants.
+//!
+//! The scale-out simulator is only trustworthy because of three
+//! properties this suite enforces (mirrored by the Python transcription
+//! fuzz in `scripts/fuzz_cluster.py`):
+//!
+//! 1. **Degenerate equivalence** — with `arrays = 1`,
+//!    `Coordinator::simulate_model_cluster` reproduces
+//!    `simulate_model_pipelined` **bit-identically** for *every*
+//!    sharding strategy: same layers, same makespan bits, same
+//!    finish times, same latency distribution, zero link traffic.
+//! 2. **Data-parallel monotonicity** — under closed-loop load the
+//!    DataParallel makespan never increases with the array count.
+//! 3. **Lower bound** — every strategy's makespan is floored by its
+//!    dependency critical path plus mandatory serialized link time.
+//!
+//! Plus: the acceptance path that an `arrays`/`shard` sweep grid runs
+//! end to end under a resumable store, including a pre-cluster line.
+
+use s2engine::cluster::{ClusterConfig, ShardStrategy};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::ServeConfig;
+use s2engine::sweep::{Grid, Runner, Store};
+
+fn coord(samples: usize, seed: u64) -> Coordinator {
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(samples)
+        .with_seed(seed);
+    Coordinator::new(cfg)
+}
+
+#[test]
+fn single_array_cluster_equals_pipelined_for_every_strategy() {
+    for model in [zoo::s2net(), zoo::alexnet()] {
+        let c = coord(2, 0xc0de_cafe_0050);
+        for &(batch, overlap, requests, rate_mult) in
+            &[(1usize, 0.0, 1usize, 0.0), (4, 0.6, 12, 0.8)]
+        {
+            let chain: f64 = c
+                .simulate_model(&model, 0)
+                .layers
+                .iter()
+                .map(|l| l.s2_wall())
+                .sum();
+            let serve = ServeConfig::new(batch, overlap)
+                .with_requests(requests)
+                .with_rate(rate_mult / chain)
+                .with_seed(7);
+            let piped =
+                c.simulate_model_pipelined(&model, FeatureSubset::Average, &serve);
+            for shard in ShardStrategy::ALL {
+                let cluster = ClusterConfig::new(1, shard);
+                let r = c.simulate_model_cluster(
+                    &model,
+                    FeatureSubset::Average,
+                    &serve,
+                    &cluster,
+                );
+                // layers are the same simulation, field for field
+                assert_eq!(r.layers.len(), piped.layers.len());
+                for (a, b) in r.layers.iter().zip(&piped.layers) {
+                    assert_eq!(a.s2, b.s2, "TileStats must be bit-identical");
+                    assert_eq!(a.s2_wall().to_bits(), b.s2_wall().to_bits());
+                }
+                // the schedule is the single-array pipeline, bit for bit
+                assert_eq!(
+                    r.makespan().to_bits(),
+                    piped.makespan().to_bits(),
+                    "{shard:?} b{batch} ov{overlap}: makespan must match"
+                );
+                assert_eq!(
+                    r.schedule.finish_times,
+                    piped.schedule.finish_times,
+                    "{shard:?}: finish times must match"
+                );
+                assert_eq!(r.latency, piped.latency);
+                assert_eq!(r.arrivals, piped.arrivals);
+                assert_eq!(r.schedule.lanes.len(), 1);
+                assert_eq!(
+                    r.schedule.lanes[0].busy.to_bits(),
+                    piped.schedule.busy.to_bits()
+                );
+                assert_eq!(r.schedule.lanes[0].jobs, piped.schedule.jobs.len());
+                assert_eq!(r.link_bytes(), 0.0);
+                assert_eq!(r.schedule.mandatory_transfer, 0.0);
+                assert!((r.scaleout_efficiency() - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn data_parallel_makespan_monotone_in_array_count() {
+    let c = coord(1, 0xc0de_cafe_0051);
+    let model = zoo::alexnet();
+    for &(batch, overlap) in &[(1usize, 0.0), (2, 0.5), (4, 0.9)] {
+        // closed loop: every request queued at t = 0
+        let serve = ServeConfig::new(batch, overlap).with_requests(24);
+        let mut prev = f64::MAX;
+        for arrays in [1usize, 2, 3, 4, 6, 8, 12, 24, 32] {
+            let r = c.simulate_model_cluster(
+                &model,
+                FeatureSubset::Average,
+                &serve,
+                &ClusterConfig::new(arrays, ShardStrategy::DataParallel),
+            );
+            let m = r.makespan();
+            assert!(
+                m <= prev * (1.0 + 1e-12) + 1e-15,
+                "b{batch} ov{overlap} arrays {arrays}: {m} > {prev}"
+            );
+            assert!(r.link_bytes() == 0.0, "replication moves no bytes");
+            prev = m;
+        }
+    }
+}
+
+#[test]
+fn makespan_floored_by_critical_path_plus_transfers() {
+    let c = coord(1, 0xc0de_cafe_0052);
+    let model = zoo::s2net();
+    let chain: f64 = c
+        .simulate_model(&model, 0)
+        .layers
+        .iter()
+        .map(|l| l.s2_wall())
+        .sum();
+    for shard in ShardStrategy::ALL {
+        for &arrays in &[1usize, 2, 4, 8] {
+            for &batch in &[1usize, 4] {
+                for &rate in &[0.0, 3.0 / chain] {
+                    let serve = ServeConfig::new(batch, 0.6)
+                        .with_requests(8)
+                        .with_rate(rate)
+                        .with_seed(arrays as u64);
+                    let r = c.simulate_model_cluster(
+                        &model,
+                        FeatureSubset::Average,
+                        &serve,
+                        &ClusterConfig::new(arrays, shard),
+                    );
+                    let m = r.makespan();
+                    let floor = r.lower_bound();
+                    let eps = m.abs() * 1e-12 + 1e-15;
+                    assert!(
+                        m >= floor - eps,
+                        "{shard:?} x{arrays} b{batch} rate {rate}: \
+                         makespan {m} beats the floor {floor}"
+                    );
+                    // the pipeline strategy's floor really does carry
+                    // the mandatory transfer term
+                    if shard == ShardStrategy::LayerPipeline && arrays > 1 {
+                        assert!(r.schedule.mandatory_transfer > 0.0);
+                    }
+                    // bookkeeping identities
+                    assert!((r.throughput() * m - 8.0).abs() < 1e-9);
+                    for occ in r.per_array_occupancy() {
+                        assert!((0.0..=1.0 + 1e-12).contains(&occ));
+                    }
+                    assert!(r.scaleout_efficiency() <= 1.0 + 1e-9);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tensor_shard_trades_compute_for_gather() {
+    // sharding a layer 4 ways must strictly reduce per-array compute
+    // time while putting all-gather bytes on the wire
+    let c = coord(1, 0xc0de_cafe_0053);
+    let model = zoo::alexnet();
+    let serve = ServeConfig::new(2, 0.5).with_requests(8);
+    let one = c.simulate_model_cluster(
+        &model,
+        FeatureSubset::Average,
+        &serve,
+        &ClusterConfig::new(1, ShardStrategy::TensorShard),
+    );
+    let four = c.simulate_model_cluster(
+        &model,
+        FeatureSubset::Average,
+        &serve,
+        &ClusterConfig::new(4, ShardStrategy::TensorShard),
+    );
+    assert!(four.link_bytes() > 0.0);
+    assert!(four.link_energy_pj() > 0.0);
+    assert!(
+        four.makespan() < one.makespan(),
+        "4-way shard should win at these link constants: {} vs {}",
+        four.makespan(),
+        one.makespan()
+    );
+    // but never past perfect scaling
+    assert!(four.scaleout_efficiency() <= 1.0 + 1e-12);
+}
+
+#[test]
+fn cluster_axis_sweep_runs_end_to_end_with_resume() {
+    // the acceptance path: an arrays/shard sweep grid streamed to a
+    // store, killed (torn tail), resumed — bit-identical records, no
+    // re-execution of recovered points
+    let spec = "models=s2net;scales=8;effort=quick;batch=2;overlap=0.5;\
+                arrays=1,2;shard=all;seed=3232382085";
+    let grid = Grid::from_spec(spec).unwrap();
+    let plan = grid.plan();
+    assert_eq!(plan.len(), 6);
+
+    let path = std::env::temp_dir().join(format!(
+        "s2cluster-sweep-{}.jsonl",
+        std::process::id()
+    ));
+    let mut store = Store::open(&path, false).unwrap();
+    let reference = Runner::new().run(&plan, &mut store);
+    assert_eq!(reference.ran, 6);
+    drop(store);
+
+    // cluster metrics present and consistent across the axes
+    for rec in reference.records() {
+        assert!(rec.has_cluster_metrics());
+        assert!(rec.scaleout_eff > 0.0 && rec.scaleout_eff <= 1.0 + 1e-12);
+        if rec.job.arrays == 1 {
+            assert!((rec.scaleout_eff - 1.0).abs() < 1e-12);
+            assert_eq!(rec.link_bytes, 0.0);
+        }
+    }
+    let by_shard = |s: ShardStrategy| {
+        reference
+            .records()
+            .iter()
+            .find(|r| r.job.arrays == 2 && r.job.shard == s)
+            .unwrap()
+    };
+    assert!(by_shard(ShardStrategy::LayerPipeline).link_bytes > 0.0);
+    assert!(by_shard(ShardStrategy::TensorShard).link_bytes > 0.0);
+    assert_eq!(by_shard(ShardStrategy::DataParallel).link_bytes, 0.0);
+
+    // tear the store after 3 complete lines and resume
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 6);
+    let mut partial = lines[..3].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[3][..lines[3].len() / 2]);
+    std::fs::write(&path, &partial).unwrap();
+
+    let mut resumed_store = Store::open(&path, true).unwrap();
+    assert_eq!(resumed_store.recovered, 3);
+    assert_eq!(resumed_store.dropped, 1);
+    let resumed = Runner::new().run(&plan, &mut resumed_store);
+    assert_eq!(resumed.reused, 3);
+    assert_eq!(resumed.ran, 3);
+    assert_eq!(reference.records(), resumed.records());
+    drop(resumed_store);
+    std::fs::remove_file(&path).ok();
+}

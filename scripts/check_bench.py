@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Validate the BENCH_*.json files the bench targets emit.
+
+CI's non-blocking bench-smoke job runs every bench target in quick mode
+(BENCH_QUICK=1) and then calls this script on the resulting JSONs. The
+check fails ONLY on malformed documents or missing metric keys — never
+on the measured values themselves: timings in CI are noisy, and perf
+*gating* is deferred until a recorded trajectory exists to gate against.
+
+Checked per file (the `util::bench::Bench::to_json` schema):
+  * top level is an object with `benches` and `metrics` objects;
+  * every bench entry carries numeric `mean_ns`/`p50_ns`/`min_ns`/
+    `std_dev_ns`/`iters`, with `mean_ns` and `iters` positive and
+    `min_ns <= mean_ns`;
+  * every metric entry carries a finite numeric `value` and a string
+    `unit`;
+  * known files additionally carry their headline metric keys (by
+    prefix, since some names are parameterized) — see REQUIRED below.
+
+Usage: python3 scripts/check_bench.py [BENCH_foo.json ...]
+With no arguments, checks every BENCH_*.json in the current directory.
+Exits nonzero listing every violation.
+"""
+
+import glob
+import json
+import math
+import os
+import sys
+
+BENCH_FIELDS = ("mean_ns", "p50_ns", "min_ns", "std_dev_ns", "iters")
+
+# headline metric-name prefixes each known file must carry; a bench
+# binary that silently stops reporting its key metric fails the smoke
+# check even though it still times something
+REQUIRED = {
+    "BENCH_sim.json": ["sim/event-vs-sweep speedup"],
+    "BENCH_serve.json": ["model/pipeline-gain", "model/throughput-b1"],
+    "BENCH_cluster.json": [
+        "model/scaleout-eff-data-n4",
+        "model/scaleout-eff-pipeline-n4",
+        "model/scaleout-eff-tensor-n4",
+        "model/link-traffic-tensor-n4",
+    ],
+    "BENCH_sweep.json": ["sweep/jobs"],
+}
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_file(path):
+    errors = []
+    err = lambda msg: errors.append(f"{path}: {msg}")
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable/malformed JSON ({e})"]
+
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    benches = doc.get("benches")
+    metrics = doc.get("metrics")
+    if not isinstance(benches, dict):
+        err("missing/invalid `benches` object")
+        benches = {}
+    if not isinstance(metrics, dict):
+        err("missing/invalid `metrics` object")
+        metrics = {}
+    if not benches and not metrics:
+        err("carries neither timings nor metrics")
+
+    for name, b in benches.items():
+        if not isinstance(b, dict):
+            err(f"bench `{name}` is not an object")
+            continue
+        for field in BENCH_FIELDS:
+            if not is_num(b.get(field)):
+                err(f"bench `{name}` missing numeric `{field}`")
+        if is_num(b.get("mean_ns")) and b["mean_ns"] <= 0:
+            err(f"bench `{name}` has non-positive mean_ns")
+        if is_num(b.get("iters")) and b["iters"] < 1:
+            err(f"bench `{name}` has iters < 1")
+        if (
+            is_num(b.get("min_ns"))
+            and is_num(b.get("mean_ns"))
+            and b["min_ns"] > b["mean_ns"]
+        ):
+            err(f"bench `{name}` has min_ns > mean_ns")
+
+    for name, m in metrics.items():
+        if not isinstance(m, dict):
+            err(f"metric `{name}` is not an object")
+            continue
+        v = m.get("value")
+        if not is_num(v) or not math.isfinite(v):
+            err(f"metric `{name}` missing finite numeric `value`")
+        if not isinstance(m.get("unit"), str):
+            err(f"metric `{name}` missing string `unit`")
+
+    for prefix in REQUIRED.get(os.path.basename(path), []):
+        if not any(name.startswith(prefix) for name in metrics):
+            err(f"missing required metric `{prefix}*`")
+
+    return errors
+
+
+def main(argv):
+    paths = argv[1:] or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failures = []
+    for path in paths:
+        errs = check_file(path)
+        if errs:
+            failures.extend(errs)
+        else:
+            print(f"check_bench: {path} OK")
+    for msg in failures:
+        print(f"check_bench: FAIL {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

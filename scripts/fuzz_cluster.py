@@ -1,0 +1,277 @@
+#!/usr/bin/env python3
+"""Line-for-line Python transcription of rust/src/cluster/schedule.rs
+(`data_parallel`, the chain case of `layer_pipeline`, `tensor_shard`)
+and rust/src/cluster/shard.rs (`balanced_stages`, the link model),
+fuzzed against the invariants `rust/tests/cluster_equivalence.rs`
+enforces in CI:
+
+  * every strategy at arrays = 1 is EXACTLY the single-array pipeline
+    (same makespan / finish times / busy — same float ops, same bits);
+  * DataParallel makespan is monotone non-increasing in the array count
+    under closed-loop load (every request queued at t = 0);
+  * per-strategy makespan >= critical path + mandatory transfer time
+    (TensorShard's gather rides inside its effective durations);
+  * per-replica/stage busy never exceeds the cluster makespan; every
+    request's completion respects its own chain + transfers.
+
+The single-array scheduler transcription is imported from
+scripts/fuzz_serve_pipeline.py (kept in sync with serve/pipeline.rs).
+Run `python3 scripts/fuzz_cluster.py`; exits nonzero with the offending
+configuration on any violation. Keep this file in sync with
+rust/src/cluster/ when touching scheduler semantics (see
+.claude/skills/verify/SKILL.md).
+"""
+
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from fuzz_serve_pipeline import build, critical_path_chain, topo_chain  # noqa: E402
+
+LINK_BYTES_PER_S = 25.0e9
+
+
+def link_seconds(b):
+    return b / LINK_BYTES_PER_S
+
+
+def chain_build(durations, arrivals, batch, overlap):
+    n = len(durations)
+    topo, deps = topo_chain(n)
+    return build(n, deps, topo, durations, arrivals, batch, overlap, [n - 1])
+
+
+def balanced_stages(durations, n):
+    """Transcription of shard::balanced_stages."""
+    ln = len(durations)
+    stages = min(max(n, 1), max(ln, 1))
+    if ln == 0:
+        return [0]
+    total = 0.0
+    for d in durations:
+        total = total + d
+    longest = 0.0
+    for d in durations:
+        longest = max(longest, d)
+
+    def cut(cap):
+        ends = []
+        acc = 0.0
+        for i, d in enumerate(durations):
+            if acc > 0.0 and acc + d > cap:
+                ends.append(i)
+                acc = 0.0
+            acc += d
+        ends.append(ln)
+        return ends
+
+    lo, hi = longest, total
+    for _ in range(64):
+        mid = 0.5 * (lo + hi)
+        if len(cut(mid)) <= stages:
+            hi = mid
+        else:
+            lo = mid
+    ends = cut(hi)
+    while len(ends) > stages:
+        last = ends.pop()
+        ends[-1] = last
+    return ends
+
+
+def data_parallel(durations, arrivals, batch, overlap, arrays):
+    """Transcription of schedule::data_parallel (chain DAG)."""
+    arrays = max(arrays, 1)
+    member = [[] for _ in range(arrays)]
+    for i in range(len(arrivals)):
+        member[i % arrays].append(i)
+    lanes = []
+    finish_times = [0.0] * len(arrivals)
+    makespan = 0.0
+    for requests in member:
+        sub = [arrivals[i] for i in requests]
+        jobs, ft, m, busy = chain_build(durations, sub, batch, overlap)
+        for slot, i in enumerate(requests):
+            finish_times[i] = ft[slot]
+        makespan = max(makespan, m)
+        lanes.append((busy, len(jobs)))
+    lower = max((a + critical_path_chain(durations) for a in arrivals), default=0.0)
+    return lanes, finish_times, makespan, 0.0, lower
+
+
+def layer_pipeline(durations, out_bytes, arrivals, batch, overlap, arrays):
+    """Transcription of schedule::layer_pipeline for a chain DAG (the
+    zoo topology): each stage is a contiguous sub-chain, and the only
+    edge into stage s is from the last node of stage s-1."""
+    arrays = max(arrays, 1)
+    ends = balanced_stages(durations, arrays)
+    if len(ends) == 1:
+        jobs, ft, m, busy = chain_build(durations, arrivals, batch, overlap)
+        lanes = [(0.0, 0)] * arrays
+        lanes[0] = (busy, len(jobs))
+        lower = max(
+            (a + critical_path_chain(durations) for a in arrivals), default=0.0
+        )
+        return lanes, ft, m, 0.0, lower
+    lanes = [(0.0, 0)] * arrays
+    makespan = 0.0
+    mandatory = 0.0
+    stage_arrivals = list(arrivals)
+    finish_times = list(arrivals)
+    lo = 0
+    for s, hi in enumerate(ends):
+        if s > 0:
+            moved = out_bytes[lo - 1]  # chain: one boundary producer
+            t = link_seconds(moved)
+            mandatory += t
+            stage_arrivals = [f + t for f in finish_times]
+        # build() requires a sorted arrival timeline; downstream stages
+        # must inherit sortedness from the finish-time ordering (the
+        # Rust side debug_asserts the same property)
+        assert all(
+            a <= b for a, b in zip(stage_arrivals, stage_arrivals[1:])
+        ), (s, stage_arrivals)
+        sub_durs = durations[lo:hi]
+        jobs, ft, m, busy = chain_build(sub_durs, stage_arrivals, batch, overlap)
+        lanes[s] = (busy, len(jobs))
+        makespan = max(makespan, m)
+        finish_times = ft
+        lo = hi
+    lower = max(
+        (a + critical_path_chain(durations) + mandatory for a in arrivals),
+        default=0.0,
+    )
+    return lanes, finish_times, makespan, mandatory, lower
+
+
+def tensor_shard(durations, tiles, out_bytes, arrivals, batch, overlap, arrays):
+    """Transcription of schedule::tensor_shard (chain DAG)."""
+    arrays = max(arrays, 1)
+    n = float(arrays)
+    mandatory = 0.0
+    d_sched = []
+    for d, t, b in zip(durations, tiles, out_bytes):
+        share = 1.0 if t == 0 else (-(-t // arrays)) / t
+        if arrays > 1:
+            gather = link_seconds(b) * (n - 1.0) / n
+        else:
+            gather = 0.0
+        mandatory += gather
+        d_sched.append(d * share + gather)
+    jobs, ft, m, busy = chain_build(d_sched, arrivals, batch, overlap)
+    lanes = [(busy, len(jobs))] * arrays
+    lower = max((a + critical_path_chain(d_sched) for a in arrivals), default=0.0)
+    return lanes, ft, m, mandatory, lower
+
+
+def random_arrivals(rng, r):
+    if rng.random() < 0.4:
+        return [0.0] * r
+    t = 0.0
+    out = [0.0]
+    for _ in range(r - 1):
+        t += rng.uniform(0, 2e-2)
+        out.append(t)
+    return out
+
+
+def main():
+    rng = random.Random(20260727)
+    cases = 0
+
+    # --- arrays=1 degeneracy + lower bounds, all strategies ---
+    for trial in range(6000):
+        length = rng.randint(1, 12)
+        durations = [rng.uniform(1e-6, 1e-2) for _ in range(length)]
+        tiles = [rng.randint(1, 64) for _ in range(length)]
+        out_bytes = [rng.uniform(1e3, 1e7) for _ in range(length)]
+        arrivals = random_arrivals(rng, rng.randint(1, 16))
+        batch = rng.randint(1, 6)
+        overlap = rng.choice([0.0, 0.3, 0.6, 0.95])
+        arrays = rng.randint(1, 10)
+        ctx = (trial, length, batch, overlap, arrays, len(arrivals))
+
+        ref_jobs, ref_ft, ref_m, ref_busy = chain_build(
+            durations, arrivals, batch, overlap
+        )
+        runs = {
+            "data": data_parallel(durations, arrivals, batch, overlap, arrays),
+            "pipeline": layer_pipeline(
+                durations, out_bytes, arrivals, batch, overlap, arrays
+            ),
+            "tensor": tensor_shard(
+                durations, tiles, out_bytes, arrivals, batch, overlap, arrays
+            ),
+        }
+        for tag, (lanes, ft, m, mandatory, lower) in runs.items():
+            eps = abs(m) * 1e-12 + 1e-15
+            assert m >= lower - eps, (ctx, tag, m, lower)
+            assert len(lanes) == arrays, (ctx, tag)
+            for busy, _jobs in lanes:
+                assert busy <= m + 1e-12, (ctx, tag, busy, m)
+            assert len(ft) == len(arrivals), (ctx, tag)
+        # exact single-array degeneracy (same float ops, same values)
+        one = {
+            "data": data_parallel(durations, arrivals, batch, overlap, 1),
+            "pipeline": layer_pipeline(
+                durations, out_bytes, arrivals, batch, overlap, 1
+            ),
+            "tensor": tensor_shard(
+                durations, tiles, out_bytes, arrivals, batch, overlap, 1
+            ),
+        }
+        for tag, (lanes, ft, m, mandatory, _lower) in one.items():
+            assert m == ref_m, (ctx, tag, m, ref_m)
+            assert ft == ref_ft, (ctx, tag)
+            assert lanes[0][0] == ref_busy, (ctx, tag)
+            assert lanes[0][1] == len(ref_jobs), (ctx, tag)
+            assert mandatory == 0.0, (ctx, tag)
+        cases += 1
+
+    # --- DataParallel closed-loop monotonicity in the array count ---
+    for trial in range(3000):
+        length = rng.randint(1, 10)
+        durations = [rng.uniform(1e-6, 1e-2) for _ in range(length)]
+        requests = rng.randint(1, 24)
+        arrivals = [0.0] * requests
+        batch = rng.randint(1, 6)
+        overlap = rng.choice([0.0, 0.4, 0.8, 0.95])
+        prev = float("inf")
+        for arrays in range(1, requests + 3):
+            _, _, m, _, lower = data_parallel(
+                durations, arrivals, batch, overlap, arrays
+            )
+            assert m <= prev + 1e-12, (trial, arrays, batch, overlap, m, prev)
+            assert m >= lower - abs(m) * 1e-12 - 1e-15, (trial, arrays, m, lower)
+            prev = m
+        cases += 1
+
+    # --- pipeline stages respect per-request chain + transfer floors ---
+    for trial in range(2000):
+        length = rng.randint(2, 12)
+        durations = [rng.uniform(1e-5, 1e-2) for _ in range(length)]
+        out_bytes = [rng.uniform(1e4, 1e8) for _ in range(length)]
+        arrivals = random_arrivals(rng, rng.randint(1, 12))
+        arrays = rng.randint(2, 6)
+        _, ft, m, mandatory, lower = layer_pipeline(
+            durations, out_bytes, arrivals, 1, 0.0, arrays
+        )
+        chain = critical_path_chain(durations)
+        for f, a in zip(ft, arrivals):
+            assert f - a >= chain + mandatory - 1e-12, (
+                trial,
+                arrays,
+                f,
+                a,
+                chain,
+                mandatory,
+            )
+        assert m >= max(ft) - 1e-15, (trial, m, max(ft))
+        cases += 1
+
+    print(f"all {cases} cluster fuzz cases satisfy the scale-out invariants")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,13 @@
 # target (plain binaries with harness = false, so --no-run is the
 # build-only mode), a warning-free rustdoc build, and — when the clippy
 # component is installed — a warning-free clippy pass over every target
-# (EXPERIMENTS.md §Docs / §Tier-1).
+# (EXPERIMENTS.md §Docs / §Tier-1). Finally, when python3 is available,
+# the scheduler transcription fuzzes (scripts/fuzz_serve_pipeline.py,
+# scripts/fuzz_cluster.py) re-check the serving and cluster schedule
+# invariants against their Python oracles.
+#
+# CI (.github/workflows/ci.yml) invokes THIS script for its build/test
+# jobs, so the CI gate and the local gate cannot drift.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -25,5 +31,11 @@ if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
 else
     echo "tier1: cargo clippy unavailable in this toolchain; lint pass skipped"
+fi
+if command -v python3 >/dev/null 2>&1; then
+    python3 ../scripts/fuzz_serve_pipeline.py
+    python3 ../scripts/fuzz_cluster.py
+else
+    echo "tier1: python3 unavailable; transcription fuzz oracles skipped"
 fi
 echo "tier1 OK"
