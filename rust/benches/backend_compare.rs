@@ -1,0 +1,76 @@
+//! Bench: the unified backend abstraction (EXPERIMENTS.md §Backends).
+//!
+//! Two things are tracked:
+//! * the *evaluation cost* per backend — the analytic comparators are
+//!   closed-form and must stay orders of magnitude cheaper than the
+//!   event engine (`backend/...-layers` rows), which is what makes
+//!   backend-axis sweeps cheap to add to any grid;
+//! * the *modeled head-to-head trajectory* for AlexNet at the Table V
+//!   working point (32×32 / 1024 multipliers, batch 4, overlap 0.6):
+//!   speedup and on-chip EE vs the naive array, and serving p99 /
+//!   throughput per backend — so `BENCH_backends.json` records how the
+//!   comparison itself evolves across PRs, not just simulator speed.
+//!
+//! `BENCH_QUICK=1` (the `util::bench` quick mode) shrinks everything
+//! for CI smoke runs.
+
+use s2engine::backend;
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::ModelResult;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::report::backends::BACKENDS;
+use s2engine::serve::{ServeConfig, ServeReport};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = s2engine::util::bench::is_quick();
+    let samples = if quick { 1 } else { 4 };
+    let requests = if quick { 16 } else { 64 };
+    let mut b = Bench::new();
+
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(32, 32)).with_samples(samples);
+    let serve = ServeConfig::new(4, 0.6).with_requests(requests);
+
+    for kind in BACKENDS {
+        let be = kind.build(&cfg);
+        // evaluation hot path: per-layer results for the whole model
+        // (the S² rows are tile-memo-warm after the first iteration;
+        // the analytic rows are pure closed-form arithmetic)
+        b.bench(&format!("backend/{}-layers", kind.tag()), || {
+            black_box(backend::layer_results_subset(
+                be.as_ref(),
+                &model,
+                FeatureSubset::Average,
+                cfg.seed,
+            ));
+        });
+
+        // modeled head-to-head trajectory
+        let layers =
+            backend::layer_results_subset(be.as_ref(), &model, FeatureSubset::Average, cfg.seed);
+        let result = ModelResult::new(&model, &cfg, layers.clone());
+        let report =
+            ServeReport::assemble_backend(model.name.clone(), kind.tag(), serve, layers);
+        b.metric(&format!("model/speedup-{}", kind.tag()), result.speedup(), "x");
+        b.metric(
+            &format!("model/onchip-ee-{}", kind.tag()),
+            result.onchip_ee_improvement(),
+            "x",
+        );
+        b.metric(
+            &format!("model/p99-{}-b4", kind.tag()),
+            report.latency.p99 * 1e3,
+            "ms",
+        );
+        b.metric(
+            &format!("model/throughput-{}-b4", kind.tag()),
+            report.throughput(),
+            "img/s",
+        );
+    }
+
+    if let Err(e) = b.write_json("BENCH_backends.json") {
+        eprintln!("failed to write BENCH_backends.json: {e}");
+    }
+}

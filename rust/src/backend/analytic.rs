@@ -1,0 +1,492 @@
+//! Analytic comparator backends: the paper's comparison points lifted
+//! from closed-form cost structs ([`crate::baseline`]) into full
+//! [`LayerResult`]s, so they flow through serving, cluster sharding and
+//! the sweep engine exactly like the event-driven S²Engine results.
+//!
+//! ## Costing
+//!
+//! Each backend evaluates a layer's dense GEMM (`layer.macs()`) through
+//! its existing analytic model — per layer, which is what the serving
+//! schedule needs for per-layer durations. Walls use the shared MAC
+//! clock ([`crate::baseline::wall_seconds`]); with `batch = 1`,
+//! `overlap = 0` and one request, the serving makespan is exactly the
+//! left-fold sum of these per-layer analytic walls
+//! (`rust/tests/backend_equivalence.rs` pins this against the golden
+//! closed forms of `rust/tests/baseline_golden.rs`).
+//!
+//! ## Energy
+//!
+//! [`NaiveBackend`] has a fully concrete energy model
+//! ([`crate::energy::naive_energy`]). The gating/SCNN/SparTen models are
+//! published as *ratios* normalized to an equivalent dense accelerator
+//! (= 1.0); we pin that dense ideal to the naive array's on-chip energy
+//! for the same layer, so every comparator divides by the same
+//! denominator the paper's Table III/V ratios use. Consequence: a
+//! comparator's on-chip energy-efficiency improvement over naive is
+//! exactly `1 / energy_per_dense_mac` — locked by tests below. The
+//! breakdown splits the total into the performed-MAC share
+//! (`mac_ops × E_MAC8`) and an `other` share (indexing / crossbar /
+//! prefix-sum overheads). DRAM traffic compresses only the operands the
+//! design's [`BackendCaps`] say it can compress, and pays the same
+//! buffer-spill re-streaming the naive denominator pays — the caps also
+//! ride along in the [`LayerResult`] so the cluster link model charges
+//! dense wire bytes to designs that cannot compress features.
+//!
+//! ## Sharding granularity
+//!
+//! `tiles_total` — the grain [`crate::cluster::ShardStrategy::TensorShard`]
+//! splits — is the layer's output tile grid on the configured array
+//! geometry (the naive mapping), the natural GEMM sharding granularity
+//! shared by every comparator.
+
+use super::{Backend, BackendCaps};
+use crate::baseline::{gating, naive, scnn, sparten};
+use crate::config::ArrayConfig;
+use crate::coordinator::LayerResult;
+use crate::energy::constants::{E_DRAM_BYTE, E_MAC8};
+use crate::energy::{self, Energy, EnergyBreakdown};
+use crate::models::LayerDesc;
+
+/// Output tile grid of a layer's GEMM on an R×C array — the sharding
+/// granularity every analytic backend reports.
+fn grid_tiles(layer: &LayerDesc, array: &ArrayConfig) -> usize {
+    layer.num_convs().div_ceil(array.rows) * layer.cout.div_ceil(array.cols)
+}
+
+/// DRAM bytes a comparator streams for one layer: dense 8-bit operands,
+/// compressed only where the design exploits that operand's sparsity —
+/// plus buffer-spill re-streaming when the *operand footprint* exceeds
+/// the 2 MB-class buffers (once per overlap copy, bounded by kh·kw).
+/// Deliberately not the naive array's im2col basis: the naive
+/// denominator spills on its per-row window copies (`m·k + weights`,
+/// the no-overlap-reuse arrangement of Section 3.1), which these
+/// designs do not share — SCNN/SparTen/Cnvlutin-class machines keep
+/// proper reuse buffers, so their working set is the operands
+/// themselves. They still re-stream when the operands alone cannot be
+/// resident, which is what keeps a dense comparator from banking a
+/// free total-EE win on genuinely oversized layers.
+fn comparator_dram_bytes(
+    layer: &LayerDesc,
+    feature_density: f64,
+    weight_density: f64,
+    caps: &BackendCaps,
+) -> f64 {
+    let f = layer.input_elems() as f64
+        * if caps.sparse_features { feature_density } else { 1.0 };
+    let w = layer.params() as f64
+        * if caps.sparse_weights { weight_density } else { 1.0 };
+    let cap = crate::config::BufferConfig::NAIVE_DEFAULT.sram_bytes as f64;
+    let spill = ((f + w) / cap).ceil().clamp(1.0, (layer.kh * layer.kw) as f64);
+    f * spill + w
+}
+
+/// Lift a normalized analytic on-chip energy (`e_norm`, dense ideal =
+/// 1.0) into picojoules against the naive array's on-chip energy for
+/// the same layer (see the module docs), with MAC/other breakdown and
+/// DRAM traffic.
+fn lifted_energy(
+    e_norm: f64,
+    mac_ops: u64,
+    naive_cost: &naive::NaiveCost,
+    dram_bytes: f64,
+) -> Energy {
+    let total = e_norm * energy::naive_energy(naive_cost).onchip.onchip_total();
+    let mac_pj = (mac_ops as f64 * E_MAC8).min(total);
+    Energy {
+        onchip: EnergyBreakdown {
+            mac_pj,
+            other_pj: total - mac_pj,
+            ..Default::default()
+        },
+        dram_pj: dram_bytes * E_DRAM_BYTE,
+    }
+}
+
+/// Shared lift pipeline of the normalized comparators (gating / SCNN /
+/// SparTen): per-layer cost triple → naive baseline → caps-driven DRAM
+/// traffic → pinned energy → [`LayerResult`]. One definition, so a
+/// change to the lift (DRAM model, energy pinning, tile granularity)
+/// cannot desynchronise the backends.
+#[allow(clippy::too_many_arguments)]
+fn lift_normalized(
+    backend: &dyn Backend,
+    array: &ArrayConfig,
+    layer: &LayerDesc,
+    feature_density: f64,
+    weight_density: f64,
+    mac_cycles: u64,
+    mac_ops: u64,
+    e_norm: f64,
+) -> LayerResult {
+    let caps = backend.caps();
+    let naive_cost = naive::layer_cost(layer, array);
+    let dram = comparator_dram_bytes(layer, feature_density, weight_density, &caps);
+    let e = lifted_energy(e_norm, mac_ops, &naive_cost, dram);
+    LayerResult::from_analytic(
+        layer,
+        array,
+        caps,
+        mac_cycles,
+        mac_ops,
+        e,
+        naive_cost,
+        feature_density,
+        weight_density,
+        grid_tiles(layer, array),
+    )
+}
+
+/// The dense output-stationary systolic array (TPU-class) — the paper's
+/// 1× reference, now servable/shardable/sweepable like any backend.
+#[derive(Debug, Clone, Copy)]
+pub struct NaiveBackend {
+    pub array: ArrayConfig,
+}
+
+impl NaiveBackend {
+    pub fn new(array: ArrayConfig) -> NaiveBackend {
+        NaiveBackend { array }
+    }
+}
+
+impl Backend for NaiveBackend {
+    fn tag(&self) -> &'static str {
+        "naive"
+    }
+
+    fn name(&self) -> &'static str {
+        "Naive dense systolic array (TPU-class)"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            cycle_accurate: false,
+            sparse_features: false,
+            sparse_weights: false,
+        }
+    }
+
+    fn layer_result(
+        &self,
+        layer: &LayerDesc,
+        feature_density: f64,
+        weight_density: f64,
+        _clustered: bool,
+    ) -> LayerResult {
+        let cost = naive::layer_cost(layer, &self.array);
+        let e = energy::naive_energy(&cost);
+        LayerResult::from_analytic(
+            layer,
+            &self.array,
+            self.caps(),
+            cost.mac_cycles,
+            cost.mac_ops,
+            e,
+            cost,
+            feature_density,
+            weight_density,
+            grid_tiles(layer, &self.array),
+        )
+    }
+}
+
+/// A partial-sparsity design class (Table III): Eyeriss-class gating,
+/// Cnvlutin-class feature skipping, or Cambricon-X-class weight
+/// skipping, per the wrapped [`gating::Exploits`] policy.
+#[derive(Debug, Clone, Copy)]
+pub struct GatingBackend {
+    pub policy: gating::Exploits,
+    pub array: ArrayConfig,
+}
+
+impl GatingBackend {
+    pub fn new(policy: gating::Exploits, array: ArrayConfig) -> GatingBackend {
+        GatingBackend { policy, array }
+    }
+}
+
+impl Backend for GatingBackend {
+    fn tag(&self) -> &'static str {
+        super::BackendKind::Gating(self.policy).tag()
+    }
+
+    fn name(&self) -> &'static str {
+        match self.policy {
+            gating::Exploits::GateFeature => "Eyeriss-class (gate zero features)",
+            gating::Exploits::SkipFeature => "Cnvlutin-class (skip zero features)",
+            gating::Exploits::SkipWeight => "Cambricon-X-class (skip zero weights)",
+            gating::Exploits::SkipBoth => "dual-skip reference",
+            gating::Exploits::None => "dense reference",
+        }
+    }
+
+    fn caps(&self) -> BackendCaps {
+        let (f, w) = match self.policy {
+            gating::Exploits::GateFeature | gating::Exploits::None => (false, false),
+            gating::Exploits::SkipFeature => (true, false),
+            gating::Exploits::SkipWeight => (false, true),
+            gating::Exploits::SkipBoth => (true, true),
+        };
+        BackendCaps {
+            cycle_accurate: false,
+            sparse_features: f,
+            sparse_weights: w,
+        }
+    }
+
+    fn layer_result(
+        &self,
+        layer: &LayerDesc,
+        feature_density: f64,
+        weight_density: f64,
+        _clustered: bool,
+    ) -> LayerResult {
+        let c = gating::cost(layer.macs(), feature_density, weight_density, self.policy);
+        lift_normalized(
+            self,
+            &self.array,
+            layer,
+            feature_density,
+            weight_density,
+            c.mac_cycles,
+            c.mac_ops,
+            c.energy_per_dense_mac,
+        )
+    }
+}
+
+/// The SCNN analytic comparator (Parashar et al., ISCA'17).
+#[derive(Debug, Clone, Copy)]
+pub struct ScnnBackend {
+    pub array: ArrayConfig,
+}
+
+impl ScnnBackend {
+    pub fn new(array: ArrayConfig) -> ScnnBackend {
+        ScnnBackend { array }
+    }
+}
+
+impl Backend for ScnnBackend {
+    fn tag(&self) -> &'static str {
+        "scnn"
+    }
+
+    fn name(&self) -> &'static str {
+        "SCNN (Cartesian-product PEs, analytic)"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            cycle_accurate: false,
+            sparse_features: true,
+            sparse_weights: true,
+        }
+    }
+
+    fn layer_result(
+        &self,
+        layer: &LayerDesc,
+        feature_density: f64,
+        weight_density: f64,
+        _clustered: bool,
+    ) -> LayerResult {
+        let c = scnn::cost(layer.macs(), feature_density, weight_density);
+        lift_normalized(
+            self,
+            &self.array,
+            layer,
+            feature_density,
+            weight_density,
+            c.mac_cycles,
+            c.mac_ops,
+            c.energy_per_dense_mac,
+        )
+    }
+}
+
+/// The SparTen analytic comparator (Gondimalla et al., MICRO'19).
+#[derive(Debug, Clone, Copy)]
+pub struct SparTenBackend {
+    pub array: ArrayConfig,
+}
+
+impl SparTenBackend {
+    pub fn new(array: ArrayConfig) -> SparTenBackend {
+        SparTenBackend { array }
+    }
+}
+
+impl Backend for SparTenBackend {
+    fn tag(&self) -> &'static str {
+        "sparten"
+    }
+
+    fn name(&self) -> &'static str {
+        "SparTen (bit-mask inner joins, analytic)"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            cycle_accurate: false,
+            sparse_features: true,
+            sparse_weights: true,
+        }
+    }
+
+    fn layer_result(
+        &self,
+        layer: &LayerDesc,
+        feature_density: f64,
+        weight_density: f64,
+        _clustered: bool,
+    ) -> LayerResult {
+        let c = sparten::cost(layer.macs(), feature_density, weight_density);
+        lift_normalized(
+            self,
+            &self.array,
+            layer,
+            feature_density,
+            weight_density,
+            c.mac_cycles,
+            c.mac_ops,
+            c.energy_per_dense_mac,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::gating::Exploits;
+
+    fn layer() -> LayerDesc {
+        // M = 100, K = 100, N = 100 -> exactly 1e6 dense MACs
+        LayerDesc::new("t", 10, 10, 100, 1, 1, 100, 1, 0)
+    }
+
+    #[test]
+    fn naive_backend_is_its_own_baseline() {
+        let b = NaiveBackend::new(ArrayConfig::new(16, 16));
+        let r = b.layer_result(&layer(), 0.4, 0.4, true);
+        // wall == naive wall bit-exactly -> speedup is exactly 1
+        assert_eq!(r.wall().to_bits(), r.naive_wall().to_bits());
+        assert_eq!(r.speedup().to_bits(), 1.0f64.to_bits());
+        // and the energy IS the naive energy model
+        assert_eq!(r.energy(), energy::naive_energy(&r.naive));
+        assert_eq!(r.onchip_ee_improvement(), 1.0);
+        assert_eq!(r.s2.dense_macs, 1_000_000);
+        assert_eq!(r.s2.mac_ops, 1_000_000, "nothing is skipped");
+    }
+
+    #[test]
+    fn normalized_comparators_invert_their_energy_ratio() {
+        // the dense-ideal pinning makes on-chip EE improvement exactly
+        // 1 / energy_per_dense_mac for every normalized comparator
+        let l = layer();
+        let array = ArrayConfig::new(16, 16);
+        let (fd, wd) = (0.5, 0.5);
+        let scnn_r = ScnnBackend::new(array).layer_result(&l, fd, wd, true);
+        let e = scnn::cost(l.macs(), fd, wd).energy_per_dense_mac;
+        assert!((scnn_r.onchip_ee_improvement() - 1.0 / e).abs() < 1e-12);
+        let sp_r = SparTenBackend::new(array).layer_result(&l, fd, wd, true);
+        let e = sparten::cost(l.macs(), fd, wd).energy_per_dense_mac;
+        assert!((sp_r.onchip_ee_improvement() - 1.0 / e).abs() < 1e-12);
+        let g_r = GatingBackend::new(Exploits::SkipFeature, array)
+            .layer_result(&l, fd, wd, true);
+        let e = gating::cost(l.macs(), fd, wd, Exploits::SkipFeature).energy_per_dense_mac;
+        assert!((g_r.onchip_ee_improvement() - 1.0 / e).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_walls_survive_the_lift() {
+        // the baseline_golden closed forms, through the backend path:
+        // scnn at 1e6 MACs, d=0.5 -> 310 cycles; sparten -> 266
+        let l = layer();
+        let array = ArrayConfig::new(16, 16);
+        let s = ScnnBackend::new(array).layer_result(&l, 0.5, 0.5, true);
+        assert_eq!(s.analytic.as_ref().unwrap().mac_cycles, 310);
+        assert_eq!(s.s2.mac_ops, 250_000);
+        assert_eq!(
+            s.wall().to_bits(),
+            crate::baseline::wall_seconds(310).to_bits()
+        );
+        let p = SparTenBackend::new(array).layer_result(&l, 0.5, 0.5, true);
+        assert_eq!(p.analytic.as_ref().unwrap().mac_cycles, 266);
+        // gating golden: 1_024_000 MACs, skip-feature at df=0.5 -> 500
+        let gl = LayerDesc::new("g", 32, 32, 100, 1, 1, 10, 1, 0);
+        assert_eq!(gl.macs(), 1_024_000);
+        let g = GatingBackend::new(Exploits::SkipFeature, array)
+            .layer_result(&gl, 0.5, 0.25, true);
+        assert_eq!(g.analytic.as_ref().unwrap().mac_cycles, 500);
+    }
+
+    #[test]
+    fn dram_compression_follows_caps() {
+        let l = layer();
+        let array = ArrayConfig::new(16, 16);
+        let dense = l.input_elems() as f64 + l.params() as f64;
+        // gate-only compresses nothing
+        let gate = GatingBackend::new(Exploits::GateFeature, array)
+            .layer_result(&l, 0.5, 0.5, true);
+        assert!((gate.energy().dram_pj - dense * E_DRAM_BYTE).abs() < 1e-6);
+        // skip-feature compresses features only
+        let skipf = GatingBackend::new(Exploits::SkipFeature, array)
+            .layer_result(&l, 0.5, 0.5, true);
+        let expect = l.input_elems() as f64 * 0.5 + l.params() as f64;
+        assert!((skipf.energy().dram_pj - expect * E_DRAM_BYTE).abs() < 1e-6);
+        // dual-sparse designs compress both
+        let scnn_r = ScnnBackend::new(array).layer_result(&l, 0.5, 0.5, true);
+        let expect = (l.input_elems() as f64 * 0.5 + l.params() as f64 * 0.5) * E_DRAM_BYTE;
+        assert!((scnn_r.energy().dram_pj - expect).abs() < 1e-6);
+        assert!(scnn_r.energy().dram_pj < gate.energy().dram_pj);
+    }
+
+    #[test]
+    fn comparator_dram_spills_like_the_naive_denominator() {
+        // a VGG-conv1_2-class layer (dense footprint >> 2 MB): a dense
+        // design re-streams features just like the naive array — no
+        // total-EE advantage from skipping the spill accounting
+        let big = LayerDesc::new("big", 224, 224, 64, 3, 3, 64, 1, 1);
+        let array = ArrayConfig::new(16, 16);
+        let gate = GatingBackend::new(Exploits::GateFeature, array)
+            .layer_result(&big, 0.4, 0.4, true);
+        let dense = big.input_elems() as f64 + big.params() as f64;
+        assert!(
+            gate.energy().dram_pj > dense * E_DRAM_BYTE,
+            "spilling layer must be charged the re-stream"
+        );
+        // a compressing design has the smaller footprint and spills less
+        let scnn_r = ScnnBackend::new(array).layer_result(&big, 0.4, 0.4, true);
+        assert!(scnn_r.energy().dram_pj < gate.energy().dram_pj);
+    }
+
+    #[test]
+    fn speedup_ordering_matches_table_iii_through_the_trait() {
+        // through full LayerResults: dual-sparse > single-skip > gate ==
+        // naive-ish on speed, at matched PE counts (16x16 = 256 muls vs
+        // the analytic models' 1024 -> absolute speedups differ, but the
+        // ordering is what Table III asserts)
+        let l = layer();
+        let array = ArrayConfig::new(16, 16);
+        let (fd, wd) = (0.4, 0.35);
+        let wall = |b: &dyn Backend| b.layer_result(&l, fd, wd, true).wall();
+        let gate = wall(&GatingBackend::new(Exploits::GateFeature, array));
+        let skipf = wall(&GatingBackend::new(Exploits::SkipFeature, array));
+        let scnn_w = wall(&ScnnBackend::new(array));
+        let sparten_w = wall(&SparTenBackend::new(array));
+        assert!(skipf < gate);
+        assert!(scnn_w < skipf);
+        assert!(sparten_w < scnn_w, "SparTen is the fastest comparator");
+    }
+
+    #[test]
+    fn tiles_cover_the_gemm_grid() {
+        let l = layer(); // M = 100, N = 100
+        let b = NaiveBackend::new(ArrayConfig::new(16, 16));
+        let r = b.layer_result(&l, 0.5, 0.5, true);
+        assert_eq!(r.tiles_total, 7 * 7);
+        assert_eq!(r.tiles_sampled, r.tiles_total, "closed form: no sampling");
+        assert_eq!(r.out_elems, 100 * 100);
+    }
+}

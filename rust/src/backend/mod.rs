@@ -1,0 +1,319 @@
+//! Unified accelerator-backend abstraction.
+//!
+//! The paper's entire evaluation is *comparative*: S²Engine against the
+//! naïve TPU-class dense array, the partial-gating designs of Table III
+//! (Eyeriss / Cnvlutin / Cambricon-X classes), SCNN (Parashar et al.,
+//! ISCA'17) and SparTen (Gondimalla et al., MICRO'19). Historically this
+//! repo modeled those comparison points as four heterogeneous analytic
+//! cost structs consumed only by static report tables, while everything
+//! built on top — pipelined serving ([`crate::serve`]), multi-array
+//! sharding ([`crate::cluster`]), the declarative sweep engine
+//! ([`crate::sweep`]) — was hard-wired to the S²Engine
+//! [`crate::coordinator::Coordinator`].
+//!
+//! The [`Backend`] trait unifies them: every engine produces the same
+//! [`LayerResult`] currency (walls, energy breakdown, `out_elems`), so
+//! the whole downstream stack — serving schedules, cluster sharding,
+//! sweep grids, report tables — works for *any* backend. "What is the
+//! tail latency of an SCNN cluster vs an S²Engine cluster?" is now one
+//! [`crate::sweep::Grid`] declaration away, and a new comparator is a
+//! one-file drop-in: implement [`Backend`], add a [`BackendKind`] tag.
+//!
+//! Two families implement the trait today:
+//!
+//! * [`S2Backend`] — wraps the [`crate::coordinator::Coordinator`]'s
+//!   cycle-accurate event simulation. **Bit-identical** to the classic
+//!   direct path (`rust/tests/backend_equivalence.rs` locks this): the
+//!   coordinator's own model-level helpers delegate through this
+//!   backend, so there is exactly one implementation of the per-layer
+//!   density derivation.
+//! * the analytic comparators in [`analytic`] — [`NaiveBackend`],
+//!   [`GatingBackend`], [`ScnnBackend`], [`SparTenBackend`] — which lift
+//!   the closed-form cost models of [`crate::baseline`] into full
+//!   [`LayerResult`]s.
+//!
+//! Entry points: [`BackendKind`] (the value-type axis the sweep grid,
+//! store and CLI speak), [`layer_results_subset`] /
+//! [`layer_results_synthetic`] (the model-level evaluation helpers every
+//! consumer shares), and the `--backend` flag on the `serve`, `cluster`
+//! and `sweep` subcommands plus `report backends`.
+
+pub mod analytic;
+pub mod s2;
+
+pub use analytic::{GatingBackend, NaiveBackend, ScnnBackend, SparTenBackend};
+pub use s2::S2Backend;
+
+use crate::baseline::gating::Exploits;
+use crate::config::SimConfig;
+use crate::coordinator::LayerResult;
+use crate::models::{FeatureSubset, LayerDesc, Model};
+
+/// What a backend can do — the Table III classification, as data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendCaps {
+    /// Cycle-accurate event simulation (vs closed-form analytic model)?
+    pub cycle_accurate: bool,
+    /// Skips work / compresses traffic for zero *features*?
+    pub sparse_features: bool,
+    /// Skips work / compresses traffic for zero *weights*?
+    pub sparse_weights: bool,
+}
+
+/// One accelerator model: anything that can evaluate a conv layer at
+/// given operand densities into the repo's common [`LayerResult`]
+/// currency. Implementations must be pure functions of their
+/// configuration plus the arguments (the sweep store's resume soundness
+/// depends on it).
+pub trait Backend: Send + Sync {
+    /// Canonical short tag — the sweep-key form, store form, CLI value
+    /// and table label all go through this (one-table discipline, like
+    /// [`crate::cluster::ShardStrategy::tag`]).
+    fn tag(&self) -> &'static str;
+
+    /// Human-readable display name for report headers.
+    fn name(&self) -> &'static str;
+
+    /// Capability flags (Table III's classification).
+    fn caps(&self) -> BackendCaps;
+
+    /// Evaluate one layer at the given feature/weight densities.
+    /// `clustered` selects clustered non-zero patterns where the backend
+    /// models them (the event engine does; the analytic models are
+    /// pattern-free and ignore it).
+    fn layer_result(
+        &self,
+        layer: &LayerDesc,
+        feature_density: f64,
+        weight_density: f64,
+        clustered: bool,
+    ) -> LayerResult;
+}
+
+/// Per-layer results of a whole model under a feature subset at its
+/// Table II densities, with the same deterministic per-layer density
+/// jitter the coordinator has always applied (seeded by `(seed, layer
+/// index)`). This is THE model-level evaluation loop: the coordinator's
+/// `layer_results_subset` delegates here through [`S2Backend`], so every
+/// backend sees exactly the same per-layer densities.
+pub fn layer_results_subset(
+    backend: &dyn Backend,
+    model: &Model,
+    subset: FeatureSubset,
+    seed: u64,
+) -> Vec<LayerResult> {
+    let base_density = subset.density(model);
+    model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, layer)| {
+            // mild per-layer variation around the subset density,
+            // deterministic in (seed, layer index)
+            let jitter = if model.feature_density_sigma > 0.0 {
+                let x = ((seed ^ (i as u64 * 0x9e37)) % 1000) as f64 / 1000.0;
+                (x - 0.5) * model.feature_density_sigma * 0.5
+            } else {
+                0.0
+            };
+            let fd = (base_density + jitter).clamp(0.02, 0.98);
+            backend.layer_result(layer, fd, model.weight_density, true)
+        })
+        .collect()
+}
+
+/// Per-layer results at designated uniform densities (the synthetic
+/// sensitivity workloads).
+pub fn layer_results_synthetic(
+    backend: &dyn Backend,
+    model: &Model,
+    feature_density: f64,
+    weight_density: f64,
+) -> Vec<LayerResult> {
+    model
+        .layers
+        .iter()
+        .map(|layer| backend.layer_result(layer, feature_density, weight_density, false))
+        .collect()
+}
+
+/// The backend *axis*: a copyable value naming one of the registered
+/// backends, used by [`crate::sweep::Job`] (canonical key, JSON store
+/// form), [`crate::sweep::Grid`] (the `backend=` axis) and the CLI's
+/// `--backend` flag. [`BackendKind::build`] instantiates the trait
+/// object for a simulation configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// The cycle-accurate S²Engine event simulation (the default —
+    /// elided from canonical sweep keys, so pre-backend stores resume).
+    #[default]
+    S2,
+    /// Dense output-stationary systolic array (TPU-class, the paper's
+    /// 1× reference).
+    Naive,
+    /// Partial-sparsity design class exploiting one operand
+    /// ([`crate::baseline::gating::Exploits`]): Eyeriss-class gating,
+    /// Cnvlutin-class feature skipping, Cambricon-X-class weight
+    /// skipping.
+    Gating(Exploits),
+    /// SCNN analytic comparator (Cartesian-product PEs).
+    Scnn,
+    /// SparTen analytic comparator (bit-mask inner joins).
+    SparTen,
+}
+
+impl BackendKind {
+    /// Every selectable backend, in reporting order ("all" in a grid
+    /// spec). The degenerate gating rows (`dense`, `skipb`) are
+    /// reference points of the analytic model, not accelerator designs,
+    /// and are reachable only by their explicit tags.
+    pub const ALL: [BackendKind; 7] = [
+        BackendKind::S2,
+        BackendKind::Naive,
+        BackendKind::Gating(Exploits::GateFeature),
+        BackendKind::Gating(Exploits::SkipFeature),
+        BackendKind::Gating(Exploits::SkipWeight),
+        BackendKind::Scnn,
+        BackendKind::SparTen,
+    ];
+
+    /// The canonical short tag (sweep key / store / CLI / labels).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            BackendKind::S2 => "s2",
+            BackendKind::Naive => "naive",
+            BackendKind::Gating(Exploits::GateFeature) => "gate",
+            BackendKind::Gating(Exploits::SkipFeature) => "skipf",
+            BackendKind::Gating(Exploits::SkipWeight) => "skipw",
+            BackendKind::Gating(Exploits::SkipBoth) => "skipb",
+            BackendKind::Gating(Exploits::None) => "dense",
+            BackendKind::Scnn => "scnn",
+            BackendKind::SparTen => "sparten",
+        }
+    }
+
+    /// Parse a tag (CLI / grid spec / store form).
+    pub fn from_tag(tag: &str) -> Option<BackendKind> {
+        match tag {
+            "s2" | "s2engine" => Some(BackendKind::S2),
+            "naive" | "tpu" => Some(BackendKind::Naive),
+            "gate" | "eyeriss" => Some(BackendKind::Gating(Exploits::GateFeature)),
+            "skipf" | "cnvlutin" => Some(BackendKind::Gating(Exploits::SkipFeature)),
+            "skipw" | "cambricon" => Some(BackendKind::Gating(Exploits::SkipWeight)),
+            "skipb" => Some(BackendKind::Gating(Exploits::SkipBoth)),
+            "dense" => Some(BackendKind::Gating(Exploits::None)),
+            "scnn" => Some(BackendKind::Scnn),
+            "sparten" => Some(BackendKind::SparTen),
+            _ => None,
+        }
+    }
+
+    /// Is this the default (S²Engine) backend? Default jobs keep their
+    /// historical canonical form — and therefore their sweep keys — so
+    /// stores written before the backend axis existed still resume.
+    pub fn is_default(&self) -> bool {
+        *self == BackendKind::S2
+    }
+
+    /// The array scale that puts this backend at PE-count parity with
+    /// the others, or `None` when it follows the configured array. The
+    /// gating/SCNN/SparTen models are fixed 1024-multiplier machines,
+    /// so a fair head-to-head evaluates everything at 32×32 (Table V's
+    /// normalization) — the `report backends` study and the
+    /// `--backend`-re-based serving/cluster summaries use this, and the
+    /// CLI warns when a 1024-multiplier comparator runs off-parity.
+    pub fn parity_scale(&self) -> Option<usize> {
+        match self {
+            BackendKind::S2 | BackendKind::Naive => None,
+            _ => Some(32),
+        }
+    }
+
+    /// Instantiate the backend for a simulation configuration. The S²
+    /// backend consumes the whole [`SimConfig`]; the analytic models
+    /// take the array geometry (their naive-baseline costing and tile
+    /// sharding granularity).
+    pub fn build(&self, cfg: &SimConfig) -> Box<dyn Backend> {
+        match self {
+            BackendKind::S2 => Box::new(S2Backend::new(
+                crate::coordinator::Coordinator::new(cfg.clone()),
+            )),
+            BackendKind::Naive => Box::new(NaiveBackend::new(cfg.array)),
+            BackendKind::Gating(policy) => Box::new(GatingBackend::new(*policy, cfg.array)),
+            BackendKind::Scnn => Box::new(ScnnBackend::new(cfg.array)),
+            BackendKind::SparTen => Box::new(SparTenBackend::new(cfg.array)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrayConfig;
+
+    #[test]
+    fn tags_roundtrip_and_stay_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::from_tag(kind.tag()), Some(kind));
+            assert!(seen.insert(kind.tag()), "duplicate tag {}", kind.tag());
+        }
+        // the reference-row tags parse too, and stay distinct
+        for tag in ["skipb", "dense"] {
+            let kind = BackendKind::from_tag(tag).unwrap();
+            assert_eq!(kind.tag(), tag);
+            assert!(seen.insert(tag));
+        }
+        assert_eq!(BackendKind::from_tag("warp-drive"), None);
+        assert_eq!(BackendKind::default(), BackendKind::S2);
+        assert!(BackendKind::S2.is_default());
+        assert!(!BackendKind::Scnn.is_default());
+    }
+
+    #[test]
+    fn build_produces_matching_trait_objects() {
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+        for kind in BackendKind::ALL {
+            let backend = kind.build(&cfg);
+            assert_eq!(backend.tag(), kind.tag(), "tag must survive build");
+            assert_eq!(
+                backend.caps().cycle_accurate,
+                kind == BackendKind::S2,
+                "only the S² backend is cycle-accurate"
+            );
+        }
+    }
+
+    #[test]
+    fn subset_loop_matches_coordinator_jitter_formula() {
+        // the per-layer density derivation moved here from the
+        // coordinator; this locks the formula against an inline replica
+        // so the S² path cannot silently drift
+        let model = crate::models::zoo::alexnet();
+        let seed = 0xbac_c0de;
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1).with_seed(seed);
+        let backend = BackendKind::Naive.build(&cfg);
+        let rs = layer_results_subset(backend.as_ref(), &model, FeatureSubset::Average, seed);
+        let base = FeatureSubset::Average.density(&model);
+        for (i, r) in rs.iter().enumerate() {
+            let x = ((seed ^ (i as u64 * 0x9e37)) % 1000) as f64 / 1000.0;
+            let jitter = (x - 0.5) * model.feature_density_sigma * 0.5;
+            let fd = (base + jitter).clamp(0.02, 0.98);
+            assert_eq!(r.feature_density.to_bits(), fd.to_bits());
+            assert_eq!(r.weight_density.to_bits(), model.weight_density.to_bits());
+        }
+    }
+
+    #[test]
+    fn synthetic_loop_applies_uniform_densities() {
+        let model = crate::models::zoo::s2net();
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+        let backend = BackendKind::Scnn.build(&cfg);
+        let rs = layer_results_synthetic(backend.as_ref(), &model, 0.3, 0.6);
+        assert_eq!(rs.len(), model.layers.len());
+        for r in &rs {
+            assert_eq!(r.feature_density, 0.3);
+            assert_eq!(r.weight_density, 0.6);
+        }
+    }
+}

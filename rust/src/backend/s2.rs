@@ -1,0 +1,78 @@
+//! The S²Engine backend: the cycle-accurate event simulation behind the
+//! [`crate::backend::Backend`] trait.
+//!
+//! This is a thin wrapper over [`Coordinator::simulate_layer`] — the
+//! tile-sampled, memoized event-engine path the whole repo has always
+//! used. It must stay **bit-identical** to calling the coordinator
+//! directly: the coordinator's own model-level helpers
+//! (`layer_results_subset` / `layer_results_synthetic`) delegate through
+//! this backend, and `rust/tests/backend_equivalence.rs` locks the
+//! serve/cluster/sweep paths against the pre-trait results.
+
+use super::{Backend, BackendCaps};
+use crate::coordinator::{Coordinator, LayerResult};
+use crate::models::LayerDesc;
+
+/// The cycle-accurate S²Engine array (the repo's default backend).
+#[derive(Debug, Clone)]
+pub struct S2Backend {
+    pub coord: Coordinator,
+}
+
+impl S2Backend {
+    pub fn new(coord: Coordinator) -> S2Backend {
+        S2Backend { coord }
+    }
+}
+
+impl Backend for S2Backend {
+    fn tag(&self) -> &'static str {
+        "s2"
+    }
+
+    fn name(&self) -> &'static str {
+        "S²Engine (event-driven simulation)"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            cycle_accurate: true,
+            sparse_features: true,
+            sparse_weights: true,
+        }
+    }
+
+    fn layer_result(
+        &self,
+        layer: &LayerDesc,
+        feature_density: f64,
+        weight_density: f64,
+        clustered: bool,
+    ) -> LayerResult {
+        self.coord
+            .simulate_layer(layer, feature_density, weight_density, clustered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Backend;
+    use crate::config::{ArrayConfig, SimConfig};
+
+    #[test]
+    fn wraps_simulate_layer_bit_identically() {
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+            .with_samples(2)
+            .with_seed(0xc0de_cafe_0060);
+        let coord = Coordinator::new(cfg);
+        let layer = crate::models::zoo::alexnet().layers[2].clone();
+        let direct = coord.simulate_layer(&layer, 0.4, 0.35, true);
+        let via = S2Backend::new(coord.clone()).layer_result(&layer, 0.4, 0.35, true);
+        assert_eq!(direct.s2, via.s2, "TileStats must be bit-identical");
+        assert_eq!(direct.naive, via.naive);
+        assert_eq!(direct.wall().to_bits(), via.wall().to_bits());
+        assert_eq!(direct.energy(), via.energy());
+        assert!(via.analytic.is_none(), "the S² path is not analytic");
+    }
+}

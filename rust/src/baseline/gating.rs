@@ -16,8 +16,6 @@
 //! All are normalized to the same 1024-multiplier dense baseline used by
 //! the SCNN/SparTen models.
 
-use crate::MAC_FREQ_MHZ;
-
 pub const MULTIPLIERS: u64 = 1024;
 
 /// Which operand's sparsity a design exploits for cycle skipping.
@@ -38,13 +36,15 @@ pub enum Exploits {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GatingCost {
     pub mac_cycles: u64,
+    /// MACs actually performed (gated/skipped work excluded).
+    pub mac_ops: u64,
     /// Energy per dense-MAC-equivalent, dense ideal = 1.0.
     pub energy_per_dense_mac: f64,
 }
 
 impl GatingCost {
     pub fn wall_seconds(&self) -> f64 {
-        self.mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+        super::wall_seconds(self.mac_cycles)
     }
 }
 
@@ -75,6 +75,7 @@ pub fn cost(dense_macs: u64, df: f64, dw: f64, policy: Exploits) -> GatingCost {
     };
     GatingCost {
         mac_cycles,
+        mac_ops: (dense_macs as f64 * gated_fraction).ceil() as u64,
         energy_per_dense_mac: gated_fraction * 0.65 * overhead + traffic,
     }
 }
@@ -107,6 +108,21 @@ mod tests {
         assert!(e(Exploits::SkipFeature) < e(Exploits::GateFeature));
         assert!(e(Exploits::SkipBoth) < e(Exploits::SkipFeature));
         assert!(e(Exploits::SkipBoth) < e(Exploits::SkipWeight));
+    }
+
+    #[test]
+    fn performed_macs_track_gated_fraction() {
+        // dense performs everything; gate/skip-feature perform df*dense;
+        // skip-both performs the must-MACs
+        assert_eq!(cost(M, DF, DW, Exploits::None).mac_ops, M);
+        let expect = (M as f64 * DF).ceil() as u64;
+        assert_eq!(cost(M, DF, DW, Exploits::GateFeature).mac_ops, expect);
+        assert_eq!(cost(M, DF, DW, Exploits::SkipFeature).mac_ops, expect);
+        // same association as the implementation's gated_fraction
+        assert_eq!(
+            cost(M, DF, DW, Exploits::SkipBoth).mac_ops,
+            (M as f64 * (DF * DW)).ceil() as u64
+        );
     }
 
     #[test]

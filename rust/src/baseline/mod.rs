@@ -18,3 +18,28 @@ pub mod gating;
 pub mod naive;
 pub mod scnn;
 pub mod sparten;
+
+use crate::MAC_FREQ_MHZ;
+
+/// Wall-clock seconds of `mac_cycles` MAC-clock cycles. Every
+/// comparator model shares the paper's 500 MHz MAC clock, so every
+/// `*Cost::wall_seconds` delegates here — one definition, one clock.
+pub fn wall_seconds(mac_cycles: u64) -> f64 {
+    mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shared_clock_conversion() {
+        // 500 MHz: 5e8 cycles is exactly one second
+        assert_eq!(super::wall_seconds(500_000_000), 1.0);
+        assert_eq!(super::wall_seconds(0), 0.0);
+        // and every cost struct's wall goes through the same helper
+        let n = super::naive::NaiveCost {
+            mac_cycles: 123_456,
+            ..Default::default()
+        };
+        assert_eq!(n.wall_seconds().to_bits(), super::wall_seconds(123_456).to_bits());
+    }
+}

@@ -11,7 +11,6 @@
 
 use crate::config::{ArrayConfig, BufferConfig};
 use crate::models::{LayerDesc, Model};
-use crate::MAC_FREQ_MHZ;
 
 /// Closed-form cost of a layer on the naive array.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -35,7 +34,7 @@ pub struct NaiveCost {
 
 impl NaiveCost {
     pub fn wall_seconds(&self) -> f64 {
-        self.mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+        super::wall_seconds(self.mac_cycles)
     }
 }
 

@@ -15,7 +15,6 @@
 //! * coordinate-transformation energy on every product.
 
 use crate::models::Model;
-use crate::MAC_FREQ_MHZ;
 
 /// SCNN machine constants (from the SCNN paper's 1024-multiplier config).
 pub const SCNN_MULTIPLIERS: u64 = 1024;
@@ -43,7 +42,7 @@ pub struct ScnnCost {
 
 impl ScnnCost {
     pub fn wall_seconds(&self) -> f64 {
-        self.mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+        super::wall_seconds(self.mac_cycles)
     }
 }
 

@@ -15,7 +15,6 @@
 //! * 31 KB of FIFO-class storage, 3.2 mm² of it in 45 nm (large area).
 
 use crate::models::Model;
-use crate::MAC_FREQ_MHZ;
 
 pub const SPARTEN_MULTIPLIERS: u64 = 1024;
 /// Effective utilisation of must-MACs (bit-mask join keeps the
@@ -40,7 +39,7 @@ pub struct SparTenCost {
 
 impl SparTenCost {
     pub fn wall_seconds(&self) -> f64 {
-        self.mac_cycles as f64 / (MAC_FREQ_MHZ as f64 * 1e6)
+        super::wall_seconds(self.mac_cycles)
     }
 }
 
@@ -95,7 +94,7 @@ mod tests {
     #[test]
     fn wall_seconds_sane() {
         let c = SparTenCost {
-            mac_cycles: MAC_FREQ_MHZ * 1_000_000,
+            mac_cycles: crate::MAC_FREQ_MHZ * 1_000_000,
             mac_ops: 0,
             energy_per_dense_mac: 0.0,
         };

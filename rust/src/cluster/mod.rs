@@ -73,6 +73,9 @@ impl Default for ClusterConfig {
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
     pub model: String,
+    /// Tag of the accelerator backend that produced the layer walls
+    /// ([`crate::backend::Backend::tag`]; `"s2"` for the classic path).
+    pub backend: String,
     pub cluster: ClusterConfig,
     pub serve: ServeConfig,
     /// The per-layer simulation every array shares (bit-identical to the
@@ -91,15 +94,32 @@ pub struct ClusterReport {
 
 impl ClusterReport {
     /// Schedule `serve.requests` images of the network described by
-    /// `layers` across `cluster.arrays` arrays and summarize.
+    /// `layers` across `cluster.arrays` arrays and summarize. The
+    /// classic S²Engine entry point; see
+    /// [`ClusterReport::assemble_backend`] for other backends.
     pub fn assemble(
         model: impl Into<String>,
         cluster: ClusterConfig,
         serve: ServeConfig,
         layers: Vec<LayerResult>,
     ) -> ClusterReport {
+        ClusterReport::assemble_backend(model, "s2", cluster, serve, layers)
+    }
+
+    /// [`ClusterReport::assemble`] with an explicit backend tag
+    /// ([`crate::backend`]): the per-array durations come from each
+    /// layer's backend-dispatched [`LayerResult::wall`], so an SCNN or
+    /// SparTen cluster shards and schedules exactly like an S²Engine
+    /// cluster.
+    pub fn assemble_backend(
+        model: impl Into<String>,
+        backend: impl Into<String>,
+        cluster: ClusterConfig,
+        serve: ServeConfig,
+        layers: Vec<LayerResult>,
+    ) -> ClusterReport {
         let dag = LayerDag::chain(layers.len());
-        let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+        let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
         let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
         let out_bytes = feature_link_bytes(&layers);
         let arrivals = Arrivals::open_loop(serve.requests.max(1), serve.rate, serve.seed);
@@ -131,6 +151,7 @@ impl ClusterReport {
         );
         ClusterReport {
             model: model.into(),
+            backend: backend.into(),
             cluster,
             serve,
             layers,
@@ -211,6 +232,7 @@ impl ClusterReport {
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("backend".into(), Json::Str(self.backend.clone()));
         o.insert("arrays".into(), Json::Num(self.cluster.arrays as f64));
         o.insert("shard".into(), Json::Str(self.cluster.shard.tag().into()));
         o.insert("batch".into(), Json::Num(self.serve.batch as f64));

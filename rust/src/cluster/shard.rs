@@ -65,11 +65,16 @@ impl ShardStrategy {
     }
 }
 
-/// Compressed feature-map bytes a layer's output puts on the wire: the
-/// dense output element count × the density the downstream layer
-/// actually consumes (the producer's sparsity is what the next layer
-/// sees) × the ECOO feature-token width. The last layer has no
-/// downstream consumer; its own density is the proxy.
+/// Feature-map bytes a layer's output puts on the wire. For a backend
+/// that compresses features (the S²Engine path and the dual-sparse
+/// comparators): dense output element count × the density the
+/// downstream layer actually consumes (the producer's sparsity is what
+/// the next layer sees) × the compressed feature-token width. A design
+/// whose [`crate::backend::BackendCaps`] cannot compress features
+/// (naive/TPU-class, gate-only) moves *dense 8-bit* elements — its
+/// link traffic does not shrink with sparsity, which is part of the
+/// head-to-head trade-off. The last layer has no downstream consumer;
+/// its own density is the proxy.
 pub fn feature_link_bytes(layers: &[LayerResult]) -> Vec<f64> {
     (0..layers.len())
         .map(|i| {
@@ -77,7 +82,11 @@ pub fn feature_link_bytes(layers: &[LayerResult]) -> Vec<f64> {
                 .get(i + 1)
                 .map(|next| next.feature_density)
                 .unwrap_or(layers[i].feature_density);
-            layers[i].out_elems as f64 * density * FEATURE_TOKEN_BYTES
+            let elems = layers[i].out_elems as f64;
+            match &layers[i].analytic {
+                Some(a) if !a.caps.sparse_features => elems,
+                _ => elems * density * FEATURE_TOKEN_BYTES,
+            }
         })
         .collect()
 }
@@ -186,6 +195,25 @@ mod tests {
         assert_eq!(*ends.last().unwrap(), 3);
         assert!(ends.len() <= 3);
         assert_eq!(balanced_stages(&[], 4), vec![0]);
+    }
+
+    #[test]
+    fn dense_backends_put_dense_bytes_on_the_wire() {
+        // the link model consults the producing backend's caps: a
+        // design that cannot compress features ships dense 8-bit
+        // elements; dual-sparse designs ship density-scaled tokens
+        use crate::backend::{Backend, BackendKind};
+        use crate::config::{ArrayConfig, SimConfig};
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8));
+        let layer = crate::models::LayerDesc::new("t", 8, 8, 32, 3, 3, 32, 1, 1);
+        let mk =
+            |kind: BackendKind| vec![kind.build(&cfg).layer_result(&layer, 0.4, 0.4, true)];
+        let dense = feature_link_bytes(&mk(BackendKind::Naive))[0];
+        let sparse = feature_link_bytes(&mk(BackendKind::Scnn))[0];
+        assert_eq!(dense, layer.output_elems() as f64);
+        let expect = layer.output_elems() as f64 * 0.4 * FEATURE_TOKEN_BYTES;
+        assert!((sparse - expect).abs() < 1e-9);
+        assert!(sparse < dense, "compression must pay off on the wire");
     }
 
     #[test]

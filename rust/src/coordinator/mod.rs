@@ -10,8 +10,9 @@
 pub mod memo;
 pub mod result;
 
-pub use result::{LayerResult, ModelResult};
+pub use result::{AnalyticCost, LayerResult, ModelResult};
 
+use crate::backend::Backend;
 use crate::baseline::naive;
 use crate::compiler::mapping::{build_tile, LayerMapping, TileSource};
 use crate::config::SimConfig;
@@ -179,29 +180,18 @@ impl Coordinator {
     /// Table II densities, clustered non-zero patterns (actual-model
     /// emulation). Shared by [`Coordinator::simulate_model_subset`] and
     /// the pipelined serving path, so both see bit-identical layers.
+    ///
+    /// Delegates through [`crate::backend::S2Backend`] — the per-layer
+    /// density derivation lives in [`crate::backend::layer_results_subset`],
+    /// shared by every backend (`rust/tests/backend_equivalence.rs`
+    /// locks the delegation bit-identical to the historical inline loop).
     pub fn layer_results_subset(
         &self,
         model: &Model,
         subset: FeatureSubset,
     ) -> Vec<LayerResult> {
-        let base_density = subset.density(model);
-        model
-            .layers
-            .iter()
-            .enumerate()
-            .map(|(i, layer)| {
-                // mild per-layer variation around the subset density,
-                // deterministic in (seed, layer index)
-                let jitter = if model.feature_density_sigma > 0.0 {
-                    let x = ((self.cfg.seed ^ (i as u64 * 0x9e37)) % 1000) as f64 / 1000.0;
-                    (x - 0.5) * model.feature_density_sigma * 0.5
-                } else {
-                    0.0
-                };
-                let fd = (base_density + jitter).clamp(0.02, 0.98);
-                self.simulate_layer(layer, fd, model.weight_density, true)
-            })
-            .collect()
+        let backend = crate::backend::S2Backend::new(self.clone());
+        crate::backend::layer_results_subset(&backend, model, subset, self.cfg.seed)
     }
 
     /// Per-layer results at designated uniform densities (the synthetic
@@ -212,11 +202,8 @@ impl Coordinator {
         feature_density: f64,
         weight_density: f64,
     ) -> Vec<LayerResult> {
-        model
-            .layers
-            .iter()
-            .map(|layer| self.simulate_layer(layer, feature_density, weight_density, false))
-            .collect()
+        let backend = crate::backend::S2Backend::new(self.clone());
+        crate::backend::layer_results_synthetic(&backend, model, feature_density, weight_density)
     }
 
     /// Simulate a whole model under a feature subset, at its Table II
@@ -259,6 +246,29 @@ impl Coordinator {
         crate::serve::ServeReport::assemble(model.name.clone(), *serve, layers)
     }
 
+    /// [`Coordinator::simulate_model_pipelined`] under an arbitrary
+    /// accelerator backend ([`crate::backend`]): the same batched
+    /// request schedule, driven by the backend's per-layer walls — how
+    /// "SCNN serving vs S²Engine serving" is asked. With the
+    /// [`crate::backend::S2Backend`] this is bit-identical to the
+    /// classic path (`rust/tests/backend_equivalence.rs`).
+    pub fn simulate_model_pipelined_with(
+        &self,
+        backend: &dyn Backend,
+        model: &Model,
+        subset: FeatureSubset,
+        serve: &crate::serve::ServeConfig,
+    ) -> crate::serve::ServeReport {
+        let layers =
+            crate::backend::layer_results_subset(backend, model, subset, self.cfg.seed);
+        crate::serve::ServeReport::assemble_backend(
+            model.name.clone(),
+            backend.tag(),
+            *serve,
+            layers,
+        )
+    }
+
     /// Scale-out cluster serving run ([`crate::cluster`]): simulate the
     /// model's layers once (tile-memoized), then schedule
     /// `serve.requests` images across `cluster.arrays` arrays under the
@@ -293,6 +303,30 @@ impl Coordinator {
     ) -> crate::cluster::ClusterReport {
         let layers = self.layer_results_subset(model, subset);
         crate::cluster::ClusterReport::assemble(model.name.clone(), *cluster, *serve, layers)
+    }
+
+    /// [`Coordinator::simulate_model_cluster`] under an arbitrary
+    /// accelerator backend ([`crate::backend`]): an N-array cluster of
+    /// SCNNs, SparTens, naive arrays… under any sharding strategy. With
+    /// the [`crate::backend::S2Backend`] this is bit-identical to the
+    /// classic path (`rust/tests/backend_equivalence.rs`).
+    pub fn simulate_model_cluster_with(
+        &self,
+        backend: &dyn Backend,
+        model: &Model,
+        subset: FeatureSubset,
+        serve: &crate::serve::ServeConfig,
+        cluster: &crate::cluster::ClusterConfig,
+    ) -> crate::cluster::ClusterReport {
+        let layers =
+            crate::backend::layer_results_subset(backend, model, subset, self.cfg.seed);
+        crate::cluster::ClusterReport::assemble_backend(
+            model.name.clone(),
+            backend.tag(),
+            *cluster,
+            *serve,
+            layers,
+        )
     }
 
     /// Average-subset convenience (the paper's default reporting mode).

@@ -2,20 +2,44 @@
 //! paper reports (speedup, on-chip/total energy-efficiency improvement,
 //! area-efficiency improvement, buffer reduction ratios).
 
+use crate::backend::BackendCaps;
 use crate::baseline::naive::NaiveCost;
-use crate::config::SimConfig;
+use crate::config::{ArrayConfig, SimConfig};
 use crate::energy::{self, area, Energy};
 use crate::models::{LayerDesc, Model};
 use crate::sim::TileStats;
 use crate::MAC_FREQ_MHZ;
 
+/// Closed-form comparator cost carried by an analytic-backend
+/// [`LayerResult`] ([`crate::backend::analytic`]): when present,
+/// [`LayerResult::wall`] and [`LayerResult::energy`] come from the
+/// analytic model instead of the S² event counters. (Performed MACs
+/// live in the shared `s2.mac_ops` counter, not here.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnalyticCost {
+    /// MAC-clock cycles for the layer under the comparator model. The
+    /// wall is always derived from this ([`crate::baseline::wall_seconds`]
+    /// in [`LayerResult::wall`]) — never stored, so cycles and wall
+    /// cannot desynchronise.
+    pub mac_cycles: u64,
+    /// Lifted energy picture (on-chip breakdown + DRAM).
+    pub energy: Energy,
+    /// The producing backend's capability flags — downstream traffic
+    /// models (the [`crate::cluster`] link) consult these: a design
+    /// that cannot compress features puts *dense* bytes on the wire.
+    pub caps: BackendCaps,
+}
+
 /// Outcome of simulating one layer.
 #[derive(Debug, Clone)]
 pub struct LayerResult {
     pub layer: String,
-    /// Extrapolated S²Engine event counters for the full layer.
+    /// Extrapolated S²Engine event counters for the full layer. For
+    /// analytic-backend results only `mac_ops`/`dense_macs` are
+    /// populated (the comparators are closed-form, not event-driven).
     pub s2: TileStats,
-    /// Closed-form naive-array cost.
+    /// Closed-form naive-array cost (the 1× denominator of every
+    /// speedup/efficiency ratio, whichever backend produced the result).
     pub naive: NaiveCost,
     pub feature_density: f64,
     pub weight_density: f64,
@@ -30,6 +54,9 @@ pub struct LayerResult {
     /// Dense output feature-map element count (the tensor a downstream
     /// layer — or an inter-array link in [`crate::cluster`] — consumes).
     pub out_elems: u64,
+    /// Analytic-backend override ([`crate::backend`]): `None` for the
+    /// classic cycle-accurate S² path.
+    pub analytic: Option<AnalyticCost>,
 }
 
 impl LayerResult {
@@ -58,6 +85,48 @@ impl LayerResult {
             ce_enabled: cfg.ce_enabled,
             s2_dram_bytes,
             out_elems: layer.output_elems(),
+            analytic: None,
+        }
+    }
+
+    /// Construct an analytic-backend result ([`crate::backend::analytic`]):
+    /// the comparator's closed-form cycles/energy in the same currency
+    /// the serving, cluster and sweep layers consume.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_analytic(
+        layer: &LayerDesc,
+        array: &ArrayConfig,
+        caps: BackendCaps,
+        mac_cycles: u64,
+        mac_ops: u64,
+        energy: Energy,
+        naive: NaiveCost,
+        feature_density: f64,
+        weight_density: f64,
+        tiles: usize,
+    ) -> Self {
+        let s2 = TileStats {
+            mac_ops,
+            dense_macs: layer.macs(),
+            ..Default::default()
+        };
+        LayerResult {
+            layer: layer.name.clone(),
+            s2,
+            naive,
+            feature_density,
+            weight_density,
+            tiles_sampled: tiles,
+            tiles_total: tiles,
+            ds_ratio: array.ds_ratio,
+            ce_enabled: false,
+            s2_dram_bytes: 0,
+            out_elems: layer.output_elems(),
+            analytic: Some(AnalyticCost {
+                mac_cycles,
+                energy,
+                caps,
+            }),
         }
     }
 
@@ -67,16 +136,45 @@ impl LayerResult {
             / (self.ds_ratio as f64 * MAC_FREQ_MHZ as f64 * 1e6)
     }
 
+    /// Backend-dispatched wall time: the analytic model's wall for
+    /// comparator results, [`LayerResult::s2_wall`] (bit-identically)
+    /// for the classic cycle-accurate path. This is the duration the
+    /// serving/cluster schedulers place.
+    pub fn wall(&self) -> f64 {
+        match &self.analytic {
+            Some(a) => crate::baseline::wall_seconds(a.mac_cycles),
+            None => self.s2_wall(),
+        }
+    }
+
+    /// Backend-dispatched cycle count for display: DS cycles for the S²
+    /// path, comparator MAC cycles for analytic results.
+    pub fn cycles(&self) -> u64 {
+        match &self.analytic {
+            Some(a) => a.mac_cycles,
+            None => self.s2.ds_cycles,
+        }
+    }
+
     pub fn naive_wall(&self) -> f64 {
         self.naive.wall_seconds()
     }
 
     pub fn speedup(&self) -> f64 {
-        self.naive_wall() / self.s2_wall()
+        self.naive_wall() / self.wall()
     }
 
     pub fn s2_energy(&self) -> Energy {
         energy::s2_energy(&self.s2, self.ce_enabled, self.s2_dram_bytes)
+    }
+
+    /// Backend-dispatched energy: the analytic model's lifted energy for
+    /// comparator results, the S² event-count model otherwise.
+    pub fn energy(&self) -> Energy {
+        match &self.analytic {
+            Some(a) => a.energy,
+            None => self.s2_energy(),
+        }
     }
 
     pub fn naive_energy(&self) -> Energy {
@@ -85,12 +183,12 @@ impl LayerResult {
 
     /// On-chip energy-efficiency improvement (Fig. 16's metric).
     pub fn onchip_ee_improvement(&self) -> f64 {
-        self.naive_energy().onchip.onchip_total() / self.s2_energy().onchip.onchip_total()
+        self.naive_energy().onchip.onchip_total() / self.energy().onchip.onchip_total()
     }
 
     /// Energy-efficiency improvement including DRAM (the 3.0× headline).
     pub fn total_ee_improvement(&self) -> f64 {
-        self.naive_energy().total() / self.s2_energy().total()
+        self.naive_energy().total() / self.energy().total()
     }
 
     /// FB access reduction from CE reuse (Fig. 13 left).
@@ -119,8 +217,10 @@ impl ModelResult {
         }
     }
 
+    /// Total wall time of the evaluated backend (the S²Engine wall for
+    /// the classic path; the comparator's wall for analytic backends).
     pub fn total_s2_wall(&self) -> f64 {
-        self.layers.iter().map(|l| l.s2_wall()).sum()
+        self.layers.iter().map(|l| l.wall()).sum()
     }
 
     pub fn total_naive_wall(&self) -> f64 {
@@ -146,8 +246,10 @@ impl ModelResult {
         total
     }
 
+    /// Total energy of the evaluated backend (dispatched per layer —
+    /// see [`LayerResult::energy`]).
     pub fn s2_energy(&self) -> Energy {
-        self.sum_energy(|l| l.s2_energy())
+        self.sum_energy(|l| l.energy())
     }
 
     pub fn naive_energy(&self) -> Energy {
@@ -165,7 +267,9 @@ impl ModelResult {
 
     /// Area-efficiency improvement: (throughput/area) ratio vs naive
     /// (Fig. 17's metric). Throughput ratio = speedup; areas from the
-    /// Table V-calibrated model.
+    /// Table V-calibrated model. Note: the area model is S²Engine's —
+    /// for analytic comparator backends this column is a nominal
+    /// S²-area-normalized figure, not a published comparator area.
     pub fn area_efficiency_improvement(&self) -> f64 {
         let s2_a = area::s2_area(&self.cfg.array, self.cfg.buffers.sram_bytes);
         let naive_a = area::naive_area(
@@ -220,7 +324,9 @@ impl ModelResult {
                 let mut lo = BTreeMap::new();
                 lo.insert("layer".into(), Json::Str(l.layer.clone()));
                 lo.insert("speedup".into(), Json::Num(l.speedup()));
-                lo.insert("s2_ds_cycles".into(), Json::Num(l.s2.ds_cycles as f64));
+                // backend-dispatched (DS cycles for S², comparator MAC
+                // cycles for analytic backends) — named accordingly
+                lo.insert("cycles".into(), Json::Num(l.cycles() as f64));
                 lo.insert(
                     "naive_mac_cycles".into(),
                     Json::Num(l.naive.mac_cycles as f64),

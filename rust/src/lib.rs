@@ -14,6 +14,11 @@
 //!   SRAM buffers.
 //! * [`baseline`] — the naïve output-stationary systolic array (TPU-class
 //!   comparison point) plus analytic SCNN and SparTen comparators.
+//! * [`backend`] — the unified accelerator-backend trait: the S²Engine
+//!   event simulation and every analytic comparator behind one
+//!   [`backend::Backend`] interface, so serving, cluster sharding and
+//!   sweeps run head-to-head across designs (`--backend`, the `backend`
+//!   sweep axis, `report backends`).
 //! * [`energy`] — the 14nm-calibrated per-event energy and area model that
 //!   turns simulator event counts into the paper's efficiency metrics.
 //! * [`models`] — conv-layer descriptors for AlexNet / VGG16 / ResNet50
@@ -80,6 +85,7 @@
 //! assert!(results.records().iter().all(|r| r.speedup > 0.0));
 //! ```
 
+pub mod backend;
 pub mod baseline;
 pub mod cluster;
 pub mod compiler;

@@ -4,6 +4,7 @@
 
 use anyhow::{anyhow, Result};
 
+use s2engine::backend::{Backend, BackendKind};
 use s2engine::config::{ArrayConfig, SimConfig};
 use s2engine::coordinator::Coordinator;
 use s2engine::models::{zoo, FeatureSubset};
@@ -19,14 +20,18 @@ s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
                   --no-memo --json out.json]
 s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
                   --rate IMGS_PER_S --subset avg|max|min --out serve.json
+                  --backend s2|naive|gate|skipf|skipw|scnn|sparten
                   plus the simulate array/effort options]
 s2engine cluster <model> [--arrays 4 --shard data|pipeline|tensor
-                  plus every serve option]  # scale-out across N arrays
-s2engine report  table1|...|table5|fig3|fits|serving|cluster [--effort ...]
-s2engine sweep   fig10|...|fig17|serving|cluster [--effort quick|default|full]
-                  [--scales 16,32] [--seed N] [--out DIR --resume]
-s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;batch=4'
+                  plus every serve option incl. --backend]  # N arrays
+s2engine report  table1|...|table5|fig3|fits|serving|cluster|backends
+                  [--effort ...] [--backend TAG]  # serving/cluster only
+s2engine sweep   fig10|...|fig17|serving|cluster|backends
+                  [--effort quick|default|full] [--scales 16,32] [--seed N]
+                  [--out DIR --resume] [--backend TAG]  # serving/cluster
+s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;backend=all'
                   [--grid grid.json] [--out DIR --resume] [--workers N]
+                  [--backend s2,scnn,...]  # shorthand for the grid axis
 s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
 s2engine replay  --in t.s2df [--rows R --cols C ...]  # simulate a file
 s2engine infer   [--artifacts DIR]    # PJRT real-feature end-to-end
@@ -50,6 +55,29 @@ fn subset_arg(args: &Args) -> FeatureSubset {
         "max" => FeatureSubset::MaxSparsity,
         "min" => FeatureSubset::MinSparsity,
         _ => FeatureSubset::Average,
+    }
+}
+
+/// The `--backend` flag (serve/cluster/sweep/report): which accelerator
+/// model evaluates the layers. Defaults to the S²Engine event engine.
+fn backend_arg(args: &Args) -> Result<BackendKind> {
+    let tag = args.get("backend").unwrap_or("s2");
+    BackendKind::from_tag(tag).ok_or_else(|| {
+        anyhow!("unknown backend `{tag}` (s2|naive|gate|skipf|skipw|scnn|sparten)")
+    })
+}
+
+/// Warn when a fixed-1024-multiplier analytic comparator runs on an
+/// off-parity array (serve and cluster share this note).
+fn parity_note(kind: BackendKind, cfg: &SimConfig) {
+    if let Some(parity) = kind.parity_scale() {
+        if cfg.array.rows * cfg.array.cols != parity * parity {
+            println!(
+                "note: analytic 1024-multiplier comparator; --rows/--cols set \
+                 the naive-baseline array — use {parity}x{parity} for PE-count \
+                 parity"
+            );
+        }
     }
 }
 
@@ -177,10 +205,13 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let model = model_arg(args)?;
     let subset = subset_arg(args);
     let cfg = sim_config(args);
+    let kind = backend_arg(args)?;
+    let backend = kind.build(&cfg);
     let serve = serve_config_arg(args, cfg.seed, 4)?;
     println!(
-        "serving {} on {}x{} array: {} requests, batch {}, overlap {:.2}, {}",
+        "serving {} [{}] on {}x{} array: {} requests, batch {}, overlap {:.2}, {}",
         model.name,
+        backend.name(),
         cfg.array.rows,
         cfg.array.cols,
         serve.requests,
@@ -192,15 +223,17 @@ fn serve_cmd(args: &Args) -> Result<()> {
             "closed-loop (all queued at t=0)".into()
         }
     );
+    parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();
-    let r = Coordinator::new(cfg).simulate_model_pipelined(&model, subset, &serve);
-    println!("{:<12} {:>12} {:>12}", "layer", "ds cycles", "wall (ms)");
+    let r = Coordinator::new(cfg)
+        .simulate_model_pipelined_with(backend.as_ref(), &model, subset, &serve);
+    println!("{:<12} {:>12} {:>12}", "layer", "cycles", "wall (ms)");
     for l in &r.layers {
         println!(
             "{:<12} {:>12} {:>12.4}",
             l.layer,
-            l.s2.ds_cycles,
-            l.s2_wall() * 1e3
+            l.cycles(),
+            l.wall() * 1e3
         );
     }
     println!("---");
@@ -234,6 +267,8 @@ fn cluster_cmd(args: &Args) -> Result<()> {
     let model = model_arg(args)?;
     let subset = subset_arg(args);
     let cfg = sim_config(args);
+    let kind = backend_arg(args)?;
+    let backend = kind.build(&cfg);
     let arrays = args.get_usize("arrays", 4).max(1);
     let shard_tag = args.get("shard").unwrap_or("data");
     let shard = ShardStrategy::from_tag(shard_tag).ok_or_else(|| {
@@ -242,9 +277,10 @@ fn cluster_cmd(args: &Args) -> Result<()> {
     let serve = serve_config_arg(args, cfg.seed, 4 * arrays)?;
     let cluster = ClusterConfig::new(arrays, shard);
     println!(
-        "cluster-serving {} on {} x {}x{} arrays ({} sharding): {} requests, \
+        "cluster-serving {} [{}] on {} x {}x{} arrays ({} sharding): {} requests, \
          batch {}, overlap {:.2}",
         model.name,
+        backend.name(),
         cluster.arrays,
         cfg.array.rows,
         cfg.array.cols,
@@ -253,8 +289,10 @@ fn cluster_cmd(args: &Args) -> Result<()> {
         serve.batch,
         serve.overlap,
     );
+    parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();
-    let r = Coordinator::new(cfg).simulate_model_cluster(&model, subset, &serve, &cluster);
+    let r = Coordinator::new(cfg)
+        .simulate_model_cluster_with(backend.as_ref(), &model, subset, &serve, &cluster);
     println!("{:<8} {:>10} {:>12}", "array", "occupancy", "executions");
     for (i, (occ, lane)) in r
         .per_array_occupancy()
@@ -284,15 +322,23 @@ fn cluster_cmd(args: &Args) -> Result<()> {
 fn report_cmd(args: &Args) -> Result<()> {
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
+    let backend = backend_arg(args)?;
     let which = args
         .positional
         .get(1)
         .ok_or_else(|| {
             anyhow!(
-                "report needs a target \
-                 (table1|table2|table3|table4|table5|fig3|fits|serving|cluster)"
+                "report needs a target (table1|table2|table3|table4|table5\
+                 |fig3|fits|serving|cluster|backends)"
             )
         })?;
+    // `--backend` re-bases the serving/cluster summaries; the paper
+    // tables and the head-to-head (which sweeps every backend itself)
+    // do not take one
+    anyhow::ensure!(
+        backend.is_default() || matches!(which.as_str(), "serving" | "cluster"),
+        "--backend applies only to the `serving` and `cluster` report targets"
+    );
     let out = match which.as_str() {
         "table1" => report::table1(),
         "table3" => report::table3(),
@@ -301,8 +347,9 @@ fn report_cmd(args: &Args) -> Result<()> {
         "table4" => report::table4(effort, seed),
         "table5" => report::table5(effort, seed),
         "fig3" => report::fig3(effort, seed),
-        "serving" => report::serving(effort, seed),
-        "cluster" => report::cluster(effort, seed),
+        "serving" => report::serving(effort, seed, backend),
+        "cluster" => report::cluster(effort, seed, backend),
+        "backends" => report::backends(effort, seed),
         other => return Err(anyhow!("unknown report target `{other}`")),
     };
     println!("{out}");
@@ -339,21 +386,32 @@ fn sweep(args: &Args) -> Result<()> {
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
     let scales = args.get_usize_list("scales", &[16, 32]);
+    let backend = backend_arg(args)?;
     let which = args
         .positional
         .get(1)
         .ok_or_else(|| {
-            anyhow!("sweep needs a target (fig10..fig17, serving, cluster, or --grid <spec>)")
+            anyhow!(
+                "sweep needs a target (fig10..fig17, serving, cluster, \
+                 backends, or --grid <spec>)"
+            )
         })?;
     // validate the target BEFORE opening the store: a typo'd target must
     // not truncate an existing results file
     anyhow::ensure!(
         report::is_figure(which),
-        "unknown sweep target `{which}` (fig10..fig17, serving, cluster)"
+        "unknown sweep target `{which}` (fig10..fig17, serving, cluster, backends)"
+    );
+    // the figN targets are S²Engine paper reproductions; `--backend`
+    // re-bases only the serving/cluster summaries (the backends
+    // head-to-head sweeps every backend itself)
+    anyhow::ensure!(
+        backend.is_default() || matches!(which.as_str(), "serving" | "cluster"),
+        "--backend applies only to the `serving` and `cluster` sweep targets"
     );
     let mut store = sweep_store(args)?;
     let t0 = std::time::Instant::now();
-    let out = report::figure(which, effort, seed, &scales, &mut store)
+    let out = report::figure(which, effort, seed, &scales, backend, &mut store)
         .ok_or_else(|| anyhow!("unknown sweep target `{which}`"))?;
     println!("{out}");
     println!("(generated in {:?})", t0.elapsed());
@@ -365,7 +423,7 @@ fn sweep(args: &Args) -> Result<()> {
 fn grid_sweep(args: &Args) -> Result<()> {
     use s2engine::report::{fx, TextTable};
     let spec = args.get("grid").unwrap();
-    let grid = if std::path::Path::new(spec).is_file() {
+    let mut grid = if std::path::Path::new(spec).is_file() {
         let text = std::fs::read_to_string(spec)?;
         let json = s2engine::util::json::Json::parse(&text)
             .map_err(|e| anyhow!("bad grid file {spec}: {e}"))?;
@@ -373,6 +431,33 @@ fn grid_sweep(args: &Args) -> Result<()> {
     } else {
         Grid::from_spec(spec).map_err(|e| anyhow!("bad grid spec: {e}"))?
     };
+    // `--backend s2,scnn` is shorthand for (and overrides) the grid's
+    // `backend=` axis
+    if let Some(tags) = args.get("backend") {
+        let kinds: Vec<BackendKind> = tags
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                BackendKind::from_tag(t)
+                    .ok_or_else(|| anyhow!("unknown backend `{t}` in --backend"))
+            })
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!kinds.is_empty(), "--backend names no backends");
+        grid = grid.backends(&kinds);
+    }
+    // a 1024-multiplier analytic comparator compared at a non-1024-PE
+    // scale is not a PE-count-parity head-to-head (cf. report backends)
+    let off_parity = grid.backends.iter().any(|b| {
+        b.parity_scale()
+            .is_some_and(|p| grid.scales.iter().any(|&(r, c)| r * c != p * p))
+    });
+    if off_parity {
+        println!(
+            "note: grid mixes 1024-multiplier analytic comparators with \
+             non-1024-PE scales; add scales=32 for PE-count parity"
+        );
+    }
     let mut store = sweep_store(args)?;
     let plan = grid.plan();
     println!("sweep: {} jobs", plan.len());
@@ -381,15 +466,16 @@ fn grid_sweep(args: &Args) -> Result<()> {
     let res = runner.run(&plan, &mut store);
     let mut t = TextTable::new(
         "Sweep results",
-        &["model", "workload", "array", "fifo", "ratio", "CE", "r16",
-          "batch", "ovl", "N", "shard", "speedup", "onchip EE", "area eff",
-          "FB red.", "p99 (ms)", "img/s", "scale eff"],
+        &["model", "workload", "backend", "array", "fifo", "ratio", "CE",
+          "r16", "batch", "ovl", "N", "shard", "speedup", "onchip EE",
+          "area eff", "FB red.", "p99 (ms)", "img/s", "scale eff"],
     );
     for rec in res.records() {
         let j = &rec.job;
         t.row(vec![
             j.model.clone(),
             j.workload.label(),
+            j.backend.tag().to_string(),
             format!("{}x{}", j.array.rows, j.array.cols),
             j.array.fifo.label(),
             format!("{}:1", j.array.ds_ratio),

@@ -1,0 +1,164 @@
+//! Backend head-to-head — the comparative study the paper's Tables
+//! III/V make per-layer, lifted to the *network level*.
+//!
+//! One [`Grid`] declaration over the `backend` × `arrays` axes for the
+//! three evaluated CNNs at a fixed loaded serving point (batch 4,
+//! overlap 0.6, data-parallel replication): every comparator —
+//! S²Engine, the naive dense array, a representative gating design
+//! (Cnvlutin-class), SCNN and SparTen — serves the *same* batched
+//! request workload through the *same* pipeline/cluster schedulers, so
+//! the table compares end-to-end serving behaviour (tail latency,
+//! throughput, scale-out efficiency), not per-layer analytic walls.
+//!
+//! The array is 32×32 (1024 multipliers) to put S²Engine at PE-count
+//! parity with the 1024-multiplier SCNN/SparTen models — the same
+//! normalization Table V uses. Like every figure sweep, the summary
+//! renders from [`crate::sweep::SweepResults`] and inherits job
+//! sharding, tile-memo reuse and `--resume`-able stores
+//! (`s2engine sweep backends --out DIR --resume`).
+
+use super::{Effort, TextTable};
+use crate::backend::BackendKind;
+use crate::baseline::gating::Exploits;
+use crate::config::ArrayConfig;
+use crate::models::FeatureSubset;
+use crate::sweep::{Grid, Job, Runner, Store};
+
+/// The three CNNs the paper evaluates, in reporting order.
+const PAPER_MODELS: [&str; 3] = ["alexnet", "vgg16", "resnet50"];
+/// The compared backends, in Table V's reporting order — the single
+/// roster the head-to-head table and `benches/backend_compare.rs`
+/// (and its required `BENCH_backends.json` metrics) share.
+pub const BACKENDS: [BackendKind; 5] = [
+    BackendKind::Naive,
+    BackendKind::Gating(Exploits::SkipFeature),
+    BackendKind::Scnn,
+    BackendKind::SparTen,
+    BackendKind::S2,
+];
+/// Cluster sizes: the single array and a 4-way data-parallel fleet.
+const ARRAYS: [usize; 2] = [1, 4];
+/// The fixed serving point (a loaded deployment, matching the cluster
+/// summary's working point).
+const BATCH: usize = 4;
+const OVERLAP: f64 = 0.6;
+/// PE-count parity with the 1024-multiplier analytic comparators.
+const SCALE: usize = 32;
+
+/// Backend head-to-head with a throwaway in-memory store.
+pub fn backends(effort: Effort, seed: u64) -> String {
+    backends_in(effort, seed, &mut Store::in_memory())
+}
+
+/// [`backends`] against an explicit (possibly resumable) store.
+pub fn backends_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+    let grid = Grid::new(effort, seed)
+        .models(&PAPER_MODELS)
+        .scales(&[(SCALE, SCALE)])
+        .batches(&[BATCH])
+        .overlaps(&[OVERLAP])
+        .arrays(&ARRAYS)
+        .backends(&BACKENDS);
+    let res = Runner::new().run(&grid.plan(), store);
+    let mut t = TextTable::new(
+        "Backends — head-to-head serving & scale-out (32x32 / 1024 muls, \
+         avg subset, batch 4, overlap 0.6, data-parallel)",
+        &[
+            "model", "backend", "speedup", "onchip EE", "p99 lat (ms)",
+            "img/s", "img/s x4", "scale eff x4",
+        ],
+    );
+    let array = ArrayConfig::new(SCALE, SCALE);
+    let job = |m: &str, b: BackendKind, n: usize| {
+        Job::subset(m, FeatureSubset::Average, array, true, seed, effort)
+            .with_batch(BATCH)
+            .with_overlap(OVERLAP)
+            .with_arrays(n)
+            .with_backend(b)
+    };
+    // records recovered from a store written before the serving/cluster
+    // metrics existed carry zeros — render "n/a", never measurements
+    let mut any_legacy = false;
+    let fleet = ARRAYS[1];
+    for m in PAPER_MODELS {
+        for b in BACKENDS {
+            let one = res.get(&job(m, b, 1));
+            let four = res.get(&job(m, b, fleet));
+            let serving_ok = one.has_serving_metrics();
+            let cluster_ok = four.has_cluster_metrics();
+            any_legacy |= !serving_ok || !cluster_ok;
+            let scell = |v: String| if serving_ok { v } else { "n/a".to_string() };
+            let ccell = |v: String| if cluster_ok { v } else { "n/a".to_string() };
+            t.row(vec![
+                m.to_string(),
+                b.tag().to_string(),
+                format!("{:.2}x", one.speedup),
+                format!("{:.2}x", one.onchip_ee),
+                scell(format!("{:.3}", one.p99_latency * 1e3)),
+                scell(format!("{:.1}", one.throughput)),
+                // cluster throughput reconstructed from the stored
+                // efficiency: requests/T_N = (requests/T₁) × N × eff
+                ccell(format!(
+                    "{:.1}",
+                    four.throughput * four.scaleout_eff * fleet as f64
+                )),
+                ccell(format!("{:.2}", four.scaleout_eff)),
+            ]);
+        }
+    }
+    let mut out = t.render()
+        + "\nReading: speedup and on-chip EE are vs the naive dense array on \
+           the same workload (naive = 1.00x by construction). SparTen leads \
+           on raw speed but pays prefix-sum/permute energy; SCNN loses \
+           dense-mode speed to crossbar contention; S²Engine holds both \
+           axes (Table V, network-level). The x4 columns replicate each \
+           design data-parallel across four arrays under the same batched \
+           workload.\n";
+    if any_legacy {
+        out.push_str(
+            "n/a: point recovered from a store predating the serving/cluster \
+             metrics; rerun into a fresh --out to measure it.\n",
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Effort {
+        Effort {
+            tile_samples: 1,
+            layer_stride: 8,
+            images: 0,
+        }
+    }
+
+    #[test]
+    fn head_to_head_covers_models_and_backends() {
+        let s = backends(tiny(), 0xc0de_cafe_0070);
+        for m in PAPER_MODELS {
+            assert!(s.contains(m), "missing {m} in:\n{s}");
+        }
+        for b in BACKENDS {
+            assert!(s.contains(b.tag()), "missing {} in:\n{s}", b.tag());
+        }
+        assert!(s.contains("1.00x"), "naive self-baseline row present");
+        assert!(!s.contains("n/a"), "fresh run has no legacy points:\n{s}");
+    }
+
+    #[test]
+    fn head_to_head_is_store_resumable() {
+        // the same summary from a warm store reuses every point and
+        // renders byte-identically (the backend axis keys are stable)
+        let effort = tiny();
+        let seed = 0xc0de_cafe_0071;
+        let mut store = Store::in_memory();
+        let first = backends_in(effort, seed, &mut store);
+        let expected = PAPER_MODELS.len() * BACKENDS.len() * ARRAYS.len();
+        assert_eq!(store.len(), expected);
+        let second = backends_in(effort, seed, &mut store);
+        assert_eq!(first, second);
+    }
+}

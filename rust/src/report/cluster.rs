@@ -12,6 +12,7 @@
 //! (`s2engine sweep cluster --out DIR --resume`).
 
 use super::{Effort, TextTable};
+use crate::backend::BackendKind;
 use crate::cluster::ShardStrategy;
 use crate::config::ArrayConfig;
 use crate::models::FeatureSubset;
@@ -26,35 +27,53 @@ const ARRAYS: [usize; 4] = [1, 2, 4, 8];
 const BATCH: usize = 4;
 const OVERLAP: f64 = 0.6;
 
-/// Cluster summary with a throwaway in-memory store.
-pub fn cluster(effort: Effort, seed: u64) -> String {
-    cluster_in(effort, seed, &mut Store::in_memory())
+/// Cluster summary with a throwaway in-memory store. `backend` selects
+/// the accelerator model being scaled out ([`crate::backend`]):
+/// `s2engine sweep cluster --backend sparten` renders the same
+/// scale-out study for a SparTen fleet.
+pub fn cluster(effort: Effort, seed: u64, backend: BackendKind) -> String {
+    cluster_in(effort, seed, backend, &mut Store::in_memory())
 }
 
 /// [`cluster`] against an explicit (possibly resumable) store.
-pub fn cluster_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+pub fn cluster_in(
+    effort: Effort,
+    seed: u64,
+    backend: BackendKind,
+    store: &mut Store,
+) -> String {
+    // the analytic comparators model 1024-multiplier machines;
+    // evaluate them at PE parity (Table V's normalization) instead of
+    // the S² default 16x16 working point
+    let scale = backend.parity_scale().unwrap_or(16);
     let grid = Grid::new(effort, seed)
         .models(&PAPER_MODELS)
+        .scales(&[(scale, scale)])
         .batches(&[BATCH])
         .overlaps(&[OVERLAP])
         .arrays(&ARRAYS)
-        .shards(&ShardStrategy::ALL);
+        .shards(&ShardStrategy::ALL)
+        .backends(&[backend]);
     let res = Runner::new().run(&grid.plan(), store);
     let mut t = TextTable::new(
-        "Cluster — scale-out serving across N arrays (16x16, avg subset, \
-         batch 4, overlap 0.6)",
+        format!(
+            "Cluster — scale-out serving across N arrays ({scale}x{scale}, \
+             avg subset, batch 4, overlap 0.6, backend {})",
+            backend.tag()
+        ),
         &[
             "model", "arrays", "shard", "img/s", "p99 lat", "occupancy",
             "link MB", "scale-out eff",
         ],
     );
-    let array = ArrayConfig::new(16, 16);
+    let array = ArrayConfig::new(scale, scale);
     let job = |m: &str, n: usize, s: ShardStrategy| {
         Job::subset(m, FeatureSubset::Average, array, true, seed, effort)
             .with_batch(BATCH)
             .with_overlap(OVERLAP)
             .with_arrays(n)
             .with_shard(s)
+            .with_backend(backend)
     };
     // records recovered from a store written before the cluster axes
     // existed carry no cluster metrics — render "n/a", never zeros
@@ -113,7 +132,7 @@ mod tests {
 
     #[test]
     fn cluster_summary_covers_models_arrays_and_strategies() {
-        let s = cluster(tiny(), 0xc0de_cafe_0040);
+        let s = cluster(tiny(), 0xc0de_cafe_0040, BackendKind::S2);
         for m in PAPER_MODELS {
             assert!(s.contains(m), "missing {m} in:\n{s}");
         }
@@ -126,13 +145,21 @@ mod tests {
     }
 
     #[test]
+    fn cluster_summary_runs_under_an_analytic_backend() {
+        let s = cluster(tiny(), 0xc0de_cafe_0042, BackendKind::SparTen);
+        assert!(s.contains("backend sparten"), "title names the backend:\n{s}");
+        assert!(s.contains("1.00"), "single-array efficiency row present");
+        assert!(!s.contains("n/a"), "analytic run measures every point:\n{s}");
+    }
+
+    #[test]
     fn legacy_store_records_render_na() {
         // a record recovered from a pre-cluster store (cluster metrics
         // parsed as zeros) must render as n/a, not as measured zeros
         let effort = tiny();
         let seed = 0xc0de_cafe_0041;
         let mut warm = Store::in_memory();
-        let _ = cluster_in(effort, seed, &mut warm);
+        let _ = cluster_in(effort, seed, BackendKind::S2, &mut warm);
         let base = Job::subset(
             "alexnet",
             FeatureSubset::Average,
@@ -154,7 +181,7 @@ mod tests {
         assert!(!legacy.has_cluster_metrics());
         let mut store = Store::in_memory();
         store.admit(legacy);
-        let s = cluster_in(effort, seed, &mut store);
+        let s = cluster_in(effort, seed, BackendKind::S2, &mut store);
         assert!(s.contains("n/a"), "legacy point must render n/a:\n{s}");
         assert!(s.contains("pre-cluster store"), "footnote expected");
     }

@@ -413,8 +413,8 @@ fn scale_depth_grid(effort: Effort, seed: u64, scales: &[usize], depths: &[usize
 }
 
 /// Is `which` a sweep target [`figure`] can render — a paper figure or
-/// the `serving` / `cluster` summaries? (The CLI checks this before
-/// opening — and possibly truncating — a `--out` store.)
+/// the `serving` / `cluster` / `backends` summaries? (The CLI checks
+/// this before opening — and possibly truncating — a `--out` store.)
 pub fn is_figure(which: &str) -> bool {
     matches!(
         which,
@@ -428,18 +428,29 @@ pub fn is_figure(which: &str) -> bool {
             | "fig17"
             | "serving"
             | "cluster"
+            | "backends"
     )
 }
 
 /// CLI dispatcher: render a figure sweep against an explicit store.
-/// Returns `None` for an unknown figure name.
+/// Returns `None` for an unknown figure name. `backend` re-bases the
+/// `serving`/`cluster` summaries on another accelerator model
+/// ([`crate::backend`]); the figN targets are S²Engine paper
+/// reproductions and the `backends` head-to-head sweeps every backend
+/// itself, so for those a non-default backend also returns `None`
+/// (never silently mislabeled S²-only output) — the CLI rejects the
+/// combination up front with a specific message.
 pub fn figure(
     which: &str,
     effort: Effort,
     seed: u64,
     scales: &[usize],
+    backend: crate::backend::BackendKind,
     store: &mut Store,
 ) -> Option<String> {
+    if !backend.is_default() && !matches!(which, "serving" | "cluster") {
+        return None;
+    }
     Some(match which {
         "fig10" => fig10_in(effort, seed, store),
         "fig11" => fig11_in(effort, seed, store),
@@ -449,8 +460,9 @@ pub fn figure(
         "fig15" => fig15_in(effort, seed, store),
         "fig16" => fig16_in(effort, seed, scales, store),
         "fig17" => fig17_in(effort, seed, scales, store),
-        "serving" => super::serving::serving_in(effort, seed, store),
-        "cluster" => super::cluster::cluster_in(effort, seed, store),
+        "serving" => super::serving::serving_in(effort, seed, backend, store),
+        "cluster" => super::cluster::cluster_in(effort, seed, backend, store),
+        "backends" => super::backends::backends_in(effort, seed, store),
         _ => return None,
     })
 }
@@ -484,8 +496,20 @@ mod tests {
 
     #[test]
     fn figure_dispatch_known_and_unknown() {
-        assert!(figure("fig9", Effort::QUICK, 1, &[16], &mut Store::in_memory()).is_none());
-        let s = figure("fig15", Effort::QUICK, 1, &[16], &mut Store::in_memory()).unwrap();
+        use crate::backend::BackendKind;
+        let s2 = BackendKind::S2;
+        assert!(
+            figure("fig9", Effort::QUICK, 1, &[16], s2, &mut Store::in_memory()).is_none()
+        );
+        let s = figure("fig15", Effort::QUICK, 1, &[16], s2, &mut Store::in_memory())
+            .unwrap();
         assert!(s.contains("w/o"));
+        // non-default backends render only the serving/cluster
+        // summaries — a figN request must refuse, not mislabel
+        let scnn = BackendKind::Scnn;
+        assert!(
+            figure("fig15", Effort::QUICK, 1, &[16], scnn, &mut Store::in_memory())
+                .is_none()
+        );
     }
 }

@@ -14,11 +14,13 @@
 //! wall-time while preserving the reported ratios (tiles and layers are
 //! sampled deterministically).
 
+pub mod backends;
 pub mod cluster;
 pub mod figures;
 pub mod serving;
 pub mod tables;
 
+pub use backends::{backends, backends_in};
 pub use cluster::{cluster, cluster_in};
 pub use figures::*;
 pub use serving::{serving, serving_in};

@@ -10,6 +10,7 @@
 //! (`s2engine sweep serving --out DIR --resume`).
 
 use super::{Effort, TextTable};
+use crate::backend::BackendKind;
 use crate::config::ArrayConfig;
 use crate::models::FeatureSubset;
 use crate::sweep::{Grid, Job, Runner, Store};
@@ -21,30 +22,49 @@ const BATCHES: [usize; 3] = [1, 4, 8];
 /// Double-buffer overlap fractions the summary sweeps.
 const OVERLAPS: [f64; 2] = [0.0, 0.6];
 
-/// Serving summary with a throwaway in-memory store.
-pub fn serving(effort: Effort, seed: u64) -> String {
-    serving_in(effort, seed, &mut Store::in_memory())
+/// Serving summary with a throwaway in-memory store. `backend` selects
+/// the accelerator model serving the requests ([`crate::backend`]):
+/// `s2engine sweep serving --backend scnn` renders this same summary
+/// for the SCNN comparator.
+pub fn serving(effort: Effort, seed: u64, backend: BackendKind) -> String {
+    serving_in(effort, seed, backend, &mut Store::in_memory())
 }
 
 /// [`serving`] against an explicit (possibly resumable) store.
-pub fn serving_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+pub fn serving_in(
+    effort: Effort,
+    seed: u64,
+    backend: BackendKind,
+    store: &mut Store,
+) -> String {
+    // the analytic comparators model 1024-multiplier machines;
+    // evaluate them at PE parity (Table V's normalization) instead of
+    // the S² default 16x16 working point
+    let scale = backend.parity_scale().unwrap_or(16);
     let grid = Grid::new(effort, seed)
         .models(&PAPER_MODELS)
+        .scales(&[(scale, scale)])
         .batches(&BATCHES)
-        .overlaps(&OVERLAPS);
+        .overlaps(&OVERLAPS)
+        .backends(&[backend]);
     let res = Runner::new().run(&grid.plan(), store);
     let mut t = TextTable::new(
-        "Serving — pipelined network-level inference (16x16, avg subset)",
+        format!(
+            "Serving — pipelined network-level inference ({scale}x{scale}, \
+             avg subset, backend {})",
+            backend.tag()
+        ),
         &[
             "model", "batch", "overlap", "p50 lat", "p95 lat", "p99 lat",
             "images/s", "occupancy", "gain",
         ],
     );
-    let array = ArrayConfig::new(16, 16);
+    let array = ArrayConfig::new(scale, scale);
     let job = |m: &str, b: usize, ov: f64| {
         Job::subset(m, FeatureSubset::Average, array, true, seed, effort)
             .with_batch(b)
             .with_overlap(ov)
+            .with_backend(backend)
     };
     // records recovered from a store written before the serving axes
     // existed carry no serving metrics — render "n/a", never zeros or
@@ -109,13 +129,26 @@ mod tests {
             layer_stride: 8,
             images: 0,
         };
-        let s = serving(effort, 0xc0de_cafe_0021);
+        let s = serving(effort, 0xc0de_cafe_0021, BackendKind::S2);
         for m in PAPER_MODELS {
             assert!(s.contains(m), "missing {m} in:\n{s}");
         }
         assert!(s.contains("p99 lat"));
         assert!(s.contains("images/s"));
         assert!(s.contains("1.00x"), "baseline gain row present");
+    }
+
+    #[test]
+    fn serving_summary_runs_under_an_analytic_backend() {
+        let effort = Effort {
+            tile_samples: 1,
+            layer_stride: 8,
+            images: 0,
+        };
+        let s = serving(effort, 0xc0de_cafe_0023, BackendKind::Scnn);
+        assert!(s.contains("backend scnn"), "title names the backend:\n{s}");
+        assert!(s.contains("1.00x"), "baseline gain row present");
+        assert!(!s.contains("n/a"), "analytic run measures every point:\n{s}");
     }
 
     #[test]
@@ -139,7 +172,7 @@ mod tests {
         };
         let seed = 0xc0de_cafe_0022;
         let mut warm = Store::in_memory();
-        let _ = serving_in(effort, seed, &mut warm);
+        let _ = serving_in(effort, seed, BackendKind::S2, &mut warm);
         let base_job = Job::subset(
             "alexnet",
             FeatureSubset::Average,
@@ -160,7 +193,7 @@ mod tests {
         assert!(!legacy.has_serving_metrics());
         let mut store = Store::in_memory();
         store.admit(legacy);
-        let s = serving_in(effort, seed, &mut store);
+        let s = serving_in(effort, seed, BackendKind::S2, &mut store);
         assert!(s.contains("n/a"), "legacy point must render n/a:\n{s}");
         assert!(s.contains("pre-serving store"), "footnote expected");
         assert!(!s.contains("inf") && !s.contains("NaN"), "no inf/NaN:\n{s}");

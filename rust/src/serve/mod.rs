@@ -94,6 +94,9 @@ impl Default for ServeConfig {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub model: String,
+    /// Tag of the accelerator backend that produced the layer walls
+    /// ([`crate::backend::Backend::tag`]; `"s2"` for the classic path).
+    pub backend: String,
     pub cfg: ServeConfig,
     /// The per-layer simulation shared by every request (bit-identical
     /// to the per-layer path's results).
@@ -109,19 +112,35 @@ pub struct ServeReport {
 impl ServeReport {
     /// Schedule `cfg.requests` images of the network described by
     /// `layers` (durations = simulated per-layer walls) and summarize.
+    /// The classic S²Engine entry point; see
+    /// [`ServeReport::assemble_backend`] for other backends.
     pub fn assemble(
         model: impl Into<String>,
         cfg: ServeConfig,
         layers: Vec<LayerResult>,
     ) -> ServeReport {
+        ServeReport::assemble_backend(model, "s2", cfg, layers)
+    }
+
+    /// [`ServeReport::assemble`] with an explicit backend tag
+    /// ([`crate::backend`]): the durations come from each layer's
+    /// backend-dispatched [`LayerResult::wall`], so analytic comparator
+    /// layers schedule exactly like event-simulated ones.
+    pub fn assemble_backend(
+        model: impl Into<String>,
+        backend: impl Into<String>,
+        cfg: ServeConfig,
+        layers: Vec<LayerResult>,
+    ) -> ServeReport {
         let dag = LayerDag::chain(layers.len());
-        let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+        let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
         let arrivals = Arrivals::open_loop(cfg.requests.max(1), cfg.rate, cfg.seed);
         let schedule =
             PipelineSchedule::build(&dag, &durations, &arrivals.times, cfg.batch, cfg.overlap);
         let latency = LatencyStats::from_latencies(&schedule.latencies(&arrivals.times));
         ServeReport {
             model: model.into(),
+            backend: backend.into(),
             cfg,
             layers,
             arrivals,
@@ -137,7 +156,7 @@ impl ServeReport {
 
     /// Per-layer walls, in layer order (the schedule's durations).
     pub fn durations(&self) -> Vec<f64> {
-        self.layers.iter().map(|l| l.s2_wall()).collect()
+        self.layers.iter().map(|l| l.wall()).collect()
     }
 
     /// Wall-clock of the whole run at the modeled clock (seconds).
@@ -192,7 +211,7 @@ impl ServeReport {
     pub fn per_image_energy(&self) -> Energy {
         let mut total = Energy::default();
         for l in &self.layers {
-            let e = l.s2_energy();
+            let e = l.energy();
             total.onchip.mac_pj += e.onchip.mac_pj;
             total.onchip.sram_pj += e.onchip.sram_pj;
             total.onchip.fifo_pj += e.onchip.fifo_pj;
@@ -207,6 +226,7 @@ impl ServeReport {
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("backend".into(), Json::Str(self.backend.clone()));
         o.insert("batch".into(), Json::Num(self.cfg.batch as f64));
         o.insert("overlap".into(), Json::Num(self.cfg.overlap));
         o.insert("requests".into(), Json::Num(self.arrivals.len() as f64));
@@ -233,8 +253,8 @@ impl ServeReport {
             .map(|l| {
                 let mut lo = BTreeMap::new();
                 lo.insert("layer".into(), Json::Str(l.layer.clone()));
-                lo.insert("wall_s".into(), Json::Num(l.s2_wall()));
-                lo.insert("ds_cycles".into(), Json::Num(l.s2.ds_cycles as f64));
+                lo.insert("wall_s".into(), Json::Num(l.wall()));
+                lo.insert("cycles".into(), Json::Num(l.cycles() as f64));
                 Json::Obj(lo)
             })
             .collect();

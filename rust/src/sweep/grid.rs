@@ -30,6 +30,7 @@
 //! ```
 
 use super::plan::{resolve_model, Job, Plan};
+use crate::backend::BackendKind;
 use crate::cluster::ShardStrategy;
 use crate::config::{ArrayConfig, FifoDepths};
 use crate::models::FeatureSubset;
@@ -69,6 +70,9 @@ pub struct Grid {
     pub arrays: Vec<usize>,
     /// Cluster sharding strategies.
     pub shards: Vec<ShardStrategy>,
+    /// Accelerator backends ([`crate::backend`]); `s2` = the classic
+    /// cycle-accurate evaluation point.
+    pub backends: Vec<BackendKind>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -89,6 +93,7 @@ impl Grid {
             overlaps: vec![0.0],
             arrays: vec![1],
             shards: vec![ShardStrategy::DataParallel],
+            backends: vec![BackendKind::S2],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -155,6 +160,11 @@ impl Grid {
         self
     }
 
+    pub fn backends(mut self, backends: &[BackendKind]) -> Grid {
+        self.backends = backends.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -181,11 +191,12 @@ impl Grid {
             * self.overlaps.len()
             * self.arrays.len()
             * self.shards.len()
+            * self.backends.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
     /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
-    /// overlap, arrays, shard.
+    /// overlap, arrays, shard, backend.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -206,31 +217,35 @@ impl Grid {
                                         for &overlap in &self.overlaps {
                                             for &n_arrays in &self.arrays {
                                                 for &shard in &self.shards {
-                                                    let array =
-                                                        ArrayConfig::new(rows, cols)
-                                                            .with_fifo(fifo)
-                                                            .with_ratio(ratio);
-                                                    let job = match (subset, density) {
-                                                        (Some(s), _) => Job::subset(
-                                                            model, s, array, ce,
-                                                            self.seed, effort,
-                                                        )
-                                                        .with_ratio16(r16),
-                                                        (_, Some((fd, wd))) => {
-                                                            Job::synthetic(
-                                                                model, fd, wd, array,
-                                                                r16, self.seed, effort,
+                                                    for &backend in &self.backends {
+                                                        let array =
+                                                            ArrayConfig::new(rows, cols)
+                                                                .with_fifo(fifo)
+                                                                .with_ratio(ratio);
+                                                        let job = match (subset, density) {
+                                                            (Some(s), _) => Job::subset(
+                                                                model, s, array, ce,
+                                                                self.seed, effort,
                                                             )
-                                                            .with_ce(ce)
-                                                        }
-                                                        _ => unreachable!(),
-                                                    };
-                                                    jobs.push(
-                                                        job.with_batch(batch)
-                                                            .with_overlap(overlap)
-                                                            .with_arrays(n_arrays)
-                                                            .with_shard(shard),
-                                                    );
+                                                            .with_ratio16(r16),
+                                                            (_, Some((fd, wd))) => {
+                                                                Job::synthetic(
+                                                                    model, fd, wd, array,
+                                                                    r16, self.seed,
+                                                                    effort,
+                                                                )
+                                                                .with_ce(ce)
+                                                            }
+                                                            _ => unreachable!(),
+                                                        };
+                                                        jobs.push(
+                                                            job.with_batch(batch)
+                                                                .with_overlap(overlap)
+                                                                .with_arrays(n_arrays)
+                                                                .with_shard(shard)
+                                                                .with_backend(backend),
+                                                        );
+                                                    }
                                                 }
                                             }
                                         }
@@ -262,6 +277,8 @@ impl Grid {
     /// | `overlap`   | serving overlap fractions in `[0, 0.95]`            |
     /// | `arrays`    | cluster sizes (integers >= 1)                       |
     /// | `shard`     | `data`, `pipeline`, `tensor`, or `all` (all 3)      |
+    /// | `backend`   | `s2`, `naive`, `gate`, `skipf`, `skipw`, `scnn`,    |
+    /// |             | `sparten`, or `all` (those 7)                       |
     /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
     /// | `samples`   | tiles sampled per layer (overrides effort)          |
     /// | `stride`    | layer thinning stride (overrides effort)            |
@@ -443,6 +460,18 @@ impl Grid {
                         tag => match ShardStrategy::from_tag(tag) {
                             Some(s) => self.shards.push(s),
                             None => return Err(bad("shard", tag)),
+                        },
+                    }
+                }
+            }
+            "backend" | "backends" => {
+                self.backends = Vec::new();
+                for v in values {
+                    match *v {
+                        "all" => self.backends.extend(BackendKind::ALL),
+                        tag => match BackendKind::from_tag(tag) {
+                            Some(b) => self.backends.push(b),
+                            None => return Err(bad("backend", tag)),
                         },
                     }
                 }
@@ -629,6 +658,40 @@ mod tests {
         assert!(Grid::from_spec("arrays=0").is_err());
         assert!(Grid::from_spec("arrays=two").is_err());
         assert!(Grid::from_spec("shard=mesh").is_err());
+        assert!(Grid::from_spec("backend=abacus").is_err());
+        assert!(Grid::from_spec("backend=s2,scnn").is_ok());
+    }
+
+    #[test]
+    fn backend_axis_expands_innermost() {
+        // the acceptance-criteria grid shape: backends x cluster sizes
+        let g = Grid::from_spec(
+            "backend=s2,naive,scnn,sparten;model=alexnet;arrays=1,4",
+        )
+        .unwrap();
+        assert_eq!(g.backends.len(), 4);
+        assert_eq!(g.size(), 8);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 8);
+        // backend innermost, then arrays
+        assert_eq!(jobs[0].backend, BackendKind::S2);
+        assert_eq!(jobs[1].backend, BackendKind::Naive);
+        assert_eq!(jobs[2].backend, BackendKind::Scnn);
+        assert_eq!(jobs[3].backend, BackendKind::SparTen);
+        assert_eq!((jobs[4].arrays, jobs[4].backend), (4, BackendKind::S2));
+        // the default point keeps the historical (pre-backend) key shape
+        assert!(jobs[0].is_default_backend());
+        assert!(!jobs[0].canonical().contains("|be:"));
+        assert!(jobs[1].canonical().ends_with("|be:naive"));
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8, "backend axis must distinguish keys");
+        // `all` expands to the full roster; JSON grid form parses the same
+        let g = Grid::from_spec("models=s2net;backend=all").unwrap();
+        assert_eq!(g.backends, BackendKind::ALL.to_vec());
+        let j = Json::parse(r#"{"models": ["s2net"], "backend": ["all"]}"#).unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! A [`Plan`] is the deterministic expansion of a [`super::Grid`] —
 //! the ordered job list a [`super::Runner`] executes.
 
+use crate::backend::BackendKind;
 use crate::cluster::ShardStrategy;
 use crate::config::ArrayConfig;
 use crate::models::{zoo, FeatureSubset, Model};
@@ -107,6 +108,10 @@ pub struct Job {
     /// Cluster sharding strategy; only meaningful with `arrays > 1`
     /// (every strategy degenerates to the plain pipeline at one array).
     pub shard: ShardStrategy,
+    /// Accelerator backend that evaluates the layers
+    /// ([`crate::backend`]); [`BackendKind::S2`] is the classic
+    /// cycle-accurate evaluation point.
+    pub backend: BackendKind,
 }
 
 impl Job {
@@ -132,6 +137,7 @@ impl Job {
             overlap: 0.0,
             arrays: 1,
             shard: ShardStrategy::DataParallel,
+            backend: BackendKind::S2,
         }
     }
 
@@ -161,6 +167,7 @@ impl Job {
             overlap: 0.0,
             arrays: 1,
             shard: ShardStrategy::DataParallel,
+            backend: BackendKind::S2,
         }
     }
 
@@ -194,6 +201,11 @@ impl Job {
         self
     }
 
+    pub fn with_backend(mut self, backend: BackendKind) -> Job {
+        self.backend = backend;
+        self
+    }
+
     /// Is this job a plain per-layer evaluation point (the pre-serving
     /// default)? Such jobs keep their historical canonical form — and
     /// therefore their [`Job::key`] — so stores written before the
@@ -208,6 +220,14 @@ impl Job {
     /// existed still resume.
     pub fn is_default_cluster(&self) -> bool {
         self.arrays <= 1 && self.shard == ShardStrategy::DataParallel
+    }
+
+    /// Is this job an S²Engine point (the pre-backend default)? Such
+    /// jobs keep their historical canonical form — and therefore their
+    /// [`Job::key`] — so stores written before the `backend` axis
+    /// existed still resume.
+    pub fn is_default_backend(&self) -> bool {
+        self.backend.is_default()
     }
 
     /// The cluster configuration this job implies.
@@ -264,12 +284,13 @@ impl Job {
             self.tile_samples,
             self.layer_stride,
         );
-        // Serving and cluster fields are appended only when non-default:
-        // default jobs keep the pre-serving/pre-cluster canonical form,
+        // Serving, cluster and backend fields are appended only when
+        // non-default: default jobs keep the historical canonical form,
         // so keys — and therefore on-disk stores written before the
-        // `batch`/`overlap`/`arrays`/`shard` axes existed — stay valid
-        // under `--resume`. The suffixes are prefix-distinct (`|b`, `|a`)
-        // so every elision combination stays injective.
+        // `batch`/`overlap`/`arrays`/`shard`/`backend` axes existed —
+        // stay valid under `--resume`. The suffixes are prefix-distinct
+        // (`|b` + digits, `|a` + digits, `|be:`) and compose in a fixed
+        // order, so every elision combination stays injective.
         let mut canon = base;
         if !self.is_default_serving() {
             canon = format!(
@@ -280,6 +301,9 @@ impl Job {
         }
         if !self.is_default_cluster() {
             canon = format!("{canon}|a{}|sh:{}", self.arrays, self.shard.tag());
+        }
+        if !self.is_default_backend() {
+            canon = format!("{canon}|be:{}", self.backend.tag());
         }
         canon
     }
@@ -358,6 +382,11 @@ impl Job {
             o.insert("arrays".into(), Json::Num(self.arrays as f64));
             o.insert("shard".into(), Json::Str(self.shard.tag().into()));
         }
+        // backend likewise elided at the s2 default (pre-backend stores
+        // parse back as backend=s2)
+        if !self.is_default_backend() {
+            o.insert("backend".into(), Json::Str(self.backend.tag().into()));
+        }
         Json::Obj(o)
     }
 
@@ -427,6 +456,11 @@ impl Job {
                 Some(Json::Str(tag)) => ShardStrategy::from_tag(tag)
                     .ok_or_else(|| format!("unknown shard strategy `{tag}`"))?,
                 _ => ShardStrategy::DataParallel,
+            },
+            backend: match j.get("backend") {
+                Some(Json::Str(tag)) => BackendKind::from_tag(tag)
+                    .ok_or_else(|| format!("unknown backend `{tag}`"))?,
+                _ => BackendKind::S2,
             },
         })
     }
@@ -578,6 +612,79 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq.len(), keys.len(), "cluster axes must distinguish keys");
+    }
+
+    #[test]
+    fn default_backend_keeps_historical_keys() {
+        // Pre-backend stores must keep resuming: a backend=s2 job keys
+        // exactly as it did before the backend axis existed — including
+        // when serving/cluster axes are non-default. The canonical forms
+        // are locked against the PR-3/PR-4-era constants.
+        let j = job();
+        assert!(j.is_default_backend());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        assert_eq!(j.clone().with_backend(BackendKind::S2).key(), j.key());
+        // non-default backends extend — and change — the key
+        let n = j.clone().with_backend(BackendKind::Naive);
+        assert!(n.canonical().ends_with("|be:naive"));
+        assert_ne!(n.key(), j.key());
+        let s = j.clone().with_backend(BackendKind::Scnn);
+        assert!(s.canonical().ends_with("|be:scnn"));
+        // the backend suffix composes after serving + cluster, in a
+        // fixed injective order
+        let full = j
+            .clone()
+            .with_batch(4)
+            .with_arrays(2)
+            .with_shard(ShardStrategy::LayerPipeline)
+            .with_backend(BackendKind::SparTen);
+        assert!(full
+            .canonical()
+            .ends_with("|b4|ov:0000000000000000|a2|sh:pipeline|be:sparten"));
+        let keys = [
+            j.key(),
+            n.key(),
+            s.key(),
+            full.key(),
+            j.clone().with_backend(BackendKind::SparTen).key(),
+            j.clone()
+                .with_backend(BackendKind::Gating(
+                    crate::baseline::gating::Exploits::SkipFeature,
+                ))
+                .key(),
+        ];
+        let mut uniq = keys.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "backend axis must distinguish keys");
+    }
+
+    #[test]
+    fn backend_job_json_roundtrip_and_legacy_parse() {
+        let j = job()
+            .with_batch(2)
+            .with_arrays(4)
+            .with_backend(BackendKind::Scnn);
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(j.key(), back.key());
+        // a pre-backend line (no backend key) parses to the s2 default
+        let legacy = job().with_batch(2).to_json().to_string();
+        assert!(!legacy.contains("backend"));
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(parsed.backend, BackendKind::S2);
+        assert!(parsed.is_default_backend());
+        // a garbage backend tag is rejected, not silently defaulted
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("backend".into(), Json::Str("abacus".into()));
+        }
+        assert!(Job::from_json(&bad).is_err());
     }
 
     #[test]

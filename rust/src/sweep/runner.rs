@@ -16,8 +16,9 @@
 
 use super::plan::{resolve_model, Job, Plan, Workload};
 use super::store::{Store, SweepRecord};
+use crate::backend::Backend;
 use crate::config::SimConfig;
-use crate::coordinator::{Coordinator, ModelResult};
+use crate::coordinator::ModelResult;
 use crate::util::pool;
 use std::collections::HashMap;
 
@@ -88,11 +89,13 @@ impl Runner {
 
 /// Run one job to completion (the coordinator does the per-tile
 /// fan-out/memoization; this resolves the model, thins it to the job's
-/// effort, and applies the configuration). The layers are simulated
-/// once and feed the per-layer metrics ([`ModelResult`]), the job's
-/// pipelined serving run ([`Job::serve_config`]'s closed-loop window
-/// protocol), and its scale-out cluster run ([`Job::cluster_config`]) —
-/// all pure arithmetic on top.
+/// effort, applies the configuration, and instantiates the job's
+/// accelerator backend — [`crate::backend::BackendKind::build`]). The
+/// layers are evaluated once and feed the per-layer metrics
+/// ([`ModelResult`]), the job's pipelined serving run
+/// ([`Job::serve_config`]'s closed-loop window protocol), and its
+/// scale-out cluster run ([`Job::cluster_config`]) — all pure
+/// arithmetic on top, whichever backend produced the walls.
 ///
 /// Panics on an unresolvable model name — [`crate::sweep::Grid`]
 /// validation rejects those before a plan ever reaches the runner.
@@ -106,23 +109,32 @@ pub fn execute(job: &Job, inner_workers: usize) -> SweepRecord {
         .with_ce(job.ce)
         .with_ratio16(job.ratio16)
         .with_workers(inner_workers);
-    let coord = Coordinator::new(cfg);
+    let backend = job.backend.build(&cfg);
     let layers = match job.workload {
-        Workload::Subset(subset) => coord.layer_results_subset(&model, subset),
+        Workload::Subset(subset) => {
+            crate::backend::layer_results_subset(backend.as_ref(), &model, subset, cfg.seed)
+        }
         Workload::Synthetic {
             feature_density,
             weight_density,
-        } => coord.layer_results_synthetic(&model, feature_density, weight_density),
+        } => crate::backend::layer_results_synthetic(
+            backend.as_ref(),
+            &model,
+            feature_density,
+            weight_density,
+        ),
     };
-    let result = ModelResult::new(&model, &coord.cfg, layers.clone());
-    let cluster = crate::cluster::ClusterReport::assemble(
+    let result = ModelResult::new(&model, &cfg, layers.clone());
+    let cluster = crate::cluster::ClusterReport::assemble_backend(
         model.name.clone(),
+        backend.tag(),
         job.cluster_config(),
         job.serve_config(),
         layers.clone(),
     );
-    let serve = crate::serve::ServeReport::assemble(
+    let serve = crate::serve::ServeReport::assemble_backend(
         model.name.clone(),
+        backend.tag(),
         job.serve_config(),
         layers,
     );
@@ -325,6 +337,43 @@ mod tests {
         // the 4-way tensor shard moves bytes; data-parallel never does
         assert_eq!(res.records()[2].link_bytes, 0.0);
         assert!(res.records()[3].link_bytes > 0.0);
+    }
+
+    #[test]
+    fn backend_axis_flows_through_to_record_metrics() {
+        // a backend grid produces per-backend metrics: the naive point
+        // is its own baseline (speedup exactly 1), the dual-sparse
+        // comparators beat it, and serving metrics exist for every point
+        use crate::backend::BackendKind;
+        let g = Grid::new(tiny(), SEED ^ 0xbe)
+            .models(&["s2net"])
+            .scales(&[(8, 8)])
+            .backends(&[BackendKind::S2, BackendKind::Naive, BackendKind::Scnn]);
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&g.plan(), &mut store);
+        assert_eq!(res.len(), 3);
+        let (s2, naive, scnn) = (
+            &res.records()[0],
+            &res.records()[1],
+            &res.records()[2],
+        );
+        assert_eq!(s2.job.backend, BackendKind::S2);
+        assert_eq!(naive.job.backend, BackendKind::Naive);
+        assert_eq!(naive.speedup, 1.0, "naive is its own baseline");
+        assert!(s2.speedup > 1.0);
+        assert!(scnn.speedup > 1.0);
+        for rec in res.records() {
+            assert!(rec.has_serving_metrics());
+            assert!(rec.s2_wall > 0.0 && rec.naive_wall > 0.0);
+            assert!(rec.throughput > 0.0);
+        }
+        // same workload, same naive denominator across backends
+        assert_eq!(s2.naive_wall, naive.naive_wall);
+        assert_eq!(s2.naive_wall, scnn.naive_wall);
+        // re-running reuses everything (backend keys are stable)
+        let res2 = Runner::new().run(&g.plan(), &mut store);
+        assert_eq!(res2.ran, 0);
+        assert_eq!(res.records(), res2.records());
     }
 
     #[test]

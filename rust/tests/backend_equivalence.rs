@@ -1,0 +1,395 @@
+//! Backend-trait equivalence suite.
+//!
+//! The unified [`s2engine::backend::Backend`] abstraction is only safe
+//! because of two contracts this suite enforces:
+//!
+//! 1. **S² bit-identity** — routing the S²Engine evaluation through the
+//!    trait ([`S2Backend`], `simulate_model_pipelined_with`,
+//!    `simulate_model_cluster_with`, the sweep runner's backend
+//!    dispatch) is **bit-identical** to the pre-trait direct
+//!    `Coordinator` paths: same per-layer densities (the jitter loop
+//!    moved, it must not have changed), same `TileStats`, same
+//!    makespans, same sweep records — and a `backend = s2` job keys
+//!    exactly as it did before the axis existed, so every existing
+//!    JSONL store keeps resuming (literal legacy line locked below).
+//! 2. **Analytic wall fidelity** — each analytic backend's
+//!    batch=1/overlap=0 single-request serving makespan equals its
+//!    closed-form cost model's wall: bit-exactly on the golden
+//!    single-layer workloads of `rust/tests/baseline_golden.rs`, and
+//!    bit-exactly as the left-fold of the per-layer analytic walls on
+//!    multi-layer models (which is the `model_cost` wall up to the
+//!    per-layer ceil/summation the per-layer serving model makes
+//!    explicit — asserted within float-fold tolerance).
+
+use s2engine::backend::{self, BackendKind, S2Backend};
+use s2engine::baseline::{gating, naive, scnn, sparten};
+use s2engine::cluster::{ClusterConfig, ShardStrategy};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset, LayerDesc, Model};
+use s2engine::serve::ServeConfig;
+use s2engine::sweep::{Grid, Job, Runner, Store, SweepRecord};
+
+fn coord(samples: usize, seed: u64) -> Coordinator {
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(samples)
+        .with_seed(seed);
+    Coordinator::new(cfg)
+}
+
+/// A one-layer model with no per-layer density jitter, so the subset
+/// path evaluates the layer at exactly `(fd, wd)`.
+fn single_layer_model(layer: LayerDesc, fd: f64, wd: f64) -> Model {
+    Model {
+        name: "golden".into(),
+        layers: vec![layer],
+        weight_density: wd,
+        feature_density: fd,
+        feature_density_sigma: 0.0,
+    }
+}
+
+#[test]
+fn s2_backend_reproduces_the_pre_trait_jitter_loop_bit_exactly() {
+    // the per-layer density derivation moved from Coordinator into
+    // backend::layer_results_subset; this replays the historical inline
+    // loop and demands bit-identical results from the delegated path
+    for model in [zoo::alexnet(), zoo::s2net()] {
+        let c = coord(2, 0xc0de_cafe_0080);
+        let via_trait = c.layer_results_subset(&model, FeatureSubset::Average);
+        let base = FeatureSubset::Average.density(&model);
+        let seed = c.cfg.seed;
+        for (i, (layer, r)) in model.layers.iter().zip(&via_trait).enumerate() {
+            let jitter = if model.feature_density_sigma > 0.0 {
+                let x = ((seed ^ (i as u64 * 0x9e37)) % 1000) as f64 / 1000.0;
+                (x - 0.5) * model.feature_density_sigma * 0.5
+            } else {
+                0.0
+            };
+            let fd = (base + jitter).clamp(0.02, 0.98);
+            let direct = c.simulate_layer(layer, fd, model.weight_density, true);
+            assert_eq!(direct.s2, r.s2, "TileStats must be bit-identical");
+            assert_eq!(direct.naive, r.naive);
+            assert_eq!(direct.feature_density.to_bits(), r.feature_density.to_bits());
+            assert_eq!(direct.wall().to_bits(), r.wall().to_bits());
+            assert_eq!(direct.energy(), r.energy());
+            assert!(r.analytic.is_none());
+        }
+    }
+}
+
+#[test]
+fn s2_serve_path_via_trait_is_bit_identical() {
+    let c = coord(2, 0xc0de_cafe_0081);
+    let model = zoo::alexnet();
+    let backend = S2Backend::new(c.clone());
+    for &(batch, overlap, requests) in &[(1usize, 0.0, 1usize), (4, 0.6, 12)] {
+        let serve = ServeConfig::new(batch, overlap).with_requests(requests);
+        let direct = c.simulate_model_pipelined(&model, FeatureSubset::Average, &serve);
+        let via = c.simulate_model_pipelined_with(
+            &backend,
+            &model,
+            FeatureSubset::Average,
+            &serve,
+        );
+        assert_eq!(via.backend, "s2");
+        assert_eq!(direct.makespan().to_bits(), via.makespan().to_bits());
+        assert_eq!(direct.schedule, via.schedule, "placements must match");
+        assert_eq!(direct.latency, via.latency);
+        assert_eq!(direct.arrivals, via.arrivals);
+        assert_eq!(direct.per_image_energy(), via.per_image_energy());
+        for (a, b) in direct.layers.iter().zip(&via.layers) {
+            assert_eq!(a.s2, b.s2);
+            assert_eq!(a.wall().to_bits(), b.wall().to_bits());
+        }
+    }
+}
+
+#[test]
+fn s2_cluster_path_via_trait_is_bit_identical() {
+    let c = coord(1, 0xc0de_cafe_0082);
+    let model = zoo::s2net();
+    let backend = S2Backend::new(c.clone());
+    let serve = ServeConfig::new(2, 0.5).with_requests(8);
+    for shard in ShardStrategy::ALL {
+        for arrays in [1usize, 4] {
+            let cluster = ClusterConfig::new(arrays, shard);
+            let direct =
+                c.simulate_model_cluster(&model, FeatureSubset::Average, &serve, &cluster);
+            let via = c.simulate_model_cluster_with(
+                &backend,
+                &model,
+                FeatureSubset::Average,
+                &serve,
+                &cluster,
+            );
+            assert_eq!(via.backend, "s2");
+            assert_eq!(direct.makespan().to_bits(), via.makespan().to_bits());
+            assert_eq!(direct.schedule.finish_times, via.schedule.finish_times);
+            assert_eq!(direct.latency, via.latency);
+            assert_eq!(direct.link_bytes(), via.link_bytes());
+            assert_eq!(
+                direct.single_makespan.to_bits(),
+                via.single_makespan.to_bits()
+            );
+        }
+    }
+}
+
+#[test]
+fn default_backend_job_keys_and_legacy_store_line_stay_valid() {
+    // a backend=s2 job keys exactly as before the axis existed
+    let j = Job::subset(
+        "alexnet",
+        FeatureSubset::Average,
+        ArrayConfig::new(16, 16),
+        true,
+        0x5eed,
+        s2engine::report::Effort::QUICK,
+    );
+    assert!(j.is_default_backend());
+    assert_eq!(
+        j.canonical(),
+        "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+    );
+    assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+    assert_eq!(j.clone().with_backend(BackendKind::S2).key(), j.key());
+    assert_ne!(j.clone().with_backend(BackendKind::Scnn).key(), j.key());
+
+    // A literal JSONL line in the exact shape the PR-4 store wrote (no
+    // `backend` job field; key computed before the axis existed). The
+    // forward-compatibility contract: it must parse to backend=s2 and
+    // recompute the SAME key, or every pre-backend store stops resuming.
+    let line = r#"{"key": "b6f23c1520d9bff9", "job": {"ce": true, "cols": 8, "fifo": [4, 4, 4], "model": "alexnet", "ratio": 4, "ratio16": 0, "rows": 8, "samples": 2, "seed": "1", "stride": 4, "workload": "avg", "batch": 4, "overlap": 0.5}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "naive_wall": 0.0045, "onchip_ee": 1.8, "total_ee": 2.9, "p50": 0.0013, "p95": 0.0026, "p99": 0.0029, "s2_wall": 0.00125, "speedup": 3.6, "throughput": 812.5, "occupancy": 0.87}}"#;
+    let rec = SweepRecord::from_json_line(line).unwrap();
+    assert_eq!(rec.job.backend, BackendKind::S2);
+    assert!(rec.job.is_default_backend());
+    assert_eq!(rec.job.key_hex(), "b6f23c1520d9bff9");
+    // re-rendering still elides the default backend
+    assert!(!rec.to_json_line().contains("backend"));
+    let back = SweepRecord::from_json_line(&rec.to_json_line()).unwrap();
+    assert_eq!(back.job.key(), rec.job.key());
+}
+
+#[test]
+fn analytic_single_layer_golden_walls_flow_through_serving_exactly() {
+    // the hand-derived closed forms of baseline_golden.rs, end to end
+    // through the serving path: single layer, batch 1, overlap 0,
+    // one request -> makespan IS the analytic wall, bit for bit
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+
+    // naive: 4x4x16 / 1x1 / cout 4 on 8x8 -> 76 MAC cycles
+    let g = LayerDesc::new("g", 4, 4, 16, 1, 1, 4, 1, 0);
+    let model = single_layer_model(g.clone(), 0.5, 0.5);
+    let backend = BackendKind::Naive.build(&cfg);
+    let r = Coordinator::new(cfg.clone()).simulate_model_pipelined_with(
+        backend.as_ref(),
+        &model,
+        FeatureSubset::Average,
+        &ServeConfig::default(),
+    );
+    let expect = naive::layer_cost(&g, &cfg.array).wall_seconds();
+    assert_eq!(naive::layer_cost(&g, &cfg.array).mac_cycles, 76);
+    assert_eq!(r.makespan().to_bits(), expect.to_bits());
+    assert_eq!(r.latency.p99.to_bits(), expect.to_bits());
+    // and model_cost of the one-layer model is the same wall, exactly
+    assert_eq!(
+        naive::model_cost(&model, &cfg.array).wall_seconds().to_bits(),
+        expect.to_bits()
+    );
+
+    // scnn / sparten: 1e6 dense MACs at (0.5, 0.5) -> 310 / 266 cycles
+    let m6 = LayerDesc::new("m6", 10, 10, 100, 1, 1, 100, 1, 0);
+    assert_eq!(m6.macs(), 1_000_000);
+    let model = single_layer_model(m6.clone(), 0.5, 0.5);
+    for (kind, cycles) in [(BackendKind::Scnn, 310u64), (BackendKind::SparTen, 266u64)] {
+        let backend = kind.build(&cfg);
+        let r = Coordinator::new(cfg.clone()).simulate_model_pipelined_with(
+            backend.as_ref(),
+            &model,
+            FeatureSubset::Average,
+            &ServeConfig::default(),
+        );
+        let expect = s2engine::baseline::wall_seconds(cycles);
+        assert_eq!(
+            r.makespan().to_bits(),
+            expect.to_bits(),
+            "{}: makespan must be the golden wall",
+            kind.tag()
+        );
+    }
+    // the single-layer model_cost walls agree exactly too
+    assert_eq!(
+        scnn::model_cost(&model).wall_seconds().to_bits(),
+        s2engine::baseline::wall_seconds(310).to_bits()
+    );
+    assert_eq!(
+        sparten::model_cost(&model).wall_seconds().to_bits(),
+        s2engine::baseline::wall_seconds(266).to_bits()
+    );
+
+    // gating skip-feature: 1_024_000 MACs at df=0.5 -> 500 cycles
+    let g2 = LayerDesc::new("g2", 32, 32, 100, 1, 1, 10, 1, 0);
+    assert_eq!(g2.macs(), 1_024_000);
+    let model = single_layer_model(g2.clone(), 0.5, 0.25);
+    let backend = BackendKind::Gating(gating::Exploits::SkipFeature).build(&cfg);
+    let r = Coordinator::new(cfg.clone()).simulate_model_pipelined_with(
+        backend.as_ref(),
+        &model,
+        FeatureSubset::Average,
+        &ServeConfig::default(),
+    );
+    let c = gating::cost(g2.macs(), 0.5, 0.25, gating::Exploits::SkipFeature);
+    assert_eq!(c.mac_cycles, 500);
+    assert_eq!(r.makespan().to_bits(), c.wall_seconds().to_bits());
+}
+
+#[test]
+fn analytic_multi_layer_makespan_is_the_per_layer_wall_fold() {
+    // multi-layer: the single-request makespan equals the left-fold of
+    // the existing per-layer analytic walls bit-exactly, and tracks the
+    // whole-model closed form to float-fold accuracy (per-layer ceils
+    // sum vs one model-level ceil)
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(16, 16)).with_samples(1);
+    let serve = ServeConfig::default(); // batch 1, overlap 0, 1 request
+    let (fd, wd) = (0.38, 0.34);
+
+    // naive
+    let backend = BackendKind::Naive.build(&cfg);
+    let layers = backend::layer_results_synthetic(backend.as_ref(), &model, fd, wd);
+    let r = s2engine::serve::ServeReport::assemble_backend(
+        "alexnet", "naive", serve, layers,
+    );
+    let mut fold = 0.0f64;
+    for l in &model.layers {
+        fold += naive::layer_cost(l, &cfg.array).wall_seconds();
+    }
+    assert_eq!(r.makespan().to_bits(), fold.to_bits());
+    let whole = naive::model_cost(&model, &cfg.array).wall_seconds();
+    assert!(
+        (r.makespan() - whole).abs() <= whole * 1e-12,
+        "naive: {} vs model_cost {whole}",
+        r.makespan()
+    );
+
+    // scnn / sparten: per-layer cost fold, then the whole-model form
+    let by = |kind: BackendKind, per_layer: &dyn Fn(&LayerDesc) -> f64, whole: f64| {
+        let backend = kind.build(&cfg);
+        let layers = backend::layer_results_synthetic(backend.as_ref(), &model, fd, wd);
+        let r = s2engine::serve::ServeReport::assemble_backend(
+            "alexnet",
+            kind.tag(),
+            serve,
+            layers,
+        );
+        let mut fold = 0.0f64;
+        for l in &model.layers {
+            fold += per_layer(l);
+        }
+        assert_eq!(
+            r.makespan().to_bits(),
+            fold.to_bits(),
+            "{}: fold of per-layer analytic walls",
+            kind.tag()
+        );
+        // per-layer ceils differ from the one whole-model ceil by at
+        // most one cycle per layer — far inside 1e-4 relative
+        assert!(
+            (r.makespan() - whole).abs() <= whole * 1e-4,
+            "{}: {} vs whole-model {whole}",
+            kind.tag(),
+            r.makespan()
+        );
+    };
+    by(
+        BackendKind::Scnn,
+        &|l| scnn::cost(l.macs(), fd, wd).wall_seconds(),
+        scnn::cost(model.total_macs(), fd, wd).wall_seconds(),
+    );
+    by(
+        BackendKind::SparTen,
+        &|l| sparten::cost(l.macs(), fd, wd).wall_seconds(),
+        sparten::cost(model.total_macs(), fd, wd).wall_seconds(),
+    );
+}
+
+#[test]
+fn backend_axis_sweep_runs_end_to_end_with_resume() {
+    // the acceptance grid: four backends x two cluster sizes, streamed
+    // to a store, torn, resumed — bit-identical records, the s2 point
+    // cross-checked against the pre-trait direct Coordinator path
+    let spec = "backend=s2,naive,scnn,sparten;model=alexnet;arrays=1,4;\
+                scales=8;effort=quick;seed=3232382086";
+    let grid = Grid::from_spec(spec).unwrap();
+    let plan = grid.plan();
+    assert_eq!(plan.len(), 8);
+
+    let path = std::env::temp_dir().join(format!(
+        "s2backend-sweep-{}.jsonl",
+        std::process::id()
+    ));
+    let mut store = Store::open(&path, false).unwrap();
+    let reference = Runner::new().run(&plan, &mut store);
+    assert_eq!(reference.ran, 8);
+    drop(store);
+
+    // every backend produced serving metrics; keys all distinct
+    let mut keys: Vec<u64> = reference.records().iter().map(|r| r.job.key()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), 8);
+    for rec in reference.records() {
+        assert!(rec.has_serving_metrics());
+        assert!(rec.s2_wall > 0.0);
+    }
+
+    // the s2 single-array record must equal the direct Coordinator path
+    let s2_job = &plan.jobs[0];
+    assert!(s2_job.is_default_backend() && s2_job.arrays == 1);
+    let s2_rec = reference.get(s2_job);
+    let model = s2engine::sweep::resolve_model("alexnet").unwrap();
+    let model = s2_job.effort().thin(&model);
+    let cfg = SimConfig::new(s2_job.array)
+        .with_samples(s2_job.tile_samples)
+        .with_seed(s2_job.seed)
+        .with_ce(s2_job.ce)
+        .with_ratio16(s2_job.ratio16)
+        .with_workers(1);
+    let c = Coordinator::new(cfg);
+    let layers = c.layer_results_subset(&model, FeatureSubset::Average);
+    let result =
+        s2engine::coordinator::ModelResult::new(&model, &c.cfg, layers.clone());
+    let cluster = s2engine::cluster::ClusterReport::assemble(
+        model.name.clone(),
+        s2_job.cluster_config(),
+        s2_job.serve_config(),
+        layers.clone(),
+    );
+    let serve = s2engine::serve::ServeReport::assemble(
+        model.name.clone(),
+        s2_job.serve_config(),
+        layers,
+    );
+    let direct = SweepRecord::from_result(s2_job.clone(), &result, &serve, &cluster);
+    assert_eq!(s2_rec, &direct, "s2 sweep record must match the direct path");
+
+    // tear the store after 4 complete lines and resume
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 8);
+    let mut partial = lines[..4].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[4][..lines[4].len() / 2]);
+    std::fs::write(&path, &partial).unwrap();
+
+    let mut resumed_store = Store::open(&path, true).unwrap();
+    assert_eq!(resumed_store.recovered, 4);
+    assert_eq!(resumed_store.dropped, 1);
+    let resumed = Runner::new().run(&plan, &mut resumed_store);
+    assert_eq!(resumed.reused, 4);
+    assert_eq!(resumed.ran, 4);
+    assert_eq!(reference.records(), resumed.records());
+    drop(resumed_store);
+    std::fs::remove_file(&path).ok();
+}

@@ -42,6 +42,14 @@ REQUIRED = {
         "model/scaleout-eff-tensor-n4",
         "model/link-traffic-tensor-n4",
     ],
+    "BENCH_backends.json": [
+        "model/speedup-s2",
+        "model/speedup-naive",
+        "model/speedup-scnn",
+        "model/speedup-sparten",
+        "model/onchip-ee-sparten",
+        "model/throughput-s2-b4",
+    ],
     "BENCH_sweep.json": ["sweep/jobs"],
 }
 

@@ -17,11 +17,23 @@ Run `python3 scripts/fuzz_serve_pipeline.py`; exits nonzero with the
 offending configuration on any violation. Keep this file in sync with
 rust/src/serve/pipeline.rs when touching scheduler semantics (see
 .claude/skills/verify/SKILL.md).
+
+Also transcribed here: the per-layer cycle formulas of the analytic
+comparator backends (rust/src/backend/analytic.rs lifting
+rust/src/baseline/{naive,scnn,sparten,gating}.rs). The analytic-backend
+oracle case feeds backend-generated per-layer walls through the same
+schedule transcription and checks the trait-dispatch contract
+rust/tests/backend_equivalence.rs enforces in CI: a batch=1 / overlap=0
+single-request makespan is bit-exactly the left-fold of the analytic
+per-layer walls, and the golden closed forms (76 naive / 310 scnn /
+266 sparten / 500 gating cycles) survive the transcription.
 """
 
+import math
 import random
 
 MAX_OVERLAP = 0.95
+CLK = 500.0 * 1e6  # MAC_FREQ_MHZ as f64 * 1e6
 
 
 def topo_chain(n):
@@ -104,6 +116,113 @@ def serial_makespan(durations, arrivals, batch):
         t = max(t, ready) + (hi - lo) * work
         w += 1
     return t
+
+
+# --- analytic backend transcriptions (rust/src/baseline/*.rs) ---------
+
+
+def naive_cycles(m, k, n, rows, cols):
+    """baseline::naive::layer_cost mac_cycles (integer arithmetic)."""
+    row_tiles = -(-m // rows)
+    col_tiles = -(-n // cols)
+    per_tile = k + (rows - 1) + (cols - 1) + rows
+    return row_tiles * col_tiles * per_tile
+
+
+def _frag(d):
+    nz = max(16.0 * d, 1e-9)
+    slots = math.ceil(nz / 4.0) * 4.0
+    return nz / slots
+
+
+def scnn_cycles(dense_macs, df, dw):
+    """baseline::scnn::cost mac_cycles (f64-faithful transcription)."""
+    must = math.ceil(float(dense_macs) * df * dw)
+    util = 0.79 * _frag(df) * _frag(dw)
+    return int(math.ceil(float(must) / (1024.0 * util)))
+
+
+def sparten_cycles(dense_macs, df, dw):
+    """baseline::sparten::cost mac_cycles."""
+    must = math.ceil(float(dense_macs) * df * dw)
+    return int(math.ceil(float(must) / (1024.0 * 0.92)))
+
+
+def gating_cycles(dense_macs, df, dw, policy):
+    """baseline::gating::cost mac_cycles; policy in
+    {dense, gate, skipf, skipw, skipb}."""
+    frac = {
+        "dense": 1.0,
+        "gate": 1.0,
+        "skipf": df,
+        "skipw": dw,
+        "skipb": df * dw,
+    }[policy]
+    return int(max(math.ceil(float(dense_macs) * frac / 1024.0), 1))
+
+
+def analytic_backend_case():
+    """The trait-dispatch oracle: analytic per-layer walls through the
+    schedule must fold exactly, and the golden cycles must hold."""
+    # golden closed forms (rust/tests/baseline_golden.rs)
+    assert naive_cycles(16, 16, 4, 8, 8) == 76
+    assert scnn_cycles(1_000_000, 0.5, 0.5) == 310
+    assert sparten_cycles(1_000_000, 0.5, 0.5) == 266
+    assert gating_cycles(1_024_000, 0.5, 0.25, "skipf") == 500
+    assert gating_cycles(1_024_000, 0.5, 0.25, "dense") == 1000
+
+    rng = random.Random(31337)
+    cases = 0
+    for trial in range(3000):
+        n_layers = rng.randint(1, 10)
+        df = rng.choice([0.1, 0.25, 0.38, 0.5, 0.75, 1.0])
+        dw = rng.choice([0.2, 0.34, 0.5, 1.0])
+        family = rng.choice(["naive", "scnn", "sparten", "gate", "skipf", "skipw"])
+        cycles = []
+        for _ in range(n_layers):
+            m = rng.randint(1, 4096)
+            k = rng.randint(1, 2048)
+            n = rng.randint(1, 512)
+            if family == "naive":
+                cycles.append(naive_cycles(m, k, n, 16, 16))
+            elif family == "scnn":
+                cycles.append(scnn_cycles(m * k * n, df, dw))
+            elif family == "sparten":
+                cycles.append(sparten_cycles(m * k * n, df, dw))
+            else:
+                cycles.append(gating_cycles(m * k * n, df, dw, family))
+        durations = [c / CLK for c in cycles]
+        topo, deps = topo_chain(n_layers)
+        sinks = [n_layers - 1]
+
+        # (a) the backend-equivalence contract: single request, batch 1,
+        # overlap 0 -> makespan is the exact left-fold of the walls
+        _, ft, makespan, _ = build(
+            n_layers, deps, topo, durations, [0.0], 1, 0.0, sinks
+        )
+        fold = 0.0
+        for d in durations:
+            fold = fold + d
+        assert makespan == fold, (trial, family, makespan, fold)
+        assert ft[0] == fold
+
+        # (b) the schedule invariants hold for analytic durations under
+        # batching/overlap too (the cluster/serve stack sees no
+        # difference between backends)
+        arrivals = random_arrivals(rng, rng.randint(1, 12))
+        batch = rng.randint(1, 5)
+        overlap = rng.choice([0.0, 0.5, 0.95])
+        _, _, m2, busy = build(
+            n_layers, deps, topo, durations, arrivals, batch, overlap, sinks
+        )
+        chain = critical_path_chain(durations)
+        lower = max(a + chain for a in arrivals)
+        upper = serial_makespan(durations, arrivals, batch)
+        eps = abs(upper) * 1e-12 + 1e-15
+        assert lower - eps <= m2 <= upper + eps, (trial, family, m2, lower, upper)
+        assert busy <= m2 + 1e-12
+        cases += 1
+    print(f"all {cases} analytic-backend oracle cases fold exactly")
 
 
 def random_arrivals(rng, r):
@@ -199,6 +318,7 @@ def main():
         cases += 1
 
     print(f"all {cases} serve-pipeline fuzz cases satisfy the schedule invariants")
+    analytic_backend_case()
 
 
 if __name__ == "__main__":
