@@ -10,12 +10,18 @@
 //! Alongside the timings it records the modeled serving metrics for
 //! AlexNet — throughput at batch 1 vs 8 and the pipeline gain — so the
 //! perf trajectory of the *model* (not just the simulator) is tracked in
-//! `BENCH_serve.json`.
+//! `BENCH_serve.json`. The headline pair compares the materializing
+//! scheduler against the window-memo + steady-state fast path at
+//! R = 10^6 requests (`model/sim-reqs-per-s-r1e6`,
+//! `model/fastpath-speedup-r1e6`); `benches/serve_scale.rs` sweeps the
+//! same comparison across R.
 
 use s2engine::config::{ArrayConfig, SimConfig};
 use s2engine::coordinator::Coordinator;
 use s2engine::models::{zoo, FeatureSubset};
-use s2engine::serve::{Arrivals, LayerDag, PipelineSchedule, ServeConfig};
+use s2engine::serve::{
+    evaluate, Arrivals, LayerDag, PipelineSchedule, SchedPolicy, ServeConfig,
+};
 use s2engine::util::bench::{black_box, Bench};
 
 fn main() {
@@ -65,6 +71,47 @@ fn main() {
     );
     b.metric("model/p99-latency-b8", piped.latency.p99 * 1e3, "ms");
     b.metric("model/occupancy-b8", piped.occupancy(), "frac");
+
+    // --- headline: the million-request fast path ---
+    // Exact engine materializes ~R×L jobs; the fast path replays ≤3 wave
+    // templates and extrapolates the steady interior, so the gap widens
+    // with R. Kept at R = 10^6 even under BENCH_QUICK so the metric
+    // names always mean the same workload.
+    let requests = 1_000_000usize;
+    let arrivals = Arrivals::open_loop(requests, 0.0, 7);
+    let exact_t = b
+        .bench("schedule/alexnet-b8-r1e6-exact", || {
+            black_box(PipelineSchedule::build(
+                &dag,
+                &durations,
+                &arrivals.times,
+                8,
+                0.6,
+            ));
+        })
+        .mean;
+    let fast_t = b
+        .bench("schedule/alexnet-b8-r1e6-fastpath", || {
+            black_box(evaluate(
+                &dag,
+                &durations,
+                &arrivals.times,
+                8,
+                0.6,
+                &SchedPolicy::default(),
+            ));
+        })
+        .mean;
+    b.metric(
+        "model/sim-reqs-per-s-r1e6",
+        requests as f64 / fast_t.as_secs_f64(),
+        "req/s",
+    );
+    b.metric(
+        "model/fastpath-speedup-r1e6",
+        exact_t.as_secs_f64() / fast_t.as_secs_f64(),
+        "x",
+    );
 
     if let Err(e) = b.write_json("BENCH_serve.json") {
         eprintln!("failed to write BENCH_serve.json: {e}");

@@ -1,0 +1,103 @@
+//! Bench: scheduler scaling in the request count R (EXPERIMENTS.md
+//! §Million-request scale).
+//!
+//! Sweeps R ∈ {10^3, 10^4, 10^6} over the same AlexNet-shaped layer
+//! chain and times, at each point:
+//! * the exact materializing engine (`PipelineSchedule::build`,
+//!   O(R × L) jobs),
+//! * the full fast path (window memoization + steady-state solver,
+//!   `SchedPolicy::default()`),
+//! * the memo-only path (`with_steady(false)`) at the largest R, so the
+//!   contribution of each fast-path layer is visible separately.
+//!
+//! The derived `scale/fastpath-speedup-r*` metrics are the headline:
+//! the speedup must *grow* with R (the steady-state solver does O(1)
+//! window work in the interior while the exact engine stays linear).
+//! `scripts/check_bench.py` requires the metric keys in
+//! `BENCH_serve_scale.json`; values are tracked, not gated.
+
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::{evaluate, Arrivals, LayerDag, PipelineSchedule, SchedPolicy};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let samples = if quick { 1 } else { 4 };
+    let mut b = Bench::new();
+
+    // AlexNet-shaped chain at the default serving point (batch 8,
+    // overlap 0.6) — the same workload `serve_pipeline.rs` benches.
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(16, 16)).with_samples(samples);
+    let coord = Coordinator::new(cfg);
+    let layers = coord.layer_results_subset(&model, FeatureSubset::Average);
+    let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+    let dag = LayerDag::chain(durations.len());
+    let (batch, overlap) = (8usize, 0.6);
+
+    // R is NOT shrunk under BENCH_QUICK: the metric names carry the
+    // request count, so the quick run must measure the same workload.
+    for &(requests, tag) in &[(1_000usize, "r1e3"), (10_000, "r1e4"), (1_000_000, "r1e6")] {
+        let arrivals = Arrivals::open_loop(requests, 0.0, 7);
+        let exact_t = b
+            .bench(&format!("scale/exact-{tag}"), || {
+                black_box(PipelineSchedule::build(
+                    &dag,
+                    &durations,
+                    &arrivals.times,
+                    batch,
+                    overlap,
+                ));
+            })
+            .mean;
+        let fast_t = b
+            .bench(&format!("scale/fastpath-{tag}"), || {
+                black_box(evaluate(
+                    &dag,
+                    &durations,
+                    &arrivals.times,
+                    batch,
+                    overlap,
+                    &SchedPolicy::default(),
+                ));
+            })
+            .mean;
+        b.metric(
+            &format!("scale/fastpath-speedup-{tag}"),
+            exact_t.as_secs_f64() / fast_t.as_secs_f64(),
+            "x",
+        );
+        if requests == 1_000_000 {
+            b.metric(
+                "scale/sim-reqs-per-s-r1e6",
+                requests as f64 / fast_t.as_secs_f64(),
+                "req/s",
+            );
+            // memo-only (steady solver off): isolates how much of the
+            // headline comes from streaming+memoization alone
+            let memo_t = b
+                .bench("scale/memo-only-r1e6", || {
+                    black_box(evaluate(
+                        &dag,
+                        &durations,
+                        &arrivals.times,
+                        batch,
+                        overlap,
+                        &SchedPolicy::default().with_steady(false),
+                    ));
+                })
+                .mean;
+            b.metric(
+                "scale/steady-gain-r1e6",
+                memo_t.as_secs_f64() / fast_t.as_secs_f64(),
+                "x",
+            );
+        }
+    }
+
+    if let Err(e) = b.write_json("BENCH_serve_scale.json") {
+        eprintln!("failed to write BENCH_serve_scale.json: {e}");
+    }
+}

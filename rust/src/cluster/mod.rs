@@ -36,7 +36,7 @@ pub use schedule::{build_cluster, ClusterSchedule, LaneStats};
 pub use shard::{balanced_stages, feature_link_bytes, ShardStrategy};
 
 use crate::coordinator::LayerResult;
-use crate::serve::{Arrivals, LatencyStats, LayerDag, PipelineSchedule, ServeConfig};
+use crate::serve::{evaluate, Arrivals, LatencyStats, LayerDag, ServeConfig};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -133,13 +133,15 @@ impl ClusterReport {
             serve.batch,
             serve.overlap,
             cluster.arrays,
+            &serve.policy,
         );
-        let single = PipelineSchedule::build(
+        let single = evaluate(
             &dag,
             &durations,
             &arrivals.times,
             serve.batch,
             serve.overlap,
+            &serve.policy,
         );
         let latency = LatencyStats::from_latencies(
             &schedule

@@ -1,6 +1,8 @@
 //! Cluster schedulers: place a serving workload on `N` arrays under a
-//! [`ShardStrategy`], reusing the single-array pipelined scheduler
-//! ([`PipelineSchedule::build`]) as the per-array machine.
+//! [`ShardStrategy`], reusing the single-array pipelined scheduler —
+//! via its streaming fast path ([`crate::serve::fastpath::evaluate`]),
+//! bit-identical to [`PipelineSchedule::build`] on its exact layers —
+//! as the per-array machine.
 //!
 //! Every strategy is pure deterministic arithmetic over the per-layer
 //! simulated walls — the same discipline as [`crate::serve`] — and every
@@ -22,7 +24,9 @@
 //! strategy internals.
 
 use super::shard::{balanced_stages, link_seconds, ShardStrategy};
-use crate::serve::{LayerDag, PipelineSchedule};
+use crate::serve::{fastpath, LayerDag, SchedPolicy};
+#[allow(unused_imports)] // the docs reference the exact engine
+use crate::serve::PipelineSchedule;
 
 /// Per-array activity over one cluster run.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -57,7 +61,9 @@ pub struct ClusterSchedule {
 /// `tiles[node]` the layer's full tile-grid size (TensorShard's split
 /// denominator), `out_bytes[node]` the compressed output feature-map
 /// bytes crossing a link when sharded, `arrivals` the sorted request
-/// timeline; `batch`/`overlap` are the per-array pipeline knobs.
+/// timeline; `batch`/`overlap` are the per-array pipeline knobs and
+/// `policy` selects the scheduler fast-path layers
+/// ([`crate::serve::SchedPolicy`]).
 #[allow(clippy::too_many_arguments)]
 pub fn build_cluster(
     strategy: ShardStrategy,
@@ -69,17 +75,18 @@ pub fn build_cluster(
     batch: usize,
     overlap: f64,
     arrays: usize,
+    policy: &SchedPolicy,
 ) -> ClusterSchedule {
     let arrays = arrays.max(1);
     match strategy {
         ShardStrategy::DataParallel => {
-            data_parallel(dag, durations, arrivals, batch, overlap, arrays)
+            data_parallel(dag, durations, arrivals, batch, overlap, arrays, policy)
         }
-        ShardStrategy::LayerPipeline => {
-            layer_pipeline(dag, durations, out_bytes, arrivals, batch, overlap, arrays)
-        }
+        ShardStrategy::LayerPipeline => layer_pipeline(
+            dag, durations, out_bytes, arrivals, batch, overlap, arrays, policy,
+        ),
         ShardStrategy::TensorShard => tensor_shard(
-            dag, durations, tiles, out_bytes, arrivals, batch, overlap, arrays,
+            dag, durations, tiles, out_bytes, arrivals, batch, overlap, arrays, policy,
         ),
     }
 }
@@ -96,6 +103,7 @@ fn bound_from(arrivals: &[f64], chain: f64, transfer: f64) -> f64 {
 /// unlike a load-estimate greedy it keeps each replica's arrival list a
 /// subsequence of the sorted timeline). Each replica runs the standard
 /// single-array pipeline over its own requests; no inter-array traffic.
+#[allow(clippy::too_many_arguments)]
 pub fn data_parallel(
     dag: &LayerDag,
     durations: &[f64],
@@ -103,6 +111,7 @@ pub fn data_parallel(
     batch: usize,
     overlap: f64,
     arrays: usize,
+    policy: &SchedPolicy,
 ) -> ClusterSchedule {
     let arrays = arrays.max(1);
     let mut member: Vec<Vec<usize>> = vec![Vec::new(); arrays];
@@ -114,14 +123,14 @@ pub fn data_parallel(
     let mut makespan = 0.0f64;
     for requests in &member {
         let sub: Vec<f64> = requests.iter().map(|&i| arrivals[i]).collect();
-        let s = PipelineSchedule::build(dag, durations, &sub, batch, overlap);
+        let s = fastpath::evaluate(dag, durations, &sub, batch, overlap, policy);
         for (slot, &i) in requests.iter().enumerate() {
             finish_times[i] = s.finish_times[slot];
         }
         makespan = makespan.max(s.makespan);
         lanes.push(LaneStats {
             busy: s.busy,
-            jobs: s.jobs.len(),
+            jobs: s.n_jobs,
         });
     }
     ClusterSchedule {
@@ -140,6 +149,7 @@ pub fn data_parallel(
 /// consumes). Stage `s` treats "stage `s-1` finish + transfer" as its
 /// arrival timeline, so batch windows re-form downstream exactly like
 /// they do at the front door.
+#[allow(clippy::too_many_arguments)]
 pub fn layer_pipeline(
     dag: &LayerDag,
     durations: &[f64],
@@ -148,6 +158,7 @@ pub fn layer_pipeline(
     batch: usize,
     overlap: f64,
     arrays: usize,
+    policy: &SchedPolicy,
 ) -> ClusterSchedule {
     let arrays = arrays.max(1);
     let topo = dag.topo_order();
@@ -158,12 +169,12 @@ pub fn layer_pipeline(
 
     // one stage == the plain single-array pipeline, bit-identically
     if n_stages == 1 {
-        let s = PipelineSchedule::build(dag, durations, arrivals, batch, overlap);
+        let s = fastpath::evaluate(dag, durations, arrivals, batch, overlap, policy);
         let mut lanes = vec![LaneStats::default(); arrays];
         if let Some(first) = lanes.first_mut() {
             *first = LaneStats {
                 busy: s.busy,
-                jobs: s.jobs.len(),
+                jobs: s.n_jobs,
             };
         }
         return ClusterSchedule {
@@ -235,11 +246,12 @@ pub fn layer_pipeline(
             .collect();
         let sub_dag = LayerDag::new(sub_deps).expect("a stage cut preserves acyclicity");
         let sub_durs: Vec<f64> = nodes.iter().map(|&n| durations[n]).collect();
-        let sched =
-            PipelineSchedule::build(&sub_dag, &sub_durs, &stage_arrivals, batch, overlap);
+        let sched = fastpath::evaluate(
+            &sub_dag, &sub_durs, &stage_arrivals, batch, overlap, policy,
+        );
         lanes[s] = LaneStats {
             busy: sched.busy,
-            jobs: sched.jobs.len(),
+            jobs: sched.n_jobs,
         };
         makespan = makespan.max(sched.makespan);
         finish_times = sched.finish_times;
@@ -275,6 +287,7 @@ pub fn tensor_shard(
     batch: usize,
     overlap: f64,
     arrays: usize,
+    policy: &SchedPolicy,
 ) -> ClusterSchedule {
     let arrays = arrays.max(1);
     let n = arrays as f64;
@@ -300,12 +313,12 @@ pub fn tensor_shard(
             d * share + gather
         })
         .collect();
-    let s = PipelineSchedule::build(dag, &d_sched, arrivals, batch, overlap);
+    let s = fastpath::evaluate(dag, &d_sched, arrivals, batch, overlap, policy);
     // all arrays run in lockstep: every lane carries the same activity
     let lanes = vec![
         LaneStats {
             busy: s.busy,
-            jobs: s.jobs.len(),
+            jobs: s.n_jobs,
         };
         arrays
     ];
@@ -346,7 +359,16 @@ mod tests {
         let reference = single(&dag, &d, &arrivals);
         for strategy in ShardStrategy::ALL {
             let c = build_cluster(
-                strategy, &dag, &d, &tiles, &bytes, &arrivals, 2, 0.5, 1,
+                strategy,
+                &dag,
+                &d,
+                &tiles,
+                &bytes,
+                &arrivals,
+                2,
+                0.5,
+                1,
+                &SchedPolicy::default(),
             );
             assert_eq!(c.makespan.to_bits(), reference.makespan.to_bits());
             assert_eq!(c.finish_times, reference.finish_times);
@@ -374,6 +396,7 @@ mod tests {
                 2,
                 0.4,
                 n,
+                &SchedPolicy::default(),
             );
             assert!(
                 c.makespan <= prev + 1e-12,
@@ -399,6 +422,7 @@ mod tests {
             1,
             0.0,
             2,
+            &SchedPolicy::default(),
         );
         assert!(c.link_bytes > 0.0, "stage boundary must move bytes");
         assert!(c.mandatory_transfer > 0.0);
@@ -426,6 +450,7 @@ mod tests {
             2,
             0.5,
             1,
+            &SchedPolicy::default(),
         );
         let four = build_cluster(
             ShardStrategy::TensorShard,
@@ -437,6 +462,7 @@ mod tests {
             2,
             0.5,
             4,
+            &SchedPolicy::default(),
         );
         assert!(four.link_bytes > 0.0);
         assert_eq!(four.lanes.len(), 4);
@@ -464,6 +490,7 @@ mod tests {
             1,
             0.0,
             9,
+            &SchedPolicy::default(),
         );
         assert_eq!(c.lanes.len(), 9);
         assert!(c.lanes.iter().filter(|l| l.jobs > 0).count() <= 4);
@@ -475,7 +502,18 @@ mod tests {
     fn empty_workload_is_zero() {
         let (dag, d, tiles, bytes) = chain4();
         for strategy in ShardStrategy::ALL {
-            let c = build_cluster(strategy, &dag, &d, &tiles, &bytes, &[], 2, 0.5, 3);
+            let c = build_cluster(
+                strategy,
+                &dag,
+                &d,
+                &tiles,
+                &bytes,
+                &[],
+                2,
+                0.5,
+                3,
+                &SchedPolicy::default(),
+            );
             assert_eq!(c.makespan, 0.0);
             assert!(c.finish_times.is_empty());
             assert_eq!(c.link_bytes, 0.0);

@@ -21,14 +21,17 @@ s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
 s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
                   --rate IMGS_PER_S --subset avg|max|min --out serve.json
                   --backend s2|naive|gate|skipf|skipw|scnn|sparten
+                  --no-fastpath|--no-window-memo|--no-steady
                   plus the simulate array/effort options]
 s2engine cluster <model> [--arrays 4 --shard data|pipeline|tensor
                   plus every serve option incl. --backend]  # N arrays
 s2engine report  table1|...|table5|fig3|fits|serving|cluster|backends
                   [--effort ...] [--backend TAG]  # serving/cluster only
+                  [--requests N]  # serving/cluster/backends: request count
 s2engine sweep   fig10|...|fig17|serving|cluster|backends
                   [--effort quick|default|full] [--scales 16,32] [--seed N]
                   [--out DIR --resume] [--backend TAG]  # serving/cluster
+                  [--requests N]  # serving/cluster/backends
 s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;backend=all'
                   [--grid grid.json] [--out DIR --resume] [--workers N]
                   [--backend s2,scnn,...]  # shorthand for the grid axis
@@ -95,7 +98,10 @@ fn model_arg(args: &Args) -> Result<s2engine::models::Model> {
 /// The shared serving knobs (`--batch --overlap --requests --rate`),
 /// validated once for every subcommand that serves requests. The
 /// default request count is `requests_per_batch × batch` (serve uses 4
-/// windows; cluster scales that by the array count).
+/// windows; cluster scales that by the array count). The scheduler
+/// fast path (window memoization + steady-state extrapolation) is on
+/// by default; `--no-fastpath` forces the exact materializing engine,
+/// `--no-window-memo` / `--no-steady` disable individual layers.
 fn serve_config_arg(
     args: &Args,
     seed: u64,
@@ -108,10 +114,18 @@ fn serve_config_arg(
         "--overlap must be in [0, {}], got {overlap}",
         s2engine::serve::MAX_OVERLAP
     );
+    let policy = if args.has_flag("no-fastpath") {
+        s2engine::serve::SchedPolicy::exact()
+    } else {
+        s2engine::serve::SchedPolicy::default()
+            .with_memoize(!args.has_flag("no-window-memo"))
+            .with_steady(!args.has_flag("no-steady"))
+    };
     Ok(s2engine::serve::ServeConfig::new(batch, overlap)
         .with_requests(args.get_usize("requests", requests_per_batch * batch).max(1))
         .with_rate(args.get_f64("rate", 0.0))
-        .with_seed(seed))
+        .with_seed(seed)
+        .with_policy(policy))
 }
 
 fn sim_config(args: &Args) -> SimConfig {
@@ -248,7 +262,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     println!("pipeline speedup     {:.2}x vs serial serving", r.pipeline_speedup());
     println!(
         "({} layer executions in {:?})",
-        r.schedule.jobs.len(),
+        r.schedule.n_jobs,
         t0.elapsed()
     );
     if let Some(path) = args.get("out").or_else(|| args.get("json")) {
@@ -323,6 +337,7 @@ fn report_cmd(args: &Args) -> Result<()> {
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
     let backend = backend_arg(args)?;
+    let requests = args.get_usize("requests", 0);
     let which = args
         .positional
         .get(1)
@@ -339,6 +354,13 @@ fn report_cmd(args: &Args) -> Result<()> {
         backend.is_default() || matches!(which.as_str(), "serving" | "cluster"),
         "--backend applies only to the `serving` and `cluster` report targets"
     );
+    // `--requests` re-bases the serving protocol; only the request-
+    // serving targets take one
+    anyhow::ensure!(
+        requests == 0 || matches!(which.as_str(), "serving" | "cluster" | "backends"),
+        "--requests applies only to the `serving`, `cluster` and `backends` \
+         report targets"
+    );
     let out = match which.as_str() {
         "table1" => report::table1(),
         "table3" => report::table3(),
@@ -347,9 +369,9 @@ fn report_cmd(args: &Args) -> Result<()> {
         "table4" => report::table4(effort, seed),
         "table5" => report::table5(effort, seed),
         "fig3" => report::fig3(effort, seed),
-        "serving" => report::serving(effort, seed, backend),
-        "cluster" => report::cluster(effort, seed, backend),
-        "backends" => report::backends(effort, seed),
+        "serving" => report::serving(effort, seed, backend, requests),
+        "cluster" => report::cluster(effort, seed, backend, requests),
+        "backends" => report::backends(effort, seed, requests),
         other => return Err(anyhow!("unknown report target `{other}`")),
     };
     println!("{out}");
@@ -387,6 +409,7 @@ fn sweep(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0x5eed_5eed);
     let scales = args.get_usize_list("scales", &[16, 32]);
     let backend = backend_arg(args)?;
+    let requests = args.get_usize("requests", 0);
     let which = args
         .positional
         .get(1)
@@ -409,9 +432,14 @@ fn sweep(args: &Args) -> Result<()> {
         backend.is_default() || matches!(which.as_str(), "serving" | "cluster"),
         "--backend applies only to the `serving` and `cluster` sweep targets"
     );
+    anyhow::ensure!(
+        requests == 0 || matches!(which.as_str(), "serving" | "cluster" | "backends"),
+        "--requests applies only to the `serving`, `cluster` and `backends` \
+         sweep targets"
+    );
     let mut store = sweep_store(args)?;
     let t0 = std::time::Instant::now();
-    let out = report::figure(which, effort, seed, &scales, backend, &mut store)
+    let out = report::figure(which, effort, seed, &scales, backend, requests, &mut store)
         .ok_or_else(|| anyhow!("unknown sweep target `{which}`"))?;
     println!("{out}");
     println!("(generated in {:?})", t0.elapsed());

@@ -45,24 +45,41 @@ const OVERLAP: f64 = 0.6;
 /// PE-count parity with the 1024-multiplier analytic comparators.
 const SCALE: usize = 32;
 
-/// Backend head-to-head with a throwaway in-memory store.
-pub fn backends(effort: Effort, seed: u64) -> String {
-    backends_in(effort, seed, &mut Store::in_memory())
+/// Backend head-to-head with a throwaway in-memory store. `requests`
+/// overrides the closed-loop request count per point (`0` = the
+/// default `batch × SERVE_WINDOWS` protocol) — the high-R regime the
+/// scheduler fast path unlocks, where tail-latency and scale-out
+/// conclusions stabilize.
+pub fn backends(effort: Effort, seed: u64, requests: usize) -> String {
+    backends_in(effort, seed, requests, &mut Store::in_memory())
 }
 
 /// [`backends`] against an explicit (possibly resumable) store.
-pub fn backends_in(effort: Effort, seed: u64, store: &mut Store) -> String {
+pub fn backends_in(
+    effort: Effort,
+    seed: u64,
+    requests: usize,
+    store: &mut Store,
+) -> String {
     let grid = Grid::new(effort, seed)
         .models(&PAPER_MODELS)
         .scales(&[(SCALE, SCALE)])
         .batches(&[BATCH])
         .overlaps(&[OVERLAP])
         .arrays(&ARRAYS)
-        .backends(&BACKENDS);
+        .backends(&BACKENDS)
+        .requests(&[requests]);
     let res = Runner::new().run(&grid.plan(), store);
+    let protocol = if requests == 0 {
+        String::new()
+    } else {
+        format!(", {requests} requests")
+    };
     let mut t = TextTable::new(
-        "Backends — head-to-head serving & scale-out (32x32 / 1024 muls, \
-         avg subset, batch 4, overlap 0.6, data-parallel)",
+        format!(
+            "Backends — head-to-head serving & scale-out (32x32 / 1024 muls, \
+             avg subset, batch 4, overlap 0.6, data-parallel{protocol})"
+        ),
         &[
             "model", "backend", "speedup", "onchip EE", "p99 lat (ms)",
             "img/s", "img/s x4", "scale eff x4",
@@ -75,6 +92,7 @@ pub fn backends_in(effort: Effort, seed: u64, store: &mut Store) -> String {
             .with_overlap(OVERLAP)
             .with_arrays(n)
             .with_backend(b)
+            .with_requests(requests)
     };
     // records recovered from a store written before the serving/cluster
     // metrics existed carry zeros — render "n/a", never measurements
@@ -137,7 +155,7 @@ mod tests {
 
     #[test]
     fn head_to_head_covers_models_and_backends() {
-        let s = backends(tiny(), 0xc0de_cafe_0070);
+        let s = backends(tiny(), 0xc0de_cafe_0070, 0);
         for m in PAPER_MODELS {
             assert!(s.contains(m), "missing {m} in:\n{s}");
         }
@@ -155,10 +173,19 @@ mod tests {
         let effort = tiny();
         let seed = 0xc0de_cafe_0071;
         let mut store = Store::in_memory();
-        let first = backends_in(effort, seed, &mut store);
+        let first = backends_in(effort, seed, 0, &mut store);
         let expected = PAPER_MODELS.len() * BACKENDS.len() * ARRAYS.len();
         assert_eq!(store.len(), expected);
-        let second = backends_in(effort, seed, &mut store);
+        let second = backends_in(effort, seed, 0, &mut store);
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn head_to_head_accepts_request_override() {
+        // the --requests satellite: the same head-to-head at an explicit
+        // request count names distinct sweep points and labels the title
+        let s = backends(tiny(), 0xc0de_cafe_0072, 128);
+        assert!(s.contains("128 requests"), "title names the protocol:\n{s}");
+        assert!(!s.contains("n/a"), "override points all measured:\n{s}");
     }
 }

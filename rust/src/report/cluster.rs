@@ -30,9 +30,12 @@ const OVERLAP: f64 = 0.6;
 /// Cluster summary with a throwaway in-memory store. `backend` selects
 /// the accelerator model being scaled out ([`crate::backend`]):
 /// `s2engine sweep cluster --backend sparten` renders the same
-/// scale-out study for a SparTen fleet.
-pub fn cluster(effort: Effort, seed: u64, backend: BackendKind) -> String {
-    cluster_in(effort, seed, backend, &mut Store::in_memory())
+/// scale-out study for a SparTen fleet. `requests` overrides the
+/// closed-loop request count per point (`0` = the default
+/// `batch × SERVE_WINDOWS` protocol) — the high-R regime the scheduler
+/// fast path unlocks.
+pub fn cluster(effort: Effort, seed: u64, backend: BackendKind, requests: usize) -> String {
+    cluster_in(effort, seed, backend, requests, &mut Store::in_memory())
 }
 
 /// [`cluster`] against an explicit (possibly resumable) store.
@@ -40,6 +43,7 @@ pub fn cluster_in(
     effort: Effort,
     seed: u64,
     backend: BackendKind,
+    requests: usize,
     store: &mut Store,
 ) -> String {
     // the analytic comparators model 1024-multiplier machines;
@@ -53,12 +57,18 @@ pub fn cluster_in(
         .overlaps(&[OVERLAP])
         .arrays(&ARRAYS)
         .shards(&ShardStrategy::ALL)
-        .backends(&[backend]);
+        .backends(&[backend])
+        .requests(&[requests]);
     let res = Runner::new().run(&grid.plan(), store);
+    let protocol = if requests == 0 {
+        String::new()
+    } else {
+        format!(", {requests} requests")
+    };
     let mut t = TextTable::new(
         format!(
             "Cluster — scale-out serving across N arrays ({scale}x{scale}, \
-             avg subset, batch 4, overlap 0.6, backend {})",
+             avg subset, batch 4, overlap 0.6, backend {}{protocol})",
             backend.tag()
         ),
         &[
@@ -74,6 +84,7 @@ pub fn cluster_in(
             .with_arrays(n)
             .with_shard(s)
             .with_backend(backend)
+            .with_requests(requests)
     };
     // records recovered from a store written before the cluster axes
     // existed carry no cluster metrics — render "n/a", never zeros
@@ -132,7 +143,7 @@ mod tests {
 
     #[test]
     fn cluster_summary_covers_models_arrays_and_strategies() {
-        let s = cluster(tiny(), 0xc0de_cafe_0040, BackendKind::S2);
+        let s = cluster(tiny(), 0xc0de_cafe_0040, BackendKind::S2, 0);
         for m in PAPER_MODELS {
             assert!(s.contains(m), "missing {m} in:\n{s}");
         }
@@ -146,10 +157,17 @@ mod tests {
 
     #[test]
     fn cluster_summary_runs_under_an_analytic_backend() {
-        let s = cluster(tiny(), 0xc0de_cafe_0042, BackendKind::SparTen);
+        let s = cluster(tiny(), 0xc0de_cafe_0042, BackendKind::SparTen, 0);
         assert!(s.contains("backend sparten"), "title names the backend:\n{s}");
         assert!(s.contains("1.00"), "single-array efficiency row present");
         assert!(!s.contains("n/a"), "analytic run measures every point:\n{s}");
+    }
+
+    #[test]
+    fn cluster_summary_accepts_request_override() {
+        let s = cluster(tiny(), 0xc0de_cafe_0043, BackendKind::S2, 96);
+        assert!(s.contains("96 requests"), "title names the protocol:\n{s}");
+        assert!(!s.contains("n/a"), "override points all measured:\n{s}");
     }
 
     #[test]
@@ -159,7 +177,7 @@ mod tests {
         let effort = tiny();
         let seed = 0xc0de_cafe_0041;
         let mut warm = Store::in_memory();
-        let _ = cluster_in(effort, seed, BackendKind::S2, &mut warm);
+        let _ = cluster_in(effort, seed, BackendKind::S2, 0, &mut warm);
         let base = Job::subset(
             "alexnet",
             FeatureSubset::Average,
@@ -181,7 +199,7 @@ mod tests {
         assert!(!legacy.has_cluster_metrics());
         let mut store = Store::in_memory();
         store.admit(legacy);
-        let s = cluster_in(effort, seed, BackendKind::S2, &mut store);
+        let s = cluster_in(effort, seed, BackendKind::S2, 0, &mut store);
         assert!(s.contains("n/a"), "legacy point must render n/a:\n{s}");
         assert!(s.contains("pre-cluster store"), "footnote expected");
     }

@@ -439,16 +439,24 @@ pub fn is_figure(which: &str) -> bool {
 /// reproductions and the `backends` head-to-head sweeps every backend
 /// itself, so for those a non-default backend also returns `None`
 /// (never silently mislabeled S²-only output) — the CLI rejects the
-/// combination up front with a specific message.
+/// combination up front with a specific message. `requests` overrides
+/// the serving protocol's request count for the `serving`/`cluster`/
+/// `backends` targets (`0` = the default batch-window protocol); the
+/// figN targets don't serve requests, so a non-zero count likewise
+/// returns `None`.
 pub fn figure(
     which: &str,
     effort: Effort,
     seed: u64,
     scales: &[usize],
     backend: crate::backend::BackendKind,
+    requests: usize,
     store: &mut Store,
 ) -> Option<String> {
     if !backend.is_default() && !matches!(which, "serving" | "cluster") {
+        return None;
+    }
+    if requests != 0 && !matches!(which, "serving" | "cluster" | "backends") {
         return None;
     }
     Some(match which {
@@ -460,9 +468,9 @@ pub fn figure(
         "fig15" => fig15_in(effort, seed, store),
         "fig16" => fig16_in(effort, seed, scales, store),
         "fig17" => fig17_in(effort, seed, scales, store),
-        "serving" => super::serving::serving_in(effort, seed, backend, store),
-        "cluster" => super::cluster::cluster_in(effort, seed, backend, store),
-        "backends" => super::backends::backends_in(effort, seed, store),
+        "serving" => super::serving::serving_in(effort, seed, backend, requests, store),
+        "cluster" => super::cluster::cluster_in(effort, seed, backend, requests, store),
+        "backends" => super::backends::backends_in(effort, seed, requests, store),
         _ => return None,
     })
 }
@@ -499,16 +507,22 @@ mod tests {
         use crate::backend::BackendKind;
         let s2 = BackendKind::S2;
         assert!(
-            figure("fig9", Effort::QUICK, 1, &[16], s2, &mut Store::in_memory()).is_none()
+            figure("fig9", Effort::QUICK, 1, &[16], s2, 0, &mut Store::in_memory())
+                .is_none()
         );
-        let s = figure("fig15", Effort::QUICK, 1, &[16], s2, &mut Store::in_memory())
+        let s = figure("fig15", Effort::QUICK, 1, &[16], s2, 0, &mut Store::in_memory())
             .unwrap();
         assert!(s.contains("w/o"));
         // non-default backends render only the serving/cluster
         // summaries — a figN request must refuse, not mislabel
         let scnn = BackendKind::Scnn;
         assert!(
-            figure("fig15", Effort::QUICK, 1, &[16], scnn, &mut Store::in_memory())
+            figure("fig15", Effort::QUICK, 1, &[16], scnn, 0, &mut Store::in_memory())
+                .is_none()
+        );
+        // likewise a request-count override: figN targets don't serve
+        assert!(
+            figure("fig15", Effort::QUICK, 1, &[16], s2, 64, &mut Store::in_memory())
                 .is_none()
         );
     }

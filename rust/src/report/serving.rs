@@ -25,9 +25,11 @@ const OVERLAPS: [f64; 2] = [0.0, 0.6];
 /// Serving summary with a throwaway in-memory store. `backend` selects
 /// the accelerator model serving the requests ([`crate::backend`]):
 /// `s2engine sweep serving --backend scnn` renders this same summary
-/// for the SCNN comparator.
-pub fn serving(effort: Effort, seed: u64, backend: BackendKind) -> String {
-    serving_in(effort, seed, backend, &mut Store::in_memory())
+/// for the SCNN comparator. `requests` overrides the closed-loop
+/// request count per point (`0` = the default `batch × SERVE_WINDOWS`
+/// protocol) — the high-R regime the scheduler fast path unlocks.
+pub fn serving(effort: Effort, seed: u64, backend: BackendKind, requests: usize) -> String {
+    serving_in(effort, seed, backend, requests, &mut Store::in_memory())
 }
 
 /// [`serving`] against an explicit (possibly resumable) store.
@@ -35,6 +37,7 @@ pub fn serving_in(
     effort: Effort,
     seed: u64,
     backend: BackendKind,
+    requests: usize,
     store: &mut Store,
 ) -> String {
     // the analytic comparators model 1024-multiplier machines;
@@ -46,12 +49,18 @@ pub fn serving_in(
         .scales(&[(scale, scale)])
         .batches(&BATCHES)
         .overlaps(&OVERLAPS)
-        .backends(&[backend]);
+        .backends(&[backend])
+        .requests(&[requests]);
     let res = Runner::new().run(&grid.plan(), store);
+    let protocol = if requests == 0 {
+        String::new()
+    } else {
+        format!(", {requests} requests")
+    };
     let mut t = TextTable::new(
         format!(
             "Serving — pipelined network-level inference ({scale}x{scale}, \
-             avg subset, backend {})",
+             avg subset, backend {}{protocol})",
             backend.tag()
         ),
         &[
@@ -65,6 +74,7 @@ pub fn serving_in(
             .with_batch(b)
             .with_overlap(ov)
             .with_backend(backend)
+            .with_requests(requests)
     };
     // records recovered from a store written before the serving axes
     // existed carry no serving metrics — render "n/a", never zeros or
@@ -129,7 +139,7 @@ mod tests {
             layer_stride: 8,
             images: 0,
         };
-        let s = serving(effort, 0xc0de_cafe_0021, BackendKind::S2);
+        let s = serving(effort, 0xc0de_cafe_0021, BackendKind::S2, 0);
         for m in PAPER_MODELS {
             assert!(s.contains(m), "missing {m} in:\n{s}");
         }
@@ -145,10 +155,31 @@ mod tests {
             layer_stride: 8,
             images: 0,
         };
-        let s = serving(effort, 0xc0de_cafe_0023, BackendKind::Scnn);
+        let s = serving(effort, 0xc0de_cafe_0023, BackendKind::Scnn, 0);
         assert!(s.contains("backend scnn"), "title names the backend:\n{s}");
         assert!(s.contains("1.00x"), "baseline gain row present");
         assert!(!s.contains("n/a"), "analytic run measures every point:\n{s}");
+    }
+
+    #[test]
+    fn serving_summary_accepts_request_override() {
+        // a non-zero request count names a distinct sweep point (the
+        // |req suffix) and shows up in the table title
+        let effort = Effort {
+            tile_samples: 1,
+            layer_stride: 8,
+            images: 0,
+        };
+        let seed = 0xc0de_cafe_0024;
+        let mut store = Store::in_memory();
+        let s = serving_in(effort, seed, BackendKind::Scnn, 64, &mut store);
+        assert!(s.contains("64 requests"), "title names the protocol:\n{s}");
+        assert!(!s.contains("n/a"), "override points all measured:\n{s}");
+        // the store keys carry the requests axis: a default-protocol
+        // rerun shares nothing with the override run
+        let before = store.len();
+        let _ = serving_in(effort, seed, BackendKind::Scnn, 0, &mut store);
+        assert!(store.len() > before, "default protocol is a distinct point");
     }
 
     #[test]
@@ -172,7 +203,7 @@ mod tests {
         };
         let seed = 0xc0de_cafe_0022;
         let mut warm = Store::in_memory();
-        let _ = serving_in(effort, seed, BackendKind::S2, &mut warm);
+        let _ = serving_in(effort, seed, BackendKind::S2, 0, &mut warm);
         let base_job = Job::subset(
             "alexnet",
             FeatureSubset::Average,
@@ -193,7 +224,7 @@ mod tests {
         assert!(!legacy.has_serving_metrics());
         let mut store = Store::in_memory();
         store.admit(legacy);
-        let s = serving_in(effort, seed, BackendKind::S2, &mut store);
+        let s = serving_in(effort, seed, BackendKind::S2, 0, &mut store);
         assert!(s.contains("n/a"), "legacy point must render n/a:\n{s}");
         assert!(s.contains("pre-serving store"), "footnote expected");
         assert!(!s.contains("inf") && !s.contains("NaN"), "no inf/NaN:\n{s}");

@@ -1,0 +1,970 @@
+//! Streaming/steady-state fast path for the pipelined serving scheduler
+//! (EXPERIMENTS.md §Million-request scale).
+//!
+//! [`PipelineSchedule::build`] materializes every (request × layer)
+//! execution: an R-request run costs O(R·L) `ScheduledJob`s and an
+//! O(R·L) finish matrix — the same per-event bottleneck PR 1 removed
+//! from the tile simulator, one level up the stack. This module serves
+//! the identical schedule *summary* (makespan, busy union, per-request
+//! finish times, job count) in three layers, each gated like the PR 1
+//! memo cache was — bit-identical to the exact engine, with an opt-out:
+//!
+//! 1. **Window-level schedule memoization** ([`WaveCache`]): under
+//!    batch-window scheduling every window with the same shape — per-node
+//!    durations, DAG structure, window width, overlap, and the duration
+//!    of the execution entering the window — runs the same *wave
+//!    program*: the same jobs in the same order with the same overlap
+//!    deductions. The program (a [`WaveTemplate`]) is cached sharded +
+//!    bounded + content-keyed, exactly like `coordinator/memo.rs`, and
+//!    shared across calls (a batch/overlap sweep re-resolves the same
+//!    three templates per axis point).
+//! 2. **Streaming evaluation** ([`evaluate`]): replaying a template
+//!    executes the *same floating-point operations in the same order* as
+//!    the exact engine — `ready`/`start`/`end`/`busy` fold identically —
+//!    against O(batch·L) window-local scratch instead of the O(R·L)
+//!    global finish matrix, and never allocates the jobs vector. Every
+//!    f64 the summary carries is therefore bit-identical to
+//!    [`PipelineSchedule::build`]'s (`rust/tests/serve_fastpath.rs`).
+//! 3. **Steady-state extrapolation**: once the array backlog is deep
+//!    enough that every remaining window is *saturated* (every start is
+//!    resource-driven, no arrival ever catches up), each window is a
+//!    pure time shift by Δ = Σ(dⱼ − cⱼ). The remaining windows are then
+//!    filled in closed form — O(1) state plus one multiply-add per
+//!    request — instead of replayed. This layer is bounded-error, not
+//!    bit-exact (see *Precision* below), and only engages when at least
+//!    [`STEADY_MIN_WINDOWS`] full windows remain, so every small-R
+//!    schedule in the test suite still takes the bit-exact path.
+//!
+//! ## Precision / overflow audit (the high-R regime)
+//!
+//! * **Indices.** Request and job counts stay in `usize` (64-bit on
+//!   every supported target): at R = 10⁶ and L = 10³ the job count is
+//!   10⁹ ≪ 2⁶³. Template-internal scratch indices are `u32` over a
+//!   single window (≤ batch·L entries); [`evaluate`] falls back to the
+//!   exact engine if `batch·L` ever exceeds `u32::MAX` rather than
+//!   truncate.
+//! * **Busy accumulation.** The exact engine folds `busy` through one
+//!   f64 accumulator in job order; the replay threads the *same*
+//!   accumulator through the same fold — summation order (and therefore
+//!   every rounding) is identical between the two paths, which is what
+//!   makes bit-equality possible. A Kahan or pairwise compensation here
+//!   would *break* equality with the exact engine; the naive fold's
+//!   relative error is bounded by n·ε ≈ 8·10⁶ · 2⁻⁵³ ≈ 10⁻⁹ at
+//!   R = 10⁶ for both paths equally. The steady-state layer sidesteps
+//!   the long fold entirely (`busy += k·Δ`, one rounding), so its busy
+//!   value is *closer* to the real-arithmetic sum than the exact
+//!   engine's — the bounded-error test quantifies the divergence.
+//! * **Makespan.** Finish times never decrease (the overlap deduction
+//!   is < 1 execution), so the exact engine's running `max` returns the
+//!   final finish bit-for-bit; the replay tracks the same fold.
+//!
+//! Opt-out: [`SchedPolicy`] (threaded through
+//! [`crate::serve::ServeConfig`] and the `serve`/`cluster` CLI flags
+//! `--no-fastpath`, `--no-window-memo`, `--no-steady`) disables any
+//! layer; `fastpath: false` routes straight to the exact engine.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::dag::LayerDag;
+use super::pipeline::{PipelineSchedule, MAX_OVERLAP};
+
+/// Minimum number of remaining full windows before the steady-state
+/// extrapolation layer may engage. Below this the replay is already
+/// cheap, and keeping small runs on the bit-exact path means every
+/// equivalence suite exercises it.
+pub const STEADY_MIN_WINDOWS: usize = 64;
+
+/// Which fast-path layers may engage (all on by default; each is
+/// individually gated by equivalence tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedPolicy {
+    /// Master switch: `false` routes to [`PipelineSchedule::build`].
+    pub fastpath: bool,
+    /// Consult the process-wide [`WaveCache`] for wave templates (off:
+    /// templates are rebuilt per call — still streaming, still exact).
+    pub memoize: bool,
+    /// Allow the bounded-error steady-state extrapolation once the
+    /// backlog saturates ([`STEADY_MIN_WINDOWS`]).
+    pub steady: bool,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        SchedPolicy {
+            fastpath: true,
+            memoize: true,
+            steady: true,
+        }
+    }
+}
+
+impl SchedPolicy {
+    /// The exact engine, unconditionally (`--no-fastpath`).
+    pub fn exact() -> SchedPolicy {
+        SchedPolicy {
+            fastpath: false,
+            memoize: false,
+            steady: false,
+        }
+    }
+
+    pub fn with_memoize(mut self, on: bool) -> SchedPolicy {
+        self.memoize = on;
+        self
+    }
+
+    pub fn with_steady(mut self, on: bool) -> SchedPolicy {
+        self.steady = on;
+        self
+    }
+}
+
+/// Everything a consumer reads off a schedule, without the O(R·L) job
+/// vector: per-request finish times, makespan, busy union, and the job
+/// count. Produced bit-identically by the exact engine
+/// ([`ScheduleSummary::from_schedule`]) and the fast path
+/// ([`evaluate`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleSummary {
+    /// Per-request completion time: max finish over the DAG's sinks.
+    pub finish_times: Vec<f64>,
+    /// Time of the last finish (0 for an empty schedule).
+    pub makespan: f64,
+    /// Union length of the array's active intervals.
+    pub busy: f64,
+    /// Number of placed (request × layer) jobs.
+    pub n_jobs: usize,
+    /// Windows filled by the steady-state layer (0 on the bit-exact
+    /// path; diagnostics + test gating).
+    pub steady_windows: usize,
+}
+
+impl ScheduleSummary {
+    /// Summarize a materialized schedule (the exact-engine route).
+    pub fn from_schedule(s: &PipelineSchedule) -> ScheduleSummary {
+        ScheduleSummary {
+            finish_times: s.finish_times.clone(),
+            makespan: s.makespan,
+            busy: s.busy,
+            n_jobs: s.jobs.len(),
+            steady_windows: 0,
+        }
+    }
+
+    /// Fraction of the makespan the array spent executing (mirrors
+    /// [`PipelineSchedule::occupancy`]).
+    pub fn occupancy(&self) -> f64 {
+        if self.makespan > 0.0 {
+            self.busy / self.makespan
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-request latencies against an arrival timeline (mirrors
+    /// [`PipelineSchedule::latencies`]).
+    pub fn latencies(&self, arrivals: &[f64]) -> Vec<f64> {
+        self.finish_times
+            .iter()
+            .zip(arrivals)
+            .map(|(f, a)| f - a)
+            .collect()
+    }
+}
+
+/// Steady-state analysis of a wave template, precomputed at build time.
+///
+/// Call `F` the array-free time entering a window and `t0` its
+/// window-ready time. In a *saturated* window — one where the arrival
+/// term `t0` never wins any `max` in the engine's recurrence — every
+/// job time is `F`-relative: job `j` ends at `F + Bⱼ` where
+/// `Bⱼ = dⱼ + max(max_p B_p, B_{j−1} − cⱼ)` (deps `p`, `B₋₁ = 0` for
+/// the execution entering the window), in real arithmetic. The window
+/// is then a pure time shift: the array advances by `Δ = B_last`, the
+/// busy union grows by a fixed `Δ_busy`, and slot `s` finishes at
+/// `F + off_s` — all independent of `F`. `t0` provably never wins when
+/// `F − t0 ≥ θ` with `θ = max_j −(max_p B_p  ⊔  B_{j−1} − cⱼ)` (plus
+/// the finish-side terms and a relative safety margin); `F` only grows
+/// and `t0` is bounded by the precomputed tail maximum, so one
+/// threshold check covers every remaining window.
+#[derive(Debug, Clone)]
+struct SteadyInfo {
+    /// Net array advance per window: `B_last`.
+    delta: f64,
+    /// Busy-union growth per window: Σⱼ (endⱼ − max(startⱼ, prev end)),
+    /// in `F`-relative terms.
+    busy_delta: f64,
+    /// Saturation threshold: engage only when `array_free − t0 ≥ theta`
+    /// (includes the safety margin).
+    theta: f64,
+    /// Per image slot `s`: finish-time offset from the entering `F`
+    /// (max over sink nodes of their `B`).
+    off: Vec<f64>,
+}
+
+/// The memoized wave program of one batch window: the exact job order
+/// the engine walks (layer-major waves over the topological order), with
+/// every non-float decision — dep resolution, scratch indices, overlap
+/// products `cⱼ = overlap · min(d_prev, dⱼ)` — hoisted out of the inner
+/// loop. Replay ([`replay`]) executes the identical f64 sequence as
+/// [`PipelineSchedule::build`] against the live array state.
+#[derive(Debug)]
+pub struct WaveTemplate {
+    /// Images in the window.
+    width: usize,
+    n_nodes: usize,
+    /// Per-job durations, in wave order.
+    dur: Vec<f64>,
+    /// Per-job overlap deduction `overlap · min(d_prev, dⱼ)`; `cut[0]`
+    /// uses the entry duration the template was keyed on.
+    cut: Vec<f64>,
+    /// Flattened dep scratch indices (window-local finish slots), in
+    /// `dag.deps` order per job.
+    deps: Vec<u32>,
+    /// Per-job offsets into `deps` (length `n_jobs + 1`).
+    dep_off: Vec<u32>,
+    /// Per-job scratch slot to write (`slot·n_nodes + node`).
+    slot: Vec<u32>,
+    /// Sink node indices (per-request completion = max over these).
+    sinks: Vec<u32>,
+    /// Steady-state analysis, if the structure admits it.
+    steady: Option<SteadyInfo>,
+}
+
+impl WaveTemplate {
+    /// Scratch length a replay of this template needs.
+    fn scratch_len(&self) -> usize {
+        self.width * self.n_nodes
+    }
+
+    fn n_jobs(&self) -> usize {
+        self.dur.len()
+    }
+}
+
+/// Build the wave program for one window shape. `overlap` must already
+/// be clamped; `entry_prev_dur`/`entry_any_prev` describe the execution
+/// entering the window (the previous window's last job).
+fn build_template(
+    dag: &LayerDag,
+    durations: &[f64],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+    entry_any_prev: bool,
+) -> WaveTemplate {
+    let n_nodes = dag.len();
+    let n_jobs = width * n_nodes;
+    let mut dur = Vec::with_capacity(n_jobs);
+    let mut cut = Vec::with_capacity(n_jobs);
+    let mut deps = Vec::new();
+    let mut dep_off = Vec::with_capacity(n_jobs + 1);
+    let mut slot = Vec::with_capacity(n_jobs);
+    dep_off.push(0u32);
+
+    // topo position of each node: dep job index = pos(p)·width + slot
+    let mut topo_pos = vec![0usize; n_nodes];
+    for (i, &n) in dag.topo_order().iter().enumerate() {
+        topo_pos[n] = i;
+    }
+
+    let mut prev_dur = entry_prev_dur;
+    for &node in dag.topo_order() {
+        let d = durations[node];
+        for s in 0..width {
+            // the same product the engine computes per job, hoisted
+            cut.push(overlap * prev_dur.min(d));
+            dur.push(d);
+            for &p in dag.deps(node) {
+                deps.push((s * n_nodes + p) as u32);
+            }
+            dep_off.push(deps.len() as u32);
+            slot.push((s * n_nodes + node) as u32);
+            prev_dur = d;
+        }
+    }
+
+    let sinks: Vec<u32> = dag.sinks().iter().map(|&s| s as u32).collect();
+    let steady = steady_info(
+        dag, width, &dur, &cut, &topo_pos, &sinks, entry_any_prev, n_nodes,
+    );
+    WaveTemplate {
+        width,
+        n_nodes,
+        dur,
+        cut,
+        deps,
+        dep_off,
+        slot,
+        sinks,
+        steady,
+    }
+}
+
+/// Precompute the steady-state analysis (see [`SteadyInfo`]); `None`
+/// when the structure cannot guarantee saturation-invariance.
+#[allow(clippy::too_many_arguments)]
+fn steady_info(
+    dag: &LayerDag,
+    width: usize,
+    dur: &[f64],
+    cut: &[f64],
+    topo_pos: &[usize],
+    sinks: &[u32],
+    entry_any_prev: bool,
+    n_nodes: usize,
+) -> Option<SteadyInfo> {
+    // only mid-stream windows repeat; a window with no predecessor
+    // (the very first) is resolved before steady state can exist
+    if !entry_any_prev || n_nodes == 0 || width == 0 || sinks.is_empty() {
+        return None;
+    }
+    let n_jobs = dur.len();
+    // F-relative job ends B_j under the t0-excluded recurrence
+    let mut b = Vec::with_capacity(n_jobs);
+    let mut b_prev = 0.0f64;
+    let mut busy_delta = 0.0f64;
+    let mut theta = 0.0f64;
+    let mut bmag = 0.0f64;
+    let mut job = 0usize;
+    for &node in dag.topo_order() {
+        for s in 0..width {
+            // the non-arrival competitors of the engine's start max
+            let mut lower = b_prev - cut[job];
+            for &p in dag.deps(node) {
+                lower = lower.max(b[topo_pos[p] * width + s]);
+            }
+            // t0 must never win: t0 ≤ F + lower  ⇐  F − t0 ≥ −lower
+            theta = theta.max(-lower);
+            let end = lower + dur[job];
+            busy_delta += end - lower.max(b_prev);
+            if !end.is_finite() {
+                return None;
+            }
+            bmag = bmag.max(end.abs()).max(cut[job].abs());
+            b.push(end);
+            b_prev = end;
+            job += 1;
+        }
+    }
+    // finish times: F + off_s must dominate t0  ⇐  F − t0 ≥ −off_s
+    let mut off = Vec::with_capacity(width);
+    for s in 0..width {
+        let mut o = f64::NEG_INFINITY;
+        for &snk in sinks {
+            o = o.max(b[topo_pos[snk as usize] * width + s]);
+        }
+        theta = theta.max(-o);
+        off.push(o);
+    }
+    // relative safety margin: the gating inequalities are checked in
+    // f64 on quantities whose real-arithmetic values they approximate
+    // to ~ n·ε; pad by well over that so a marginally-saturated window
+    // never extrapolates
+    let margin = (bmag + 1.0) * 1e-9;
+    Some(SteadyInfo {
+        delta: b_prev,
+        busy_delta,
+        theta: theta + margin,
+        off,
+    })
+}
+
+/// Full-content cache key for a wave template: window width, overlap
+/// bits, entry-execution state, and the complete DAG walk (topo order,
+/// per-node duration bits, dependency lists). Nothing is fingerprinted
+/// away — two keys are equal only if the wave programs are identical,
+/// so a cache hit can never corrupt a schedule.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WaveKey(Vec<u64>);
+
+fn wave_key(
+    dag: &LayerDag,
+    durations: &[f64],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+    entry_any_prev: bool,
+) -> WaveKey {
+    let mut v = Vec::with_capacity(5 + 3 * dag.len());
+    v.push(width as u64);
+    v.push(dag.len() as u64);
+    v.push(overlap.to_bits());
+    v.push(entry_prev_dur.to_bits());
+    v.push(entry_any_prev as u64);
+    for &n in dag.topo_order() {
+        v.push(n as u64);
+        v.push(durations[n].to_bits());
+        v.push(dag.deps(n).len() as u64);
+        for &p in dag.deps(n) {
+            v.push(p as u64);
+        }
+    }
+    WaveKey(v)
+}
+
+const N_SHARDS: usize = 16;
+/// Per-shard entry cap. Templates are O(batch·L) vectors (a few KiB for
+/// typical shapes), so 16 × 256 ≈ 4096 entries bounds the cache at tens
+/// of MiB; beyond the cap new templates are simply rebuilt per call.
+const SHARD_CAP: usize = 1 << 8;
+
+/// Sharded, bounded wave-template cache — the serving-level analogue of
+/// `coordinator::memo::TileCache`.
+pub struct WaveCache {
+    shards: Vec<Mutex<HashMap<WaveKey, Arc<WaveTemplate>>>>,
+    shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl WaveCache {
+    fn new() -> Self {
+        Self::bounded(N_SHARDS, SHARD_CAP)
+    }
+
+    /// A cache with explicit bounds: at most `n_shards × shard_cap`
+    /// entries, ever. The process-wide instance uses the module
+    /// defaults; tests build small private ones to exercise the bound.
+    pub fn bounded(n_shards: usize, shard_cap: usize) -> Self {
+        WaveCache {
+            shards: (0..n_shards.max(1))
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            shard_cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Hard entry ceiling (shards × per-shard cap).
+    pub fn capacity(&self) -> usize {
+        self.shards.len() * self.shard_cap
+    }
+
+    /// The process-wide cache (shared across serve/cluster/sweep calls,
+    /// so a batch-axis sweep re-resolves each window shape once).
+    pub fn global() -> &'static WaveCache {
+        static CACHE: OnceLock<WaveCache> = OnceLock::new();
+        CACHE.get_or_init(WaveCache::new)
+    }
+
+    fn shard(&self, key: &WaveKey) -> &Mutex<HashMap<WaveKey, Arc<WaveTemplate>>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    fn get(&self, key: &WaveKey) -> Option<Arc<WaveTemplate>> {
+        let hit = self.shard(key).lock().unwrap().get(key).cloned();
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn insert(&self, key: WaveKey, tpl: Arc<WaveTemplate>) {
+        let mut shard = self.shard(&key).lock().unwrap();
+        if shard.len() < self.shard_cap {
+            shard.insert(key, tpl);
+        }
+    }
+
+    /// `(hits, misses)` since process start.
+    pub fn counters(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries (counters are kept).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+/// Resolve a window shape to its wave program, via the global cache when
+/// memoization is on. Cached templates are pure functions of the full
+/// content key, so a hit replays bit-identically to a rebuild.
+fn resolve(
+    dag: &LayerDag,
+    durations: &[f64],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+    entry_any_prev: bool,
+    memoize: bool,
+) -> Arc<WaveTemplate> {
+    if !memoize {
+        return Arc::new(build_template(
+            dag, durations, overlap, width, entry_prev_dur, entry_any_prev,
+        ));
+    }
+    let key = wave_key(dag, durations, overlap, width, entry_prev_dur, entry_any_prev);
+    let cache = WaveCache::global();
+    if let Some(t) = cache.get(&key) {
+        return t;
+    }
+    let t = Arc::new(build_template(
+        dag, durations, overlap, width, entry_prev_dur, entry_any_prev,
+    ));
+    cache.insert(key, t.clone());
+    t
+}
+
+/// Live array state threaded across windows — exactly the engine's
+/// scalars, no more.
+struct ArrayState {
+    array_free: f64,
+    any_prev: bool,
+    busy: f64,
+    makespan: f64,
+}
+
+/// Replay one window's wave program against the live array state —
+/// the same f64 operations in the same order as the engine's inner
+/// loop, reading/writing window-local scratch instead of the global
+/// finish matrix. Writes the window's per-request finish times.
+fn replay(
+    tpl: &WaveTemplate,
+    t0: f64,
+    st: &mut ArrayState,
+    wfin: &mut [f64],
+    finish_out: &mut [f64],
+) {
+    let mut f = st.array_free;
+    let mut ap = st.any_prev;
+    let mut busy = st.busy;
+    let mut mk = st.makespan;
+    let mut di = 0usize;
+    for j in 0..tpl.n_jobs() {
+        let mut ready = t0;
+        let dend = tpl.dep_off[j + 1] as usize;
+        while di < dend {
+            ready = ready.max(wfin[tpl.deps[di] as usize]);
+            di += 1;
+        }
+        let start = if ap { ready.max(f - tpl.cut[j]) } else { ready };
+        let end = start + tpl.dur[j];
+        busy += end - if ap { start.max(f) } else { start };
+        wfin[tpl.slot[j] as usize] = end;
+        f = end;
+        ap = true;
+        mk = mk.max(end);
+    }
+    for (s, out) in finish_out.iter_mut().enumerate() {
+        let mut done = t0;
+        for &snk in &tpl.sinks {
+            done = done.max(wfin[s * tpl.n_nodes + snk as usize]);
+        }
+        *out = done;
+    }
+    st.array_free = f;
+    st.any_prev = ap;
+    st.busy = busy;
+    st.makespan = mk;
+}
+
+/// Schedule `arrivals` through the fast path and summarize. Semantics
+/// and — on the non-steady layers — every output bit are identical to
+/// `ScheduleSummary::from_schedule(&PipelineSchedule::build(..))`;
+/// see the module docs for the layer gating.
+pub fn evaluate(
+    dag: &LayerDag,
+    durations: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    let exact = || {
+        ScheduleSummary::from_schedule(&PipelineSchedule::build(
+            dag, durations, arrivals, batch, overlap,
+        ))
+    };
+    if !policy.fastpath {
+        return exact();
+    }
+    assert_eq!(durations.len(), dag.len(), "one duration per DAG node");
+    debug_assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "arrivals must be sorted"
+    );
+    let overlap = overlap.clamp(0.0, MAX_OVERLAP);
+    let batch = batch.max(1);
+    let n_img = arrivals.len();
+    let n_nodes = dag.len();
+    if n_img == 0 {
+        return ScheduleSummary {
+            finish_times: Vec::new(),
+            makespan: 0.0,
+            busy: 0.0,
+            n_jobs: 0,
+            steady_windows: 0,
+        };
+    }
+    // template scratch indices are u32 over one window; a window too
+    // wide to index falls back to the exact engine rather than truncate
+    let w0 = batch.min(n_img);
+    if !w0
+        .checked_mul(n_nodes)
+        .is_some_and(|x| x <= u32::MAX as usize)
+    {
+        return exact();
+    }
+
+    let n_full = n_img / batch; // windows 0..n_full are full-width
+    let tail_w = if n_img > batch { n_img % batch } else { 0 };
+    let n_windows = n_img.div_ceil(batch);
+    let d_last = dag
+        .topo_order()
+        .last()
+        .map_or(0.0, |&n| durations[n]);
+
+    let tpl_first = resolve(dag, durations, overlap, w0, 0.0, false, policy.memoize);
+    let tpl_mid = if n_full >= 2 {
+        Some(resolve(dag, durations, overlap, batch, d_last, true, policy.memoize))
+    } else {
+        None
+    };
+    let tpl_tail = if tail_w > 0 {
+        Some(resolve(dag, durations, overlap, tail_w, d_last, true, policy.memoize))
+    } else {
+        None
+    };
+
+    let mut finish_times = vec![0.0f64; n_img];
+    let mut wfin = vec![0.0f64; tpl_first.scratch_len().max(batch * n_nodes)];
+    let mut st = ArrayState {
+        array_free: 0.0,
+        any_prev: false,
+        busy: 0.0,
+        makespan: 0.0,
+    };
+    let mut steady_windows = 0usize;
+    // max arrival across the full-window region, computed once on first
+    // eligibility (saturation is then a per-window O(1) comparison)
+    let mut tail_t0_max: Option<f64> = None;
+
+    let mut window = 0usize;
+    while window < n_windows {
+        let lo = window * batch;
+        let hi = (lo + batch).min(n_img);
+
+        // --- layer 3: steady-state extrapolation of the remaining
+        //     full windows, once the backlog provably saturates them ---
+        if policy.steady && window >= 1 && window < n_full && n_full - window >= STEADY_MIN_WINDOWS
+        {
+            if let Some(info) = tpl_mid.as_ref().and_then(|t| t.steady.as_ref()) {
+                let t0m = *tail_t0_max.get_or_insert_with(|| {
+                    arrivals[lo..n_full * batch]
+                        .iter()
+                        .fold(0.0f64, |m, &a| m.max(a))
+                });
+                if st.array_free - t0m >= info.theta {
+                    let k = n_full - window;
+                    for j in 0..k {
+                        let f_in = st.array_free + (j as f64) * info.delta;
+                        let base = (window + j) * batch;
+                        for s in 0..batch {
+                            finish_times[base + s] = f_in + info.off[s];
+                        }
+                    }
+                    let kf = k as f64;
+                    st.busy += kf * info.busy_delta;
+                    st.array_free += kf * info.delta;
+                    st.makespan = st.makespan.max(st.array_free);
+                    steady_windows = k;
+                    window = n_full;
+                    continue;
+                }
+            }
+        }
+
+        // the server waits until the window's last request arrives
+        // (identical fold to the engine: 0-seeded max over the slice)
+        let mut t0 = 0.0f64;
+        for &a in &arrivals[lo..hi] {
+            t0 = t0.max(a);
+        }
+        let tpl: &WaveTemplate = if window == 0 {
+            &tpl_first
+        } else if hi - lo == batch {
+            tpl_mid.as_ref().expect("full mid window requires template")
+        } else {
+            tpl_tail.as_ref().expect("tail window requires template")
+        };
+        replay(tpl, t0, &mut st, &mut wfin, &mut finish_times[lo..hi]);
+        window += 1;
+    }
+
+    ScheduleSummary {
+        finish_times,
+        makespan: st.makespan,
+        busy: st.busy,
+        n_jobs: n_img * n_nodes,
+        steady_windows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn summary_bits_equal(a: &ScheduleSummary, b: &ScheduleSummary) -> bool {
+        a.makespan.to_bits() == b.makespan.to_bits()
+            && a.busy.to_bits() == b.busy.to_bits()
+            && a.n_jobs == b.n_jobs
+            && a.finish_times.len() == b.finish_times.len()
+            && a
+                .finish_times
+                .iter()
+                .zip(&b.finish_times)
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn random_dag(rng: &mut Rng, n: usize) -> LayerDag {
+        let deps: Vec<Vec<usize>> = (0..n)
+            .map(|i| {
+                if i == 0 {
+                    Vec::new()
+                } else {
+                    let mut d = vec![i - 1]; // keep it connected
+                    if i >= 2 && rng.gen_below(3) == 0 {
+                        let extra = rng.gen_below(i as u64 - 1) as usize;
+                        if !d.contains(&extra) {
+                            d.push(extra);
+                        }
+                    }
+                    d
+                }
+            })
+            .collect();
+        LayerDag::new(deps).unwrap()
+    }
+
+    #[test]
+    fn replay_matches_exact_engine_bitwise() {
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0050);
+        for case in 0..60u64 {
+            let n_nodes = 1 + rng.gen_below(6) as usize;
+            let dag = random_dag(&mut rng, n_nodes);
+            let durations: Vec<f64> =
+                (0..n_nodes).map(|_| 0.01 + rng.gen_f64()).collect();
+            let n_img = 1 + rng.gen_below(40) as usize;
+            let mut t = 0.0f64;
+            let arrivals: Vec<f64> = (0..n_img)
+                .map(|_| {
+                    t += rng.gen_f64() * 0.3;
+                    t
+                })
+                .collect();
+            let batch = 1 + rng.gen_below(9) as usize;
+            let overlap = rng.gen_f64();
+            let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+                &dag, &durations, &arrivals, batch, overlap,
+            ));
+            for policy in [
+                SchedPolicy::default(),
+                SchedPolicy::default().with_memoize(false),
+                SchedPolicy::default().with_steady(false),
+            ] {
+                let fast = evaluate(&dag, &durations, &arrivals, batch, overlap, &policy);
+                assert!(
+                    summary_bits_equal(&exact, &fast),
+                    "case {case}: fast path diverged (policy {policy:?})"
+                );
+                assert_eq!(fast.steady_windows, 0, "case {case}: small run extrapolated");
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_zero_arrivals_bitwise() {
+        // the regime the steady-state gate watches: all arrivals at 0
+        let dag = LayerDag::chain(5);
+        let d = [0.3, 0.1, 0.2, 0.05, 0.4];
+        let arrivals = vec![0.0; 100];
+        for &(batch, ov) in &[(1usize, 0.0), (4, 0.6), (7, 0.95), (100, 0.5)] {
+            let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+                &dag, &d, &arrivals, batch, ov,
+            ));
+            let fast = evaluate(
+                &dag,
+                &d,
+                &arrivals,
+                batch,
+                ov,
+                &SchedPolicy::default().with_steady(false),
+            );
+            assert!(summary_bits_equal(&exact, &fast), "batch {batch} ov {ov}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let dag = LayerDag::chain(3);
+        let d = [0.1, 0.2, 0.3];
+        let s = evaluate(&dag, &d, &[], 4, 0.5, &SchedPolicy::default());
+        assert_eq!(s.makespan, 0.0);
+        assert_eq!(s.n_jobs, 0);
+        assert_eq!(s.occupancy(), 0.0);
+        // empty DAG: finish times are the window-ready times
+        let none = LayerDag::chain(0);
+        let s = evaluate(&none, &[], &[0.0, 1.0, 2.0], 2, 0.5, &SchedPolicy::default());
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+            &none,
+            &[],
+            &[0.0, 1.0, 2.0],
+            2,
+            0.5,
+        ));
+        assert!(summary_bits_equal(&exact, &s));
+    }
+
+    #[test]
+    fn steady_state_engages_and_stays_within_error_bound() {
+        // closed loop, deep backlog: the extrapolation layer must engage
+        // and agree with the exact engine to within the n·ε accumulation
+        // bound (both paths approximate the same real-arithmetic
+        // schedule; the exact path's busy/makespan folds round ~2 ops
+        // per job, so |exact − steady| ≲ 2·n_jobs·ε·makespan)
+        let dag = LayerDag::chain(4);
+        let d = [0.3, 0.1, 0.2, 0.15];
+        let n_img = 4000usize;
+        let arrivals = vec![0.0; n_img];
+        let (batch, ov) = (8usize, 0.6);
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+            &dag, &d, &arrivals, batch, ov,
+        ));
+        let fast = evaluate(&dag, &d, &arrivals, batch, ov, &SchedPolicy::default());
+        assert!(fast.steady_windows > 0, "steady layer must engage");
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+        assert!(rel(fast.makespan, exact.makespan) < 1e-9);
+        assert!(rel(fast.busy, exact.busy) < 1e-9);
+        for (f, e) in fast.finish_times.iter().zip(&exact.finish_times) {
+            assert!(rel(*f, *e) < 1e-9, "{f} vs {e}");
+        }
+        assert_eq!(fast.n_jobs, exact.n_jobs);
+        // and with the layer off the run is bit-exact again
+        let no_steady = evaluate(
+            &dag,
+            &d,
+            &arrivals,
+            batch,
+            ov,
+            &SchedPolicy::default().with_steady(false),
+        );
+        assert!(summary_bits_equal(&exact, &no_steady));
+        assert_eq!(no_steady.steady_windows, 0);
+    }
+
+    #[test]
+    fn steady_state_respects_late_arrivals() {
+        // arrivals that outrun the backlog must suppress extrapolation
+        // until saturation truly holds — results stay within the bound
+        let dag = LayerDag::chain(3);
+        let d = [0.3, 0.1, 0.2];
+        let n_img = 2000usize;
+        // arrivals spread thinly: the array keeps catching up
+        let arrivals: Vec<f64> = (0..n_img).map(|i| i as f64 * 2.0).collect();
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+            &dag, &d, &arrivals, 4, 0.5,
+        ));
+        let fast = evaluate(&dag, &d, &arrivals, 4, 0.5, &SchedPolicy::default());
+        // the array never saturates (it idles between windows):
+        // the run must remain on the bit-exact path
+        assert_eq!(fast.steady_windows, 0);
+        assert!(summary_bits_equal(&exact, &fast));
+    }
+
+    #[test]
+    fn wave_key_separates_shapes_and_shares_repeats() {
+        let dag = LayerDag::chain(3);
+        let d = [0.1, 0.2, 0.3];
+        let k = |w: usize, ov: f64, pd: f64, ap: bool| wave_key(&dag, &d, ov, w, pd, ap);
+        assert_eq!(k(4, 0.5, 0.3, true), k(4, 0.5, 0.3, true));
+        assert_ne!(k(4, 0.5, 0.3, true), k(3, 0.5, 0.3, true));
+        assert_ne!(k(4, 0.5, 0.3, true), k(4, 0.6, 0.3, true));
+        assert_ne!(k(4, 0.5, 0.3, true), k(4, 0.5, 0.2, true));
+        assert_ne!(k(4, 0.5, 0.3, true), k(4, 0.5, 0.3, false));
+        let d2 = [0.1, 0.2, 0.300001];
+        assert_ne!(k(4, 0.5, 0.3, true), wave_key(&dag, &d2, 0.5, 4, 0.3, true));
+        // a different DAG over the same durations is a different program
+        let diamond = LayerDag::new(vec![vec![], vec![0], vec![0]]).unwrap();
+        assert_ne!(
+            k(4, 0.5, 0.3, true),
+            wave_key(&diamond, &d, 0.5, 4, 0.3, true)
+        );
+    }
+
+    #[test]
+    fn bounded_cache_never_exceeds_capacity() {
+        // private instance: cannot pollute the global cache other tests
+        // (and the memoized paths) rely on — mirrors TileCache::bounded
+        let cache = WaveCache::bounded(4, 8);
+        assert_eq!(cache.capacity(), 32);
+        let dag = LayerDag::chain(2);
+        let mut admitted = Vec::new();
+        for i in 0..200u64 {
+            let d = [0.1 + i as f64 * 1e-3, 0.2];
+            let key = wave_key(&dag, &d, 0.5, 4, 0.2, true);
+            let tpl = Arc::new(build_template(&dag, &d, 0.5, 4, 0.2, true));
+            cache.insert(key.clone(), tpl);
+            if cache.get(&key).is_some() {
+                admitted.push((key, d[0]));
+            }
+            assert!(
+                cache.len() <= cache.capacity(),
+                "after {} inserts: {} > cap {}",
+                i + 1,
+                cache.len(),
+                cache.capacity()
+            );
+        }
+        assert!(!admitted.is_empty(), "some inserts must land");
+        // admitted entries stay retrievable and intact
+        for (key, d0) in &admitted {
+            let t = cache.get(key).expect("admitted entry evaporated");
+            assert_eq!(t.dur[0].to_bits(), d0.to_bits());
+        }
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.capacity(), 32);
+    }
+
+    #[test]
+    fn global_cache_uses_module_defaults_and_shares_shapes() {
+        let g = WaveCache::global();
+        assert_eq!(g.capacity(), N_SHARDS * SHARD_CAP);
+        // two evaluates over the same shape must share template work
+        let dag = LayerDag::chain(3);
+        let d = [0.017, 0.029, 0.041];
+        let arrivals = vec![0.0; 32];
+        let policy = SchedPolicy::default();
+        let (h0, _) = g.counters();
+        let a = evaluate(&dag, &d, &arrivals, 4, 0.6, &policy);
+        let b = evaluate(&dag, &d, &arrivals, 4, 0.6, &policy);
+        let (h1, _) = g.counters();
+        assert!(summary_bits_equal(&a, &b));
+        assert!(h1 > h0, "second evaluate must hit the template cache");
+    }
+}

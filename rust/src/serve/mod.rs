@@ -7,7 +7,10 @@
 //! batches images into windows; and the pipelined scheduler
 //! ([`pipeline::PipelineSchedule`]) places every (request × layer)
 //! execution on the array with double-buffered weight/feature handoff
-//! and a configurable inter-execution overlap. Out the other end come
+//! and a configurable inter-execution overlap. High request counts run
+//! through the streaming fast path ([`fastpath::evaluate`]: memoized
+//! window templates + steady-state extrapolation, gated bit-identical /
+//! bounded-error against the exact engine). Out the other end come
 //! the serving metrics a deployment cares about: per-request latency
 //! percentiles (p50/p95/p99), steady-state throughput (images/s at the
 //! modeled clock), and array occupancy.
@@ -26,10 +29,12 @@
 //! and `report::serving`.
 
 pub mod dag;
+pub mod fastpath;
 pub mod pipeline;
 pub mod workload;
 
 pub use dag::LayerDag;
+pub use fastpath::{evaluate, SchedPolicy, ScheduleSummary, WaveCache};
 pub use pipeline::{serial_makespan, PipelineSchedule, ScheduledJob, MAX_OVERLAP};
 pub use workload::{Arrivals, LatencyStats};
 
@@ -55,6 +60,10 @@ pub struct ServeConfig {
     pub rate: f64,
     /// Arrival-jitter seed ([`Arrivals::open_loop`]).
     pub seed: u64,
+    /// Which scheduler fast-path layers may engage
+    /// ([`fastpath::SchedPolicy`]; all on by default, each layer gated
+    /// bit-identical or bounded-error against the exact engine).
+    pub policy: SchedPolicy,
 }
 
 impl ServeConfig {
@@ -65,6 +74,7 @@ impl ServeConfig {
             requests: batch.max(1),
             rate: 0.0,
             seed: 0x5eed_5eed,
+            policy: SchedPolicy::default(),
         }
     }
 
@@ -80,6 +90,11 @@ impl ServeConfig {
 
     pub fn with_seed(mut self, seed: u64) -> ServeConfig {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: SchedPolicy) -> ServeConfig {
+        self.policy = policy;
         self
     }
 }
@@ -103,8 +118,10 @@ pub struct ServeReport {
     pub layers: Vec<LayerResult>,
     /// The request timeline the run was driven by.
     pub arrivals: Arrivals,
-    /// Every placed (request × layer) execution.
-    pub schedule: PipelineSchedule,
+    /// Schedule summary (finish times, makespan, busy union, job count)
+    /// — streamed by [`fastpath::evaluate`], bit-identical to the
+    /// materializing engine on its exact layers.
+    pub schedule: ScheduleSummary,
     /// Per-request latency distribution (arrival -> last-layer finish).
     pub latency: LatencyStats,
 }
@@ -135,8 +152,14 @@ impl ServeReport {
         let dag = LayerDag::chain(layers.len());
         let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
         let arrivals = Arrivals::open_loop(cfg.requests.max(1), cfg.rate, cfg.seed);
-        let schedule =
-            PipelineSchedule::build(&dag, &durations, &arrivals.times, cfg.batch, cfg.overlap);
+        let schedule = fastpath::evaluate(
+            &dag,
+            &durations,
+            &arrivals.times,
+            cfg.batch,
+            cfg.overlap,
+            &cfg.policy,
+        );
         let latency = LatencyStats::from_latencies(&schedule.latencies(&arrivals.times));
         ServeReport {
             model: model.into(),

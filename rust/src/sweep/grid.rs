@@ -73,6 +73,9 @@ pub struct Grid {
     /// Accelerator backends ([`crate::backend`]); `s2` = the classic
     /// cycle-accurate evaluation point.
     pub backends: Vec<BackendKind>,
+    /// Explicit serving request counts; `0` = the historical
+    /// `batch × SERVE_WINDOWS` closed-loop protocol.
+    pub requests: Vec<usize>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -94,6 +97,7 @@ impl Grid {
             arrays: vec![1],
             shards: vec![ShardStrategy::DataParallel],
             backends: vec![BackendKind::S2],
+            requests: vec![0],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -165,6 +169,11 @@ impl Grid {
         self
     }
 
+    pub fn requests(mut self, requests: &[usize]) -> Grid {
+        self.requests = requests.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -192,11 +201,12 @@ impl Grid {
             * self.arrays.len()
             * self.shards.len()
             * self.backends.len()
+            * self.requests.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
     /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
-    /// overlap, arrays, shard, backend.
+    /// overlap, arrays, shard, backend, requests.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -218,33 +228,36 @@ impl Grid {
                                             for &n_arrays in &self.arrays {
                                                 for &shard in &self.shards {
                                                     for &backend in &self.backends {
-                                                        let array =
-                                                            ArrayConfig::new(rows, cols)
-                                                                .with_fifo(fifo)
-                                                                .with_ratio(ratio);
-                                                        let job = match (subset, density) {
-                                                            (Some(s), _) => Job::subset(
-                                                                model, s, array, ce,
-                                                                self.seed, effort,
-                                                            )
-                                                            .with_ratio16(r16),
-                                                            (_, Some((fd, wd))) => {
-                                                                Job::synthetic(
-                                                                    model, fd, wd, array,
-                                                                    r16, self.seed,
-                                                                    effort,
+                                                        for &req in &self.requests {
+                                                            let array =
+                                                                ArrayConfig::new(rows, cols)
+                                                                    .with_fifo(fifo)
+                                                                    .with_ratio(ratio);
+                                                            let job = match (subset, density) {
+                                                                (Some(s), _) => Job::subset(
+                                                                    model, s, array, ce,
+                                                                    self.seed, effort,
                                                                 )
-                                                                .with_ce(ce)
-                                                            }
-                                                            _ => unreachable!(),
-                                                        };
-                                                        jobs.push(
-                                                            job.with_batch(batch)
-                                                                .with_overlap(overlap)
-                                                                .with_arrays(n_arrays)
-                                                                .with_shard(shard)
-                                                                .with_backend(backend),
-                                                        );
+                                                                .with_ratio16(r16),
+                                                                (_, Some((fd, wd))) => {
+                                                                    Job::synthetic(
+                                                                        model, fd, wd, array,
+                                                                        r16, self.seed,
+                                                                        effort,
+                                                                    )
+                                                                    .with_ce(ce)
+                                                                }
+                                                                _ => unreachable!(),
+                                                            };
+                                                            jobs.push(
+                                                                job.with_batch(batch)
+                                                                    .with_overlap(overlap)
+                                                                    .with_arrays(n_arrays)
+                                                                    .with_shard(shard)
+                                                                    .with_backend(backend)
+                                                                    .with_requests(req),
+                                                            );
+                                                        }
                                                     }
                                                 }
                                             }
@@ -279,6 +292,7 @@ impl Grid {
     /// | `shard`     | `data`, `pipeline`, `tensor`, or `all` (all 3)      |
     /// | `backend`   | `s2`, `naive`, `gate`, `skipf`, `skipw`, `scnn`,    |
     /// |             | `sparten`, or `all` (those 7)                       |
+    /// | `requests`  | serving request counts (`0` = batch-window default) |
     /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
     /// | `samples`   | tiles sampled per layer (overrides effort)          |
     /// | `stride`    | layer thinning stride (overrides effort)            |
@@ -475,6 +489,12 @@ impl Grid {
                         },
                     }
                 }
+            }
+            "requests" | "request" => {
+                self.requests = values
+                    .iter()
+                    .map(|v| v.trim().parse::<usize>().map_err(|_| bad("requests", v)))
+                    .collect::<Result<_, _>>()?;
             }
             "effort" => {
                 let e = Effort::from_name(values.first().copied().unwrap_or("default"));
@@ -753,6 +773,27 @@ mod tests {
             r#"{"models": ["s2net"], "batch": [1, 4], "overlap": [0, 0.5]}"#,
         )
         .unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
+    }
+
+    #[test]
+    fn requests_axis_expands_innermost() {
+        let g = Grid::from_spec("models=s2net;requests=0,1000").unwrap();
+        assert_eq!(g.requests, vec![0, 1000]);
+        assert_eq!(g.size(), 2);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].requests, 0);
+        assert_eq!(jobs[1].requests, 1000);
+        // the default point keeps the historical key shape
+        assert!(jobs[0].is_default_requests());
+        assert!(!jobs[0].canonical().contains("|req"));
+        assert!(jobs[1].canonical().ends_with("|req1000"));
+        assert_ne!(jobs[0].key(), jobs[1].key());
+        // garbage is rejected, not defaulted
+        assert!(Grid::from_spec("requests=many").is_err());
+        // JSON grid form parses identically
+        let j = Json::parse(r#"{"models": ["s2net"], "requests": [0, 1000]}"#).unwrap();
         assert_eq!(Grid::from_json(&j).unwrap(), g);
     }
 

@@ -112,6 +112,12 @@ pub struct Job {
     /// ([`crate::backend`]); [`BackendKind::S2`] is the classic
     /// cycle-accurate evaluation point.
     pub backend: BackendKind,
+    /// Explicit request count for the serving protocol; `0` (the
+    /// default) keeps the historical closed-loop
+    /// `batch × `[`SERVE_WINDOWS`] protocol. Non-zero counts put the
+    /// head-to-head studies in the high-R regime the scheduler fast
+    /// path ([`crate::serve::fastpath`]) unlocks.
+    pub requests: usize,
 }
 
 impl Job {
@@ -138,6 +144,7 @@ impl Job {
             arrays: 1,
             shard: ShardStrategy::DataParallel,
             backend: BackendKind::S2,
+            requests: 0,
         }
     }
 
@@ -168,6 +175,7 @@ impl Job {
             arrays: 1,
             shard: ShardStrategy::DataParallel,
             backend: BackendKind::S2,
+            requests: 0,
         }
     }
 
@@ -206,6 +214,12 @@ impl Job {
         self
     }
 
+    /// `0` restores the default `batch × SERVE_WINDOWS` protocol.
+    pub fn with_requests(mut self, requests: usize) -> Job {
+        self.requests = requests;
+        self
+    }
+
     /// Is this job a plain per-layer evaluation point (the pre-serving
     /// default)? Such jobs keep their historical canonical form — and
     /// therefore their [`Job::key`] — so stores written before the
@@ -230,6 +244,14 @@ impl Job {
         self.backend.is_default()
     }
 
+    /// Does this job use the historical `batch × SERVE_WINDOWS` request
+    /// protocol? Such jobs keep their historical canonical form — and
+    /// therefore their [`Job::key`] — so stores written before the
+    /// `requests` axis existed still resume.
+    pub fn is_default_requests(&self) -> bool {
+        self.requests == 0
+    }
+
     /// The cluster configuration this job implies.
     pub fn cluster_config(&self) -> crate::cluster::ClusterConfig {
         crate::cluster::ClusterConfig::new(self.arrays, self.shard)
@@ -238,10 +260,17 @@ impl Job {
     /// The serving protocol this job implies: `batch`-sized windows,
     /// closed-loop arrivals, [`SERVE_WINDOWS`] full windows of requests
     /// (enough for the pipeline to reach steady state while staying a
-    /// pure function of the job's fields).
+    /// pure function of the job's fields) — unless the job names an
+    /// explicit request count ([`Job::with_requests`]), which overrides
+    /// the window protocol for high-R studies.
     pub fn serve_config(&self) -> crate::serve::ServeConfig {
+        let requests = if self.requests > 0 {
+            self.requests
+        } else {
+            self.batch.max(1) * SERVE_WINDOWS
+        };
         crate::serve::ServeConfig::new(self.batch, self.overlap)
-            .with_requests(self.batch.max(1) * SERVE_WINDOWS)
+            .with_requests(requests)
             .with_seed(self.seed)
     }
 
@@ -304,6 +333,12 @@ impl Job {
         }
         if !self.is_default_backend() {
             canon = format!("{canon}|be:{}", self.backend.tag());
+        }
+        // `|req` is prefix-distinct from every other optional suffix
+        // (`|b`+digits, `|ov:`, `|a`+digits, `|sh:`, `|be:`), so the
+        // composition stays injective
+        if !self.is_default_requests() {
+            canon = format!("{canon}|req{}", self.requests);
         }
         canon
     }
@@ -387,6 +422,11 @@ impl Job {
         if !self.is_default_backend() {
             o.insert("backend".into(), Json::Str(self.backend.tag().into()));
         }
+        // requests likewise elided at the window-protocol default
+        // (pre-requests stores parse back as requests=0)
+        if !self.is_default_requests() {
+            o.insert("requests".into(), Json::Num(self.requests as f64));
+        }
         Json::Obj(o)
     }
 
@@ -462,6 +502,7 @@ impl Job {
                     .ok_or_else(|| format!("unknown backend `{tag}`"))?,
                 _ => BackendKind::S2,
             },
+            requests: j.get("requests").and_then(Json::as_usize).unwrap_or(0),
         })
     }
 }
@@ -661,6 +702,60 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq.len(), keys.len(), "backend axis must distinguish keys");
+    }
+
+    #[test]
+    fn default_requests_keep_historical_keys() {
+        // Pre-requests stores must keep resuming: a requests=0 job keys
+        // exactly as it did before the requests axis existed — including
+        // when every other optional axis is non-default. The canonical
+        // forms are locked against the earlier-PR constants.
+        let j = job();
+        assert!(j.is_default_requests());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        assert_eq!(j.clone().with_requests(0).key(), j.key());
+        // non-default request counts extend — and change — the key
+        let r = j.clone().with_requests(1_000_000);
+        assert!(r.canonical().ends_with("|req1000000"));
+        assert_ne!(r.key(), j.key());
+        // the requests suffix composes last, after serving + cluster +
+        // backend, in a fixed injective order
+        let full = j
+            .clone()
+            .with_batch(4)
+            .with_arrays(2)
+            .with_shard(ShardStrategy::LayerPipeline)
+            .with_backend(BackendKind::SparTen)
+            .with_requests(4096);
+        assert!(full.canonical().ends_with(
+            "|b4|ov:0000000000000000|a2|sh:pipeline|be:sparten|req4096"
+        ));
+        let keys = [
+            j.key(),
+            r.key(),
+            full.key(),
+            j.clone().with_requests(4096).key(),
+            j.clone().with_requests(4095).key(),
+        ];
+        let mut uniq = keys.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "requests axis must distinguish keys");
+        // JSON round-trips with elision at the default
+        let text = r.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, back);
+        let legacy = j.to_json().to_string();
+        assert!(!legacy.contains("requests"));
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert!(parsed.is_default_requests());
+        // serve_config honours the override (and the 0 default)
+        assert_eq!(r.serve_config().requests, 1_000_000);
+        assert_eq!(j.serve_config().requests, SERVE_WINDOWS);
     }
 
     #[test]

@@ -82,7 +82,7 @@ fn single_array_cluster_equals_pipelined_for_every_strategy() {
                     r.schedule.lanes[0].busy.to_bits(),
                     piped.schedule.busy.to_bits()
                 );
-                assert_eq!(r.schedule.lanes[0].jobs, piped.schedule.jobs.len());
+                assert_eq!(r.schedule.lanes[0].jobs, piped.schedule.n_jobs);
                 assert_eq!(r.link_bytes(), 0.0);
                 assert_eq!(r.schedule.mandatory_transfer, 0.0);
                 assert!((r.scaleout_efficiency() - 1.0).abs() < 1e-12);

@@ -1,0 +1,334 @@
+//! Fast-path equivalence: the streaming serving scheduler
+//! (`serve::fastpath::evaluate` — window-template memoization + the
+//! steady-state extrapolator) must be **bit-identical** to the exact
+//! materializing engine (`PipelineSchedule::build`) everywhere it
+//! claims to be, across every entry point that now routes through it:
+//!
+//! 1. **Direct engine equivalence** — randomized DAGs × batches ×
+//!    overlaps × arrival patterns, with memoization on and off.
+//! 2. **Every backend tag** — `simulate_model_pipelined_with` under
+//!    the full comparator roster, fast path vs `SchedPolicy::exact()`.
+//! 3. **Every sharding strategy** — `simulate_model_cluster` at
+//!    `arrays = 1` and sharded, fast path vs exact, memo on and off.
+//!
+//! The steady-state layer is the one deliberate exception: it is
+//! bounded-error, not bit-exact (extrapolating `k` windows replaces a
+//! per-job rounding chain with one multiply), so it carries an explicit
+//! relative-error budget here — and must *disengage* (restoring
+//! bit-exactness) whenever arrivals are late enough to matter. The
+//! Python transcription oracle in `scripts/fuzz_serve_pipeline.py`
+//! re-checks the same contract against an independent implementation.
+
+use s2engine::backend::BackendKind;
+use s2engine::cluster::{ClusterConfig, ShardStrategy};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::{
+    evaluate, LayerDag, PipelineSchedule, SchedPolicy, ScheduleSummary, ServeConfig,
+};
+use s2engine::util::rng::Rng;
+
+fn coord(seed: u64) -> Coordinator {
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(1)
+        .with_seed(seed);
+    Coordinator::new(cfg)
+}
+
+/// Random DAG: a chain spine (layers depend on their predecessor) with
+/// occasional extra skip edges — the shapes `LayerDag::new` admits.
+fn random_dag(rng: &mut Rng, n: usize) -> LayerDag {
+    let mut deps: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut d = Vec::new();
+        if i > 0 {
+            d.push(i - 1);
+        }
+        if i > 1 && rng.gen_below(3) == 0 {
+            let extra = rng.gen_below(i as u64 - 1) as usize;
+            if !d.contains(&extra) {
+                d.push(extra);
+            }
+        }
+        deps.push(d);
+    }
+    LayerDag::new(deps).expect("construction is acyclic by design")
+}
+
+fn assert_bits_equal(a: &ScheduleSummary, b: &ScheduleSummary, what: &str) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+    assert_eq!(a.busy.to_bits(), b.busy.to_bits(), "{what}: busy");
+    assert_eq!(a.n_jobs, b.n_jobs, "{what}: n_jobs");
+    assert_eq!(a.finish_times.len(), b.finish_times.len(), "{what}: len");
+    for (i, (x, y)) in a.finish_times.iter().zip(&b.finish_times).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: finish_times[{i}]");
+    }
+}
+
+#[test]
+fn fastpath_matches_exact_engine_on_random_schedules() {
+    let mut rng = Rng::seed_from_u64(0xfa57_0001);
+    for case in 0..48 {
+        let n_nodes = 1 + rng.gen_below(6) as usize;
+        let dag = random_dag(&mut rng, n_nodes);
+        let durations: Vec<f64> =
+            (0..n_nodes).map(|_| 0.05 + rng.gen_f64()).collect();
+        let n_img = 1 + rng.gen_below(30) as usize;
+        let batch = 1 + rng.gen_below(6) as usize;
+        let overlap = rng.gen_f64() * 0.95;
+        // closed-loop, uniformly spread, and bursty arrival patterns
+        let mut arrivals = vec![0.0f64; n_img];
+        match rng.gen_below(3) {
+            1 => {
+                let mut t = 0.0;
+                for a in arrivals.iter_mut() {
+                    t += rng.gen_f64() * 0.4;
+                    *a = t;
+                }
+            }
+            2 => {
+                for (i, a) in arrivals.iter_mut().enumerate() {
+                    *a = (i / batch.max(1)) as f64 * 0.01;
+                }
+            }
+            _ => {}
+        }
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+            &dag, &durations, &arrivals, batch, overlap,
+        ));
+        for policy in [
+            SchedPolicy::default().with_steady(false),
+            SchedPolicy::default().with_steady(false).with_memoize(false),
+        ] {
+            let fast = evaluate(&dag, &durations, &arrivals, batch, overlap, &policy);
+            assert_bits_equal(
+                &fast,
+                &exact,
+                &format!(
+                    "case {case} n{n_nodes} img{n_img} b{batch} ov{overlap:.3} \
+                     memo {}",
+                    policy.memoize
+                ),
+            );
+            assert_eq!(fast.steady_windows, 0, "steady disabled here");
+        }
+        // the exact() policy routes through the materializing engine
+        let off = evaluate(
+            &dag, &durations, &arrivals, batch, overlap,
+            &SchedPolicy::exact(),
+        );
+        assert_bits_equal(&off, &exact, "opt-out policy");
+    }
+}
+
+#[test]
+fn every_backend_serves_bit_identically_on_the_fast_path() {
+    let model = zoo::s2net();
+    let c = coord(0xfa57_0002);
+    for kind in BackendKind::ALL {
+        let backend = kind.build(&c.cfg);
+        for &(batch, overlap, requests) in &[(1usize, 0.0, 6usize), (4, 0.6, 16)] {
+            let fast_cfg = ServeConfig::new(batch, overlap)
+                .with_requests(requests)
+                .with_seed(11);
+            let exact_cfg = fast_cfg.with_policy(SchedPolicy::exact());
+            let fast = c.simulate_model_pipelined_with(
+                backend.as_ref(),
+                &model,
+                FeatureSubset::Average,
+                &fast_cfg,
+            );
+            let exact = c.simulate_model_pipelined_with(
+                backend.as_ref(),
+                &model,
+                FeatureSubset::Average,
+                &exact_cfg,
+            );
+            let what = format!("{} b{batch} ov{overlap}", kind.tag());
+            assert_bits_equal(&fast.schedule, &exact.schedule, &what);
+            assert_eq!(fast.latency, exact.latency, "{what}: latency");
+            assert_eq!(fast.arrivals, exact.arrivals, "{what}: arrivals");
+            assert_eq!(
+                fast.occupancy().to_bits(),
+                exact.occupancy().to_bits(),
+                "{what}: occupancy"
+            );
+        }
+    }
+}
+
+#[test]
+fn cluster_strategies_bit_identical_fast_vs_exact() {
+    let model = zoo::alexnet();
+    let c = coord(0xfa57_0003);
+    for shard in ShardStrategy::ALL {
+        for &arrays in &[1usize, 4] {
+            let cluster = ClusterConfig::new(arrays, shard);
+            let fast_cfg = ServeConfig::new(4, 0.6).with_requests(24).with_seed(5);
+            let exact_cfg = fast_cfg.with_policy(SchedPolicy::exact());
+            let fast =
+                c.simulate_model_cluster(&model, FeatureSubset::Average, &fast_cfg, &cluster);
+            let exact = c.simulate_model_cluster(
+                &model,
+                FeatureSubset::Average,
+                &exact_cfg,
+                &cluster,
+            );
+            let what = format!("{shard:?} x{arrays}");
+            assert_eq!(
+                fast.makespan().to_bits(),
+                exact.makespan().to_bits(),
+                "{what}: makespan"
+            );
+            for (i, (a, b)) in fast
+                .schedule
+                .finish_times
+                .iter()
+                .zip(&exact.schedule.finish_times)
+                .enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{what}: finish[{i}]");
+            }
+            assert_eq!(fast.latency, exact.latency, "{what}: latency");
+            assert_eq!(
+                fast.schedule.lanes.len(),
+                exact.schedule.lanes.len(),
+                "{what}: lanes"
+            );
+            for (i, (a, b)) in fast
+                .schedule
+                .lanes
+                .iter()
+                .zip(&exact.schedule.lanes)
+                .enumerate()
+            {
+                assert_eq!(a.busy.to_bits(), b.busy.to_bits(), "{what}: lane {i} busy");
+                assert_eq!(a.jobs, b.jobs, "{what}: lane {i} jobs");
+            }
+            assert_eq!(fast.link_bytes(), exact.link_bytes(), "{what}: link bytes");
+        }
+    }
+}
+
+#[test]
+fn memo_on_off_bit_equality_across_serve_and_cluster() {
+    let model = zoo::s2net();
+    let c = coord(0xfa57_0004);
+    let base = ServeConfig::new(3, 0.5).with_requests(18).with_seed(9);
+    let no_memo = base.with_policy(SchedPolicy::default().with_memoize(false));
+    // serve entry point
+    let on = c.simulate_model_pipelined(&model, FeatureSubset::Average, &base);
+    let off = c.simulate_model_pipelined(&model, FeatureSubset::Average, &no_memo);
+    assert_bits_equal(&on.schedule, &off.schedule, "serve memo on/off");
+    assert_eq!(on.latency, off.latency);
+    // cluster entry point, every strategy
+    for shard in ShardStrategy::ALL {
+        let cluster = ClusterConfig::new(2, shard);
+        let on = c.simulate_model_cluster(&model, FeatureSubset::Average, &base, &cluster);
+        let off =
+            c.simulate_model_cluster(&model, FeatureSubset::Average, &no_memo, &cluster);
+        assert_eq!(
+            on.makespan().to_bits(),
+            off.makespan().to_bits(),
+            "{shard:?}: memo on/off makespan"
+        );
+        for (a, b) in on
+            .schedule
+            .finish_times
+            .iter()
+            .zip(&off.schedule.finish_times)
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "{shard:?}: memo on/off finish");
+        }
+        assert_eq!(on.latency, off.latency, "{shard:?}: memo on/off latency");
+    }
+}
+
+#[test]
+fn steady_state_bounded_error_and_late_arrival_disengage() {
+    // deep closed-loop backlog: the steady layer must engage and land
+    // within the n·ε budget the module documents (both paths compute
+    // the same real-arithmetic schedule; they differ only in rounding)
+    let dag = LayerDag::chain(5);
+    let durations = [0.3, 0.17, 0.41, 0.23, 0.09];
+    let n_img = 8_000usize;
+    let arrivals = vec![0.0f64; n_img];
+    let exact = evaluate(
+        &dag,
+        &durations,
+        &arrivals,
+        8,
+        0.6,
+        &SchedPolicy::default().with_steady(false),
+    );
+    let steady = evaluate(&dag, &durations, &arrivals, 8, 0.6, &SchedPolicy::default());
+    assert!(
+        steady.steady_windows > 0,
+        "steady layer must engage on a deep closed-loop backlog"
+    );
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+    assert!(
+        rel(steady.makespan, exact.makespan) < 1e-9,
+        "makespan error {} vs budget 1e-9",
+        rel(steady.makespan, exact.makespan)
+    );
+    assert!(rel(steady.busy, exact.busy) < 1e-9, "busy within budget");
+    assert_eq!(steady.finish_times.len(), exact.finish_times.len());
+    for (a, b) in steady.finish_times.iter().zip(&exact.finish_times) {
+        assert!(rel(*a, *b) < 1e-9, "finish time {a} vs {b}");
+    }
+    // arrivals that keep racing ahead of the pipeline frontier must
+    // keep the steady layer out — and the result bit-exact
+    let spread: Vec<f64> = (0..n_img).map(|i| i as f64 * 10.0).collect();
+    let guarded = evaluate(&dag, &durations, &spread, 8, 0.6, &SchedPolicy::default());
+    let exact_spread = evaluate(
+        &dag,
+        &durations,
+        &spread,
+        8,
+        0.6,
+        &SchedPolicy::default().with_steady(false),
+    );
+    assert_eq!(guarded.steady_windows, 0, "late arrivals must disengage");
+    assert_bits_equal(&guarded, &exact_spread, "spread arrivals");
+}
+
+#[test]
+fn high_r_sweep_point_is_consistent_across_policies() {
+    // the --requests satellite end to end: a sweep Job carrying an
+    // explicit high request count serves through the fast path and
+    // reports the same protocol the exact path would
+    use s2engine::sweep::Job;
+    use s2engine::report::Effort;
+    let effort = Effort {
+        tile_samples: 1,
+        layer_stride: 8,
+        images: 0,
+    };
+    let job = Job::subset(
+        "s2net",
+        FeatureSubset::Average,
+        ArrayConfig::new(8, 8),
+        true,
+        0xfa57_0005,
+        effort,
+    )
+    .with_batch(4)
+    .with_overlap(0.6)
+    .with_requests(2_000);
+    let serve = job.serve_config();
+    assert_eq!(serve.requests, 2_000);
+    let c = coord(job.seed);
+    let model = zoo::s2net();
+    let fast = c.simulate_model_pipelined(&model, FeatureSubset::Average, &serve);
+    let exact_cfg = serve.with_policy(SchedPolicy::exact());
+    let exact = c.simulate_model_pipelined(&model, FeatureSubset::Average, &exact_cfg);
+    // steady extrapolation may engage at this depth: throughput must
+    // agree to the documented bounded error, and every request must be
+    // accounted for in both paths
+    assert_eq!(fast.schedule.finish_times.len(), 2_000);
+    assert_eq!(exact.schedule.finish_times.len(), 2_000);
+    let rel = (fast.makespan() - exact.makespan()).abs() / exact.makespan();
+    assert!(rel < 1e-9, "high-R makespan drift {rel}");
+}

@@ -35,7 +35,19 @@ BENCH_FIELDS = ("mean_ns", "p50_ns", "min_ns", "std_dev_ns", "iters")
 # check even though it still times something
 REQUIRED = {
     "BENCH_sim.json": ["sim/event-vs-sweep speedup"],
-    "BENCH_serve.json": ["model/pipeline-gain", "model/throughput-b1"],
+    "BENCH_serve.json": [
+        "model/pipeline-gain",
+        "model/throughput-b1",
+        "model/sim-reqs-per-s-r1e6",
+        "model/fastpath-speedup-r1e6",
+    ],
+    "BENCH_serve_scale.json": [
+        "scale/fastpath-speedup-r1e3",
+        "scale/fastpath-speedup-r1e4",
+        "scale/fastpath-speedup-r1e6",
+        "scale/sim-reqs-per-s-r1e6",
+        "scale/steady-gain-r1e6",
+    ],
     "BENCH_cluster.json": [
         "model/scaleout-eff-data-n4",
         "model/scaleout-eff-pipeline-n4",

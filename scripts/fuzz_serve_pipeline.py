@@ -27,10 +27,22 @@ rust/tests/backend_equivalence.rs enforces in CI: a batch=1 / overlap=0
 single-request makespan is bit-exactly the left-fold of the analytic
 per-layer walls, and the golden closed forms (76 naive / 310 scnn /
 266 sparten / 500 gating cycles) survive the transcription.
+
+And the fast-path oracle (`fastpath_oracle`): a transcription of
+rust/src/serve/fastpath.rs — wave-template construction
+(`build_template`/`steady_info`), the streaming replay, and the
+steady-state gate of `evaluate` — fuzzed against the `build`
+transcription above. The replay layers must match *bit for bit*
+(compared through `struct.pack`, mirroring `to_bits()` in
+rust/tests/serve_fastpath.rs); the steady-state extrapolation must
+engage on saturated closed-loop backlogs, stay within the documented
+n·ε relative bound, and stay disengaged (hence bit-exact) when
+arrivals outrun the array.
 """
 
 import math
 import random
+import struct
 
 MAX_OVERLAP = 0.95
 CLK = 500.0 * 1e6  # MAC_FREQ_MHZ as f64 * 1e6
@@ -116,6 +128,299 @@ def serial_makespan(durations, arrivals, batch):
         t = max(t, ready) + (hi - lo) * work
         w += 1
     return t
+
+
+# --- fast-path transcription (rust/src/serve/fastpath.rs) -------------
+
+STEADY_MIN_WINDOWS = 64
+
+
+def _bits(x):
+    """f64 bit pattern, the Python spelling of `to_bits()`."""
+    return struct.pack("<d", x)
+
+
+def _steady_info(n_nodes, deps, topo, width, dur, cut, topo_pos, sinks,
+                 entry_any_prev):
+    """Transcription of fastpath::steady_info."""
+    if not entry_any_prev or n_nodes == 0 or width == 0 or not sinks:
+        return None
+    b = []
+    b_prev = 0.0
+    busy_delta = 0.0
+    theta = 0.0
+    bmag = 0.0
+    job = 0
+    for node in topo:
+        for s in range(width):
+            lower = b_prev - cut[job]
+            for p in deps[node]:
+                lower = max(lower, b[topo_pos[p] * width + s])
+            theta = max(theta, -lower)
+            end = lower + dur[job]
+            busy_delta += end - max(lower, b_prev)
+            if not math.isfinite(end):
+                return None
+            bmag = max(bmag, abs(end), abs(cut[job]))
+            b.append(end)
+            b_prev = end
+            job += 1
+    off = []
+    for s in range(width):
+        o = float("-inf")
+        for snk in sinks:
+            o = max(o, b[topo_pos[snk] * width + s])
+        theta = max(theta, -o)
+        off.append(o)
+    margin = (bmag + 1.0) * 1e-9
+    return {"delta": b_prev, "busy_delta": busy_delta,
+            "theta": theta + margin, "off": off}
+
+
+def build_template(n_nodes, deps, topo, sinks, durations, overlap, width,
+                   entry_prev_dur, entry_any_prev):
+    """Transcription of fastpath::build_template (overlap pre-clamped)."""
+    dur, cut, depidx, dep_off, slot = [], [], [], [0], []
+    topo_pos = [0] * n_nodes
+    for i, n in enumerate(topo):
+        topo_pos[n] = i
+    prev_dur = entry_prev_dur
+    for node in topo:
+        d = durations[node]
+        for s in range(width):
+            cut.append(overlap * min(prev_dur, d))
+            dur.append(d)
+            for p in deps[node]:
+                depidx.append(s * n_nodes + p)
+            dep_off.append(len(depidx))
+            slot.append(s * n_nodes + node)
+            prev_dur = d
+    steady = _steady_info(
+        n_nodes, deps, topo, width, dur, cut, topo_pos, sinks, entry_any_prev
+    )
+    return {"width": width, "n_nodes": n_nodes, "dur": dur, "cut": cut,
+            "deps": depidx, "dep_off": dep_off, "slot": slot,
+            "sinks": sinks, "steady": steady}
+
+
+def _replay(tpl, t0, st, wfin, finish_times, lo):
+    """Transcription of fastpath::replay; st = [array_free, any_prev,
+    busy, makespan], finish written into finish_times[lo:lo+width]."""
+    f, ap, busy, mk = st
+    di = 0
+    for j in range(len(tpl["dur"])):
+        ready = t0
+        dend = tpl["dep_off"][j + 1]
+        while di < dend:
+            ready = max(ready, wfin[tpl["deps"][di]])
+            di += 1
+        start = max(ready, f - tpl["cut"][j]) if ap else ready
+        end = start + tpl["dur"][j]
+        busy += end - (max(start, f) if ap else start)
+        wfin[tpl["slot"][j]] = end
+        f = end
+        ap = True
+        mk = max(mk, end)
+    n_nodes = tpl["n_nodes"]
+    for s in range(tpl["width"]):
+        done = t0
+        for snk in tpl["sinks"]:
+            done = max(done, wfin[s * n_nodes + snk])
+        finish_times[lo + s] = done
+    st[0], st[1], st[2], st[3] = f, ap, busy, mk
+
+
+def evaluate(n_nodes, deps, topo, durations, arrivals, batch, overlap,
+             sinks, steady=True):
+    """Transcription of fastpath::evaluate (the fastpath=True route;
+    memoization is identity in Python — templates are pure functions of
+    the key — so only the steady toggle is modeled). Returns
+    (finish_times, makespan, busy, n_jobs, steady_windows)."""
+    overlap = min(max(overlap, 0.0), MAX_OVERLAP)
+    batch = max(batch, 1)
+    n_img = len(arrivals)
+    if n_img == 0:
+        return [], 0.0, 0.0, 0, 0
+    w0 = min(batch, n_img)
+    n_full = n_img // batch
+    tail_w = n_img % batch if n_img > batch else 0
+    n_windows = -(-n_img // batch)
+    d_last = durations[topo[-1]] if topo else 0.0
+
+    tpl_first = build_template(
+        n_nodes, deps, topo, sinks, durations, overlap, w0, 0.0, False
+    )
+    tpl_mid = (
+        build_template(
+            n_nodes, deps, topo, sinks, durations, overlap, batch, d_last, True
+        )
+        if n_full >= 2
+        else None
+    )
+    tpl_tail = (
+        build_template(
+            n_nodes, deps, topo, sinks, durations, overlap, tail_w, d_last, True
+        )
+        if tail_w > 0
+        else None
+    )
+
+    finish_times = [0.0] * n_img
+    wfin = [0.0] * max(w0 * n_nodes, batch * n_nodes)
+    st = [0.0, False, 0.0, 0.0]  # array_free, any_prev, busy, makespan
+    steady_windows = 0
+    tail_t0_max = None
+
+    window = 0
+    while window < n_windows:
+        lo = window * batch
+        hi = min(lo + batch, n_img)
+
+        if (
+            steady
+            and window >= 1
+            and window < n_full
+            and n_full - window >= STEADY_MIN_WINDOWS
+            and tpl_mid is not None
+            and tpl_mid["steady"] is not None
+        ):
+            info = tpl_mid["steady"]
+            if tail_t0_max is None:
+                tail_t0_max = 0.0
+                for a in arrivals[lo : n_full * batch]:
+                    tail_t0_max = max(tail_t0_max, a)
+            if st[0] - tail_t0_max >= info["theta"]:
+                k = n_full - window
+                for j in range(k):
+                    f_in = st[0] + float(j) * info["delta"]
+                    base = (window + j) * batch
+                    for s in range(batch):
+                        finish_times[base + s] = f_in + info["off"][s]
+                kf = float(k)
+                st[2] += kf * info["busy_delta"]
+                st[0] += kf * info["delta"]
+                st[3] = max(st[3], st[0])
+                steady_windows = k
+                window = n_full
+                continue
+
+        t0 = 0.0
+        for a in arrivals[lo:hi]:
+            t0 = max(t0, a)
+        if window == 0:
+            tpl = tpl_first
+        elif hi - lo == batch:
+            tpl = tpl_mid
+        else:
+            tpl = tpl_tail
+        _replay(tpl, t0, st, wfin, finish_times, lo)
+        window += 1
+
+    return finish_times, st[3], st[2], n_img * n_nodes, steady_windows
+
+
+def _random_fuzz_dag(rng, n):
+    """Chain + random skip edges (the shape rust/tests/serve_fastpath.rs
+    fuzzes); returns (deps, topo, sinks)."""
+    deps = [[] for _ in range(n)]
+    for i in range(1, n):
+        deps[i].append(i - 1)
+        if i >= 2 and rng.random() < 0.3:
+            extra = rng.randrange(i - 1)
+            if extra not in deps[i]:
+                deps[i].append(extra)
+    has_dependent = set()
+    for ds in deps:
+        has_dependent.update(ds)
+    sinks = [i for i in range(n) if i not in has_dependent]
+    return deps, list(range(n)), sinks
+
+
+def fastpath_oracle():
+    """Fast path vs exact engine: bit-equality off-steady, bounded error
+    + correct (dis)engagement for the steady-state layer."""
+    rng = random.Random(0xFA57)
+    bit_cases = 0
+    for trial in range(8000):
+        n = rng.randint(1, 6)
+        deps, topo, sinks = _random_fuzz_dag(rng, n)
+        durations = [rng.uniform(1e-4, 1e-2) for _ in range(n)]
+        arrivals = random_arrivals(rng, rng.randint(1, 30))
+        batch = rng.randint(1, 7)
+        overlap = rng.choice([0.0, 0.3, 0.6, 0.9, 0.95, 1.2])
+        jobs, ft, makespan, busy = build(
+            n, deps, topo, durations, arrivals, batch, overlap, sinks
+        )
+        for steady in (False, True):
+            f_ft, f_mk, f_busy, f_jobs, f_sw = evaluate(
+                n, deps, topo, durations, arrivals, batch, overlap, sinks,
+                steady=steady,
+            )
+            ctx = (trial, n, batch, overlap, len(arrivals), steady)
+            # small runs never extrapolate (< STEADY_MIN_WINDOWS windows)
+            assert f_sw == 0, ctx
+            assert f_jobs == len(jobs), ctx
+            assert _bits(f_mk) == _bits(makespan), (ctx, f_mk, makespan)
+            assert _bits(f_busy) == _bits(busy), (ctx, f_busy, busy)
+            assert len(f_ft) == len(ft), ctx
+            for a, b in zip(f_ft, ft):
+                assert _bits(a) == _bits(b), (ctx, a, b)
+        bit_cases += 1
+    print(f"all {bit_cases} fast-path replay cases are bit-identical")
+
+    # steady-state engagement: saturated closed-loop backlogs
+    rng = random.Random(0x57EA)
+    steady_cases = 0
+    for trial in range(120):
+        n = rng.randint(1, 5)
+        deps, topo, sinks = _random_fuzz_dag(rng, n)
+        durations = [rng.uniform(1e-4, 1e-2) for _ in range(n)]
+        batch = rng.randint(1, 4)
+        overlap = rng.choice([0.0, 0.5, 0.95])
+        windows = STEADY_MIN_WINDOWS + rng.randint(1, 40)
+        n_img = batch * windows + rng.choice([0, 1, batch - 1] if batch > 1 else [0])
+        arrivals = [0.0] * n_img
+        _, ft, makespan, busy = build(
+            n, deps, topo, durations, arrivals, batch, overlap, sinks
+        )
+        f_ft, f_mk, f_busy, f_jobs, f_sw = evaluate(
+            n, deps, topo, durations, arrivals, batch, overlap, sinks
+        )
+        ctx = (trial, n, batch, overlap, n_img)
+        assert f_sw > 0, (ctx, "steady layer must engage on a closed loop")
+        rel = lambda a, b: abs(a - b) / max(abs(b), 1e-300)
+        assert rel(f_mk, makespan) < 1e-9, (ctx, f_mk, makespan)
+        assert rel(f_busy, busy) < 1e-9, (ctx, f_busy, busy)
+        assert f_jobs == n_img * n
+        for a, b in zip(f_ft, ft):
+            assert rel(a, b) < 1e-9, (ctx, a, b)
+        steady_cases += 1
+
+    # disengagement: arrivals that outrun the backlog keep the run on
+    # the bit-exact path even at high R
+    rng = random.Random(0xD15E)
+    for trial in range(40):
+        n = rng.randint(1, 4)
+        deps, topo, sinks = _random_fuzz_dag(rng, n)
+        durations = [rng.uniform(1e-4, 1e-3) for _ in range(n)]
+        batch = rng.randint(1, 3)
+        n_img = batch * (STEADY_MIN_WINDOWS + 10)
+        gap = sum(durations) * batch * 2.0
+        arrivals = [i * gap for i in range(n_img)]
+        _, ft, makespan, busy = build(
+            n, deps, topo, durations, arrivals, batch, 0.5, sinks
+        )
+        f_ft, f_mk, f_busy, _, f_sw = evaluate(
+            n, deps, topo, durations, arrivals, batch, 0.5, sinks
+        )
+        assert f_sw == 0, (trial, "idle array must not extrapolate")
+        assert _bits(f_mk) == _bits(makespan)
+        assert _bits(f_busy) == _bits(busy)
+        for a, b in zip(f_ft, ft):
+            assert _bits(a) == _bits(b)
+        steady_cases += 1
+    print(f"all {steady_cases} steady-state cases engage/disengage correctly "
+          f"within the error bound")
 
 
 # --- analytic backend transcriptions (rust/src/baseline/*.rs) ---------
@@ -319,6 +624,7 @@ def main():
 
     print(f"all {cases} serve-pipeline fuzz cases satisfy the schedule invariants")
     analytic_backend_case()
+    fastpath_oracle()
 
 
 if __name__ == "__main__":

@@ -14,7 +14,10 @@
 # (EXPERIMENTS.md §Docs / §Tier-1). Finally, when python3 is available,
 # the scheduler transcription fuzzes (scripts/fuzz_serve_pipeline.py,
 # scripts/fuzz_cluster.py) re-check the serving and cluster schedule
-# invariants against their Python oracles.
+# invariants against their Python oracles — including the serving
+# fast-path oracle (serve/fastpath.rs transcription: wave-template
+# replay bit-identical to the exact engine, steady-state layer bounded
+# and correctly gated).
 #
 # CI (.github/workflows/ci.yml) invokes THIS script for its build/test
 # jobs, so the CI gate and the local gate cannot drift.
