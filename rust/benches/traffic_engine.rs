@@ -1,0 +1,104 @@
+//! Bench: the production traffic engine (EXPERIMENTS.md §Traffic
+//! engine) — stochastic arrival generation, SLO-aware dynamic batching
+//! at million-request scale, and the Pareto capacity-planning study.
+//!
+//! Times, on the same AlexNet-shaped layer chain the serving benches
+//! use:
+//! * generating 10^6 Poisson arrivals (`ArrivalProcess::generate`),
+//! * serving them through the windowed fast path with a finite
+//!   batch-forming SLO (`traffic::evaluate_with_slo`) — the headline
+//!   `traffic/sim-reqs-per-s-poisson-r1e6` metric,
+//! * the same workload with the SLO disarmed (`slo = ∞`, the legacy
+//!   fixed-batch fast path), so `traffic/slo-overhead-r1e6` isolates
+//!   what dynamic window formation costs on top of it,
+//! * the full Pareto frontier sweep at QUICK effort —
+//!   `pareto/min-arrays-at-slo` is the study's headline scalar (the
+//!   smallest data-parallel S²Engine fleet that meets the
+//!   naive-derived tail target).
+//!
+//! `scripts/check_bench.py` requires the metric keys in
+//! `BENCH_traffic.json`; values are tracked, not gated.
+
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::report::{self, Effort};
+use s2engine::serve::{evaluate_with_slo, ArrivalProcess, LayerDag, SchedPolicy};
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let samples = if quick { 1 } else { 4 };
+    let mut b = Bench::new();
+
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(16, 16)).with_samples(samples);
+    let coord = Coordinator::new(cfg);
+    let layers = coord.layer_results_subset(&model, FeatureSubset::Average);
+    let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+    let dag = LayerDag::chain(durations.len());
+    let (batch, overlap) = (8usize, 0.6);
+
+    // R is NOT shrunk under BENCH_QUICK: the metric names carry the
+    // request count, so the quick run must measure the same workload.
+    let requests = 1_000_000usize;
+    let process = ArrivalProcess::Poisson { rate: 1e6 };
+    b.bench("traffic/gen-poisson-r1e6", || {
+        black_box(process.generate(requests, 0.0, 7));
+    });
+    let arrivals = process.generate(requests, 0.0, 7);
+    // a tight budget (5 mean inter-arrival gaps) keeps the
+    // budget-close path hot instead of degenerating to batch-full
+    let slo = 5e-6;
+    let policy = SchedPolicy::default();
+    let slo_t = b
+        .bench("traffic/fastpath-slo-r1e6", || {
+            black_box(evaluate_with_slo(
+                &dag,
+                &durations,
+                &arrivals.times,
+                batch,
+                overlap,
+                slo,
+                &policy,
+            ));
+        })
+        .mean;
+    b.metric(
+        "traffic/sim-reqs-per-s-poisson-r1e6",
+        requests as f64 / slo_t.as_secs_f64(),
+        "req/s",
+    );
+    let fixed_t = b
+        .bench("traffic/fastpath-fixed-r1e6", || {
+            black_box(evaluate_with_slo(
+                &dag,
+                &durations,
+                &arrivals.times,
+                batch,
+                overlap,
+                f64::INFINITY,
+                &policy,
+            ));
+        })
+        .mean;
+    b.metric(
+        "traffic/slo-overhead-r1e6",
+        slo_t.as_secs_f64() / fixed_t.as_secs_f64(),
+        "x",
+    );
+
+    // the capacity-planning headline: smallest S² fleet meeting the
+    // dense baseline's best p99 on the Poisson/SLO serving point. The
+    // sweep is a full 16-job study, so it runs once (wall time is a
+    // tracked metric, not a statistical measurement).
+    let t0 = std::time::Instant::now();
+    let min_arrays = report::min_arrays_at_slo(Effort::QUICK, 0xbe_a7);
+    let pareto_s = t0.elapsed().as_secs_f64();
+    b.metric("pareto/min-arrays-at-slo", min_arrays as f64, "arrays");
+    b.metric("pareto/sweep-seconds-quick", pareto_s, "s");
+
+    if let Err(e) = b.write_json("BENCH_traffic.json") {
+        eprintln!("failed to write BENCH_traffic.json: {e}");
+    }
+}

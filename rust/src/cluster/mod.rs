@@ -32,11 +32,14 @@
 pub mod schedule;
 pub mod shard;
 
-pub use schedule::{build_cluster, ClusterSchedule, LaneStats};
+pub use schedule::{build_cluster, build_cluster_slo, ClusterSchedule, LaneStats};
 pub use shard::{balanced_stages, feature_link_bytes, ShardStrategy};
 
 use crate::coordinator::LayerResult;
-use crate::serve::{evaluate, Arrivals, LatencyStats, LayerDag, ServeConfig};
+use crate::serve::{
+    autoscale, traffic, Arrivals, AutoscaleConfig, AutoscaleTrace, LatencyStats, LayerDag,
+    ServeConfig,
+};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -122,8 +125,10 @@ impl ClusterReport {
         let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
         let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
         let out_bytes = feature_link_bytes(&layers);
-        let arrivals = Arrivals::open_loop(serve.requests.max(1), serve.rate, serve.seed);
-        let schedule = build_cluster(
+        let arrivals = serve
+            .arrival
+            .generate(serve.requests.max(1), serve.rate, serve.seed);
+        let schedule = build_cluster_slo(
             cluster.shard,
             &dag,
             &durations,
@@ -133,14 +138,16 @@ impl ClusterReport {
             serve.batch,
             serve.overlap,
             cluster.arrays,
+            serve.slo,
             &serve.policy,
         );
-        let single = evaluate(
+        let single = traffic::evaluate_with_slo(
             &dag,
             &durations,
             &arrivals.times,
             serve.batch,
             serve.overlap,
+            serve.slo,
             &serve.policy,
         );
         let latency = LatencyStats::from_latencies(
@@ -241,6 +248,12 @@ impl ClusterReport {
         o.insert("overlap".into(), Json::Num(self.serve.overlap));
         o.insert("requests".into(), Json::Num(self.arrivals.len() as f64));
         o.insert("rate".into(), Json::Num(self.serve.rate));
+        if self.serve.arrival != traffic::ArrivalProcess::Uniform {
+            o.insert("arrival".into(), Json::Str(self.serve.arrival.spec()));
+        }
+        if self.serve.slo.is_finite() {
+            o.insert("slo_ms".into(), Json::Num(self.serve.slo * 1e3));
+        }
         o.insert("makespan_s".into(), Json::Num(self.makespan()));
         o.insert("single_makespan_s".into(), Json::Num(self.single_makespan));
         o.insert("throughput_img_s".into(), Json::Num(self.throughput()));
@@ -267,6 +280,47 @@ impl ClusterReport {
         );
         Json::Obj(o)
     }
+}
+
+/// Closed-loop capacity planning: run [`crate::serve::autoscale`] with
+/// the observed p99 of a real cluster simulation as the feedback signal.
+/// Each epoch re-assembles the full [`ClusterReport`] at the candidate
+/// array count (same model, backend, shard, and traffic — only `arrays`
+/// moves) and feeds its `latency.p99` back to the controller. Returns
+/// the decision trace plus the report at the converged array count.
+///
+/// Deterministic end to end: the arrival timeline is fixed by
+/// `serve.(arrival, rate, seed)`, so the controller sees the identical
+/// workload at every epoch — this is capacity *planning*, not noisy
+/// online control.
+pub fn autoscale_backend(
+    model: &str,
+    backend: &str,
+    shard: ShardStrategy,
+    serve: ServeConfig,
+    layers: &[LayerResult],
+    cfg: &AutoscaleConfig,
+    start_arrays: usize,
+) -> (AutoscaleTrace, ClusterReport) {
+    let trace = autoscale(cfg, start_arrays, |arrays| {
+        ClusterReport::assemble_backend(
+            model,
+            backend,
+            ClusterConfig::new(arrays, shard),
+            serve,
+            layers.to_vec(),
+        )
+        .latency
+        .p99
+    });
+    let report = ClusterReport::assemble_backend(
+        model,
+        backend,
+        ClusterConfig::new(trace.final_arrays, shard),
+        serve,
+        layers.to_vec(),
+    );
+    (trace, report)
 }
 
 #[cfg(test)]
@@ -338,6 +392,71 @@ mod tests {
         assert!(j.f64_field("link_bytes").unwrap() > 0.0);
         assert!(j.f64_field("scaleout_efficiency").unwrap() > 0.0);
         assert_eq!(j.get("occupancy").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn traffic_config_threads_through_cluster_report() {
+        use crate::serve::ArrivalProcess;
+        let layers = quick_layers();
+        let chain: f64 = layers.iter().map(|l| l.wall()).sum();
+        let serve = ServeConfig::new(2, 0.5)
+            .with_requests(8)
+            .with_rate(0.5 / chain)
+            .with_arrival(ArrivalProcess::Poisson { rate: 0.5 / chain })
+            .with_slo(4.0 * chain);
+        let r = ClusterReport::assemble(
+            "s2net",
+            ClusterConfig::new(2, ShardStrategy::DataParallel),
+            serve,
+            layers,
+        );
+        // the timeline is the Poisson one, not the uniform baseline
+        let uniform = Arrivals::open_loop(8, serve.rate, serve.seed);
+        assert_ne!(r.arrivals, uniform, "Poisson timeline must differ");
+        assert_eq!(r.arrivals.len(), 8);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(
+            j.str_field("arrival").unwrap(),
+            serve.arrival.spec(),
+            "non-default arrival process must be reported"
+        );
+        assert!((j.f64_field("slo_ms").unwrap() - serve.slo * 1e3).abs() < 1e-9);
+        assert!(r.makespan() >= r.lower_bound() - 1e-12);
+    }
+
+    #[test]
+    fn autoscale_backend_tracks_the_slo_bounds() {
+        let layers = quick_layers();
+        let serve = ServeConfig::new(2, 0.5).with_requests(8);
+        // infinite SLO: any capacity satisfies it, scale-in to the floor
+        let lax = AutoscaleConfig::new(f64::INFINITY, 8);
+        let (trace, report) = autoscale_backend(
+            "s2net",
+            "s2",
+            ShardStrategy::DataParallel,
+            serve,
+            &layers,
+            &lax,
+            4,
+        );
+        assert!(trace.converged);
+        assert_eq!(trace.final_arrays, lax.min_arrays);
+        assert_eq!(report.cluster.arrays, lax.min_arrays);
+        // unsatisfiable SLO: grow to the ceiling and hold there
+        let strict = AutoscaleConfig::new(1e-12, 4);
+        let (trace, report) = autoscale_backend(
+            "s2net",
+            "s2",
+            ShardStrategy::DataParallel,
+            serve,
+            &layers,
+            &strict,
+            1,
+        );
+        assert!(trace.converged);
+        assert_eq!(trace.final_arrays, 4);
+        assert_eq!(report.cluster.arrays, 4);
+        assert!(report.latency.p99 > strict.slo, "SLO stays violated at max");
     }
 
     #[test]

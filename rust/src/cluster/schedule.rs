@@ -24,7 +24,7 @@
 //! strategy internals.
 
 use super::shard::{balanced_stages, link_seconds, ShardStrategy};
-use crate::serve::{fastpath, LayerDag, SchedPolicy};
+use crate::serve::{traffic, LayerDag, SchedPolicy};
 #[allow(unused_imports)] // the docs reference the exact engine
 use crate::serve::PipelineSchedule;
 
@@ -77,16 +77,53 @@ pub fn build_cluster(
     arrays: usize,
     policy: &SchedPolicy,
 ) -> ClusterSchedule {
+    build_cluster_slo(
+        strategy,
+        dag,
+        durations,
+        tiles,
+        out_bytes,
+        arrivals,
+        batch,
+        overlap,
+        arrays,
+        f64::INFINITY,
+        policy,
+    )
+}
+
+/// [`build_cluster`] with an SLO-aware admission budget: every per-array
+/// pipeline closes a batch window early when the oldest queued request
+/// would otherwise exceed `slo` seconds of queueing delay
+/// ([`crate::serve::traffic::windows`]). For [`ShardStrategy::LayerPipeline`]
+/// the budget re-applies at each stage's re-formed arrival timeline —
+/// downstream queues obey the same admission discipline as the front
+/// door. `slo = ∞` reproduces [`build_cluster`] bit-for-bit (fixed
+/// batching; the windowed engine is bypassed entirely).
+#[allow(clippy::too_many_arguments)]
+pub fn build_cluster_slo(
+    strategy: ShardStrategy,
+    dag: &LayerDag,
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
     let arrays = arrays.max(1);
     match strategy {
         ShardStrategy::DataParallel => {
-            data_parallel(dag, durations, arrivals, batch, overlap, arrays, policy)
+            data_parallel_slo(dag, durations, arrivals, batch, overlap, arrays, slo, policy)
         }
-        ShardStrategy::LayerPipeline => layer_pipeline(
-            dag, durations, out_bytes, arrivals, batch, overlap, arrays, policy,
+        ShardStrategy::LayerPipeline => layer_pipeline_slo(
+            dag, durations, out_bytes, arrivals, batch, overlap, arrays, slo, policy,
         ),
-        ShardStrategy::TensorShard => tensor_shard(
-            dag, durations, tiles, out_bytes, arrivals, batch, overlap, arrays, policy,
+        ShardStrategy::TensorShard => tensor_shard_slo(
+            dag, durations, tiles, out_bytes, arrivals, batch, overlap, arrays, slo, policy,
         ),
     }
 }
@@ -113,6 +150,31 @@ pub fn data_parallel(
     arrays: usize,
     policy: &SchedPolicy,
 ) -> ClusterSchedule {
+    data_parallel_slo(
+        dag,
+        durations,
+        arrivals,
+        batch,
+        overlap,
+        arrays,
+        f64::INFINITY,
+        policy,
+    )
+}
+
+/// [`data_parallel`] with a per-replica SLO admission budget (`slo = ∞`
+/// is the fixed-batching identity).
+#[allow(clippy::too_many_arguments)]
+pub fn data_parallel_slo(
+    dag: &LayerDag,
+    durations: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
     let arrays = arrays.max(1);
     let mut member: Vec<Vec<usize>> = vec![Vec::new(); arrays];
     for i in 0..arrivals.len() {
@@ -123,7 +185,7 @@ pub fn data_parallel(
     let mut makespan = 0.0f64;
     for requests in &member {
         let sub: Vec<f64> = requests.iter().map(|&i| arrivals[i]).collect();
-        let s = fastpath::evaluate(dag, durations, &sub, batch, overlap, policy);
+        let s = traffic::evaluate_with_slo(dag, durations, &sub, batch, overlap, slo, policy);
         for (slot, &i) in requests.iter().enumerate() {
             finish_times[i] = s.finish_times[slot];
         }
@@ -160,6 +222,33 @@ pub fn layer_pipeline(
     arrays: usize,
     policy: &SchedPolicy,
 ) -> ClusterSchedule {
+    layer_pipeline_slo(
+        dag,
+        durations,
+        out_bytes,
+        arrivals,
+        batch,
+        overlap,
+        arrays,
+        f64::INFINITY,
+        policy,
+    )
+}
+
+/// [`layer_pipeline`] with an SLO admission budget applied at every
+/// stage's arrival timeline (`slo = ∞` is the fixed-batching identity).
+#[allow(clippy::too_many_arguments)]
+pub fn layer_pipeline_slo(
+    dag: &LayerDag,
+    durations: &[f64],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
     let arrays = arrays.max(1);
     let topo = dag.topo_order();
     // durations in topo position order feed the stage balancer
@@ -169,7 +258,7 @@ pub fn layer_pipeline(
 
     // one stage == the plain single-array pipeline, bit-identically
     if n_stages == 1 {
-        let s = fastpath::evaluate(dag, durations, arrivals, batch, overlap, policy);
+        let s = traffic::evaluate_with_slo(dag, durations, arrivals, batch, overlap, slo, policy);
         let mut lanes = vec![LaneStats::default(); arrays];
         if let Some(first) = lanes.first_mut() {
             *first = LaneStats {
@@ -246,8 +335,14 @@ pub fn layer_pipeline(
             .collect();
         let sub_dag = LayerDag::new(sub_deps).expect("a stage cut preserves acyclicity");
         let sub_durs: Vec<f64> = nodes.iter().map(|&n| durations[n]).collect();
-        let sched = fastpath::evaluate(
-            &sub_dag, &sub_durs, &stage_arrivals, batch, overlap, policy,
+        let sched = traffic::evaluate_with_slo(
+            &sub_dag,
+            &sub_durs,
+            &stage_arrivals,
+            batch,
+            overlap,
+            slo,
+            policy,
         );
         lanes[s] = LaneStats {
             busy: sched.busy,
@@ -289,6 +384,35 @@ pub fn tensor_shard(
     arrays: usize,
     policy: &SchedPolicy,
 ) -> ClusterSchedule {
+    tensor_shard_slo(
+        dag,
+        durations,
+        tiles,
+        out_bytes,
+        arrivals,
+        batch,
+        overlap,
+        arrays,
+        f64::INFINITY,
+        policy,
+    )
+}
+
+/// [`tensor_shard`] with an SLO admission budget over the lockstep
+/// logical pipeline (`slo = ∞` is the fixed-batching identity).
+#[allow(clippy::too_many_arguments)]
+pub fn tensor_shard_slo(
+    dag: &LayerDag,
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
     let arrays = arrays.max(1);
     let n = arrays as f64;
     let mut mandatory_transfer = 0.0f64;
@@ -313,7 +437,7 @@ pub fn tensor_shard(
             d * share + gather
         })
         .collect();
-    let s = fastpath::evaluate(dag, &d_sched, arrivals, batch, overlap, policy);
+    let s = traffic::evaluate_with_slo(dag, &d_sched, arrivals, batch, overlap, slo, policy);
     // all arrays run in lockstep: every lane carries the same activity
     let lanes = vec![
         LaneStats {
@@ -496,6 +620,86 @@ mod tests {
         assert!(c.lanes.iter().filter(|l| l.jobs > 0).count() <= 4);
         assert!(c.lanes[8].busy == 0.0);
         assert!(c.makespan >= c.lower_bound - 1e-12);
+    }
+
+    #[test]
+    fn infinite_slo_is_build_cluster_bit_exact() {
+        let (dag, d, tiles, bytes) = chain4();
+        let arrivals = vec![0.0, 0.1, 0.15, 0.4, 0.42, 0.9];
+        for strategy in ShardStrategy::ALL {
+            for arrays in [1usize, 2, 3] {
+                let legacy = build_cluster(
+                    strategy,
+                    &dag,
+                    &d,
+                    &tiles,
+                    &bytes,
+                    &arrivals,
+                    2,
+                    0.5,
+                    arrays,
+                    &SchedPolicy::default(),
+                );
+                let routed = build_cluster_slo(
+                    strategy,
+                    &dag,
+                    &d,
+                    &tiles,
+                    &bytes,
+                    &arrivals,
+                    2,
+                    0.5,
+                    arrays,
+                    f64::INFINITY,
+                    &SchedPolicy::default(),
+                );
+                assert_eq!(legacy, routed, "{strategy:?} x{arrays}");
+            }
+        }
+    }
+
+    #[test]
+    fn tight_slo_admits_early_and_respects_the_floor() {
+        let (dag, d, tiles, bytes) = chain4();
+        // batch 4 would hold request 0 until t = 0.9 under fixed
+        // batching; a 0.35 s budget forces the window shut first
+        let arrivals = vec![0.0, 0.3, 0.6, 0.9];
+        for strategy in ShardStrategy::ALL {
+            let relaxed = build_cluster_slo(
+                strategy,
+                &dag,
+                &d,
+                &tiles,
+                &bytes,
+                &arrivals,
+                4,
+                0.5,
+                1,
+                f64::INFINITY,
+                &SchedPolicy::default(),
+            );
+            let tight = build_cluster_slo(
+                strategy,
+                &dag,
+                &d,
+                &tiles,
+                &bytes,
+                &arrivals,
+                4,
+                0.5,
+                1,
+                0.35,
+                &SchedPolicy::default(),
+            );
+            assert!(
+                tight.finish_times[0] < relaxed.finish_times[0],
+                "{strategy:?}: early window close must cut request 0's wait \
+                 ({} vs {})",
+                tight.finish_times[0],
+                relaxed.finish_times[0]
+            );
+            assert!(tight.makespan >= tight.lower_bound - 1e-12);
+        }
     }
 
     #[test]

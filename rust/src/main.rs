@@ -20,19 +20,24 @@ s2engine simulate --model vgg16 [--rows 16 --cols 16 --fifo 4,4,4
                   --no-memo --json out.json]
 s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
                   --rate IMGS_PER_S --subset avg|max|min --out serve.json
+                  --arrival uniform|poisson:R|mmpp:R[:B[:S]]|diurnal:R|trace:F
+                  --slo-ms MS  # SLO-aware dynamic batching budget
                   --backend s2|naive|gate|skipf|skipw|scnn|sparten
                   --no-fastpath|--no-window-memo|--no-steady
                   plus the simulate array/effort options]
 s2engine cluster <model> [--arrays 4 --shard data|pipeline|tensor
+                  --autoscale  # closed-loop sizing, 1..--arrays (needs --slo-ms)
                   plus every serve option incl. --backend]  # N arrays
-s2engine report  table1|...|table5|fig3|fits|serving|cluster|backends
+s2engine report  table1|...|table5|fig3|fits|serving|cluster|backends|pareto
                   [--effort ...] [--backend TAG]  # serving/cluster only
                   [--requests N]  # serving/cluster/backends: request count
-s2engine sweep   fig10|...|fig17|serving|cluster|backends
+                  [--backend s2,naive,scnn,sparten]  # pareto: the roster
+s2engine sweep   fig10|...|fig17|serving|cluster|backends|pareto
                   [--effort quick|default|full] [--scales 16,32] [--seed N]
                   [--out DIR --resume] [--backend TAG]  # serving/cluster
                   [--requests N]  # serving/cluster/backends
-s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;backend=all'
+s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;backend=all;
+                  arrival=poisson:800;slo=20,inf'  # traffic axes sweepable
                   [--grid grid.json] [--out DIR --resume] [--workers N]
                   [--backend s2,scnn,...]  # shorthand for the grid axis
 s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
@@ -70,6 +75,22 @@ fn backend_arg(args: &Args) -> Result<BackendKind> {
     })
 }
 
+/// A comma-separated `--backend s2,scnn,...` roster (grid sweeps and
+/// the pareto study).
+fn backend_list_arg(tags: &str) -> Result<Vec<BackendKind>> {
+    let kinds: Vec<BackendKind> = tags
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            BackendKind::from_tag(t)
+                .ok_or_else(|| anyhow!("unknown backend `{t}` in --backend"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!kinds.is_empty(), "--backend names no backends");
+    Ok(kinds)
+}
+
 /// Warn when a fixed-1024-multiplier analytic comparator runs on an
 /// off-parity array (serve and cluster share this note).
 fn parity_note(kind: BackendKind, cfg: &SimConfig) {
@@ -95,13 +116,19 @@ fn model_arg(args: &Args) -> Result<s2engine::models::Model> {
     zoo::by_name(name).ok_or_else(|| anyhow!("unknown model `{name}`"))
 }
 
-/// The shared serving knobs (`--batch --overlap --requests --rate`),
-/// validated once for every subcommand that serves requests. The
-/// default request count is `requests_per_batch × batch` (serve uses 4
-/// windows; cluster scales that by the array count). The scheduler
-/// fast path (window memoization + steady-state extrapolation) is on
-/// by default; `--no-fastpath` forces the exact materializing engine,
-/// `--no-window-memo` / `--no-steady` disable individual layers.
+/// The shared serving knobs (`--batch --overlap --requests --rate
+/// --arrival --slo-ms`), validated once for every subcommand that
+/// serves requests. The default request count is `requests_per_batch ×
+/// batch` (serve uses 4 windows; cluster scales that by the array
+/// count). `--arrival` picks the stochastic arrival process
+/// ([`s2engine::serve::ArrivalProcess`]; the default keeps the
+/// historical uniform-jitter open loop) and `--slo-ms` arms SLO-aware
+/// dynamic batching (windows close early rather than blow the oldest
+/// queued request's budget; unset = classic fixed batching). The
+/// scheduler fast path (window memoization + steady-state
+/// extrapolation) is on by default; `--no-fastpath` forces the exact
+/// materializing engine, `--no-window-memo` / `--no-steady` disable
+/// individual layers.
 fn serve_config_arg(
     args: &Args,
     seed: u64,
@@ -121,11 +148,28 @@ fn serve_config_arg(
             .with_memoize(!args.has_flag("no-window-memo"))
             .with_steady(!args.has_flag("no-steady"))
     };
-    Ok(s2engine::serve::ServeConfig::new(batch, overlap)
+    let mut serve = s2engine::serve::ServeConfig::new(batch, overlap)
         .with_requests(args.get_usize("requests", requests_per_batch * batch).max(1))
         .with_rate(args.get_f64("rate", 0.0))
         .with_seed(seed)
-        .with_policy(policy))
+        .with_policy(policy);
+    if let Some(spec) = args.get("arrival") {
+        // the stochastic processes carry their own rate (`poisson:800`);
+        // `--rate` remains the Uniform baseline's open-loop knob
+        serve = serve.with_arrival(
+            s2engine::serve::ArrivalProcess::from_spec(spec)
+                .map_err(|e| anyhow!("bad --arrival: {e}"))?,
+        );
+    }
+    let slo_ms = args.get_f64("slo-ms", 0.0);
+    anyhow::ensure!(
+        slo_ms >= 0.0 && slo_ms.is_finite(),
+        "--slo-ms must be a positive number of milliseconds, got {slo_ms}"
+    );
+    if slo_ms > 0.0 {
+        serve = serve.with_slo(slo_ms * 1e-3);
+    }
+    Ok(serve)
 }
 
 fn sim_config(args: &Args) -> SimConfig {
@@ -231,12 +275,17 @@ fn serve_cmd(args: &Args) -> Result<()> {
         serve.requests,
         serve.batch,
         serve.overlap,
-        if serve.rate > 0.0 {
+        if !matches!(serve.arrival, s2engine::serve::ArrivalProcess::Uniform) {
+            format!("{} arrivals", serve.arrival.spec())
+        } else if serve.rate > 0.0 {
             format!("open-loop {:.1} img/s", serve.rate)
         } else {
             "closed-loop (all queued at t=0)".into()
         }
     );
+    if serve.slo.is_finite() {
+        println!("dynamic batching: {:.3} ms queueing budget", serve.slo * 1e3);
+    }
     parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();
     let r = Coordinator::new(cfg)
@@ -305,8 +354,54 @@ fn cluster_cmd(args: &Args) -> Result<()> {
     );
     parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();
-    let r = Coordinator::new(cfg)
-        .simulate_model_cluster_with(backend.as_ref(), &model, subset, &serve, &cluster);
+    // `--autoscale`: instead of serving on a fixed fleet, run the
+    // closed-loop controller — observe each epoch's p99, grow while the
+    // SLO is violated, shrink only with headroom — between 1 array and
+    // the `--arrays` ceiling, then report the converged cluster
+    let r = if args.has_flag("autoscale") {
+        anyhow::ensure!(
+            serve.slo.is_finite(),
+            "--autoscale needs a latency target: pass --slo-ms MS"
+        );
+        let layers =
+            s2engine::backend::layer_results_subset(backend.as_ref(), &model, subset, cfg.seed);
+        let acfg = s2engine::serve::AutoscaleConfig::new(serve.slo, arrays);
+        let (trace, report) = s2engine::cluster::autoscale_backend(
+            &model.name,
+            backend.tag(),
+            shard,
+            serve,
+            &layers,
+            &acfg,
+            1,
+        );
+        println!("{:<7} {:>7} {:>12} {:>8}", "epoch", "arrays", "p99 (ms)", "action");
+        for s in &trace.steps {
+            use s2engine::serve::AutoscaleAction;
+            let action = match s.action {
+                AutoscaleAction::Grow => "grow",
+                AutoscaleAction::Shrink => "shrink",
+                AutoscaleAction::Hold => "hold",
+            };
+            println!(
+                "{:<7} {:>7} {:>12.4} {:>8}",
+                s.epoch,
+                s.arrays,
+                s.p99 * 1e3,
+                action
+            );
+        }
+        println!(
+            "autoscale: {} at {} arrays (slo {:.3} ms)",
+            if trace.converged { "converged" } else { "epoch budget exhausted" },
+            trace.final_arrays,
+            serve.slo * 1e3
+        );
+        report
+    } else {
+        Coordinator::new(cfg)
+            .simulate_model_cluster_with(backend.as_ref(), &model, subset, &serve, &cluster)
+    };
     println!("{:<8} {:>10} {:>12}", "array", "occupancy", "executions");
     for (i, (occ, lane)) in r
         .per_array_occupancy()
@@ -336,7 +431,6 @@ fn cluster_cmd(args: &Args) -> Result<()> {
 fn report_cmd(args: &Args) -> Result<()> {
     let effort = Effort::from_name(args.get("effort").unwrap_or("default"));
     let seed = args.get_u64("seed", 0x5eed_5eed);
-    let backend = backend_arg(args)?;
     let requests = args.get_usize("requests", 0);
     let which = args
         .positional
@@ -344,9 +438,26 @@ fn report_cmd(args: &Args) -> Result<()> {
         .ok_or_else(|| {
             anyhow!(
                 "report needs a target (table1|table2|table3|table4|table5\
-                 |fig3|fits|serving|cluster|backends)"
+                 |fig3|fits|serving|cluster|backends|pareto)"
             )
         })?;
+    // the pareto study compares a backend *roster*, so its `--backend`
+    // is a comma list (`s2,naive,scnn,sparten`) naming the comparators
+    // — handled before the single-tag parse below can reject it
+    if which == "pareto" {
+        anyhow::ensure!(
+            requests == 0,
+            "--requests applies only to the `serving`, `cluster` and `backends` \
+             report targets (pareto fixes its own protocol)"
+        );
+        let roster = match args.get("backend") {
+            None => report::pareto::PARETO_BACKENDS.to_vec(),
+            Some(tags) => backend_list_arg(tags)?,
+        };
+        println!("{}", report::pareto(effort, seed, &roster));
+        return Ok(());
+    }
+    let backend = backend_arg(args)?;
     // `--backend` re-bases the serving/cluster summaries; the paper
     // tables and the head-to-head (which sweeps every backend itself)
     // do not take one
@@ -416,14 +527,15 @@ fn sweep(args: &Args) -> Result<()> {
         .ok_or_else(|| {
             anyhow!(
                 "sweep needs a target (fig10..fig17, serving, cluster, \
-                 backends, or --grid <spec>)"
+                 backends, pareto, or --grid <spec>)"
             )
         })?;
     // validate the target BEFORE opening the store: a typo'd target must
     // not truncate an existing results file
     anyhow::ensure!(
         report::is_figure(which),
-        "unknown sweep target `{which}` (fig10..fig17, serving, cluster, backends)"
+        "unknown sweep target `{which}` (fig10..fig17, serving, cluster, \
+         backends, pareto)"
     );
     // the figN targets are S²Engine paper reproductions; `--backend`
     // re-bases only the serving/cluster summaries (the backends
@@ -462,17 +574,7 @@ fn grid_sweep(args: &Args) -> Result<()> {
     // `--backend s2,scnn` is shorthand for (and overrides) the grid's
     // `backend=` axis
     if let Some(tags) = args.get("backend") {
-        let kinds: Vec<BackendKind> = tags
-            .split(',')
-            .map(str::trim)
-            .filter(|t| !t.is_empty())
-            .map(|t| {
-                BackendKind::from_tag(t)
-                    .ok_or_else(|| anyhow!("unknown backend `{t}` in --backend"))
-            })
-            .collect::<Result<_>>()?;
-        anyhow::ensure!(!kinds.is_empty(), "--backend names no backends");
-        grid = grid.backends(&kinds);
+        grid = grid.backends(&backend_list_arg(tags)?);
     }
     // a 1024-multiplier analytic comparator compared at a non-1024-PE
     // scale is not a PE-count-parity head-to-head (cf. report backends)

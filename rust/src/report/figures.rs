@@ -413,8 +413,9 @@ fn scale_depth_grid(effort: Effort, seed: u64, scales: &[usize], depths: &[usize
 }
 
 /// Is `which` a sweep target [`figure`] can render — a paper figure or
-/// the `serving` / `cluster` / `backends` summaries? (The CLI checks
-/// this before opening — and possibly truncating — a `--out` store.)
+/// the `serving` / `cluster` / `backends` / `pareto` summaries? (The
+/// CLI checks this before opening — and possibly truncating — a
+/// `--out` store.)
 pub fn is_figure(which: &str) -> bool {
     matches!(
         which,
@@ -429,6 +430,7 @@ pub fn is_figure(which: &str) -> bool {
             | "serving"
             | "cluster"
             | "backends"
+            | "pareto"
     )
 }
 
@@ -436,13 +438,16 @@ pub fn is_figure(which: &str) -> bool {
 /// Returns `None` for an unknown figure name. `backend` re-bases the
 /// `serving`/`cluster` summaries on another accelerator model
 /// ([`crate::backend`]); the figN targets are S²Engine paper
-/// reproductions and the `backends` head-to-head sweeps every backend
-/// itself, so for those a non-default backend also returns `None`
-/// (never silently mislabeled S²-only output) — the CLI rejects the
-/// combination up front with a specific message. `requests` overrides
-/// the serving protocol's request count for the `serving`/`cluster`/
-/// `backends` targets (`0` = the default batch-window protocol); the
-/// figN targets don't serve requests, so a non-zero count likewise
+/// reproductions and the `backends`/`pareto` studies sweep every
+/// backend themselves (here `pareto` uses its default roster; the CLI
+/// routes an explicit `--backend` comma-list straight to
+/// [`super::pareto::pareto_in`]), so for those a non-default backend
+/// also returns `None` (never silently mislabeled S²-only output) —
+/// the CLI rejects the combination up front with a specific message.
+/// `requests` overrides the serving protocol's request count for the
+/// `serving`/`cluster`/`backends` targets (`0` = the default
+/// batch-window protocol); the figN targets don't serve requests and
+/// `pareto` fixes its own protocol, so a non-zero count likewise
 /// returns `None`.
 pub fn figure(
     which: &str,
@@ -471,6 +476,9 @@ pub fn figure(
         "serving" => super::serving::serving_in(effort, seed, backend, requests, store),
         "cluster" => super::cluster::cluster_in(effort, seed, backend, requests, store),
         "backends" => super::backends::backends_in(effort, seed, requests, store),
+        "pareto" => {
+            super::pareto::pareto_in(effort, seed, &super::pareto::PARETO_BACKENDS, store)
+        }
         _ => return None,
     })
 }
@@ -523,6 +531,17 @@ mod tests {
         // likewise a request-count override: figN targets don't serve
         assert!(
             figure("fig15", Effort::QUICK, 1, &[16], s2, 64, &mut Store::in_memory())
+                .is_none()
+        );
+        // pareto is sweepable but fixes its own roster and protocol:
+        // backend/request overrides refuse before touching the store
+        assert!(is_figure("pareto"));
+        assert!(
+            figure("pareto", Effort::QUICK, 1, &[16], scnn, 0, &mut Store::in_memory())
+                .is_none()
+        );
+        assert!(
+            figure("pareto", Effort::QUICK, 1, &[16], s2, 64, &mut Store::in_memory())
                 .is_none()
         );
     }

@@ -17,12 +17,14 @@
 pub mod backends;
 pub mod cluster;
 pub mod figures;
+pub mod pareto;
 pub mod serving;
 pub mod tables;
 
 pub use backends::{backends, backends_in};
 pub use cluster::{cluster, cluster_in};
 pub use figures::*;
+pub use pareto::{min_arrays_at_slo, pareto, pareto_in};
 pub use serving::{serving, serving_in};
 pub use tables::*;
 

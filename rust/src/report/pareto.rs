@@ -1,0 +1,311 @@
+//! Tail-latency vs provisioned-cost Pareto frontier — the capacity
+//! planning question the traffic engine exists to answer: *how many
+//! arrays of which design meet a p99 SLO, and what does that
+//! provisioning cost?*
+//!
+//! One [`Grid`] declaration over the `backend` × `arrays` axes for
+//! AlexNet at a loaded stochastic serving point (Poisson arrivals at
+//! 2 k req/s, 20 ms SLO-aware batching windows, batch 4, overlap 0.6,
+//! data-parallel replication, 1024-mul parity at 32×32): every
+//! comparator serves the *same* arrival timeline through the *same*
+//! SLO-windowed cluster scheduler, so the frontier compares deployable
+//! capacity, not per-layer analytic walls.
+//!
+//! Cost is `arrays × cluster makespan` (array-seconds of provisioned
+//! hardware to drain the workload) plus the inter-array link energy of
+//! whatever sharding the point used — data-parallel replication moves
+//! no feature traffic, so the energy column doubles as a sanity check.
+//! The SLO target is the *naive* backend's best achievable p99 across
+//! the fleet sizes, which makes every backend's "min arrays at SLO"
+//! finite by construction and lets the table answer the headline
+//! question directly: the sparse designs hit naive's best tail with a
+//! fraction of naive's provisioned cost.
+
+use super::{Effort, TextTable};
+use crate::backend::BackendKind;
+use crate::cluster::shard::link_pj;
+use crate::config::ArrayConfig;
+use crate::models::FeatureSubset;
+use crate::serve::ArrivalProcess;
+use crate::sweep::{Grid, Job, Runner, Store};
+
+/// The compared backends, in reporting order — the roster the frontier
+/// table and `benches/traffic_engine.rs` (via [`min_arrays_at_slo`])
+/// share. The gating baseline is omitted: it shares naive's dense
+/// schedule walls, so its frontier points duplicate naive's.
+pub const PARETO_BACKENDS: [BackendKind; 4] = [
+    BackendKind::Naive,
+    BackendKind::Scnn,
+    BackendKind::SparTen,
+    BackendKind::S2,
+];
+/// Fleet sizes swept per backend.
+const ARRAYS: [usize; 4] = [1, 2, 4, 8];
+/// The fixed serving point (matches the backends head-to-head).
+const BATCH: usize = 4;
+const OVERLAP: f64 = 0.6;
+/// PE-count parity with the 1024-multiplier analytic comparators.
+const SCALE: usize = 32;
+/// The studied CNN — AlexNet, the paper's primary workload.
+const MODEL: &str = "alexnet";
+/// Offered load: Poisson arrivals at 2 k requests/s.
+const RATE: f64 = 2000.0;
+/// Per-request queueing budget for the dynamic batcher (seconds).
+const SLO: f64 = 0.02;
+/// Closed-loop requests per point — enough windows for the p99 to be a
+/// real order statistic at every fleet size.
+const REQUESTS: usize = 64;
+
+/// One (backend, fleet size) point of the study.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Point {
+    backend: BackendKind,
+    arrays: usize,
+    /// Cluster p99 latency (seconds).
+    p99: f64,
+    /// Provisioned cost: arrays × cluster makespan (array-seconds).
+    cost: f64,
+    /// Inter-array link energy (pJ).
+    link_pj: f64,
+    /// No same-backend point has both lower-or-equal p99 and cost.
+    on_frontier: bool,
+    /// Meets the study's SLO target (naive's best p99).
+    meets_slo: bool,
+}
+
+/// Sweep the grid and score every point. Returns the SLO target and
+/// the points in roster × fleet order.
+fn survey(
+    effort: Effort,
+    seed: u64,
+    backends: &[BackendKind],
+    store: &mut Store,
+) -> (f64, Vec<Point>) {
+    let grid = Grid::new(effort, seed)
+        .models(&[MODEL])
+        .scales(&[(SCALE, SCALE)])
+        .batches(&[BATCH])
+        .overlaps(&[OVERLAP])
+        .arrays(&ARRAYS)
+        .backends(backends)
+        .requests(&[REQUESTS])
+        .arrivals(&[ArrivalProcess::Poisson { rate: RATE }])
+        .slos(&[SLO]);
+    let res = Runner::new().run(&grid.plan(), store);
+    let array = ArrayConfig::new(SCALE, SCALE);
+    let job = |b: BackendKind, n: usize| {
+        Job::subset(MODEL, FeatureSubset::Average, array, true, seed, effort)
+            .with_batch(BATCH)
+            .with_overlap(OVERLAP)
+            .with_arrays(n)
+            .with_backend(b)
+            .with_requests(REQUESTS)
+            .with_arrival(ArrivalProcess::Poisson { rate: RATE })
+            .with_slo(SLO)
+    };
+    let best_p99 = |b: BackendKind| {
+        ARRAYS
+            .iter()
+            .map(|&n| res.get(&job(b, n)).cluster_p99_latency)
+            .fold(f64::INFINITY, f64::min)
+    };
+    // the target every design must hit: the dense baseline's best tail.
+    // Without naive in the roster, fall back to the worst per-backend
+    // best — either way every swept backend meets it somewhere.
+    let target = if backends.contains(&BackendKind::Naive) {
+        best_p99(BackendKind::Naive)
+    } else {
+        backends.iter().map(|&b| best_p99(b)).fold(0.0, f64::max)
+    };
+    let mut points = Vec::new();
+    for &b in backends {
+        let raw: Vec<(usize, f64, f64, f64)> = ARRAYS
+            .iter()
+            .map(|&n| {
+                let rec = res.get(&job(b, n));
+                (
+                    n,
+                    rec.cluster_p99_latency,
+                    n as f64 * rec.cluster_makespan,
+                    link_pj(rec.link_bytes),
+                )
+            })
+            .collect();
+        for &(n, p99, cost, link) in &raw {
+            let dominated = raw.iter().any(|&(m, q, c, _)| {
+                m != n && q <= p99 && c <= cost && (q < p99 || c < cost)
+            });
+            points.push(Point {
+                backend: b,
+                arrays: n,
+                p99,
+                cost,
+                link_pj: link,
+                on_frontier: !dominated,
+                meets_slo: p99 <= target,
+            });
+        }
+    }
+    (target, points)
+}
+
+/// Pareto frontier study with a throwaway in-memory store.
+pub fn pareto(effort: Effort, seed: u64, backends: &[BackendKind]) -> String {
+    pareto_in(effort, seed, backends, &mut Store::in_memory())
+}
+
+/// [`pareto`] against an explicit (possibly resumable) store.
+pub fn pareto_in(
+    effort: Effort,
+    seed: u64,
+    backends: &[BackendKind],
+    store: &mut Store,
+) -> String {
+    let (target, points) = survey(effort, seed, backends, store);
+    let mut t = TextTable::new(
+        format!(
+            "Pareto — tail latency vs provisioned cost (alexnet, 32x32 / \
+             1024 muls, poisson {RATE:.0} req/s, slo {:.0} ms, batch {BATCH}, \
+             overlap {OVERLAP}, data-parallel, {REQUESTS} requests)",
+            SLO * 1e3
+        ),
+        &[
+            "backend", "arrays", "p99 (ms)", "cost (array*ms)", "link (pJ)",
+            "frontier", "meets slo",
+        ],
+    );
+    for p in &points {
+        t.row(vec![
+            p.backend.tag().to_string(),
+            format!("{}", p.arrays),
+            format!("{:.3}", p.p99 * 1e3),
+            format!("{:.3}", p.cost * 1e3),
+            format!("{:.1}", p.link_pj),
+            if p.on_frontier { "*".to_string() } else { String::new() },
+            if p.meets_slo { "yes".to_string() } else { String::new() },
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\nSLO target: {:.3} ms p99 (the dense baseline's best achievable \
+         tail across fleet sizes). Min arrays to meet it:\n",
+        target * 1e3
+    ));
+    for &b in backends {
+        let min = points
+            .iter()
+            .filter(|p| p.backend == b && p.meets_slo)
+            .map(|p| p.arrays)
+            .min();
+        match min {
+            Some(n) => out.push_str(&format!("  {:>8}  {n} arrays\n", b.tag())),
+            None => out.push_str(&format!("  {:>8}  not met\n", b.tag())),
+        }
+    }
+    out.push_str(
+        "Reading: `*` marks each backend's own (p99, cost) frontier; cost is \
+         arrays x cluster makespan — the array-seconds provisioned to drain \
+         the Poisson workload under SLO-aware batching. The sparse designs \
+         reach the dense baseline's best tail latency with a fraction of its \
+         provisioned cost; data-parallel replication moves no inter-array \
+         feature traffic, so link energy stays zero on this frontier.\n",
+    );
+    out
+}
+
+/// Smallest data-parallel fleet at which S²Engine meets the study's
+/// SLO target — the headline scalar `benches/traffic_engine.rs`
+/// publishes (`pareto/min-arrays-at-slo`). Panics if no swept fleet
+/// size meets it, which the target's construction rules out.
+pub fn min_arrays_at_slo(effort: Effort, seed: u64) -> usize {
+    let (_, points) = survey(effort, seed, &PARETO_BACKENDS, &mut Store::in_memory());
+    points
+        .iter()
+        .filter(|p| p.backend == BackendKind::S2 && p.meets_slo)
+        .map(|p| p.arrays)
+        .min()
+        .expect("S2 meets the naive-derived SLO target at some fleet size")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Effort {
+        Effort {
+            tile_samples: 1,
+            layer_stride: 8,
+            images: 0,
+        }
+    }
+
+    #[test]
+    fn frontier_dominates_naive_at_every_fleet_size() {
+        let (target, points) =
+            survey(tiny(), 0xc0de_cafe_0080, &PARETO_BACKENDS, &mut Store::in_memory());
+        assert!(target.is_finite() && target > 0.0);
+        assert_eq!(points.len(), PARETO_BACKENDS.len() * ARRAYS.len());
+        let at = |b: BackendKind, n: usize| {
+            *points
+                .iter()
+                .find(|p| p.backend == b && p.arrays == n)
+                .unwrap()
+        };
+        for &n in &ARRAYS {
+            let naive = at(BackendKind::Naive, n);
+            assert!(naive.p99 > 0.0 && naive.cost > 0.0);
+            // at every fleet size some sparse design strictly dominates
+            // the dense baseline on both axes
+            let dominated = PARETO_BACKENDS.iter().any(|&b| {
+                b != BackendKind::Naive && {
+                    let p = at(b, n);
+                    p.p99 < naive.p99 && p.cost < naive.cost
+                }
+            });
+            assert!(dominated, "naive undominated at {n} arrays");
+            // data-parallel replication moves no feature bytes
+            for &b in &PARETO_BACKENDS {
+                assert_eq!(at(b, n).link_pj, 0.0);
+            }
+        }
+        // every backend meets the naive-derived target somewhere, and
+        // every backend has at least one frontier point
+        for &b in &PARETO_BACKENDS {
+            assert!(points.iter().any(|p| p.backend == b && p.meets_slo));
+            assert!(points.iter().any(|p| p.backend == b && p.on_frontier));
+        }
+        // S2 needs no more provisioned arrays than the dense baseline
+        let min = |b: BackendKind| {
+            points
+                .iter()
+                .filter(|p| p.backend == b && p.meets_slo)
+                .map(|p| p.arrays)
+                .min()
+                .unwrap()
+        };
+        assert!(min(BackendKind::S2) <= min(BackendKind::Naive));
+    }
+
+    #[test]
+    fn pareto_renders_and_is_store_resumable() {
+        let effort = tiny();
+        let seed = 0xc0de_cafe_0081;
+        let mut store = Store::in_memory();
+        let first = pareto_in(effort, seed, &PARETO_BACKENDS, &mut store);
+        assert_eq!(store.len(), PARETO_BACKENDS.len() * ARRAYS.len());
+        for b in PARETO_BACKENDS {
+            assert!(first.contains(b.tag()), "missing {} in:\n{first}", b.tag());
+        }
+        assert!(first.contains('*'), "no frontier points marked:\n{first}");
+        assert!(first.contains("SLO target"), "no target line:\n{first}");
+        // a warm store reuses every point and renders byte-identically
+        let second = pareto_in(effort, seed, &PARETO_BACKENDS, &mut store);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn min_arrays_at_slo_lies_in_the_swept_fleet() {
+        let n = min_arrays_at_slo(tiny(), 0xc0de_cafe_0082);
+        assert!(ARRAYS.contains(&n), "min arrays {n} not a swept size");
+    }
+}

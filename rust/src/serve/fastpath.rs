@@ -724,6 +724,184 @@ pub fn evaluate(
     }
 }
 
+/// [`evaluate`] over an explicit admission partition: `windows` is the
+/// contiguous ascending `[lo, hi)` cover of `0..arrivals.len()` an
+/// SLO-aware admission policy produced ([`crate::serve::traffic::windows`]).
+/// Same three layers and the same bit-exactness contract — against
+/// [`PipelineSchedule::build_windows`] this time. The steady-state layer
+/// generalizes from "remaining full windows" to *runs* of consecutive
+/// equal-width windows (a saturated backlog under SLO admission closes
+/// every window at full width, so exactly such runs dominate), and
+/// templates are cached per width so variable-width partitions stay
+/// cheap even with memoization off.
+pub fn evaluate_windows(
+    dag: &LayerDag,
+    durations: &[f64],
+    arrivals: &[f64],
+    windows: &[(usize, usize)],
+    overlap: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    let exact = || {
+        ScheduleSummary::from_schedule(&PipelineSchedule::build_windows(
+            dag, durations, arrivals, windows, overlap,
+        ))
+    };
+    if !policy.fastpath {
+        return exact();
+    }
+    assert_eq!(durations.len(), dag.len(), "one duration per DAG node");
+    debug_assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "arrivals must be sorted"
+    );
+    let overlap = overlap.clamp(0.0, MAX_OVERLAP);
+    let n_img = arrivals.len();
+    let n_nodes = dag.len();
+    if n_img == 0 {
+        return ScheduleSummary {
+            finish_times: Vec::new(),
+            makespan: 0.0,
+            busy: 0.0,
+            n_jobs: 0,
+            steady_windows: 0,
+        };
+    }
+    // template scratch indices are u32 over one window; a window too
+    // wide to index falls back to the exact engine rather than truncate
+    let w_max = windows.iter().map(|w| w.1 - w.0).max().unwrap_or(0);
+    if !w_max
+        .checked_mul(n_nodes)
+        .is_some_and(|x| x <= u32::MAX as usize)
+    {
+        return exact();
+    }
+
+    let n_w = windows.len();
+    let d_last = dag
+        .topo_order()
+        .last()
+        .map_or(0.0, |&n| durations[n]);
+    // run_end[w]: one past the last window of the maximal run of
+    // consecutive equal-width windows starting at w
+    let mut run_end = vec![0usize; n_w];
+    for w in (0..n_w).rev() {
+        let wd = windows[w].1 - windows[w].0;
+        run_end[w] = if w + 1 < n_w && windows[w + 1].1 - windows[w + 1].0 == wd {
+            run_end[w + 1]
+        } else {
+            w + 1
+        };
+    }
+
+    // per-width template cache, local to this call: entry state is
+    // (0, false) for window 0 and (d_last, true) everywhere else, so one
+    // slot per width covers every mid window
+    let mut tpl_first: Option<Arc<WaveTemplate>> = None;
+    let mut tpl_mid: Vec<Option<Arc<WaveTemplate>>> = vec![None; w_max + 1];
+
+    let mut finish_times = vec![0.0f64; n_img];
+    let mut wfin = vec![0.0f64; w_max * n_nodes];
+    let mut st = ArrayState {
+        array_free: 0.0,
+        any_prev: false,
+        busy: 0.0,
+        makespan: 0.0,
+    };
+    let mut steady_windows = 0usize;
+    // (run end, max arrival over that run) — memoized so the saturation
+    // check stays O(1) per window of the same run
+    let mut run_t0_max: Option<(usize, f64)> = None;
+
+    let mut w = 0usize;
+    while w < n_w {
+        let (lo, hi) = windows[w];
+        let width = hi - lo;
+
+        // --- layer 3: steady-state extrapolation of a saturated run of
+        //     equal-width windows ---
+        if policy.steady && w >= 1 && run_end[w] - w >= STEADY_MIN_WINDOWS {
+            if tpl_mid[width].is_none() {
+                tpl_mid[width] = Some(resolve(
+                    dag,
+                    durations,
+                    overlap,
+                    width,
+                    d_last,
+                    true,
+                    policy.memoize,
+                ));
+            }
+            let tpl = tpl_mid[width].as_ref().unwrap();
+            if let Some(info) = tpl.steady.as_ref() {
+                let end = run_end[w];
+                let t0m = match run_t0_max {
+                    Some((e, v)) if e == end => v,
+                    _ => {
+                        let v = arrivals[lo..windows[end - 1].1]
+                            .iter()
+                            .fold(0.0f64, |m, &a| m.max(a));
+                        run_t0_max = Some((end, v));
+                        v
+                    }
+                };
+                if st.array_free - t0m >= info.theta {
+                    let k = end - w;
+                    for j in 0..k {
+                        let f_in = st.array_free + (j as f64) * info.delta;
+                        let base = windows[w + j].0;
+                        for s in 0..width {
+                            finish_times[base + s] = f_in + info.off[s];
+                        }
+                    }
+                    let kf = k as f64;
+                    st.busy += kf * info.busy_delta;
+                    st.array_free += kf * info.delta;
+                    st.makespan = st.makespan.max(st.array_free);
+                    steady_windows += k;
+                    w = end;
+                    continue;
+                }
+            }
+        }
+
+        // the server waits until the window's last request arrives
+        // (identical fold to the engine: 0-seeded max over the slice)
+        let mut t0 = 0.0f64;
+        for &a in &arrivals[lo..hi] {
+            t0 = t0.max(a);
+        }
+        let tpl: &WaveTemplate = if w == 0 {
+            tpl_first.get_or_insert_with(|| {
+                resolve(dag, durations, overlap, width, 0.0, false, policy.memoize)
+            })
+        } else {
+            if tpl_mid[width].is_none() {
+                tpl_mid[width] = Some(resolve(
+                    dag,
+                    durations,
+                    overlap,
+                    width,
+                    d_last,
+                    true,
+                    policy.memoize,
+                ));
+            }
+            tpl_mid[width].as_ref().unwrap()
+        };
+        replay(tpl, t0, &mut st, &mut wfin, &mut finish_times[lo..hi]);
+        w += 1;
+    }
+
+    ScheduleSummary {
+        finish_times,
+        makespan: st.makespan,
+        busy: st.busy,
+        n_jobs: n_img * n_nodes,
+        steady_windows,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -966,5 +1144,114 @@ mod tests {
         let (h1, _) = g.counters();
         assert!(summary_bits_equal(&a, &b));
         assert!(h1 > h0, "second evaluate must hit the template cache");
+    }
+
+    /// Random contiguous partition of `0..n` with pieces up to `max_w`.
+    fn random_windows(rng: &mut Rng, n: usize, max_w: usize) -> Vec<(usize, usize)> {
+        let mut windows = Vec::new();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + 1 + rng.gen_below(max_w as u64) as usize).min(n);
+            windows.push((lo, hi));
+            lo = hi;
+        }
+        windows
+    }
+
+    #[test]
+    fn evaluate_windows_matches_exact_engine_bitwise() {
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0070);
+        for case in 0..60u64 {
+            let n_nodes = 1 + rng.gen_below(6) as usize;
+            let dag = random_dag(&mut rng, n_nodes);
+            let durations: Vec<f64> =
+                (0..n_nodes).map(|_| 0.01 + rng.gen_f64()).collect();
+            let n_img = 1 + rng.gen_below(40) as usize;
+            let mut t = 0.0f64;
+            let arrivals: Vec<f64> = (0..n_img)
+                .map(|_| {
+                    t += rng.gen_f64() * 0.3;
+                    t
+                })
+                .collect();
+            let windows = random_windows(&mut rng, n_img, 6);
+            let overlap = rng.gen_f64();
+            let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows(
+                &dag, &durations, &arrivals, &windows, overlap,
+            ));
+            for policy in [
+                SchedPolicy::default(),
+                SchedPolicy::default().with_memoize(false),
+                SchedPolicy::default().with_steady(false),
+            ] {
+                let fast =
+                    evaluate_windows(&dag, &durations, &arrivals, &windows, overlap, &policy);
+                assert!(
+                    summary_bits_equal(&exact, &fast),
+                    "case {case}: windowed fast path diverged (policy {policy:?})"
+                );
+                assert_eq!(fast.steady_windows, 0, "case {case}: small run extrapolated");
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_windows_fixed_partition_is_evaluate_bitwise() {
+        let dag = LayerDag::chain(4);
+        let d = [0.3, 0.1, 0.2, 0.15];
+        let mut t = 0.0f64;
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0071);
+        let arrivals: Vec<f64> = (0..50)
+            .map(|_| {
+                t += rng.gen_f64() * 0.2;
+                t
+            })
+            .collect();
+        for &(batch, ov) in &[(1usize, 0.0), (4, 0.6), (7, 0.95)] {
+            let mut windows = Vec::new();
+            let mut lo = 0;
+            while lo < arrivals.len() {
+                let hi = (lo + batch).min(arrivals.len());
+                windows.push((lo, hi));
+                lo = hi;
+            }
+            let a = evaluate(&dag, &d, &arrivals, batch, ov, &SchedPolicy::default());
+            let b = evaluate_windows(&dag, &d, &arrivals, &windows, ov, &SchedPolicy::default());
+            assert!(summary_bits_equal(&a, &b), "batch {batch} ov {ov}");
+        }
+    }
+
+    #[test]
+    fn evaluate_windows_steady_engages_on_equal_width_runs() {
+        // closed loop, deep backlog, uniform width-8 partition: the run
+        // extrapolation must engage and stay within the n·ε bound
+        let dag = LayerDag::chain(4);
+        let d = [0.3, 0.1, 0.2, 0.15];
+        let n_img = 4000usize;
+        let arrivals = vec![0.0; n_img];
+        let windows: Vec<(usize, usize)> = (0..n_img / 8).map(|w| (w * 8, w * 8 + 8)).collect();
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows(
+            &dag, &d, &arrivals, &windows, 0.6,
+        ));
+        let fast = evaluate_windows(&dag, &d, &arrivals, &windows, 0.6, &SchedPolicy::default());
+        assert!(fast.steady_windows > 0, "steady layer must engage");
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+        assert!(rel(fast.makespan, exact.makespan) < 1e-9);
+        assert!(rel(fast.busy, exact.busy) < 1e-9);
+        for (f, e) in fast.finish_times.iter().zip(&exact.finish_times) {
+            assert!(rel(*f, *e) < 1e-9, "{f} vs {e}");
+        }
+        // a width change mid-stream splits the run but stays correct
+        let mut mixed = windows.clone();
+        mixed[250] = (2000, 2004);
+        mixed[251] = (2004, 2016);
+        let em = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows(
+            &dag, &d, &arrivals, &mixed, 0.6,
+        ));
+        let fm = evaluate_windows(&dag, &d, &arrivals, &mixed, 0.6, &SchedPolicy::default());
+        for (f, e) in fm.finish_times.iter().zip(&em.finish_times) {
+            assert!(rel(*f, *e) < 1e-9, "{f} vs {e}");
+        }
+        assert!(rel(fm.makespan, em.makespan) < 1e-9);
     }
 }

@@ -76,12 +76,43 @@ pub struct PipelineSchedule {
 impl PipelineSchedule {
     /// Place every job. `durations[node]` is the layer wall time,
     /// `arrivals` the sorted request timeline; see the module docs for
-    /// the batching/overlap semantics.
+    /// the batching/overlap semantics. Fixed arrival-order windows of
+    /// `batch` images; [`PipelineSchedule::build_windows`] accepts an
+    /// explicit admission partition (SLO-aware dynamic batching,
+    /// [`crate::serve::traffic`]) and this is a thin wrapper over it —
+    /// the per-window arithmetic is shared, so the fixed-window path is
+    /// bit-identical by construction.
     pub fn build(
         dag: &LayerDag,
         durations: &[f64],
         arrivals: &[f64],
         batch: usize,
+        overlap: f64,
+    ) -> PipelineSchedule {
+        let batch = batch.max(1);
+        let n_img = arrivals.len();
+        let mut windows = Vec::with_capacity(n_img.div_ceil(batch));
+        let mut lo = 0;
+        while lo < n_img {
+            let hi = (lo + batch).min(n_img);
+            windows.push((lo, hi));
+            lo = hi;
+        }
+        PipelineSchedule::build_windows(dag, durations, arrivals, &windows, overlap)
+    }
+
+    /// [`PipelineSchedule::build`] over an explicit admission partition:
+    /// `windows` is a list of contiguous `[lo, hi)` request ranges
+    /// covering `0..arrivals.len()` in ascending order (as produced by
+    /// [`crate::serve::traffic::windows`]). Each window waits for its
+    /// last arrival, then issues its jobs in layer-major wave order;
+    /// consecutive windows overlap across the boundary like any other
+    /// back-to-back execution pair.
+    pub fn build_windows(
+        dag: &LayerDag,
+        durations: &[f64],
+        arrivals: &[f64],
+        windows: &[(usize, usize)],
         overlap: f64,
     ) -> PipelineSchedule {
         assert_eq!(
@@ -93,8 +124,19 @@ impl PipelineSchedule {
             arrivals.windows(2).all(|w| w[0] <= w[1]),
             "arrivals must be sorted"
         );
+        #[cfg(debug_assertions)]
+        {
+            let mut expect = 0usize;
+            for &(lo, hi) in windows {
+                debug_assert!(
+                    lo == expect && lo < hi,
+                    "windows must be non-empty, contiguous, ascending"
+                );
+                expect = hi;
+            }
+            debug_assert_eq!(expect, arrivals.len(), "windows must cover every request");
+        }
         let overlap = overlap.clamp(0.0, MAX_OVERLAP);
-        let batch = batch.max(1);
         let n_img = arrivals.len();
         let n_nodes = dag.len();
         let sinks = dag.sinks();
@@ -110,10 +152,7 @@ impl PipelineSchedule {
         let mut busy = 0.0f64;
         let mut makespan = 0.0f64;
 
-        let mut window = 0;
-        while window * batch < n_img {
-            let lo = window * batch;
-            let hi = (lo + batch).min(n_img);
+        for &(lo, hi) in windows {
             // the server waits until the window's last request arrives
             let mut window_ready = 0.0f64;
             for &a in &arrivals[lo..hi] {
@@ -155,7 +194,6 @@ impl PipelineSchedule {
                 }
                 finish_times[img] = done;
             }
-            window += 1;
         }
 
         PipelineSchedule {
@@ -367,5 +405,42 @@ mod tests {
         assert_eq!(s.makespan, 0.0);
         assert_eq!(s.occupancy(), 0.0);
         assert!(s.jobs.is_empty());
+    }
+
+    #[test]
+    fn build_windows_fixed_partition_is_build_bit_exact() {
+        let (dag, d) = chain3();
+        let arrivals: Vec<f64> = (0..7).map(|i| i as f64 * 0.05).collect();
+        for &(batch, ov) in &[(1usize, 0.0), (2, 0.5), (3, 0.95), (7, 0.8)] {
+            let a = PipelineSchedule::build(&dag, &d, &arrivals, batch, ov);
+            let mut windows = Vec::new();
+            let mut lo = 0;
+            while lo < arrivals.len() {
+                let hi = (lo + batch).min(arrivals.len());
+                windows.push((lo, hi));
+                lo = hi;
+            }
+            let b = PipelineSchedule::build_windows(&dag, &d, &arrivals, &windows, ov);
+            // PartialEq on f64 fields: equality here is bit-level
+            assert_eq!(a, b, "batch {batch} overlap {ov}");
+        }
+    }
+
+    #[test]
+    fn build_windows_uneven_partition_schedules_every_request() {
+        let (dag, d) = chain3();
+        let arrivals = [0.0, 0.1, 0.2, 0.3, 0.4];
+        let s =
+            PipelineSchedule::build_windows(&dag, &d, &arrivals, &[(0, 1), (1, 4), (4, 5)], 0.5);
+        assert_eq!(s.jobs.len(), 15);
+        assert!(s.finish_times.iter().all(|&f| f > 0.0));
+        // a window's jobs wait for its last arrival (t = 0.3 for [1, 4))
+        let w1_start = s
+            .jobs
+            .iter()
+            .filter(|j| (1..4).contains(&j.image))
+            .map(|j| j.start)
+            .fold(f64::INFINITY, f64::min);
+        assert!(w1_start >= 0.3);
     }
 }

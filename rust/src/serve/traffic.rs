@@ -1,0 +1,756 @@
+//! Production traffic engine: stochastic arrival processes, SLO-aware
+//! dynamic batching, and the closed-loop autoscaler primitive.
+//!
+//! ## Arrival processes
+//!
+//! [`ArrivalProcess`] puts every request-timeline generator behind one
+//! enum, all deterministic per `(requests, rate, seed)` and all
+//! producing the existing sorted [`Arrivals`] — downstream schedulers
+//! are untouched:
+//!
+//! * [`ArrivalProcess::Uniform`] — the historical uniform-jitter
+//!   baseline, delegating to [`Arrivals::open_loop`] bit-for-bit (the
+//!   *non-Poisson* gap law documented there).
+//! * [`ArrivalProcess::Poisson`] — memoryless traffic: exponential
+//!   gaps by inverse-CDF (`gap = −ln(1−u)/λ`) on the seeded
+//!   [`crate::util::rng`].
+//! * [`ArrivalProcess::Mmpp`] — a two-state Markov-modulated Poisson
+//!   process (burst/lull rates `rate·burst` and `rate·(2−burst)`,
+//!   exponential state residence at `switch` flips/s): bursty traffic
+//!   with mean rate `rate` but index of dispersion ≫ 1
+//!   (`rust/tests/traffic_properties.rs` locks > 1 empirically).
+//! * [`ArrivalProcess::Diurnal`] — a non-homogeneous Poisson process
+//!   over a piecewise-constant rate profile ([`DIURNAL_PROFILE`],
+//!   mean multiplier 1.0), the classic day/night load shape compressed
+//!   to simulation scale.
+//! * [`ArrivalProcess::Trace`] — replay of an externally captured
+//!   timeline (one arrival second per line), registered in a
+//!   process-global table so the process enum stays `Copy` (and
+//!   [`crate::serve::ServeConfig`] with it); tiled with a period offset
+//!   when the run needs more requests than the trace holds. CLI-only:
+//!   trace handles are process-local, so the sweep grid rejects them.
+//!
+//! ## SLO-aware dynamic batching
+//!
+//! [`windows`] replaces the fixed arrival-order batch partition with an
+//! admission policy: a window closes when it fills (`batch` requests)
+//! *or* when admitting the next request would push the oldest queued
+//! request's batch-forming wait past its latency budget (`slo`
+//! seconds). `slo = ∞` reproduces the fixed partition exactly, so every
+//! pre-traffic configuration is bit-identical by construction.
+//! [`evaluate_with_slo`] routes the partition through the streaming
+//! fast path ([`fastpath::evaluate_windows`]), which is gated
+//! bit-identical against the exact engine
+//! ([`PipelineSchedule::build_windows`]) in the PR-6 style.
+//!
+//! ## Autoscaling
+//!
+//! [`autoscale`] is the closed-loop control primitive: observe p99 at
+//! the current array count, grow while the SLO is violated, shrink only
+//! when the *next-smaller* cluster would still hold the SLO with
+//! `headroom` to spare (peek-ahead hysteresis — the loop provably never
+//! oscillates and halts on the first hold). `cluster::autoscale_backend`
+//! closes the loop over real [`crate::cluster::ClusterReport`] epochs.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::dag::LayerDag;
+use super::fastpath::{self, SchedPolicy, ScheduleSummary};
+use super::workload::Arrivals;
+use crate::util::rng::Rng;
+
+/// Seed salts: each process draws from its own decorrelated stream, so
+/// e.g. `poisson:RATE` and `mmpp:RATE` at the same seed are independent
+/// timelines. `Uniform` keeps [`Arrivals::open_loop`]'s historical salt.
+const POISSON_SALT: u64 = 0x7a1e_0f5d;
+const MMPP_SALT: u64 = 0x3c8b_52a7;
+const DIURNAL_SALT: u64 = 0xd1a2_4e63;
+
+/// Diurnal rate-multiplier profile (mean exactly 1.0, so the offered
+/// load averages the configured rate over a whole period).
+pub const DIURNAL_PROFILE: [f64; 4] = [0.4, 0.7, 1.3, 1.6];
+/// Segment length of the diurnal profile, in units of the mean gap
+/// `1/rate` — one full "day" is `4 × 64 = 256` mean gaps.
+pub const DIURNAL_SEG_GAPS: f64 = 64.0;
+
+/// Handle to a registered replay trace (index into the process-global
+/// trace table). `Copy`, so [`ArrivalProcess`] — and every config
+/// struct carrying it — stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceId(usize);
+
+fn trace_table() -> &'static Mutex<Vec<Arc<Vec<f64>>>> {
+    static TRACES: OnceLock<Mutex<Vec<Arc<Vec<f64>>>>> = OnceLock::new();
+    TRACES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register an arrival trace (seconds, sorted, non-negative, finite)
+/// and get a replayable [`TraceId`].
+pub fn register_trace(times: Vec<f64>) -> Result<TraceId, String> {
+    if times.is_empty() {
+        return Err("trace must contain at least one arrival".into());
+    }
+    if times.iter().any(|t| !t.is_finite() || *t < 0.0) {
+        return Err("trace arrivals must be finite and non-negative".into());
+    }
+    if times.windows(2).any(|w| w[0] > w[1]) {
+        return Err("trace arrivals must be sorted ascending".into());
+    }
+    let mut table = trace_table().lock().unwrap();
+    table.push(Arc::new(times));
+    Ok(TraceId(table.len() - 1))
+}
+
+/// Load a trace file: one arrival time (seconds) per line; blank lines
+/// and `#` comments are skipped.
+pub fn load_trace(path: &str) -> Result<TraceId, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace '{path}': {e}"))?;
+    let mut times = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let t: f64 = line
+            .parse()
+            .map_err(|_| format!("{path}:{}: not a number: '{line}'", i + 1))?;
+        times.push(t);
+    }
+    register_trace(times)
+}
+
+/// The registered timeline behind a [`TraceId`].
+pub fn trace_times(id: TraceId) -> Option<Arc<Vec<f64>>> {
+    trace_table().lock().unwrap().get(id.0).cloned()
+}
+
+/// A stochastic (or replayed) request-arrival process. Every variant is
+/// deterministic per seed and yields a sorted [`Arrivals`] timeline with
+/// the first request at its natural time (0 for the synthetic
+/// processes). See the module docs for the per-variant models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Historical uniform-jitter baseline ([`Arrivals::open_loop`],
+    /// bit-stable): gaps `(0.5 + u)/rate`, u ∈ [0, 1).
+    Uniform,
+    /// Memoryless Poisson traffic at `rate` requests/s.
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson process: mean rate `rate`,
+    /// burst-state rate `rate·burst` (lull `rate·(2−burst)`,
+    /// `0 < burst < 2`), exponential state residence at `switch`
+    /// flips/s.
+    Mmpp { rate: f64, burst: f64, switch: f64 },
+    /// Non-homogeneous Poisson over [`DIURNAL_PROFILE`], mean rate
+    /// `rate`.
+    Diurnal { rate: f64 },
+    /// Replay of a registered trace ([`register_trace`] /
+    /// [`load_trace`]); tiled if the run asks for more requests than
+    /// the trace holds.
+    Trace(TraceId),
+}
+
+impl Default for ArrivalProcess {
+    fn default() -> Self {
+        ArrivalProcess::Uniform
+    }
+}
+
+impl ArrivalProcess {
+    /// Default MMPP burstiness (burst-state rate = 1.8× the mean).
+    pub const DEFAULT_BURST: f64 = 1.8;
+
+    /// Parse a CLI/grid spec: `uniform`, `poisson:RATE`,
+    /// `mmpp:RATE[:BURST[:SWITCH]]` (defaults burst 1.8, switch
+    /// `RATE/50`), `diurnal:RATE`, `trace:PATH`.
+    pub fn from_spec(spec: &str) -> Result<ArrivalProcess, String> {
+        let (head, rest) = match spec.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (spec, None),
+        };
+        let num = |s: &str, what: &str| -> Result<f64, String> {
+            let v: f64 = s
+                .parse()
+                .map_err(|_| format!("arrival spec '{spec}': bad {what} '{s}'"))?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("arrival spec '{spec}': {what} must be > 0"));
+            }
+            Ok(v)
+        };
+        match (head, rest) {
+            ("uniform", None) => Ok(ArrivalProcess::Uniform),
+            ("poisson", Some(r)) => Ok(ArrivalProcess::Poisson {
+                rate: num(r, "rate")?,
+            }),
+            ("mmpp", Some(r)) => {
+                let parts: Vec<&str> = r.split(':').collect();
+                if parts.len() > 3 {
+                    return Err(format!(
+                        "arrival spec '{spec}': mmpp takes RATE[:BURST[:SWITCH]]"
+                    ));
+                }
+                let rate = num(parts[0], "rate")?;
+                let burst = match parts.get(1) {
+                    Some(b) => num(b, "burst")?,
+                    None => ArrivalProcess::DEFAULT_BURST,
+                };
+                if burst >= 2.0 {
+                    return Err(format!(
+                        "arrival spec '{spec}': burst must be in (0, 2) so both states keep a positive rate"
+                    ));
+                }
+                let switch = match parts.get(2) {
+                    Some(s) => num(s, "switch")?,
+                    None => rate / 50.0,
+                };
+                Ok(ArrivalProcess::Mmpp {
+                    rate,
+                    burst,
+                    switch,
+                })
+            }
+            ("diurnal", Some(r)) => Ok(ArrivalProcess::Diurnal {
+                rate: num(r, "rate")?,
+            }),
+            ("trace", Some(path)) => Ok(ArrivalProcess::Trace(load_trace(path)?)),
+            _ => Err(format!(
+                "unknown arrival process '{spec}' \
+                 (uniform | poisson:RATE | mmpp:RATE[:BURST[:SWITCH]] | diurnal:RATE | trace:PATH)"
+            )),
+        }
+    }
+
+    /// Human/JSON spec string; [`ArrivalProcess::from_spec`] round-trips
+    /// it exactly for every non-trace variant (f64 `Display` is
+    /// shortest-roundtrip). Trace handles are process-local and render
+    /// as `trace:#INDEX` — not re-parseable, by design.
+    pub fn spec(&self) -> String {
+        match self {
+            ArrivalProcess::Uniform => "uniform".into(),
+            ArrivalProcess::Poisson { rate } => format!("poisson:{rate}"),
+            ArrivalProcess::Mmpp {
+                rate,
+                burst,
+                switch,
+            } => format!("mmpp:{rate}:{burst}:{switch}"),
+            ArrivalProcess::Diurnal { rate } => format!("diurnal:{rate}"),
+            ArrivalProcess::Trace(id) => format!("trace:#{}", id.0),
+        }
+    }
+
+    /// Canonical store-key fragment: variant tag + parameter *bit
+    /// patterns* (hex), so a sweep key never depends on decimal
+    /// formatting. Traces are rejected from sweep grids, so their
+    /// fragment (process-local index) never reaches a store.
+    pub fn canonical(&self) -> String {
+        match self {
+            ArrivalProcess::Uniform => "uniform".into(),
+            ArrivalProcess::Poisson { rate } => format!("poisson:{:016x}", rate.to_bits()),
+            ArrivalProcess::Mmpp {
+                rate,
+                burst,
+                switch,
+            } => format!(
+                "mmpp:{:016x}:{:016x}:{:016x}",
+                rate.to_bits(),
+                burst.to_bits(),
+                switch.to_bits()
+            ),
+            ArrivalProcess::Diurnal { rate } => format!("diurnal:{:016x}", rate.to_bits()),
+            ArrivalProcess::Trace(id) => format!("trace:#{}", id.0),
+        }
+    }
+
+    /// Generate the arrival timeline. `fallback_rate` is
+    /// [`crate::serve::ServeConfig::rate`] — the rate the `Uniform`
+    /// baseline uses (the stochastic variants carry their own); as
+    /// there, a non-positive rate (or zero requests) degenerates to the
+    /// closed batch: every request queued at t = 0.
+    pub fn generate(&self, requests: usize, fallback_rate: f64, seed: u64) -> Arrivals {
+        match *self {
+            ArrivalProcess::Uniform => Arrivals::open_loop(requests, fallback_rate, seed),
+            ArrivalProcess::Poisson { rate } => {
+                if rate <= 0.0 || requests == 0 {
+                    return Arrivals {
+                        times: vec![0.0; requests],
+                    };
+                }
+                let mut rng = Rng::seed_from_u64(seed ^ POISSON_SALT);
+                let mean_gap = 1.0 / rate;
+                let mut t = 0.0f64;
+                let mut times = Vec::with_capacity(requests);
+                times.push(0.0);
+                for _ in 1..requests {
+                    t += -mean_gap * (1.0 - rng.gen_f64()).ln();
+                    times.push(t);
+                }
+                Arrivals { times }
+            }
+            ArrivalProcess::Mmpp {
+                rate,
+                burst,
+                switch,
+            } => {
+                if rate <= 0.0 || requests == 0 {
+                    return Arrivals {
+                        times: vec![0.0; requests],
+                    };
+                }
+                debug_assert!(burst > 0.0 && burst < 2.0 && switch > 0.0);
+                let mut rng = Rng::seed_from_u64(seed ^ MMPP_SALT);
+                let lam = [rate * (2.0 - burst), rate * burst];
+                let mut t = 0.0f64;
+                let mut state = 1usize; // start in the burst state
+                let mut next_switch = -(1.0 - rng.gen_f64()).ln() / switch;
+                let mut times = Vec::with_capacity(requests);
+                times.push(0.0);
+                for _ in 1..requests {
+                    loop {
+                        let gap = -(1.0 - rng.gen_f64()).ln() / lam[state];
+                        if t + gap <= next_switch {
+                            t += gap;
+                            break;
+                        }
+                        // memoryless: jump to the switch boundary, flip
+                        // state, redraw both the residence and the gap
+                        t = next_switch;
+                        state = 1 - state;
+                        next_switch = t + -(1.0 - rng.gen_f64()).ln() / switch;
+                    }
+                    times.push(t);
+                }
+                Arrivals { times }
+            }
+            ArrivalProcess::Diurnal { rate } => {
+                if rate <= 0.0 || requests == 0 {
+                    return Arrivals {
+                        times: vec![0.0; requests],
+                    };
+                }
+                let mut rng = Rng::seed_from_u64(seed ^ DIURNAL_SALT);
+                let seg_len = DIURNAL_SEG_GAPS / rate;
+                let mut t = 0.0f64;
+                // segment index tracked explicitly (never recomputed
+                // from t: a divide could round a boundary back into the
+                // previous segment and stall the walk)
+                let mut seg = 0usize;
+                let mut times = Vec::with_capacity(requests);
+                times.push(0.0);
+                for _ in 1..requests {
+                    loop {
+                        let lam = rate * DIURNAL_PROFILE[seg % DIURNAL_PROFILE.len()];
+                        let seg_end = (seg + 1) as f64 * seg_len;
+                        let gap = -(1.0 - rng.gen_f64()).ln() / lam;
+                        if t + gap <= seg_end {
+                            t += gap;
+                            break;
+                        }
+                        // memoryless: advance to the boundary, redraw
+                        // under the next segment's rate
+                        t = seg_end;
+                        seg += 1;
+                    }
+                    times.push(t);
+                }
+                Arrivals { times }
+            }
+            ArrivalProcess::Trace(id) => {
+                let trace = trace_times(id)
+                    .expect("trace handle must come from register_trace/load_trace");
+                let n = trace.len();
+                let first = trace[0];
+                let last = trace[n - 1];
+                // tiling period: the trace span plus one mean gap, so a
+                // repeated trace keeps its own cadence across the seam
+                let mean_gap = if n > 1 { (last - first) / (n - 1) as f64 } else { 1.0 };
+                let mut period = (last - first) + mean_gap;
+                if period <= 0.0 {
+                    period = 1.0;
+                }
+                let times = (0..requests)
+                    .map(|i| trace[i % n] + (i / n) as f64 * period)
+                    .collect();
+                Arrivals { times }
+            }
+        }
+    }
+}
+
+/// SLO-aware admission: partition a sorted arrival timeline into batch
+/// windows. A window admits requests greedily and closes when it holds
+/// `batch` requests *or* when admitting the next arrival would push the
+/// oldest queued request's batch-forming wait (`arrivals[next] −
+/// arrivals[oldest]`) past `slo` seconds. `slo = ∞` therefore
+/// reproduces the fixed arrival-order partition exactly, and by
+/// construction no admitted request ever waits longer than `slo` for
+/// its window to form (`rust/tests/traffic_properties.rs`).
+pub fn windows(arrivals: &[f64], batch: usize, slo: f64) -> Vec<(usize, usize)> {
+    let batch = batch.max(1);
+    let n = arrivals.len();
+    let mut out = Vec::with_capacity(n.div_ceil(batch));
+    let mut lo = 0;
+    while lo < n {
+        let mut hi = lo + 1;
+        while hi < n && hi - lo < batch && arrivals[hi] - arrivals[lo] <= slo {
+            hi += 1;
+        }
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Schedule `arrivals` under SLO-aware admission and summarize: the
+/// single entry point every serving/cluster path routes through. An
+/// infinite `slo` routes to the untouched fixed-window engine
+/// ([`fastpath::evaluate`]) — pre-traffic configurations are
+/// bit-identical by construction, not by re-verification; a finite
+/// `slo` forms [`windows`] and streams them through
+/// [`fastpath::evaluate_windows`].
+pub fn evaluate_with_slo(
+    dag: &LayerDag,
+    durations: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    if !slo.is_finite() {
+        return fastpath::evaluate(dag, durations, arrivals, batch, overlap, policy);
+    }
+    let w = windows(arrivals, batch, slo);
+    fastpath::evaluate_windows(dag, durations, arrivals, &w, overlap, policy)
+}
+
+/// Closed-loop autoscaler parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// p99 latency target (seconds).
+    pub slo: f64,
+    /// Floor on the array count.
+    pub min_arrays: usize,
+    /// Ceiling on the array count.
+    pub max_arrays: usize,
+    /// Shrink hysteresis: scale in only if the next-smaller cluster
+    /// would hold `p99 ≤ slo · headroom` (strictly < 1 prevents
+    /// grow/shrink oscillation).
+    pub headroom: f64,
+    /// Maximum control epochs before giving up.
+    pub epochs: usize,
+}
+
+impl AutoscaleConfig {
+    pub fn new(slo: f64, max_arrays: usize) -> AutoscaleConfig {
+        AutoscaleConfig {
+            slo,
+            min_arrays: 1,
+            max_arrays: max_arrays.max(1),
+            headroom: 0.9,
+            epochs: 16,
+        }
+    }
+}
+
+/// One autoscaler control decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscaleAction {
+    Grow,
+    Shrink,
+    Hold,
+}
+
+/// One observed epoch: the array count it ran at, the p99 it saw, and
+/// the decision taken.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleStep {
+    pub epoch: usize,
+    pub arrays: usize,
+    pub p99: f64,
+    pub action: AutoscaleAction,
+}
+
+/// The autoscaler's full trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleTrace {
+    pub steps: Vec<AutoscaleStep>,
+    /// Array count after the last epoch (the steady state when
+    /// `converged`).
+    pub final_arrays: usize,
+    /// Whether the loop reached a hold decision within its epoch
+    /// budget. On deterministic constant-rate traffic a hold is
+    /// absorbing — re-running the epoch reproduces it — so the loop
+    /// halts there.
+    pub converged: bool,
+}
+
+/// Run the closed control loop from `start_arrays` (clamped to the
+/// configured bounds): `p99_at(arrays)` observes one epoch of traffic
+/// on an `arrays`-wide cluster (deterministic epochs — same seed, same
+/// workload — make the whole trajectory reproducible). Grow while the
+/// SLO is violated; shrink only when the peek-ahead at `arrays − 1`
+/// holds the SLO with headroom; hold otherwise. The hysteresis makes
+/// oscillation impossible: a grow was triggered by `p99(arrays) > slo`,
+/// so an immediate shrink back would need `p99(arrays) ≤ slo·headroom
+/// < slo` — a contradiction — and symmetrically after a shrink.
+pub fn autoscale(
+    cfg: &AutoscaleConfig,
+    start_arrays: usize,
+    mut p99_at: impl FnMut(usize) -> f64,
+) -> AutoscaleTrace {
+    let min = cfg.min_arrays.max(1);
+    let max = cfg.max_arrays.max(min);
+    let mut arrays = start_arrays.clamp(min, max);
+    let mut steps = Vec::new();
+    let mut converged = false;
+    for epoch in 0..cfg.epochs.max(1) {
+        let p99 = p99_at(arrays);
+        let action = if p99 > cfg.slo && arrays < max {
+            AutoscaleAction::Grow
+        } else if arrays > min && p99_at(arrays - 1) <= cfg.slo * cfg.headroom {
+            AutoscaleAction::Shrink
+        } else {
+            AutoscaleAction::Hold
+        };
+        steps.push(AutoscaleStep {
+            epoch,
+            arrays,
+            p99,
+            action,
+        });
+        match action {
+            AutoscaleAction::Grow => arrays += 1,
+            AutoscaleAction::Shrink => arrays -= 1,
+            AutoscaleAction::Hold => {
+                converged = true;
+                break;
+            }
+        }
+    }
+    AutoscaleTrace {
+        steps,
+        final_arrays: arrays,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::pipeline::PipelineSchedule;
+
+    #[test]
+    fn spec_round_trips_and_rejects_garbage() {
+        for spec in [
+            "uniform",
+            "poisson:800",
+            "mmpp:800:1.8:16",
+            "mmpp:1000:1.25:7.5",
+            "diurnal:2000",
+        ] {
+            let p = ArrivalProcess::from_spec(spec).unwrap();
+            assert_eq!(ArrivalProcess::from_spec(&p.spec()).unwrap(), p, "{spec}");
+        }
+        // mmpp defaults: burst 1.8, switch rate/50
+        assert_eq!(
+            ArrivalProcess::from_spec("mmpp:800").unwrap(),
+            ArrivalProcess::Mmpp {
+                rate: 800.0,
+                burst: 1.8,
+                switch: 16.0
+            }
+        );
+        for bad in [
+            "gaussian:3",
+            "poisson",
+            "poisson:0",
+            "poisson:-2",
+            "poisson:abc",
+            "mmpp:800:2.5",
+            "mmpp:800:1.8:0",
+            "mmpp:800:1.8:16:9",
+            "diurnal:nan",
+            "uniform:3",
+        ] {
+            assert!(ArrivalProcess::from_spec(bad).is_err(), "{bad} must fail");
+        }
+    }
+
+    #[test]
+    fn uniform_delegates_to_open_loop_bit_exactly() {
+        let a = ArrivalProcess::Uniform.generate(100, 10.0, 7);
+        let b = Arrivals::open_loop(100, 10.0, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn poisson_matches_python_transcription_golden() {
+        // golden values from the scripts/fuzz_serve_pipeline.py
+        // transcription (seed 7, rate 1000). ln() goes through libm, so
+        // the lock is tight-relative rather than bit-exact — safe under
+        // any ≤ 1-ulp libm variation across toolchains.
+        let a = ArrivalProcess::Poisson { rate: 1000.0 }.generate(6, 0.0, 7);
+        let golden = [
+            0.0,
+            0.0008737695088672753,
+            0.0009627219026453684,
+            0.0023571209966085005,
+            0.0030450705098786788,
+            0.0037573032194155318,
+        ];
+        for (t, g) in a.times.iter().zip(golden) {
+            assert!(
+                (t - g).abs() <= g.abs() * 1e-12,
+                "poisson golden drifted: {t} vs {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_rates_are_closed_batches() {
+        for p in [
+            ArrivalProcess::Uniform,
+            ArrivalProcess::Poisson { rate: 0.0 },
+            ArrivalProcess::Mmpp {
+                rate: 0.0,
+                burst: 1.8,
+                switch: 1.0,
+            },
+            ArrivalProcess::Diurnal { rate: 0.0 },
+        ] {
+            assert_eq!(p.generate(4, 0.0, 3).times, vec![0.0; 4], "{p:?}");
+            assert!(p.generate(0, 0.0, 3).times.is_empty(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn trace_replay_and_tiling() {
+        let id = register_trace(vec![0.0, 0.1, 0.5]).unwrap();
+        let p = ArrivalProcess::Trace(id);
+        assert_eq!(p.generate(3, 0.0, 9).times, vec![0.0, 0.1, 0.5]);
+        // tiling: span 0.5 + mean gap 0.25 = period 0.75
+        let tiled = p.generate(7, 0.0, 9).times;
+        assert_eq!(tiled.len(), 7);
+        assert!((tiled[3] - 0.75).abs() < 1e-12);
+        assert!((tiled[6] - 1.5).abs() < 1e-12);
+        assert!(tiled.windows(2).all(|w| w[0] <= w[1]), "tiled stays sorted");
+        // validation
+        assert!(register_trace(vec![]).is_err());
+        assert!(register_trace(vec![1.0, 0.5]).is_err());
+        assert!(register_trace(vec![-1.0, 0.5]).is_err());
+        assert!(register_trace(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn windows_infinite_slo_is_fixed_partition() {
+        let arrivals: Vec<f64> = (0..10).map(|i| i as f64 * 0.3).collect();
+        assert_eq!(
+            windows(&arrivals, 4, f64::INFINITY),
+            vec![(0, 4), (4, 8), (8, 10)]
+        );
+        let singles: Vec<(usize, usize)> = (0..10).map(|i| (i, i + 1)).collect();
+        assert_eq!(windows(&arrivals, 1, 0.05), singles);
+        assert!(windows(&[], 4, 0.5).is_empty());
+    }
+
+    #[test]
+    fn windows_close_on_budget_and_never_blow_it() {
+        // gaps 0.1; slo 0.25 admits at most 3 per window even at batch 8
+        let arrivals: Vec<f64> = (0..9).map(|i| i as f64 * 0.1).collect();
+        let w = windows(&arrivals, 8, 0.25);
+        assert_eq!(w, vec![(0, 3), (3, 6), (6, 9)]);
+        for &(lo, hi) in &w {
+            assert!(arrivals[hi - 1] - arrivals[lo] <= 0.25 + 1e-15);
+        }
+        // a straggler bursts its own window
+        let burst = [0.0, 0.01, 0.02, 10.0, 10.01];
+        assert_eq!(windows(&burst, 4, 0.5), vec![(0, 3), (3, 5)]);
+    }
+
+    #[test]
+    fn evaluate_with_slo_infinite_routes_to_legacy_engine() {
+        let dag = LayerDag::chain(3);
+        let d = [0.3, 0.1, 0.2];
+        let arrivals: Vec<f64> = (0..20).map(|i| i as f64 * 0.05).collect();
+        let policy = SchedPolicy::default();
+        let a = evaluate_with_slo(&dag, &d, &arrivals, 4, 0.6, f64::INFINITY, &policy);
+        let b = fastpath::evaluate(&dag, &d, &arrivals, 4, 0.6, &policy);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn evaluate_with_slo_finite_agrees_with_exact_engine_bitwise() {
+        let dag = LayerDag::chain(3);
+        let d = [0.3, 0.1, 0.2];
+        let arrivals: Vec<f64> = (0..30).map(|i| i as f64 * 0.07).collect();
+        for &slo in &[0.05, 0.2, 1.0] {
+            let w = windows(&arrivals, 4, slo);
+            let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows(
+                &dag, &d, &arrivals, &w, 0.6,
+            ));
+            let fast =
+                evaluate_with_slo(&dag, &d, &arrivals, 4, 0.6, slo, &SchedPolicy::default());
+            assert_eq!(exact.makespan.to_bits(), fast.makespan.to_bits(), "slo {slo}");
+            assert_eq!(exact.busy.to_bits(), fast.busy.to_bits(), "slo {slo}");
+            assert_eq!(exact.finish_times.len(), fast.finish_times.len());
+            for (e, f) in exact.finish_times.iter().zip(&fast.finish_times) {
+                assert_eq!(e.to_bits(), f.to_bits(), "slo {slo}");
+            }
+        }
+    }
+
+    #[test]
+    fn autoscale_converges_and_holds() {
+        // deterministic p99 curve: halves per added array
+        let p99 = |arrays: usize| 0.8 / arrays as f64;
+        let cfg = AutoscaleConfig::new(0.11, 16);
+        let trace = autoscale(&cfg, 1, p99);
+        assert!(trace.converged);
+        assert_eq!(trace.final_arrays, 8, "first count with p99 ≤ slo");
+        // every step before the hold was a grow
+        let (last, grows) = trace.steps.split_last().unwrap();
+        assert_eq!(last.action, AutoscaleAction::Hold);
+        assert!(grows.iter().all(|s| s.action == AutoscaleAction::Grow));
+        // re-observing the steady state holds again immediately: the
+        // shrink peek-ahead p99(7) ≈ 0.114 > slo·headroom = 0.099
+        let again = autoscale(&cfg, trace.final_arrays, p99);
+        assert!(again.converged);
+        assert_eq!(again.final_arrays, trace.final_arrays);
+        assert_eq!(again.steps.len(), 1);
+    }
+
+    #[test]
+    fn autoscale_shrinks_overprovisioned_start_with_hysteresis() {
+        let p99 = |arrays: usize| 0.8 / arrays as f64;
+        // start at 16: shrink while the peek-ahead holds slo·headroom =
+        // 0.099, i.e. down to 9 (p99(8) = 0.1 > 0.099 stops the slide)
+        let trace = autoscale(&AutoscaleConfig::new(0.11, 16), 16, p99);
+        assert!(trace.converged);
+        assert_eq!(trace.final_arrays, 9);
+        assert!(trace
+            .steps
+            .iter()
+            .take(trace.steps.len() - 1)
+            .all(|s| s.action == AutoscaleAction::Shrink));
+        // the floor also stops the slide
+        let floored = autoscale(
+            &AutoscaleConfig {
+                min_arrays: 12,
+                ..AutoscaleConfig::new(0.11, 16)
+            },
+            16,
+            p99,
+        );
+        assert!(floored.converged);
+        assert_eq!(floored.final_arrays, 12);
+    }
+
+    #[test]
+    fn autoscale_capacity_ceiling_holds_even_violating_slo() {
+        let p99 = |arrays: usize| 1.0 / arrays as f64;
+        let cfg = AutoscaleConfig::new(1e-6, 4);
+        let trace = autoscale(&cfg, 1, p99);
+        assert!(trace.converged, "hold at max capacity, SLO unmet");
+        assert_eq!(trace.final_arrays, 4);
+    }
+}

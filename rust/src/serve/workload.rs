@@ -1,11 +1,21 @@
 //! Serving workloads: deterministic request arrivals and latency
 //! statistics.
 //!
-//! Arrivals are *open-loop* (the client does not wait for responses) and
-//! Poisson-free deterministic: inter-arrival gaps are drawn from the
-//! repo's seeded [`crate::util::rng`], so the same `(requests, rate,
-//! seed)` triple always produces the same timeline — a serving study is
-//! exactly as reproducible as a tile simulation.
+//! Arrivals are *open-loop* (the client does not wait for responses):
+//! inter-arrival gaps are drawn from the repo's seeded
+//! [`crate::util::rng`], so the same `(requests, rate, seed)` triple
+//! always produces the same timeline — a serving study is exactly as
+//! reproducible as a tile simulation.
+//!
+//! [`Arrivals::open_loop`]'s gap law is **uniform jitter, not
+//! Poisson**: `gap = (0.5 + u)/rate` with `u ∈ [0, 1)` — mean `1/rate`
+//! but gaps bounded in `[0.5, 1.5]/rate`, so it under-disperses real
+//! traffic (index of dispersion ≈ 0.08 vs 1 for Poisson) and never
+//! produces bursts. It is kept bit-stable as the historical baseline
+//! ([`crate::serve::traffic::ArrivalProcess::Uniform`] delegates here;
+//! a regression test locks the exact seed-7 sequence); for memoryless,
+//! bursty, diurnal, or replayed traffic use the other
+//! [`crate::serve::traffic::ArrivalProcess`] variants.
 
 use crate::util::rng::Rng;
 
@@ -18,9 +28,11 @@ pub struct Arrivals {
 impl Arrivals {
     /// Deterministic open-loop arrivals: `requests` requests at a mean
     /// offered load of `rate` images/s, each gap jittered uniformly in
-    /// `[0.5, 1.5] / rate` from `seed`. `rate <= 0` is the closed-batch
-    /// limit: every request arrives at t = 0 (the whole batch is already
-    /// queued when the array starts).
+    /// `[0.5, 1.5] / rate` from `seed` (a *non-Poisson* baseline — see
+    /// the module docs; the exact sequence is a compatibility contract,
+    /// locked per seed). `rate <= 0` is the closed-batch limit: every
+    /// request arrives at t = 0 (the whole batch is already queued when
+    /// the array starts).
     pub fn open_loop(requests: usize, rate: f64, seed: u64) -> Arrivals {
         if rate <= 0.0 || requests == 0 {
             return Arrivals {
@@ -114,6 +126,32 @@ mod tests {
         assert!(span > 5.0 && span < 15.0, "span {span}");
         let c = Arrivals::open_loop(100, 10.0, 8);
         assert_ne!(a, c, "different seed, different jitter");
+    }
+
+    #[test]
+    fn open_loop_seed7_sequence_is_bit_stable() {
+        // compatibility contract: the exact seed-7 timeline, locked to
+        // the bit (pure +/* arithmetic — no libm — so these constants
+        // are toolchain-independent). Cross-checked by the independent
+        // Python transcription in scripts/fuzz_serve_pipeline.py; any
+        // refactor of the arrival path must reproduce them.
+        let a = Arrivals::open_loop(100, 10.0, 7);
+        let golden: [(usize, u64); 6] = [
+            (0, 0x0000000000000000), // t = 0.0
+            (1, 0x3fb8a8fb04b1889c), // t ≈ 0.0963284384211271
+            (2, 0x3fc43a13fb29a054), // t ≈ 0.15802240146445234
+            (3, 0x3fd0fdfb140fef90), // t ≈ 0.26550175627903005
+            (4, 0x3fd49af6a9d2b5a5), // t ≈ 0.32195822319303097
+            (99, 0x4023f378f183c485), // t ≈ 9.97553210004322
+        ];
+        for (i, bits) in golden {
+            assert_eq!(
+                a.times[i].to_bits(),
+                bits,
+                "open_loop(100, 10, 7) drifted at index {i}: {}",
+                a.times[i]
+            );
+        }
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::cluster::ShardStrategy;
 use crate::config::{ArrayConfig, FifoDepths};
 use crate::models::FeatureSubset;
 use crate::report::Effort;
+use crate::serve::ArrivalProcess;
 use crate::util::json::Json;
 
 /// A declarative design-space grid. Every axis defaults to the paper's
@@ -76,6 +77,13 @@ pub struct Grid {
     /// Explicit serving request counts; `0` = the historical
     /// `batch × SERVE_WINDOWS` closed-loop protocol.
     pub requests: Vec<usize>,
+    /// Arrival processes ([`crate::serve::traffic`]); `uniform` = the
+    /// historical jittered timeline. Traces are CLI-only (a file path is
+    /// not a stable sweep identity) and rejected here.
+    pub arrivals: Vec<ArrivalProcess>,
+    /// SLO latency budgets in **seconds** (`f64::INFINITY` = classic
+    /// fixed batching). Specs take milliseconds and convert.
+    pub slos: Vec<f64>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -98,6 +106,8 @@ impl Grid {
             shards: vec![ShardStrategy::DataParallel],
             backends: vec![BackendKind::S2],
             requests: vec![0],
+            arrivals: vec![ArrivalProcess::Uniform],
+            slos: vec![f64::INFINITY],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -174,6 +184,18 @@ impl Grid {
         self
     }
 
+    pub fn arrivals(mut self, arrivals: &[ArrivalProcess]) -> Grid {
+        self.arrivals = arrivals.to_vec();
+        self
+    }
+
+    /// SLO budgets in **seconds** (use `f64::INFINITY` for the classic
+    /// fixed-batching point).
+    pub fn slos(mut self, slos: &[f64]) -> Grid {
+        self.slos = slos.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -202,11 +224,13 @@ impl Grid {
             * self.shards.len()
             * self.backends.len()
             * self.requests.len()
+            * self.arrivals.len()
+            * self.slos.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
     /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
-    /// overlap, arrays, shard, backend, requests.
+    /// overlap, arrays, shard, backend, requests, arrival, slo.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -249,14 +273,24 @@ impl Grid {
                                                                 }
                                                                 _ => unreachable!(),
                                                             };
-                                                            jobs.push(
-                                                                job.with_batch(batch)
-                                                                    .with_overlap(overlap)
-                                                                    .with_arrays(n_arrays)
-                                                                    .with_shard(shard)
-                                                                    .with_backend(backend)
-                                                                    .with_requests(req),
-                                                            );
+                                                            let job = job
+                                                                .with_batch(batch)
+                                                                .with_overlap(overlap)
+                                                                .with_arrays(n_arrays)
+                                                                .with_shard(shard)
+                                                                .with_backend(backend)
+                                                                .with_requests(req);
+                                                            for &arrival in &self.arrivals {
+                                                                for &slo in &self.slos {
+                                                                    jobs.push(
+                                                                        job.clone()
+                                                                            .with_arrival(
+                                                                                arrival,
+                                                                            )
+                                                                            .with_slo(slo),
+                                                                    );
+                                                                }
+                                                            }
                                                         }
                                                     }
                                                 }
@@ -293,6 +327,9 @@ impl Grid {
     /// | `backend`   | `s2`, `naive`, `gate`, `skipf`, `skipw`, `scnn`,    |
     /// |             | `sparten`, or `all` (those 7)                       |
     /// | `requests`  | serving request counts (`0` = batch-window default) |
+    /// | `arrival`   | `uniform`, `poisson:RATE`, `mmpp:RATE[:B[:S]]`,     |
+    /// |             | `diurnal:RATE` (traces are CLI-only)                |
+    /// | `slo`       | latency budgets in **ms** (> 0), or `inf`           |
     /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
     /// | `samples`   | tiles sampled per layer (overrides effort)          |
     /// | `stride`    | layer thinning stride (overrides effort)            |
@@ -494,6 +531,37 @@ impl Grid {
                 self.requests = values
                     .iter()
                     .map(|v| v.trim().parse::<usize>().map_err(|_| bad("requests", v)))
+                    .collect::<Result<_, _>>()?;
+            }
+            "arrival" | "arrivals" => {
+                self.arrivals = values
+                    .iter()
+                    .map(|v| {
+                        let a = ArrivalProcess::from_spec(v.trim())
+                            .map_err(|e| format!("bad arrival value `{v}`: {e}"))?;
+                        if matches!(a, ArrivalProcess::Trace(_)) {
+                            // a file path is not a stable job identity:
+                            // the canonical form would depend on load
+                            // order, breaking resumable stores
+                            return Err(format!(
+                                "trace arrivals are CLI-only, not sweepable (`{v}`)"
+                            ));
+                        }
+                        Ok(a)
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "slo" | "slos" => {
+                // spec values are milliseconds; jobs carry seconds
+                self.slos = values
+                    .iter()
+                    .map(|v| match v.trim() {
+                        "inf" | "infinite" => Ok(f64::INFINITY),
+                        s => match s.parse::<f64>() {
+                            Ok(ms) if ms > 0.0 && ms.is_finite() => Ok(ms * 1e-3),
+                            _ => Err(bad("slo", v)),
+                        },
+                    })
                     .collect::<Result<_, _>>()?;
             }
             "effort" => {
@@ -794,6 +862,60 @@ mod tests {
         assert!(Grid::from_spec("requests=many").is_err());
         // JSON grid form parses identically
         let j = Json::parse(r#"{"models": ["s2net"], "requests": [0, 1000]}"#).unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
+    }
+
+    #[test]
+    fn traffic_axes_expand_innermost() {
+        let g = Grid::from_spec(
+            "models=s2net;arrival=uniform,poisson:800,mmpp:800:1.8:16;slo=inf,20",
+        )
+        .unwrap();
+        assert_eq!(g.arrivals.len(), 3);
+        assert_eq!(g.slos.len(), 2);
+        assert!(g.slos[0].is_infinite());
+        assert_eq!(g.slos[1], 0.02, "spec ms convert to job seconds");
+        assert_eq!(g.size(), 6);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 6);
+        // slo innermost, then arrival
+        assert_eq!(jobs[0].arrival, ArrivalProcess::Uniform);
+        assert!(jobs[0].slo.is_infinite());
+        assert_eq!(jobs[1].arrival, ArrivalProcess::Uniform);
+        assert_eq!(jobs[1].slo, 0.02);
+        assert_eq!(jobs[2].arrival, ArrivalProcess::Poisson { rate: 800.0 });
+        assert_eq!(
+            jobs[4].arrival,
+            ArrivalProcess::Mmpp {
+                rate: 800.0,
+                burst: 1.8,
+                switch: 16.0
+            }
+        );
+        // the default point keeps the historical (pre-traffic) key shape
+        assert!(jobs[0].is_default_arrival() && jobs[0].is_default_slo());
+        assert!(!jobs[0].canonical().contains("|arr:"));
+        assert!(!jobs[0].canonical().contains("|slo:"));
+        assert!(jobs[1].canonical().ends_with("|slo:3f947ae147ae147b"));
+        assert!(jobs[2].canonical().ends_with("|arr:poisson:4089000000000000"));
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 6, "traffic axes must distinguish keys");
+        // garbage is rejected, not defaulted; traces are CLI-only
+        assert!(Grid::from_spec("arrival=gaussian:3").is_err());
+        assert!(Grid::from_spec("arrival=poisson:0").is_err());
+        assert!(Grid::from_spec("slo=0").is_err());
+        assert!(Grid::from_spec("slo=-5").is_err());
+        assert!(Grid::from_spec("slo=soon").is_err());
+        assert!(Grid::from_spec("arrival=trace:/tmp/nope.txt").is_err());
+        // JSON grid form parses identically
+        let j = Json::parse(
+            r#"{"models": ["s2net"],
+                "arrival": ["uniform", "poisson:800", "mmpp:800:1.8:16"],
+                "slo": ["inf", 20]}"#,
+        )
+        .unwrap();
         assert_eq!(Grid::from_json(&j).unwrap(), g);
     }
 

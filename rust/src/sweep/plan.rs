@@ -17,6 +17,7 @@ use crate::cluster::ShardStrategy;
 use crate::config::ArrayConfig;
 use crate::models::{zoo, FeatureSubset, Model};
 use crate::report::Effort;
+use crate::serve::ArrivalProcess;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -118,6 +119,14 @@ pub struct Job {
     /// head-to-head studies in the high-R regime the scheduler fast
     /// path ([`crate::serve::fastpath`]) unlocks.
     pub requests: usize,
+    /// Request arrival process ([`crate::serve::traffic`]);
+    /// [`ArrivalProcess::Uniform`] is the historical
+    /// [`crate::serve::Arrivals::open_loop`] timeline.
+    pub arrival: ArrivalProcess,
+    /// Per-request latency budget in seconds driving SLO-aware dynamic
+    /// batching ([`crate::serve::traffic::windows`]); `∞` (the default)
+    /// is classic fixed batching.
+    pub slo: f64,
 }
 
 impl Job {
@@ -145,6 +154,8 @@ impl Job {
             shard: ShardStrategy::DataParallel,
             backend: BackendKind::S2,
             requests: 0,
+            arrival: ArrivalProcess::Uniform,
+            slo: f64::INFINITY,
         }
     }
 
@@ -176,6 +187,8 @@ impl Job {
             shard: ShardStrategy::DataParallel,
             backend: BackendKind::S2,
             requests: 0,
+            arrival: ArrivalProcess::Uniform,
+            slo: f64::INFINITY,
         }
     }
 
@@ -220,6 +233,18 @@ impl Job {
         self
     }
 
+    pub fn with_arrival(mut self, arrival: ArrivalProcess) -> Job {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Latency budget in **seconds**; `f64::INFINITY` restores classic
+    /// fixed batching.
+    pub fn with_slo(mut self, slo: f64) -> Job {
+        self.slo = slo;
+        self
+    }
+
     /// Is this job a plain per-layer evaluation point (the pre-serving
     /// default)? Such jobs keep their historical canonical form — and
     /// therefore their [`Job::key`] — so stores written before the
@@ -252,6 +277,22 @@ impl Job {
         self.requests == 0
     }
 
+    /// Does this job use the historical uniform-jitter arrival timeline?
+    /// Such jobs keep their historical canonical form — and therefore
+    /// their [`Job::key`] — so stores written before the `arrival` axis
+    /// existed still resume.
+    pub fn is_default_arrival(&self) -> bool {
+        self.arrival == ArrivalProcess::Uniform
+    }
+
+    /// Does this job use classic fixed batching (no latency budget)?
+    /// Such jobs keep their historical canonical form — and therefore
+    /// their [`Job::key`] — so stores written before the `slo` axis
+    /// existed still resume.
+    pub fn is_default_slo(&self) -> bool {
+        !self.slo.is_finite()
+    }
+
     /// The cluster configuration this job implies.
     pub fn cluster_config(&self) -> crate::cluster::ClusterConfig {
         crate::cluster::ClusterConfig::new(self.arrays, self.shard)
@@ -272,6 +313,8 @@ impl Job {
         crate::serve::ServeConfig::new(self.batch, self.overlap)
             .with_requests(requests)
             .with_seed(self.seed)
+            .with_arrival(self.arrival)
+            .with_slo(self.slo)
     }
 
     /// Canonical text form: every field that determines the result, with
@@ -339,6 +382,17 @@ impl Job {
         // composition stays injective
         if !self.is_default_requests() {
             canon = format!("{canon}|req{}", self.requests);
+        }
+        // traffic suffixes compose last, in a fixed order. `|arr:` is
+        // prefix-distinct from `|a`+digits ('r' is not a digit) and
+        // `|slo:` from `|sh:` ('l' vs 'h'), so every elision combination
+        // remains injective. The arrival canonical renders rates as
+        // exact bit patterns ([`ArrivalProcess::canonical`]).
+        if !self.is_default_arrival() {
+            canon = format!("{canon}|arr:{}", self.arrival.canonical());
+        }
+        if !self.is_default_slo() {
+            canon = format!("{canon}|slo:{:016x}", self.slo.to_bits());
         }
         canon
     }
@@ -427,6 +481,16 @@ impl Job {
         if !self.is_default_requests() {
             o.insert("requests".into(), Json::Num(self.requests as f64));
         }
+        // traffic fields likewise elided at their defaults (pre-traffic
+        // stores parse back as uniform arrivals / infinite SLO). The SLO
+        // is stored in seconds — `{}` f64 formatting is shortest
+        // round-trip, so the value survives exactly.
+        if !self.is_default_arrival() {
+            o.insert("arrival".into(), Json::Str(self.arrival.spec()));
+        }
+        if !self.is_default_slo() {
+            o.insert("slo".into(), Json::Num(self.slo));
+        }
         Json::Obj(o)
     }
 
@@ -503,6 +567,21 @@ impl Job {
                 _ => BackendKind::S2,
             },
             requests: j.get("requests").and_then(Json::as_usize).unwrap_or(0),
+            arrival: match j.get("arrival") {
+                Some(Json::Str(spec)) => ArrivalProcess::from_spec(spec)
+                    .map_err(|e| format!("bad arrival process: {e}"))?,
+                _ => ArrivalProcess::Uniform,
+            },
+            slo: match j.get("slo") {
+                Some(v) => {
+                    let s = v.as_f64().ok_or("non-numeric field `slo`")?;
+                    if s <= 0.0 {
+                        return Err(format!("slo must be positive, got {s}"));
+                    }
+                    s
+                }
+                None => f64::INFINITY,
+            },
         })
     }
 }
@@ -756,6 +835,104 @@ mod tests {
         // serve_config honours the override (and the 0 default)
         assert_eq!(r.serve_config().requests, 1_000_000);
         assert_eq!(j.serve_config().requests, SERVE_WINDOWS);
+    }
+
+    #[test]
+    fn default_traffic_fields_keep_historical_keys() {
+        // Pre-traffic stores must keep resuming: a uniform-arrival /
+        // infinite-SLO job keys exactly as it did before the traffic
+        // axes existed. Every locked key below was computed by the
+        // independent Python FNV transcription over the literal
+        // canonical string.
+        let j = job();
+        assert!(j.is_default_arrival() && j.is_default_slo());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        assert_eq!(j.clone().with_arrival(ArrivalProcess::Uniform).key(), j.key());
+        assert_eq!(j.clone().with_slo(f64::INFINITY).key(), j.key());
+        // non-default arrivals extend — and change — the key
+        let p = j.clone().with_arrival(ArrivalProcess::Poisson { rate: 800.0 });
+        assert!(p.canonical().ends_with("|arr:poisson:4089000000000000"));
+        assert_eq!(p.key(), 0x5cd5_9498_663b_db16);
+        let m = j.clone().with_arrival(ArrivalProcess::Mmpp {
+            rate: 800.0,
+            burst: 1.8,
+            switch: 16.0,
+        });
+        assert!(m.canonical().ends_with(
+            "|arr:mmpp:4089000000000000:3ffccccccccccccd:4030000000000000"
+        ));
+        assert_eq!(m.key(), 0x120f_2563_44d5_350f);
+        let d = j.clone().with_arrival(ArrivalProcess::Diurnal { rate: 800.0 });
+        assert!(d.canonical().ends_with("|arr:diurnal:4089000000000000"));
+        assert_eq!(d.key(), 0x5737_01a3_f5b0_380a);
+        // a finite SLO extends — and changes — the key
+        let s = j.clone().with_slo(0.02);
+        assert!(s.canonical().ends_with("|slo:3f947ae147ae147b"));
+        assert_eq!(s.key(), 0xc508_bbb4_a21f_c2ae);
+        // both compose in a fixed order: arrival, then slo
+        let both = p.clone().with_slo(0.02);
+        assert!(both
+            .canonical()
+            .ends_with("|arr:poisson:4089000000000000|slo:3f947ae147ae147b"));
+        assert_eq!(both.key(), 0x09ca_7594_394a_2331);
+        // the traffic suffixes compose after every earlier axis
+        let full = j
+            .clone()
+            .with_batch(4)
+            .with_arrays(2)
+            .with_backend(BackendKind::SparTen)
+            .with_requests(4096)
+            .with_arrival(ArrivalProcess::Poisson { rate: 800.0 })
+            .with_slo(0.02);
+        assert!(full.canonical().ends_with(
+            "|b4|ov:0000000000000000|a2|sh:data|be:sparten|req4096\
+             |arr:poisson:4089000000000000|slo:3f947ae147ae147b"
+        ));
+        let keys = [j.key(), p.key(), m.key(), d.key(), s.key(), both.key(), full.key()];
+        let mut uniq = keys.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "traffic axes must distinguish keys");
+    }
+
+    #[test]
+    fn traffic_job_json_roundtrip_and_legacy_parse() {
+        let j = job()
+            .with_arrival(ArrivalProcess::Mmpp {
+                rate: 1000.0,
+                burst: 1.25,
+                switch: 7.5,
+            })
+            .with_slo(0.02);
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(j.key(), back.key());
+        // a pre-traffic line (no arrival/slo keys) parses to the defaults
+        let legacy = job().with_batch(2).to_json().to_string();
+        assert!(!legacy.contains("arrival") && !legacy.contains("slo"));
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert!(parsed.is_default_arrival() && parsed.is_default_slo());
+        // garbage traffic fields are rejected, not silently defaulted
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("arrival".into(), Json::Str("gaussian:3".into()));
+        }
+        assert!(Job::from_json(&bad).is_err());
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("slo".into(), Json::Num(-0.5));
+        }
+        assert!(Job::from_json(&bad).is_err());
+        // serve_config threads the traffic axes through
+        let sc = j.serve_config();
+        assert_eq!(sc.arrival, j.arrival);
+        assert_eq!(sc.slo, 0.02);
+        assert!(job().serve_config().slo.is_infinite());
     }
 
     #[test]

@@ -75,6 +75,10 @@ pub struct SweepRecord {
     /// ... and scale-out efficiency `T₁ / (N × T_N)` (1.0 = perfect
     /// linear scaling; a single array is exactly 1.0).
     pub scaleout_eff: f64,
+    /// Cluster makespan (seconds). `arrays × cluster_makespan` is the
+    /// provisioned-cost numerator `report pareto` plots; 0 on lines
+    /// recovered from stores written before this metric existed.
+    pub cluster_makespan: f64,
 }
 
 impl SweepRecord {
@@ -92,6 +96,7 @@ impl SweepRecord {
             link_bytes: cluster.link_bytes(),
             cluster_p99_latency: cluster.latency.p99,
             scaleout_eff: cluster.scaleout_efficiency(),
+            cluster_makespan: cluster.makespan(),
             p50_latency: serve.latency.p50,
             p95_latency: serve.latency.p95,
             p99_latency: serve.latency.p99,
@@ -178,6 +183,7 @@ impl SweepRecord {
         num("link_bytes", self.link_bytes);
         num("cluster_p99", self.cluster_p99_latency);
         num("scaleout", self.scaleout_eff);
+        num("cluster_makespan", self.cluster_makespan);
         let mut o = BTreeMap::new();
         o.insert("key".into(), Json::Str(self.job.key_hex()));
         o.insert("job".into(), self.job.to_json());
@@ -217,6 +223,7 @@ impl SweepRecord {
             link_bytes: opt(m, "link_bytes"),
             cluster_p99_latency: opt(m, "cluster_p99"),
             scaleout_eff: opt(m, "scaleout"),
+            cluster_makespan: opt(m, "cluster_makespan"),
             job,
         })
     }
@@ -376,6 +383,7 @@ mod tests {
             link_bytes: 2.5e6,
             cluster_p99_latency: 3.1e-3,
             scaleout_eff: 0.93,
+            cluster_makespan: 4.2e-3,
         }
     }
 
@@ -400,7 +408,7 @@ mod tests {
             };
             for k in [
                 "p50", "p95", "p99", "throughput", "occupancy", "cluster_occ",
-                "link_bytes", "cluster_p99", "scaleout",
+                "link_bytes", "cluster_p99", "scaleout", "cluster_makespan",
             ] {
                 m.remove(k);
             }
@@ -416,8 +424,44 @@ mod tests {
         assert_eq!(back.link_bytes, 0.0);
         assert_eq!(back.cluster_p99_latency, 0.0);
         assert_eq!(back.scaleout_eff, 0.0);
+        assert_eq!(back.cluster_makespan, 0.0);
         assert!(!back.has_serving_metrics());
         assert!(!back.has_cluster_metrics());
+    }
+
+    #[test]
+    fn golden_pre_traffic_line_parses_and_keeps_key() {
+        // A literal JSONL line in the exact shape the pre-traffic store
+        // wrote: no `arrival`/`slo` job fields, no `cluster_makespan`
+        // metric. The key is the independently computed FNV-1a of the
+        // historical canonical form "alexnet|avg|16x16|4,4,4|r4|ce1|
+        // r16:0000000000000000|seed24301|n2|t4" — the traffic axes must
+        // not perturb it.
+        let line = r#"{"key": "66e2f3d3dc218ebf", "job": {"ce": true, "cols": 16, "fifo": [4, 4, 4], "model": "alexnet", "ratio": 4, "ratio16": 0, "rows": 16, "samples": 2, "seed": "24301", "stride": 4, "workload": "avg"}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "naive_wall": 0.0045, "onchip_ee": 1.8, "total_ee": 2.9, "s2_wall": 0.00125, "speedup": 3.6}}"#;
+        let rec = SweepRecord::from_json_line(line).unwrap();
+        assert!(rec.job.is_default_arrival());
+        assert!(rec.job.is_default_slo());
+        assert!(rec.job.slo.is_infinite());
+        assert_eq!(rec.job.key_hex(), "66e2f3d3dc218ebf");
+        assert_eq!(rec.cluster_makespan, 0.0);
+        // re-rendering keeps the elision: the defaults never serialize
+        let rendered = rec.to_json_line();
+        assert!(!rendered.contains("\"arrival\""));
+        assert!(!rendered.contains("\"slo\""));
+        let back = SweepRecord::from_json_line(&rendered).unwrap();
+        assert_eq!(back.job, rec.job);
+        assert_eq!(back.job.key(), rec.job.key());
+        // a traffic job renders — and round-trips — its axes
+        let mut traffic_rec = record(24301, 2.0);
+        traffic_rec.job = traffic_rec
+            .job
+            .with_arrival(crate::serve::ArrivalProcess::Poisson { rate: 800.0 })
+            .with_slo(0.02);
+        let line = traffic_rec.to_json_line();
+        assert!(line.contains("\"arrival\":\"poisson:800\""));
+        assert!(line.contains("\"slo\":0.02"));
+        let back = SweepRecord::from_json_line(&line).unwrap();
+        assert_eq!(back, traffic_rec);
     }
 
     #[test]

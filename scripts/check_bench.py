@@ -63,6 +63,11 @@ REQUIRED = {
         "model/throughput-s2-b4",
     ],
     "BENCH_sweep.json": ["sweep/jobs"],
+    "BENCH_traffic.json": [
+        "traffic/sim-reqs-per-s-poisson-r1e6",
+        "traffic/slo-overhead-r1e6",
+        "pareto/min-arrays-at-slo",
+    ],
 }
 
 

@@ -38,6 +38,18 @@ rust/tests/serve_fastpath.rs); the steady-state extrapolation must
 engage on saturated closed-loop backlogs, stay within the documented
 n·ε relative bound, and stay disengaged (hence bit-exact) when
 arrivals outrun the array.
+
+And the traffic-engine oracle (`traffic_oracle`): a transcription of
+rust/src/util/rng.rs (SplitMix64 -> xoshiro256++) and the arrival
+generators + SLO window closure of rust/src/serve/traffic.rs /
+rust/src/serve/workload.rs. The uniform baseline must reproduce the
+seed-7 bit goldens `open_loop_seed7_sequence_is_bit_stable` locks
+(pure arithmetic, toolchain-independent); the stochastic generators
+are checked for seed determinism (byte-compared through struct.pack),
+ordering/finiteness, empirical rate, and MMPP over-dispersion; and
+the `windows` transcription is fuzzed bit-for-bit against an
+independently formulated online admission-queue oracle across every
+generator family, pathological timelines, and slo in {0, ..., inf}.
 """
 
 import math
@@ -541,6 +553,304 @@ def random_arrivals(rng, r):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Traffic-engine oracle: transcription of rust/src/util/rng.rs and the
+# arrival generators + SLO window closure of rust/src/serve/traffic.rs
+# (and Arrivals::open_loop in rust/src/serve/workload.rs), checked
+# against the bit goldens the Rust tests lock and an independently
+# formulated admission-queue oracle.
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+def _rotl64(x, k):
+    return ((x << k) | (x >> (64 - k))) & _M64
+
+
+class Xoshiro:
+    """Transcription of util::rng::Rng (SplitMix64 -> xoshiro256++)."""
+
+    def __init__(self, seed):
+        st = seed & _M64
+        s = []
+        for _ in range(4):
+            st = (st + 0x9E3779B97F4A7C15) & _M64
+            z = st
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl64((s[0] + s[3]) & _M64, 23) + s[0]) & _M64
+        t = (s[1] << 17) & _M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl64(s[3], 45)
+        return result
+
+    def gen_f64(self):
+        # (next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64): the
+        # int -> float conversion is exact (53 bits) and the scale is a
+        # power of two, so this matches the Rust expression bit for bit
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+POISSON_SALT = 0x7A1E0F5D
+MMPP_SALT = 0x3C8B52A7
+DIURNAL_SALT = 0xD1A24E63
+DIURNAL_PROFILE = [0.4, 0.7, 1.3, 1.6]
+DIURNAL_SEG_GAPS = 64.0
+
+
+def open_loop(requests, rate, seed):
+    """Transcription of Arrivals::open_loop (uniform-jitter baseline)."""
+    if rate <= 0.0 or requests == 0:
+        return [0.0] * requests
+    rng = Xoshiro(seed ^ 0x5E7EA11A)
+    mean_gap = 1.0 / rate
+    t = 0.0
+    times = [0.0]
+    for _ in range(1, requests):
+        t += mean_gap * (0.5 + rng.gen_f64())
+        times.append(t)
+    return times
+
+
+def poisson_arrivals(requests, rate, seed):
+    """Transcription of the ArrivalProcess::Poisson arm."""
+    if rate <= 0.0 or requests == 0:
+        return [0.0] * requests
+    rng = Xoshiro(seed ^ POISSON_SALT)
+    mean_gap = 1.0 / rate
+    t = 0.0
+    times = [0.0]
+    for _ in range(1, requests):
+        t += -mean_gap * math.log(1.0 - rng.gen_f64())
+        times.append(t)
+    return times
+
+
+def mmpp_arrivals(requests, rate, burst, switch, seed):
+    """Transcription of the ArrivalProcess::Mmpp arm (two-state MMPP,
+    memoryless redraw at every state switch)."""
+    if rate <= 0.0 or requests == 0:
+        return [0.0] * requests
+    rng = Xoshiro(seed ^ MMPP_SALT)
+    lam = [rate * (2.0 - burst), rate * burst]
+    t = 0.0
+    state = 1  # start in the burst state
+    next_switch = -math.log(1.0 - rng.gen_f64()) / switch
+    times = [0.0]
+    for _ in range(1, requests):
+        while True:
+            gap = -math.log(1.0 - rng.gen_f64()) / lam[state]
+            if t + gap <= next_switch:
+                t += gap
+                break
+            t = next_switch
+            state = 1 - state
+            next_switch = t + -math.log(1.0 - rng.gen_f64()) / switch
+        times.append(t)
+    return times
+
+
+def diurnal_arrivals(requests, rate, seed):
+    """Transcription of the ArrivalProcess::Diurnal arm (piecewise-
+    constant thinning with an explicit segment counter)."""
+    if rate <= 0.0 or requests == 0:
+        return [0.0] * requests
+    rng = Xoshiro(seed ^ DIURNAL_SALT)
+    seg_len = DIURNAL_SEG_GAPS / rate
+    t = 0.0
+    seg = 0
+    times = [0.0]
+    for _ in range(1, requests):
+        while True:
+            lam = rate * DIURNAL_PROFILE[seg % len(DIURNAL_PROFILE)]
+            seg_end = float(seg + 1) * seg_len
+            gap = -math.log(1.0 - rng.gen_f64()) / lam
+            if t + gap <= seg_end:
+                t += gap
+                break
+            t = seg_end
+            seg += 1
+        times.append(t)
+    return times
+
+
+def slo_windows(arrivals, batch, slo):
+    """Transcription of serve::traffic::windows (two-pointer greedy)."""
+    batch = max(batch, 1)
+    n = len(arrivals)
+    out = []
+    lo = 0
+    while lo < n:
+        hi = lo + 1
+        while hi < n and hi - lo < batch and arrivals[hi] - arrivals[lo] <= slo:
+            hi += 1
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def admission_queue_oracle(arrivals, batch, slo):
+    """Independent window-closure formulation: an online dispatcher
+    watches arrivals one at a time and flushes its queue the moment the
+    next admission would overfill the batch or blow the oldest queued
+    request's batch-forming budget. Same policy as `windows`, derived
+    as an event loop instead of a two-pointer scan."""
+    batch = max(batch, 1)
+    wins = []
+    start = None
+    for i, a in enumerate(arrivals):
+        if start is None:
+            start = i
+        elif i - start == batch or a - arrivals[start] > slo:
+            wins.append((start, i))
+            start = i
+    if start is not None:
+        wins.append((start, len(arrivals)))
+    return wins
+
+
+def traffic_oracle():
+    """Arrival-generator and window-closure oracle for the traffic
+    engine (rust/src/serve/traffic.rs, rust/tests/traffic_properties.rs)."""
+    cases = 0
+
+    # (a) cross-language anchor: open_loop(100, 10, 7) is pure +/*
+    # arithmetic on exactly-representable uniforms, so the transcription
+    # must hit the very bits rust/src/serve/workload.rs locks in
+    # `open_loop_seed7_sequence_is_bit_stable`.
+    golden = {
+        0: 0x0000000000000000,
+        1: 0x3FB8A8FB04B1889C,
+        2: 0x3FC43A13FB29A054,
+        3: 0x3FD0FDFB140FEF90,
+        4: 0x3FD49AF6A9D2B5A5,
+        99: 0x4023F378F183C485,
+    }
+    ts = open_loop(100, 10.0, 7)
+    for i, bits in golden.items():
+        got = struct.unpack("<Q", _bits(ts[i]))[0]
+        assert got == bits, (i, hex(got), hex(bits))
+    cases += len(golden)
+
+    # (b) generator invariants + seed determinism, bit-compared through
+    # struct.pack: same seed -> identical byte strings, different seed
+    # -> different timeline; t[0] = 0; sorted; finite.
+    gens = [
+        ("uniform", lambda n, s: open_loop(n, 1000.0, s)),
+        ("poisson", lambda n, s: poisson_arrivals(n, 1000.0, s)),
+        ("mmpp", lambda n, s: mmpp_arrivals(n, 1000.0, 1.8, 20.0, s)),
+        ("diurnal", lambda n, s: diurnal_arrivals(n, 1000.0, s)),
+    ]
+    for name, gen in gens:
+        for seed in (3, 7, 11, 42, 0xBEEF):
+            for n in (1, 2, 17, 256):
+                a = gen(n, seed)
+                b = gen(n, seed)
+                pa = b"".join(_bits(x) for x in a)
+                assert pa == b"".join(_bits(x) for x in b), (name, seed, n)
+                assert a[0] == 0.0 and len(a) == n, (name, seed, n)
+                assert all(y >= x for x, y in zip(a, a[1:])), (name, seed, n)
+                assert all(math.isfinite(x) for x in a), (name, seed, n)
+                if n > 2:
+                    c = gen(n, seed + 1)
+                    assert pa != b"".join(_bits(x) for x in c), (name, seed, n)
+                cases += 1
+    # rate <= 0 / zero requests degenerate to the closed batch
+    assert open_loop(5, 0.0, 7) == [0.0] * 5
+    assert poisson_arrivals(5, -1.0, 7) == [0.0] * 5
+    assert mmpp_arrivals(0, 1000.0, 1.8, 20.0, 7) == []
+    assert diurnal_arrivals(5, 0.0, 7) == [0.0] * 5
+    cases += 4
+
+    # (c) one-shot law checks at n = 20k (the Rust statistical gates in
+    # traffic_properties.rs run at 50k with +/-5%; this is the sanity
+    # tier, not the gate): empirical mean rate near the declared rate,
+    # and MMPP visibly over-dispersed relative to Poisson.
+    n, rate = 20_000, 1000.0
+    for name, gen in gens:
+        a = gen(n, 7)
+        mean_gap = a[-1] / (n - 1)
+        assert abs(mean_gap * rate - 1.0) < 0.05, (name, mean_gap)
+        cases += 1
+
+    def dispersion(times, bin_w):
+        nb = int(times[-1] / bin_w)
+        counts = [0] * nb
+        for t in times:
+            k = int(t / bin_w)
+            if k < nb:
+                counts[k] += 1
+        mean = sum(counts) / nb
+        var = sum((c - mean) ** 2 for c in counts) / nb
+        return var / mean
+
+    iod_poisson = dispersion(poisson_arrivals(n, rate, 7), 100.0 / rate)
+    iod_mmpp = dispersion(mmpp_arrivals(n, rate, 1.8, 20.0, 7), 100.0 / rate)
+    assert 0.5 < iod_poisson < 2.0, iod_poisson
+    assert iod_mmpp > 3.0 * iod_poisson, (iod_mmpp, iod_poisson)
+    cases += 2
+
+    # (d) window closure: the `windows` transcription against the
+    # independent admission-queue oracle, plus the partition invariants,
+    # across every generator family and pathological timelines.
+    rng = random.Random(0x57AFF1C)
+    for trial in range(6000):
+        kind = rng.randrange(6)
+        m = rng.randint(1, 96)
+        seed = rng.randrange(1 << 32)
+        if kind == 0:
+            arrivals = open_loop(m, 1000.0, seed)
+        elif kind == 1:
+            arrivals = poisson_arrivals(m, 1000.0, seed)
+        elif kind == 2:
+            arrivals = mmpp_arrivals(m, 1000.0, 1.8, 20.0, seed)
+        elif kind == 3:
+            arrivals = diurnal_arrivals(m, 1000.0, seed)
+        elif kind == 4:
+            arrivals = [0.0] * m  # closed batch: all queued at t = 0
+        else:
+            # duplicate-heavy: plateaus stress the tie-break (<= slo)
+            arrivals = sorted(
+                round(x, 3) for x in poisson_arrivals(m, 1000.0, seed)
+            )
+        batch = rng.randint(1, 8)
+        slo = rng.choice(
+            [0.0, 1e-9, 0.5e-3, 1.0e-3, 5.0e-3, 0.1, float("inf")]
+        )
+        w = slo_windows(arrivals, batch, slo)
+        ctx = (trial, kind, m, batch, slo)
+        assert w == admission_queue_oracle(arrivals, batch, slo), ctx
+        # tiling partition of 0..m
+        assert w[0][0] == 0 and w[-1][1] == m, ctx
+        for (_, a_hi), (b_lo, _) in zip(w, w[1:]):
+            assert a_hi == b_lo, ctx
+        bmax = max(batch, 1)
+        for lo, hi in w:
+            assert 1 <= hi - lo <= bmax, ctx
+            # budget: no admitted request waits past slo for its window
+            if hi - lo > 1:
+                assert arrivals[hi - 1] - arrivals[lo] <= slo, ctx
+            # maximality: the window closed for a reason
+            if hi < m:
+                assert hi - lo == bmax or arrivals[hi] - arrivals[lo] > slo, ctx
+        if math.isinf(slo):
+            fixed = [(i, min(i + bmax, m)) for i in range(0, m, bmax)]
+            assert w == fixed, ctx
+        cases += 1
+
+    print(f"all {cases} traffic-engine oracle cases match (goldens, laws, windows)")
+
+
 def main():
     rng = random.Random(98765)
     cases = 0
@@ -625,6 +935,7 @@ def main():
     print(f"all {cases} serve-pipeline fuzz cases satisfy the schedule invariants")
     analytic_backend_case()
     fastpath_oracle()
+    traffic_oracle()
 
 
 if __name__ == "__main__":
