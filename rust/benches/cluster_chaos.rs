@@ -1,0 +1,115 @@
+//! Bench: the cluster-realism chaos engine (EXPERIMENTS.md §Chaos).
+//!
+//! Two things are tracked per PR in `BENCH_cluster_chaos.json`:
+//! * the *engine's* cost — `run_chaos` re-plans every epoch a failure
+//!   or recovery opens, so its wall time bounds how hard the chaos axes
+//!   can be swept (`chaos/...` rows);
+//! * the *model's* resilience trajectory — makespan inflation over the
+//!   failure-free run, retries and array-seconds of downtime for an
+//!   AlexNet workload on a heterogeneous fleet under seeded failures
+//!   and stragglers (`model/...` rows).
+//!
+//! `BENCH_QUICK=1` shrinks the request counts for CI smoke runs.
+
+use s2engine::cluster::event::run_chaos;
+use s2engine::cluster::{feature_link_bytes, ChaosSpec, FleetSpec, ShardStrategy};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::coordinator::Coordinator;
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::Arrivals;
+use s2engine::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = s2engine::util::bench::is_quick();
+    let samples = if quick { 1 } else { 4 };
+    let requests = if quick { 64 } else { 256 };
+    let mut b = Bench::new();
+
+    let model = zoo::alexnet();
+    let cfg = SimConfig::new(ArrayConfig::new(16, 16)).with_samples(samples);
+    let coord = Coordinator::new(cfg);
+    let layers = coord.layer_results_subset(&model, FeatureSubset::Average);
+    // the chaos engine schedules in topological order; the alexnet zoo
+    // model is a chain, so simulation order is already topological
+    let durations: Vec<f64> = layers.iter().map(|l| l.s2_wall()).collect();
+    let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
+    let out_bytes = feature_link_bytes(&layers);
+    let chain: f64 = durations.iter().sum();
+    let arrivals = Arrivals::open_loop(requests, 0.0, 7);
+
+    let fleet = FleetSpec::from_spec("1x2+0.5x2").unwrap().resolve(4);
+    let chaos = ChaosSpec {
+        mtbf: chain * 8.0,
+        mttr: chain * 2.0,
+        straggle_p: 0.2,
+        straggle_factor: 3.0,
+        ..ChaosSpec::OFF
+    };
+
+    // --- engine-only: heterogeneous fleet under failures + stragglers ---
+    for strategy in ShardStrategy::ALL {
+        b.bench(
+            &format!("chaos/alexnet-{}-n4-r{requests}", strategy.tag()),
+            || {
+                black_box(run_chaos(
+                    strategy,
+                    &durations,
+                    &tiles,
+                    &out_bytes,
+                    &arrivals.times,
+                    &fleet,
+                    &chaos,
+                    7,
+                ));
+            },
+        );
+    }
+
+    // --- modeled resilience metrics (the ROADMAP trajectory) ---
+    for strategy in ShardStrategy::ALL {
+        let clean = run_chaos(
+            strategy,
+            &durations,
+            &tiles,
+            &out_bytes,
+            &arrivals.times,
+            &fleet,
+            &ChaosSpec::OFF,
+            7,
+        );
+        let chaotic = run_chaos(
+            strategy,
+            &durations,
+            &tiles,
+            &out_bytes,
+            &arrivals.times,
+            &fleet,
+            &chaos,
+            7,
+        );
+        b.metric(
+            &format!("model/makespan-inflation-{}-n4", strategy.tag()),
+            chaotic.makespan / clean.makespan,
+            "x",
+        );
+        b.metric(
+            &format!("model/retries-{}-n4", strategy.tag()),
+            chaotic.stats.retries as f64,
+            "count",
+        );
+        b.metric(
+            &format!("model/downtime-{}-n4", strategy.tag()),
+            chaotic.stats.downtime * 1e3,
+            "array-ms",
+        );
+        b.metric(
+            &format!("model/bound-slack-{}-n4", strategy.tag()),
+            chaotic.makespan / chaotic.lower_bound,
+            "x",
+        );
+    }
+
+    if let Err(e) = b.write_json("BENCH_cluster_chaos.json") {
+        eprintln!("failed to write BENCH_cluster_chaos.json: {e}");
+    }
+}

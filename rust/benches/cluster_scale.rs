@@ -20,7 +20,7 @@ use s2engine::cluster::{
 use s2engine::config::{ArrayConfig, SimConfig};
 use s2engine::coordinator::Coordinator;
 use s2engine::models::{zoo, FeatureSubset};
-use s2engine::serve::{Arrivals, LayerDag, ServeConfig};
+use s2engine::serve::{Arrivals, LayerDag, SchedPolicy, ServeConfig};
 use s2engine::util::bench::{black_box, Bench};
 
 fn main() {
@@ -54,6 +54,7 @@ fn main() {
                         8,
                         0.6,
                         n,
+                        &SchedPolicy::default(),
                     ));
                 },
             );

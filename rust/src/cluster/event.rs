@@ -1,0 +1,1093 @@
+//! Cluster realism on the shared discrete-event core
+//! ([`crate::serve::engine`]): heterogeneous fleets, stochastic
+//! straggler slowdowns, and array failure/recovery with re-sharding and
+//! retry.
+//!
+//! ## Fleet model
+//!
+//! [`FleetSpec`] describes a cluster of mixed-generation arrays: each
+//! [`ArraySpec`] carries a relative `speed` (1.0 = the baseline array
+//! the per-layer walls were simulated on) and a relative `size`
+//! (capacity weight — how much of a tensor-sharded tile grid the array
+//! can hold). The empty spec is the *uniform sentinel*: it resolves to
+//! `N` baseline arrays, and every uniform, chaos-free run routes to the
+//! untouched legacy schedulers ([`crate::cluster::schedule`]) so
+//! pre-fleet outputs stay bit-identical by construction.
+//!
+//! ## Chaos model
+//!
+//! [`ChaosSpec`] injects two stochastic effects, both seeded and fully
+//! deterministic per `(seed, array index)`:
+//!
+//! * **failures** — each array alternates up/down with exponential
+//!   time-to-failure (`mtbf` seconds mean) and time-to-repair (`mttr`),
+//!   drawn from a per-array stream ([`crate::util::rng::hash_seed`]);
+//! * **stragglers** — each scheduling epoch, each live array
+//!   independently runs at `speed / straggle_factor` with probability
+//!   `straggle_p` (the transient slow-node effect: thermal throttling,
+//!   contended links, the fragmentation/load-imbalance stalls sparse
+//!   designs are prone to).
+//!
+//! ## The epoch engine
+//!
+//! [`run_chaos`] simulates the cluster as a sequence of *epochs* of
+//! constant membership, bounded by failure/recovery transitions merged
+//! through the deterministic [`EventQueue`]. Within an epoch the
+//! pending requests are placed on the live sub-fleet by a
+//! heterogeneity-aware per-strategy scheduler (request-granular — chaos
+//! mode trades batch windows for restartable units):
+//!
+//! * **DataParallel** — weighted least-loaded: each request goes to the
+//!   live array minimizing its completion time `max(load, arrival) +
+//!   chain/speed`;
+//! * **LayerPipeline** — stages cut wall-balanced over the live speeds
+//!   ([`balanced_stages_weighted`]), classic pipeline recurrence with
+//!   stage-boundary link transfers;
+//! * **TensorShard** — every layer's tile grid apportioned across the
+//!   live arrays by capacity weight (largest-remainder, deterministic),
+//!   layer time = the slowest shard, plus the ring all-gather.
+//!
+//! A request that *finishes* within the epoch completes **exactly
+//! once** and leaves the pending set. A request the epoch started but
+//! could not finish before the next membership change is killed and
+//! **retried from scratch** in the next epoch (its work is lost — that
+//! is the cost failures charge), re-sharded against whatever sub-fleet
+//! is then alive. If every array is down the epoch is skipped until a
+//! recovery. A livelock cap ([`MAX_EPOCHS`]) forces one final
+//! unbounded epoch with the full fleet up, so the engine always
+//! terminates with every accepted request served.
+//!
+//! The generalized makespan floor ([`run_chaos`]'s `lower_bound`) is
+//! the fastest-array bound `max_r(arrival_r + chain/speed_max)` for
+//! replica/pipeline strategies and the full-fleet capacity bound
+//! `max_r(arrival_r + Σ_j d_j / Σ_i speed_i)` for tensor sharding —
+//! both hold under any failure/straggler trajectory because chaos can
+//! only remove capacity.
+
+use super::schedule::LaneStats;
+use super::shard::{balanced_stages_weighted, link_seconds, ShardStrategy};
+use crate::serve::engine::{exp_interval, EventQueue};
+use crate::util::rng::{hash_seed, Rng};
+
+/// Per-array seed salts: failure/repair and straggler draws come from
+/// decorrelated streams, so turning stragglers on never perturbs the
+/// failure timeline (and vice versa).
+const FAIL_SALT: u64 = 0xfa11_0f5e;
+const STRAGGLE_SALT: u64 = 0x57a6_1e0b;
+
+/// Livelock cap: after this many scheduling epochs the engine runs one
+/// final unbounded epoch with the full fleet up. Generously above any
+/// realistic trajectory (a failing fleet burns one epoch per
+/// transition), it bounds the worst case without changing any sane run.
+pub const MAX_EPOCHS: usize = 10_000;
+
+/// One array of a (possibly mixed-generation) fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArraySpec {
+    /// Relative throughput vs the baseline array the layer walls were
+    /// simulated on (2.0 = twice as fast).
+    pub speed: f64,
+    /// Relative capacity weight (tensor-shard apportionment).
+    pub size: f64,
+}
+
+impl ArraySpec {
+    /// The baseline array every pre-fleet run modeled.
+    pub const UNIT: ArraySpec = ArraySpec {
+        speed: 1.0,
+        size: 1.0,
+    };
+
+    pub fn new(speed: f64, size: f64) -> ArraySpec {
+        ArraySpec { speed, size }
+    }
+}
+
+/// A cluster fleet description. The empty spec is the **uniform
+/// sentinel**: "however many baseline arrays the cluster config asks
+/// for" — the pre-fleet world, elided from sweep keys so every old
+/// store keeps resuming.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetSpec {
+    /// Per-array specs, in array-id order. Empty = uniform sentinel.
+    pub arrays: Vec<ArraySpec>,
+}
+
+impl FleetSpec {
+    /// The uniform sentinel (resolves against the cluster's array count).
+    pub fn uniform() -> FleetSpec {
+        FleetSpec { arrays: Vec::new() }
+    }
+
+    /// Explicit per-array fleet.
+    pub fn explicit(arrays: Vec<ArraySpec>) -> FleetSpec {
+        FleetSpec { arrays }
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.arrays.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrays.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrays.is_empty()
+    }
+
+    /// The array count this fleet pins; a uniform fleet defers to the
+    /// cluster config's count.
+    pub fn arrays_or(&self, default_arrays: usize) -> usize {
+        if self.is_uniform() {
+            default_arrays.max(1)
+        } else {
+            self.arrays.len()
+        }
+    }
+
+    /// Concrete per-array specs for an `n`-array cluster.
+    pub fn resolve(&self, n: usize) -> Vec<ArraySpec> {
+        if self.is_uniform() {
+            vec![ArraySpec::UNIT; n.max(1)]
+        } else {
+            self.arrays.clone()
+        }
+    }
+
+    /// Parse a CLI/grid spec: `uniform`, or `+`-joined generation
+    /// groups `SPEEDxCOUNT[@SIZE]` (no commas — safe inside
+    /// comma-splitting grid axis values), e.g. `1x2+0.5x2@0.5` = two
+    /// baseline arrays plus two half-speed, half-size ones.
+    pub fn from_spec(spec: &str) -> Result<FleetSpec, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "uniform" {
+            return Ok(FleetSpec::uniform());
+        }
+        let bad = |what: &str| format!("fleet spec '{spec}': {what}");
+        let mut arrays = Vec::new();
+        for group in spec.split('+') {
+            let (head, size) = match group.split_once('@') {
+                Some((h, s)) => {
+                    let size: f64 =
+                        s.trim().parse().map_err(|_| bad("bad size value"))?;
+                    if !size.is_finite() || size <= 0.0 {
+                        return Err(bad("size must be finite and > 0"));
+                    }
+                    (h, size)
+                }
+                None => (group, 1.0),
+            };
+            let (speed_s, count_s) = head
+                .split_once('x')
+                .ok_or_else(|| bad("groups are SPEEDxCOUNT[@SIZE]"))?;
+            let speed: f64 = speed_s
+                .trim()
+                .parse()
+                .map_err(|_| bad("bad speed value"))?;
+            if !speed.is_finite() || speed <= 0.0 {
+                return Err(bad("speed must be finite and > 0"));
+            }
+            let count: usize = count_s
+                .trim()
+                .parse()
+                .map_err(|_| bad("bad count value"))?;
+            if count == 0 || count > 4096 {
+                return Err(bad("count must be in 1..=4096"));
+            }
+            for _ in 0..count {
+                arrays.push(ArraySpec::new(speed, size));
+            }
+        }
+        if arrays.is_empty() {
+            return Err(bad("no arrays"));
+        }
+        Ok(FleetSpec::explicit(arrays))
+    }
+
+    /// Run-length groups of consecutive equal specs, for the human
+    /// spec/JSON form. [`FleetSpec::from_spec`] round-trips it.
+    fn groups(&self) -> Vec<(ArraySpec, usize)> {
+        let mut out: Vec<(ArraySpec, usize)> = Vec::new();
+        for &a in &self.arrays {
+            match out.last_mut() {
+                Some((spec, count)) if *spec == a => *count += 1,
+                _ => out.push((a, 1)),
+            }
+        }
+        out
+    }
+
+    /// Human/JSON spec string (`uniform` for the sentinel); f64
+    /// `Display` is shortest-roundtrip, so [`FleetSpec::from_spec`]
+    /// reparses it exactly.
+    pub fn spec(&self) -> String {
+        if self.is_uniform() {
+            return "uniform".into();
+        }
+        self.groups()
+            .iter()
+            .map(|(a, count)| {
+                if a.size == 1.0 {
+                    format!("{}x{count}", a.speed)
+                } else {
+                    format!("{}x{count}@{}", a.speed, a.size)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Canonical store-key fragment: run-length groups with speed/size
+    /// *bit patterns* (hex), so a sweep key never depends on decimal
+    /// formatting.
+    pub fn canonical(&self) -> String {
+        if self.is_uniform() {
+            return "uniform".into();
+        }
+        self.groups()
+            .iter()
+            .map(|(a, count)| {
+                format!(
+                    "{:016x}x{count}@{:016x}",
+                    a.speed.to_bits(),
+                    a.size.to_bits()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    fn max_speed(&self, n: usize) -> f64 {
+        self.resolve(n)
+            .iter()
+            .map(|a| a.speed)
+            .fold(0.0f64, f64::max)
+    }
+
+    fn total_speed(&self, n: usize) -> f64 {
+        self.resolve(n).iter().map(|a| a.speed).sum()
+    }
+}
+
+/// Failure/straggler injection parameters. [`ChaosSpec::OFF`] (the
+/// default) is the perfect-fleet world every pre-chaos run modeled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosSpec {
+    /// Mean time between failures per array, seconds (`∞` = never).
+    pub mtbf: f64,
+    /// Mean time to repair per array, seconds.
+    pub mttr: f64,
+    /// Per-(array, epoch) straggler probability in `[0, 1]`.
+    pub straggle_p: f64,
+    /// Slowdown factor a straggling array suffers (`speed / factor`).
+    pub straggle_factor: f64,
+}
+
+impl ChaosSpec {
+    /// No failures, no stragglers: the pre-chaos perfect fleet.
+    pub const OFF: ChaosSpec = ChaosSpec {
+        mtbf: f64::INFINITY,
+        mttr: 0.0,
+        straggle_p: 0.0,
+        straggle_factor: 1.0,
+    };
+
+    pub fn is_off(&self) -> bool {
+        !self.has_failures() && !self.has_stragglers()
+    }
+
+    pub fn has_failures(&self) -> bool {
+        self.mtbf.is_finite() && self.mtbf > 0.0
+    }
+
+    pub fn has_stragglers(&self) -> bool {
+        self.straggle_p > 0.0 && self.straggle_factor > 1.0
+    }
+
+    /// Parse a `--fail` / `fail=` value: `off`, or `MTBF:MTTR` seconds
+    /// (`MTBF` > 0 finite, `MTTR` ≥ 0 finite).
+    pub fn parse_fail(s: &str) -> Result<(f64, f64), String> {
+        let s = s.trim();
+        if s == "off" {
+            return Ok((f64::INFINITY, 0.0));
+        }
+        let bad = || format!("fail spec '{s}': expected MTBF:MTTR seconds or 'off'");
+        let (mtbf_s, mttr_s) = s.split_once(':').ok_or_else(bad)?;
+        let mtbf: f64 = mtbf_s.trim().parse().map_err(|_| bad())?;
+        let mttr: f64 = mttr_s.trim().parse().map_err(|_| bad())?;
+        if !(mtbf.is_finite() && mtbf > 0.0) || !(mttr.is_finite() && mttr >= 0.0) {
+            return Err(bad());
+        }
+        Ok((mtbf, mttr))
+    }
+
+    /// Parse a `--straggle` / `straggle=` value: `off`, or `P:FACTOR`
+    /// (`P` in `[0, 1]`, `FACTOR` ≥ 1 finite).
+    pub fn parse_straggle(s: &str) -> Result<(f64, f64), String> {
+        let s = s.trim();
+        if s == "off" {
+            return Ok((0.0, 1.0));
+        }
+        let bad = || format!("straggle spec '{s}': expected P:FACTOR or 'off'");
+        let (p_s, f_s) = s.split_once(':').ok_or_else(bad)?;
+        let p: f64 = p_s.trim().parse().map_err(|_| bad())?;
+        let f: f64 = f_s.trim().parse().map_err(|_| bad())?;
+        if !(0.0..=1.0).contains(&p) || !(f.is_finite() && f >= 1.0) {
+            return Err(bad());
+        }
+        Ok((p, f))
+    }
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec::OFF
+    }
+}
+
+/// What the chaos engine observed over one run.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ChaosStats {
+    /// Scheduling epochs executed (≥ 1 on every chaos-engine run — the
+    /// sentinel the `has_chaos_metrics` reporting pattern keys on).
+    pub epochs: usize,
+    /// Requests killed mid-flight by a membership change and restarted.
+    pub retries: usize,
+    /// Array failure transitions processed.
+    pub failures: usize,
+    /// Array recovery transitions processed.
+    pub recoveries: usize,
+    /// Summed per-array seconds spent down (over processed recoveries).
+    pub downtime: f64,
+    /// (array, epoch) pairs that drew a straggler slowdown.
+    pub straggled_epochs: usize,
+}
+
+/// Outcome of a chaos-engine run, in [`super::schedule::ClusterSchedule`]
+/// vocabulary plus the chaos counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosOutcome {
+    pub lanes: Vec<LaneStats>,
+    pub finish_times: Vec<f64>,
+    pub makespan: f64,
+    pub link_bytes: f64,
+    pub mandatory_transfer: f64,
+    pub lower_bound: f64,
+    pub stats: ChaosStats,
+}
+
+/// Largest-remainder apportionment of `total` tiles across capacity
+/// `weights` (> 0): deterministic, exact (`Σ shares = total`), ties on
+/// equal fractional remainders resolve to the lower index.
+pub fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
+    let k = weights.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let w_sum: f64 = weights.iter().sum();
+    if !(w_sum > 0.0) {
+        let mut out = vec![0usize; k];
+        out[0] = total;
+        return out;
+    }
+    let quotas: Vec<f64> = weights.iter().map(|w| total as f64 * w / w_sum).collect();
+    let mut shares: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut assigned: usize = shares.iter().sum();
+    // fp-defensive: floors can only undershoot in exact arithmetic, but
+    // a quota computed a hair high could cross an integer — trim back
+    while assigned > total {
+        let i = (0..k).max_by(|&a, &b| shares[a].cmp(&shares[b])).unwrap();
+        shares[i] -= 1;
+        assigned -= 1;
+    }
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - shares[a] as f64;
+        let fb = quotas[b] - shares[b] as f64;
+        fb.total_cmp(&fa).then(a.cmp(&b))
+    });
+    for i in 0..(total - assigned) {
+        shares[order[i % k]] += 1;
+    }
+    shares
+}
+
+/// A failure/recovery transition for one array.
+#[derive(Debug, Clone, Copy)]
+enum Transition {
+    Down(usize),
+    Up(usize),
+}
+
+/// One tentative request placement within an epoch.
+struct Placement {
+    req: usize,
+    start: f64,
+    finish: f64,
+    /// (array id, busy seconds, layer executions) per lane touched.
+    lanes: Vec<(usize, f64, usize)>,
+    /// Link bytes this request moves if it completes.
+    bytes: f64,
+}
+
+/// Run the chaos engine: schedule `arrivals` (sorted) over `fleet`
+/// under `chaos`, request-granular. `durations`/`tiles`/`out_bytes` are
+/// the chain-ordered per-layer walls, tile counts, and link bytes (the
+/// same inputs [`super::schedule::build_cluster_slo`] takes; the chaos
+/// engine models the layer chain — the zoo topology — directly).
+/// Deterministic per `(inputs, seed)`.
+pub fn run_chaos(
+    strategy: ShardStrategy,
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    fleet: &[ArraySpec],
+    chaos: &ChaosSpec,
+    seed: u64,
+) -> ChaosOutcome {
+    let n = fleet.len().max(1);
+    let fleet: Vec<ArraySpec> = if fleet.is_empty() {
+        vec![ArraySpec::UNIT; 1]
+    } else {
+        fleet.to_vec()
+    };
+    let n_req = arrivals.len();
+    let chain: f64 = durations.iter().sum();
+
+    // generalized makespan floor (fastest-array / full-capacity bound)
+    let max_speed = fleet.iter().map(|a| a.speed).fold(0.0f64, f64::max);
+    let total_speed: f64 = fleet.iter().map(|a| a.speed).sum();
+    let floor = match strategy {
+        ShardStrategy::DataParallel | ShardStrategy::LayerPipeline => chain / max_speed,
+        ShardStrategy::TensorShard => chain / total_speed,
+    };
+    let lower_bound = arrivals.iter().map(|a| a + floor).fold(0.0, f64::max);
+
+    // representative per-request serialized link time, full fleet up
+    let full_speeds: Vec<f64> = fleet.iter().map(|a| a.speed).collect();
+    let mandatory_transfer = match strategy {
+        ShardStrategy::DataParallel => 0.0,
+        ShardStrategy::LayerPipeline => {
+            let ends = balanced_stages_weighted(durations, &full_speeds);
+            let mut t = 0.0;
+            let mut lo = 0usize;
+            for (s, &hi) in ends.iter().enumerate() {
+                if s > 0 && lo > 0 {
+                    t += link_seconds(out_bytes[lo - 1]);
+                }
+                lo = hi;
+            }
+            t
+        }
+        ShardStrategy::TensorShard => {
+            if n > 1 {
+                let m = n as f64;
+                out_bytes
+                    .iter()
+                    .map(|&b| link_seconds(b) * (m - 1.0) / m)
+                    .sum()
+            } else {
+                0.0
+            }
+        }
+    };
+
+    // per-array decorrelated chaos streams
+    let mut fail_rng: Vec<Rng> = (0..n)
+        .map(|i| Rng::seed_from_u64(hash_seed(seed ^ FAIL_SALT, &format!("array{i}"))))
+        .collect();
+    let mut straggle_rng: Vec<Rng> = (0..n)
+        .map(|i| Rng::seed_from_u64(hash_seed(seed ^ STRAGGLE_SALT, &format!("array{i}"))))
+        .collect();
+
+    let mut queue: EventQueue<Transition> = EventQueue::new();
+    let mut up = vec![true; n];
+    let mut down_since = vec![0.0f64; n];
+    if chaos.has_failures() {
+        for (i, rng) in fail_rng.iter_mut().enumerate() {
+            queue.push(exp_interval(rng, 1.0 / chaos.mtbf), Transition::Down(i));
+        }
+    }
+
+    let mut stats = ChaosStats::default();
+    let mut lanes = vec![LaneStats::default(); n];
+    let mut finish_times = vec![0.0f64; n_req];
+    let mut done = vec![false; n_req];
+    let mut pending: Vec<usize> = (0..n_req).collect();
+    let mut link_bytes = 0.0f64;
+    let mut makespan = 0.0f64;
+    let mut t = 0.0f64;
+
+    while !pending.is_empty() {
+        let force_all_up = stats.epochs >= MAX_EPOCHS;
+        let epoch_end = if force_all_up {
+            f64::INFINITY
+        } else {
+            queue.peek_time().unwrap_or(f64::INFINITY)
+        };
+        let live: Vec<usize> = if force_all_up {
+            (0..n).collect()
+        } else {
+            (0..n).filter(|&i| up[i]).collect()
+        };
+
+        if live.is_empty() {
+            // fleet fully dark: wait for the next recovery
+            let (et, ev) = queue.pop().expect("a dark fleet has a queued recovery");
+            apply_transition(
+                ev, et, chaos, &mut up, &mut down_since, &mut fail_rng, &mut queue,
+                &mut stats,
+            );
+            t = et;
+            continue;
+        }
+
+        // effective speeds this epoch (straggler draws, array order)
+        let mut speeds: Vec<f64> = live.iter().map(|&i| fleet[i].speed).collect();
+        if !force_all_up && chaos.has_stragglers() {
+            for (k, &i) in live.iter().enumerate() {
+                if straggle_rng[i].gen_f64() < chaos.straggle_p {
+                    speeds[k] /= chaos.straggle_factor;
+                    stats.straggled_epochs += 1;
+                }
+            }
+        }
+        stats.epochs += 1;
+
+        let placements = match strategy {
+            ShardStrategy::DataParallel => epoch_data_parallel(
+                durations, arrivals, &pending, &live, &speeds, t, epoch_end,
+            ),
+            ShardStrategy::LayerPipeline => epoch_layer_pipeline(
+                durations, out_bytes, arrivals, &pending, &live, &speeds, t, epoch_end,
+            ),
+            ShardStrategy::TensorShard => epoch_tensor_shard(
+                durations,
+                tiles,
+                out_bytes,
+                arrivals,
+                &pending,
+                &live,
+                &speeds,
+                &fleet,
+                t,
+                epoch_end,
+            ),
+        };
+
+        for p in &placements {
+            if p.finish <= epoch_end {
+                // exactly-once completion
+                done[p.req] = true;
+                finish_times[p.req] = p.finish;
+                makespan = makespan.max(p.finish);
+                link_bytes += p.bytes;
+                for &(array, busy, jobs) in &p.lanes {
+                    lanes[array].busy += busy;
+                    lanes[array].jobs += jobs;
+                }
+            } else if p.start < epoch_end {
+                // started, killed by the membership change: retried
+                // from scratch next epoch (its partial work is lost)
+                stats.retries += 1;
+            }
+        }
+        pending.retain(|&r| !done[r]);
+        if pending.is_empty() {
+            break;
+        }
+
+        if epoch_end.is_finite() {
+            let (et, ev) = queue.pop().expect("finite epoch end comes from the queue");
+            apply_transition(
+                ev, et, chaos, &mut up, &mut down_since, &mut fail_rng, &mut queue,
+                &mut stats,
+            );
+            t = et;
+        } else {
+            // no more transitions and requests still pending: cannot
+            // happen (an unbounded epoch completes everything), but
+            // never loop silently
+            debug_assert!(false, "unbounded epoch left requests pending");
+            break;
+        }
+    }
+
+    ChaosOutcome {
+        lanes,
+        finish_times,
+        makespan,
+        link_bytes,
+        mandatory_transfer,
+        lower_bound,
+        stats,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn apply_transition(
+    ev: Transition,
+    at: f64,
+    chaos: &ChaosSpec,
+    up: &mut [bool],
+    down_since: &mut [f64],
+    fail_rng: &mut [Rng],
+    queue: &mut EventQueue<Transition>,
+    stats: &mut ChaosStats,
+) {
+    match ev {
+        Transition::Down(i) => {
+            up[i] = false;
+            down_since[i] = at;
+            stats.failures += 1;
+            let repair = if chaos.mttr > 0.0 {
+                exp_interval(&mut fail_rng[i], 1.0 / chaos.mttr)
+            } else {
+                0.0
+            };
+            queue.push(at + repair, Transition::Up(i));
+        }
+        Transition::Up(i) => {
+            up[i] = true;
+            stats.recoveries += 1;
+            stats.downtime += at - down_since[i];
+            queue.push(
+                at + exp_interval(&mut fail_rng[i], 1.0 / chaos.mtbf),
+                Transition::Down(i),
+            );
+        }
+    }
+}
+
+/// Weighted least-loaded replica placement for one epoch.
+fn epoch_data_parallel(
+    durations: &[f64],
+    arrivals: &[f64],
+    pending: &[usize],
+    live: &[usize],
+    speeds: &[f64],
+    t: f64,
+    epoch_end: f64,
+) -> Vec<Placement> {
+    let chain: f64 = durations.iter().sum();
+    let n_layers = durations.len();
+    let mut load = vec![t; live.len()];
+    let mut out = Vec::new();
+    for &r in pending {
+        let arr = arrivals[r].max(t);
+        if arr >= epoch_end {
+            break; // clamped arrivals are sorted: the rest wait too
+        }
+        let mut best = 0usize;
+        let mut best_finish = f64::INFINITY;
+        for k in 0..live.len() {
+            let f = load[k].max(arr) + chain / speeds[k];
+            if f < best_finish {
+                best_finish = f;
+                best = k;
+            }
+        }
+        let start = load[best].max(arr);
+        let finish = start + chain / speeds[best];
+        load[best] = finish;
+        out.push(Placement {
+            req: r,
+            start,
+            finish,
+            lanes: vec![(live[best], chain / speeds[best], n_layers)],
+            bytes: 0.0,
+        });
+    }
+    out
+}
+
+/// Wall-balanced stage pipeline over the live sub-fleet for one epoch.
+fn epoch_layer_pipeline(
+    durations: &[f64],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    pending: &[usize],
+    live: &[usize],
+    speeds: &[f64],
+    t: f64,
+    epoch_end: f64,
+) -> Vec<Placement> {
+    let ends = balanced_stages_weighted(durations, speeds);
+    let n_stages = ends.len();
+    let mut stage_time = Vec::with_capacity(n_stages);
+    let mut stage_layers = Vec::with_capacity(n_stages);
+    let mut transfer = Vec::with_capacity(n_stages);
+    let mut bytes_per_req = 0.0f64;
+    let mut lo = 0usize;
+    for (s, &hi) in ends.iter().enumerate() {
+        let work: f64 = durations[lo..hi].iter().sum();
+        stage_time.push(work / speeds[s.min(speeds.len() - 1)]);
+        stage_layers.push(hi - lo);
+        if s > 0 && lo > 0 {
+            // chain topology: one boundary producer per stage cut
+            transfer.push(link_seconds(out_bytes[lo - 1]));
+            bytes_per_req += out_bytes[lo - 1];
+        } else {
+            transfer.push(0.0);
+        }
+        lo = hi;
+    }
+    let mut stage_free = vec![t; n_stages];
+    let mut out = Vec::new();
+    for &r in pending {
+        let arr = arrivals[r].max(t);
+        if arr >= epoch_end {
+            break;
+        }
+        let start = stage_free[0].max(arr);
+        let mut f = start + stage_time[0];
+        stage_free[0] = f;
+        let mut lanes = Vec::with_capacity(n_stages);
+        lanes.push((live[0], stage_time[0], stage_layers[0]));
+        for s in 1..n_stages {
+            let ready = f + transfer[s];
+            f = stage_free[s].max(ready) + stage_time[s];
+            stage_free[s] = f;
+            lanes.push((live[s], stage_time[s], stage_layers[s]));
+        }
+        out.push(Placement {
+            req: r,
+            start,
+            finish: f,
+            lanes,
+            bytes: bytes_per_req,
+        });
+    }
+    out
+}
+
+/// Capacity-apportioned lockstep tensor shard for one epoch.
+#[allow(clippy::too_many_arguments)]
+fn epoch_tensor_shard(
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    pending: &[usize],
+    live: &[usize],
+    speeds: &[f64],
+    fleet: &[ArraySpec],
+    t: f64,
+    epoch_end: f64,
+) -> Vec<Placement> {
+    let k = live.len();
+    let m = k as f64;
+    let weights: Vec<f64> = live
+        .iter()
+        .zip(speeds)
+        .map(|(&i, &s)| s * fleet[i].size)
+        .collect();
+    let mut per_lane = vec![0.0f64; k];
+    let mut service = 0.0f64;
+    let mut gather_total = 0.0f64;
+    let mut bytes_per_req = 0.0f64;
+    for ((&d, &tl), &b) in durations.iter().zip(tiles).zip(out_bytes) {
+        let mut layer_t = 0.0f64;
+        if tl == 0 {
+            // no tile grid to split: every shard runs the full layer
+            for (kk, &s) in speeds.iter().enumerate() {
+                let w = d / s;
+                per_lane[kk] += w;
+                layer_t = layer_t.max(w);
+            }
+        } else {
+            let shares = apportion(tl, &weights);
+            for (kk, &s) in speeds.iter().enumerate() {
+                let w = d * (shares[kk] as f64 / tl as f64) / s;
+                per_lane[kk] += w;
+                layer_t = layer_t.max(w);
+            }
+        }
+        let gather = if k > 1 {
+            bytes_per_req += b * (m - 1.0);
+            link_seconds(b) * (m - 1.0) / m
+        } else {
+            0.0
+        };
+        gather_total += gather;
+        service += layer_t + gather;
+    }
+    let n_layers = durations.len();
+    let mut free = t;
+    let mut out = Vec::new();
+    for &r in pending {
+        let arr = arrivals[r].max(t);
+        if arr >= epoch_end {
+            break;
+        }
+        let start = free.max(arr);
+        let finish = start + service;
+        free = finish;
+        // lockstep: every live lane works (its shard) plus the gather
+        let lanes = (0..k)
+            .map(|kk| (live[kk], per_lane[kk] + gather_total, n_layers))
+            .collect();
+        out.push(Placement {
+            req: r,
+            start,
+            finish,
+            lanes,
+            bytes: bytes_per_req,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> (Vec<f64>, Vec<usize>, Vec<f64>) {
+        (
+            vec![0.4, 0.2, 0.3, 0.1],
+            vec![8, 8, 4, 4],
+            vec![1e6, 5e5, 2.5e5, 1e5],
+        )
+    }
+
+    #[test]
+    fn fleet_spec_round_trips_and_rejects_garbage() {
+        for s in ["uniform", "1x4", "2x1+1x2", "1x2+0.5x2@0.5", "1.5x3@2"] {
+            let f = FleetSpec::from_spec(s).unwrap();
+            assert_eq!(FleetSpec::from_spec(&f.spec()).unwrap(), f, "{s}");
+        }
+        let f = FleetSpec::from_spec("1x2+0.5x2@0.5").unwrap();
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.arrays[0], ArraySpec::new(1.0, 1.0));
+        assert_eq!(f.arrays[3], ArraySpec::new(0.5, 0.5));
+        assert_eq!(f.spec(), "1x2+0.5x2@0.5");
+        assert!(FleetSpec::from_spec("uniform").unwrap().is_uniform());
+        assert_eq!(FleetSpec::uniform().arrays_or(4), 4);
+        assert_eq!(f.arrays_or(9), 4, "explicit fleet pins the count");
+        assert_eq!(FleetSpec::uniform().resolve(3), vec![ArraySpec::UNIT; 3]);
+        for bad in ["3", "0x2", "-1x2", "1x0", "1x2@0", "1x2@-3", "fast", "1x2,1x2"] {
+            assert!(FleetSpec::from_spec(bad).is_err(), "{bad} must fail");
+        }
+        // canonical is bit-pattern stable and distinguishes speeds
+        assert_ne!(
+            FleetSpec::from_spec("1x2").unwrap().canonical(),
+            FleetSpec::from_spec("2x2").unwrap().canonical()
+        );
+    }
+
+    #[test]
+    fn chaos_spec_parsers_validate() {
+        assert_eq!(ChaosSpec::parse_fail("off").unwrap(), (f64::INFINITY, 0.0));
+        assert_eq!(ChaosSpec::parse_fail("0.05:0.01").unwrap(), (0.05, 0.01));
+        for bad in ["", "5", "0:1", "-1:1", "5:-1", "inf:1", "a:b"] {
+            assert!(ChaosSpec::parse_fail(bad).is_err(), "{bad}");
+        }
+        assert_eq!(ChaosSpec::parse_straggle("off").unwrap(), (0.0, 1.0));
+        assert_eq!(ChaosSpec::parse_straggle("0.2:4").unwrap(), (0.2, 4.0));
+        for bad in ["", "0.2", "1.5:2", "-0.1:2", "0.2:0.5", "0.2:inf"] {
+            assert!(ChaosSpec::parse_straggle(bad).is_err(), "{bad}");
+        }
+        assert!(ChaosSpec::OFF.is_off());
+        let mut c = ChaosSpec::OFF;
+        c.mtbf = 0.1;
+        assert!(c.has_failures() && !c.is_off());
+    }
+
+    #[test]
+    fn apportion_is_exact_deterministic_and_weighted() {
+        let shares = apportion(10, &[2.0, 1.0, 1.0]);
+        assert_eq!(shares.iter().sum::<usize>(), 10);
+        assert_eq!(shares, vec![5, 3, 2], "ties resolve to the lower index");
+        assert_eq!(apportion(3, &[1.0, 1.0]), vec![2, 1]);
+        assert_eq!(apportion(0, &[1.0, 2.0]), vec![0, 0]);
+        assert_eq!(apportion(7, &[1.0]), vec![7]);
+        // heavier weight never gets fewer tiles
+        let s = apportion(13, &[3.0, 2.0, 1.0]);
+        assert!(s[0] >= s[1] && s[1] >= s[2]);
+    }
+
+    #[test]
+    fn chaos_off_uniform_completes_in_one_epoch() {
+        let (d, tiles, bytes) = chain();
+        let arrivals = vec![0.0, 0.1, 0.2, 0.5];
+        let fleet = FleetSpec::uniform().resolve(3);
+        for strategy in ShardStrategy::ALL {
+            let out = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fleet, &ChaosSpec::OFF, 7,
+            );
+            assert_eq!(out.stats.epochs, 1, "{strategy:?}");
+            assert_eq!(out.stats.retries, 0);
+            assert_eq!(out.stats.failures, 0);
+            assert_eq!(out.finish_times.len(), 4);
+            let chain_t: f64 = d.iter().sum();
+            for (f, a) in out.finish_times.iter().zip(&arrivals) {
+                assert!(*f >= a + chain_t / 1.0 - 1e-12 || strategy != ShardStrategy::DataParallel);
+                assert!(*f > *a, "{strategy:?}");
+            }
+            assert!(out.makespan >= out.lower_bound - 1e-12, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_beats_its_slowest_and_holds_the_bound() {
+        let (d, tiles, bytes) = chain();
+        let arrivals = vec![0.0; 8];
+        let fast = FleetSpec::from_spec("2x2+1x2").unwrap().resolve(4);
+        let slow = FleetSpec::from_spec("1x4").unwrap().resolve(4);
+        for strategy in ShardStrategy::ALL {
+            let f = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fast, &ChaosSpec::OFF, 7,
+            );
+            let s = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &slow, &ChaosSpec::OFF, 7,
+            );
+            assert!(
+                f.makespan <= s.makespan + 1e-12,
+                "{strategy:?}: faster fleet must not lose ({} vs {})",
+                f.makespan,
+                s.makespan
+            );
+            assert!(f.makespan >= f.lower_bound - 1e-12);
+            assert!(s.makespan >= s.lower_bound - 1e-12);
+        }
+    }
+
+    #[test]
+    fn failures_retry_and_still_complete_exactly_once() {
+        let (d, tiles, bytes) = chain();
+        let arrivals: Vec<f64> = (0..16).map(|i| i as f64 * 0.1).collect();
+        let fleet = FleetSpec::uniform().resolve(4);
+        let chaos = ChaosSpec {
+            mtbf: 0.5, // order of a request's service: failures bite
+            mttr: 0.2,
+            ..ChaosSpec::OFF
+        };
+        for strategy in ShardStrategy::ALL {
+            let out = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fleet, &chaos, 11,
+            );
+            assert!(out.stats.failures > 0, "{strategy:?} saw no failures");
+            assert_eq!(out.finish_times.len(), 16);
+            // exactly-once: every request has one finish after arrival
+            for (f, a) in out.finish_times.iter().zip(&arrivals) {
+                assert!(*f > *a, "{strategy:?}: unfinished request");
+            }
+            assert!(out.makespan >= out.lower_bound - 1e-12, "{strategy:?}");
+            // the perfect fleet is never slower than the chaotic one
+            let calm = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fleet, &ChaosSpec::OFF, 11,
+            );
+            assert!(
+                calm.makespan <= out.makespan + 1e-12,
+                "{strategy:?}: chaos made the run faster ({} vs {})",
+                out.makespan,
+                calm.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn chaos_runs_are_deterministic_per_seed() {
+        let (d, tiles, bytes) = chain();
+        let arrivals: Vec<f64> = (0..12).map(|i| i as f64 * 0.05).collect();
+        let fleet = FleetSpec::from_spec("1x2+0.5x2").unwrap().resolve(4);
+        let chaos = ChaosSpec {
+            mtbf: 0.8,
+            mttr: 0.3,
+            straggle_p: 0.3,
+            straggle_factor: 3.0,
+        };
+        for strategy in ShardStrategy::ALL {
+            let a = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fleet, &chaos, 42,
+            );
+            let b = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fleet, &chaos, 42,
+            );
+            assert_eq!(a, b, "{strategy:?}: same seed must reproduce bit-for-bit");
+            let c = run_chaos(
+                strategy, &d, &tiles, &bytes, &arrivals, &fleet, &chaos, 43,
+            );
+            assert_ne!(
+                a.stats, c.stats,
+                "{strategy:?}: a different seed should see different chaos"
+            );
+        }
+    }
+
+    #[test]
+    fn stragglers_slow_the_run_without_failures() {
+        let (d, tiles, bytes) = chain();
+        let arrivals: Vec<f64> = (0..20).map(|i| i as f64 * 0.05).collect();
+        let fleet = FleetSpec::uniform().resolve(4);
+        // stragglers need failure epochs to re-roll; give them both
+        let chaos = ChaosSpec {
+            mtbf: 0.4,
+            mttr: 0.1,
+            straggle_p: 0.5,
+            straggle_factor: 8.0,
+        };
+        let just_fail = ChaosSpec {
+            straggle_p: 0.0,
+            straggle_factor: 1.0,
+            ..chaos
+        };
+        let with_straggle = run_chaos(
+            ShardStrategy::DataParallel,
+            &d,
+            &tiles,
+            &bytes,
+            &arrivals,
+            &fleet,
+            &chaos,
+            5,
+        );
+        assert!(with_straggle.stats.straggled_epochs > 0);
+        assert!(with_straggle.makespan >= with_straggle.lower_bound - 1e-12);
+        let without = run_chaos(
+            ShardStrategy::DataParallel,
+            &d,
+            &tiles,
+            &bytes,
+            &arrivals,
+            &fleet,
+            &just_fail,
+            5,
+        );
+        assert_eq!(without.stats.straggled_epochs, 0);
+        // decorrelated streams: the failure trajectory is unchanged
+        assert_eq!(without.stats.failures, with_straggle.stats.failures);
+    }
+
+    #[test]
+    fn dark_fleet_waits_for_recovery() {
+        let (d, tiles, bytes) = chain();
+        // one array, failing almost immediately and repairing slowly:
+        // the first epochs are dark, the work still completes
+        let fleet = vec![ArraySpec::UNIT];
+        let chaos = ChaosSpec {
+            mtbf: 0.05,
+            mttr: 1.0,
+            ..ChaosSpec::OFF
+        };
+        let out = run_chaos(
+            ShardStrategy::DataParallel,
+            &d,
+            &tiles,
+            &bytes,
+            &[0.0, 0.0, 0.0, 0.0],
+            &fleet,
+            &chaos,
+            3,
+        );
+        assert_eq!(out.finish_times.len(), 4);
+        assert!(out.stats.failures > 0);
+        assert!(out.stats.downtime > 0.0);
+        assert!(out.makespan >= out.lower_bound - 1e-12);
+        for f in &out.finish_times {
+            assert!(*f > 0.0);
+        }
+    }
+}

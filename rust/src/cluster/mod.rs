@@ -29,11 +29,15 @@
 //! the `s2engine cluster` CLI subcommand, the `arrays`/`shard` sweep
 //! axes, and `report cluster`.
 
+pub mod event;
 pub mod schedule;
 pub mod shard;
 
-pub use schedule::{build_cluster, build_cluster_slo, ClusterSchedule, LaneStats};
-pub use shard::{balanced_stages, feature_link_bytes, ShardStrategy};
+pub use event::{ArraySpec, ChaosSpec, ChaosStats, FleetSpec};
+pub use schedule::{
+    build_cluster, build_cluster_fleet, build_cluster_slo, ClusterSchedule, LaneStats,
+};
+pub use shard::{balanced_stages, balanced_stages_weighted, feature_link_bytes, ShardStrategy};
 
 use crate::coordinator::LayerResult;
 use crate::serve::{
@@ -93,6 +97,12 @@ pub struct ClusterReport {
     /// Makespan of the identical workload on ONE array (the scale-out
     /// efficiency denominator), computed with the same scheduler.
     pub single_makespan: f64,
+    /// The fleet description the run was placed on (uniform sentinel
+    /// for every classic run).
+    pub fleet: FleetSpec,
+    /// The chaos injection the run was subjected to ([`ChaosSpec::OFF`]
+    /// for every classic run).
+    pub chaos: ChaosSpec,
 }
 
 impl ClusterReport {
@@ -121,6 +131,35 @@ impl ClusterReport {
         serve: ServeConfig,
         layers: Vec<LayerResult>,
     ) -> ClusterReport {
+        ClusterReport::assemble_fleet(
+            model,
+            backend,
+            cluster,
+            serve,
+            layers,
+            FleetSpec::uniform(),
+            ChaosSpec::OFF,
+        )
+    }
+
+    /// [`ClusterReport::assemble_backend`] generalized to a
+    /// heterogeneous fleet under chaos injection. With the uniform
+    /// sentinel and [`ChaosSpec::OFF`] this *is* `assemble_backend` —
+    /// the schedule routes through the legacy code verbatim
+    /// ([`build_cluster_fleet`]), so classic outputs stay bit-identical.
+    /// A non-uniform fleet pins the effective array count to its own
+    /// length (overriding `cluster.arrays`). The chaos streams are
+    /// seeded from `serve.seed`, like the traffic they disturb.
+    pub fn assemble_fleet(
+        model: impl Into<String>,
+        backend: impl Into<String>,
+        cluster: ClusterConfig,
+        serve: ServeConfig,
+        layers: Vec<LayerResult>,
+        fleet: FleetSpec,
+        chaos: ChaosSpec,
+    ) -> ClusterReport {
+        let cluster = ClusterConfig::new(fleet.arrays_or(cluster.arrays), cluster.shard);
         let dag = LayerDag::chain(layers.len());
         let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
         let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
@@ -128,7 +167,7 @@ impl ClusterReport {
         let arrivals = serve
             .arrival
             .generate(serve.requests.max(1), serve.rate, serve.seed);
-        let schedule = build_cluster_slo(
+        let schedule = build_cluster_fleet(
             cluster.shard,
             &dag,
             &durations,
@@ -140,6 +179,9 @@ impl ClusterReport {
             cluster.arrays,
             serve.slo,
             &serve.policy,
+            &fleet,
+            &chaos,
+            serve.seed,
         );
         let single = traffic::evaluate_with_slo(
             &dag,
@@ -168,6 +210,8 @@ impl ClusterReport {
             latency,
             single_makespan: single.makespan,
             schedule,
+            fleet,
+            chaos,
         }
     }
 
@@ -269,6 +313,33 @@ impl ClusterReport {
         );
         o.insert("latency_p50_s".into(), Json::Num(self.latency.p50));
         o.insert("latency_p99_s".into(), Json::Num(self.latency.p99));
+        // chaos-engine runs only: classic JSON stays byte-identical
+        if let Some(stats) = &self.schedule.chaos {
+            o.insert("fleet".into(), Json::Str(self.fleet.spec()));
+            if self.chaos.has_failures() {
+                o.insert("fail_mtbf_s".into(), Json::Num(self.chaos.mtbf));
+                o.insert("fail_mttr_s".into(), Json::Num(self.chaos.mttr));
+            }
+            if self.chaos.has_stragglers() {
+                o.insert("straggle_p".into(), Json::Num(self.chaos.straggle_p));
+                o.insert(
+                    "straggle_factor".into(),
+                    Json::Num(self.chaos.straggle_factor),
+                );
+            }
+            o.insert("chaos_epochs".into(), Json::Num(stats.epochs as f64));
+            o.insert("chaos_retries".into(), Json::Num(stats.retries as f64));
+            o.insert("chaos_failures".into(), Json::Num(stats.failures as f64));
+            o.insert(
+                "chaos_recoveries".into(),
+                Json::Num(stats.recoveries as f64),
+            );
+            o.insert("chaos_downtime_s".into(), Json::Num(stats.downtime));
+            o.insert(
+                "chaos_straggled_epochs".into(),
+                Json::Num(stats.straggled_epochs as f64),
+            );
+        }
         o.insert(
             "occupancy".into(),
             Json::Arr(
@@ -302,23 +373,77 @@ pub fn autoscale_backend(
     cfg: &AutoscaleConfig,
     start_arrays: usize,
 ) -> (AutoscaleTrace, ClusterReport) {
+    autoscale_fleet(
+        model,
+        backend,
+        shard,
+        serve,
+        layers,
+        cfg,
+        start_arrays,
+        &FleetSpec::uniform(),
+        &ChaosSpec::OFF,
+    )
+}
+
+/// Trim or extend a fleet description to exactly `n` arrays: the
+/// autoscaler's candidate fleets keep the described generations in
+/// order and grow by repeating the last (newest-procured) spec. The
+/// uniform sentinel stays uniform at any count.
+fn fleet_at(fleet: &FleetSpec, n: usize) -> FleetSpec {
+    if fleet.is_uniform() {
+        return FleetSpec::uniform();
+    }
+    let n = n.max(1);
+    let mut arrays = fleet.arrays.clone();
+    arrays.truncate(n);
+    let last = *arrays.last().expect("explicit fleets are non-empty");
+    while arrays.len() < n {
+        arrays.push(last);
+    }
+    FleetSpec::explicit(arrays)
+}
+
+/// [`autoscale_backend`] generalized to a heterogeneous fleet under
+/// chaos injection: the controller's p99 probe at `n` arrays simulates
+/// the first `n` described arrays (extended by the last spec when
+/// growing past the description) under the *same* chaos seed. Because
+/// failures and retries inflate the observed p99, the controller
+/// naturally grows past a failing array instead of oscillating — locked
+/// by `autoscale_grows_past_failures` below.
+#[allow(clippy::too_many_arguments)]
+pub fn autoscale_fleet(
+    model: &str,
+    backend: &str,
+    shard: ShardStrategy,
+    serve: ServeConfig,
+    layers: &[LayerResult],
+    cfg: &AutoscaleConfig,
+    start_arrays: usize,
+    fleet: &FleetSpec,
+    chaos: &ChaosSpec,
+) -> (AutoscaleTrace, ClusterReport) {
     let trace = autoscale(cfg, start_arrays, |arrays| {
-        ClusterReport::assemble_backend(
+        ClusterReport::assemble_fleet(
             model,
             backend,
             ClusterConfig::new(arrays, shard),
             serve,
             layers.to_vec(),
+            fleet_at(fleet, arrays),
+            *chaos,
         )
         .latency
         .p99
     });
-    let report = ClusterReport::assemble_backend(
+    let report = ClusterReport::assemble_fleet(
         model,
         backend,
         ClusterConfig::new(trace.final_arrays, shard),
         serve,
         layers.to_vec(),
+        fleet_at(fleet, trace.final_arrays),
+        *chaos,
     );
     (trace, report)
 }
@@ -457,6 +582,110 @@ mod tests {
         assert_eq!(trace.final_arrays, 4);
         assert_eq!(report.cluster.arrays, 4);
         assert!(report.latency.p99 > strict.slo, "SLO stays violated at max");
+    }
+
+    #[test]
+    fn fleet_assembly_defaults_are_bit_identical_to_classic() {
+        let layers = quick_layers();
+        let serve = ServeConfig::new(2, 0.5).with_requests(8);
+        for shard in ShardStrategy::ALL {
+            for arrays in [1usize, 3] {
+                let classic = ClusterReport::assemble_backend(
+                    "s2net",
+                    "s2",
+                    ClusterConfig::new(arrays, shard),
+                    serve,
+                    layers.clone(),
+                );
+                let fleet = ClusterReport::assemble_fleet(
+                    "s2net",
+                    "s2",
+                    ClusterConfig::new(arrays, shard),
+                    serve,
+                    layers.clone(),
+                    FleetSpec::uniform(),
+                    ChaosSpec::OFF,
+                );
+                assert_eq!(classic.schedule, fleet.schedule, "{shard:?} x{arrays}");
+                assert_eq!(
+                    classic.to_json().to_string(),
+                    fleet.to_json().to_string(),
+                    "classic JSON must stay byte-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_report_json_carries_fleet_fields() {
+        let layers = quick_layers();
+        let serve = ServeConfig::new(2, 0.5).with_requests(6);
+        let chain: f64 = layers.iter().map(|l| l.wall()).sum();
+        let chaos = ChaosSpec {
+            mtbf: chain,
+            mttr: chain,
+            ..ChaosSpec::OFF
+        };
+        let r = ClusterReport::assemble_fleet(
+            "s2net",
+            "s2",
+            ClusterConfig::new(2, ShardStrategy::DataParallel),
+            serve,
+            layers,
+            FleetSpec::from_spec("1x1+0.5x1").unwrap(),
+            chaos,
+        );
+        assert!(r.schedule.chaos.is_some());
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.str_field("fleet").unwrap(), "1x1+0.5x1");
+        assert!(j.f64_field("chaos_epochs").unwrap() >= 1.0);
+        assert!((j.f64_field("fail_mtbf_s").unwrap() - chain).abs() < 1e-12);
+        assert!(r.makespan() >= r.lower_bound() - 1e-12);
+    }
+
+    #[test]
+    fn autoscale_grows_past_failures() {
+        let layers = quick_layers();
+        let chain: f64 = layers.iter().map(|l| l.wall()).sum();
+        let serve = ServeConfig::new(1, 0.5)
+            .with_requests(8)
+            .with_rate(1.0 / chain);
+        // an SLO a calm small fleet can meet...
+        let cfg = AutoscaleConfig::new(6.0 * chain, 8);
+        let (calm, _) = autoscale_backend(
+            "s2net",
+            "s2",
+            ShardStrategy::DataParallel,
+            serve,
+            &layers,
+            &cfg,
+            1,
+        );
+        // ...but failures with slow repair inflate p99 and force growth
+        let chaos = ChaosSpec {
+            mtbf: chain,
+            mttr: 50.0 * chain,
+            ..ChaosSpec::OFF
+        };
+        let (chaotic, report) = autoscale_fleet(
+            "s2net",
+            "s2",
+            ShardStrategy::DataParallel,
+            serve,
+            &layers,
+            &cfg,
+            1,
+            &FleetSpec::uniform(),
+            &chaos,
+        );
+        assert!(calm.converged && chaotic.converged);
+        assert!(
+            chaotic.final_arrays >= calm.final_arrays,
+            "a failing fleet must not end smaller ({} vs {})",
+            chaotic.final_arrays,
+            calm.final_arrays
+        );
+        assert!(report.schedule.chaos.is_some());
     }
 
     #[test]

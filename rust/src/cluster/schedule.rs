@@ -23,6 +23,7 @@
 //! fuzz, `scripts/fuzz_cluster.py`) can check it without re-deriving
 //! strategy internals.
 
+use super::event::{run_chaos, ChaosSpec, ChaosStats, FleetSpec};
 use super::shard::{balanced_stages, link_seconds, ShardStrategy};
 use crate::serve::{traffic, LayerDag, SchedPolicy};
 #[allow(unused_imports)] // the docs reference the exact engine
@@ -53,8 +54,16 @@ pub struct ClusterSchedule {
     /// scheduling (stage-boundary transfers / all-gathers on its path).
     pub mandatory_transfer: f64,
     /// Provable floor: `max_i(arrival_i + critical path + mandatory
-    /// transfer)` with the strategy's effective durations.
+    /// transfer)` with the strategy's effective durations. Under a
+    /// heterogeneous fleet this generalizes to the fastest-array bound
+    /// (full-capacity bound for TensorShard) — see
+    /// [`crate::cluster::event::run_chaos`].
     pub lower_bound: f64,
+    /// Chaos-engine counters when the run went through
+    /// [`build_cluster_fleet`]'s heterogeneous/failure path; `None` on
+    /// every legacy (uniform, chaos-free) run, keeping those outputs
+    /// bit-identical to the pre-fleet scheduler.
+    pub chaos: Option<ChaosStats>,
 }
 
 /// Strategy dispatcher. `durations[node]` are simulated layer walls,
@@ -202,6 +211,7 @@ pub fn data_parallel_slo(
         link_bytes: 0.0,
         mandatory_transfer: 0.0,
         lower_bound: bound_from(arrivals, dag.critical_path(durations), 0.0),
+        chaos: None,
     }
 }
 
@@ -273,6 +283,7 @@ pub fn layer_pipeline_slo(
             link_bytes: 0.0,
             mandatory_transfer: 0.0,
             lower_bound: bound_from(arrivals, dag.critical_path(durations), 0.0),
+            chaos: None,
         };
     }
 
@@ -363,6 +374,7 @@ pub fn layer_pipeline_slo(
             mandatory_transfer,
         ),
         finish_times,
+        chaos: None,
     }
 }
 
@@ -456,6 +468,71 @@ pub fn tensor_shard_slo(
         // it again would overshoot the floor on branchy DAGs
         lower_bound: bound_from(arrivals, dag.critical_path(&d_sched), 0.0),
         finish_times: s.finish_times,
+        chaos: None,
+    }
+}
+
+/// [`build_cluster_slo`] generalized to a heterogeneous fleet under
+/// chaos injection. The gate is absolute: a uniform fleet with chaos
+/// off takes the legacy path above **verbatim** (same code, same float
+/// ops, `chaos: None`), so every pre-fleet configuration stays
+/// bit-identical. Anything else — mixed generations, failures,
+/// stragglers — runs the epoch engine
+/// ([`crate::cluster::event::run_chaos`]): request-granular (chaos mode
+/// trades batch windows and the SLO admission budget for restartable
+/// units), chain-ordered layer semantics, deterministic per `seed`. A
+/// non-uniform fleet pins the array count to its own length,
+/// overriding `arrays`.
+#[allow(clippy::too_many_arguments)]
+pub fn build_cluster_fleet(
+    strategy: ShardStrategy,
+    dag: &LayerDag,
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+    fleet: &FleetSpec,
+    chaos: &ChaosSpec,
+    seed: u64,
+) -> ClusterSchedule {
+    if fleet.is_uniform() && chaos.is_off() {
+        return build_cluster_slo(
+            strategy, dag, durations, tiles, out_bytes, arrivals, batch, overlap, arrays, slo,
+            policy,
+        );
+    }
+    let n = fleet.arrays_or(arrays);
+    let resolved = fleet.resolve(n);
+    // the epoch engine models the layer chain in topo order (the zoo
+    // topologies are chains; a branchy DAG's chain linearization is the
+    // same conservative serialization the lower bound uses)
+    let topo = dag.topo_order();
+    let topo_durs: Vec<f64> = topo.iter().map(|&i| durations[i]).collect();
+    let topo_tiles: Vec<usize> = topo.iter().map(|&i| tiles[i]).collect();
+    let topo_bytes: Vec<f64> = topo.iter().map(|&i| out_bytes[i]).collect();
+    let out = run_chaos(
+        strategy,
+        &topo_durs,
+        &topo_tiles,
+        &topo_bytes,
+        arrivals,
+        &resolved,
+        chaos,
+        seed,
+    );
+    ClusterSchedule {
+        lanes: out.lanes,
+        finish_times: out.finish_times,
+        makespan: out.makespan,
+        link_bytes: out.link_bytes,
+        mandatory_transfer: out.mandatory_transfer,
+        lower_bound: out.lower_bound,
+        chaos: Some(out.stats),
     }
 }
 
@@ -722,6 +799,79 @@ mod tests {
             assert!(c.finish_times.is_empty());
             assert_eq!(c.link_bytes, 0.0);
             assert_eq!(c.lower_bound, 0.0);
+        }
+    }
+
+    #[test]
+    fn uniform_chaos_free_fleet_is_the_legacy_path_bit_exact() {
+        let (dag, d, tiles, bytes) = chain4();
+        let arrivals = vec![0.0, 0.1, 0.15, 0.4, 0.42, 0.9];
+        for strategy in ShardStrategy::ALL {
+            for arrays in [1usize, 2, 3] {
+                for slo in [f64::INFINITY, 0.35] {
+                    let legacy = build_cluster_slo(
+                        strategy,
+                        &dag,
+                        &d,
+                        &tiles,
+                        &bytes,
+                        &arrivals,
+                        2,
+                        0.5,
+                        arrays,
+                        slo,
+                        &SchedPolicy::default(),
+                    );
+                    let fleet = build_cluster_fleet(
+                        strategy,
+                        &dag,
+                        &d,
+                        &tiles,
+                        &bytes,
+                        &arrivals,
+                        2,
+                        0.5,
+                        arrays,
+                        slo,
+                        &SchedPolicy::default(),
+                        &FleetSpec::uniform(),
+                        &ChaosSpec::OFF,
+                        0x5eed,
+                    );
+                    assert_eq!(legacy, fleet, "{strategy:?} x{arrays} slo {slo}");
+                    assert!(fleet.chaos.is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_fleet_pins_arrays_and_reports_chaos_stats() {
+        let (dag, d, tiles, bytes) = chain4();
+        let arrivals = vec![0.0, 0.1, 0.2, 0.3];
+        let fleet = FleetSpec::from_spec("2x1+1x2").unwrap();
+        for strategy in ShardStrategy::ALL {
+            let c = build_cluster_fleet(
+                strategy,
+                &dag,
+                &d,
+                &tiles,
+                &bytes,
+                &arrivals,
+                2,
+                0.5,
+                8, // overridden by the fleet's own count
+                f64::INFINITY,
+                &SchedPolicy::default(),
+                &fleet,
+                &ChaosSpec::OFF,
+                0x5eed,
+            );
+            assert_eq!(c.lanes.len(), 3, "{strategy:?}");
+            let stats = c.chaos.expect("hetero runs carry chaos stats");
+            assert_eq!(stats.epochs, 1, "{strategy:?}: no failures, one epoch");
+            assert_eq!(stats.retries, 0);
+            assert!(c.makespan >= c.lower_bound - 1e-12, "{strategy:?}");
         }
     }
 }

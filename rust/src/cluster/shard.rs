@@ -152,6 +152,76 @@ pub fn balanced_stages(durations: &[f64], n: usize) -> Vec<usize> {
     ends
 }
 
+/// Heterogeneity-aware generalization of [`balanced_stages`]: cut
+/// `durations` into at most `speeds.len()` contiguous stages where
+/// stage `s` runs on an array of relative speed `speeds[s]` (in array
+/// order), minimizing the maximum stage *wall time* `stage_work /
+/// speed` — wall-balanced, not count- or work-balanced. Same binary
+/// search over the bottleneck, but the greedy feasibility check closes
+/// stage `s` when its work would exceed `cap · speeds[s]`, so a fast
+/// array absorbs proportionally more of the chain. With all speeds
+/// equal to 1 the per-stage caps collapse to the homogeneous ones —
+/// but the cut is computed through the same generalized greedy (the
+/// uniform fleet routes through [`balanced_stages`] one level up, in
+/// [`crate::cluster::schedule`], where bit-identity is gated).
+pub fn balanced_stages_weighted(durations: &[f64], speeds: &[f64]) -> Vec<usize> {
+    let len = durations.len();
+    let n = speeds.len().max(1);
+    if len == 0 {
+        return vec![0];
+    }
+    if n == 1 {
+        return vec![len];
+    }
+    let speed = |s: usize| -> f64 {
+        let v = speeds.get(s).copied().unwrap_or(1.0);
+        if v > 0.0 && v.is_finite() {
+            v
+        } else {
+            1.0
+        }
+    };
+    let total_work: f64 = durations.iter().sum();
+    let min_speed = (0..n).map(speed).fold(f64::INFINITY, f64::min);
+    let longest = durations.iter().cloned().fold(0.0, f64::max);
+    // greedy pack left-to-right: stage s holds at most `cap · speed(s)`
+    // work; a single layer longer than its stage's cap still occupies
+    // the stage alone (stages are never empty)
+    let cut = |cap: f64| -> Vec<usize> {
+        let mut ends = Vec::new();
+        let mut acc = 0.0f64;
+        let mut stage = 0usize;
+        for (i, &d) in durations.iter().enumerate() {
+            if acc > 0.0 && acc + d > cap * speed(stage.min(n - 1)) {
+                ends.push(i);
+                acc = 0.0;
+                stage += 1;
+            }
+            acc += d;
+        }
+        ends.push(len);
+        ends
+    };
+    // wall bottleneck bounds: no stage can beat its longest layer on
+    // the fastest array; one stage on the slowest array is the ceiling
+    let max_speed = (0..n).map(speed).fold(0.0f64, f64::max);
+    let (mut lo, mut hi) = (longest / max_speed, total_work / min_speed);
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if cut(mid).len() <= n {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    let mut ends = cut(hi);
+    while ends.len() > n {
+        let last = ends.pop().unwrap();
+        *ends.last_mut().unwrap() = last;
+    }
+    ends
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +265,52 @@ mod tests {
         assert_eq!(*ends.last().unwrap(), 3);
         assert!(ends.len() <= 3);
         assert_eq!(balanced_stages(&[], 4), vec![0]);
+    }
+
+    #[test]
+    fn weighted_stages_with_unit_speeds_match_homogeneous() {
+        let d = [3.0, 1.0, 1.0, 1.0, 2.0, 2.0];
+        for n in 1..=6 {
+            let speeds = vec![1.0; n];
+            assert_eq!(
+                balanced_stages_weighted(&d, &speeds),
+                balanced_stages(&d, n),
+                "n={n}"
+            );
+        }
+        assert_eq!(balanced_stages_weighted(&[], &[1.0, 1.0]), vec![0]);
+        assert_eq!(balanced_stages_weighted(&d, &[1.0]), vec![6]);
+    }
+
+    #[test]
+    fn weighted_stages_give_fast_arrays_more_wall_balanced_work() {
+        // six unit layers on a 2×-speed array followed by a 1× array:
+        // wall balance wants work split 2:1, i.e. 4 layers then 2
+        let d = [1.0; 6];
+        let ends = balanced_stages_weighted(&d, &[2.0, 1.0]);
+        assert_eq!(*ends.last().unwrap(), 6);
+        assert_eq!(ends.len(), 2);
+        assert_eq!(ends[0], 4, "fast first stage absorbs 2/3 of the work");
+        // flipped order: slow array first gets the small stage
+        let flipped = balanced_stages_weighted(&d, &[1.0, 2.0]);
+        assert_eq!(flipped[0], 2, "slow first stage gets 1/3 of the work");
+        // the wall bottleneck of the weighted cut never exceeds the
+        // count-balanced cut's bottleneck on the same fleet
+        let naive = balanced_stages(&d, 2); // [3,3] → walls 1.5 and 3.0
+        let wall = |ends: &[usize], speeds: &[f64]| -> f64 {
+            let mut lo = 0;
+            let mut worst = 0.0f64;
+            for (s, &e) in ends.iter().enumerate() {
+                let work: f64 = d[lo..e].iter().sum();
+                worst = worst.max(work / speeds[s.min(speeds.len() - 1)]);
+                lo = e;
+            }
+            worst
+        };
+        assert!(
+            wall(&ends, &[2.0, 1.0]) <= wall(&naive, &[2.0, 1.0]) + 1e-12,
+            "wall-balanced cut must not lose to the count-balanced one"
+        );
     }
 
     #[test]

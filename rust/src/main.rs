@@ -27,6 +27,8 @@ s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
                   plus the simulate array/effort options]
 s2engine cluster <model> [--arrays 4 --shard data|pipeline|tensor
                   --autoscale  # closed-loop sizing, 1..--arrays (needs --slo-ms)
+                  --fleet 1x2+0.5x2@0.5  # heterogeneous arrays SPEEDxCOUNT[@SIZE]
+                  --fail MTBF:MTTR --straggle P:FACTOR  # chaos (seconds / prob)
                   plus every serve option incl. --backend]  # N arrays
 s2engine report  table1|...|table5|fig3|fits|serving|cluster|backends|pareto
                   [--effort ...] [--backend TAG]  # serving/cluster only
@@ -37,7 +39,8 @@ s2engine sweep   fig10|...|fig17|serving|cluster|backends|pareto
                   [--out DIR --resume] [--backend TAG]  # serving/cluster
                   [--requests N]  # serving/cluster/backends
 s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;backend=all;
-                  arrival=poisson:800;slo=20,inf'  # traffic axes sweepable
+                  arrival=poisson:800;slo=20,inf;
+                  fleet=uniform,1x2+0.5x2;fail=off,0.05:0.01;straggle=off,0.2:4'
                   [--grid grid.json] [--out DIR --resume] [--workers N]
                   [--backend s2,scnn,...]  # shorthand for the grid axis
 s2engine compile --model alexnet --layer conv3 --tile 0 --out t.s2df
@@ -170,6 +173,37 @@ fn serve_config_arg(
         serve = serve.with_slo(slo_ms * 1e-3);
     }
     Ok(serve)
+}
+
+/// The cluster-realism knobs: `--fleet SPEEDxCOUNT[@SIZE]+...` declares
+/// a heterogeneous fleet, `--fail MTBF:MTTR` injects seeded array
+/// failures and `--straggle P:FACTOR` seeded slowdowns. All three
+/// default to off, which keeps the cluster on the legacy
+/// bit-identical homogeneous path.
+fn fleet_chaos_args(
+    args: &Args,
+) -> Result<(s2engine::cluster::FleetSpec, s2engine::cluster::ChaosSpec)> {
+    use s2engine::cluster::{ChaosSpec, FleetSpec};
+    let fleet = match args.get("fleet") {
+        None => FleetSpec::uniform(),
+        Some(spec) => {
+            FleetSpec::from_spec(spec).map_err(|e| anyhow!("bad --fleet: {e}"))?
+        }
+    };
+    let mut chaos = ChaosSpec::OFF;
+    if let Some(spec) = args.get("fail") {
+        let (mtbf, mttr) =
+            ChaosSpec::parse_fail(spec).map_err(|e| anyhow!("bad --fail: {e}"))?;
+        chaos.mtbf = mtbf;
+        chaos.mttr = mttr;
+    }
+    if let Some(spec) = args.get("straggle") {
+        let (p, factor) = ChaosSpec::parse_straggle(spec)
+            .map_err(|e| anyhow!("bad --straggle: {e}"))?;
+        chaos.straggle_p = p;
+        chaos.straggle_factor = factor;
+    }
+    Ok((fleet, chaos))
 }
 
 fn sim_config(args: &Args) -> SimConfig {
@@ -337,6 +371,10 @@ fn cluster_cmd(args: &Args) -> Result<()> {
     let shard = ShardStrategy::from_tag(shard_tag).ok_or_else(|| {
         anyhow!("unknown shard strategy `{shard_tag}` (data|pipeline|tensor)")
     })?;
+    let (fleet, chaos) = fleet_chaos_args(args)?;
+    // a non-uniform --fleet pins the array count; --arrays still sets
+    // the autoscale ceiling and the uniform default
+    let arrays = fleet.arrays_or(arrays);
     let serve = serve_config_arg(args, cfg.seed, 4 * arrays)?;
     let cluster = ClusterConfig::new(arrays, shard);
     println!(
@@ -352,6 +390,18 @@ fn cluster_cmd(args: &Args) -> Result<()> {
         serve.batch,
         serve.overlap,
     );
+    if !fleet.is_uniform() {
+        println!("fleet: {}", fleet.spec());
+    }
+    if chaos.has_failures() {
+        println!("chaos: failures MTBF {} s, MTTR {} s", chaos.mtbf, chaos.mttr);
+    }
+    if chaos.has_stragglers() {
+        println!(
+            "chaos: stragglers p={} at {}x slowdown",
+            chaos.straggle_p, chaos.straggle_factor
+        );
+    }
     parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();
     // `--autoscale`: instead of serving on a fixed fleet, run the
@@ -366,7 +416,7 @@ fn cluster_cmd(args: &Args) -> Result<()> {
         let layers =
             s2engine::backend::layer_results_subset(backend.as_ref(), &model, subset, cfg.seed);
         let acfg = s2engine::serve::AutoscaleConfig::new(serve.slo, arrays);
-        let (trace, report) = s2engine::cluster::autoscale_backend(
+        let (trace, report) = s2engine::cluster::autoscale_fleet(
             &model.name,
             backend.tag(),
             shard,
@@ -374,17 +424,20 @@ fn cluster_cmd(args: &Args) -> Result<()> {
             &layers,
             &acfg,
             1,
+            &fleet,
+            &chaos,
         );
-        println!("{:<7} {:>7} {:>12} {:>8}", "epoch", "arrays", "p99 (ms)", "action");
+        println!("{:<7} {:>7} {:>12} {:>11}", "epoch", "arrays", "p99 (ms)", "action");
         for s in &trace.steps {
             use s2engine::serve::AutoscaleAction;
             let action = match s.action {
                 AutoscaleAction::Grow => "grow",
                 AutoscaleAction::Shrink => "shrink",
                 AutoscaleAction::Hold => "hold",
+                AutoscaleAction::AtCapacity => "at-capacity",
             };
             println!(
-                "{:<7} {:>7} {:>12.4} {:>8}",
+                "{:<7} {:>7} {:>12.4} {:>11}",
                 s.epoch,
                 s.arrays,
                 s.p99 * 1e3,
@@ -398,6 +451,21 @@ fn cluster_cmd(args: &Args) -> Result<()> {
             serve.slo * 1e3
         );
         report
+    } else if !fleet.is_uniform() || !chaos.is_off() {
+        // heterogeneous and/or chaotic runs go through the event-driven
+        // fleet engine; the homogeneous chaos-free default stays on the
+        // legacy coordinator path (bit-identical output)
+        let layers =
+            s2engine::backend::layer_results_subset(backend.as_ref(), &model, subset, cfg.seed);
+        s2engine::cluster::ClusterReport::assemble_fleet(
+            model.name.clone(),
+            backend.tag(),
+            cluster,
+            serve,
+            layers,
+            fleet,
+            chaos,
+        )
     } else {
         Coordinator::new(cfg)
             .simulate_model_cluster_with(backend.as_ref(), &model, subset, &serve, &cluster)
@@ -420,6 +488,18 @@ fn cluster_cmd(args: &Args) -> Result<()> {
     println!("link traffic         {:.3} MB", r.link_bytes() / 1e6);
     println!("link energy          {:.3} uJ", r.link_energy_pj() / 1e6);
     println!("scale-out efficiency {:.2} (1.00 = linear)", r.scaleout_efficiency());
+    if let Some(stats) = &r.schedule.chaos {
+        println!(
+            "chaos: {} epochs, {} failures / {} recoveries, {} retries, \
+             {:.4} array-s down, {} straggled epochs",
+            stats.epochs,
+            stats.failures,
+            stats.recoveries,
+            stats.retries,
+            stats.downtime,
+            stats.straggled_epochs
+        );
+    }
     println!("({} arrays in {:?})", r.schedule.lanes.len(), t0.elapsed());
     if let Some(path) = args.get("out").or_else(|| args.get("json")) {
         std::fs::write(path, format!("{}\n", r.to_json()))?;
@@ -597,8 +677,9 @@ fn grid_sweep(args: &Args) -> Result<()> {
     let mut t = TextTable::new(
         "Sweep results",
         &["model", "workload", "backend", "array", "fifo", "ratio", "CE",
-          "r16", "batch", "ovl", "N", "shard", "speedup", "onchip EE",
-          "area eff", "FB red.", "p99 (ms)", "img/s", "scale eff"],
+          "r16", "batch", "ovl", "N", "shard", "fleet", "speedup", "onchip EE",
+          "area eff", "FB red.", "p99 (ms)", "img/s", "scale eff", "retries",
+          "down (s)"],
     );
     for rec in res.records() {
         let j = &rec.job;
@@ -615,6 +696,7 @@ fn grid_sweep(args: &Args) -> Result<()> {
             format!("{:.2}", j.overlap),
             j.arrays.to_string(),
             j.shard.tag().to_string(),
+            j.fleet.spec(),
             fx(rec.speedup),
             fx(rec.onchip_ee),
             fx(rec.area_eff),
@@ -633,6 +715,19 @@ fn grid_sweep(args: &Args) -> Result<()> {
             },
             if rec.has_cluster_metrics() {
                 format!("{:.2}", rec.scaleout_eff)
+            } else {
+                "n/a".into()
+            },
+            // chaos counters exist only on fleet-engine runs (and lines
+            // recovered from pre-chaos stores parse them as zeros) —
+            // same n/a contract as the serving/cluster metrics above
+            if rec.has_chaos_metrics() {
+                format!("{:.0}", rec.chaos_retries)
+            } else {
+                "n/a".into()
+            },
+            if rec.has_chaos_metrics() {
+                format!("{:.4}", rec.chaos_downtime)
             } else {
                 "n/a".into()
             },

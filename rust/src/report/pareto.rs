@@ -71,6 +71,11 @@ struct Point {
     on_frontier: bool,
     /// Meets the study's SLO target (naive's best p99).
     meets_slo: bool,
+    /// Chaos-engine retry count — `None` when the record carries no
+    /// chaos metrics (the study's own points are chaos-free, and lines
+    /// resumed from pre-chaos stores parse the counters as zeros), in
+    /// which case the table renders `n/a` rather than a fake zero.
+    chaos_retries: Option<f64>,
 }
 
 /// Sweep the grid and score every point. Returns the SLO target and
@@ -119,7 +124,7 @@ fn survey(
     };
     let mut points = Vec::new();
     for &b in backends {
-        let raw: Vec<(usize, f64, f64, f64)> = ARRAYS
+        let raw: Vec<(usize, f64, f64, f64, Option<f64>)> = ARRAYS
             .iter()
             .map(|&n| {
                 let rec = res.get(&job(b, n));
@@ -128,11 +133,12 @@ fn survey(
                     rec.cluster_p99_latency,
                     n as f64 * rec.cluster_makespan,
                     link_pj(rec.link_bytes),
+                    rec.has_chaos_metrics().then_some(rec.chaos_retries),
                 )
             })
             .collect();
-        for &(n, p99, cost, link) in &raw {
-            let dominated = raw.iter().any(|&(m, q, c, _)| {
+        for &(n, p99, cost, link, chaos_retries) in &raw {
+            let dominated = raw.iter().any(|&(m, q, c, _, _)| {
                 m != n && q <= p99 && c <= cost && (q < p99 || c < cost)
             });
             points.push(Point {
@@ -143,6 +149,7 @@ fn survey(
                 link_pj: link,
                 on_frontier: !dominated,
                 meets_slo: p99 <= target,
+                chaos_retries,
             });
         }
     }
@@ -171,7 +178,7 @@ pub fn pareto_in(
         ),
         &[
             "backend", "arrays", "p99 (ms)", "cost (array*ms)", "link (pJ)",
-            "frontier", "meets slo",
+            "frontier", "meets slo", "retries",
         ],
     );
     for p in &points {
@@ -183,6 +190,12 @@ pub fn pareto_in(
             format!("{:.1}", p.link_pj),
             if p.on_frontier { "*".to_string() } else { String::new() },
             if p.meets_slo { "yes".to_string() } else { String::new() },
+            // chaos-free points (and pre-chaos store lines) carry no
+            // chaos metrics — n/a, never a fabricated zero
+            match p.chaos_retries {
+                Some(r) => format!("{r:.0}"),
+                None => "n/a".into(),
+            },
         ]);
     }
     let mut out = t.render();
@@ -266,6 +279,9 @@ mod tests {
             // data-parallel replication moves no feature bytes
             for &b in &PARETO_BACKENDS {
                 assert_eq!(at(b, n).link_pj, 0.0);
+                // the study is chaos-free: no point fabricates chaos
+                // counters
+                assert_eq!(at(b, n).chaos_retries, None);
             }
         }
         // every backend meets the naive-derived target somewhere, and
@@ -298,6 +314,8 @@ mod tests {
         }
         assert!(first.contains('*'), "no frontier points marked:\n{first}");
         assert!(first.contains("SLO target"), "no target line:\n{first}");
+        // the chaos-free study renders n/a retries, not fake zeros
+        assert!(first.contains("n/a"), "chaos column not n/a:\n{first}");
         // a warm store reuses every point and renders byte-identically
         let second = pareto_in(effort, seed, &PARETO_BACKENDS, &mut store);
         assert_eq!(first, second);

@@ -1,0 +1,223 @@
+//! Shared discrete-event core for the serving and cluster simulators.
+//!
+//! Both sides of the repo walk ordered timelines of timestamped events:
+//! the traffic engine drains sorted request arrivals into admission
+//! windows ([`crate::serve::traffic::windows`]), and the cluster chaos
+//! engine ([`crate::cluster::event`]) merges per-array failure/recovery
+//! transitions into scheduling epochs. [`EventQueue`] is the one
+//! deterministic priority queue both are built on: events pop in
+//! nondecreasing time order, and *ties break by insertion order* (a
+//! monotone sequence number), so a simulation's event order — and hence
+//! its output — is a pure function of what was pushed, never of heap
+//! internals or thread interleaving.
+//!
+//! [`exp_interval`] is the shared exponential-interval draw every
+//! stochastic timeline in the repo uses (arrival gaps, MMPP residence,
+//! failure/repair times): the inverse-CDF form `−ln(1 − u)/rate` on the
+//! seeded [`crate::util::rng::Rng`], bit-identical to the draws the
+//! traffic generators historically inlined.
+
+use crate::util::rng::Rng;
+
+/// One queued event: fire time, insertion sequence, payload.
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    item: T,
+}
+
+/// Deterministic min-time event queue. Ordering is total even over NaN
+/// times (`f64::total_cmp`), and equal times pop in insertion (FIFO)
+/// order, so simulations replaying the same pushes observe the same
+/// event sequence bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct EventQueue<T> {
+    // binary min-heap on (time, seq), hand-rolled so the ordering is
+    // explicit (std's BinaryHeap would need an Ord wrapper and a
+    // Reverse, with the tie-break buried in trait plumbing)
+    heap: Vec<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue {
+            heap: Vec::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    fn before(a: &Entry<T>, b: &Entry<T>) -> bool {
+        match a.time.total_cmp(&b.time) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => a.seq < b.seq,
+        }
+    }
+
+    /// Schedule `item` to fire at `time`.
+    pub fn push(&mut self, time: f64, item: T) {
+        let entry = Entry {
+            time,
+            seq: self.seq,
+            item,
+        };
+        self.seq += 1;
+        self.heap.push(entry);
+        // sift up
+        let mut i = self.heap.len() - 1;
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::before(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Fire time of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.first().map(|e| e.time)
+    }
+
+    /// Pop the earliest event (FIFO among equal times).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let out = self.heap.pop().expect("non-empty heap pops");
+        // sift down
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && Self::before(&self.heap[l], &self.heap[best]) {
+                best = l;
+            }
+            if r < self.heap.len() && Self::before(&self.heap[r], &self.heap[best]) {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.heap.swap(i, best);
+            i = best;
+        }
+        Some((out.time, out.item))
+    }
+
+    /// Drain every event in time order.
+    pub fn drain(&mut self) -> Vec<(f64, T)> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+/// Exponential interval at `rate` events/s by inverse CDF:
+/// `−ln(1 − u)/rate`, `u ∈ [0, 1)` from the seeded generator. This is
+/// the exact expression the Poisson/MMPP/diurnal arrival generators
+/// always used, factored here so the cluster failure/repair streams
+/// share it bit-for-bit. A non-positive or non-finite `rate` yields
+/// `+∞` (the event never fires).
+#[inline]
+pub fn exp_interval(rng: &mut Rng, rate: f64) -> f64 {
+    if !(rate > 0.0) || !rate.is_finite() {
+        return f64::INFINITY;
+    }
+    -(1.0 - rng.gen_f64()).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a1");
+        q.push(2.0, "b");
+        q.push(1.0, "a2");
+        q.push(1.0, "a3");
+        let order: Vec<&str> = q.drain().into_iter().map(|(_, x)| x).collect();
+        assert_eq!(order, vec!["a1", "a2", "a3", "b", "c"]);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(5.0, 5);
+        q.push(1.0, 1);
+        assert_eq!(q.pop(), Some((1.0, 1)));
+        q.push(0.5, 0);
+        q.push(2.0, 2);
+        assert_eq!(q.pop(), Some((0.5, 0)));
+        assert_eq!(q.pop(), Some((2.0, 2)));
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert_eq!(q.pop(), Some((5.0, 5)));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn total_order_handles_infinities() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, "inf");
+        q.push(0.0, "zero");
+        q.push(f64::NEG_INFINITY, "ninf");
+        let order: Vec<&str> = q.drain().into_iter().map(|(_, x)| x).collect();
+        assert_eq!(order, vec!["ninf", "zero", "inf"]);
+    }
+
+    #[test]
+    fn sorted_timeline_round_trips_identically() {
+        // the traffic engine's use: a sorted arrival timeline drained
+        // through the queue is the same timeline, bit-for-bit
+        let times: Vec<f64> = (0..100).map(|i| (i / 3) as f64 * 0.25).collect();
+        let mut q = EventQueue::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, i);
+        }
+        let drained = q.drain();
+        for (i, (t, id)) in drained.iter().enumerate() {
+            assert_eq!(*id, i, "equal times keep insertion order");
+            assert_eq!(t.to_bits(), times[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn exp_interval_matches_inline_form_bitwise() {
+        let mut a = Rng::seed_from_u64(99);
+        let mut b = Rng::seed_from_u64(99);
+        for &rate in &[0.5, 1.0, 1000.0] {
+            let x = exp_interval(&mut a, rate);
+            let y = -(1.0 - b.gen_f64()).ln() / rate;
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let mut r = Rng::seed_from_u64(1);
+        assert_eq!(exp_interval(&mut r, 0.0), f64::INFINITY);
+        assert_eq!(exp_interval(&mut r, f64::INFINITY), f64::INFINITY);
+    }
+}

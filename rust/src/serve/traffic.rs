@@ -55,6 +55,7 @@
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::dag::LayerDag;
+use super::engine::exp_interval;
 use super::fastpath::{self, SchedPolicy, ScheduleSummary};
 use super::workload::Arrivals;
 use crate::util::rng::Rng;
@@ -96,7 +97,11 @@ pub fn register_trace(times: Vec<f64>) -> Result<TraceId, String> {
     if times.windows(2).any(|w| w[0] > w[1]) {
         return Err("trace arrivals must be sorted ascending".into());
     }
-    let mut table = trace_table().lock().unwrap();
+    // recover from a poisoned lock like the tile/wave memo caches do: a
+    // panicking sweep worker must not cascade panics through every
+    // unrelated run that later touches the registry (the table itself
+    // is always left structurally valid — push/get only)
+    let mut table = trace_table().lock().unwrap_or_else(|e| e.into_inner());
     table.push(Arc::new(times));
     Ok(TraceId(table.len() - 1))
 }
@@ -122,7 +127,11 @@ pub fn load_trace(path: &str) -> Result<TraceId, String> {
 
 /// The registered timeline behind a [`TraceId`].
 pub fn trace_times(id: TraceId) -> Option<Arc<Vec<f64>>> {
-    trace_table().lock().unwrap().get(id.0).cloned()
+    trace_table()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(id.0)
+        .cloned()
 }
 
 /// A stochastic (or replayed) request-arrival process. Every variant is
@@ -281,6 +290,10 @@ impl ArrivalProcess {
                 let mut times = Vec::with_capacity(requests);
                 times.push(0.0);
                 for _ in 1..requests {
+                    // historical scaled form `−mean_gap·ln(1−u)` — NOT
+                    // `engine::exp_interval`'s `−ln(1−u)/rate`: the two
+                    // differ in the last ulp and this timeline's bit
+                    // pattern is locked by stored sweep metrics
                     t += -mean_gap * (1.0 - rng.gen_f64()).ln();
                     times.push(t);
                 }
@@ -301,12 +314,12 @@ impl ArrivalProcess {
                 let lam = [rate * (2.0 - burst), rate * burst];
                 let mut t = 0.0f64;
                 let mut state = 1usize; // start in the burst state
-                let mut next_switch = -(1.0 - rng.gen_f64()).ln() / switch;
+                let mut next_switch = exp_interval(&mut rng, switch);
                 let mut times = Vec::with_capacity(requests);
                 times.push(0.0);
                 for _ in 1..requests {
                     loop {
-                        let gap = -(1.0 - rng.gen_f64()).ln() / lam[state];
+                        let gap = exp_interval(&mut rng, lam[state]);
                         if t + gap <= next_switch {
                             t += gap;
                             break;
@@ -315,7 +328,7 @@ impl ArrivalProcess {
                         // state, redraw both the residence and the gap
                         t = next_switch;
                         state = 1 - state;
-                        next_switch = t + -(1.0 - rng.gen_f64()).ln() / switch;
+                        next_switch = t + exp_interval(&mut rng, switch);
                     }
                     times.push(t);
                 }
@@ -340,7 +353,7 @@ impl ArrivalProcess {
                     loop {
                         let lam = rate * DIURNAL_PROFILE[seg % DIURNAL_PROFILE.len()];
                         let seg_end = (seg + 1) as f64 * seg_len;
-                        let gap = -(1.0 - rng.gen_f64()).ln() / lam;
+                        let gap = exp_interval(&mut rng, lam);
                         if t + gap <= seg_end {
                             t += gap;
                             break;
@@ -458,6 +471,12 @@ pub enum AutoscaleAction {
     Grow,
     Shrink,
     Hold,
+    /// Terminal: the SLO is still violated at the capacity ceiling.
+    /// Growing is impossible and shrinking can only worsen p99, so the
+    /// loop halts here instead of spending its remaining epochs
+    /// re-observing an unreachable target (the trace still counts as
+    /// converged — the steady state is real, just out of budget).
+    AtCapacity,
 }
 
 /// One observed epoch: the array count it ran at, the p99 it saw, and
@@ -507,7 +526,17 @@ pub fn autoscale(
         let p99 = p99_at(arrays);
         let action = if p99 > cfg.slo && arrays < max {
             AutoscaleAction::Grow
-        } else if arrays > min && p99_at(arrays - 1) <= cfg.slo * cfg.headroom {
+        } else if p99 > cfg.slo {
+            // SLO unreachable at the ceiling: terminal, never a shrink
+            // peek (which could only observe a worse p99 anyway)
+            AutoscaleAction::AtCapacity
+        } else if arrays >= 2
+            && arrays > min
+            && p99_at(arrays - 1) <= cfg.slo * cfg.headroom
+        {
+            // `arrays >= 2` guards the peek-ahead explicitly: the
+            // `min >= 1` clamp already implies it, but a 0-array peek
+            // must stay impossible even if the floor logic changes
             AutoscaleAction::Shrink
         } else {
             AutoscaleAction::Hold
@@ -521,7 +550,7 @@ pub fn autoscale(
         match action {
             AutoscaleAction::Grow => arrays += 1,
             AutoscaleAction::Shrink => arrays -= 1,
-            AutoscaleAction::Hold => {
+            AutoscaleAction::Hold | AutoscaleAction::AtCapacity => {
                 converged = true;
                 break;
             }
@@ -752,5 +781,51 @@ mod tests {
         let trace = autoscale(&cfg, 1, p99);
         assert!(trace.converged, "hold at max capacity, SLO unmet");
         assert_eq!(trace.final_arrays, 4);
+        // the unreachable-SLO ceiling is an explicit terminal action:
+        // three grows, then AtCapacity on the 4th epoch — never a loop
+        // to the epoch budget, never a shrink peek
+        assert_eq!(trace.steps.len(), 4);
+        assert_eq!(trace.steps.last().unwrap().action, AutoscaleAction::AtCapacity);
+        assert!(trace.steps[..3]
+            .iter()
+            .all(|s| s.action == AutoscaleAction::Grow));
+    }
+
+    #[test]
+    fn autoscale_never_peeks_a_zero_array_fleet() {
+        // start_arrays=1 with an SLO already met: the shrink peek-ahead
+        // would look at N−1 = 0 — the guard must keep that unreachable
+        // even with a (mis)configured min_arrays of 0
+        let p99 = |arrays: usize| {
+            assert!(arrays >= 1, "autoscale peeked a 0-array fleet");
+            0.01
+        };
+        let cfg = AutoscaleConfig {
+            min_arrays: 0,
+            ..AutoscaleConfig::new(1.0, 4)
+        };
+        let trace = autoscale(&cfg, 1, p99);
+        assert!(trace.converged);
+        assert_eq!(trace.final_arrays, 1);
+        assert_eq!(trace.steps.len(), 1);
+        assert_eq!(trace.steps[0].action, AutoscaleAction::Hold);
+    }
+
+    #[test]
+    fn trace_registry_survives_mutex_poisoning() {
+        let before = register_trace(vec![0.0, 1.0]).unwrap();
+        // a worker panicking while holding the registry lock poisons
+        // the mutex; the registry must recover, not cascade the panic
+        // into every unrelated sweep that later touches a trace
+        let _ = std::thread::spawn(|| {
+            let _guard = trace_table().lock().unwrap_or_else(|e| e.into_inner());
+            panic!("poison the trace registry");
+        })
+        .join();
+        let after = register_trace(vec![0.0, 2.0]).unwrap();
+        assert_eq!(trace_times(before).unwrap().as_slice(), &[0.0, 1.0]);
+        assert_eq!(trace_times(after).unwrap().as_slice(), &[0.0, 2.0]);
+        let p = ArrivalProcess::Trace(after);
+        assert_eq!(p.generate(2, 0.0, 1).times, vec![0.0, 2.0]);
     }
 }

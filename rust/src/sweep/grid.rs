@@ -31,7 +31,7 @@
 
 use super::plan::{resolve_model, Job, Plan};
 use crate::backend::BackendKind;
-use crate::cluster::ShardStrategy;
+use crate::cluster::{ChaosSpec, FleetSpec, ShardStrategy};
 use crate::config::{ArrayConfig, FifoDepths};
 use crate::models::FeatureSubset;
 use crate::report::Effort;
@@ -84,6 +84,16 @@ pub struct Grid {
     /// SLO latency budgets in **seconds** (`f64::INFINITY` = classic
     /// fixed batching). Specs take milliseconds and convert.
     pub slos: Vec<f64>,
+    /// Fleet descriptions ([`crate::cluster::FleetSpec`]); the uniform
+    /// sentinel = the classic homogeneous cluster. Spec groups use `+`
+    /// (`1x2+0.5x2@0.5`), so values survive the comma-splitting parser.
+    pub fleets: Vec<FleetSpec>,
+    /// Failure injection `(mtbf, mttr)` pairs in seconds;
+    /// `(∞, 0)` = the failure-free classic point (`off`).
+    pub fails: Vec<(f64, f64)>,
+    /// Straggler injection `(p, factor)` pairs;
+    /// `(0, 1)` = the straggler-free classic point (`off`).
+    pub straggles: Vec<(f64, f64)>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -108,6 +118,9 @@ impl Grid {
             requests: vec![0],
             arrivals: vec![ArrivalProcess::Uniform],
             slos: vec![f64::INFINITY],
+            fleets: vec![FleetSpec::uniform()],
+            fails: vec![(f64::INFINITY, 0.0)],
+            straggles: vec![(0.0, 1.0)],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -196,6 +209,25 @@ impl Grid {
         self
     }
 
+    pub fn fleets(mut self, fleets: &[FleetSpec]) -> Grid {
+        self.fleets = fleets.to_vec();
+        self
+    }
+
+    /// Failure `(mtbf, mttr)` pairs in **seconds**; `(∞, 0)` is the
+    /// failure-free classic point.
+    pub fn fails(mut self, fails: &[(f64, f64)]) -> Grid {
+        self.fails = fails.to_vec();
+        self
+    }
+
+    /// Straggler `(p, factor)` pairs; `(0, 1)` is the straggler-free
+    /// classic point.
+    pub fn straggles(mut self, straggles: &[(f64, f64)]) -> Grid {
+        self.straggles = straggles.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -226,11 +258,15 @@ impl Grid {
             * self.requests.len()
             * self.arrivals.len()
             * self.slos.len()
+            * self.fleets.len()
+            * self.fails.len()
+            * self.straggles.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
     /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
-    /// overlap, arrays, shard, backend, requests, arrival, slo.
+    /// overlap, arrays, shard, backend, requests, arrival, slo, fleet,
+    /// fail, straggle.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -282,13 +318,34 @@ impl Grid {
                                                                 .with_requests(req);
                                                             for &arrival in &self.arrivals {
                                                                 for &slo in &self.slos {
-                                                                    jobs.push(
-                                                                        job.clone()
-                                                                            .with_arrival(
-                                                                                arrival,
-                                                                            )
-                                                                            .with_slo(slo),
-                                                                    );
+                                                                    let job = job
+                                                                        .clone()
+                                                                        .with_arrival(arrival)
+                                                                        .with_slo(slo);
+                                                                    for fleet in &self.fleets {
+                                                                        for &(mtbf, mttr) in
+                                                                            &self.fails
+                                                                        {
+                                                                            for &(p, fac) in
+                                                                                &self.straggles
+                                                                            {
+                                                                                jobs.push(
+                                                                                    job.clone()
+                                                                                        .with_fleet(
+                                                                                            fleet
+                                                                                                .clone(),
+                                                                                        )
+                                                                                        .with_fail(
+                                                                                            mtbf,
+                                                                                            mttr,
+                                                                                        )
+                                                                                        .with_straggle(
+                                                                                            p, fac,
+                                                                                        ),
+                                                                                );
+                                                                            }
+                                                                        }
+                                                                    }
                                                                 }
                                                             }
                                                         }
@@ -330,6 +387,10 @@ impl Grid {
     /// | `arrival`   | `uniform`, `poisson:RATE`, `mmpp:RATE[:B[:S]]`,     |
     /// |             | `diurnal:RATE` (traces are CLI-only)                |
     /// | `slo`       | latency budgets in **ms** (> 0), or `inf`           |
+    /// | `fleet`     | `uniform`, or `+`-joined `SPEEDxCOUNT[@SIZE]` groups|
+    /// |             | (`1x2+0.5x2@0.5`; no commas inside one value)       |
+    /// | `fail`      | `MTBF:MTTR` seconds (per-array), or `off`           |
+    /// | `straggle`  | `P:FACTOR` (per-array-epoch), or `off`              |
     /// | `effort`    | `quick`, `default`, `full` (samples + stride)       |
     /// | `samples`   | tiles sampled per layer (overrides effort)          |
     /// | `stride`    | layer thinning stride (overrides effort)            |
@@ -562,6 +623,24 @@ impl Grid {
                             _ => Err(bad("slo", v)),
                         },
                     })
+                    .collect::<Result<_, _>>()?;
+            }
+            "fleet" | "fleets" => {
+                self.fleets = values
+                    .iter()
+                    .map(|v| FleetSpec::from_spec(v).map_err(|e| format!("bad fleet: {e}")))
+                    .collect::<Result<_, _>>()?;
+            }
+            "fail" | "fails" => {
+                self.fails = values
+                    .iter()
+                    .map(|v| ChaosSpec::parse_fail(v))
+                    .collect::<Result<_, _>>()?;
+            }
+            "straggle" | "straggles" => {
+                self.straggles = values
+                    .iter()
+                    .map(|v| ChaosSpec::parse_straggle(v))
                     .collect::<Result<_, _>>()?;
             }
             "effort" => {
@@ -914,6 +993,52 @@ mod tests {
             r#"{"models": ["s2net"],
                 "arrival": ["uniform", "poisson:800", "mmpp:800:1.8:16"],
                 "slo": ["inf", 20]}"#,
+        )
+        .unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
+    }
+
+    #[test]
+    fn chaos_axes_expand_innermost() {
+        let g = Grid::from_spec(
+            "models=s2net;fleet=uniform,1x2+0.5x2@0.5;fail=off,0.05:0.01;\
+             straggle=off,0.2:4",
+        )
+        .unwrap();
+        assert_eq!(g.fleets.len(), 2);
+        assert!(g.fleets[0].is_uniform());
+        assert_eq!(g.fleets[1].len(), 4);
+        assert_eq!(g.fails, vec![(f64::INFINITY, 0.0), (0.05, 0.01)]);
+        assert_eq!(g.straggles, vec![(0.0, 1.0), (0.2, 4.0)]);
+        assert_eq!(g.size(), 8);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 8);
+        // straggle innermost, then fail, then fleet
+        assert!(jobs[0].is_default_fleet() && jobs[0].is_default_fail());
+        assert!(jobs[0].is_default_straggle());
+        assert_eq!(jobs[1].chaos.straggle_p, 0.2);
+        assert_eq!(jobs[2].chaos.mtbf, 0.05);
+        assert!(!jobs[4].is_default_fleet());
+        // the default point keeps the historical (pre-chaos) key shape
+        assert!(!jobs[0].canonical().contains("|fl:"));
+        assert!(!jobs[0].canonical().contains("|fail:"));
+        assert!(!jobs[0].canonical().contains("|st:"));
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8, "chaos axes must distinguish keys");
+        // garbage is rejected, not defaulted
+        assert!(Grid::from_spec("fleet=fast").is_err());
+        assert!(Grid::from_spec("fail=0:1").is_err());
+        assert!(Grid::from_spec("fail=5").is_err());
+        assert!(Grid::from_spec("straggle=1.5:2").is_err());
+        assert!(Grid::from_spec("straggle=0.2:0.5").is_err());
+        // JSON grid form parses identically
+        let j = Json::parse(
+            r#"{"models": ["s2net"],
+                "fleet": ["uniform", "1x2+0.5x2@0.5"],
+                "fail": ["off", "0.05:0.01"],
+                "straggle": ["off", "0.2:4"]}"#,
         )
         .unwrap();
         assert_eq!(Grid::from_json(&j).unwrap(), g);

@@ -13,7 +13,7 @@
 //! the ordered job list a [`super::Runner`] executes.
 
 use crate::backend::BackendKind;
-use crate::cluster::ShardStrategy;
+use crate::cluster::{ChaosSpec, FleetSpec, ShardStrategy};
 use crate::config::ArrayConfig;
 use crate::models::{zoo, FeatureSubset, Model};
 use crate::report::Effort;
@@ -127,6 +127,14 @@ pub struct Job {
     /// batching ([`crate::serve::traffic::windows`]); `∞` (the default)
     /// is classic fixed batching.
     pub slo: f64,
+    /// Heterogeneous fleet description ([`crate::cluster::FleetSpec`]);
+    /// the uniform sentinel (the default) is the classic homogeneous
+    /// cluster. A non-uniform fleet pins the effective array count to
+    /// its own length, overriding `arrays`.
+    pub fleet: FleetSpec,
+    /// Failure/straggler injection ([`crate::cluster::ChaosSpec`]);
+    /// [`ChaosSpec::OFF`] (the default) is the classic perfect fleet.
+    pub chaos: ChaosSpec,
 }
 
 impl Job {
@@ -156,6 +164,8 @@ impl Job {
             requests: 0,
             arrival: ArrivalProcess::Uniform,
             slo: f64::INFINITY,
+            fleet: FleetSpec::uniform(),
+            chaos: ChaosSpec::OFF,
         }
     }
 
@@ -189,6 +199,8 @@ impl Job {
             requests: 0,
             arrival: ArrivalProcess::Uniform,
             slo: f64::INFINITY,
+            fleet: FleetSpec::uniform(),
+            chaos: ChaosSpec::OFF,
         }
     }
 
@@ -245,6 +257,26 @@ impl Job {
         self
     }
 
+    /// The uniform sentinel restores the classic homogeneous cluster.
+    pub fn with_fleet(mut self, fleet: FleetSpec) -> Job {
+        self.fleet = fleet;
+        self
+    }
+
+    /// `(f64::INFINITY, 0.0)` restores the failure-free default.
+    pub fn with_fail(mut self, mtbf: f64, mttr: f64) -> Job {
+        self.chaos.mtbf = mtbf;
+        self.chaos.mttr = mttr;
+        self
+    }
+
+    /// `(0.0, 1.0)` restores the straggler-free default.
+    pub fn with_straggle(mut self, p: f64, factor: f64) -> Job {
+        self.chaos.straggle_p = p;
+        self.chaos.straggle_factor = factor;
+        self
+    }
+
     /// Is this job a plain per-layer evaluation point (the pre-serving
     /// default)? Such jobs keep their historical canonical form — and
     /// therefore their [`Job::key`] — so stores written before the
@@ -291,6 +323,25 @@ impl Job {
     /// existed still resume.
     pub fn is_default_slo(&self) -> bool {
         !self.slo.is_finite()
+    }
+
+    /// Is this job a homogeneous-fleet point (the pre-chaos default)?
+    /// Such jobs keep their historical canonical form — and therefore
+    /// their [`Job::key`] — so stores written before the `fleet` axis
+    /// existed still resume.
+    pub fn is_default_fleet(&self) -> bool {
+        self.fleet.is_uniform()
+    }
+
+    /// Is this job failure-free (the pre-chaos default)? Elision is on
+    /// the exact `(∞, 0)` pair the grids and CLI emit for `off`.
+    pub fn is_default_fail(&self) -> bool {
+        self.chaos.mtbf == f64::INFINITY && self.chaos.mttr == 0.0
+    }
+
+    /// Is this job straggler-free (the pre-chaos default)?
+    pub fn is_default_straggle(&self) -> bool {
+        self.chaos.straggle_p == 0.0 && self.chaos.straggle_factor == 1.0
     }
 
     /// The cluster configuration this job implies.
@@ -394,6 +445,29 @@ impl Job {
         if !self.is_default_slo() {
             canon = format!("{canon}|slo:{:016x}", self.slo.to_bits());
         }
+        // chaos suffixes compose last, in a fixed order: fleet, fail,
+        // straggle. `|fl:` / `|fail:` / `|st:` are prefix-distinct from
+        // every earlier suffix (and from each other: 'l' vs 'a' after
+        // `|f`, 't' vs 'h'/'l' after `|s`), so every elision combination
+        // remains injective. Fleet speeds/sizes and chaos parameters are
+        // keyed as exact bit patterns ([`FleetSpec::canonical`]).
+        if !self.is_default_fleet() {
+            canon = format!("{canon}|fl:{}", self.fleet.canonical());
+        }
+        if !self.is_default_fail() {
+            canon = format!(
+                "{canon}|fail:{:016x}:{:016x}",
+                self.chaos.mtbf.to_bits(),
+                self.chaos.mttr.to_bits()
+            );
+        }
+        if !self.is_default_straggle() {
+            canon = format!(
+                "{canon}|st:{:016x}:{:016x}",
+                self.chaos.straggle_p.to_bits(),
+                self.chaos.straggle_factor.to_bits()
+            );
+        }
         canon
     }
 
@@ -491,6 +565,25 @@ impl Job {
         if !self.is_default_slo() {
             o.insert("slo".into(), Json::Num(self.slo));
         }
+        // chaos fields likewise elided at their defaults (pre-chaos
+        // stores carry none of them). The fleet stores its spec string
+        // (shortest-roundtrip floats, parsed back exactly); fail/straggle
+        // parameters are plain numbers — `mtbf` is always finite here
+        // because the infinite default is elided.
+        if !self.is_default_fleet() {
+            o.insert("fleet".into(), Json::Str(self.fleet.spec()));
+        }
+        if !self.is_default_fail() {
+            o.insert("fail_mtbf".into(), Json::Num(self.chaos.mtbf));
+            o.insert("fail_mttr".into(), Json::Num(self.chaos.mttr));
+        }
+        if !self.is_default_straggle() {
+            o.insert("straggle_p".into(), Json::Num(self.chaos.straggle_p));
+            o.insert(
+                "straggle_factor".into(),
+                Json::Num(self.chaos.straggle_factor),
+            );
+        }
         Json::Obj(o)
     }
 
@@ -581,6 +674,35 @@ impl Job {
                     s
                 }
                 None => f64::INFINITY,
+            },
+            fleet: match j.get("fleet") {
+                Some(Json::Str(spec)) => {
+                    FleetSpec::from_spec(spec).map_err(|e| format!("bad fleet: {e}"))?
+                }
+                Some(_) => return Err("non-string field `fleet`".into()),
+                None => FleetSpec::uniform(),
+            },
+            chaos: {
+                let mut chaos = ChaosSpec::OFF;
+                if let Some(v) = j.get("fail_mtbf") {
+                    let mtbf = v.as_f64().ok_or("non-numeric field `fail_mtbf`")?;
+                    let mttr = j.f64_field("fail_mttr")?;
+                    if !(mtbf.is_finite() && mtbf > 0.0) || !(mttr.is_finite() && mttr >= 0.0) {
+                        return Err(format!("bad fail spec: mtbf {mtbf}, mttr {mttr}"));
+                    }
+                    chaos.mtbf = mtbf;
+                    chaos.mttr = mttr;
+                }
+                if let Some(v) = j.get("straggle_p") {
+                    let p = v.as_f64().ok_or("non-numeric field `straggle_p`")?;
+                    let f = j.f64_field("straggle_factor")?;
+                    if !(0.0..=1.0).contains(&p) || !(f.is_finite() && f >= 1.0) {
+                        return Err(format!("bad straggle spec: p {p}, factor {f}"));
+                    }
+                    chaos.straggle_p = p;
+                    chaos.straggle_factor = f;
+                }
+                chaos
             },
         })
     }
@@ -897,6 +1019,112 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq.len(), keys.len(), "traffic axes must distinguish keys");
+    }
+
+    #[test]
+    fn default_chaos_fields_keep_historical_keys() {
+        // Pre-chaos stores must keep resuming: a uniform-fleet,
+        // failure-free, straggler-free job keys exactly as it did before
+        // the fleet/fail/straggle axes existed.
+        let j = job();
+        assert!(j.is_default_fleet() && j.is_default_fail() && j.is_default_straggle());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        assert_eq!(j.clone().with_fleet(FleetSpec::uniform()).key(), j.key());
+        assert_eq!(j.clone().with_fail(f64::INFINITY, 0.0).key(), j.key());
+        assert_eq!(j.clone().with_straggle(0.0, 1.0).key(), j.key());
+        // non-default chaos axes extend — and change — the key, with
+        // fleet speeds/sizes keyed as exact bit patterns
+        let f = j
+            .clone()
+            .with_fleet(FleetSpec::from_spec("1x2+0.5x2").unwrap());
+        assert!(f.canonical().ends_with(
+            "|fl:3ff0000000000000x2@3ff0000000000000\
+             +3fe0000000000000x2@3ff0000000000000"
+        ));
+        assert_ne!(f.key(), j.key());
+        let fail = j.clone().with_fail(0.05, 0.01);
+        assert!(fail
+            .canonical()
+            .ends_with("|fail:3fa999999999999a:3f847ae147ae147b"));
+        assert_ne!(fail.key(), j.key());
+        let st = j.clone().with_straggle(0.2, 4.0);
+        assert!(st
+            .canonical()
+            .ends_with("|st:3fc999999999999a:4010000000000000"));
+        assert_ne!(st.key(), j.key());
+        // the chaos suffixes compose last, after every earlier axis, in
+        // a fixed injective order: fleet, fail, straggle
+        let full = j
+            .clone()
+            .with_arrays(2)
+            .with_slo(0.02)
+            .with_fleet(FleetSpec::from_spec("2x2").unwrap())
+            .with_fail(0.05, 0.01)
+            .with_straggle(0.2, 4.0);
+        assert!(full.canonical().ends_with(
+            "|a2|sh:data|slo:3f947ae147ae147b\
+             |fl:4000000000000000x2@3ff0000000000000\
+             |fail:3fa999999999999a:3f847ae147ae147b\
+             |st:3fc999999999999a:4010000000000000"
+        ));
+        let keys = [
+            j.key(),
+            f.key(),
+            fail.key(),
+            st.key(),
+            full.key(),
+            j.clone().with_fail(0.05, 0.02).key(),
+            j.clone().with_straggle(0.3, 4.0).key(),
+        ];
+        let mut uniq = keys.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "chaos axes must distinguish keys");
+    }
+
+    #[test]
+    fn chaos_job_json_roundtrip_and_legacy_parse() {
+        let j = job()
+            .with_fleet(FleetSpec::from_spec("1x2+0.5x1@0.25").unwrap())
+            .with_fail(0.05, 0.01)
+            .with_straggle(0.2, 4.0);
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(j.key(), back.key());
+        // a pre-chaos line (none of the new keys) parses to the defaults
+        let legacy = job().with_batch(2).to_json().to_string();
+        assert!(
+            !legacy.contains("fleet")
+                && !legacy.contains("fail_")
+                && !legacy.contains("straggle_")
+        );
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert!(parsed.is_default_fleet());
+        assert!(parsed.is_default_fail() && parsed.is_default_straggle());
+        assert_eq!(parsed.chaos, ChaosSpec::OFF);
+        // garbage chaos fields are rejected, not silently defaulted
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("fleet".into(), Json::Str("warp9".into()));
+        }
+        assert!(Job::from_json(&bad).is_err());
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("fail_mtbf".into(), Json::Num(-1.0));
+            map.insert("fail_mttr".into(), Json::Num(0.0));
+        }
+        assert!(Job::from_json(&bad).is_err());
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("straggle_p".into(), Json::Num(1.5));
+            map.insert("straggle_factor".into(), Json::Num(2.0));
+        }
+        assert!(Job::from_json(&bad).is_err());
     }
 
     #[test]

@@ -125,12 +125,14 @@ pub fn execute(job: &Job, inner_workers: usize) -> SweepRecord {
         ),
     };
     let result = ModelResult::new(&model, &cfg, layers.clone());
-    let cluster = crate::cluster::ClusterReport::assemble_backend(
+    let cluster = crate::cluster::ClusterReport::assemble_fleet(
         model.name.clone(),
         backend.tag(),
         job.cluster_config(),
         job.serve_config(),
         layers.clone(),
+        job.fleet.clone(),
+        job.chaos,
     );
     let serve = crate::serve::ServeReport::assemble_backend(
         model.name.clone(),

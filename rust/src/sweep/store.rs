@@ -79,6 +79,17 @@ pub struct SweepRecord {
     /// provisioned-cost numerator `report pareto` plots; 0 on lines
     /// recovered from stores written before this metric existed.
     pub cluster_makespan: f64,
+    /// Chaos-engine counters from the job's fleet run (zero whenever the
+    /// job took the legacy uniform/chaos-free path, and on lines
+    /// recovered from pre-chaos stores): epochs the engine stepped
+    /// through ...
+    pub chaos_epochs: f64,
+    /// ... in-flight requests restarted by a failure ...
+    pub chaos_retries: f64,
+    /// ... array failures injected ...
+    pub chaos_failures: f64,
+    /// ... and summed per-array downtime (array-seconds).
+    pub chaos_downtime: f64,
 }
 
 impl SweepRecord {
@@ -91,7 +102,12 @@ impl SweepRecord {
         cluster: &crate::cluster::ClusterReport,
     ) -> SweepRecord {
         let energy = r.s2_energy();
+        let chaos = cluster.schedule.chaos;
         SweepRecord {
+            chaos_epochs: chaos.map_or(0.0, |s| s.epochs as f64),
+            chaos_retries: chaos.map_or(0.0, |s| s.retries as f64),
+            chaos_failures: chaos.map_or(0.0, |s| s.failures as f64),
+            chaos_downtime: chaos.map_or(0.0, |s| s.downtime),
             cluster_occupancy: cluster.mean_occupancy(),
             link_bytes: cluster.link_bytes(),
             cluster_p99_latency: cluster.latency.p99,
@@ -142,6 +158,17 @@ impl SweepRecord {
         self.scaleout_eff > 0.0
     }
 
+    /// Does this record carry chaos-engine metrics? The engine reports
+    /// at least one epoch on every run it owns (heterogeneous fleet or
+    /// chaos enabled), while the legacy path — and every line recovered
+    /// from a pre-chaos store — parses the counter as zero. Retries and
+    /// failures can legitimately be zero on a chaos run, so the epoch
+    /// count is the sentinel. Renderers must show `n/a`, not zeros, when
+    /// this is false.
+    pub fn has_chaos_metrics(&self) -> bool {
+        self.chaos_epochs > 0.0
+    }
+
     /// Reassemble the stored on-chip breakdown (Fig. 15 renders from
     /// this, via the same `onchip_total()` the live path uses).
     pub fn onchip_energy(&self) -> crate::energy::EnergyBreakdown {
@@ -184,6 +211,10 @@ impl SweepRecord {
         num("cluster_p99", self.cluster_p99_latency);
         num("scaleout", self.scaleout_eff);
         num("cluster_makespan", self.cluster_makespan);
+        num("chaos_epochs", self.chaos_epochs);
+        num("chaos_retries", self.chaos_retries);
+        num("chaos_failures", self.chaos_failures);
+        num("chaos_downtime", self.chaos_downtime);
         let mut o = BTreeMap::new();
         o.insert("key".into(), Json::Str(self.job.key_hex()));
         o.insert("job".into(), self.job.to_json());
@@ -224,6 +255,10 @@ impl SweepRecord {
             cluster_p99_latency: opt(m, "cluster_p99"),
             scaleout_eff: opt(m, "scaleout"),
             cluster_makespan: opt(m, "cluster_makespan"),
+            chaos_epochs: opt(m, "chaos_epochs"),
+            chaos_retries: opt(m, "chaos_retries"),
+            chaos_failures: opt(m, "chaos_failures"),
+            chaos_downtime: opt(m, "chaos_downtime"),
             job,
         })
     }
@@ -327,7 +362,12 @@ impl Store {
     /// concurrently; the line is written and flushed under a lock.
     pub fn append(&self, rec: &SweepRecord) -> std::io::Result<()> {
         if let Some(sink) = &self.sink {
-            let mut f = sink.lock().unwrap();
+            // Recover the file handle even if a worker panicked while
+            // holding the lock: every line is written whole and flushed,
+            // so the handle itself is never left mid-record, and losing
+            // the remaining appends over one worker's panic would turn a
+            // resumable sweep into a restart-from-scratch.
+            let mut f = sink.lock().unwrap_or_else(|e| e.into_inner());
             writeln!(f, "{}", rec.to_json_line())?;
             f.flush()?;
         }
@@ -384,6 +424,10 @@ mod tests {
             cluster_p99_latency: 3.1e-3,
             scaleout_eff: 0.93,
             cluster_makespan: 4.2e-3,
+            chaos_epochs: 3.0,
+            chaos_retries: 1.0,
+            chaos_failures: 2.0,
+            chaos_downtime: 1.7e-2,
         }
     }
 
@@ -409,6 +453,8 @@ mod tests {
             for k in [
                 "p50", "p95", "p99", "throughput", "occupancy", "cluster_occ",
                 "link_bytes", "cluster_p99", "scaleout", "cluster_makespan",
+                "chaos_epochs", "chaos_retries", "chaos_failures",
+                "chaos_downtime",
             ] {
                 m.remove(k);
             }
@@ -425,8 +471,10 @@ mod tests {
         assert_eq!(back.cluster_p99_latency, 0.0);
         assert_eq!(back.scaleout_eff, 0.0);
         assert_eq!(back.cluster_makespan, 0.0);
+        assert_eq!(back.chaos_epochs, 0.0);
         assert!(!back.has_serving_metrics());
         assert!(!back.has_cluster_metrics());
+        assert!(!back.has_chaos_metrics());
     }
 
     #[test]
@@ -490,6 +538,52 @@ mod tests {
         let back = SweepRecord::from_json_line(&rec.to_json_line()).unwrap();
         assert_eq!(back.job, rec.job);
         assert_eq!(back.job.key(), rec.job.key());
+    }
+
+    #[test]
+    fn golden_pre_chaos_line_parses_with_na_handling() {
+        // A literal JSONL line in the exact shape the pre-chaos store
+        // wrote (serving + cluster + traffic axes present, no
+        // fleet/fail/straggle job fields, no chaos_* metrics). The key
+        // is the independently computed FNV-1a of the historical
+        // canonical "alexnet|avg|8x8|4,4,4|r4|ce1|r16:0000000000000000|
+        // seed1|n2|t4|b4|ov:3fe0000000000000|a4|sh:data|arr:poisson:
+        // 4089000000000000|slo:3f947ae147ae147b" — the chaos axes must
+        // not perturb it, so pre-chaos stores keep resuming.
+        let line = r#"{"key": "013e001f187e2f4b", "job": {"arrays": 4, "arrival": "poisson:800", "batch": 4, "ce": true, "cols": 8, "fifo": [4, 4, 4], "model": "alexnet", "overlap": 0.5, "ratio": 4, "ratio16": 0, "rows": 8, "samples": 2, "seed": "1", "shard": "data", "slo": 0.02, "stride": 4, "workload": "avg"}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "cluster_makespan": 0.0042, "cluster_occ": 0.81, "cluster_p99": 0.0031, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "link_bytes": 2500000, "naive_wall": 0.0045, "occupancy": 0.87, "onchip_ee": 1.8, "p50": 0.0013, "p95": 0.0026, "p99": 0.0029, "s2_wall": 0.00125, "scaleout": 0.93, "speedup": 3.6, "throughput": 812.5, "total_ee": 2.9}}"#;
+        let rec = SweepRecord::from_json_line(line).unwrap();
+        // the job parses to the chaos defaults and keeps its key
+        assert!(rec.job.is_default_fleet());
+        assert!(rec.job.is_default_fail());
+        assert!(rec.job.is_default_straggle());
+        assert_eq!(rec.job.arrays, 4);
+        assert_eq!(rec.job.key_hex(), "013e001f187e2f4b");
+        // cluster metrics are real measurements; chaos metrics are not
+        assert!(rec.has_cluster_metrics());
+        assert!(!rec.has_chaos_metrics());
+        assert_eq!(rec.chaos_epochs, 0.0);
+        assert_eq!(rec.chaos_retries, 0.0);
+        // re-rendering keeps the job elision (no fleet/fail/straggle
+        // fields appear) and round-trips the identity
+        let rendered = rec.to_json_line();
+        assert!(!rendered.contains("\"fleet\""));
+        assert!(!rendered.contains("\"fail_mtbf\""));
+        assert!(!rendered.contains("\"straggle_p\""));
+        let back = SweepRecord::from_json_line(&rendered).unwrap();
+        assert_eq!(back.job, rec.job);
+        assert_eq!(back.job.key(), rec.job.key());
+        // a chaos job renders — and round-trips — its axes and counters
+        let mut chaos_rec = record(1, 2.0);
+        chaos_rec.job = chaos_rec
+            .job
+            .with_fleet(crate::cluster::FleetSpec::from_spec("1x2+0.5x2").unwrap())
+            .with_fail(0.05, 0.01);
+        let line = chaos_rec.to_json_line();
+        assert!(line.contains("\"fleet\":\"1x2+0.5x2\""));
+        assert!(line.contains("\"chaos_epochs\":3"));
+        let back = SweepRecord::from_json_line(&line).unwrap();
+        assert_eq!(back, chaos_rec);
+        assert!(back.has_chaos_metrics());
     }
 
     fn tmp(name: &str) -> PathBuf {

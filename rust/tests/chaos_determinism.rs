@@ -1,0 +1,228 @@
+//! Chaos-engine determinism and exactly-once acceptance suite.
+//!
+//! The cluster-realism engine (`cluster::event`) is only trustworthy if
+//! it is (a) invisible when off, (b) a pure function of its seed, and
+//! (c) honest about completion. This suite enforces:
+//!
+//! 1. **Off = legacy, bit for bit** — a uniform fleet with chaos off
+//!    routes through the untouched scheduler for every strategy: the
+//!    whole report (including its JSON rendering) is byte-identical.
+//! 2. **Seeded determinism** — the same seed reproduces byte-identical
+//!    chaos reports; a chaos sweep produces identical records across
+//!    worker counts and across a kill + resume.
+//! 3. **Exactly once, above the floor** — under failures every accepted
+//!    request completes exactly once and the makespan respects the
+//!    generalized (fastest-array / full-capacity) lower bound.
+
+use s2engine::backend::{layer_results_subset, BackendKind};
+use s2engine::cluster::{
+    ChaosSpec, ClusterConfig, ClusterReport, FleetSpec, ShardStrategy,
+};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::ServeConfig;
+use s2engine::sweep::{Grid, Runner, Store};
+
+fn layers(seed: u64) -> Vec<s2engine::backend::LayerResult> {
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(2)
+        .with_seed(seed);
+    let backend = BackendKind::S2.build(&cfg);
+    layer_results_subset(backend.as_ref(), &zoo::s2net(), FeatureSubset::Average, seed)
+}
+
+fn serve(requests: usize, seed: u64) -> ServeConfig {
+    ServeConfig::new(2, 0.5).with_requests(requests).with_seed(seed)
+}
+
+#[test]
+fn chaos_off_uniform_fleet_is_byte_identical_to_legacy() {
+    let layers = layers(0xc0de_cafe_0090);
+    for shard in ShardStrategy::ALL {
+        for arrays in [1usize, 2, 4] {
+            let legacy = ClusterReport::assemble_backend(
+                "s2net",
+                "s2",
+                ClusterConfig::new(arrays, shard),
+                serve(8, 11),
+                layers.clone(),
+            );
+            let fleet = ClusterReport::assemble_fleet(
+                "s2net",
+                "s2",
+                ClusterConfig::new(arrays, shard),
+                serve(8, 11),
+                layers.clone(),
+                FleetSpec::uniform(),
+                ChaosSpec::OFF,
+            );
+            assert_eq!(legacy.schedule, fleet.schedule, "{shard:?} n{arrays}");
+            assert_eq!(
+                legacy.to_json().to_string(),
+                fleet.to_json().to_string(),
+                "{shard:?} n{arrays}: JSON must be byte-identical"
+            );
+            assert!(fleet.schedule.chaos.is_none());
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_chaos_free_fleet_runs_one_epoch() {
+    let layers = layers(0xc0de_cafe_0091);
+    let fleet = FleetSpec::from_spec("1x2+0.5x2@0.5").unwrap();
+    for shard in ShardStrategy::ALL {
+        let r = ClusterReport::assemble_fleet(
+            "s2net",
+            "s2",
+            ClusterConfig::new(4, shard),
+            serve(8, 11),
+            layers.clone(),
+            fleet.clone(),
+            ChaosSpec::OFF,
+        );
+        let stats = r.schedule.chaos.expect("hetero fleet reports stats");
+        assert_eq!(stats.epochs, 1, "{shard:?}: no transitions, one epoch");
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.failures, 0);
+        assert_eq!(stats.downtime, 0.0);
+        assert_eq!(r.schedule.lanes.len(), 4);
+        assert_eq!(r.schedule.finish_times.len(), 8);
+        assert!(r.makespan() >= r.schedule.lower_bound - 1e-12);
+    }
+}
+
+#[test]
+fn failures_complete_every_request_exactly_once_above_the_bound() {
+    let layers = layers(0xc0de_cafe_0092);
+    let chain: f64 = layers.iter().map(|l| l.wall()).sum();
+    let chaos = ChaosSpec {
+        mtbf: chain * 2.0,
+        mttr: chain * 0.5,
+        ..ChaosSpec::OFF
+    };
+    for shard in ShardStrategy::ALL {
+        for seed in [3u64, 17, 4242] {
+            let r = ClusterReport::assemble_fleet(
+                "s2net",
+                "s2",
+                ClusterConfig::new(3, shard),
+                serve(12, seed),
+                layers.clone(),
+                FleetSpec::from_spec("1x2+0.5x1").unwrap(),
+                chaos,
+            );
+            let stats = r.schedule.chaos.expect("chaos run reports stats");
+            assert!(stats.epochs >= 1);
+            // exactly once: one finite, positive finish per request,
+            // regardless of how many times a failure forced a retry
+            assert_eq!(r.schedule.finish_times.len(), 12, "{shard:?} s{seed}");
+            for (i, &t) in r.schedule.finish_times.iter().enumerate() {
+                assert!(
+                    t.is_finite() && t > 0.0,
+                    "{shard:?} s{seed}: request {i} finish {t}"
+                );
+            }
+            assert!(
+                r.makespan() >= r.schedule.lower_bound - 1e-12,
+                "{shard:?} s{seed}: makespan {} under bound {}",
+                r.makespan(),
+                r.schedule.lower_bound
+            );
+        }
+    }
+}
+
+#[test]
+fn chaos_reports_are_byte_identical_per_seed() {
+    let layers = layers(0xc0de_cafe_0093);
+    let chain: f64 = layers.iter().map(|l| l.wall()).sum();
+    let chaos = ChaosSpec {
+        mtbf: chain,
+        mttr: chain * 0.25,
+        straggle_p: 0.3,
+        straggle_factor: 2.0,
+        ..ChaosSpec::OFF
+    };
+    let fleet = FleetSpec::from_spec("1x2+0.5x2").unwrap();
+    for shard in ShardStrategy::ALL {
+        let run = |seed: u64| {
+            ClusterReport::assemble_fleet(
+                "s2net",
+                "s2",
+                ClusterConfig::new(4, shard),
+                serve(10, seed),
+                layers.clone(),
+                fleet.clone(),
+                chaos,
+            )
+            .to_json()
+            .to_string()
+        };
+        assert_eq!(run(21), run(21), "{shard:?}: same seed, same bytes");
+        assert_ne!(run(21), run(22), "{shard:?}: seed must matter");
+    }
+}
+
+#[test]
+fn chaos_grid_sweep_is_identical_across_workers_and_resume() {
+    // a chaos sweep: heterogeneous fleet x failure x straggler axes.
+    // MTBF/MTTR are sized to the s2net quick-effort walls (~1e-4 s), so
+    // failures really fire.
+    let spec = "models=s2net;scales=8;effort=quick;batch=2;overlap=0.5;\
+                arrays=2;shard=all;fleet=uniform,1x1+0.5x1;\
+                fail=off,0.0002:0.0001;straggle=off,0.5:3;seed=3232382085";
+    let grid = Grid::from_spec(spec).unwrap();
+    let plan = grid.plan();
+    assert_eq!(plan.len(), 3 * 2 * 2 * 2);
+
+    // worker-count invariance: the records are a pure function of the
+    // plan, not of the parallel execution order
+    let serial = Runner::new()
+        .with_workers(1)
+        .run(&plan, &mut Store::in_memory());
+    let parallel = Runner::new()
+        .with_workers(4)
+        .run(&plan, &mut Store::in_memory());
+    assert_eq!(serial.records(), parallel.records());
+
+    // the chaos-free uniform points carry no chaos metrics; every
+    // fleet-engine point reports at least one epoch
+    for rec in serial.records() {
+        let fleet_engine =
+            !rec.job.is_default_fleet() || !rec.job.is_default_fail() || !rec.job.is_default_straggle();
+        assert_eq!(rec.has_chaos_metrics(), fleet_engine, "{}", rec.job.canonical());
+        if rec.job.is_default_fleet() && rec.job.is_default_fail() && rec.job.is_default_straggle() {
+            assert!(rec.has_cluster_metrics());
+        }
+    }
+
+    // kill + resume: tear the store mid-line and re-run — recovered
+    // points are reused and the full record set is bit-identical
+    let path = std::env::temp_dir().join(format!(
+        "s2chaos-sweep-{}.jsonl",
+        std::process::id()
+    ));
+    let mut store = Store::open(&path, false).unwrap();
+    let reference = Runner::new().run(&plan, &mut store);
+    assert_eq!(reference.records(), serial.records());
+    drop(store);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), plan.len());
+    let keep = plan.len() / 2;
+    let mut partial = lines[..keep].join("\n");
+    partial.push('\n');
+    partial.push_str(&lines[keep][..lines[keep].len() / 2]);
+    std::fs::write(&path, &partial).unwrap();
+
+    let mut resumed_store = Store::open(&path, true).unwrap();
+    assert_eq!(resumed_store.recovered, keep);
+    assert_eq!(resumed_store.dropped, 1);
+    let resumed = Runner::new().run(&plan, &mut resumed_store);
+    assert_eq!(resumed.reused, keep);
+    assert_eq!(resumed.ran, plan.len() - keep);
+    assert_eq!(reference.records(), resumed.records());
+    drop(resumed_store);
+    std::fs::remove_file(&path).ok();
+}

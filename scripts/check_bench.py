@@ -68,6 +68,13 @@ REQUIRED = {
         "traffic/slo-overhead-r1e6",
         "pareto/min-arrays-at-slo",
     ],
+    "BENCH_cluster_chaos.json": [
+        "model/makespan-inflation-data-n4",
+        "model/makespan-inflation-pipeline-n4",
+        "model/makespan-inflation-tensor-n4",
+        "model/retries-data-n4",
+        "model/bound-slack-tensor-n4",
+    ],
 }
 
 

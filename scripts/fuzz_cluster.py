@@ -14,6 +14,20 @@ enforces in CI:
   * per-replica/stage busy never exceeds the cluster makespan; every
     request's completion respects its own chain + transfers.
 
+Also transcribed here: the cluster-realism chaos engine
+(rust/src/cluster/event.rs — heterogeneous fleets, seeded failures and
+stragglers, epoch re-sharding with retry), its RNG plumbing
+(rust/src/util/rng.rs xoshiro256++/SplitMix64, rust/src/serve/engine.rs
+`exp_interval` + `EventQueue`), `apportion`, and
+`balanced_stages_weighted` (rust/src/cluster/shard.rs). The chaos fuzz
+enforces: exactly-once completion under any failure trajectory,
+makespan >= the generalized (fastest-array / full-capacity) lower
+bound, bit-level determinism per seed, failure/straggler stream
+decorrelation, single-epoch degeneracy when chaos is off, and
+unit-speed equivalence of the weighted stage cutter — and replays the
+exact inputs of the Rust unit tests in rust/src/cluster/event.rs so
+those assertions are pre-verified here.
+
 The single-array scheduler transcription is imported from
 scripts/fuzz_serve_pipeline.py (kept in sync with serve/pipeline.rs).
 Run `python3 scripts/fuzz_cluster.py`; exits nonzero with the offending
@@ -22,6 +36,8 @@ rust/src/cluster/ when touching scheduler semantics (see
 .claude/skills/verify/SKILL.md).
 """
 
+import heapq
+import math
 import os
 import random
 import sys
@@ -165,6 +181,487 @@ def tensor_shard(durations, tiles, out_bytes, arrivals, batch, overlap, arrays):
     return lanes, ft, m, mandatory, lower
 
 
+# ---------------------------------------------------------------------------
+# Chaos-engine transcription: rust/src/cluster/event.rs, the RNG plumbing
+# it draws from (rust/src/util/rng.rs, rust/src/serve/engine.rs), and the
+# heterogeneity-aware stage cutter (rust/src/cluster/shard.rs).
+# ---------------------------------------------------------------------------
+
+MASK = (1 << 64) - 1
+FAIL_SALT = 0xFA110F5E
+STRAGGLE_SALT = 0x57A61E0B
+MAX_EPOCHS = 10_000
+INF = float("inf")
+STRATS = ("data", "pipeline", "tensor")
+# chaos tuples are (mtbf, mttr, straggle_p, straggle_factor)
+CHAOS_OFF = (INF, 0.0, 0.0, 1.0)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    """Transcription of util::rng::Rng (xoshiro256++, SplitMix64-seeded)."""
+
+    def __init__(self, seed):
+        st = seed & MASK
+        s = []
+        for _ in range(4):
+            st, v = _splitmix64(st)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def gen_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def hash_seed(seed, name):
+    """Transcription of util::rng::hash_seed (FNV-1a mixed with a seed)."""
+    h = 0xCBF29CE484222325 ^ (seed & MASK)
+    for b in name.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def exp_interval(rng, rate):
+    """Transcription of serve::engine::exp_interval."""
+    if not (rate > 0.0) or not math.isfinite(rate):
+        return INF
+    return -math.log(1.0 - rng.gen_f64()) / rate
+
+
+class EventQueue:
+    """serve::engine::EventQueue equivalent: strict min-heap on
+    (time, seq) with FIFO ties. The Rust side hand-rolls the heap but
+    both pop the unique global (time, seq) minimum, so the observable
+    event sequence is identical (times are never NaN here)."""
+
+    def __init__(self):
+        self.heap = []
+        self.seq = 0
+
+    def push(self, time, item):
+        heapq.heappush(self.heap, (time, self.seq, item))
+        self.seq += 1
+
+    def peek_time(self):
+        return self.heap[0][0] if self.heap else None
+
+    def pop(self):
+        if not self.heap:
+            return None
+        t, _, item = heapq.heappop(self.heap)
+        return t, item
+
+
+def apportion(total, weights):
+    """Transcription of cluster::event::apportion (largest remainder).
+    Rust's `Iterator::max_by` returns the LAST maximal element, hence
+    the (share, index) key in the defensive trim."""
+    k = len(weights)
+    if k == 0:
+        return []
+    w_sum = 0.0
+    for w in weights:
+        w_sum += w
+    if not (w_sum > 0.0):
+        out = [0] * k
+        out[0] = total
+        return out
+    quotas = [total * w / w_sum for w in weights]
+    shares = [int(math.floor(q)) for q in quotas]
+    assigned = sum(shares)
+    while assigned > total:
+        i = max(range(k), key=lambda j: (shares[j], j))
+        shares[i] -= 1
+        assigned -= 1
+    order = sorted(range(k), key=lambda j: (-(quotas[j] - shares[j]), j))
+    for i in range(total - assigned):
+        shares[order[i % k]] += 1
+    return shares
+
+
+def balanced_stages_weighted(durations, speeds):
+    """Transcription of shard::balanced_stages_weighted."""
+    ln = len(durations)
+    n = max(len(speeds), 1)
+    if ln == 0:
+        return [0]
+    if n == 1:
+        return [ln]
+
+    def speed(s):
+        v = speeds[s] if s < len(speeds) else 1.0
+        return v if (v > 0.0 and math.isfinite(v)) else 1.0
+
+    total_work = sum(durations)
+    min_speed = INF
+    for s in range(n):
+        min_speed = min(min_speed, speed(s))
+    longest = 0.0
+    for d in durations:
+        longest = max(longest, d)
+
+    def cut(cap):
+        ends = []
+        acc = 0.0
+        stage = 0
+        for i, d in enumerate(durations):
+            if acc > 0.0 and acc + d > cap * speed(min(stage, n - 1)):
+                ends.append(i)
+                acc = 0.0
+                stage += 1
+            acc += d
+        ends.append(ln)
+        return ends
+
+    max_speed = 0.0
+    for s in range(n):
+        max_speed = max(max_speed, speed(s))
+    lo, hi = longest / max_speed, total_work / min_speed
+    for _ in range(64):
+        mid = 0.5 * (lo + hi)
+        if len(cut(mid)) <= n:
+            hi = mid
+        else:
+            lo = mid
+    ends = cut(hi)
+    while len(ends) > n:
+        last = ends.pop()
+        ends[-1] = last
+    return ends
+
+
+def chaos_has_failures(chaos):
+    return math.isfinite(chaos[0]) and chaos[0] > 0.0
+
+
+def chaos_has_stragglers(chaos):
+    return chaos[2] > 0.0 and chaos[3] > 1.0
+
+
+def apply_transition(ev, at, chaos, up, down_since, fail_rng, queue, stats):
+    kind, i = ev
+    mtbf, mttr = chaos[0], chaos[1]
+    if kind == "down":
+        up[i] = False
+        down_since[i] = at
+        stats["failures"] += 1
+        repair = exp_interval(fail_rng[i], 1.0 / mttr) if mttr > 0.0 else 0.0
+        queue.push(at + repair, ("up", i))
+    else:
+        up[i] = True
+        stats["recoveries"] += 1
+        stats["downtime"] += at - down_since[i]
+        queue.push(at + exp_interval(fail_rng[i], 1.0 / mtbf), ("down", i))
+
+
+def epoch_data_parallel(durations, arrivals, pending, live, speeds, t, epoch_end):
+    chain = sum(durations)
+    n_layers = len(durations)
+    load = [t] * len(live)
+    out = []
+    for r in pending:
+        arr = max(arrivals[r], t)
+        if arr >= epoch_end:
+            break  # clamped arrivals are sorted: the rest wait too
+        best = 0
+        best_finish = INF
+        for k in range(len(live)):
+            f = max(load[k], arr) + chain / speeds[k]
+            if f < best_finish:
+                best_finish = f
+                best = k
+        start = max(load[best], arr)
+        finish = start + chain / speeds[best]
+        load[best] = finish
+        out.append(
+            {
+                "req": r,
+                "start": start,
+                "finish": finish,
+                "lanes": [(live[best], chain / speeds[best], n_layers)],
+                "bytes": 0.0,
+            }
+        )
+    return out
+
+
+def epoch_layer_pipeline(
+    durations, out_bytes, arrivals, pending, live, speeds, t, epoch_end
+):
+    ends = balanced_stages_weighted(durations, speeds)
+    n_stages = len(ends)
+    stage_time = []
+    stage_layers = []
+    transfer = []
+    bytes_per_req = 0.0
+    lo = 0
+    for s, hi in enumerate(ends):
+        work = sum(durations[lo:hi])
+        stage_time.append(work / speeds[min(s, len(speeds) - 1)])
+        stage_layers.append(hi - lo)
+        if s > 0 and lo > 0:
+            transfer.append(link_seconds(out_bytes[lo - 1]))
+            bytes_per_req += out_bytes[lo - 1]
+        else:
+            transfer.append(0.0)
+        lo = hi
+    stage_free = [t] * n_stages
+    out = []
+    for r in pending:
+        arr = max(arrivals[r], t)
+        if arr >= epoch_end:
+            break
+        start = max(stage_free[0], arr)
+        f = start + stage_time[0]
+        stage_free[0] = f
+        lanes = [(live[0], stage_time[0], stage_layers[0])]
+        for s in range(1, n_stages):
+            ready = f + transfer[s]
+            f = max(stage_free[s], ready) + stage_time[s]
+            stage_free[s] = f
+            lanes.append((live[s], stage_time[s], stage_layers[s]))
+        out.append(
+            {
+                "req": r,
+                "start": start,
+                "finish": f,
+                "lanes": lanes,
+                "bytes": bytes_per_req,
+            }
+        )
+    return out
+
+
+def epoch_tensor_shard(
+    durations, tiles, out_bytes, arrivals, pending, live, speeds, fleet, t, epoch_end
+):
+    k = len(live)
+    m = float(k)
+    weights = [s * fleet[i][1] for i, s in zip(live, speeds)]
+    per_lane = [0.0] * k
+    service = 0.0
+    gather_total = 0.0
+    bytes_per_req = 0.0
+    for d, tl, b in zip(durations, tiles, out_bytes):
+        layer_t = 0.0
+        if tl == 0:
+            # no tile grid to split: every shard runs the full layer
+            for kk, s in enumerate(speeds):
+                w = d / s
+                per_lane[kk] += w
+                layer_t = max(layer_t, w)
+        else:
+            shares = apportion(tl, weights)
+            for kk, s in enumerate(speeds):
+                w = d * (shares[kk] / tl) / s
+                per_lane[kk] += w
+                layer_t = max(layer_t, w)
+        if k > 1:
+            bytes_per_req += b * (m - 1.0)
+            gather = link_seconds(b) * (m - 1.0) / m
+        else:
+            gather = 0.0
+        gather_total += gather
+        service += layer_t + gather
+    n_layers = len(durations)
+    free = t
+    out = []
+    for r in pending:
+        arr = max(arrivals[r], t)
+        if arr >= epoch_end:
+            break
+        start = max(free, arr)
+        finish = start + service
+        free = finish
+        lanes = [(live[kk], per_lane[kk] + gather_total, n_layers) for kk in range(k)]
+        out.append(
+            {
+                "req": r,
+                "start": start,
+                "finish": finish,
+                "lanes": lanes,
+                "bytes": bytes_per_req,
+            }
+        )
+    return out
+
+
+def run_chaos(strategy, durations, tiles, out_bytes, arrivals, fleet, chaos, seed):
+    """Transcription of cluster::event::run_chaos. `fleet` is a list of
+    (speed, size) tuples; `chaos` is (mtbf, mttr, p, factor)."""
+    n = max(len(fleet), 1)
+    fleet = list(fleet) if fleet else [(1.0, 1.0)]
+    n_req = len(arrivals)
+    chain = sum(durations)
+    mtbf, _mttr, straggle_p, straggle_factor = chaos
+
+    max_speed = 0.0
+    for sp, _sz in fleet:
+        max_speed = max(max_speed, sp)
+    total_speed = 0.0
+    for sp, _sz in fleet:
+        total_speed += sp
+    if strategy in ("data", "pipeline"):
+        floor = chain / max_speed
+    else:
+        floor = chain / total_speed
+    lower_bound = 0.0
+    for a in arrivals:
+        lower_bound = max(lower_bound, a + floor)
+
+    full_speeds = [sp for sp, _sz in fleet]
+    if strategy == "data":
+        mandatory = 0.0
+    elif strategy == "pipeline":
+        ends = balanced_stages_weighted(durations, full_speeds)
+        mandatory = 0.0
+        lo = 0
+        for s, hi in enumerate(ends):
+            if s > 0 and lo > 0:
+                mandatory += link_seconds(out_bytes[lo - 1])
+            lo = hi
+    else:
+        if n > 1:
+            m = float(n)
+            mandatory = 0.0
+            for b in out_bytes:
+                mandatory += link_seconds(b) * (m - 1.0) / m
+        else:
+            mandatory = 0.0
+
+    fail_rng = [Rng(hash_seed(seed ^ FAIL_SALT, f"array{i}")) for i in range(n)]
+    straggle_rng = [
+        Rng(hash_seed(seed ^ STRAGGLE_SALT, f"array{i}")) for i in range(n)
+    ]
+
+    queue = EventQueue()
+    up = [True] * n
+    down_since = [0.0] * n
+    if chaos_has_failures(chaos):
+        for i in range(n):
+            queue.push(exp_interval(fail_rng[i], 1.0 / mtbf), ("down", i))
+
+    stats = {
+        "epochs": 0,
+        "retries": 0,
+        "failures": 0,
+        "recoveries": 0,
+        "downtime": 0.0,
+        "straggled": 0,
+    }
+    lanes = [[0.0, 0] for _ in range(n)]
+    finish_times = [0.0] * n_req
+    done = [False] * n_req
+    pending = list(range(n_req))
+    link_bytes = 0.0
+    makespan = 0.0
+    t = 0.0
+
+    while pending:
+        force_all_up = stats["epochs"] >= MAX_EPOCHS
+        if force_all_up:
+            epoch_end = INF
+        else:
+            pt = queue.peek_time()
+            epoch_end = pt if pt is not None else INF
+        if force_all_up:
+            live = list(range(n))
+        else:
+            live = [i for i in range(n) if up[i]]
+
+        if not live:
+            et, ev = queue.pop()
+            apply_transition(ev, et, chaos, up, down_since, fail_rng, queue, stats)
+            t = et
+            continue
+
+        speeds = [fleet[i][0] for i in live]
+        if not force_all_up and chaos_has_stragglers(chaos):
+            for k, i in enumerate(live):
+                if straggle_rng[i].gen_f64() < straggle_p:
+                    speeds[k] /= straggle_factor
+                    stats["straggled"] += 1
+        stats["epochs"] += 1
+
+        if strategy == "data":
+            placements = epoch_data_parallel(
+                durations, arrivals, pending, live, speeds, t, epoch_end
+            )
+        elif strategy == "pipeline":
+            placements = epoch_layer_pipeline(
+                durations, out_bytes, arrivals, pending, live, speeds, t, epoch_end
+            )
+        else:
+            placements = epoch_tensor_shard(
+                durations,
+                tiles,
+                out_bytes,
+                arrivals,
+                pending,
+                live,
+                speeds,
+                fleet,
+                t,
+                epoch_end,
+            )
+
+        for p in placements:
+            if p["finish"] <= epoch_end:
+                done[p["req"]] = True
+                finish_times[p["req"]] = p["finish"]
+                makespan = max(makespan, p["finish"])
+                link_bytes += p["bytes"]
+                for array, busy, jobs in p["lanes"]:
+                    lanes[array][0] += busy
+                    lanes[array][1] += jobs
+            elif p["start"] < epoch_end:
+                stats["retries"] += 1
+        pending = [r for r in pending if not done[r]]
+        if not pending:
+            break
+
+        if math.isfinite(epoch_end):
+            et, ev = queue.pop()
+            apply_transition(ev, et, chaos, up, down_since, fail_rng, queue, stats)
+            t = et
+        else:
+            raise AssertionError("unbounded epoch left requests pending")
+
+    return {
+        "lanes": lanes,
+        "finish_times": finish_times,
+        "makespan": makespan,
+        "link_bytes": link_bytes,
+        "mandatory_transfer": mandatory,
+        "lower_bound": lower_bound,
+        "stats": stats,
+    }
+
+
 def random_arrivals(rng, r):
     if rng.random() < 0.4:
         return [0.0] * r
@@ -176,9 +673,142 @@ def random_arrivals(rng, r):
     return out
 
 
+def replay_rust_unit_tests():
+    """Replay the exact inputs of the unit tests in
+    rust/src/cluster/event.rs and the weighted-stage tests in
+    rust/src/cluster/shard.rs through the transcription, asserting the
+    same things the Rust tests assert — the assertions with a stochastic
+    ingredient are pre-verified here rather than hoped-for in CI."""
+    d = [0.4, 0.2, 0.3, 0.1]
+    tiles = [8, 8, 4, 4]
+    bts = [1e6, 5e5, 2.5e5, 1e5]
+    chain = sum(d)
+
+    # apportion_is_exact_deterministic_and_weighted
+    assert apportion(10, [2.0, 1.0, 1.0]) == [5, 3, 2]
+    assert apportion(3, [1.0, 1.0]) == [2, 1]
+    assert apportion(0, [1.0, 2.0]) == [0, 0]
+    assert apportion(7, [1.0]) == [7]
+    s = apportion(13, [3.0, 2.0, 1.0])
+    assert s[0] >= s[1] >= s[2], s
+
+    # weighted_stages_with_unit_speeds_match_homogeneous
+    dd = [3.0, 1.0, 1.0, 1.0, 2.0, 2.0]
+    for n in range(1, 7):
+        assert balanced_stages_weighted(dd, [1.0] * n) == balanced_stages(dd, n), n
+    assert balanced_stages_weighted([], [1.0, 1.0]) == [0]
+    assert balanced_stages_weighted(dd, [1.0]) == [6]
+
+    # weighted_stages_give_fast_arrays_more_wall_balanced_work
+    du = [1.0] * 6
+    ends = balanced_stages_weighted(du, [2.0, 1.0])
+    assert ends[-1] == 6 and len(ends) == 2 and ends[0] == 4, ends
+    assert balanced_stages_weighted(du, [1.0, 2.0])[0] == 2
+
+    def wall(ends, speeds, durs):
+        lo, worst = 0, 0.0
+        for st, e in enumerate(ends):
+            work = sum(durs[lo:e])
+            worst = max(worst, work / speeds[min(st, len(speeds) - 1)])
+            lo = e
+        return worst
+
+    naive = balanced_stages(du, 2)
+    assert wall(ends, [2.0, 1.0], du) <= wall(naive, [2.0, 1.0], du) + 1e-12
+
+    # chaos_off_uniform_completes_in_one_epoch
+    arrivals = [0.0, 0.1, 0.2, 0.5]
+    fleet = [(1.0, 1.0)] * 3
+    for strat in STRATS:
+        out = run_chaos(strat, d, tiles, bts, arrivals, fleet, CHAOS_OFF, 7)
+        assert out["stats"]["epochs"] == 1, strat
+        assert out["stats"]["retries"] == 0
+        assert out["stats"]["failures"] == 0
+        assert len(out["finish_times"]) == 4
+        for f, a in zip(out["finish_times"], arrivals):
+            assert f >= a + chain / 1.0 - 1e-12 or strat != "data", (strat, f, a)
+            assert f > a, strat
+        assert out["makespan"] >= out["lower_bound"] - 1e-12, strat
+
+    # heterogeneous_fleet_beats_its_slowest_and_holds_the_bound
+    zero8 = [0.0] * 8
+    fast = [(2.0, 1.0), (2.0, 1.0), (1.0, 1.0), (1.0, 1.0)]
+    slow = [(1.0, 1.0)] * 4
+    for strat in STRATS:
+        f = run_chaos(strat, d, tiles, bts, zero8, fast, CHAOS_OFF, 7)
+        sl = run_chaos(strat, d, tiles, bts, zero8, slow, CHAOS_OFF, 7)
+        assert f["makespan"] <= sl["makespan"] + 1e-12, (
+            strat,
+            f["makespan"],
+            sl["makespan"],
+        )
+        assert f["makespan"] >= f["lower_bound"] - 1e-12
+        assert sl["makespan"] >= sl["lower_bound"] - 1e-12
+
+    # failures_retry_and_still_complete_exactly_once
+    arr16 = [i * 0.1 for i in range(16)]
+    uni4 = [(1.0, 1.0)] * 4
+    retry_chaos = (0.5, 0.2, 0.0, 1.0)
+    for strat in STRATS:
+        out = run_chaos(strat, d, tiles, bts, arr16, uni4, retry_chaos, 11)
+        assert out["stats"]["failures"] > 0, strat
+        assert len(out["finish_times"]) == 16
+        for f, a in zip(out["finish_times"], arr16):
+            assert f > a, (strat, f, a)
+        assert out["makespan"] >= out["lower_bound"] - 1e-12, strat
+        calm = run_chaos(strat, d, tiles, bts, arr16, uni4, CHAOS_OFF, 11)
+        assert calm["makespan"] <= out["makespan"] + 1e-12, (
+            strat,
+            out["makespan"],
+            calm["makespan"],
+        )
+
+    # chaos_runs_are_deterministic_per_seed
+    arr12 = [i * 0.05 for i in range(12)]
+    het4 = [(1.0, 1.0), (1.0, 1.0), (0.5, 1.0), (0.5, 1.0)]
+    det_chaos = (0.8, 0.3, 0.3, 3.0)
+    for strat in STRATS:
+        a = run_chaos(strat, d, tiles, bts, arr12, het4, det_chaos, 42)
+        b = run_chaos(strat, d, tiles, bts, arr12, het4, det_chaos, 42)
+        assert a == b, strat
+        c = run_chaos(strat, d, tiles, bts, arr12, het4, det_chaos, 43)
+        assert a["stats"] != c["stats"], (strat, a["stats"])
+
+    # stragglers_slow_the_run_without_failures
+    arr20 = [i * 0.05 for i in range(20)]
+    st_chaos = (0.4, 0.1, 0.5, 8.0)
+    just_fail = (0.4, 0.1, 0.0, 1.0)
+    with_st = run_chaos("data", d, tiles, bts, arr20, uni4, st_chaos, 5)
+    assert with_st["stats"]["straggled"] > 0
+    assert with_st["makespan"] >= with_st["lower_bound"] - 1e-12
+    without = run_chaos("data", d, tiles, bts, arr20, uni4, just_fail, 5)
+    assert without["stats"]["straggled"] == 0
+    assert without["stats"]["failures"] == with_st["stats"]["failures"], (
+        without["stats"],
+        with_st["stats"],
+    )
+
+    # dark_fleet_waits_for_recovery
+    dark = run_chaos(
+        "data", d, tiles, bts, [0.0] * 4, [(1.0, 1.0)], (0.05, 1.0, 0.0, 1.0), 3
+    )
+    assert len(dark["finish_times"]) == 4
+    assert dark["stats"]["failures"] > 0
+    assert dark["stats"]["downtime"] > 0.0
+    assert dark["makespan"] >= dark["lower_bound"] - 1e-12
+    assert all(f > 0.0 for f in dark["finish_times"])
+
+    # degenerate inputs the engine must survive
+    empty = run_chaos("data", d, tiles, bts, [], uni4, CHAOS_OFF, 1)
+    assert empty["finish_times"] == [] and empty["makespan"] == 0.0
+    assert empty["stats"]["epochs"] == 0
+
+
 def main():
     rng = random.Random(20260727)
     cases = 0
+
+    replay_rust_unit_tests()
 
     # --- arrays=1 degeneracy + lower bounds, all strategies ---
     for trial in range(6000):
@@ -270,7 +900,185 @@ def main():
         assert m >= max(ft) - 1e-15, (trial, m, max(ft))
         cases += 1
 
-    print(f"all {cases} cluster fuzz cases satisfy the scale-out invariants")
+    # --- apportion: exact, deterministic, quota-faithful ---
+    for trial in range(2000):
+        k = rng.randint(1, 8)
+        total = rng.randint(0, 500)
+        if rng.random() < 0.05:
+            weights = [0.0] * k
+        else:
+            weights = [rng.choice([0.25, 0.5, 1.0, 2.0, 4.0]) for _ in range(k)]
+        shares = apportion(total, weights)
+        assert len(shares) == k
+        assert sum(shares) == total, (trial, total, weights, shares)
+        assert shares == apportion(total, weights), "must be deterministic"
+        w_sum = sum(weights)
+        if w_sum > 0.0:
+            for w, s in zip(weights, shares):
+                q = total * w / w_sum
+                assert abs(s - q) < 1.0 + 1e-9, (trial, total, weights, shares)
+            # heavier weight never gets fewer tiles (ties allowed)
+            pairs = sorted(zip(weights, shares), key=lambda p: -p[0])
+            for (wa, sa), (wb, sb) in zip(pairs, pairs[1:]):
+                if wa > wb:
+                    assert sa >= sb, (trial, total, weights, shares)
+        cases += 1
+
+    # --- weighted stage cutter: unit-speed equality + structure ---
+    for trial in range(2000):
+        length = rng.randint(0, 12)
+        durations = [rng.uniform(1e-5, 1e-2) for _ in range(length)]
+        n = rng.randint(1, 8)
+        assert balanced_stages_weighted(durations, [1.0] * n) == balanced_stages(
+            durations, n
+        ), (trial, durations, n)
+        # nonpositive / nonfinite speeds clamp to the unit-speed cut
+        degenerate = rng.choice([-1.0, 0.0, float("nan"), INF])
+        assert balanced_stages_weighted(durations, [degenerate] * n) == (
+            balanced_stages_weighted(durations, [1.0] * n)
+        ), (trial, degenerate)
+        speeds = [rng.choice([0.25, 0.5, 1.0, 2.0, 4.0]) for _ in range(n)]
+        ends = balanced_stages_weighted(durations, speeds)
+        if length == 0:
+            assert ends == [0]
+        else:
+            assert ends[-1] == length, (trial, ends)
+            assert len(ends) <= n
+            assert all(a < b for a, b in zip(ends, ends[1:])), (trial, ends)
+        cases += 1
+
+    # --- chaos engine: exactly-once, bounds, determinism, decorrelation ---
+    saw_retries = saw_failures = saw_straggles = saw_zero_tiles = 0
+    for trial in range(3000):
+        length = rng.randint(1, 8)
+        durations = [rng.uniform(1e-3, 5e-2) for _ in range(length)]
+        tiles = [
+            0 if rng.random() < 0.1 else rng.randint(1, 64) for _ in range(length)
+        ]
+        out_bytes = [rng.uniform(1e3, 1e7) for _ in range(length)]
+        chain = sum(durations)
+        requests = rng.randint(1, 10)
+        if rng.random() < 0.4:
+            arrivals = [0.0] * requests
+        else:
+            arrivals, acc = [], 0.0
+            for _ in range(requests):
+                arrivals.append(acc)
+                acc += rng.uniform(0.0, chain * 0.5)
+        fleet = [
+            (rng.choice([0.25, 0.5, 1.0, 2.0, 4.0]), rng.choice([0.5, 1.0, 2.0]))
+            for _ in range(rng.randint(1, 6))
+        ]
+        min_speed = min(sp for sp, _sz in fleet)
+        if rng.random() < 0.5:
+            p, factor = 0.0, 1.0
+        else:
+            p, factor = rng.uniform(0.05, 0.9), rng.uniform(1.5, 4.0)
+        service_worst = chain / (min_speed / factor)
+        if rng.random() < 0.35:
+            mtbf, mttr = INF, 0.0
+        else:
+            # moderate chaos: epochs long enough that requests progress
+            # (pathological flapping is covered by the stress loop + the
+            # MAX_EPOCHS forced-completion backstop)
+            mtbf = rng.uniform(2.0, 16.0) * service_worst
+            mttr = 0.0 if rng.random() < 0.2 else rng.uniform(0.0, service_worst)
+        chaos = (mtbf, mttr, p, factor)
+        seed = rng.getrandbits(63)
+        ctx = (trial, length, requests, fleet, chaos, seed)
+
+        for strat in STRATS:
+            out = run_chaos(
+                strat, durations, tiles, out_bytes, arrivals, fleet, chaos, seed
+            )
+            st = out["stats"]
+            ft = out["finish_times"]
+            # exactly-once: one finite finish per accepted request,
+            # strictly after its arrival, no matter what failed
+            assert len(ft) == requests, ctx
+            for f, a in zip(ft, arrivals):
+                assert math.isfinite(f) and f > a, (ctx, strat, f, a)
+            assert out["makespan"] == max(ft), (ctx, strat)
+            eps = out["makespan"] * 1e-12 + 1e-12
+            assert out["makespan"] >= out["lower_bound"] - eps, (
+                ctx,
+                strat,
+                out["makespan"],
+                out["lower_bound"],
+            )
+            assert len(out["lanes"]) == len(fleet), (ctx, strat)
+            for busy, jobs in out["lanes"]:
+                assert busy >= 0.0 and jobs >= 0, (ctx, strat)
+                assert busy <= out["makespan"] + eps, (ctx, strat, busy)
+            assert out["link_bytes"] >= 0.0
+            if strat == "data":
+                assert out["link_bytes"] == 0.0, (ctx, strat)
+            assert st["epochs"] <= MAX_EPOCHS + 1, (ctx, strat)
+            assert st["recoveries"] <= st["failures"], (ctx, strat)
+            if chaos == CHAOS_OFF:
+                assert st["epochs"] == 1, (ctx, strat)
+                assert st["retries"] == 0 and st["failures"] == 0, (ctx, strat)
+                assert st["downtime"] == 0.0 and st["straggled"] == 0, (ctx, strat)
+            saw_retries += st["retries"]
+            saw_failures += st["failures"]
+            saw_straggles += st["straggled"]
+            if trial % 3 == 0:
+                again = run_chaos(
+                    strat, durations, tiles, out_bytes, arrivals, fleet, chaos, seed
+                )
+                assert again == out, (ctx, strat, "seed determinism broke")
+            if trial % 5 == 0 and chaos_has_stragglers(chaos):
+                # decorrelated streams: dropping stragglers never
+                # touches the straggle counter of a straggle-free run
+                no_st = run_chaos(
+                    strat,
+                    durations,
+                    tiles,
+                    out_bytes,
+                    arrivals,
+                    fleet,
+                    (mtbf, mttr, 0.0, 1.0),
+                    seed,
+                )
+                assert no_st["stats"]["straggled"] == 0, (ctx, strat)
+        saw_zero_tiles += sum(1 for tl in tiles if tl == 0)
+        cases += 1
+    assert saw_failures > 0, "chaos corpus never exercised a failure"
+    assert saw_retries > 0, "chaos corpus never exercised a retry"
+    assert saw_straggles > 0, "chaos corpus never exercised a straggler"
+    assert saw_zero_tiles > 0, "chaos corpus never exercised tiles == 0"
+
+    # --- stress: harsh failure rates around the per-request service ---
+    stress_retries = 0
+    for trial in range(300):
+        length = rng.randint(1, 5)
+        durations = [rng.uniform(1e-2, 5e-2) for _ in range(length)]
+        tiles = [rng.randint(1, 32) for _ in range(length)]
+        out_bytes = [rng.uniform(1e3, 1e6) for _ in range(length)]
+        chain = sum(durations)
+        requests = rng.randint(1, 6)
+        arrivals = [0.0] * requests
+        fleet = [(1.0, 1.0)] * rng.randint(1, 4)
+        mtbf = rng.uniform(0.6, 2.0) * chain
+        mttr = rng.uniform(0.0, chain)
+        chaos = (mtbf, mttr, 0.0, 1.0)
+        seed = rng.getrandbits(63)
+        for strat in STRATS:
+            out = run_chaos(
+                strat, durations, tiles, out_bytes, arrivals, fleet, chaos, seed
+            )
+            assert len(out["finish_times"]) == requests
+            assert all(math.isfinite(f) and f > 0.0 for f in out["finish_times"])
+            eps = out["makespan"] * 1e-12 + 1e-12
+            assert out["makespan"] >= out["lower_bound"] - eps, (trial, strat)
+            stress_retries += out["stats"]["retries"]
+        cases += 1
+    assert stress_retries > 0, "stress corpus never killed a request mid-flight"
+
+    print(
+        f"all {cases} cluster fuzz cases satisfy the scale-out and "
+        "chaos-engine invariants"
+    )
 
 
 if __name__ == "__main__":
