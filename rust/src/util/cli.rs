@@ -92,7 +92,11 @@ impl Args {
     }
 
     /// Parse a `(w,f,wf)` FIFO depth triple like `4,4,4` or `inf`.
-    pub fn get_fifo(&self, key: &str, default: crate::config::FifoDepths) -> crate::config::FifoDepths {
+    pub fn get_fifo(
+        &self,
+        key: &str,
+        default: crate::config::FifoDepths,
+    ) -> crate::config::FifoDepths {
         match self.get(key) {
             None => default,
             Some("inf") | Some("infinite") => crate::config::FifoDepths::infinite(),

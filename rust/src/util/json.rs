@@ -142,8 +142,9 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        let is_num_byte =
+            |c: u8| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-');
+        while matches!(self.peek(), Some(c) if is_num_byte(c)) {
             self.i += 1;
         }
         std::str::from_utf8(&self.b[start..self.i])

@@ -189,10 +189,11 @@ fn chaos_grid_sweep_is_identical_across_workers_and_resume() {
     // the chaos-free uniform points carry no chaos metrics; every
     // fleet-engine point reports at least one epoch
     for rec in serial.records() {
-        let fleet_engine =
-            !rec.job.is_default_fleet() || !rec.job.is_default_fail() || !rec.job.is_default_straggle();
-        assert_eq!(rec.has_chaos_metrics(), fleet_engine, "{}", rec.job.canonical());
-        if rec.job.is_default_fleet() && rec.job.is_default_fail() && rec.job.is_default_straggle() {
+        let uniform = rec.job.is_default_fleet()
+            && rec.job.is_default_fail()
+            && rec.job.is_default_straggle();
+        assert_eq!(rec.has_chaos_metrics(), !uniform, "{}", rec.job.canonical());
+        if uniform {
             assert!(rec.has_cluster_metrics());
         }
     }
