@@ -137,6 +137,35 @@ pub fn layer_results_synthetic(
         .collect()
 }
 
+/// The per-layer × per-density-level wall table the dynamic-sparsity
+/// serving path reads ([`crate::serve::density`]). Row `i` holds layer
+/// `i`'s wall seconds at each of the [`crate::serve::density::DENSITY_LEVELS`]
+/// quantized feature densities ([`crate::serve::density::level_density`]).
+/// Sampling densities on a small fixed grid keeps the dynamic regime
+/// affordable for the cycle-accurate S² backend — `layers × 16`
+/// evaluations total, independent of request count — and makes realized
+/// per-request walls exact table lookups, which is what lets the
+/// fastpath wave cache key on them bit-safely.
+pub fn dynamic_wall_table(
+    backend: &dyn Backend,
+    model: &Model,
+    weight_density: f64,
+    clustered: bool,
+) -> Vec<Vec<f64>> {
+    model
+        .layers
+        .iter()
+        .map(|layer| {
+            (0..crate::serve::density::DENSITY_LEVELS)
+                .map(|lv| {
+                    let fd = crate::serve::density::level_density(lv);
+                    backend.layer_result(layer, fd, weight_density, clustered).wall()
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// The backend *axis*: a copyable value naming one of the registered
 /// backends, used by [`crate::sweep::Job`] (canonical key, JSON store
 /// form), [`crate::sweep::Grid`] (the `backend=` axis) and the CLI's
@@ -301,6 +330,24 @@ mod tests {
             let fd = (base + jitter).clamp(0.02, 0.98);
             assert_eq!(r.feature_density.to_bits(), fd.to_bits());
             assert_eq!(r.weight_density.to_bits(), model.weight_density.to_bits());
+        }
+    }
+
+    #[test]
+    fn dynamic_wall_table_is_a_pointwise_layer_result_grid() {
+        let model = crate::models::zoo::s2net();
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+        let backend = BackendKind::Naive.build(&cfg);
+        let table = dynamic_wall_table(backend.as_ref(), &model, 0.5, false);
+        assert_eq!(table.len(), model.layers.len());
+        for (layer, row) in model.layers.iter().zip(&table) {
+            assert_eq!(row.len(), crate::serve::density::DENSITY_LEVELS);
+            for (lv, &w) in row.iter().enumerate() {
+                let fd = crate::serve::density::level_density(lv);
+                let direct = backend.layer_result(layer, fd, 0.5, false).wall();
+                assert_eq!(w.to_bits(), direct.to_bits());
+                assert!(w > 0.0);
+            }
         }
     }
 

@@ -35,14 +35,16 @@ pub mod shard;
 
 pub use event::{ArraySpec, ChaosSpec, ChaosStats, FleetSpec};
 pub use schedule::{
-    build_cluster, build_cluster_fleet, build_cluster_slo, ClusterSchedule, LaneStats,
+    build_cluster, build_cluster_dynamic, build_cluster_fleet, build_cluster_slo, ClusterSchedule,
+    LaneStats,
 };
 pub use shard::{balanced_stages, balanced_stages_weighted, feature_link_bytes, ShardStrategy};
 
 use crate::coordinator::LayerResult;
+use crate::models::Model;
 use crate::serve::{
-    autoscale, traffic, Arrivals, AutoscaleConfig, AutoscaleTrace, LatencyStats, LayerDag,
-    ServeConfig,
+    autoscale, density, traffic, Arrivals, AutoscaleConfig, AutoscaleTrace, LatencyStats,
+    LayerDag, ServeConfig,
 };
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -159,6 +161,11 @@ impl ClusterReport {
         fleet: FleetSpec,
         chaos: ChaosSpec,
     ) -> ClusterReport {
+        assert!(
+            serve.density.is_static(),
+            "dynamic density goes through ClusterReport::assemble_model (it needs the \
+             model's topology and a wall table)"
+        );
         let cluster = ClusterConfig::new(fleet.arrays_or(cluster.arrays), cluster.shard);
         let dag = LayerDag::chain(layers.len());
         let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
@@ -209,6 +216,130 @@ impl ClusterReport {
             arrivals,
             latency,
             single_makespan: single.makespan,
+            schedule,
+            fleet,
+            chaos,
+        }
+    }
+
+    /// [`ClusterReport::assemble_fleet`] against a model's real layer
+    /// topology ([`LayerDag::from_model`]) with optional per-request
+    /// dynamic density. `wall_table` is the per-layer × per-level grid
+    /// from [`crate::backend::dynamic_wall_table`]; it is required when
+    /// `serve.density` is not `Static` and ignored otherwise. With a
+    /// `Static` density model and a chain-topology model this is
+    /// bit-identical to `assemble_fleet`. Dynamic density is not
+    /// combined with heterogeneous fleets or chaos injection (the epoch
+    /// engine's restartable units assume request-invariant layer costs)
+    /// — that pairing panics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble_model(
+        model: &Model,
+        backend: impl Into<String>,
+        cluster: ClusterConfig,
+        serve: ServeConfig,
+        layers: Vec<LayerResult>,
+        wall_table: Option<&[Vec<f64>]>,
+        fleet: FleetSpec,
+        chaos: ChaosSpec,
+    ) -> ClusterReport {
+        let cluster = ClusterConfig::new(fleet.arrays_or(cluster.arrays), cluster.shard);
+        let dag = LayerDag::from_model(model);
+        let durations: Vec<f64> = layers.iter().map(|l| l.wall()).collect();
+        let tiles: Vec<usize> = layers.iter().map(|l| l.tiles_total).collect();
+        let out_bytes = feature_link_bytes(&layers);
+        let arrivals = serve
+            .arrival
+            .generate(serve.requests.max(1), serve.rate, serve.seed);
+        let (schedule, single_makespan) = if serve.density.is_static() {
+            let schedule = build_cluster_fleet(
+                cluster.shard,
+                &dag,
+                &durations,
+                &tiles,
+                &out_bytes,
+                &arrivals.times,
+                serve.batch,
+                serve.overlap,
+                cluster.arrays,
+                serve.slo,
+                &serve.policy,
+                &fleet,
+                &chaos,
+                serve.seed,
+            );
+            let single = traffic::evaluate_with_slo(
+                &dag,
+                &durations,
+                &arrivals.times,
+                serve.batch,
+                serve.overlap,
+                serve.slo,
+                &serve.policy,
+            );
+            (schedule, single.makespan)
+        } else {
+            assert!(
+                fleet.is_uniform() && chaos.is_off(),
+                "dynamic density is not combined with heterogeneous fleets or \
+                 chaos injection"
+            );
+            let table = wall_table.unwrap_or_else(|| {
+                panic!(
+                    "model {}: dynamic density ({}) needs a wall table",
+                    model.name,
+                    serve.density.spec()
+                )
+            });
+            let rows = density::realized_rows(
+                &serve.density,
+                serve.seed,
+                serve.requests.max(1),
+                &model.density_scale,
+                table,
+            );
+            let schedule = build_cluster_dynamic(
+                cluster.shard,
+                &dag,
+                &durations,
+                &tiles,
+                &out_bytes,
+                &rows,
+                &arrivals.times,
+                serve.batch,
+                serve.overlap,
+                cluster.arrays,
+                serve.slo,
+                &serve.policy,
+            );
+            let single = traffic::evaluate_with_slo_dynamic(
+                &dag,
+                &rows,
+                &arrivals.times,
+                serve.batch,
+                serve.overlap,
+                serve.slo,
+                &serve.policy,
+            );
+            (schedule, single.makespan)
+        };
+        let latency = LatencyStats::from_latencies(
+            &schedule
+                .finish_times
+                .iter()
+                .zip(&arrivals.times)
+                .map(|(f, a)| f - a)
+                .collect::<Vec<f64>>(),
+        );
+        ClusterReport {
+            model: model.name.clone(),
+            backend: backend.into(),
+            cluster,
+            serve,
+            layers,
+            arrivals,
+            latency,
+            single_makespan,
             schedule,
             fleet,
             chaos,
@@ -297,6 +428,9 @@ impl ClusterReport {
         }
         if self.serve.slo.is_finite() {
             o.insert("slo_ms".into(), Json::Num(self.serve.slo * 1e3));
+        }
+        if !self.serve.density.is_static() {
+            o.insert("density".into(), Json::Str(self.serve.density.spec()));
         }
         o.insert("makespan_s".into(), Json::Num(self.makespan()));
         o.insert("single_makespan_s".into(), Json::Num(self.single_makespan));
@@ -686,6 +820,108 @@ mod tests {
             calm.final_arrays
         );
         assert!(report.schedule.chaos.is_some());
+    }
+
+    #[test]
+    fn assemble_model_static_is_bit_identical_to_assemble_backend() {
+        let model = zoo::s2net();
+        let layers = quick_layers();
+        let serve = ServeConfig::new(2, 0.5).with_requests(8);
+        for shard in ShardStrategy::ALL {
+            for arrays in [1usize, 3] {
+                let classic = ClusterReport::assemble_backend(
+                    model.name.clone(),
+                    "s2",
+                    ClusterConfig::new(arrays, shard),
+                    serve,
+                    layers.clone(),
+                );
+                let modeled = ClusterReport::assemble_model(
+                    &model,
+                    "s2",
+                    ClusterConfig::new(arrays, shard),
+                    serve,
+                    layers.clone(),
+                    None,
+                    FleetSpec::uniform(),
+                    ChaosSpec::OFF,
+                );
+                assert_eq!(classic.schedule, modeled.schedule, "{shard:?} x{arrays}");
+                assert_eq!(
+                    classic.to_json().to_string(),
+                    modeled.to_json().to_string(),
+                    "classic JSON must stay byte-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_model_dynamic_runs_every_strategy_and_reports_density() {
+        let model = zoo::s2net();
+        let layers = quick_layers();
+        let cfg = SimConfig::new(ArrayConfig::new(8, 8)).with_samples(1);
+        let backend = crate::backend::BackendKind::Naive.build(&cfg);
+        let table = crate::backend::dynamic_wall_table(
+            backend.as_ref(),
+            &model,
+            model.weight_density,
+            false,
+        );
+        let serve = ServeConfig::new(2, 0.5)
+            .with_requests(12)
+            .with_seed(7)
+            .with_density(crate::serve::DensityModel::Uniform { lo: 0.1, hi: 0.9 });
+        for shard in ShardStrategy::ALL {
+            for arrays in [1usize, 3] {
+                let r = ClusterReport::assemble_model(
+                    &model,
+                    "naive",
+                    ClusterConfig::new(arrays, shard),
+                    serve,
+                    layers.clone(),
+                    Some(&table),
+                    FleetSpec::uniform(),
+                    ChaosSpec::OFF,
+                );
+                assert!(r.makespan() > 0.0, "{shard:?} x{arrays}");
+                assert!(
+                    r.makespan() >= r.lower_bound() - 1e-9,
+                    "{shard:?} x{arrays}"
+                );
+                assert!(
+                    r.latency.max > r.latency.min,
+                    "{shard:?} x{arrays}: heterogeneous requests must spread latency"
+                );
+                let j = Json::parse(&r.to_json().to_string()).unwrap();
+                assert_eq!(j.str_field("density").unwrap(), "uniform:0.1:0.9");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "heterogeneous fleets")]
+    fn assemble_model_rejects_dynamic_density_with_chaos() {
+        let model = zoo::s2net();
+        let layers = quick_layers();
+        let serve = ServeConfig::new(2, 0.5)
+            .with_requests(4)
+            .with_density(crate::serve::DensityModel::Uniform { lo: 0.2, hi: 0.8 });
+        let chaos = ChaosSpec {
+            mtbf: 1.0,
+            mttr: 1.0,
+            ..ChaosSpec::OFF
+        };
+        ClusterReport::assemble_model(
+            &model,
+            "s2",
+            ClusterConfig::default(),
+            serve,
+            layers,
+            None,
+            FleetSpec::uniform(),
+            chaos,
+        );
     }
 
     #[test]

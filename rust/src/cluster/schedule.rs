@@ -144,6 +144,325 @@ fn bound_from(arrivals: &[f64], chain: f64, transfer: f64) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// [`bound_from`] under per-request realized durations: each request's
+/// floor uses its *own* critical path (`rows` is the request-major
+/// `n_requests × n_nodes` duration matrix). With uniform rows this is
+/// the static bound, bit-for-bit (same per-element fold).
+fn bound_from_dynamic(dag: &LayerDag, rows: &[f64], arrivals: &[f64], transfer: f64) -> f64 {
+    let n_nodes = dag.len();
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, a)| a + dag.critical_path(&rows[i * n_nodes..(i + 1) * n_nodes]) + transfer)
+        .fold(0.0, f64::max)
+}
+
+/// [`build_cluster_slo`] under per-request dynamic sparsity: `rows` is
+/// the realized request-major `n_requests × n_nodes` duration matrix
+/// ([`crate::serve::density::realized_rows`]) and every per-array
+/// pipeline runs the dynamic scheduling engines
+/// ([`crate::serve::traffic::evaluate_with_slo_dynamic`]). `durations`
+/// remain the static (deployment-time) walls — they only steer
+/// structural decisions that must not depend on the request mix, i.e.
+/// [`ShardStrategy::LayerPipeline`]'s stage balancing. With uniform
+/// rows every strategy reproduces [`build_cluster_slo`] bit-for-bit
+/// (same float ops in the same order); heterogeneous fleets and chaos
+/// injection are not combined with dynamic density (the callers
+/// reject that pairing).
+#[allow(clippy::too_many_arguments)]
+pub fn build_cluster_dynamic(
+    strategy: ShardStrategy,
+    dag: &LayerDag,
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    rows: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let arrays = arrays.max(1);
+    assert_eq!(
+        rows.len(),
+        arrivals.len() * dag.len(),
+        "dynamic rows must be a full n_requests x n_nodes matrix"
+    );
+    match strategy {
+        ShardStrategy::DataParallel => {
+            data_parallel_dynamic(dag, rows, arrivals, batch, overlap, arrays, slo, policy)
+        }
+        ShardStrategy::LayerPipeline => layer_pipeline_dynamic(
+            dag, durations, out_bytes, rows, arrivals, batch, overlap, arrays, slo, policy,
+        ),
+        ShardStrategy::TensorShard => tensor_shard_dynamic(
+            dag, tiles, out_bytes, rows, arrivals, batch, overlap, arrays, slo, policy,
+        ),
+    }
+}
+
+/// [`data_parallel_slo`] under dynamic density: each replica's
+/// sub-workload carries the member requests' own duration rows, so
+/// heterogeneous work lands on the replica the round-robin placement
+/// chose — exactly what makes per-request tail latency input-dependent.
+#[allow(clippy::too_many_arguments)]
+fn data_parallel_dynamic(
+    dag: &LayerDag,
+    rows: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let n_nodes = dag.len();
+    let mut member: Vec<Vec<usize>> = vec![Vec::new(); arrays];
+    for i in 0..arrivals.len() {
+        member[i % arrays].push(i);
+    }
+    let mut lanes = Vec::with_capacity(arrays);
+    let mut finish_times = vec![0.0f64; arrivals.len()];
+    let mut makespan = 0.0f64;
+    for requests in &member {
+        let sub: Vec<f64> = requests.iter().map(|&i| arrivals[i]).collect();
+        let mut sub_rows = Vec::with_capacity(requests.len() * n_nodes);
+        for &i in requests {
+            sub_rows.extend_from_slice(&rows[i * n_nodes..(i + 1) * n_nodes]);
+        }
+        let s = traffic::evaluate_with_slo_dynamic(
+            dag, &sub_rows, &sub, batch, overlap, slo, policy,
+        );
+        for (slot, &i) in requests.iter().enumerate() {
+            finish_times[i] = s.finish_times[slot];
+        }
+        makespan = makespan.max(s.makespan);
+        lanes.push(LaneStats {
+            busy: s.busy,
+            jobs: s.n_jobs,
+        });
+    }
+    ClusterSchedule {
+        lanes,
+        finish_times,
+        makespan,
+        link_bytes: 0.0,
+        mandatory_transfer: 0.0,
+        lower_bound: bound_from_dynamic(dag, rows, arrivals, 0.0),
+        chaos: None,
+    }
+}
+
+/// [`layer_pipeline_slo`] under dynamic density: stage cuts still come
+/// from the static walls (a deployment decision), but each stage
+/// schedules its column slice of the realized rows, so a dense request
+/// stalls exactly the stages it actually loads. Boundary transfers stay
+/// on the static compressed-bytes model.
+#[allow(clippy::too_many_arguments)]
+fn layer_pipeline_dynamic(
+    dag: &LayerDag,
+    durations: &[f64],
+    out_bytes: &[f64],
+    rows: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let n_nodes = dag.len();
+    let n_req = arrivals.len();
+    let topo = dag.topo_order();
+    let topo_durs: Vec<f64> = topo.iter().map(|&n| durations[n]).collect();
+    let ends = balanced_stages(&topo_durs, arrays);
+    let n_stages = ends.len();
+
+    if n_stages == 1 {
+        let s =
+            traffic::evaluate_with_slo_dynamic(dag, rows, arrivals, batch, overlap, slo, policy);
+        let mut lanes = vec![LaneStats::default(); arrays];
+        if let Some(first) = lanes.first_mut() {
+            *first = LaneStats {
+                busy: s.busy,
+                jobs: s.n_jobs,
+            };
+        }
+        return ClusterSchedule {
+            lanes,
+            finish_times: s.finish_times,
+            makespan: s.makespan,
+            link_bytes: 0.0,
+            mandatory_transfer: 0.0,
+            lower_bound: bound_from_dynamic(dag, rows, arrivals, 0.0),
+            chaos: None,
+        };
+    }
+
+    let mut stage_of = vec![0usize; dag.len()];
+    {
+        let mut lo = 0usize;
+        for (s, &hi) in ends.iter().enumerate() {
+            for &node in &topo[lo..hi] {
+                stage_of[node] = s;
+            }
+            lo = hi;
+        }
+    }
+
+    let mut lanes = vec![LaneStats::default(); arrays];
+    let mut makespan = 0.0f64;
+    let mut link_bytes_per_req = 0.0f64;
+    let mut mandatory_transfer = 0.0f64;
+    let mut stage_arrivals: Vec<f64> = arrivals.to_vec();
+    let mut finish_times: Vec<f64> = arrivals.to_vec();
+    let mut lo = 0usize;
+    for (s, &hi) in ends.iter().enumerate() {
+        let nodes = &topo[lo..hi];
+        if s > 0 {
+            let mut moved = 0.0f64;
+            let mut seen = vec![false; dag.len()];
+            for &node in nodes {
+                for &p in dag.deps(node) {
+                    if stage_of[p] < s && !seen[p] {
+                        seen[p] = true;
+                        moved += out_bytes[p];
+                    }
+                }
+            }
+            let t = link_seconds(moved);
+            link_bytes_per_req += moved;
+            mandatory_transfer += t;
+            for (a, f) in stage_arrivals.iter_mut().zip(&finish_times) {
+                *a = f + t;
+            }
+        }
+        let mut local = vec![usize::MAX; dag.len()];
+        for (j, &node) in nodes.iter().enumerate() {
+            local[node] = j;
+        }
+        let sub_deps: Vec<Vec<usize>> = nodes
+            .iter()
+            .map(|&node| {
+                dag.deps(node)
+                    .iter()
+                    .filter(|&&p| local[p] != usize::MAX)
+                    .map(|&p| local[p])
+                    .collect()
+            })
+            .collect();
+        let sub_dag = LayerDag::new(sub_deps).expect("a stage cut preserves acyclicity");
+        // the stage's column slice of the realized matrix, request-major
+        let mut sub_rows = Vec::with_capacity(n_req * nodes.len());
+        for r in 0..n_req {
+            for &node in nodes {
+                sub_rows.push(rows[r * n_nodes + node]);
+            }
+        }
+        let sched = traffic::evaluate_with_slo_dynamic(
+            &sub_dag,
+            &sub_rows,
+            &stage_arrivals,
+            batch,
+            overlap,
+            slo,
+            policy,
+        );
+        lanes[s] = LaneStats {
+            busy: sched.busy,
+            jobs: sched.n_jobs,
+        };
+        makespan = makespan.max(sched.makespan);
+        finish_times = sched.finish_times;
+        lo = hi;
+    }
+    ClusterSchedule {
+        lanes,
+        makespan,
+        link_bytes: link_bytes_per_req * arrivals.len() as f64,
+        mandatory_transfer,
+        lower_bound: bound_from_dynamic(dag, rows, arrivals, mandatory_transfer),
+        finish_times,
+        chaos: None,
+    }
+}
+
+/// [`tensor_shard_slo`] under dynamic density: the per-node share and
+/// gather terms are computed exactly like the static path (they depend
+/// on tiles and bytes, not on the request), then applied to every
+/// request's realized row before the lockstep logical pipeline runs.
+#[allow(clippy::too_many_arguments)]
+fn tensor_shard_dynamic(
+    dag: &LayerDag,
+    tiles: &[usize],
+    out_bytes: &[f64],
+    rows: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let n = arrays as f64;
+    let n_nodes = dag.len();
+    let mut mandatory_transfer = 0.0f64;
+    let mut gather_bytes_per_req = 0.0f64;
+    let mut share = Vec::with_capacity(n_nodes);
+    let mut gather_term = Vec::with_capacity(n_nodes);
+    for (&t, &bytes) in tiles.iter().zip(out_bytes) {
+        let s = if t == 0 {
+            1.0
+        } else {
+            t.div_ceil(arrays) as f64 / t as f64
+        };
+        let gather = if arrays > 1 {
+            gather_bytes_per_req += bytes * (n - 1.0);
+            link_seconds(bytes) * (n - 1.0) / n
+        } else {
+            0.0
+        };
+        mandatory_transfer += gather;
+        share.push(s);
+        gather_term.push(gather);
+    }
+    let mut sched_rows = Vec::with_capacity(rows.len());
+    for r in 0..arrivals.len() {
+        for j in 0..n_nodes {
+            sched_rows.push(rows[r * n_nodes + j] * share[j] + gather_term[j]);
+        }
+    }
+    let s = traffic::evaluate_with_slo_dynamic(
+        dag,
+        &sched_rows,
+        arrivals,
+        batch,
+        overlap,
+        slo,
+        policy,
+    );
+    let lanes = vec![
+        LaneStats {
+            busy: s.busy,
+            jobs: s.n_jobs,
+        };
+        arrays
+    ];
+    ClusterSchedule {
+        lanes,
+        makespan: s.makespan,
+        link_bytes: gather_bytes_per_req * arrivals.len() as f64,
+        mandatory_transfer,
+        // as in the static path, the gathers already ride inside the
+        // effective durations and therefore inside the critical path
+        lower_bound: bound_from_dynamic(dag, &sched_rows, arrivals, 0.0),
+        finish_times: s.finish_times,
+        chaos: None,
+    }
+}
+
 /// Round-robin replica placement: request `i` runs whole on array
 /// `i % N` (with uniform per-request work this *is* least-loaded, and
 /// unlike a load-estimate greedy it keeps each replica's arrival list a
@@ -841,6 +1160,104 @@ mod tests {
                     assert_eq!(legacy, fleet, "{strategy:?} x{arrays} slo {slo}");
                     assert!(fleet.chaos.is_none());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_with_uniform_rows_is_build_cluster_slo_bit_exact() {
+        let (dag, d, tiles, bytes) = chain4();
+        let arrivals = vec![0.0, 0.1, 0.15, 0.4, 0.42, 0.9];
+        let rows: Vec<f64> = arrivals.iter().flat_map(|_| d.clone()).collect();
+        for strategy in ShardStrategy::ALL {
+            for arrays in [1usize, 2, 3] {
+                for slo in [f64::INFINITY, 0.35] {
+                    let legacy = build_cluster_slo(
+                        strategy,
+                        &dag,
+                        &d,
+                        &tiles,
+                        &bytes,
+                        &arrivals,
+                        2,
+                        0.5,
+                        arrays,
+                        slo,
+                        &SchedPolicy::default(),
+                    );
+                    let dynamic = build_cluster_dynamic(
+                        strategy,
+                        &dag,
+                        &d,
+                        &tiles,
+                        &bytes,
+                        &rows,
+                        &arrivals,
+                        2,
+                        0.5,
+                        arrays,
+                        slo,
+                        &SchedPolicy::default(),
+                    );
+                    assert_eq!(legacy, dynamic, "{strategy:?} x{arrays} slo {slo}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_heavy_request_lands_on_its_lane_and_respects_bounds() {
+        let (dag, d, tiles, bytes) = chain4();
+        let arrivals = vec![0.0, 0.05, 0.1, 0.4];
+        let uniform: Vec<f64> = arrivals.iter().flat_map(|_| d.clone()).collect();
+        // request 2 is twice as heavy on every layer
+        let mut rows = Vec::new();
+        for r in 0..arrivals.len() {
+            for &w in &d {
+                rows.push(if r == 2 { w * 2.0 } else { w });
+            }
+        }
+        for strategy in ShardStrategy::ALL {
+            for arrays in [1usize, 2, 3] {
+                let base = build_cluster_dynamic(
+                    strategy,
+                    &dag,
+                    &d,
+                    &tiles,
+                    &bytes,
+                    &uniform,
+                    &arrivals,
+                    1,
+                    0.5,
+                    arrays,
+                    f64::INFINITY,
+                    &SchedPolicy::default(),
+                );
+                let heavy = build_cluster_dynamic(
+                    strategy,
+                    &dag,
+                    &d,
+                    &tiles,
+                    &bytes,
+                    &rows,
+                    &arrivals,
+                    1,
+                    0.5,
+                    arrays,
+                    f64::INFINITY,
+                    &SchedPolicy::default(),
+                );
+                assert!(
+                    heavy.makespan >= heavy.lower_bound - 1e-12,
+                    "{strategy:?} x{arrays}"
+                );
+                assert!(
+                    heavy.finish_times[2] > base.finish_times[2],
+                    "{strategy:?} x{arrays}: the doubled request must finish later \
+                     ({} vs {})",
+                    heavy.finish_times[2],
+                    base.finish_times[2]
+                );
             }
         }
     }

@@ -242,8 +242,15 @@ impl Coordinator {
         subset: FeatureSubset,
         serve: &crate::serve::ServeConfig,
     ) -> crate::serve::ServeReport {
-        let layers = self.layer_results_subset(model, subset);
-        crate::serve::ServeReport::assemble(model.name.clone(), *serve, layers)
+        if serve.density.is_static() && model.deps.is_none() {
+            let layers = self.layer_results_subset(model, subset);
+            return crate::serve::ServeReport::assemble(model.name.clone(), *serve, layers);
+        }
+        // dynamic density / branchy topology: the same schedule engine
+        // family, driven through the model-aware assembly (the S²
+        // backend keeps the walls bit-identical to the classic path)
+        let backend = crate::backend::S2Backend::new(self.clone());
+        self.simulate_model_pipelined_with(&backend, model, subset, serve)
     }
 
     /// [`Coordinator::simulate_model_pipelined`] under an arbitrary
@@ -261,11 +268,30 @@ impl Coordinator {
     ) -> crate::serve::ServeReport {
         let layers =
             crate::backend::layer_results_subset(backend, model, subset, self.cfg.seed);
-        crate::serve::ServeReport::assemble_backend(
-            model.name.clone(),
+        if serve.density.is_static() && model.deps.is_none() {
+            return crate::serve::ServeReport::assemble_backend(
+                model.name.clone(),
+                backend.tag(),
+                *serve,
+                layers,
+            );
+        }
+        let table = if serve.density.is_static() {
+            None
+        } else {
+            Some(crate::backend::dynamic_wall_table(
+                backend,
+                model,
+                model.weight_density,
+                true,
+            ))
+        };
+        crate::serve::ServeReport::assemble_model(
+            model,
             backend.tag(),
             *serve,
             layers,
+            table.as_deref(),
         )
     }
 
@@ -301,8 +327,17 @@ impl Coordinator {
         serve: &crate::serve::ServeConfig,
         cluster: &crate::cluster::ClusterConfig,
     ) -> crate::cluster::ClusterReport {
-        let layers = self.layer_results_subset(model, subset);
-        crate::cluster::ClusterReport::assemble(model.name.clone(), *cluster, *serve, layers)
+        if serve.density.is_static() && model.deps.is_none() {
+            let layers = self.layer_results_subset(model, subset);
+            return crate::cluster::ClusterReport::assemble(
+                model.name.clone(),
+                *cluster,
+                *serve,
+                layers,
+            );
+        }
+        let backend = crate::backend::S2Backend::new(self.clone());
+        self.simulate_model_cluster_with(&backend, model, subset, serve, cluster)
     }
 
     /// [`Coordinator::simulate_model_cluster`] under an arbitrary
@@ -320,12 +355,34 @@ impl Coordinator {
     ) -> crate::cluster::ClusterReport {
         let layers =
             crate::backend::layer_results_subset(backend, model, subset, self.cfg.seed);
-        crate::cluster::ClusterReport::assemble_backend(
-            model.name.clone(),
+        if serve.density.is_static() && model.deps.is_none() {
+            return crate::cluster::ClusterReport::assemble_backend(
+                model.name.clone(),
+                backend.tag(),
+                *cluster,
+                *serve,
+                layers,
+            );
+        }
+        let table = if serve.density.is_static() {
+            None
+        } else {
+            Some(crate::backend::dynamic_wall_table(
+                backend,
+                model,
+                model.weight_density,
+                true,
+            ))
+        };
+        crate::cluster::ClusterReport::assemble_model(
+            model,
             backend.tag(),
             *cluster,
             *serve,
             layers,
+            table.as_deref(),
+            crate::cluster::FleetSpec::uniform(),
+            crate::cluster::ChaosSpec::OFF,
         )
     }
 

@@ -22,6 +22,8 @@ s2engine serve   <model> [--batch 4 --requests 32 --overlap 0.6
                   --rate IMGS_PER_S --subset avg|max|min --out serve.json
                   --arrival uniform|poisson:R|mmpp:R[:B[:S]]|diurnal:R|trace:F
                   --slo-ms MS  # SLO-aware dynamic batching budget
+                  --density static|uniform:LO:HI|normal:MEAN:SIGMA
+                            |bimodal:LO:HI:P|dtrace:F  # per-request density
                   --backend s2|naive|gate|skipf|skipw|scnn|sparten
                   --no-fastpath|--no-window-memo|--no-steady
                   plus the simulate array/effort options]
@@ -40,6 +42,7 @@ s2engine sweep   fig10|...|fig17|serving|cluster|backends|pareto
                   [--requests N]  # serving/cluster/backends
 s2engine sweep   --grid 'models=paper;arrays=1,2,4,8;shard=all;backend=all;
                   arrival=poisson:800;slo=20,inf;
+                  density=static,uniform:0.1:0.6;
                   fleet=uniform,1x2+0.5x2;fail=off,0.05:0.01;straggle=off,0.2:4'
                   [--grid grid.json] [--out DIR --resume] [--workers N]
                   [--backend s2,scnn,...]  # shorthand for the grid axis
@@ -171,6 +174,14 @@ fn serve_config_arg(
     );
     if slo_ms > 0.0 {
         serve = serve.with_slo(slo_ms * 1e-3);
+    }
+    if let Some(spec) = args.get("density") {
+        // per-request density model; `dtrace:FILE` loads a replay trace
+        // (CLI-only — traces are not a stable sweep identity)
+        serve = serve.with_density(
+            s2engine::serve::DensityModel::from_spec(spec)
+                .map_err(|e| anyhow!("bad --density: {e}"))?,
+        );
     }
     Ok(serve)
 }
@@ -320,6 +331,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if serve.slo.is_finite() {
         println!("dynamic batching: {:.3} ms queueing budget", serve.slo * 1e3);
     }
+    if !serve.is_static_density() {
+        println!("per-request density: {}", serve.density.spec());
+    }
     parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();
     let r = Coordinator::new(cfg)
@@ -401,6 +415,20 @@ fn cluster_cmd(args: &Args) -> Result<()> {
             "chaos: stragglers p={} at {}x slowdown",
             chaos.straggle_p, chaos.straggle_factor
         );
+    }
+    if !serve.is_static_density() {
+        // the chaos engine rewrites the schedule the realized rows were
+        // built for; reject the pairing here instead of panicking later
+        anyhow::ensure!(
+            fleet.is_uniform() && chaos.is_off(),
+            "--density models are not combined with --fleet/--fail/--straggle"
+        );
+        anyhow::ensure!(
+            !args.has_flag("autoscale"),
+            "--autoscale does not take --density models (the controller \
+             re-serves epochs on the legacy fleet engine)"
+        );
+        println!("per-request density: {}", serve.density.spec());
     }
     parity_note(kind, &cfg);
     let t0 = std::time::Instant::now();

@@ -123,6 +123,17 @@ pub struct Model {
     /// Std-dev of per-image feature density — wider for AlexNet per the
     /// Fig. 3 distributions; drives the max/avg/min bands of Fig. 14.
     pub feature_density_sigma: f64,
+    /// Explicit layer-precedence edges (`deps[i]` = indices of layers
+    /// that must finish before layer `i` starts). `None` — every
+    /// sequential CNN — means the linear chain, exactly the historical
+    /// topology ([`crate::serve::LayerDag::from_model`]). The residual
+    /// zoo models carry real skip edges here.
+    pub deps: Option<Vec<Vec<usize>>>,
+    /// Per-layer multiplier applied to *dynamically sampled* feature
+    /// densities ([`crate::serve::density`]); empty = all 1.0. The
+    /// spiking nets use it for per-timestep event decay. The static
+    /// density paths never read it.
+    pub density_scale: Vec<f64>,
 }
 
 impl Model {

@@ -33,6 +33,8 @@ pub fn alexnet() -> Model {
         // AlexNet has the widest per-image density spread (Fig. 3), which
         // is why its Fig. 14 error bars are the largest.
         feature_density_sigma: 0.13,
+        deps: None,
+        density_scale: Vec::new(),
     }
 }
 
@@ -70,6 +72,8 @@ pub fn vgg16() -> Model {
         weight_density: 0.32,
         feature_density: 0.28,
         feature_density_sigma: 0.08,
+        deps: None,
+        density_scale: Vec::new(),
     }
 }
 
@@ -119,6 +123,8 @@ pub fn resnet50() -> Model {
         weight_density: 0.24,
         feature_density: 0.34,
         feature_density_sigma: 0.09,
+        deps: None,
+        density_scale: Vec::new(),
     }
 }
 
@@ -137,6 +143,80 @@ pub fn s2net() -> Model {
         weight_density: 0.35,
         feature_density: 0.45,
         feature_density_sigma: 0.10,
+        deps: None,
+        density_scale: Vec::new(),
+    }
+}
+
+/// A spiking (event-driven) convolutional network in the style of the
+/// `SparseSNN` reference (see SNIPPETS.md): one inference is `T = 4`
+/// timestep passes over a 4-layer CIFAR/DVS-scale stack. We unroll the
+/// timestep loop into 16 scheduled layers (`conv_t{t}_{i}`) so the
+/// serving/cluster schedulers see the real work shape without needing a
+/// time dimension. Event rates are very low (mean density ~0.12) and
+/// *decay* across timesteps as membrane potentials settle — expressed
+/// via `density_scale = 0.6^t`, which the dynamic per-request density
+/// sampler multiplies in. Static-density paths treat it like any other
+/// chain model at the mean density.
+pub fn snn() -> Model {
+    let mut layers = Vec::new();
+    let mut density_scale = Vec::new();
+    for t in 0..4 {
+        layers.push(LayerDesc::new(format!("conv_t{t}_1"), 128, 128, 1, 5, 5, 4, 2, 2));
+        layers.push(LayerDesc::new(format!("conv_t{t}_2"), 64, 64, 4, 5, 5, 8, 2, 2));
+        layers.push(LayerDesc::new(format!("conv_t{t}_3"), 32, 32, 8, 3, 3, 8, 2, 1));
+        layers.push(LayerDesc::new(format!("conv_t{t}_4"), 16, 16, 8, 3, 3, 16, 2, 1));
+        let decay = 0.6f64.powi(t as i32);
+        for _ in 0..4 {
+            density_scale.push(decay);
+        }
+    }
+    Model {
+        name: "snn".into(),
+        layers,
+        weight_density: 0.5,
+        // Spike rasters are far sparser than ReLU feature maps.
+        feature_density: 0.12,
+        feature_density_sigma: 0.05,
+        deps: None,
+        density_scale,
+    }
+}
+
+/// An 8-layer residual network (CIFAR ResNet-style) whose skip
+/// connections are *real* precedence edges: layers 3/5/7 each wait on
+/// both the previous layer and the skip source two layers back. This is
+/// the zoo's branchy-[`crate::serve::LayerDag`] workload — every other
+/// zoo net schedules as a chain.
+pub fn resnet8() -> Model {
+    let layers = vec![
+        LayerDesc::new("stem", 32, 32, 3, 3, 3, 16, 1, 1),
+        LayerDesc::new("res1a", 32, 32, 16, 3, 3, 16, 1, 1),
+        LayerDesc::new("res1b", 32, 32, 16, 3, 3, 16, 1, 1),
+        LayerDesc::new("res2a", 32, 32, 16, 3, 3, 32, 2, 1),
+        LayerDesc::new("res2b", 16, 16, 32, 3, 3, 32, 1, 1),
+        LayerDesc::new("res3a", 16, 16, 32, 3, 3, 64, 2, 1),
+        LayerDesc::new("res3b", 8, 8, 64, 3, 3, 64, 1, 1),
+        LayerDesc::new("head", 8, 8, 64, 1, 1, 64, 1, 0),
+    ];
+    let deps = vec![
+        vec![],        // stem
+        vec![0],       // res1a
+        vec![1],       // res1b
+        vec![2, 0],    // res2a: skip from stem
+        vec![3],       // res2b
+        vec![4, 2],    // res3a: skip from res1b
+        vec![5],       // res3b
+        vec![6, 4],    // head: skip from res2b
+    ];
+    Model {
+        name: "resnet8".into(),
+        layers,
+        weight_density: 0.30,
+        feature_density: 0.35,
+        feature_density_sigma: 0.10,
+        deps: Some(deps),
+        density_scale: Vec::new(),
     }
 }
 
@@ -167,6 +247,8 @@ pub fn by_name(name: &str) -> Option<Model> {
         "vgg16" => Some(vgg16()),
         "resnet50" => Some(resnet50()),
         "s2net" => Some(s2net()),
+        "snn" => Some(snn()),
+        "resnet8" => Some(resnet8()),
         _ => None,
     }
 }
@@ -242,6 +324,49 @@ mod tests {
     #[test]
     fn by_name_lookup() {
         assert!(by_name("vgg16").is_some());
+        assert!(by_name("snn").is_some());
+        assert!(by_name("resnet8").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn snn_timestep_structure() {
+        let m = snn();
+        assert_eq!(m.layers.len(), 16);
+        assert_eq!(m.density_scale.len(), 16);
+        assert!(m.deps.is_none(), "snn schedules as a chain");
+        // Timestep decay: scale is constant within a timestep and decays
+        // geometrically across them.
+        for t in 0..4 {
+            let expect = 0.6f64.powi(t as i32);
+            for i in 0..4 {
+                assert_eq!(m.density_scale[t * 4 + i], expect);
+            }
+        }
+        assert!(m.density_scale[15] < m.density_scale[0]);
+        // Layer shapes follow the SparseSNN stack.
+        assert_eq!(m.layers[0].in_h, 128);
+        assert_eq!(m.layers[0].cin, 1);
+        assert_eq!(m.layers[3].cout, 16);
+        assert_eq!(m.layer("conv_t3_4").unwrap().out_h(), 8);
+    }
+
+    #[test]
+    fn resnet8_skip_edges_are_valid() {
+        let m = resnet8();
+        assert_eq!(m.layers.len(), 8);
+        let deps = m.deps.as_ref().expect("resnet8 carries real skip edges");
+        assert_eq!(deps.len(), 8);
+        // Skip sources sit two layers upstream of the joins.
+        assert_eq!(deps[3], vec![2, 0]);
+        assert_eq!(deps[5], vec![4, 2]);
+        assert_eq!(deps[7], vec![6, 4]);
+        // Edges are acyclic by construction (all point backwards).
+        for (i, d) in deps.iter().enumerate() {
+            for &p in d {
+                assert!(p < i, "dep {p} of layer {i} must be upstream");
+            }
+        }
+        assert!(m.density_scale.is_empty());
     }
 }

@@ -2,7 +2,8 @@
 //! III/V make per-layer, lifted to the *network level*.
 //!
 //! One [`Grid`] declaration over the `backend` × `arrays` axes for the
-//! three evaluated CNNs at a fixed loaded serving point (batch 4,
+//! three evaluated CNNs — plus the event workloads `snn` and `resnet8`
+//! — at a fixed loaded serving point (batch 4,
 //! overlap 0.6, data-parallel replication): every comparator —
 //! S²Engine, the naive dense array, a representative gating design
 //! (Cnvlutin-class), SCNN and SparTen — serves the *same* batched
@@ -26,6 +27,10 @@ use crate::sweep::{Grid, Job, Runner, Store};
 
 /// The three CNNs the paper evaluates, in reporting order.
 const PAPER_MODELS: [&str; 3] = ["alexnet", "vgg16", "resnet50"];
+/// Event-driven additions to the roster: the spiking model (timestep
+/// passes at very low density — the regime sparse architectures were
+/// built for) and the residual skip-connection DAG.
+const EVENT_MODELS: [&str; 2] = ["snn", "resnet8"];
 /// The compared backends, in Table V's reporting order — the single
 /// roster the head-to-head table and `benches/backend_compare.rs`
 /// (and its required `BENCH_backends.json` metrics) share.
@@ -61,8 +66,9 @@ pub fn backends_in(
     requests: usize,
     store: &mut Store,
 ) -> String {
+    let models: Vec<&str> = PAPER_MODELS.into_iter().chain(EVENT_MODELS).collect();
     let grid = Grid::new(effort, seed)
-        .models(&PAPER_MODELS)
+        .models(&models)
         .scales(&[(SCALE, SCALE)])
         .batches(&[BATCH])
         .overlaps(&[OVERLAP])
@@ -98,7 +104,7 @@ pub fn backends_in(
     // metrics existed carry zeros — render "n/a", never measurements
     let mut any_legacy = false;
     let fleet = ARRAYS[1];
-    for m in PAPER_MODELS {
+    for m in PAPER_MODELS.into_iter().chain(EVENT_MODELS) {
         for b in BACKENDS {
             let one = res.get(&job(m, b, 1));
             let four = res.get(&job(m, b, fleet));
@@ -156,7 +162,7 @@ mod tests {
     #[test]
     fn head_to_head_covers_models_and_backends() {
         let s = backends(tiny(), 0xc0de_cafe_0070, 0);
-        for m in PAPER_MODELS {
+        for m in PAPER_MODELS.into_iter().chain(EVENT_MODELS) {
             assert!(s.contains(m), "missing {m} in:\n{s}");
         }
         for b in BACKENDS {
@@ -174,7 +180,8 @@ mod tests {
         let seed = 0xc0de_cafe_0071;
         let mut store = Store::in_memory();
         let first = backends_in(effort, seed, 0, &mut store);
-        let expected = PAPER_MODELS.len() * BACKENDS.len() * ARRAYS.len();
+        let expected =
+            (PAPER_MODELS.len() + EVENT_MODELS.len()) * BACKENDS.len() * ARRAYS.len();
         assert_eq!(store.len(), expected);
         let second = backends_in(effort, seed, 0, &mut store);
         assert_eq!(first, second);

@@ -20,8 +20,14 @@ use crate::sweep::{Grid, Job, Runner, Store};
 
 /// The three CNNs the paper evaluates, in reporting order.
 const PAPER_MODELS: [&str; 3] = ["alexnet", "vgg16", "resnet50"];
+/// The event-driven workloads of the second section: the spiking model
+/// (timestep-decayed density) and the residual skip-connection DAG.
+const EVENT_MODELS: [&str; 2] = ["snn", "resnet8"];
 /// Cluster sizes the summary sweeps.
 const ARRAYS: [usize; 4] = [1, 2, 4, 8];
+/// Cluster sizes of the event-workload section (kept small: the point
+/// is shard-strategy coverage of the branchy DAG, not a scaling curve).
+const EVENT_ARRAYS: [usize; 2] = [1, 4];
 /// The fixed serving point (batching + overlap make the per-array
 /// pipelines representative of a loaded deployment).
 const BATCH: usize = 4;
@@ -126,7 +132,75 @@ pub fn cluster_in(
              metrics recorded); rerun into a fresh --out to measure it.\n",
         );
     }
+    out.push('\n');
+    out.push_str(&event_section(effort, seed, backend, requests, store));
     out
+}
+
+/// The second table: event workloads (spiking + residual DAG) scaled
+/// out under every shard strategy. At full effort (`--effort full`,
+/// layer stride 1) `resnet8` keeps its skip edges, so the pipeline and
+/// tensor shards schedule a genuinely branchy precedence graph.
+fn event_section(
+    effort: Effort,
+    seed: u64,
+    backend: BackendKind,
+    requests: usize,
+    store: &mut Store,
+) -> String {
+    let scale = backend.parity_scale().unwrap_or(16);
+    let grid = Grid::new(effort, seed)
+        .models(&EVENT_MODELS)
+        .scales(&[(scale, scale)])
+        .batches(&[BATCH])
+        .overlaps(&[OVERLAP])
+        .arrays(&EVENT_ARRAYS)
+        .shards(&ShardStrategy::ALL)
+        .backends(&[backend])
+        .requests(&[requests]);
+    let res = Runner::new().run(&grid.plan(), store);
+    let mut t = TextTable::new(
+        format!(
+            "Cluster — event workloads across N arrays ({scale}x{scale}, \
+             batch {BATCH}, overlap {OVERLAP}, backend {})",
+            backend.tag()
+        ),
+        &[
+            "model", "arrays", "shard", "img/s", "p99 lat", "occupancy",
+            "link MB", "scale-out eff",
+        ],
+    );
+    let array = ArrayConfig::new(scale, scale);
+    for m in EVENT_MODELS {
+        for n in EVENT_ARRAYS {
+            for s in ShardStrategy::ALL {
+                let job = Job::subset(m, FeatureSubset::Average, array, true, seed, effort)
+                    .with_batch(BATCH)
+                    .with_overlap(OVERLAP)
+                    .with_arrays(n)
+                    .with_shard(s)
+                    .with_backend(backend)
+                    .with_requests(requests);
+                let rec = res.get(&job);
+                let ok = rec.has_cluster_metrics();
+                let cell = |v: String| if ok { v } else { "n/a".to_string() };
+                t.row(vec![
+                    m.to_string(),
+                    n.to_string(),
+                    s.tag().to_string(),
+                    cell(format!("{:.1}", rec.throughput * rec.scaleout_eff * n as f64)),
+                    cell(format!("{:.3} ms", rec.cluster_p99_latency * 1e3)),
+                    cell(format!("{:.2}", rec.cluster_occupancy)),
+                    cell(format!("{:.2}", rec.link_bytes / 1e6)),
+                    cell(format!("{:.2}", rec.scaleout_eff)),
+                ]);
+            }
+        }
+    }
+    t.render()
+        + "\nReading: `snn` serves one inference as 4 timestep passes at \
+           decaying spike density; `resnet8` carries skip-connection \
+           precedence edges (kept at layer stride 1, i.e. --effort full).\n"
 }
 
 #[cfg(test)]
@@ -153,6 +227,16 @@ mod tests {
         assert!(s.contains("scale-out eff"));
         assert!(s.contains("1.00"), "single-array efficiency row present");
         assert!(!s.contains("n/a"), "fresh run has no legacy points:\n{s}");
+    }
+
+    #[test]
+    fn event_section_covers_models_and_strategies() {
+        let s = cluster(tiny(), 0xc0de_cafe_0044, BackendKind::S2, 0);
+        assert!(s.contains("event workloads"), "second section present:\n{s}");
+        for m in EVENT_MODELS {
+            assert!(s.contains(m), "missing {m} in:\n{s}");
+        }
+        assert!(!s.contains("n/a"), "fresh run measures every point:\n{s}");
     }
 
     #[test]

@@ -70,20 +70,34 @@ impl Effort {
     }
 
     /// Thin a model's layer list by the stride (always keeps the first
-    /// and last layers — they bound the shape spectrum).
+    /// and last layers — they bound the shape spectrum). A thinned model
+    /// loses its skip edges (`deps` indices would dangle) and schedules
+    /// as a chain of the surviving layers; `density_scale` is subset by
+    /// the same filter so each kept layer keeps its own multiplier.
     pub fn thin(&self, model: &Model) -> Model {
         if self.layer_stride <= 1 || model.layers.len() <= 2 {
             return model.clone();
         }
         let mut m = model.clone();
         let last = model.layers.len() - 1;
+        let keep = |i: usize| i == 0 || i == last || i % self.layer_stride == 0;
         m.layers = model
             .layers
             .iter()
             .enumerate()
-            .filter(|(i, _)| *i == 0 || *i == last || i % self.layer_stride == 0)
+            .filter(|(i, _)| keep(*i))
             .map(|(_, l)| l.clone())
             .collect();
+        m.deps = None;
+        if !model.density_scale.is_empty() {
+            m.density_scale = model
+                .density_scale
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| keep(*i))
+                .map(|(_, s)| *s)
+                .collect();
+        }
         m
     }
 }
@@ -175,6 +189,32 @@ mod tests {
         let m = zoo::vgg16();
         let t = Effort::FULL.thin(&m);
         assert_eq!(t.layers.len(), m.layers.len());
+        // identity path keeps deps and density_scale untouched
+        let r = Effort::FULL.thin(&zoo::resnet8());
+        assert!(r.deps.is_some());
+        let s = Effort::FULL.thin(&zoo::snn());
+        assert_eq!(s.density_scale, zoo::snn().density_scale);
+    }
+
+    #[test]
+    fn thin_drops_deps_and_subsets_density_scale() {
+        // actually-thinned models fall back to chain scheduling and keep
+        // each surviving layer's own density multiplier
+        let r = Effort::QUICK.thin(&zoo::resnet8());
+        assert!(r.layers.len() < 8);
+        assert!(r.deps.is_none());
+        let s = Effort::QUICK.thin(&zoo::snn());
+        assert_eq!(s.density_scale.len(), s.layers.len());
+        let m = zoo::snn();
+        let last = m.layers.len() - 1;
+        let expect: Vec<f64> = m
+            .density_scale
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i == 0 || *i == last || i % Effort::QUICK.layer_stride == 0)
+            .map(|(_, v)| *v)
+            .collect();
+        assert_eq!(s.density_scale, expect);
     }
 
     #[test]

@@ -1,11 +1,11 @@
 //! Layer dependency DAGs — the precedence structure the pipelined
 //! serving scheduler respects.
 //!
-//! Every CNN in the zoo is a linear chain today ([`LayerDag::chain`] /
-//! [`LayerDag::from_model`]), but the scheduler is written against a
-//! general DAG ([`LayerDag::new`]) so branchy topologies (ResNet-style
-//! residual forks, multi-head outputs) schedule correctly the day the
-//! model descriptors grow edges. Construction validates the graph: edges
+//! Sequential CNNs are linear chains ([`LayerDag::chain`]); the residual
+//! zoo models carry real skip edges in [`crate::models::Model::deps`],
+//! which [`LayerDag::from_model`] consumes, so the scheduler's general
+//! DAG path ([`LayerDag::new`]) is exercised by a real network
+//! (`resnet8`). Construction validates the graph: edges
 //! must name existing nodes and the graph must be acyclic; a
 //! deterministic topological order (Kahn's algorithm, lowest-index-first
 //! among ready nodes) is computed once and reused by the scheduler, so
@@ -74,9 +74,15 @@ impl LayerDag {
         LayerDag::new(deps).expect("a chain is always a valid DAG")
     }
 
-    /// The DAG of a zoo model (currently: its layer chain).
+    /// The DAG of a zoo model: its explicit [`Model::deps`] skip edges
+    /// when present (the residual nets), otherwise the layer chain —
+    /// exactly the historical topology for every sequential CNN.
     pub fn from_model(model: &Model) -> LayerDag {
-        LayerDag::chain(model.layers.len())
+        match &model.deps {
+            Some(deps) => LayerDag::new(deps.clone())
+                .unwrap_or_else(|e| panic!("model {} has an invalid layer DAG: {e}", model.name)),
+            None => LayerDag::chain(model.layers.len()),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -175,6 +181,23 @@ mod tests {
         let m = crate::models::zoo::alexnet();
         let d = LayerDag::from_model(&m);
         assert_eq!(d.len(), m.layers.len());
+        // chain models keep the historical chain topology, bit for bit
+        assert_eq!(d, LayerDag::chain(m.layers.len()));
+    }
+
+    #[test]
+    fn from_model_consumes_residual_skip_edges() {
+        let m = crate::models::zoo::resnet8();
+        let d = LayerDag::from_model(&m);
+        assert_eq!(d.len(), 8);
+        assert_ne!(d, LayerDag::chain(8));
+        assert_eq!(d.deps(3), &[2, 0]);
+        assert_eq!(d.deps(7), &[6, 4]);
+        assert_eq!(d.sinks(), vec![7]);
+        // all eight durations on the chain spine: critical path covers
+        // every layer because skips only add edges, never remove them
+        let durs = vec![1.0; 8];
+        assert_eq!(d.critical_path(&durs), 8.0);
     }
 
     #[test]

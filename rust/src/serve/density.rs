@@ -1,0 +1,582 @@
+//! Per-request dynamic feature-density models — the scenario-diversity
+//! layer that makes serving latency *input-dependent*.
+//!
+//! Historically every request of a serving run saw the same per-layer
+//! feature densities (the subset density plus a per-layer jitter), so
+//! the tail of the latency distribution was a pure function of the
+//! arrival timeline. Real traffic is not like that: per-input activation
+//! sparsity varies image to image, and for a sparsity-exploiting
+//! architecture that variation is precisely where the architecture's
+//! advantage (and its tail risk) lives. [`DensityModel`] samples a
+//! per-request, per-layer density vector from a configurable
+//! distribution — uniform band, truncated normal, bimodal easy/hard mix
+//! — or replays one from a trace file, on a salted deterministic
+//! [`crate::util::rng`] stream decorrelated from the arrival streams.
+//!
+//! ## Quantization
+//!
+//! Realized densities are snapped to [`DENSITY_LEVELS`] evenly spaced
+//! levels on `[DENSITY_FLOOR, DENSITY_CEIL]` (the clamp range the
+//! per-layer jitter has always used). Quantization bounds the number of
+//! distinct backend evaluations at `layers × DENSITY_LEVELS` — each
+//! level's wall time is simulated once (tile-memoized process-wide, see
+//! [`crate::backend::dynamic_wall_table`]) and every request indexes
+//! into that table — and it makes window-shape repeats likely enough
+//! that the dynamic scheduler fast path's template memoization still
+//! pays ([`crate::serve::fastpath::evaluate_windows_dynamic`]).
+//!
+//! ## Determinism and keys
+//!
+//! Sampling for request `r` is a pure function of
+//! `(model, seed, r, scale)`: each request gets its own SplitMix64
+//! stream jump, so resharding a cluster or re-slicing windows never
+//! changes what any request sees. [`DensityModel::Static`] is the
+//! default and the historical behaviour — configs carrying it are
+//! routed through the untouched static code paths, byte-identical by
+//! construction, and are elided from sweep canonical keys so pre-PR
+//! stores keep resuming ([`crate::sweep::Job`]).
+//!
+//! Trace replay (`dtrace:PATH`) mirrors the arrival-trace design
+//! ([`crate::serve::traffic::TraceId`]): handles index a process-global
+//! registry so the enum stays `Copy`, and they are CLI-only — the sweep
+//! grid rejects them because a process-local index is not a stable job
+//! identity.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::rng::Rng;
+
+/// Seed salt for the density stream: decorrelates realized densities
+/// from every arrival-process stream at the same serve seed.
+pub const DENSITY_SALT: u64 = 0x6d0d_e15a;
+/// SplitMix64 golden-gamma request-stream jump (one independent RNG per
+/// request, not one shared walk — resharding-stable).
+const REQUEST_GAMMA: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Number of quantized density levels a realized density snaps to.
+pub const DENSITY_LEVELS: usize = 16;
+/// Density clamp floor (the per-layer jitter's historical floor).
+pub const DENSITY_FLOOR: f64 = 0.02;
+/// Density clamp ceiling.
+pub const DENSITY_CEIL: f64 = 0.98;
+
+/// The density of quantization level `level` (0 = floor, 15 = ceiling).
+pub fn level_density(level: usize) -> f64 {
+    debug_assert!(level < DENSITY_LEVELS);
+    let step = (DENSITY_CEIL - DENSITY_FLOOR) / (DENSITY_LEVELS - 1) as f64;
+    DENSITY_FLOOR + level as f64 * step
+}
+
+/// Snap a density to its nearest quantization level. Uses
+/// `floor(x + 0.5)` (half-up) rather than `round()` so the Python
+/// transcription oracle can reproduce the tie behaviour exactly
+/// (Python's `round` is banker's rounding).
+pub fn quantize(d: f64) -> usize {
+    let step = (DENSITY_CEIL - DENSITY_FLOOR) / (DENSITY_LEVELS - 1) as f64;
+    let lv = ((d - DENSITY_FLOOR) / step + 0.5).floor();
+    if lv <= 0.0 {
+        0
+    } else {
+        (lv as usize).min(DENSITY_LEVELS - 1)
+    }
+}
+
+/// Handle to a registered density trace (index into the process-global
+/// table). `Copy`, so [`DensityModel`] — and [`crate::serve::ServeConfig`]
+/// carrying it — stays `Copy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DensityTraceId(usize);
+
+fn density_trace_table() -> &'static Mutex<Vec<Arc<Vec<f64>>>> {
+    static TRACES: OnceLock<Mutex<Vec<Arc<Vec<f64>>>>> = OnceLock::new();
+    TRACES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Register a density trace (values in `(0, 1]`, finite) and get a
+/// replayable [`DensityTraceId`]. Sample `(request r, layer i)` reads
+/// `trace[(r·n_layers + i) mod len]` — a short trace tiles.
+pub fn register_density_trace(values: Vec<f64>) -> Result<DensityTraceId, String> {
+    if values.is_empty() {
+        return Err("density trace must contain at least one value".into());
+    }
+    if values.iter().any(|d| !d.is_finite() || *d <= 0.0 || *d > 1.0) {
+        return Err("density trace values must be finite and in (0, 1]".into());
+    }
+    // recover from a poisoned lock like the arrival-trace registry: a
+    // panicking sweep worker must not cascade panics through unrelated
+    // runs (the table is always structurally valid — push/get only)
+    let mut table = density_trace_table()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    table.push(Arc::new(values));
+    Ok(DensityTraceId(table.len() - 1))
+}
+
+/// Load a density trace file: one density per line; blank lines and `#`
+/// comments are skipped.
+pub fn load_density_trace(path: &str) -> Result<DensityTraceId, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read density trace '{path}': {e}"))?;
+    let mut values = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let d: f64 = line
+            .parse()
+            .map_err(|_| format!("{path}:{}: not a number: '{line}'", i + 1))?;
+        values.push(d);
+    }
+    register_density_trace(values)
+}
+
+/// The registered values behind a [`DensityTraceId`].
+pub fn density_trace_values(id: DensityTraceId) -> Option<Arc<Vec<f64>>> {
+    density_trace_table()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(id.0)
+        .cloned()
+}
+
+/// A per-request feature-density model. Every variant is deterministic
+/// per `(seed, request)`; the default `Static` is the historical
+/// constant-density behaviour, routed through the untouched legacy code
+/// paths (and elided from canonical sweep keys).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DensityModel {
+    /// Constant per-layer densities (the pre-dynamic behaviour).
+    Static,
+    /// Uniform band: each layer's raw density drawn uniformly from
+    /// `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// Truncated normal: `mean + sigma·N(0,1)`, clamped to the density
+    /// range.
+    Normal { mean: f64, sigma: f64 },
+    /// Bimodal easy/hard mix: density `hi` with probability `p`, else
+    /// `lo` — a two-point distribution, the regime where window-shape
+    /// repeats (and therefore dynamic template memo hits) are common.
+    Bimodal { lo: f64, hi: f64, p: f64 },
+    /// Replay of a registered density trace ([`register_density_trace`]
+    /// / [`load_density_trace`]); tiled over `(request, layer)` pairs.
+    Trace(DensityTraceId),
+}
+
+impl Default for DensityModel {
+    fn default() -> Self {
+        DensityModel::Static
+    }
+}
+
+impl DensityModel {
+    /// Is this the historical constant-density model? Static configs
+    /// take the legacy code paths (byte-identical by construction) and
+    /// keep their historical sweep keys.
+    pub fn is_static(&self) -> bool {
+        matches!(self, DensityModel::Static)
+    }
+
+    /// Parse a CLI/grid spec: `static`, `uniform:LO:HI`,
+    /// `normal:MEAN:SIGMA`, `bimodal:LO:HI:P`, `dtrace:PATH`.
+    pub fn from_spec(spec: &str) -> Result<DensityModel, String> {
+        let (head, rest) = match spec.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (spec, None),
+        };
+        let frac = |s: &str, what: &str| -> Result<f64, String> {
+            let v: f64 = s
+                .parse()
+                .map_err(|_| format!("density spec '{spec}': bad {what} '{s}'"))?;
+            if !v.is_finite() || v <= 0.0 || v >= 1.0 {
+                return Err(format!(
+                    "density spec '{spec}': {what} must be in (0, 1)"
+                ));
+            }
+            Ok(v)
+        };
+        let parts = |r: &str, n: usize| -> Result<Vec<String>, String> {
+            let p: Vec<String> = r.split(':').map(|s| s.to_string()).collect();
+            if p.len() != n {
+                return Err(format!(
+                    "density spec '{spec}': expected {n} ':'-separated parameters"
+                ));
+            }
+            Ok(p)
+        };
+        match (head, rest) {
+            ("static", None) => Ok(DensityModel::Static),
+            ("uniform", Some(r)) => {
+                let p = parts(r, 2)?;
+                let lo = frac(&p[0], "lo")?;
+                let hi = frac(&p[1], "hi")?;
+                if lo > hi {
+                    return Err(format!("density spec '{spec}': lo must be <= hi"));
+                }
+                Ok(DensityModel::Uniform { lo, hi })
+            }
+            ("normal", Some(r)) => {
+                let p = parts(r, 2)?;
+                let mean = frac(&p[0], "mean")?;
+                let sigma: f64 = p[1]
+                    .parse()
+                    .map_err(|_| format!("density spec '{spec}': bad sigma '{}'", p[1]))?;
+                if !sigma.is_finite() || sigma < 0.0 || sigma >= 1.0 {
+                    return Err(format!(
+                        "density spec '{spec}': sigma must be in [0, 1)"
+                    ));
+                }
+                Ok(DensityModel::Normal { mean, sigma })
+            }
+            ("bimodal", Some(r)) => {
+                let p3 = parts(r, 3)?;
+                let lo = frac(&p3[0], "lo")?;
+                let hi = frac(&p3[1], "hi")?;
+                if lo > hi {
+                    return Err(format!("density spec '{spec}': lo must be <= hi"));
+                }
+                let p: f64 = p3[2]
+                    .parse()
+                    .map_err(|_| format!("density spec '{spec}': bad p '{}'", p3[2]))?;
+                if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                    return Err(format!("density spec '{spec}': p must be in [0, 1]"));
+                }
+                Ok(DensityModel::Bimodal { lo, hi, p })
+            }
+            ("dtrace", Some(path)) => Ok(DensityModel::Trace(load_density_trace(path)?)),
+            _ => Err(format!(
+                "unknown density model '{spec}' \
+                 (static | uniform:LO:HI | normal:MEAN:SIGMA | bimodal:LO:HI:P | dtrace:PATH)"
+            )),
+        }
+    }
+
+    /// Human/JSON spec string; [`DensityModel::from_spec`] round-trips
+    /// it exactly for every non-trace variant (f64 `Display` is
+    /// shortest-roundtrip). Trace handles are process-local and render
+    /// as `dtrace:#INDEX` — not re-parseable, by design.
+    pub fn spec(&self) -> String {
+        match self {
+            DensityModel::Static => "static".into(),
+            DensityModel::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            DensityModel::Normal { mean, sigma } => format!("normal:{mean}:{sigma}"),
+            DensityModel::Bimodal { lo, hi, p } => format!("bimodal:{lo}:{hi}:{p}"),
+            DensityModel::Trace(id) => format!("dtrace:#{}", id.0),
+        }
+    }
+
+    /// Canonical store-key fragment: variant tag + parameter *bit
+    /// patterns* (hex), so a sweep key never depends on decimal
+    /// formatting. Traces are rejected from sweep grids, so their
+    /// fragment (process-local index) never reaches a store.
+    pub fn canonical(&self) -> String {
+        match self {
+            DensityModel::Static => "static".into(),
+            DensityModel::Uniform { lo, hi } => {
+                format!("uniform:{:016x}:{:016x}", lo.to_bits(), hi.to_bits())
+            }
+            DensityModel::Normal { mean, sigma } => {
+                format!("normal:{:016x}:{:016x}", mean.to_bits(), sigma.to_bits())
+            }
+            DensityModel::Bimodal { lo, hi, p } => format!(
+                "bimodal:{:016x}:{:016x}:{:016x}",
+                lo.to_bits(),
+                hi.to_bits(),
+                p.to_bits()
+            ),
+            DensityModel::Trace(id) => format!("dtrace:#{}", id.0),
+        }
+    }
+
+    /// Sample request `r`'s quantized per-layer density levels.
+    ///
+    /// Each request draws from its own RNG stream
+    /// (`seed ^ DENSITY_SALT`, jumped by the SplitMix64 golden gamma per
+    /// request), so the realized vector is a pure function of
+    /// `(model, seed, r, scale)` — independent of batching, sharding or
+    /// evaluation order. `scale` is the model's per-layer multiplier
+    /// ([`crate::models::Model::density_scale`]; empty = all 1.0, the
+    /// spiking nets use it for timestep decay). Raw draws are scaled,
+    /// clamped to `[DENSITY_FLOOR, DENSITY_CEIL]` and quantized.
+    ///
+    /// Panics on `Static` — the static model has no realized samples;
+    /// callers route it through the legacy constant-density path.
+    pub fn sample_levels(
+        &self,
+        seed: u64,
+        request: usize,
+        scale: &[f64],
+        n_layers: usize,
+    ) -> Vec<usize> {
+        let scaled = |i: usize, raw: f64| -> usize {
+            let s = scale.get(i).copied().unwrap_or(1.0);
+            quantize((raw * s).clamp(DENSITY_FLOOR, DENSITY_CEIL))
+        };
+        match *self {
+            DensityModel::Static => {
+                panic!("DensityModel::Static has no realized samples (legacy path)")
+            }
+            DensityModel::Trace(id) => {
+                let tr = density_trace_values(id)
+                    .expect("density trace handle must come from register/load");
+                (0..n_layers)
+                    .map(|i| scaled(i, tr[(request * n_layers + i) % tr.len()]))
+                    .collect()
+            }
+            _ => {
+                let mut rng = Rng::seed_from_u64(
+                    (seed ^ DENSITY_SALT)
+                        .wrapping_add((request as u64).wrapping_mul(REQUEST_GAMMA)),
+                );
+                (0..n_layers)
+                    .map(|i| {
+                        let raw = match *self {
+                            DensityModel::Uniform { lo, hi } => lo + (hi - lo) * rng.gen_f64(),
+                            DensityModel::Normal { mean, sigma } => {
+                                mean + sigma * rng.gen_normal()
+                            }
+                            DensityModel::Bimodal { lo, hi, p } => {
+                                if rng.gen_f64() < p {
+                                    hi
+                                } else {
+                                    lo
+                                }
+                            }
+                            _ => unreachable!(),
+                        };
+                        scaled(i, raw)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Materialize the per-request duration rows of a dynamic run:
+/// `rows[r·L + i]` = wall time of request `r`'s layer `i` at its
+/// realized density level, read from `wall[i][level]`
+/// ([`crate::backend::dynamic_wall_table`]). O(R·L) memory — inherent
+/// to the dynamic regime, where no two windows need be alike.
+pub fn realized_rows(
+    model: &DensityModel,
+    seed: u64,
+    requests: usize,
+    scale: &[f64],
+    wall: &[Vec<f64>],
+) -> Vec<f64> {
+    let n_layers = wall.len();
+    let mut rows = Vec::with_capacity(requests * n_layers);
+    for r in 0..requests {
+        let levels = model.sample_levels(seed, r, scale, n_layers);
+        for (i, &lv) in levels.iter().enumerate() {
+            rows.push(wall[i][lv]);
+        }
+    }
+    rows
+}
+
+/// The realized (quantized) densities themselves, same layout as
+/// [`realized_rows`] — report/JSON diagnostics.
+pub fn realized_densities(
+    model: &DensityModel,
+    seed: u64,
+    requests: usize,
+    scale: &[f64],
+    n_layers: usize,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(requests * n_layers);
+    for r in 0..requests {
+        for lv in model.sample_levels(seed, r, scale, n_layers) {
+            out.push(level_density(lv));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_and_rejects_garbage() {
+        for spec in [
+            "static",
+            "uniform:0.1:0.6",
+            "normal:0.35:0.1",
+            "normal:0.35:0",
+            "bimodal:0.1:0.8:0.25",
+        ] {
+            let m = DensityModel::from_spec(spec).unwrap();
+            assert_eq!(DensityModel::from_spec(&m.spec()).unwrap(), m, "{spec}");
+        }
+        for bad in [
+            "gaussian:0.3:0.1",
+            "uniform",
+            "uniform:0.5",
+            "uniform:0.6:0.1",
+            "uniform:0:0.5",
+            "uniform:0.5:1.0",
+            "uniform:0.1:0.5:0.9",
+            "normal:0.3",
+            "normal:0.3:-0.1",
+            "normal:nan:0.1",
+            "bimodal:0.1:0.8",
+            "bimodal:0.8:0.1:0.5",
+            "bimodal:0.1:0.8:1.5",
+            "static:1",
+        ] {
+            assert!(DensityModel::from_spec(bad).is_err(), "{bad} must fail");
+        }
+        assert!(DensityModel::from_spec("static").unwrap().is_static());
+        assert!(!DensityModel::from_spec("uniform:0.1:0.6").unwrap().is_static());
+    }
+
+    #[test]
+    fn canonical_uses_bit_patterns() {
+        let m = DensityModel::Uniform { lo: 0.1, hi: 0.6 };
+        assert_eq!(
+            m.canonical(),
+            format!(
+                "uniform:{:016x}:{:016x}",
+                0.1f64.to_bits(),
+                0.6f64.to_bits()
+            )
+        );
+        assert_eq!(DensityModel::Static.canonical(), "static");
+    }
+
+    #[test]
+    fn quantization_is_monotone_and_bounded() {
+        assert_eq!(quantize(0.0), 0);
+        assert_eq!(quantize(DENSITY_FLOOR), 0);
+        assert_eq!(quantize(DENSITY_CEIL), DENSITY_LEVELS - 1);
+        assert_eq!(quantize(1.0), DENSITY_LEVELS - 1);
+        let mut prev = 0;
+        for i in 0..=100 {
+            let d = i as f64 / 100.0;
+            let lv = quantize(d);
+            assert!(lv >= prev, "quantize must be monotone");
+            assert!(lv < DENSITY_LEVELS);
+            // the snapped density is within half a step of the clamp
+            let snapped = level_density(lv);
+            let clamped = d.clamp(DENSITY_FLOOR, DENSITY_CEIL);
+            let step = (DENSITY_CEIL - DENSITY_FLOOR) / (DENSITY_LEVELS - 1) as f64;
+            assert!((snapped - clamped).abs() <= step / 2.0 + 1e-12);
+            prev = lv;
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_order_independent() {
+        let m = DensityModel::Uniform { lo: 0.1, hi: 0.6 };
+        let a = m.sample_levels(42, 7, &[], 5);
+        let b = m.sample_levels(42, 7, &[], 5);
+        assert_eq!(a, b);
+        // per-request streams: request 8's vector does not depend on
+        // whether request 7 was sampled first
+        let c = m.sample_levels(42, 8, &[], 5);
+        assert_eq!(c, m.sample_levels(42, 8, &[], 5));
+        assert_ne!(a, c, "distinct requests draw distinct vectors");
+        assert_ne!(a, m.sample_levels(43, 7, &[], 5), "seed matters");
+    }
+
+    #[test]
+    fn uniform_band_respected() {
+        let m = DensityModel::Uniform { lo: 0.2, hi: 0.5 };
+        for r in 0..200 {
+            for lv in m.sample_levels(1, r, &[], 4) {
+                let d = level_density(lv);
+                // quantization can move at most half a step outside
+                assert!((0.15..=0.55).contains(&d), "density {d} outside band");
+            }
+        }
+    }
+
+    #[test]
+    fn bimodal_is_two_point() {
+        let m = DensityModel::Bimodal {
+            lo: 0.1,
+            hi: 0.8,
+            p: 0.3,
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        for r in 0..300 {
+            for lv in m.sample_levels(9, r, &[], 3) {
+                seen.insert(lv);
+            }
+        }
+        assert_eq!(seen.len(), 2, "bimodal must realize exactly two levels");
+        let (lo_p, hi_p) = (quantize(0.1), quantize(0.8));
+        assert!(seen.contains(&lo_p) && seen.contains(&hi_p));
+    }
+
+    #[test]
+    fn scale_decays_densities() {
+        let m = DensityModel::Uniform { lo: 0.5, hi: 0.5001 };
+        let scale = [1.0, 0.6, 0.36, 0.216];
+        let levels = m.sample_levels(3, 0, &scale, 4);
+        for w in levels.windows(2) {
+            assert!(w[1] <= w[0], "decaying scale must not raise the level");
+        }
+        assert!(levels[3] < levels[0], "decay must bite over 4 timesteps");
+    }
+
+    #[test]
+    fn trace_replay_tiles_and_validates() {
+        let id = register_density_trace(vec![0.1, 0.5, 0.9]).unwrap();
+        let m = DensityModel::Trace(id);
+        let a = m.sample_levels(0, 0, &[], 2); // values 0.1, 0.5
+        assert_eq!(a, vec![quantize(0.1), quantize(0.5)]);
+        let b = m.sample_levels(0, 1, &[], 2); // values 0.9, 0.1 (tiled)
+        assert_eq!(b, vec![quantize(0.9), quantize(0.1)]);
+        assert!(register_density_trace(vec![]).is_err());
+        assert!(register_density_trace(vec![0.0]).is_err());
+        assert!(register_density_trace(vec![1.5]).is_err());
+        assert!(register_density_trace(vec![f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn realized_rows_reads_wall_table() {
+        let m = DensityModel::Bimodal {
+            lo: 0.1,
+            hi: 0.9,
+            p: 0.5,
+        };
+        // wall[i][lv] encodes (layer, level) uniquely
+        let wall: Vec<Vec<f64>> = (0..3)
+            .map(|i| (0..DENSITY_LEVELS).map(|lv| (i * 100 + lv) as f64).collect())
+            .collect();
+        let rows = realized_rows(&m, 5, 4, &[], &wall);
+        assert_eq!(rows.len(), 12);
+        for r in 0..4 {
+            let levels = m.sample_levels(5, r, &[], 3);
+            for (i, &lv) in levels.iter().enumerate() {
+                assert_eq!(rows[r * 3 + i], (i * 100 + lv) as f64);
+            }
+        }
+        let dens = realized_densities(&m, 5, 4, &[], 3);
+        assert_eq!(dens.len(), 12);
+        assert!(dens.iter().all(|d| (0.0..=1.0).contains(d)));
+    }
+
+    #[test]
+    #[should_panic(expected = "Static")]
+    fn static_model_has_no_samples() {
+        DensityModel::Static.sample_levels(0, 0, &[], 3);
+    }
+
+    #[test]
+    fn density_registry_survives_mutex_poisoning() {
+        let before = register_density_trace(vec![0.3, 0.7]).unwrap();
+        let _ = std::thread::spawn(|| {
+            let _guard = density_trace_table()
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            panic!("poison the density registry");
+        })
+        .join();
+        let after = register_density_trace(vec![0.4]).unwrap();
+        assert_eq!(density_trace_values(before).unwrap().as_slice(), &[0.3, 0.7]);
+        assert_eq!(density_trace_values(after).unwrap().as_slice(), &[0.4]);
+    }
+}

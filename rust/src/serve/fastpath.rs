@@ -902,6 +902,262 @@ pub fn evaluate_windows(
     }
 }
 
+/// Build the wave program of one window under *per-request* durations
+/// (the dynamic-sparsity regime, [`crate::serve::density`]). `wdur` is
+/// the window's duration block, indexed `[slot · dag.len() + node]`
+/// with `slot` the window-local request index — exactly the layout of a
+/// [`PipelineSchedule::build_windows_dynamic`] row slice. Identical to
+/// [`build_template`] except that `d` is looked up per `(slot, node)`,
+/// so the hoisted `cut` products follow the true per-request duration
+/// chain. The steady-state analysis is *disabled outright*
+/// (`steady: None`): extrapolation assumes every remaining window runs
+/// the same wave program, which is false the moment durations vary per
+/// request — the dynamic path must disengage, not bound-error drift.
+fn build_template_dyn(
+    dag: &LayerDag,
+    wdur: &[f64],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+) -> WaveTemplate {
+    let n_nodes = dag.len();
+    debug_assert_eq!(wdur.len(), width * n_nodes);
+    let n_jobs = width * n_nodes;
+    let mut dur = Vec::with_capacity(n_jobs);
+    let mut cut = Vec::with_capacity(n_jobs);
+    let mut deps = Vec::new();
+    let mut dep_off = Vec::with_capacity(n_jobs + 1);
+    let mut slot = Vec::with_capacity(n_jobs);
+    dep_off.push(0u32);
+
+    let mut prev_dur = entry_prev_dur;
+    for &node in dag.topo_order() {
+        for s in 0..width {
+            let d = wdur[s * n_nodes + node];
+            cut.push(overlap * prev_dur.min(d));
+            dur.push(d);
+            for &p in dag.deps(node) {
+                deps.push((s * n_nodes + p) as u32);
+            }
+            dep_off.push(deps.len() as u32);
+            slot.push((s * n_nodes + node) as u32);
+            prev_dur = d;
+        }
+    }
+
+    let sinks: Vec<u32> = dag.sinks().iter().map(|&s| s as u32).collect();
+    WaveTemplate {
+        width,
+        n_nodes,
+        dur,
+        cut,
+        deps,
+        dep_off,
+        slot,
+        sinks,
+        steady: None,
+    }
+}
+
+/// Full-content cache key for a *dynamic* wave template. Element 0 is a
+/// `u64::MAX` marker: static keys start with the window width, which can
+/// never be `u64::MAX`, so the two key families are prefix-distinct and
+/// safely share the global [`WaveCache`]. The key then carries every
+/// realized per-(slot, node) duration bit in wave order — a hit requires
+/// the *exact* duration block, so it can never corrupt a schedule. Keys
+/// collide usefully because realized durations are lookups into a
+/// 16-level wall table ([`crate::serve::density`]): windows whose
+/// requests quantized to the same level pattern share one template.
+fn wave_key_dyn(
+    dag: &LayerDag,
+    wdur: &[f64],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+    entry_any_prev: bool,
+) -> WaveKey {
+    let n_nodes = dag.len();
+    let mut v = Vec::with_capacity(6 + 2 * n_nodes + width * n_nodes);
+    v.push(u64::MAX);
+    v.push(width as u64);
+    v.push(n_nodes as u64);
+    v.push(overlap.to_bits());
+    v.push(entry_prev_dur.to_bits());
+    v.push(entry_any_prev as u64);
+    for &n in dag.topo_order() {
+        v.push(n as u64);
+        v.push(dag.deps(n).len() as u64);
+        for &p in dag.deps(n) {
+            v.push(p as u64);
+        }
+    }
+    for &n in dag.topo_order() {
+        for s in 0..width {
+            v.push(wdur[s * n_nodes + n].to_bits());
+        }
+    }
+    WaveKey(v)
+}
+
+/// Resolve one dynamic window to its wave program, via the global cache
+/// when memoization is on (same contract as [`resolve`]: the key is the
+/// full content, so a hit is bit-identical to a rebuild).
+fn resolve_dyn(
+    dag: &LayerDag,
+    wdur: &[f64],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+    entry_any_prev: bool,
+    memoize: bool,
+) -> Arc<WaveTemplate> {
+    if !memoize {
+        return Arc::new(build_template_dyn(dag, wdur, overlap, width, entry_prev_dur));
+    }
+    let key = wave_key_dyn(dag, wdur, overlap, width, entry_prev_dur, entry_any_prev);
+    let cache = WaveCache::global();
+    if let Some(t) = cache.get(&key) {
+        return t;
+    }
+    let t = Arc::new(build_template_dyn(dag, wdur, overlap, width, entry_prev_dur));
+    cache.insert(key, t.clone());
+    t
+}
+
+/// [`evaluate_windows`] under per-request durations: `rows[img ·
+/// dag.len() + node]` is request `img`'s wall time on `node`
+/// ([`crate::serve::density::realized_rows`]). Bit-identical to
+/// [`PipelineSchedule::build_windows_dynamic`] — the replay executes the
+/// same f64 operations in the same order — with the steady-state layer
+/// disengaged unconditionally (`steady_windows` is always 0 here):
+/// windows stop being identical the moment per-request densities vary,
+/// so extrapolation has no invariant to stand on. Template memoization
+/// still applies, keyed on the realized duration block
+/// ([`wave_key_dyn`]), which repeats across windows whenever requests
+/// quantize to the same density levels.
+pub fn evaluate_windows_dynamic(
+    dag: &LayerDag,
+    rows: &[f64],
+    arrivals: &[f64],
+    windows: &[(usize, usize)],
+    overlap: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    let exact = || {
+        ScheduleSummary::from_schedule(&PipelineSchedule::build_windows_dynamic(
+            dag, rows, arrivals, windows, overlap,
+        ))
+    };
+    if !policy.fastpath {
+        return exact();
+    }
+    let n_img = arrivals.len();
+    let n_nodes = dag.len();
+    assert_eq!(
+        rows.len(),
+        n_img * n_nodes,
+        "one duration per (request, DAG node)"
+    );
+    debug_assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "arrivals must be sorted"
+    );
+    let overlap = overlap.clamp(0.0, MAX_OVERLAP);
+    if n_img == 0 {
+        return ScheduleSummary {
+            finish_times: Vec::new(),
+            makespan: 0.0,
+            busy: 0.0,
+            n_jobs: 0,
+            steady_windows: 0,
+        };
+    }
+    // template scratch indices are u32 over one window; a window too
+    // wide to index falls back to the exact engine rather than truncate
+    let w_max = windows.iter().map(|w| w.1 - w.0).max().unwrap_or(0);
+    if !w_max
+        .checked_mul(n_nodes)
+        .is_some_and(|x| x <= u32::MAX as usize)
+    {
+        return exact();
+    }
+
+    let last_node = dag.topo_order().last().copied();
+    let mut finish_times = vec![0.0f64; n_img];
+    let mut wfin = vec![0.0f64; w_max * n_nodes];
+    let mut st = ArrayState {
+        array_free: 0.0,
+        any_prev: false,
+        busy: 0.0,
+        makespan: 0.0,
+    };
+
+    for (w, &(lo, hi)) in windows.iter().enumerate() {
+        let width = hi - lo;
+        // the server waits until the window's last request arrives
+        // (identical fold to the engine: 0-seeded max over the slice)
+        let mut t0 = 0.0f64;
+        for &a in &arrivals[lo..hi] {
+            t0 = t0.max(a);
+        }
+        // the execution entering this window is the previous window's
+        // last job: its last image's last topo node, at that image's own
+        // realized duration
+        let (entry_prev_dur, entry_any_prev) = if w == 0 {
+            (0.0, false)
+        } else {
+            let prev_last_img = windows[w - 1].1 - 1;
+            (
+                last_node.map_or(0.0, |n| rows[prev_last_img * n_nodes + n]),
+                last_node.is_some(),
+            )
+        };
+        let wdur = &rows[lo * n_nodes..hi * n_nodes];
+        let tpl = resolve_dyn(
+            dag,
+            wdur,
+            overlap,
+            width,
+            entry_prev_dur,
+            entry_any_prev,
+            policy.memoize,
+        );
+        replay(&tpl, t0, &mut st, &mut wfin, &mut finish_times[lo..hi]);
+    }
+
+    ScheduleSummary {
+        finish_times,
+        makespan: st.makespan,
+        busy: st.busy,
+        n_jobs: n_img * n_nodes,
+        steady_windows: 0,
+    }
+}
+
+/// [`evaluate`]'s dynamic twin: fixed arrival-order windows of `batch`
+/// requests over per-request durations, delegated to
+/// [`evaluate_windows_dynamic`] (the same wrapper relationship as
+/// [`PipelineSchedule::build`] over `build_windows`).
+pub fn evaluate_dynamic(
+    dag: &LayerDag,
+    rows: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    let batch = batch.max(1);
+    let n_img = arrivals.len();
+    let mut windows = Vec::with_capacity(n_img.div_ceil(batch));
+    let mut lo = 0;
+    while lo < n_img {
+        let hi = (lo + batch).min(n_img);
+        windows.push((lo, hi));
+        lo = hi;
+    }
+    evaluate_windows_dynamic(dag, rows, arrivals, &windows, overlap, policy)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1219,6 +1475,146 @@ mod tests {
             let b = evaluate_windows(&dag, &d, &arrivals, &windows, ov, &SchedPolicy::default());
             assert!(summary_bits_equal(&a, &b), "batch {batch} ov {ov}");
         }
+    }
+
+    #[test]
+    fn dynamic_replay_matches_exact_dynamic_engine_bitwise() {
+        // the dynamic acceptance contract: fastpath vs exact, bit for
+        // bit, across randomized DAGs, per-request duration rows and
+        // admission partitions — for every policy combination
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0090);
+        for case in 0..60u64 {
+            let n_nodes = 1 + rng.gen_below(6) as usize;
+            let dag = random_dag(&mut rng, n_nodes);
+            let n_img = 1 + rng.gen_below(40) as usize;
+            // quantized-grid durations: each (img, node) draws one of 4
+            // levels, mimicking the 16-level wall table
+            let levels: Vec<f64> = (0..4).map(|_| 0.01 + rng.gen_f64()).collect();
+            let rows: Vec<f64> = (0..n_img * n_nodes)
+                .map(|_| levels[rng.gen_below(4) as usize])
+                .collect();
+            let mut t = 0.0f64;
+            let arrivals: Vec<f64> = (0..n_img)
+                .map(|_| {
+                    t += rng.gen_f64() * 0.3;
+                    t
+                })
+                .collect();
+            let windows = random_windows(&mut rng, n_img, 6);
+            let overlap = rng.gen_f64();
+            let exact = ScheduleSummary::from_schedule(
+                &PipelineSchedule::build_windows_dynamic(
+                    &dag, &rows, &arrivals, &windows, overlap,
+                ),
+            );
+            for policy in [
+                SchedPolicy::default(),
+                SchedPolicy::default().with_memoize(false),
+                SchedPolicy::default().with_steady(false),
+                SchedPolicy::exact(),
+            ] {
+                let fast = evaluate_windows_dynamic(
+                    &dag, &rows, &arrivals, &windows, overlap, &policy,
+                );
+                assert!(
+                    summary_bits_equal(&exact, &fast),
+                    "case {case}: dynamic fast path diverged (policy {policy:?})"
+                );
+                assert_eq!(fast.steady_windows, 0, "dynamic never extrapolates");
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_steady_layer_never_engages_even_when_saturated() {
+        // a deep zero-arrival backlog with *uniform* rows would satisfy
+        // every static steady-state precondition — the dynamic path must
+        // still refuse to extrapolate and instead stay bit-exact
+        let dag = LayerDag::chain(4);
+        let d = [0.3, 0.1, 0.2, 0.15];
+        let n_img = 2000usize;
+        let rows: Vec<f64> = (0..n_img).flat_map(|_| d.iter().copied()).collect();
+        let arrivals = vec![0.0; n_img];
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
+            &dag, &d, &arrivals, 8, 0.6,
+        ));
+        let fast = evaluate_dynamic(&dag, &rows, &arrivals, 8, 0.6, &SchedPolicy::default());
+        assert_eq!(fast.steady_windows, 0, "dynamic mode must disengage steady");
+        assert!(
+            summary_bits_equal(&exact, &fast),
+            "uniform rows must reproduce the static schedule bit-exactly"
+        );
+        // sanity: the *static* fastpath on the same workload does engage,
+        // proving the dynamic refusal above is load-bearing
+        let st = evaluate(&dag, &d, &arrivals, 8, 0.6, &SchedPolicy::default());
+        assert!(st.steady_windows > 0);
+    }
+
+    #[test]
+    fn dynamic_uniform_rows_match_static_evaluate_bitwise() {
+        // per-request rows that all equal the static vector must walk
+        // the exact same float sequence as the static paths
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0091);
+        for _ in 0..20u64 {
+            let n_nodes = 1 + rng.gen_below(5) as usize;
+            let dag = random_dag(&mut rng, n_nodes);
+            let durations: Vec<f64> = (0..n_nodes).map(|_| 0.01 + rng.gen_f64()).collect();
+            let n_img = 1 + rng.gen_below(30) as usize;
+            let rows: Vec<f64> =
+                (0..n_img).flat_map(|_| durations.iter().copied()).collect();
+            let mut t = 0.0f64;
+            let arrivals: Vec<f64> = (0..n_img)
+                .map(|_| {
+                    t += rng.gen_f64() * 0.2;
+                    t
+                })
+                .collect();
+            let batch = 1 + rng.gen_below(7) as usize;
+            let overlap = rng.gen_f64();
+            let policy = SchedPolicy::default().with_steady(false);
+            let st = evaluate(&dag, &durations, &arrivals, batch, overlap, &policy);
+            let dy = evaluate_dynamic(&dag, &rows, &arrivals, batch, overlap, &policy);
+            assert!(summary_bits_equal(&st, &dy));
+        }
+    }
+
+    #[test]
+    fn dynamic_wave_keys_are_prefix_distinct_from_static_and_content_full() {
+        let dag = LayerDag::chain(2);
+        let d = [0.1, 0.2];
+        let rows = [0.1, 0.2, 0.1, 0.2];
+        let ks = wave_key(&dag, &d, 0.5, 2, 0.2, true);
+        let kd = wave_key_dyn(&dag, &rows, 0.5, 2, 0.2, true);
+        assert_ne!(ks, kd, "key families must never collide");
+        assert_eq!(kd.0[0], u64::MAX);
+        assert_ne!(ks.0[0], u64::MAX, "static keys start with the width");
+        // same duration block -> same key; any duration bit flips it
+        let kd2 = wave_key_dyn(&dag, &rows, 0.5, 2, 0.2, true);
+        assert_eq!(kd, kd2);
+        let mut rows2 = rows;
+        rows2[3] = 0.200001;
+        assert_ne!(kd, wave_key_dyn(&dag, &rows2, 0.5, 2, 0.2, true));
+        // entry state and overlap are part of the program
+        assert_ne!(kd, wave_key_dyn(&dag, &rows, 0.5, 2, 0.3, true));
+        assert_ne!(kd, wave_key_dyn(&dag, &rows, 0.6, 2, 0.2, true));
+        assert_ne!(kd, wave_key_dyn(&dag, &rows, 0.5, 2, 0.2, false));
+    }
+
+    #[test]
+    fn dynamic_template_cache_shares_repeated_window_blocks() {
+        // two windows whose requests realize the same level pattern
+        // resolve to one cached template
+        let dag = LayerDag::chain(3);
+        let rows: Vec<f64> = (0..8).flat_map(|_| [0.017, 0.029, 0.041]).collect();
+        let arrivals = vec![0.0; 8];
+        let g = WaveCache::global();
+        let policy = SchedPolicy::default();
+        let a = evaluate_dynamic(&dag, &rows, &arrivals, 4, 0.6, &policy);
+        let (h0, _) = g.counters();
+        let b = evaluate_dynamic(&dag, &rows, &arrivals, 4, 0.6, &policy);
+        let (h1, _) = g.counters();
+        assert!(summary_bits_equal(&a, &b));
+        assert!(h1 > h0, "repeat evaluate must hit the dynamic template cache");
     }
 
     #[test]

@@ -204,6 +204,106 @@ impl PipelineSchedule {
         }
     }
 
+    /// [`PipelineSchedule::build_windows`] under *per-request* layer
+    /// durations: `rows[img * dag.len() + node]` is the wall time of
+    /// request `img`'s execution of `node` — the dynamic-sparsity regime
+    /// ([`crate::serve::density`]), where every request realizes its own
+    /// per-layer densities. The fold is identical to the static builder
+    /// except that `d` is looked up per `(img, node)` instead of per
+    /// node; with every row equal to the static duration vector the
+    /// result is bit-identical to [`PipelineSchedule::build_windows`]
+    /// (same operations in the same order — `tests` lock this).
+    pub fn build_windows_dynamic(
+        dag: &LayerDag,
+        rows: &[f64],
+        arrivals: &[f64],
+        windows: &[(usize, usize)],
+        overlap: f64,
+    ) -> PipelineSchedule {
+        let n_img = arrivals.len();
+        let n_nodes = dag.len();
+        assert_eq!(
+            rows.len(),
+            n_img * n_nodes,
+            "one duration per (request, DAG node)"
+        );
+        debug_assert!(
+            arrivals.windows(2).all(|w| w[0] <= w[1]),
+            "arrivals must be sorted"
+        );
+        #[cfg(debug_assertions)]
+        {
+            let mut expect = 0usize;
+            for &(lo, hi) in windows {
+                debug_assert!(
+                    lo == expect && lo < hi,
+                    "windows must be non-empty, contiguous, ascending"
+                );
+                expect = hi;
+            }
+            debug_assert_eq!(expect, arrivals.len(), "windows must cover every request");
+        }
+        let overlap = overlap.clamp(0.0, MAX_OVERLAP);
+        let sinks = dag.sinks();
+
+        let mut finish = vec![0.0f64; n_img * n_nodes];
+        let mut jobs = Vec::with_capacity(n_img * n_nodes);
+        let mut finish_times = vec![0.0f64; n_img];
+        let mut array_free = 0.0f64;
+        let mut prev_dur = 0.0f64;
+        let mut any_prev = false;
+        let mut busy = 0.0f64;
+        let mut makespan = 0.0f64;
+
+        for &(lo, hi) in windows {
+            let mut window_ready = 0.0f64;
+            for &a in &arrivals[lo..hi] {
+                window_ready = window_ready.max(a);
+            }
+            for &node in dag.topo_order() {
+                for img in lo..hi {
+                    let d = rows[img * n_nodes + node];
+                    let mut ready = window_ready;
+                    for &p in dag.deps(node) {
+                        ready = ready.max(finish[img * n_nodes + p]);
+                    }
+                    let start = if any_prev {
+                        ready.max(array_free - overlap * prev_dur.min(d))
+                    } else {
+                        ready
+                    };
+                    let end = start + d;
+                    busy += end - if any_prev { start.max(array_free) } else { start };
+                    finish[img * n_nodes + node] = end;
+                    jobs.push(ScheduledJob {
+                        image: img,
+                        node,
+                        start,
+                        finish: end,
+                    });
+                    array_free = end;
+                    prev_dur = d;
+                    any_prev = true;
+                    makespan = makespan.max(end);
+                }
+            }
+            for img in lo..hi {
+                let mut done = window_ready;
+                for &s in &sinks {
+                    done = done.max(finish[img * n_nodes + s]);
+                }
+                finish_times[img] = done;
+            }
+        }
+
+        PipelineSchedule {
+            jobs,
+            finish_times,
+            makespan,
+            busy,
+        }
+    }
+
     /// Fraction of the makespan the array spent executing (1.0 = no idle
     /// gaps; overlapped stretches counted once, so never above 1).
     pub fn occupancy(&self) -> f64 {
@@ -423,6 +523,61 @@ mod tests {
             let b = PipelineSchedule::build_windows(&dag, &d, &arrivals, &windows, ov);
             // PartialEq on f64 fields: equality here is bit-level
             assert_eq!(a, b, "batch {batch} overlap {ov}");
+        }
+    }
+
+    #[test]
+    fn dynamic_with_uniform_rows_is_static_bit_exact() {
+        // replicating the static duration vector per request must give
+        // the exact static schedule: same operations, same order
+        let (dag, d) = chain3();
+        let arrivals: Vec<f64> = (0..7).map(|i| i as f64 * 0.05).collect();
+        let rows: Vec<f64> = (0..arrivals.len()).flat_map(|_| d.iter().copied()).collect();
+        for &(batch, ov) in &[(1usize, 0.0), (2, 0.5), (3, 0.95), (7, 0.8)] {
+            let mut windows = Vec::new();
+            let mut lo = 0;
+            while lo < arrivals.len() {
+                let hi = (lo + batch).min(arrivals.len());
+                windows.push((lo, hi));
+                lo = hi;
+            }
+            let a = PipelineSchedule::build_windows(&dag, &d, &arrivals, &windows, ov);
+            let b = PipelineSchedule::build_windows_dynamic(&dag, &rows, &arrivals, &windows, ov);
+            assert_eq!(a, b, "batch {batch} overlap {ov}");
+        }
+    }
+
+    #[test]
+    fn dynamic_rows_change_per_request_costs() {
+        let (dag, d) = chain3();
+        let arrivals = [0.0, 0.0];
+        // request 1 runs at half the duration of request 0
+        let mut rows: Vec<f64> = Vec::new();
+        rows.extend(d.iter().copied());
+        rows.extend(d.iter().map(|x| x * 0.5));
+        let s = PipelineSchedule::build_windows_dynamic(&dag, &rows, &arrivals, &[(0, 2)], 0.0);
+        let expect = d.iter().sum::<f64>() * 1.5;
+        assert!((s.makespan - expect).abs() < 1e-12);
+        // per-request finish ordering still respects wave order
+        assert!(s.finish_times[1] > 0.0 && s.finish_times[0] > 0.0);
+        // busy equals total work (no idle, no overlap)
+        assert!((s.busy - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_respects_branchy_deps() {
+        let dag = LayerDag::new(vec![vec![], vec![0], vec![0], vec![1, 2]]).unwrap();
+        let rows = [1.0, 5.0, 2.0, 1.0, 0.5, 2.5, 1.0, 0.5];
+        let arrivals = [0.0, 0.0];
+        let s = PipelineSchedule::build_windows_dynamic(&dag, &rows, &arrivals, &[(0, 2)], 0.4);
+        // every job's start respects its request's dep finishes
+        let mut fin = std::collections::HashMap::new();
+        for j in &s.jobs {
+            for &p in dag.deps(j.node) {
+                let pf = fin[&(j.image, p)];
+                assert!(j.start >= pf - 1e-12, "dep violated");
+            }
+            fin.insert((j.image, j.node), j.finish);
         }
     }
 

@@ -436,6 +436,32 @@ pub fn evaluate_with_slo(
     fastpath::evaluate_windows(dag, durations, arrivals, &w, overlap, policy)
 }
 
+/// [`evaluate_with_slo`]'s dynamic-sparsity twin: per-request layer
+/// durations `rows[img · dag.len() + node]`
+/// ([`crate::serve::density::realized_rows`]) instead of one shared
+/// duration vector. The same funnel shape — infinite `slo` takes the
+/// fixed-window engine ([`fastpath::evaluate_dynamic`]), finite `slo`
+/// forms the identical [`windows`] partition (admission depends only on
+/// arrivals, never on durations) and streams it through
+/// [`fastpath::evaluate_windows_dynamic`]. Both routes are gated
+/// bit-identical against [`PipelineSchedule::build_windows_dynamic`].
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_with_slo_dynamic(
+    dag: &LayerDag,
+    rows: &[f64],
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    if !slo.is_finite() {
+        return fastpath::evaluate_dynamic(dag, rows, arrivals, batch, overlap, policy);
+    }
+    let w = windows(arrivals, batch, slo);
+    fastpath::evaluate_windows_dynamic(dag, rows, arrivals, &w, overlap, policy)
+}
+
 /// Closed-loop autoscaler parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AutoscaleConfig {
@@ -722,6 +748,46 @@ mod tests {
             assert_eq!(exact.makespan.to_bits(), fast.makespan.to_bits(), "slo {slo}");
             assert_eq!(exact.busy.to_bits(), fast.busy.to_bits(), "slo {slo}");
             assert_eq!(exact.finish_times.len(), fast.finish_times.len());
+            for (e, f) in exact.finish_times.iter().zip(&fast.finish_times) {
+                assert_eq!(e.to_bits(), f.to_bits(), "slo {slo}");
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_with_slo_dynamic_mirrors_static_funnel() {
+        let dag = LayerDag::chain(3);
+        let d = [0.3, 0.1, 0.2];
+        let arrivals: Vec<f64> = (0..30).map(|i| i as f64 * 0.07).collect();
+        // uniform rows: both funnels must agree with the static one
+        let rows: Vec<f64> = (0..arrivals.len()).flat_map(|_| d.iter().copied()).collect();
+        let policy = SchedPolicy::default().with_steady(false);
+        for &slo in &[f64::INFINITY, 0.05, 0.2, 1.0] {
+            let st = evaluate_with_slo(&dag, &d, &arrivals, 4, 0.6, slo, &policy);
+            let dy = evaluate_with_slo_dynamic(&dag, &rows, &arrivals, 4, 0.6, slo, &policy);
+            assert_eq!(st.makespan.to_bits(), dy.makespan.to_bits(), "slo {slo}");
+            assert_eq!(st.busy.to_bits(), dy.busy.to_bits(), "slo {slo}");
+            for (a, b) in st.finish_times.iter().zip(&dy.finish_times) {
+                assert_eq!(a.to_bits(), b.to_bits(), "slo {slo}");
+            }
+        }
+        // varying rows: the dynamic funnel matches the exact dynamic
+        // engine over the same admission partition, bit for bit
+        let mut rows2 = rows.clone();
+        for (i, r) in rows2.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *r *= 0.5;
+            }
+        }
+        for &slo in &[0.05, 0.2] {
+            let w = windows(&arrivals, 4, slo);
+            let exact = ScheduleSummary::from_schedule(
+                &PipelineSchedule::build_windows_dynamic(&dag, &rows2, &arrivals, &w, 0.6),
+            );
+            let fast = evaluate_with_slo_dynamic(
+                &dag, &rows2, &arrivals, 4, 0.6, slo, &SchedPolicy::default(),
+            );
+            assert_eq!(exact.makespan.to_bits(), fast.makespan.to_bits(), "slo {slo}");
             for (e, f) in exact.finish_times.iter().zip(&fast.finish_times) {
                 assert_eq!(e.to_bits(), f.to_bits(), "slo {slo}");
             }

@@ -35,7 +35,7 @@ use crate::cluster::{ChaosSpec, FleetSpec, ShardStrategy};
 use crate::config::{ArrayConfig, FifoDepths};
 use crate::models::FeatureSubset;
 use crate::report::Effort;
-use crate::serve::ArrivalProcess;
+use crate::serve::{ArrivalProcess, DensityModel};
 use crate::util::json::Json;
 
 /// A declarative design-space grid. Every axis defaults to the paper's
@@ -94,6 +94,11 @@ pub struct Grid {
     /// Straggler injection `(p, factor)` pairs;
     /// `(0, 1)` = the straggler-free classic point (`off`).
     pub straggles: Vec<(f64, f64)>,
+    /// Per-request density models ([`crate::serve::density`]);
+    /// `static` = the classic constant-density point. Traces are
+    /// CLI-only (a process-local handle is not a stable sweep
+    /// identity) and rejected here, like trace arrivals.
+    pub density_models: Vec<DensityModel>,
     pub seed: u64,
     pub tile_samples: usize,
     pub layer_stride: usize,
@@ -121,6 +126,7 @@ impl Grid {
             fleets: vec![FleetSpec::uniform()],
             fails: vec![(f64::INFINITY, 0.0)],
             straggles: vec![(0.0, 1.0)],
+            density_models: vec![DensityModel::Static],
             seed,
             tile_samples: effort.tile_samples,
             layer_stride: effort.layer_stride,
@@ -228,6 +234,13 @@ impl Grid {
         self
     }
 
+    /// Per-request density models; `DensityModel::Static` is the
+    /// classic constant-density point.
+    pub fn density_models(mut self, models: &[DensityModel]) -> Grid {
+        self.density_models = models.to_vec();
+        self
+    }
+
     fn effort(&self) -> Effort {
         Effort {
             tile_samples: self.tile_samples,
@@ -261,12 +274,13 @@ impl Grid {
             * self.fleets.len()
             * self.fails.len()
             * self.straggles.len()
+            * self.density_models.len()
     }
 
     /// Expand to the deterministic job list. Nesting order (outermost
     /// first): model, workload, scale, fifo, ratio, ce, ratio16, batch,
     /// overlap, arrays, shard, backend, requests, arrival, slo, fleet,
-    /// fail, straggle.
+    /// fail, straggle, density.
     pub fn plan(&self) -> Plan {
         let effort = self.effort();
         let mut jobs = Vec::with_capacity(self.size());
@@ -322,30 +336,9 @@ impl Grid {
                                                                         .clone()
                                                                         .with_arrival(arrival)
                                                                         .with_slo(slo);
-                                                                    for fleet in &self.fleets {
-                                                                        for &(mtbf, mttr) in
-                                                                            &self.fails
-                                                                        {
-                                                                            for &(p, fac) in
-                                                                                &self.straggles
-                                                                            {
-                                                                                jobs.push(
-                                                                                    job.clone()
-                                                                                        .with_fleet(
-                                                                                            fleet
-                                                                                                .clone(),
-                                                                                        )
-                                                                                        .with_fail(
-                                                                                            mtbf,
-                                                                                            mttr,
-                                                                                        )
-                                                                                        .with_straggle(
-                                                                                            p, fac,
-                                                                                        ),
-                                                                                );
-                                                                            }
-                                                                        }
-                                                                    }
+                                                                    self.push_chaos_density(
+                                                                        &job, &mut jobs,
+                                                                    );
                                                                 }
                                                             }
                                                         }
@@ -364,6 +357,25 @@ impl Grid {
         Plan::from_jobs(jobs)
     }
 
+    /// Expand the chaos (fleet, fail, straggle) and density axes — the
+    /// innermost nesting levels of [`Grid::plan`] — onto `out`.
+    fn push_chaos_density(&self, job: &Job, out: &mut Vec<Job>) {
+        for fleet in &self.fleets {
+            for &(mtbf, mttr) in &self.fails {
+                for &(p, fac) in &self.straggles {
+                    let job = job
+                        .clone()
+                        .with_fleet(fleet.clone())
+                        .with_fail(mtbf, mttr)
+                        .with_straggle(p, fac);
+                    for &dm in &self.density_models {
+                        out.push(job.clone().with_density(dm));
+                    }
+                }
+            }
+        }
+    }
+
     /// Parse the CLI's inline spec: semicolon-separated `axis=v1,v2,...`
     /// pairs. Axes and value forms:
     ///
@@ -371,7 +383,10 @@ impl Grid {
     /// |-------------|-----------------------------------------------------|
     /// | `models`    | zoo names, `synthetic-alexnet`, or `paper` (all 3)  |
     /// | `subsets`   | `avg`, `max`, `min`                                 |
-    /// | `densities` | `0.5` (feature=weight) or `0.3:0.6` (feature:weight)|
+    /// | `densities` | numeric points `0.5` (feature=weight) / `0.3:0.6`   |
+    /// |             | (feature:weight), or per-request density models     |
+    /// |             | `static`, `uniform:LO:HI`, `normal:MEAN:SIGMA`,     |
+    /// |             | `bimodal:LO:HI:P` (`dtrace` is CLI-only)            |
     /// | `scales`    | `16` (square) or `16x8` (rows x cols)               |
     /// | `fifos`     | `4` (uniform), `2/4/8` (w/f/wf), `inf`              |
     /// | `ratios`    | DS:MAC integers                                     |
@@ -472,20 +487,62 @@ impl Grid {
                     .collect::<Result<_, _>>()?;
             }
             "densities" | "density" => {
-                self.densities = values
-                    .iter()
-                    .map(|v| match v.split_once(':') {
-                        Some((f, w)) => {
-                            let fd = f.trim().parse().map_err(|_| bad("density", v))?;
-                            let wd = w.trim().parse().map_err(|_| bad("density", v))?;
-                            Ok((fd, wd))
-                        }
-                        None => {
-                            let d: f64 = v.trim().parse().map_err(|_| bad("density", v))?;
-                            Ok((d, d))
-                        }
-                    })
-                    .collect::<Result<_, _>>()?;
+                // one axis name, two meanings: numeric points (`0.5`,
+                // `0.3:0.6`) keep the historical synthetic-density
+                // sensitivity study; keyword specs (`static`,
+                // `uniform:0.1:0.6`, ...) select per-request density
+                // models. Mixing the two in one axis is ambiguous.
+                let is_model = |v: &&str| {
+                    let head = v.trim().split(':').next().unwrap_or("");
+                    matches!(
+                        head,
+                        "static" | "uniform" | "normal" | "bimodal" | "dtrace"
+                    )
+                };
+                if values.iter().any(is_model) {
+                    if !values.iter().all(is_model) {
+                        return Err(format!(
+                            "density axis mixes numeric points and model specs \
+                             (`{}`)",
+                            values.join(",")
+                        ));
+                    }
+                    self.density_models = values
+                        .iter()
+                        .map(|v| {
+                            let spec = v.trim();
+                            if spec.starts_with("dtrace") {
+                                // a process-local trace handle is not a
+                                // stable job identity: the canonical form
+                                // would depend on load order, breaking
+                                // resumable stores (same rule as trace
+                                // arrivals)
+                                return Err(format!(
+                                    "density traces are CLI-only, not sweepable \
+                                     (`{v}`)"
+                                ));
+                            }
+                            DensityModel::from_spec(spec)
+                                .map_err(|e| format!("bad density value `{v}`: {e}"))
+                        })
+                        .collect::<Result<_, _>>()?;
+                } else {
+                    self.densities = values
+                        .iter()
+                        .map(|v| match v.split_once(':') {
+                            Some((f, w)) => {
+                                let fd = f.trim().parse().map_err(|_| bad("density", v))?;
+                                let wd = w.trim().parse().map_err(|_| bad("density", v))?;
+                                Ok((fd, wd))
+                            }
+                            None => {
+                                let d: f64 =
+                                    v.trim().parse().map_err(|_| bad("density", v))?;
+                                Ok((d, d))
+                            }
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
             }
             "scales" | "scale" => {
                 self.scales = values
@@ -673,6 +730,20 @@ impl Grid {
         }
         if self.size() == 0 {
             return Err("grid expands to zero jobs (an axis is empty)".into());
+        }
+        // the cluster layer rejects this pairing at assembly time
+        // (chaos rewrites the schedule the realized rows were built
+        // for); fail at grid parse instead of mid-sweep
+        let dynamic = self.density_models.iter().any(|m| !m.is_static());
+        let chaotic = self.fleets.iter().any(|f| !f.is_uniform())
+            || self.fails.iter().any(|&(mtbf, _)| mtbf.is_finite())
+            || self.straggles.iter().any(|&(p, _)| p > 0.0);
+        if dynamic && chaotic {
+            return Err(
+                "dynamic density models are not combined with heterogeneous \
+                 fleets or chaos injection (drop one axis)"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -1042,6 +1113,56 @@ mod tests {
         )
         .unwrap();
         assert_eq!(Grid::from_json(&j).unwrap(), g);
+    }
+
+    #[test]
+    fn density_model_axis_expands_innermost() {
+        let g = Grid::from_spec(
+            "models=s2net;arrival=uniform,poisson:800;density=static,uniform:0.1:0.6",
+        )
+        .unwrap();
+        assert_eq!(g.density_models.len(), 2);
+        assert_eq!(g.size(), 4);
+        let jobs = g.plan().jobs;
+        assert_eq!(jobs.len(), 4);
+        // density innermost, then arrival
+        assert!(jobs[0].is_default_density());
+        assert_eq!(jobs[1].density, DensityModel::Uniform { lo: 0.1, hi: 0.6 });
+        assert_eq!(jobs[2].arrival, ArrivalProcess::Poisson { rate: 800.0 });
+        assert!(jobs[2].is_default_density());
+        // the default point keeps the historical (pre-density) key shape
+        assert!(!jobs[0].canonical().contains("|dn:"));
+        assert!(jobs[1]
+            .canonical()
+            .ends_with("|dn:uniform:3fb999999999999a:3fe3333333333333"));
+        let mut keys: Vec<u64> = jobs.iter().map(|j| j.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 4, "density axis must distinguish keys");
+        // JSON grid form parses identically
+        let j = Json::parse(
+            r#"{"models": ["s2net"],
+                "arrival": ["uniform", "poisson:800"],
+                "density": ["static", "uniform:0.1:0.6"]}"#,
+        )
+        .unwrap();
+        assert_eq!(Grid::from_json(&j).unwrap(), g);
+        // numeric values keep the historical synthetic-density meaning
+        let g = Grid::from_spec("models=synthetic-alexnet;density=0.3:0.6").unwrap();
+        assert_eq!(g.densities, vec![(0.3, 0.6)]);
+        assert_eq!(g.density_models, vec![DensityModel::Static]);
+        // garbage, mixed forms, and traces are rejected, not defaulted
+        assert!(Grid::from_spec("density=uniform:0.9:0.1").is_err());
+        assert!(Grid::from_spec("density=normal:0.5").is_err());
+        assert!(Grid::from_spec("density=0.5,uniform:0.1:0.6").is_err());
+        assert!(Grid::from_spec("density=dtrace:/tmp/nope.txt").is_err());
+        // dynamic density x chaos is rejected at parse time, not mid-sweep
+        assert!(Grid::from_spec("density=uniform:0.1:0.6;fail=0.05:0.01").is_err());
+        assert!(Grid::from_spec("density=uniform:0.1:0.6;straggle=0.2:4").is_err());
+        assert!(
+            Grid::from_spec("density=uniform:0.1:0.6;fleet=1x2+0.5x2@0.5").is_err()
+        );
+        assert!(Grid::from_spec("density=uniform:0.1:0.6;fleet=uniform").is_ok());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::cluster::{ChaosSpec, FleetSpec, ShardStrategy};
 use crate::config::ArrayConfig;
 use crate::models::{zoo, FeatureSubset, Model};
 use crate::report::Effort;
-use crate::serve::ArrivalProcess;
+use crate::serve::{ArrivalProcess, DensityModel};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -135,6 +135,12 @@ pub struct Job {
     /// Failure/straggler injection ([`crate::cluster::ChaosSpec`]);
     /// [`ChaosSpec::OFF`] (the default) is the classic perfect fleet.
     pub chaos: ChaosSpec,
+    /// Per-request feature-density model
+    /// ([`crate::serve::density::DensityModel`]);
+    /// [`DensityModel::Static`] (the default) is the classic
+    /// constant-density evaluation point. Traces are process-local and
+    /// rejected from grids, so they never reach a store.
+    pub density: DensityModel,
 }
 
 impl Job {
@@ -166,6 +172,7 @@ impl Job {
             slo: f64::INFINITY,
             fleet: FleetSpec::uniform(),
             chaos: ChaosSpec::OFF,
+            density: DensityModel::Static,
         }
     }
 
@@ -201,6 +208,7 @@ impl Job {
             slo: f64::INFINITY,
             fleet: FleetSpec::uniform(),
             chaos: ChaosSpec::OFF,
+            density: DensityModel::Static,
         }
     }
 
@@ -277,6 +285,12 @@ impl Job {
         self
     }
 
+    /// [`DensityModel::Static`] restores the constant-density default.
+    pub fn with_density(mut self, density: DensityModel) -> Job {
+        self.density = density;
+        self
+    }
+
     /// Is this job a plain per-layer evaluation point (the pre-serving
     /// default)? Such jobs keep their historical canonical form — and
     /// therefore their [`Job::key`] — so stores written before the
@@ -344,6 +358,14 @@ impl Job {
         self.chaos.straggle_p == 0.0 && self.chaos.straggle_factor == 1.0
     }
 
+    /// Is this job a constant-density point (the pre-dynamic-sparsity
+    /// default)? Such jobs keep their historical canonical form — and
+    /// therefore their [`Job::key`] — so stores written before the
+    /// `density` axis existed still resume.
+    pub fn is_default_density(&self) -> bool {
+        self.density.is_static()
+    }
+
     /// The cluster configuration this job implies.
     pub fn cluster_config(&self) -> crate::cluster::ClusterConfig {
         crate::cluster::ClusterConfig::new(self.arrays, self.shard)
@@ -366,6 +388,7 @@ impl Job {
             .with_seed(self.seed)
             .with_arrival(self.arrival)
             .with_slo(self.slo)
+            .with_density(self.density)
     }
 
     /// Canonical text form: every field that determines the result, with
@@ -467,6 +490,14 @@ impl Job {
                 self.chaos.straggle_p.to_bits(),
                 self.chaos.straggle_factor.to_bits()
             );
+        }
+        // the density suffix composes last of all. `|dn:` is
+        // prefix-distinct from every earlier suffix (no other suffix
+        // starts `|d`), so every elision combination remains injective.
+        // Distribution parameters are keyed as exact bit patterns
+        // ([`DensityModel::canonical`]).
+        if !self.is_default_density() {
+            canon = format!("{canon}|dn:{}", self.density.canonical());
         }
         canon
     }
@@ -583,6 +614,13 @@ impl Job {
                 "straggle_factor".into(),
                 Json::Num(self.chaos.straggle_factor),
             );
+        }
+        // density likewise elided at the static default (pre-density
+        // stores carry no such key). The spec string round-trips every
+        // distribution exactly (shortest-roundtrip floats); traces never
+        // reach a store (grids reject them).
+        if !self.is_default_density() {
+            o.insert("density".into(), Json::Str(self.density.spec()));
         }
         Json::Obj(o)
     }
@@ -703,6 +741,12 @@ impl Job {
                     chaos.straggle_factor = f;
                 }
                 chaos
+            },
+            density: match j.get("density") {
+                Some(Json::Str(spec)) => DensityModel::from_spec(spec)
+                    .map_err(|e| format!("bad density model: {e}"))?,
+                Some(_) => return Err("non-string field `density`".into()),
+                None => DensityModel::Static,
             },
         })
     }
@@ -1084,6 +1128,94 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq.len(), keys.len(), "chaos axes must distinguish keys");
+    }
+
+    #[test]
+    fn default_density_keeps_historical_keys() {
+        // Pre-density stores must keep resuming: a static-density job
+        // keys exactly as it did before the density axis existed. Every
+        // locked key below was computed by the independent Python FNV
+        // transcription over the literal canonical string.
+        let j = job();
+        assert!(j.is_default_density());
+        assert_eq!(
+            j.canonical(),
+            "alexnet|avg|16x16|4,4,4|r4|ce1|r16:0000000000000000|seed24301|n2|t4"
+        );
+        assert_eq!(j.key(), 0x66e2_f3d3_dc21_8ebf);
+        assert_eq!(j.clone().with_density(DensityModel::Static).key(), j.key());
+        // non-default density models extend — and change — the key,
+        // with parameters keyed as exact bit patterns
+        let u = j
+            .clone()
+            .with_density(DensityModel::Uniform { lo: 0.1, hi: 0.6 });
+        assert!(u
+            .canonical()
+            .ends_with("|dn:uniform:3fb999999999999a:3fe3333333333333"));
+        assert_eq!(u.key(), 0x19af_54f8_3470_7c5c);
+        let n = j.clone().with_density(DensityModel::Normal {
+            mean: 0.5,
+            sigma: 0.15,
+        });
+        assert!(n
+            .canonical()
+            .ends_with("|dn:normal:3fe0000000000000:3fc3333333333333"));
+        assert_eq!(n.key(), 0x6ff1_fcf5_ac63_c5a7);
+        let b = j.clone().with_density(DensityModel::Bimodal {
+            lo: 0.1,
+            hi: 0.8,
+            p: 0.3,
+        });
+        assert!(b.canonical().ends_with(
+            "|dn:bimodal:3fb999999999999a:3fe999999999999a:3fd3333333333333"
+        ));
+        assert_eq!(b.key(), 0x9b3b_5892_cc07_398e);
+        // the density suffix composes last of all, after every other axis
+        let full = j
+            .clone()
+            .with_batch(4)
+            .with_arrays(2)
+            .with_slo(0.02)
+            .with_density(DensityModel::Uniform { lo: 0.1, hi: 0.6 });
+        assert!(full.canonical().ends_with(
+            "|b4|ov:0000000000000000|a2|sh:data|slo:3f947ae147ae147b\
+             |dn:uniform:3fb999999999999a:3fe3333333333333"
+        ));
+        assert_eq!(full.key(), 0x2271_df94_91a3_61ce);
+        let keys = [j.key(), u.key(), n.key(), b.key(), full.key()];
+        let mut uniq = keys.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len(), "density axis must distinguish keys");
+    }
+
+    #[test]
+    fn density_job_json_roundtrip_and_legacy_parse() {
+        let j = job()
+            .with_batch(2)
+            .with_density(DensityModel::Bimodal {
+                lo: 0.15,
+                hi: 0.85,
+                p: 0.25,
+            });
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(j, back);
+        assert_eq!(j.key(), back.key());
+        // a pre-density line (no density key) parses to the static default
+        let legacy = job().with_batch(2).to_json().to_string();
+        assert!(!legacy.contains("density"));
+        let parsed = Job::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert!(parsed.is_default_density());
+        // a garbage density spec is rejected, not silently defaulted
+        let mut bad = Json::parse(&legacy).unwrap();
+        if let Json::Obj(map) = &mut bad {
+            map.insert("density".into(), Json::Str("gaussian:9".into()));
+        }
+        assert!(Job::from_json(&bad).is_err());
+        // serve_config threads the density model through
+        assert_eq!(j.serve_config().density, j.density);
+        assert!(job().serve_config().density.is_static());
     }
 
     #[test]

@@ -125,20 +125,58 @@ pub fn execute(job: &Job, inner_workers: usize) -> SweepRecord {
         ),
     };
     let result = ModelResult::new(&model, &cfg, layers.clone());
-    let cluster = crate::cluster::ClusterReport::assemble_fleet(
-        model.name.clone(),
+    // static density on a chain model takes the historical assembly
+    // verbatim (byte-identical records by construction); per-request
+    // density models and branchy DAGs need the model's topology and a
+    // per-level wall table
+    if job.density.is_static() && model.deps.is_none() {
+        let cluster = crate::cluster::ClusterReport::assemble_fleet(
+            model.name.clone(),
+            backend.tag(),
+            job.cluster_config(),
+            job.serve_config(),
+            layers.clone(),
+            job.fleet.clone(),
+            job.chaos,
+        );
+        let serve = crate::serve::ServeReport::assemble_backend(
+            model.name.clone(),
+            backend.tag(),
+            job.serve_config(),
+            layers,
+        );
+        return SweepRecord::from_result(job.clone(), &result, &serve, &cluster);
+    }
+    let weight_density = match job.workload {
+        Workload::Synthetic { weight_density, .. } => weight_density,
+        Workload::Subset(_) => model.weight_density,
+    };
+    let table = if job.density.is_static() {
+        None
+    } else {
+        Some(crate::backend::dynamic_wall_table(
+            backend.as_ref(),
+            &model,
+            weight_density,
+            true,
+        ))
+    };
+    let cluster = crate::cluster::ClusterReport::assemble_model(
+        &model,
         backend.tag(),
         job.cluster_config(),
         job.serve_config(),
         layers.clone(),
+        table.as_deref(),
         job.fleet.clone(),
         job.chaos,
     );
-    let serve = crate::serve::ServeReport::assemble_backend(
-        model.name.clone(),
+    let serve = crate::serve::ServeReport::assemble_model(
+        &model,
         backend.tag(),
         job.serve_config(),
         layers,
+        table.as_deref(),
     );
     SweepRecord::from_result(job.clone(), &result, &serve, &cluster)
 }
@@ -373,6 +411,39 @@ mod tests {
         assert_eq!(s2.naive_wall, naive.naive_wall);
         assert_eq!(s2.naive_wall, scnn.naive_wall);
         // re-running reuses everything (backend keys are stable)
+        let res2 = Runner::new().run(&g.plan(), &mut store);
+        assert_eq!(res2.ran, 0);
+        assert_eq!(res.records(), res2.records());
+    }
+
+    #[test]
+    fn density_axis_flows_through_to_record_metrics() {
+        use crate::serve::DensityModel;
+        let g = Grid::new(tiny(), SEED ^ 0xd0)
+            .models(&["s2net"])
+            .scales(&[(8, 8)])
+            .batches(&[2])
+            .requests(&[8])
+            .density_models(&[
+                DensityModel::Static,
+                DensityModel::Uniform { lo: 0.1, hi: 0.9 },
+            ]);
+        let mut store = Store::in_memory();
+        let res = Runner::new().run(&g.plan(), &mut store);
+        assert_eq!(res.len(), 2);
+        let (fixed, dynamic) = (&res.records()[0], &res.records()[1]);
+        // per-layer metrics never depend on the serving density model
+        assert_eq!(fixed.speedup, dynamic.speedup);
+        assert_eq!(fixed.s2_wall, dynamic.s2_wall);
+        for rec in res.records() {
+            assert!(rec.has_serving_metrics());
+            assert!(rec.has_cluster_metrics());
+            assert!(rec.throughput > 0.0);
+            assert!(rec.p99_latency >= rec.p50_latency);
+        }
+        // heterogeneous requests shift the latency distribution
+        assert_ne!(fixed.p99_latency, dynamic.p99_latency);
+        // resume: density keys are stable, nothing re-simulated
         let res2 = Runner::new().run(&g.plan(), &mut store);
         assert_eq!(res2.ran, 0);
         assert_eq!(res.records(), res2.records());

@@ -46,6 +46,8 @@ fn single_layer_model(layer: LayerDesc, fd: f64, wd: f64) -> Model {
         weight_density: wd,
         feature_density: fd,
         feature_density_sigma: 0.0,
+        deps: None,
+        density_scale: Vec::new(),
     }
 }
 
@@ -312,6 +314,83 @@ fn analytic_multi_layer_makespan_is_the_per_layer_wall_fold() {
         &|l| sparten::cost(l.macs(), fd, wd).wall_seconds(),
         sparten::cost(model.total_macs(), fd, wd).wall_seconds(),
     );
+}
+
+#[test]
+fn static_density_config_through_the_trait_path_is_bit_identical() {
+    // an explicit `DensityModel::Static` is the same config as no
+    // density at all — the coordinator must route both through the
+    // legacy engines verbatim
+    use s2engine::serve::DensityModel;
+    let c = coord(2, 0xc0de_cafe_0083);
+    let model = zoo::alexnet();
+    let backend = S2Backend::new(c.clone());
+    let serve = ServeConfig::new(4, 0.6).with_requests(12);
+    let tagged = serve.with_density(DensityModel::Static);
+    let a = c.simulate_model_pipelined_with(&backend, &model, FeatureSubset::Average, &serve);
+    let b =
+        c.simulate_model_pipelined_with(&backend, &model, FeatureSubset::Average, &tagged);
+    assert_eq!(a.makespan().to_bits(), b.makespan().to_bits());
+    assert_eq!(a.schedule, b.schedule);
+    assert_eq!(a.latency, b.latency);
+    let cluster = ClusterConfig::new(2, ShardStrategy::DataParallel);
+    let ca = c.simulate_model_cluster_with(
+        &backend,
+        &model,
+        FeatureSubset::Average,
+        &serve,
+        &cluster,
+    );
+    let cb = c.simulate_model_cluster_with(
+        &backend,
+        &model,
+        FeatureSubset::Average,
+        &tagged,
+        &cluster,
+    );
+    assert_eq!(ca.makespan().to_bits(), cb.makespan().to_bits());
+    assert_eq!(ca.schedule.finish_times, cb.schedule.finish_times);
+}
+
+#[test]
+fn dynamic_density_spreads_latency_under_every_backend() {
+    // the per-request density model composes with the whole backend
+    // roster: every engine's wall table drives heterogeneous requests
+    use s2engine::serve::DensityModel;
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(1)
+        .with_seed(0xc0de_cafe_0084);
+    let model = zoo::s2net();
+    let serve_static = ServeConfig::new(2, 0.5).with_requests(16).with_seed(5);
+    let serve_dyn = serve_static.with_density(DensityModel::Uniform { lo: 0.1, hi: 0.9 });
+    for kind in BackendKind::ALL {
+        let backend = kind.build(&cfg);
+        let c = Coordinator::new(cfg.clone());
+        let r = c.simulate_model_pipelined_with(
+            backend.as_ref(),
+            &model,
+            FeatureSubset::Average,
+            &serve_dyn,
+        );
+        assert!(
+            r.latency.max > r.latency.min,
+            "{}: dynamic density must spread latencies",
+            kind.tag()
+        );
+        assert!(r.makespan() >= r.critical_path_bound() - 1e-9, "{}", kind.tag());
+        let s = c.simulate_model_pipelined_with(
+            backend.as_ref(),
+            &model,
+            FeatureSubset::Average,
+            &serve_static,
+        );
+        assert_ne!(
+            r.makespan().to_bits(),
+            s.makespan().to_bits(),
+            "{}: realized rows must differ from the static walls",
+            kind.tag()
+        );
+    }
 }
 
 #[test]

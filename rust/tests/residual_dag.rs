@@ -1,0 +1,186 @@
+//! Residual-DAG scheduling: the `resnet8` zoo model carries *real*
+//! skip-connection precedence edges (`Model::deps`), and this suite
+//! proves they schedule correctly through the serving pipeline and all
+//! three cluster shard strategies.
+//!
+//! The load-bearing structural fact: `resnet8`'s skip edges are *added
+//! on top of* the layer chain (every layer still depends on its
+//! predecessor), so the extra edges are transitively redundant — a
+//! correct scheduler must produce the **bit-identical** schedule with
+//! and without them, because `ready = max(finish[deps])` cannot be
+//! moved by a dependency that finishes earlier than the direct
+//! predecessor. A scheduler that mishandles dependency lists (wrong
+//! slot indexing, missed edges, double counting) breaks this equality
+//! immediately.
+
+use s2engine::backend::{dynamic_wall_table, layer_results_subset, BackendKind};
+use s2engine::cluster::{ChaosSpec, ClusterConfig, ClusterReport, FleetSpec, ShardStrategy};
+use s2engine::config::{ArrayConfig, SimConfig};
+use s2engine::models::{zoo, FeatureSubset};
+use s2engine::serve::{DensityModel, LayerDag, ServeConfig, ServeReport};
+
+const SEED: u64 = 0xc0de_cafe_0060;
+
+#[test]
+fn resnet8_dag_structure_is_golden() {
+    let m = zoo::resnet8();
+    assert_eq!(
+        m.deps.as_deref(),
+        Some(
+            &[
+                vec![],
+                vec![0],
+                vec![1],
+                vec![2, 0],
+                vec![3],
+                vec![4, 2],
+                vec![5],
+                vec![6, 4],
+            ][..]
+        )
+    );
+    let dag = LayerDag::from_model(&m);
+    assert_eq!(dag.len(), 8);
+    assert_eq!(dag.topo_order().to_vec(), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    assert_eq!(dag.sinks(), vec![7]);
+    // the chain edges are all present, so the critical path spans every
+    // layer: exactly 8.0 under unit durations
+    assert_eq!(dag.critical_path(&[1.0; 8]).to_bits(), 8.0f64.to_bits());
+    // and the skip edges are genuinely in the graph
+    assert!(dag.deps(3).contains(&0));
+    assert!(dag.deps(5).contains(&2));
+    assert!(dag.deps(7).contains(&4));
+}
+
+#[test]
+fn redundant_skip_edges_leave_the_serve_schedule_bit_identical() {
+    let model = zoo::resnet8();
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(2)
+        .with_seed(SEED);
+    let backend = BackendKind::S2.build(&cfg);
+    let layers =
+        layer_results_subset(backend.as_ref(), &model, FeatureSubset::Average, cfg.seed);
+    for &(batch, overlap, requests) in &[(1usize, 0.0, 4usize), (4, 0.6, 12)] {
+        let serve = ServeConfig::new(batch, overlap)
+            .with_requests(requests)
+            .with_seed(9);
+        let dag_run =
+            ServeReport::assemble_model(&model, backend.tag(), serve, layers.clone(), None);
+        let chain_run = ServeReport::assemble_backend(
+            model.name.clone(),
+            backend.tag(),
+            serve,
+            layers.clone(),
+        );
+        assert_eq!(
+            dag_run.makespan().to_bits(),
+            chain_run.makespan().to_bits(),
+            "b{batch} ov{overlap}: redundant edges moved the makespan"
+        );
+        assert_eq!(dag_run.schedule.finish_times, chain_run.schedule.finish_times);
+        assert_eq!(dag_run.latency, chain_run.latency);
+        // but the DAG itself is the model's, not a chain
+        assert_eq!(dag_run.dag(), LayerDag::from_model(&model));
+        assert!(dag_run.makespan() >= dag_run.critical_path_bound() - 1e-12);
+    }
+}
+
+#[test]
+fn resnet8_schedules_through_every_shard_strategy() {
+    let model = zoo::resnet8();
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(2)
+        .with_seed(SEED);
+    let backend = BackendKind::S2.build(&cfg);
+    let layers =
+        layer_results_subset(backend.as_ref(), &model, FeatureSubset::Average, cfg.seed);
+    let serve = ServeConfig::new(4, 0.6).with_requests(12).with_seed(9);
+    let piped =
+        ServeReport::assemble_model(&model, backend.tag(), serve, layers.clone(), None);
+    for shard in ShardStrategy::ALL {
+        let mut prev_data_makespan = f64::INFINITY;
+        for arrays in [1usize, 2, 4] {
+            let r = ClusterReport::assemble_model(
+                &model,
+                backend.tag(),
+                ClusterConfig::new(arrays, shard),
+                serve,
+                layers.clone(),
+                None,
+                FleetSpec::uniform(),
+                ChaosSpec::OFF,
+            );
+            assert!(r.makespan() > 0.0, "{shard:?} x{arrays}");
+            assert!(
+                r.makespan() + 1e-12 >= r.schedule.lower_bound,
+                "{shard:?} x{arrays}: makespan {} below bound {}",
+                r.makespan(),
+                r.schedule.lower_bound
+            );
+            assert_eq!(r.schedule.lanes.len(), arrays);
+            if arrays == 1 {
+                // degenerate equivalence: one array of any strategy is
+                // the single-array pipeline, bit for bit
+                assert_eq!(
+                    r.makespan().to_bits(),
+                    piped.makespan().to_bits(),
+                    "{shard:?} x1 must reproduce the pipeline"
+                );
+                assert_eq!(r.schedule.finish_times, piped.schedule.finish_times);
+            }
+            if shard == ShardStrategy::DataParallel {
+                assert!(
+                    r.makespan() <= prev_data_makespan + 1e-12,
+                    "data-parallel makespan must not grow with arrays"
+                );
+                prev_data_makespan = r.makespan();
+            }
+        }
+    }
+}
+
+#[test]
+fn resnet8_serves_under_dynamic_density() {
+    // the branchy DAG and the per-request density model compose: each
+    // request realizes its own per-layer walls and the skip edges still
+    // constrain every window
+    let model = zoo::resnet8();
+    let cfg = SimConfig::new(ArrayConfig::new(8, 8))
+        .with_samples(2)
+        .with_seed(SEED);
+    let backend = BackendKind::S2.build(&cfg);
+    let layers =
+        layer_results_subset(backend.as_ref(), &model, FeatureSubset::Average, cfg.seed);
+    let table = dynamic_wall_table(backend.as_ref(), &model, model.weight_density, true);
+    let serve = ServeConfig::new(4, 0.6)
+        .with_requests(24)
+        .with_seed(11)
+        .with_density(DensityModel::Uniform { lo: 0.1, hi: 0.9 });
+    let r = ServeReport::assemble_model(
+        &model,
+        backend.tag(),
+        serve,
+        layers.clone(),
+        Some(&table),
+    );
+    assert!(r.makespan() >= r.critical_path_bound() - 1e-9);
+    assert!(
+        r.latency.max > r.latency.min,
+        "per-request density must spread the latency distribution"
+    );
+    for shard in ShardStrategy::ALL {
+        let c = ClusterReport::assemble_model(
+            &model,
+            backend.tag(),
+            ClusterConfig::new(2, shard),
+            serve,
+            layers.clone(),
+            Some(&table),
+            FleetSpec::uniform(),
+            ChaosSpec::OFF,
+        );
+        assert!(c.makespan() > 0.0, "{shard:?}");
+        assert!(c.makespan() + 1e-9 >= c.schedule.lower_bound, "{shard:?}");
+    }
+}

@@ -20,6 +20,17 @@ Checked per file (the `util::bench::Bench::to_json` schema):
 Usage: python3 scripts/check_bench.py [BENCH_foo.json ...]
 With no arguments, checks every BENCH_*.json in the current directory.
 Exits nonzero listing every violation.
+
+Regression mode: `--compare BASELINE_DIR [--tol PCT]` additionally
+diffs every file's *metrics* (never the nanosecond timings — those are
+runner-noise) against the same-named file in BASELINE_DIR. A metric
+whose relative change from baseline exceeds PCT percent (default 10)
+is reported as DRIFT and fails the check; metrics new since the
+baseline are informational; metrics that *disappeared* fail. A file
+with no baseline counterpart — or an empty/missing baseline directory,
+the state before the first snapshot is recorded — is skipped with a
+notice, so the compare step degrades gracefully until a baseline
+exists (see BENCH_baseline/README.md for the snapshot protocol).
 """
 
 import glob
@@ -139,8 +150,87 @@ def check_file(path):
     return errors
 
 
+def load_metrics(path):
+    """The `metrics` object of a bench JSON, {} when absent/unreadable."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    metrics = doc.get("metrics") if isinstance(doc, dict) else None
+    return metrics if isinstance(metrics, dict) else {}
+
+
+def compare_file(path, baseline_dir, tol_pct):
+    """Diff `path`'s metrics against the same-named baseline file.
+    Returns (errors, notes): errors fail the check, notes are
+    informational."""
+    errors, notes = [], []
+    base_path = os.path.join(baseline_dir, os.path.basename(path))
+    if not os.path.exists(base_path):
+        notes.append(f"{path}: no baseline at {base_path} (skipped)")
+        return errors, notes
+    base = load_metrics(base_path)
+    cur = load_metrics(path)
+    if not base:
+        notes.append(f"{path}: baseline {base_path} carries no metrics (skipped)")
+        return errors, notes
+    for name, bm in sorted(base.items()):
+        bv = bm.get("value") if isinstance(bm, dict) else None
+        if not is_num(bv) or not math.isfinite(bv):
+            continue
+        cm = cur.get(name)
+        if not isinstance(cm, dict):
+            errors.append(f"{path}: metric `{name}` disappeared since baseline")
+            continue
+        cv = cm.get("value")
+        if not is_num(cv) or not math.isfinite(cv):
+            errors.append(f"{path}: metric `{name}` no longer finite")
+            continue
+        denom = max(abs(bv), 1e-300)
+        change = (cv - bv) / denom * 100.0
+        if abs(change) > tol_pct:
+            errors.append(
+                f"{path}: DRIFT `{name}` {bv:g} -> {cv:g} "
+                f"({change:+.1f}%, tol {tol_pct:g}%)"
+            )
+        else:
+            notes.append(f"{path}: `{name}` {bv:g} -> {cv:g} ({change:+.1f}%)")
+    for name in sorted(set(cur) - set(base)):
+        notes.append(f"{path}: metric `{name}` is new since baseline")
+    return errors, notes
+
+
 def main(argv):
-    paths = argv[1:] or sorted(glob.glob("BENCH_*.json"))
+    args = argv[1:]
+    baseline_dir = None
+    tol_pct = 10.0
+    paths = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--compare":
+            i += 1
+            if i == len(args):
+                print("check_bench: --compare needs a directory", file=sys.stderr)
+                return 2
+            baseline_dir = args[i]
+        elif args[i] == "--tol":
+            i += 1
+            if i == len(args):
+                print("check_bench: --tol needs a percentage", file=sys.stderr)
+                return 2
+            try:
+                tol_pct = float(args[i])
+            except ValueError:
+                print(f"check_bench: bad --tol '{args[i]}'", file=sys.stderr)
+                return 2
+            if not math.isfinite(tol_pct) or tol_pct < 0:
+                print(f"check_bench: bad --tol '{args[i]}'", file=sys.stderr)
+                return 2
+        else:
+            paths.append(args[i])
+        i += 1
+    paths = paths or sorted(glob.glob("BENCH_*.json"))
     if not paths:
         print("check_bench: no BENCH_*.json files found", file=sys.stderr)
         return 1
@@ -151,6 +241,11 @@ def main(argv):
             failures.extend(errs)
         else:
             print(f"check_bench: {path} OK")
+        if baseline_dir is not None:
+            cerrs, notes = compare_file(path, baseline_dir, tol_pct)
+            for msg in notes:
+                print(f"check_bench: {msg}")
+            failures.extend(cerrs)
     for msg in failures:
         print(f"check_bench: FAIL {msg}", file=sys.stderr)
     return 1 if failures else 0

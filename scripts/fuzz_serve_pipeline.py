@@ -39,6 +39,18 @@ engage on saturated closed-loop backlogs, stay within the documented
 n·ε relative bound, and stay disengaged (hence bit-exact) when
 arrivals outrun the array.
 
+And the dynamic-density oracle (`dynamic_density_oracle`): a
+transcription of rust/src/serve/density.rs (salted per-request xoshiro
+streams, 16-level quantization, `realized_rows`) plus the dynamic
+scheduler pair — `PipelineSchedule::build_windows_dynamic` and
+`fastpath::evaluate_windows_dynamic` (per-window templates keyed on the
+realized duration block, steady-state layer disengaged). Fuzzed for
+bit-equality between the exact and fast-path engines across thousands
+of sampled-density cases (every model family, chain and skip DAGs,
+batch and SLO window partitions), and for the degenerate anchor: rows
+that all equal the static duration vector must reproduce the static
+builder bit for bit.
+
 And the traffic-engine oracle (`traffic_oracle`): a transcription of
 rust/src/util/rng.rs (SplitMix64 -> xoshiro256++) and the arrival
 generators + SLO window closure of rust/src/serve/traffic.rs /
@@ -435,6 +447,303 @@ def fastpath_oracle():
           f"within the error bound")
 
 
+# --- dynamic-density transcription (rust/src/serve/density.rs and the
+# dynamic twins in pipeline.rs / fastpath.rs) ---------------------------
+
+DENSITY_SALT = 0x6D0DE15A
+REQUEST_GAMMA = 0x9E3779B97F4A7C15
+DENSITY_LEVELS = 16
+DENSITY_FLOOR = 0.02
+DENSITY_CEIL = 0.98
+_DENSITY_STEP = (DENSITY_CEIL - DENSITY_FLOOR) / (DENSITY_LEVELS - 1)
+
+
+def level_density(lv):
+    """density::level_density."""
+    return DENSITY_FLOOR + lv * _DENSITY_STEP
+
+
+def quantize(d):
+    """density::quantize — floor(x + 0.5) half-up, never round()."""
+    lv = math.floor((d - DENSITY_FLOOR) / _DENSITY_STEP + 0.5)
+    if lv <= 0:
+        return 0
+    return min(lv, DENSITY_LEVELS - 1)
+
+
+def sample_levels(model, seed, request, scale, n_layers):
+    """Transcription of DensityModel::sample_levels; `model` is
+    ("uniform", lo, hi) | ("normal", mean, sigma) | ("bimodal", lo, hi, p)
+    | ("trace", values)."""
+
+    def scaled(i, raw):
+        s = scale[i] if i < len(scale) else 1.0
+        return quantize(min(max(raw * s, DENSITY_FLOOR), DENSITY_CEIL))
+
+    if model[0] == "trace":
+        tr = model[1]
+        return [
+            scaled(i, tr[(request * n_layers + i) % len(tr)])
+            for i in range(n_layers)
+        ]
+    rng = Xoshiro(((seed ^ DENSITY_SALT) + request * REQUEST_GAMMA) & _M64)
+    out = []
+    for i in range(n_layers):
+        if model[0] == "uniform":
+            _, lo, hi = model
+            raw = lo + (hi - lo) * rng.gen_f64()
+        elif model[0] == "normal":
+            _, mean, sigma = model
+            raw = mean + sigma * rng.gen_normal()
+        else:
+            _, lo, hi, p = model
+            raw = hi if rng.gen_f64() < p else lo
+        out.append(scaled(i, raw))
+    return out
+
+
+def realized_rows(model, seed, requests, scale, wall):
+    """density::realized_rows — rows[r*L + i] = wall[i][level]."""
+    n_layers = len(wall)
+    rows = []
+    for r in range(requests):
+        for i, lv in enumerate(sample_levels(model, seed, r, scale, n_layers)):
+            rows.append(wall[i][lv])
+    return rows
+
+
+def build_dynamic(n_nodes, deps, topo, rows, arrivals, windows, overlap, sinks):
+    """Transcription of PipelineSchedule::build_windows_dynamic (the
+    exact dynamic engine — identical fold to `build`, but the duration
+    is looked up per (request, node))."""
+    overlap = min(max(overlap, 0.0), MAX_OVERLAP)
+    n_img = len(arrivals)
+    finish = [0.0] * (n_img * n_nodes)
+    finish_times = [0.0] * n_img
+    array_free = 0.0
+    prev_dur = 0.0
+    any_prev = False
+    busy = 0.0
+    makespan = 0.0
+    n_jobs = 0
+    for lo, hi in windows:
+        window_ready = 0.0
+        for a in arrivals[lo:hi]:
+            window_ready = max(window_ready, a)
+        for node in topo:
+            for img in range(lo, hi):
+                d = rows[img * n_nodes + node]
+                ready = window_ready
+                for p in deps[node]:
+                    ready = max(ready, finish[img * n_nodes + p])
+                if any_prev:
+                    start = max(ready, array_free - overlap * min(prev_dur, d))
+                else:
+                    start = ready
+                end = start + d
+                busy += end - (max(start, array_free) if any_prev else start)
+                finish[img * n_nodes + node] = end
+                array_free = end
+                prev_dur = d
+                any_prev = True
+                makespan = max(makespan, end)
+                n_jobs += 1
+        for img in range(lo, hi):
+            done = window_ready
+            for s in sinks:
+                done = max(done, finish[img * n_nodes + s])
+            finish_times[img] = done
+    return finish_times, makespan, busy, n_jobs
+
+
+def build_template_dyn(n_nodes, deps, topo, sinks, wdur, overlap, width,
+                       entry_prev_dur):
+    """Transcription of fastpath::build_template_dyn (steady: None —
+    the dynamic path never extrapolates)."""
+    dur, cut, depidx, dep_off, slot = [], [], [], [0], []
+    prev_dur = entry_prev_dur
+    for node in topo:
+        for s in range(width):
+            d = wdur[s * n_nodes + node]
+            cut.append(overlap * min(prev_dur, d))
+            dur.append(d)
+            for p in deps[node]:
+                depidx.append(s * n_nodes + p)
+            dep_off.append(len(depidx))
+            slot.append(s * n_nodes + node)
+            prev_dur = d
+    return {"width": width, "n_nodes": n_nodes, "dur": dur, "cut": cut,
+            "deps": depidx, "dep_off": dep_off, "slot": slot,
+            "sinks": sinks, "steady": None}
+
+
+def evaluate_dynamic(n_nodes, deps, topo, rows, arrivals, windows, overlap,
+                     sinks):
+    """Transcription of fastpath::evaluate_windows_dynamic (memoization
+    is identity in Python — dynamic templates are pure functions of the
+    realized duration block, which is exactly what `wave_key_dyn`
+    keys)."""
+    overlap = min(max(overlap, 0.0), MAX_OVERLAP)
+    n_img = len(arrivals)
+    if n_img == 0:
+        return [], 0.0, 0.0, 0
+    w_max = max(hi - lo for lo, hi in windows)
+    last_node = topo[-1] if topo else None
+    finish_times = [0.0] * n_img
+    wfin = [0.0] * (w_max * n_nodes)
+    st = [0.0, False, 0.0, 0.0]
+    for w, (lo, hi) in enumerate(windows):
+        width = hi - lo
+        t0 = 0.0
+        for a in arrivals[lo:hi]:
+            t0 = max(t0, a)
+        if w == 0 or last_node is None:
+            entry_prev_dur = 0.0
+        else:
+            prev_last = windows[w - 1][1] - 1
+            entry_prev_dur = rows[prev_last * n_nodes + last_node]
+        wdur = rows[lo * n_nodes : hi * n_nodes]
+        tpl = build_template_dyn(
+            n_nodes, deps, topo, sinks, wdur, overlap, width, entry_prev_dur
+        )
+        _replay(tpl, t0, st, wfin, finish_times, lo)
+    return finish_times, st[3], st[2], n_img * n_nodes
+
+
+def _random_density_model(rng):
+    kind = rng.randrange(4)
+    if kind == 0:
+        lo = rng.uniform(0.05, 0.5)
+        return ("uniform", lo, lo + rng.uniform(0.0, 0.45))
+    if kind == 1:
+        return ("normal", rng.uniform(0.1, 0.7), rng.choice([0.0, 0.05, 0.15, 0.3]))
+    if kind == 2:
+        lo = rng.uniform(0.05, 0.3)
+        return ("bimodal", lo, lo + rng.uniform(0.1, 0.6), rng.random())
+    return ("trace", [rng.uniform(0.02, 0.98) for _ in range(rng.randint(1, 9))])
+
+
+def _fixed_windows(n_img, batch):
+    batch = max(batch, 1)
+    out = []
+    lo = 0
+    while lo < n_img:
+        hi = min(lo + batch, n_img)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def dynamic_density_oracle():
+    """Per-request density sampling + the dynamic scheduler pair."""
+    # (a) sampling invariants, mirroring the Rust unit tests: per-request
+    # determinism (resharding-stable — request r's vector is a pure
+    # function of (model, seed, r, scale)), band respect under
+    # quantization, two-point bimodal support, decay-scale monotonicity.
+    m = ("uniform", 0.1, 0.6)
+    assert sample_levels(m, 42, 7, [], 5) == sample_levels(m, 42, 7, [], 5)
+    assert sample_levels(m, 42, 7, [], 5) != sample_levels(m, 42, 8, [], 5)
+    assert sample_levels(m, 42, 7, [], 5) != sample_levels(m, 43, 7, [], 5)
+    for r in range(200):
+        for lv in sample_levels(("uniform", 0.2, 0.5), 1, r, [], 4):
+            assert 0.15 <= level_density(lv) <= 0.55, lv
+    seen = set()
+    for r in range(300):
+        seen.update(sample_levels(("bimodal", 0.1, 0.8, 0.3), 9, r, [], 3))
+    assert seen == {quantize(0.1), quantize(0.8)}, seen
+    levels = sample_levels(("uniform", 0.5, 0.5001), 3, 0, [1.0, 0.6, 0.36, 0.216], 4)
+    assert all(b <= a for a, b in zip(levels, levels[1:])), levels
+    assert quantize(0.0) == 0 and quantize(DENSITY_FLOOR) == 0
+    assert quantize(1.0) == DENSITY_LEVELS - 1
+    cases = 7
+
+    # (b) the acceptance gate: exact dynamic engine vs dynamic fast path,
+    # bit-identical across >= 1k sampled-density cases (chain and skip
+    # DAGs, every model family, fixed-batch and SLO window partitions).
+    rng = random.Random(0xD94517)
+    for trial in range(4000):
+        n = rng.randint(1, 6)
+        deps, topo, sinks = _random_fuzz_dag(rng, n)
+        model = _random_density_model(rng)
+        scale = (
+            [rng.uniform(0.2, 1.0) for _ in range(n)]
+            if rng.random() < 0.3
+            else []
+        )
+        wall = [
+            sorted(rng.uniform(1e-4, 1e-2) for _ in range(DENSITY_LEVELS))
+            for _ in range(n)
+        ]
+        seed = rng.randrange(1 << 32)
+        requests = rng.randint(1, 30)
+        arrivals = random_arrivals(rng, requests)
+        rows = realized_rows(model, seed, requests, scale, wall)
+        batch = rng.randint(1, 7)
+        overlap = rng.choice([0.0, 0.3, 0.6, 0.9, 0.95, 1.2])
+        if rng.random() < 0.5:
+            windows = _fixed_windows(requests, batch)
+        else:
+            slo = rng.choice([0.0, 1e-3, 5e-3, float("inf")])
+            windows = slo_windows(arrivals, batch, slo)
+        ft, mk, busy, n_jobs = build_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        f_ft, f_mk, f_busy, f_jobs = evaluate_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        ctx = (trial, n, model[0], batch, overlap, requests)
+        assert f_jobs == n_jobs, ctx
+        assert _bits(f_mk) == _bits(mk), (ctx, f_mk, mk)
+        assert _bits(f_busy) == _bits(busy), (ctx, f_busy, busy)
+        for a, b in zip(f_ft, ft):
+            assert _bits(a) == _bits(b), (ctx, a, b)
+        # dynamic chain floor: a request can never finish before its own
+        # realized work, window-gated by its admission
+        if all(len(d) <= 1 for d in deps):
+            for (lo, hi) in windows:
+                gate = max(arrivals[lo:hi])
+                for img in range(lo, hi):
+                    own = 0.0
+                    for node in topo:
+                        own += rows[img * n + node]
+                    assert ft[img] >= gate + own - 1e-12, (ctx, img)
+        cases += 1
+
+    # (c) degenerate anchor: every row equal to the static duration
+    # vector reproduces the static engines bit for bit (the Rust suite
+    # locks the same identity; here it pins the transcriptions to each
+    # other, so a drift in either dynamic twin is caught immediately).
+    rng = random.Random(0xD94518)
+    for trial in range(1000):
+        n = rng.randint(1, 5)
+        deps, topo, sinks = _random_fuzz_dag(rng, n)
+        durations = [rng.uniform(1e-4, 1e-2) for _ in range(n)]
+        requests = rng.randint(1, 20)
+        arrivals = random_arrivals(rng, requests)
+        rows = durations * requests
+        batch = rng.randint(1, 5)
+        overlap = rng.choice([0.0, 0.5, 0.95])
+        windows = _fixed_windows(requests, batch)
+        _, s_ft, s_mk, s_busy = build(
+            n, deps, topo, durations, arrivals, batch, overlap, sinks
+        )
+        d_ft, d_mk, d_busy, _ = build_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        f_ft, f_mk, f_busy, _ = evaluate_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        ctx = (trial, n, batch, overlap, requests)
+        assert _bits(d_mk) == _bits(s_mk) == _bits(f_mk), ctx
+        assert _bits(d_busy) == _bits(s_busy) == _bits(f_busy), ctx
+        for a, b, c in zip(d_ft, s_ft, f_ft):
+            assert _bits(a) == _bits(b) == _bits(c), (ctx, a, b, c)
+        cases += 1
+
+    print(f"all {cases} dynamic-density oracle cases are bit-identical "
+          f"(exact vs fast path, static anchor)")
+
+
 # --- analytic backend transcriptions (rust/src/baseline/*.rs) ---------
 
 
@@ -599,6 +908,14 @@ class Xoshiro:
         # int -> float conversion is exact (53 bits) and the scale is a
         # power of two, so this matches the Rust expression bit for bit
         return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gen_normal(self):
+        # Irwin–Hall(6): the same in-order f64 left-fold as Rust's
+        # `(0..6).map(gen_f64).sum::<f64>() - 3.0` then `/ 0.7071`
+        s = 0.0
+        for _ in range(6):
+            s = s + self.gen_f64()
+        return (s - 3.0) / 0.7071
 
 
 POISSON_SALT = 0x7A1E0F5D
@@ -935,6 +1252,7 @@ def main():
     print(f"all {cases} serve-pipeline fuzz cases satisfy the schedule invariants")
     analytic_backend_case()
     fastpath_oracle()
+    dynamic_density_oracle()
     traffic_oracle()
 
 
