@@ -13,13 +13,27 @@
 //! The derived `scale/fastpath-speedup-r*` metrics are the headline:
 //! the speedup must *grow* with R (the steady-state solver does O(1)
 //! window work in the interior while the exact engine stays linear).
+//!
+//! A second sweep repeats the same R ladder under *dynamic* per-request
+//! density (a short-period registered trace, so window level-patterns
+//! repeat and the template-alphabet cache hits): the exact row is
+//! materialize-rows + `build_windows_dynamic` (the O(R·L) oracle), the
+//! fast row is `evaluate_streamed` over a [`RowStream`] (O(batch·L)
+//! scratch, template-alphabet memoization, ensemble steady state), and
+//! at the largest R a `with_steady(false)` ablation isolates the
+//! memo-only contribution — `model/dyn-fastpath-speedup-r1e6` must sit
+//! at or above `model/dyn-memo-only-speedup-r1e6`.
 //! `scripts/check_bench.py` requires the metric keys in
 //! `BENCH_serve_scale.json`; values are tracked, not gated.
 
+use s2engine::backend::{dynamic_wall_table, S2Backend};
 use s2engine::config::{ArrayConfig, SimConfig};
 use s2engine::coordinator::Coordinator;
 use s2engine::models::{zoo, FeatureSubset};
-use s2engine::serve::{evaluate, Arrivals, LayerDag, PipelineSchedule, SchedPolicy};
+use s2engine::serve::{
+    density, evaluate, evaluate_streamed, Arrivals, DensityModel, LayerDag, PipelineSchedule,
+    RowStream, SchedPolicy,
+};
 use s2engine::util::bench::{black_box, Bench};
 
 fn main() {
@@ -92,6 +106,94 @@ fn main() {
             b.metric(
                 "scale/steady-gain-r1e6",
                 memo_t.as_secs_f64() / fast_t.as_secs_f64(),
+                "x",
+            );
+        }
+    }
+
+    // Dynamic-density ladder: same chain, same R points, but every
+    // request carries its own per-layer activation densities. A
+    // 3-pattern trace keeps the window alphabet tiny (the production
+    // regime the dynamic template cache targets) while still forcing
+    // per-request row regeneration — the exact engine cannot share work
+    // across requests.
+    let backend = S2Backend::new(coord.clone());
+    let table = dynamic_wall_table(&backend, &model, model.weight_density, true);
+    let n_layers = durations.len();
+    let bases = [0.15, 0.5, 0.85];
+    let mut trace = Vec::with_capacity(3 * n_layers);
+    for k in 0..3 {
+        for j in 0..n_layers {
+            trace.push(bases[(k + j) % 3]);
+        }
+    }
+    let tid = density::register_density_trace(trace).expect("bench density trace is valid");
+    let src = RowStream::new(DensityModel::Trace(tid), 7, &model.density_scale, &table);
+
+    for &(requests, tag) in &[(1_000usize, "r1e3"), (10_000, "r1e4"), (1_000_000, "r1e6")] {
+        let arrivals = Arrivals::open_loop(requests, 0.0, 7);
+        let mut windows = Vec::with_capacity(requests.div_ceil(batch));
+        let mut lo = 0;
+        while lo < requests {
+            let hi = (lo + batch).min(requests);
+            windows.push((lo, hi));
+            lo = hi;
+        }
+        // exact oracle: materialize O(R·L) rows, then the exact dynamic
+        // builder — the pre-streaming pipeline, timed end to end
+        let exact_t = b
+            .bench(&format!("scale/dyn-exact-{tag}"), || {
+                let rows = src.materialize(requests);
+                black_box(PipelineSchedule::build_windows_dynamic(
+                    &dag,
+                    &rows,
+                    &arrivals.times,
+                    &windows,
+                    overlap,
+                ));
+            })
+            .mean;
+        let fast_t = b
+            .bench(&format!("scale/dyn-fastpath-{tag}"), || {
+                black_box(evaluate_streamed(
+                    &dag,
+                    &src,
+                    &arrivals.times,
+                    batch,
+                    overlap,
+                    &SchedPolicy::default(),
+                ));
+            })
+            .mean;
+        b.metric(
+            &format!("model/dyn-fastpath-speedup-{tag}"),
+            exact_t.as_secs_f64() / fast_t.as_secs_f64(),
+            "x",
+        );
+        if requests == 1_000_000 {
+            b.metric(
+                "model/dyn-sim-reqs-per-s-r1e6",
+                requests as f64 / fast_t.as_secs_f64(),
+                "req/s",
+            );
+            // memo-only (ensemble steady solver off): how much of the
+            // dynamic headline comes from streaming + the template
+            // alphabet cache alone
+            let memo_t = b
+                .bench("scale/dyn-memo-only-r1e6", || {
+                    black_box(evaluate_streamed(
+                        &dag,
+                        &src,
+                        &arrivals.times,
+                        batch,
+                        overlap,
+                        &SchedPolicy::default().with_steady(false),
+                    ));
+                })
+                .mean;
+            b.metric(
+                "model/dyn-memo-only-speedup-r1e6",
+                exact_t.as_secs_f64() / memo_t.as_secs_f64(),
                 "x",
             );
         }

@@ -35,8 +35,8 @@ pub mod shard;
 
 pub use event::{ArraySpec, ChaosSpec, ChaosStats, FleetSpec};
 pub use schedule::{
-    build_cluster, build_cluster_dynamic, build_cluster_fleet, build_cluster_slo, ClusterSchedule,
-    LaneStats,
+    build_cluster, build_cluster_dynamic, build_cluster_fleet, build_cluster_slo,
+    build_cluster_streamed, ClusterSchedule, LaneStats,
 };
 pub use shard::{balanced_stages, balanced_stages_weighted, feature_link_bytes, ShardStrategy};
 
@@ -291,20 +291,18 @@ impl ClusterReport {
                     serve.density.spec()
                 )
             });
-            let rows = density::realized_rows(
-                &serve.density,
-                serve.seed,
-                serve.requests.max(1),
-                &model.density_scale,
-                table,
-            );
-            let schedule = build_cluster_dynamic(
+            // stream the per-request rows from the density alphabet:
+            // O(batch·L) scratch, bit-identical to the materialized
+            // build_cluster_dynamic funnel over realized_rows
+            let src =
+                density::RowStream::new(serve.density, serve.seed, &model.density_scale, table);
+            let schedule = build_cluster_streamed(
                 cluster.shard,
                 &dag,
                 &durations,
                 &tiles,
                 &out_bytes,
-                &rows,
+                &src,
                 &arrivals.times,
                 serve.batch,
                 serve.overlap,
@@ -312,9 +310,9 @@ impl ClusterReport {
                 serve.slo,
                 &serve.policy,
             );
-            let single = traffic::evaluate_with_slo_dynamic(
+            let single = traffic::evaluate_with_slo_streamed(
                 &dag,
-                &rows,
+                &src,
                 &arrivals.times,
                 serve.batch,
                 serve.overlap,

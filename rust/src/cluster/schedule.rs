@@ -25,7 +25,7 @@
 
 use super::event::{run_chaos, ChaosSpec, ChaosStats, FleetSpec};
 use super::shard::{balanced_stages, link_seconds, ShardStrategy};
-use crate::serve::{traffic, LayerDag, SchedPolicy};
+use crate::serve::{density::RowStream, traffic, LayerDag, SchedPolicy};
 #[allow(unused_imports)] // the docs reference the exact engine
 use crate::serve::PipelineSchedule;
 
@@ -158,9 +158,9 @@ fn bound_from_dynamic(dag: &LayerDag, rows: &[f64], arrivals: &[f64], transfer: 
 }
 
 /// [`build_cluster_slo`] under per-request dynamic sparsity: `rows` is
-/// the realized request-major `n_requests × n_nodes` duration matrix
-/// ([`crate::serve::density::realized_rows`]) and every per-array
-/// pipeline runs the dynamic scheduling engines
+/// the materialized request-major `n_requests × n_nodes` duration
+/// matrix ([`crate::serve::density::realized_rows`]) and every
+/// per-array pipeline runs the dynamic scheduling engines
 /// ([`crate::serve::traffic::evaluate_with_slo_dynamic`]). `durations`
 /// remain the static (deployment-time) walls — they only steer
 /// structural decisions that must not depend on the request mix, i.e.
@@ -169,6 +169,10 @@ fn bound_from_dynamic(dag: &LayerDag, rows: &[f64], arrivals: &[f64], transfer: 
 /// (same float ops in the same order); heterogeneous fleets and chaos
 /// injection are not combined with dynamic density (the callers
 /// reject that pairing).
+///
+/// This materialized funnel is the O(R·L) *exact/equivalence* path;
+/// production callers route through [`build_cluster_streamed`], which
+/// produces bit-identical schedules from O(batch·L) scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn build_cluster_dynamic(
     strategy: ShardStrategy,
@@ -200,6 +204,321 @@ pub fn build_cluster_dynamic(
         ShardStrategy::TensorShard => tensor_shard_dynamic(
             dag, tiles, out_bytes, rows, arrivals, batch, overlap, arrays, slo, policy,
         ),
+    }
+}
+
+/// [`build_cluster_dynamic`] without the O(R·L) materialization: the
+/// per-request duration rows are *streamed* from the density alphabet
+/// ([`crate::serve::density::RowStream`]) and every per-array pipeline
+/// runs the streamed scheduling engines
+/// ([`crate::serve::traffic::evaluate_with_slo_streamed`]). Each
+/// strategy's row transform becomes a stream view producing the
+/// identical f64 values in the identical order —
+///
+/// * DataParallel's round-robin membership is [`RowStream::strided`]
+///   (replica `k` of `N` reads requests `k, k+N, k+2N, …`);
+/// * LayerPipeline's per-stage column slice is
+///   [`RowStream::select_nodes`] over the stage's topo nodes;
+/// * TensorShard's share/gather repricing is [`RowStream::affine`]
+///   folded into the wall table once per `(node, level)`;
+///
+/// — so the resulting [`ClusterSchedule`] is bit-identical to
+/// [`build_cluster_dynamic`] over `src.materialize(R)` (locked by
+/// `streamed_matches_materialized_dynamic_bitwise` below and the
+/// `fuzz_cluster.py` transcription), at O(batch·L + distinct-template)
+/// peak memory instead of O(R·L).
+#[allow(clippy::too_many_arguments)]
+pub fn build_cluster_streamed(
+    strategy: ShardStrategy,
+    dag: &LayerDag,
+    durations: &[f64],
+    tiles: &[usize],
+    out_bytes: &[f64],
+    src: &RowStream,
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let arrays = arrays.max(1);
+    assert_eq!(
+        src.n_nodes(),
+        dag.len(),
+        "the row stream must price every DAG node"
+    );
+    match strategy {
+        ShardStrategy::DataParallel => {
+            data_parallel_streamed(dag, src, arrivals, batch, overlap, arrays, slo, policy)
+        }
+        ShardStrategy::LayerPipeline => layer_pipeline_streamed(
+            dag, durations, out_bytes, src, arrivals, batch, overlap, arrays, slo, policy,
+        ),
+        ShardStrategy::TensorShard => tensor_shard_streamed(
+            dag, tiles, out_bytes, src, arrivals, batch, overlap, arrays, slo, policy,
+        ),
+    }
+}
+
+/// [`bound_from_dynamic`] fed from the stream: one O(L) row of scratch
+/// regenerated per request, same per-element fold (bit-identical with
+/// the materialized matrix).
+fn bound_from_streamed(dag: &LayerDag, src: &RowStream, arrivals: &[f64], transfer: f64) -> f64 {
+    let mut lvbuf = Vec::new();
+    let mut levels = Vec::new();
+    let mut row = Vec::new();
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, a)| {
+            levels.clear();
+            row.clear();
+            src.fill_row(i, &mut lvbuf, &mut levels, &mut row);
+            a + dag.critical_path(&row) + transfer
+        })
+        .fold(0.0, f64::max)
+}
+
+/// [`data_parallel_dynamic`] over stream views: replica `k`'s
+/// sub-workload is the [`RowStream::strided`]`(k, arrays)` view — the
+/// same member rows the materialized path copies out, never held all
+/// at once.
+#[allow(clippy::too_many_arguments)]
+fn data_parallel_streamed(
+    dag: &LayerDag,
+    src: &RowStream,
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let mut member: Vec<Vec<usize>> = vec![Vec::new(); arrays];
+    for i in 0..arrivals.len() {
+        member[i % arrays].push(i);
+    }
+    let mut lanes = Vec::with_capacity(arrays);
+    let mut finish_times = vec![0.0f64; arrivals.len()];
+    let mut makespan = 0.0f64;
+    for (k, requests) in member.iter().enumerate() {
+        let sub: Vec<f64> = requests.iter().map(|&i| arrivals[i]).collect();
+        let sub_src = src.strided(k, arrays);
+        let s = traffic::evaluate_with_slo_streamed(
+            dag, &sub_src, &sub, batch, overlap, slo, policy,
+        );
+        for (slot, &i) in requests.iter().enumerate() {
+            finish_times[i] = s.finish_times[slot];
+        }
+        makespan = makespan.max(s.makespan);
+        lanes.push(LaneStats {
+            busy: s.busy,
+            jobs: s.n_jobs,
+        });
+    }
+    ClusterSchedule {
+        lanes,
+        finish_times,
+        makespan,
+        link_bytes: 0.0,
+        mandatory_transfer: 0.0,
+        lower_bound: bound_from_streamed(dag, src, arrivals, 0.0),
+        chaos: None,
+    }
+}
+
+/// [`layer_pipeline_dynamic`] over stream views: each stage schedules
+/// the [`RowStream::select_nodes`] view of its topo slice — the same
+/// column slice the materialized path copies out per stage. Stage cuts
+/// and boundary transfers stay on the static walls/bytes.
+#[allow(clippy::too_many_arguments)]
+fn layer_pipeline_streamed(
+    dag: &LayerDag,
+    durations: &[f64],
+    out_bytes: &[f64],
+    src: &RowStream,
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let topo = dag.topo_order();
+    let topo_durs: Vec<f64> = topo.iter().map(|&n| durations[n]).collect();
+    let ends = balanced_stages(&topo_durs, arrays);
+    let n_stages = ends.len();
+
+    if n_stages == 1 {
+        let s =
+            traffic::evaluate_with_slo_streamed(dag, src, arrivals, batch, overlap, slo, policy);
+        let mut lanes = vec![LaneStats::default(); arrays];
+        if let Some(first) = lanes.first_mut() {
+            *first = LaneStats {
+                busy: s.busy,
+                jobs: s.n_jobs,
+            };
+        }
+        return ClusterSchedule {
+            lanes,
+            finish_times: s.finish_times,
+            makespan: s.makespan,
+            link_bytes: 0.0,
+            mandatory_transfer: 0.0,
+            lower_bound: bound_from_streamed(dag, src, arrivals, 0.0),
+            chaos: None,
+        };
+    }
+
+    let mut stage_of = vec![0usize; dag.len()];
+    {
+        let mut lo = 0usize;
+        for (s, &hi) in ends.iter().enumerate() {
+            for &node in &topo[lo..hi] {
+                stage_of[node] = s;
+            }
+            lo = hi;
+        }
+    }
+
+    let mut lanes = vec![LaneStats::default(); arrays];
+    let mut makespan = 0.0f64;
+    let mut link_bytes_per_req = 0.0f64;
+    let mut mandatory_transfer = 0.0f64;
+    let mut stage_arrivals: Vec<f64> = arrivals.to_vec();
+    let mut finish_times: Vec<f64> = arrivals.to_vec();
+    let mut lo = 0usize;
+    for (s, &hi) in ends.iter().enumerate() {
+        let nodes = &topo[lo..hi];
+        if s > 0 {
+            let mut moved = 0.0f64;
+            let mut seen = vec![false; dag.len()];
+            for &node in nodes {
+                for &p in dag.deps(node) {
+                    if stage_of[p] < s && !seen[p] {
+                        seen[p] = true;
+                        moved += out_bytes[p];
+                    }
+                }
+            }
+            let t = link_seconds(moved);
+            link_bytes_per_req += moved;
+            mandatory_transfer += t;
+            for (a, f) in stage_arrivals.iter_mut().zip(&finish_times) {
+                *a = f + t;
+            }
+        }
+        let mut local = vec![usize::MAX; dag.len()];
+        for (j, &node) in nodes.iter().enumerate() {
+            local[node] = j;
+        }
+        let sub_deps: Vec<Vec<usize>> = nodes
+            .iter()
+            .map(|&node| {
+                dag.deps(node)
+                    .iter()
+                    .filter(|&&p| local[p] != usize::MAX)
+                    .map(|&p| local[p])
+                    .collect()
+            })
+            .collect();
+        let sub_dag = LayerDag::new(sub_deps).expect("a stage cut preserves acyclicity");
+        let sub_src = src.select_nodes(nodes);
+        let sched = traffic::evaluate_with_slo_streamed(
+            &sub_dag,
+            &sub_src,
+            &stage_arrivals,
+            batch,
+            overlap,
+            slo,
+            policy,
+        );
+        lanes[s] = LaneStats {
+            busy: sched.busy,
+            jobs: sched.n_jobs,
+        };
+        makespan = makespan.max(sched.makespan);
+        finish_times = sched.finish_times;
+        lo = hi;
+    }
+    ClusterSchedule {
+        lanes,
+        makespan,
+        link_bytes: link_bytes_per_req * arrivals.len() as f64,
+        mandatory_transfer,
+        lower_bound: bound_from_streamed(dag, src, arrivals, mandatory_transfer),
+        finish_times,
+        chaos: None,
+    }
+}
+
+/// [`tensor_shard_dynamic`] over stream views: the per-node share and
+/// gather terms fold into the wall table once via [`RowStream::affine`]
+/// (`d·share + gather` per `(node, level)` — the identical two f64 ops
+/// the materialized path applied per request).
+#[allow(clippy::too_many_arguments)]
+fn tensor_shard_streamed(
+    dag: &LayerDag,
+    tiles: &[usize],
+    out_bytes: &[f64],
+    src: &RowStream,
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    arrays: usize,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ClusterSchedule {
+    let n = arrays as f64;
+    let n_nodes = dag.len();
+    let mut mandatory_transfer = 0.0f64;
+    let mut gather_bytes_per_req = 0.0f64;
+    let mut share = Vec::with_capacity(n_nodes);
+    let mut gather_term = Vec::with_capacity(n_nodes);
+    for (&t, &bytes) in tiles.iter().zip(out_bytes) {
+        let s = if t == 0 {
+            1.0
+        } else {
+            t.div_ceil(arrays) as f64 / t as f64
+        };
+        let gather = if arrays > 1 {
+            gather_bytes_per_req += bytes * (n - 1.0);
+            link_seconds(bytes) * (n - 1.0) / n
+        } else {
+            0.0
+        };
+        mandatory_transfer += gather;
+        share.push(s);
+        gather_term.push(gather);
+    }
+    let sched_src = src.affine(&share, &gather_term);
+    let s = traffic::evaluate_with_slo_streamed(
+        dag,
+        &sched_src,
+        arrivals,
+        batch,
+        overlap,
+        slo,
+        policy,
+    );
+    let lanes = vec![
+        LaneStats {
+            busy: s.busy,
+            jobs: s.n_jobs,
+        };
+        arrays
+    ];
+    ClusterSchedule {
+        lanes,
+        makespan: s.makespan,
+        link_bytes: gather_bytes_per_req * arrivals.len() as f64,
+        mandatory_transfer,
+        // as in the static path, the gathers already ride inside the
+        // effective durations and therefore inside the critical path
+        lower_bound: bound_from_streamed(dag, &sched_src, arrivals, 0.0),
+        finish_times: s.finish_times,
+        chaos: None,
     }
 }
 
@@ -1200,6 +1519,59 @@ mod tests {
                         &SchedPolicy::default(),
                     );
                     assert_eq!(legacy, dynamic, "{strategy:?} x{arrays} slo {slo}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_matches_materialized_dynamic_bitwise() {
+        use crate::serve::density::{DensityModel, RowStream, DENSITY_LEVELS};
+        let (dag, d, tiles, bytes) = chain4();
+        let wall: Vec<Vec<f64>> = d
+            .iter()
+            .map(|&w| {
+                (0..DENSITY_LEVELS)
+                    .map(|l| w * (0.25 + l as f64 / 16.0))
+                    .collect()
+            })
+            .collect();
+        let scale = vec![1.0; dag.len()];
+        let src = RowStream::new(DensityModel::Uniform { lo: 0.1, hi: 0.9 }, 7, &scale, &wall);
+        let arrivals = vec![0.0, 0.1, 0.15, 0.4, 0.42, 0.9];
+        let rows = src.materialize(arrivals.len());
+        for strategy in ShardStrategy::ALL {
+            for arrays in [1usize, 2, 3] {
+                for slo in [f64::INFINITY, 0.35] {
+                    let mat = build_cluster_dynamic(
+                        strategy,
+                        &dag,
+                        &d,
+                        &tiles,
+                        &bytes,
+                        &rows,
+                        &arrivals,
+                        2,
+                        0.5,
+                        arrays,
+                        slo,
+                        &SchedPolicy::default(),
+                    );
+                    let streamed = build_cluster_streamed(
+                        strategy,
+                        &dag,
+                        &d,
+                        &tiles,
+                        &bytes,
+                        &src,
+                        &arrivals,
+                        2,
+                        0.5,
+                        arrays,
+                        slo,
+                        &SchedPolicy::default(),
+                    );
+                    assert_eq!(mat, streamed, "{strategy:?} x{arrays} slo {slo}");
                 }
             }
         }

@@ -21,9 +21,20 @@
 //! distinct backend evaluations at `layers × DENSITY_LEVELS` — each
 //! level's wall time is simulated once (tile-memoized process-wide, see
 //! [`crate::backend::dynamic_wall_table`]) and every request indexes
-//! into that table — and it makes window-shape repeats likely enough
-//! that the dynamic scheduler fast path's template memoization still
-//! pays ([`crate::serve::fastpath::evaluate_windows_dynamic`]).
+//! into that table — and it gives every window a compact *alphabet*
+//! identity (interned table id + packed level block) that the dynamic
+//! scheduler's process-wide template cache keys on
+//! ([`crate::serve::fastpath::evaluate_windows_streamed`]).
+//!
+//! ## Streaming
+//!
+//! Because sampling is per-request pure (below), the serving hot path
+//! never materializes the O(R·L) realized-duration matrix: a
+//! [`RowStream`] regenerates each window's rows on demand into
+//! O(batch·L) scratch, and the cluster shard transforms (column
+//! subsets, per-node affine rescales, strided request remaps) compose
+//! as views over it, bit-identical to the materialized transforms they
+//! replaced.
 //!
 //! ## Determinism and keys
 //!
@@ -308,9 +319,28 @@ impl DensityModel {
         scale: &[f64],
         n_layers: usize,
     ) -> Vec<usize> {
-        let scaled = |i: usize, raw: f64| -> usize {
+        let mut out = Vec::new();
+        self.sample_levels_into(seed, request, scale, n_layers, &mut out);
+        out.iter().map(|&lv| lv as usize).collect()
+    }
+
+    /// Allocation-free core of [`DensityModel::sample_levels`]: clears
+    /// `out` and appends request `r`'s `n_layers` quantized levels (each
+    /// `< DENSITY_LEVELS`, so `u8` is exact). The streaming scheduler
+    /// regenerates every window through this entry point — same RNG
+    /// stream, same draws, same quantization, byte for byte.
+    pub fn sample_levels_into(
+        &self,
+        seed: u64,
+        request: usize,
+        scale: &[f64],
+        n_layers: usize,
+        out: &mut Vec<u8>,
+    ) {
+        out.clear();
+        let scaled = |i: usize, raw: f64| -> u8 {
             let s = scale.get(i).copied().unwrap_or(1.0);
-            quantize((raw * s).clamp(DENSITY_FLOOR, DENSITY_CEIL))
+            quantize((raw * s).clamp(DENSITY_FLOOR, DENSITY_CEIL)) as u8
         };
         match *self {
             DensityModel::Static => {
@@ -319,35 +349,276 @@ impl DensityModel {
             DensityModel::Trace(id) => {
                 let tr = density_trace_values(id)
                     .expect("density trace handle must come from register/load");
-                (0..n_layers)
-                    .map(|i| scaled(i, tr[(request * n_layers + i) % tr.len()]))
-                    .collect()
+                out.extend(
+                    (0..n_layers).map(|i| scaled(i, tr[(request * n_layers + i) % tr.len()])),
+                );
             }
             _ => {
                 let mut rng = Rng::seed_from_u64(
                     (seed ^ DENSITY_SALT)
                         .wrapping_add((request as u64).wrapping_mul(REQUEST_GAMMA)),
                 );
-                (0..n_layers)
-                    .map(|i| {
-                        let raw = match *self {
-                            DensityModel::Uniform { lo, hi } => lo + (hi - lo) * rng.gen_f64(),
-                            DensityModel::Normal { mean, sigma } => {
-                                mean + sigma * rng.gen_normal()
+                out.extend((0..n_layers).map(|i| {
+                    let raw = match *self {
+                        DensityModel::Uniform { lo, hi } => lo + (hi - lo) * rng.gen_f64(),
+                        DensityModel::Normal { mean, sigma } => mean + sigma * rng.gen_normal(),
+                        DensityModel::Bimodal { lo, hi, p } => {
+                            if rng.gen_f64() < p {
+                                hi
+                            } else {
+                                lo
                             }
-                            DensityModel::Bimodal { lo, hi, p } => {
-                                if rng.gen_f64() < p {
-                                    hi
-                                } else {
-                                    lo
-                                }
-                            }
-                            _ => unreachable!(),
-                        };
-                        scaled(i, raw)
-                    })
-                    .collect()
+                        }
+                        _ => unreachable!(),
+                    };
+                    scaled(i, raw)
+                }));
             }
+        }
+    }
+}
+
+/// A lazily-evaluated per-request density stream: the `(model, seed,
+/// scale)` triple plus the layer count, with no materialized state.
+/// Because [`DensityModel::sample_levels`] is a pure function of
+/// `(model, seed, r, scale)`, any request's level vector can be
+/// regenerated on demand, in any order, bit-identically to a full
+/// sequential run — the invariant the streaming scheduler rests on
+/// (locked by `stream_random_access_is_bit_identical_to_sequential`).
+#[derive(Debug)]
+pub struct DensityStream {
+    model: DensityModel,
+    seed: u64,
+    scale: Vec<f64>,
+    n_layers: usize,
+}
+
+impl DensityStream {
+    /// Panics on [`DensityModel::Static`] — static configs never build
+    /// a stream (they take the legacy constant-density paths).
+    pub fn new(model: DensityModel, seed: u64, scale: &[f64], n_layers: usize) -> DensityStream {
+        assert!(!model.is_static(), "static density has no stream");
+        DensityStream {
+            model,
+            seed,
+            scale: scale.to_vec(),
+            n_layers,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Request `r`'s quantized levels, into a reusable buffer.
+    pub fn levels_into(&self, request: usize, out: &mut Vec<u8>) {
+        self.model
+            .sample_levels_into(self.seed, request, &self.scale, self.n_layers, out);
+    }
+}
+
+/// Process-global registry of interned effective wall tables, the
+/// "alphabet" half of a dynamic window's identity: `table_id` plus a
+/// window's packed level block fully determine its duration block, so
+/// the dynamic template cache can key on `(table_id, levels)` instead
+/// of `width·L` raw duration bits. Interning compares *bit patterns*
+/// (never a hash alone), so equal ids guarantee bit-equal tables — a
+/// cache hit can never smuggle in a different duration. The registry
+/// grows by one entry per distinct `(backend, model, shard-transform)`
+/// wall table and is never evicted, mirroring the trace registries
+/// (small, append-only, poison-recovering).
+fn wall_table_registry() -> &'static Mutex<Vec<Arc<Vec<Vec<f64>>>>> {
+    static TABLES: OnceLock<Mutex<Vec<Arc<Vec<Vec<f64>>>>>> = OnceLock::new();
+    TABLES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn table_bits_equal(a: &[Vec<f64>], b: &[Vec<f64>]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(u, v)| u.to_bits() == v.to_bits())
+        })
+}
+
+fn intern_wall_table(table: Vec<Vec<f64>>) -> (u64, Arc<Vec<Vec<f64>>>) {
+    let mut reg = wall_table_registry()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    for (i, t) in reg.iter().enumerate() {
+        if table_bits_equal(t, &table) {
+            return (i as u64, t.clone());
+        }
+    }
+    let arc = Arc::new(table);
+    reg.push(arc.clone());
+    ((reg.len() - 1) as u64, arc)
+}
+
+/// A composable, O(1)-memory view of a dynamic run's duration rows:
+/// `row(r)[j] = table[j][levels(request_of(r))[node_map[j]]]`. This is
+/// what replaced the [`realized_rows`] materialization on the serving
+/// hot path — windows regenerate their duration blocks on demand into
+/// O(batch·L) scratch ([`RowStream::fill_window`]), and every cluster
+/// shard transform is expressible as a *view* producing bit-identical
+/// f64s to the old materialized transform:
+///
+/// * [`RowStream::select_nodes`] — a stage's column subset
+///   (layer-pipeline sharding): copies the selected table rows.
+/// * [`RowStream::affine`] — per-node `mul/add` rescale (tensor
+///   sharding's compute share + gather term): folds the *same two
+///   f64 ops* into the table once per `(node, level)` instead of once
+///   per request.
+/// * [`RowStream::strided`] — affine request remap (data-parallel
+///   round-robin: replica `k` serves requests `k, k+arrays, …`).
+///
+/// Cloning is cheap (`Arc` internals); each view re-interns its
+/// effective table so its [`RowStream::table_id`] stays a full-content
+/// alphabet key component.
+#[derive(Debug, Clone)]
+pub struct RowStream {
+    stream: Arc<DensityStream>,
+    table: Arc<Vec<Vec<f64>>>,
+    table_id: u64,
+    node_map: Arc<Vec<usize>>,
+    req_base: usize,
+    req_stride: usize,
+}
+
+impl RowStream {
+    /// Root view over a backend wall table
+    /// ([`crate::backend::dynamic_wall_table`]): node `j` *is* stream
+    /// layer `j`, request slots map 1:1.
+    pub fn new(model: DensityModel, seed: u64, scale: &[f64], wall: &[Vec<f64>]) -> RowStream {
+        let stream = Arc::new(DensityStream::new(model, seed, scale, wall.len()));
+        let (table_id, table) = intern_wall_table(wall.to_vec());
+        RowStream {
+            stream,
+            node_map: Arc::new((0..table.len()).collect()),
+            table,
+            table_id,
+            req_base: 0,
+            req_stride: 1,
+        }
+    }
+
+    /// Number of DAG nodes this view prices (row length).
+    pub fn n_nodes(&self) -> usize {
+        self.node_map.len()
+    }
+
+    /// Interned id of the effective `table` — bit-equal tables share an
+    /// id, distinct tables never do ([`wall_table_registry`]).
+    pub fn table_id(&self) -> u64 {
+        self.table_id
+    }
+
+    /// The underlying request index slot `s` of this view prices.
+    pub fn request_of(&self, slot: usize) -> usize {
+        self.req_base + slot * self.req_stride
+    }
+
+    /// Append slot `s`'s per-node levels and durations. `lvbuf` is
+    /// reusable scratch for the stream's full per-request level vector.
+    pub fn fill_row(
+        &self,
+        slot: usize,
+        lvbuf: &mut Vec<u8>,
+        levels: &mut Vec<u8>,
+        row: &mut Vec<f64>,
+    ) {
+        self.stream.levels_into(self.request_of(slot), lvbuf);
+        for (j, &l) in self.node_map.iter().enumerate() {
+            let lv = lvbuf[l];
+            levels.push(lv);
+            row.push(self.table[j][lv as usize]);
+        }
+    }
+
+    /// Regenerate window `[lo, hi)`'s level block and duration block
+    /// into reusable scratch (cleared first): `wdur[s·n + j]` is slot
+    /// `lo + s`'s node-`j` duration — exactly the layout
+    /// [`crate::serve::fastpath`] templates consume, bit-identical to
+    /// the corresponding [`realized_rows`] slice.
+    pub fn fill_window(
+        &self,
+        lo: usize,
+        hi: usize,
+        lvbuf: &mut Vec<u8>,
+        levels: &mut Vec<u8>,
+        wdur: &mut Vec<f64>,
+    ) {
+        levels.clear();
+        wdur.clear();
+        for slot in lo..hi {
+            self.fill_row(slot, lvbuf, levels, wdur);
+        }
+    }
+
+    /// Materialize `requests` full rows — the exact-engine fallback
+    /// (`--no-fastpath`), which is O(R·L) by nature, and tests.
+    pub fn materialize(&self, requests: usize) -> Vec<f64> {
+        let mut rows = Vec::with_capacity(requests * self.n_nodes());
+        let mut lvbuf = Vec::new();
+        let mut levels = Vec::new();
+        for slot in 0..requests {
+            levels.clear();
+            self.fill_row(slot, &mut lvbuf, &mut levels, &mut rows);
+        }
+        rows
+    }
+
+    /// Column-subset view: node `k` of the result is node `nodes[k]` of
+    /// `self` (a layer-pipeline stage's slice of the DAG).
+    pub fn select_nodes(&self, nodes: &[usize]) -> RowStream {
+        let table: Vec<Vec<f64>> = nodes.iter().map(|&j| self.table[j].clone()).collect();
+        let (table_id, table) = intern_wall_table(table);
+        RowStream {
+            stream: self.stream.clone(),
+            table,
+            table_id,
+            node_map: Arc::new(nodes.iter().map(|&j| self.node_map[j]).collect()),
+            req_base: self.req_base,
+            req_stride: self.req_stride,
+        }
+    }
+
+    /// Per-node affine rescale: node `j` prices
+    /// `table[j][lv] · mul[j] + add[j]` — the same two f64 operations
+    /// the materialized tensor-shard transform applied per request,
+    /// folded into the table once per `(node, level)`, so every row is
+    /// bit-identical to the materialized version.
+    pub fn affine(&self, mul: &[f64], add: &[f64]) -> RowStream {
+        assert_eq!(mul.len(), self.n_nodes());
+        assert_eq!(add.len(), self.n_nodes());
+        let table: Vec<Vec<f64>> = self
+            .table
+            .iter()
+            .enumerate()
+            .map(|(j, lvs)| lvs.iter().map(|&d| d * mul[j] + add[j]).collect())
+            .collect();
+        let (table_id, table) = intern_wall_table(table);
+        RowStream {
+            stream: self.stream.clone(),
+            table,
+            table_id,
+            node_map: self.node_map.clone(),
+            req_base: self.req_base,
+            req_stride: self.req_stride,
+        }
+    }
+
+    /// Affine request remap: slot `s` of the result prices slot
+    /// `base + s·stride` of `self` (data-parallel replica `k` of `n`
+    /// composes `strided(k, n)`).
+    pub fn strided(&self, base: usize, stride: usize) -> RowStream {
+        assert!(stride >= 1, "request stride must be positive");
+        RowStream {
+            stream: self.stream.clone(),
+            table: self.table.clone(),
+            table_id: self.table_id,
+            node_map: self.node_map.clone(),
+            req_base: self.req_base + base * self.req_stride,
+            req_stride: self.req_stride * stride,
         }
     }
 }
@@ -355,8 +626,12 @@ impl DensityModel {
 /// Materialize the per-request duration rows of a dynamic run:
 /// `rows[r·L + i]` = wall time of request `r`'s layer `i` at its
 /// realized density level, read from `wall[i][level]`
-/// ([`crate::backend::dynamic_wall_table`]). O(R·L) memory — inherent
-/// to the dynamic regime, where no two windows need be alike.
+/// ([`crate::backend::dynamic_wall_table`]). O(R·L) memory — which is
+/// why the serving/cluster hot paths no longer call this: they stream
+/// the same values window-by-window through [`RowStream`] (O(batch·L)
+/// scratch), bit-identically. This materializer remains for the exact
+/// engine ([`RowStream::materialize`] delegates the same loop), small-R
+/// diagnostics, and the equivalence suites.
 pub fn realized_rows(
     model: &DensityModel,
     seed: u64,
@@ -563,6 +838,140 @@ mod tests {
     #[should_panic(expected = "Static")]
     fn static_model_has_no_samples() {
         DensityModel::Static.sample_levels(0, 0, &[], 3);
+    }
+
+    /// The invariant the streaming scheduler rests on: request `r`
+    /// sampled in isolation (random access) is bit-identical to request
+    /// `r` inside a full sequential run — for every model kind.
+    #[test]
+    fn stream_random_access_is_bit_identical_to_sequential() {
+        let trace = DensityModel::Trace(register_density_trace(vec![0.12, 0.55, 0.83]).unwrap());
+        let models = [
+            DensityModel::Uniform { lo: 0.1, hi: 0.7 },
+            DensityModel::Normal { mean: 0.4, sigma: 0.15 },
+            DensityModel::Bimodal { lo: 0.1, hi: 0.8, p: 0.3 },
+            trace,
+        ];
+        let scale = [1.0, 0.8, 0.64, 0.512, 0.41];
+        for m in models {
+            let n_layers = 5;
+            // sequential run: every request in order
+            let seq: Vec<Vec<usize>> = (0..64)
+                .map(|r| m.sample_levels(77, r, &scale, n_layers))
+                .collect();
+            let stream = DensityStream::new(m, 77, &scale, n_layers);
+            let mut buf = Vec::new();
+            // random access: probe out of order, repeatedly
+            for &r in &[63usize, 0, 17, 17, 5, 41, 63, 2] {
+                stream.levels_into(r, &mut buf);
+                let got: Vec<usize> = buf.iter().map(|&v| v as usize).collect();
+                assert_eq!(got, seq[r], "{} request {r}", m.spec());
+            }
+        }
+    }
+
+    #[test]
+    fn row_stream_matches_realized_rows_bitwise() {
+        let m = DensityModel::Bimodal { lo: 0.1, hi: 0.9, p: 0.4 };
+        let wall: Vec<Vec<f64>> = (0..4)
+            .map(|i| {
+                (0..DENSITY_LEVELS)
+                    .map(|lv| 0.01 + (i * DENSITY_LEVELS + lv) as f64 * 1e-3)
+                    .collect()
+            })
+            .collect();
+        let rows = realized_rows(&m, 11, 20, &[], &wall);
+        let src = RowStream::new(m, 11, &[], &wall);
+        assert_eq!(src.n_nodes(), 4);
+        // full materialization and windowed regeneration both agree
+        let mat = src.materialize(20);
+        assert_eq!(mat.len(), rows.len());
+        assert!(mat.iter().zip(&rows).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let (mut lvbuf, mut levels, mut wdur) = (Vec::new(), Vec::new(), Vec::new());
+        src.fill_window(8, 13, &mut lvbuf, &mut levels, &mut wdur);
+        assert_eq!(wdur.len(), 5 * 4);
+        assert_eq!(levels.len(), 5 * 4);
+        for (k, d) in wdur.iter().enumerate() {
+            assert_eq!(d.to_bits(), rows[8 * 4 + k].to_bits());
+            assert_eq!(wall[k % 4][levels[k] as usize].to_bits(), d.to_bits());
+        }
+    }
+
+    #[test]
+    fn row_stream_views_match_materialized_transforms_bitwise() {
+        let m = DensityModel::Uniform { lo: 0.15, hi: 0.85 };
+        let wall: Vec<Vec<f64>> = (0..5)
+            .map(|i| {
+                (0..DENSITY_LEVELS)
+                    .map(|lv| 0.02 + (i + 1) as f64 * 1e-2 + lv as f64 * 1e-4)
+                    .collect()
+            })
+            .collect();
+        let n_req = 24;
+        let src = RowStream::new(m, 5, &[], &wall);
+        let rows = src.materialize(n_req);
+        // column subset (layer-pipeline stage)
+        let nodes = [1usize, 3, 4];
+        let sel = src.select_nodes(&nodes);
+        let sel_rows = sel.materialize(n_req);
+        for r in 0..n_req {
+            for (k, &j) in nodes.iter().enumerate() {
+                assert_eq!(sel_rows[r * 3 + k].to_bits(), rows[r * 5 + j].to_bits());
+            }
+        }
+        // per-node affine (tensor-shard share + gather term)
+        let mul = [0.25, 0.25, 0.5, 0.125, 1.0];
+        let add = [0.0, 1e-3, 2e-3, 0.0, 5e-4];
+        let aff = src.affine(&mul, &add);
+        let aff_rows = aff.materialize(n_req);
+        for r in 0..n_req {
+            for j in 0..5 {
+                let want = rows[r * 5 + j] * mul[j] + add[j];
+                assert_eq!(aff_rows[r * 5 + j].to_bits(), want.to_bits());
+            }
+        }
+        // strided request remap (data-parallel replica 1 of 3)
+        let rep = src.strided(1, 3);
+        let rep_rows = rep.materialize(8);
+        for s in 0..8 {
+            assert_eq!(rep.request_of(s), 1 + s * 3);
+            for j in 0..5 {
+                assert_eq!(
+                    rep_rows[s * 5 + j].to_bits(),
+                    rows[(1 + s * 3) * 5 + j].to_bits()
+                );
+            }
+        }
+        // views compose: a strided view of a selection keeps both maps
+        let both = sel.strided(2, 2);
+        let both_rows = both.materialize(4);
+        for s in 0..4 {
+            for (k, &j) in nodes.iter().enumerate() {
+                assert_eq!(
+                    both_rows[s * 3 + k].to_bits(),
+                    rows[(2 + s * 2) * 5 + j].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn table_interning_is_full_content() {
+        let m = DensityModel::Uniform { lo: 0.2, hi: 0.6 };
+        let wall: Vec<Vec<f64>> = (0..3)
+            .map(|i| (0..DENSITY_LEVELS).map(|lv| (i * 20 + lv) as f64 * 1e-3).collect())
+            .collect();
+        let a = RowStream::new(m, 1, &[], &wall);
+        let b = RowStream::new(m, 2, &[], &wall);
+        assert_eq!(a.table_id(), b.table_id(), "bit-equal tables share an id");
+        let mut wall2 = wall.clone();
+        wall2[2][7] += 1e-9;
+        let c = RowStream::new(m, 1, &[], &wall2);
+        assert_ne!(a.table_id(), c.table_id(), "any bit flip splits the id");
+        // derived views re-intern their effective tables
+        assert_ne!(a.table_id(), a.select_nodes(&[0, 2]).table_id());
+        assert_ne!(a.table_id(), a.affine(&[0.5; 3], &[0.0; 3]).table_id());
+        assert_eq!(a.table_id(), a.strided(1, 2).table_id(), "remaps keep the table");
     }
 
     #[test]

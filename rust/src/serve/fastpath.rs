@@ -35,6 +35,36 @@
 //!    [`STEADY_MIN_WINDOWS`] full windows remain, so every small-R
 //!    schedule in the test suite still takes the bit-exact path.
 //!
+//! ## Dynamic sparsity at scale
+//!
+//! The per-request-density regime ([`crate::serve::density`]) gets all
+//! three layers through its own entry points, rebuilt around the
+//! 16-level quantization alphabet:
+//!
+//! * **Streaming density** ([`evaluate_windows_streamed`]): the serving
+//!   hot path never materializes the O(R·L) realized-duration matrix —
+//!   a [`RowStream`] regenerates each window's rows into O(batch·L)
+//!   scratch (sampling is per-request pure, so random access is
+//!   bit-identical to a sequential run). Peak memory for a dynamic run
+//!   is O(batch·L) scratch + the bounded template cache + the O(R)
+//!   outputs every schedule carries (arrivals/finish times).
+//! * **Template-alphabet caching** ([`WaveCache::global_dyn`]): a
+//!   window's identity is its interned wall-table id plus its packed
+//!   4-bit level block ([`wave_key_alphabet`]) — full content at a
+//!   fraction of the raw-duration key size — cached process-wide,
+//!   sharded + bounded, so each distinct template's build (and its
+//!   max-plus [`SteadyInfo`] recurrence) runs once per *alphabet*, not
+//!   once per window.
+//! * **Ensemble steady state** ([`drive_dynamic`]): extrapolation no
+//!   longer needs every remaining window to share one template — each
+//!   window is checked against *its own* template's threshold and
+//!   filled in closed form when saturated. Same bounded-error (< 1e-9
+//!   relative) contract, same [`STEADY_MIN_WINDOWS`] floor keeping
+//!   small runs bit-exact, same `--no-steady` opt-out. (An earlier
+//!   revision disabled steady state for dynamic windows outright; the
+//!   per-template formulation removed the need — the `B_j` recurrence
+//!   never assumed neighbouring windows were alike.)
+//!
 //! ## Precision / overflow audit (the high-R regime)
 //!
 //! * **Indices.** Request and job counts stay in `usize` (64-bit on
@@ -57,6 +87,14 @@
 //! * **Makespan.** Finish times never decrease (the overlap deduction
 //!   is < 1 execution), so the exact engine's running `max` returns the
 //!   final finish bit-for-bit; the replay tracks the same fold.
+//! * **Ensemble steady accumulation.** The dynamic layer advances
+//!   `array_free`/`busy` by one add per filled window (each window may
+//!   carry a different Δ) instead of the static layer's single `k·Δ`
+//!   multiply — k extra roundings on k windows, still within the same
+//!   n·ε ≈ 1e-9 envelope at R = 10⁶ (and far below the exact engine's
+//!   own ~2-roundings-per-job fold). Each window's closed-form fill is
+//!   independently valid, so mixing filled and replayed windows cannot
+//!   compound beyond per-window error.
 //!
 //! Opt-out: [`SchedPolicy`] (threaded through
 //! [`crate::serve::ServeConfig`] and the `serve`/`cluster` CLI flags
@@ -70,6 +108,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::dag::LayerDag;
+use super::density::RowStream;
 use super::pipeline::{PipelineSchedule, MAX_OVERLAP};
 
 /// Minimum number of remaining full windows before the steady-state
@@ -412,6 +451,14 @@ const N_SHARDS: usize = 16;
 /// typical shapes), so 16 × 256 ≈ 4096 entries bounds the cache at tens
 /// of MiB; beyond the cap new templates are simply rebuilt per call.
 const SHARD_CAP: usize = 1 << 8;
+/// Default shard count of the dynamic template cache
+/// ([`WaveCache::global_dyn`]).
+const DYN_N_SHARDS: usize = 16;
+/// Default per-shard cap of the dynamic template cache. Dynamic
+/// alphabets are larger than static shape sets (one entry per distinct
+/// window level pattern), so the default cap is 2× the static one;
+/// override with `S2_DYN_WAVE_SHARDS` / `S2_DYN_WAVE_CAP`.
+const DYN_SHARD_CAP: usize = 1 << 9;
 
 /// Sharded, bounded wave-template cache — the serving-level analogue of
 /// `coordinator::memo::TileCache`.
@@ -451,6 +498,31 @@ impl WaveCache {
     pub fn global() -> &'static WaveCache {
         static CACHE: OnceLock<WaveCache> = OnceLock::new();
         CACHE.get_or_init(WaveCache::new)
+    }
+
+    /// The process-wide *dynamic* template cache: one entry per distinct
+    /// window alphabet key ([`wave_key_alphabet`]) or raw dynamic key
+    /// ([`wave_key_dyn`]). Kept separate from [`WaveCache::global`] so a
+    /// high-entropy dynamic run (every window a fresh level pattern) can
+    /// never churn the static sweep templates out. Sizing knobs:
+    /// `S2_DYN_WAVE_SHARDS` / `S2_DYN_WAVE_CAP` (shard count /
+    /// per-shard entry cap; defaults [`DYN_N_SHARDS`] ×
+    /// [`DYN_SHARD_CAP`]), read once at first use.
+    pub fn global_dyn() -> &'static WaveCache {
+        static CACHE: OnceLock<WaveCache> = OnceLock::new();
+        CACHE.get_or_init(|| {
+            let knob = |name: &str, default: usize| {
+                std::env::var(name)
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .filter(|&v| v >= 1)
+                    .unwrap_or(default)
+            };
+            WaveCache::bounded(
+                knob("S2_DYN_WAVE_SHARDS", DYN_N_SHARDS),
+                knob("S2_DYN_WAVE_CAP", DYN_SHARD_CAP),
+            )
+        })
     }
 
     fn shard(&self, key: &WaveKey) -> &Mutex<HashMap<WaveKey, Arc<WaveTemplate>>> {
@@ -909,16 +981,20 @@ pub fn evaluate_windows(
 /// [`PipelineSchedule::build_windows_dynamic`] row slice. Identical to
 /// [`build_template`] except that `d` is looked up per `(slot, node)`,
 /// so the hoisted `cut` products follow the true per-request duration
-/// chain. The steady-state analysis is *disabled outright*
-/// (`steady: None`): extrapolation assumes every remaining window runs
-/// the same wave program, which is false the moment durations vary per
-/// request — the dynamic path must disengage, not bound-error drift.
+/// chain. The steady-state analysis runs *per template*: the PR-6 `B_j`
+/// recurrence never assumed anything about where the durations came
+/// from — a saturated window whose program is this template advances
+/// the array by this template's `Δ` regardless of what its neighbours
+/// look like — so dynamic windows extrapolate window-by-window, each
+/// against its own precomputed [`SteadyInfo`] (the *ensemble* steady
+/// state; see [`drive_dynamic`]).
 fn build_template_dyn(
     dag: &LayerDag,
     wdur: &[f64],
     overlap: f64,
     width: usize,
     entry_prev_dur: f64,
+    entry_any_prev: bool,
 ) -> WaveTemplate {
     let n_nodes = dag.len();
     debug_assert_eq!(wdur.len(), width * n_nodes);
@@ -929,6 +1005,12 @@ fn build_template_dyn(
     let mut dep_off = Vec::with_capacity(n_jobs + 1);
     let mut slot = Vec::with_capacity(n_jobs);
     dep_off.push(0u32);
+
+    // topo position of each node: dep job index = pos(p)·width + slot
+    let mut topo_pos = vec![0usize; n_nodes];
+    for (i, &n) in dag.topo_order().iter().enumerate() {
+        topo_pos[n] = i;
+    }
 
     let mut prev_dur = entry_prev_dur;
     for &node in dag.topo_order() {
@@ -946,6 +1028,9 @@ fn build_template_dyn(
     }
 
     let sinks: Vec<u32> = dag.sinks().iter().map(|&s| s as u32).collect();
+    let steady = steady_info(
+        dag, width, &dur, &cut, &topo_pos, &sinks, entry_any_prev, n_nodes,
+    );
     WaveTemplate {
         width,
         n_nodes,
@@ -955,19 +1040,22 @@ fn build_template_dyn(
         dep_off,
         slot,
         sinks,
-        steady: None,
+        steady,
     }
 }
 
-/// Full-content cache key for a *dynamic* wave template. Element 0 is a
-/// `u64::MAX` marker: static keys start with the window width, which can
-/// never be `u64::MAX`, so the two key families are prefix-distinct and
-/// safely share the global [`WaveCache`]. The key then carries every
-/// realized per-(slot, node) duration bit in wave order — a hit requires
-/// the *exact* duration block, so it can never corrupt a schedule. Keys
-/// collide usefully because realized durations are lookups into a
-/// 16-level wall table ([`crate::serve::density`]): windows whose
-/// requests quantized to the same level pattern share one template.
+/// Full-content cache key for a *dynamic* wave template built from raw
+/// duration rows. Element 0 is a `u64::MAX` marker: static keys start
+/// with the window width, which can never be `u64::MAX`, so the key
+/// families are prefix-distinct even if they ever shared a cache (they
+/// live in [`WaveCache::global_dyn`]). The key then carries every
+/// realized per-(slot, node) duration bit in wave order — a hit
+/// requires the *exact* duration block, so it can never corrupt a
+/// schedule. Keys collide usefully because realized durations are
+/// lookups into a 16-level wall table ([`crate::serve::density`]):
+/// windows whose requests quantized to the same level pattern share one
+/// template. The streamed path shrinks this key further: see
+/// [`wave_key_alphabet`].
 fn wave_key_dyn(
     dag: &LayerDag,
     wdur: &[f64],
@@ -999,9 +1087,10 @@ fn wave_key_dyn(
     WaveKey(v)
 }
 
-/// Resolve one dynamic window to its wave program, via the global cache
-/// when memoization is on (same contract as [`resolve`]: the key is the
-/// full content, so a hit is bit-identical to a rebuild).
+/// Resolve one dynamic window to its wave program, via the global
+/// dynamic cache when memoization is on (same contract as [`resolve`]:
+/// the key is the full content, so a hit is bit-identical to a
+/// rebuild).
 fn resolve_dyn(
     dag: &LayerDag,
     wdur: &[f64],
@@ -1012,29 +1101,266 @@ fn resolve_dyn(
     memoize: bool,
 ) -> Arc<WaveTemplate> {
     if !memoize {
-        return Arc::new(build_template_dyn(dag, wdur, overlap, width, entry_prev_dur));
+        return Arc::new(build_template_dyn(
+            dag, wdur, overlap, width, entry_prev_dur, entry_any_prev,
+        ));
     }
     let key = wave_key_dyn(dag, wdur, overlap, width, entry_prev_dur, entry_any_prev);
-    let cache = WaveCache::global();
+    let cache = WaveCache::global_dyn();
     if let Some(t) = cache.get(&key) {
         return t;
     }
-    let t = Arc::new(build_template_dyn(dag, wdur, overlap, width, entry_prev_dur));
+    let t = Arc::new(build_template_dyn(
+        dag, wdur, overlap, width, entry_prev_dur, entry_any_prev,
+    ));
     cache.insert(key, t.clone());
     t
+}
+
+/// Marker prefix of [`wave_key_alphabet`] keys: distinct from static
+/// keys (which start with the width) and raw dynamic keys (`u64::MAX`).
+const ALPHABET_MARKER: u64 = u64::MAX - 1;
+
+/// Compact full-content cache key for a *streamed* dynamic window: the
+/// interned effective-wall-table id ([`crate::serve::density::RowStream
+/// ::table_id`]) plus the window's packed 4-bit level block replace the
+/// `width·L` raw duration bits of [`wave_key_dyn`]. Table interning
+/// compares bit patterns, so `(table_id, levels)` determines the
+/// duration block exactly — the full-content guarantee (a hit can never
+/// corrupt a schedule) is preserved at a fraction of the key size. The
+/// DAG walk, overlap, width and entry-execution state are carried as in
+/// every other key family.
+fn wave_key_alphabet(
+    dag: &LayerDag,
+    table_id: u64,
+    levels: &[u8],
+    overlap: f64,
+    width: usize,
+    entry_prev_dur: f64,
+    entry_any_prev: bool,
+) -> WaveKey {
+    let n_nodes = dag.len();
+    debug_assert_eq!(levels.len(), width * n_nodes);
+    let mut v = Vec::with_capacity(8 + 2 * n_nodes + levels.len() / 16);
+    v.push(ALPHABET_MARKER);
+    v.push(table_id);
+    v.push(width as u64);
+    v.push(n_nodes as u64);
+    v.push(overlap.to_bits());
+    v.push(entry_prev_dur.to_bits());
+    v.push(entry_any_prev as u64);
+    for &n in dag.topo_order() {
+        v.push(n as u64);
+        v.push(dag.deps(n).len() as u64);
+        for &p in dag.deps(n) {
+            v.push(p as u64);
+        }
+    }
+    // pack 16 levels (4 bits each: DENSITY_LEVELS = 16) per word
+    let mut word = 0u64;
+    let mut used = 0u32;
+    for &lv in levels {
+        debug_assert!(lv < 16);
+        word |= (lv as u64) << (used * 4);
+        used += 1;
+        if used == 16 {
+            v.push(word);
+            word = 0;
+            used = 0;
+        }
+    }
+    if used > 0 {
+        v.push(word);
+    }
+    WaveKey(v)
+}
+
+/// One window's wave-program provider for [`drive_dynamic`]: the
+/// rows-based and streamed dynamic evaluators differ *only* in where a
+/// window's duration block comes from and how its cache key is formed;
+/// the scheduling loop (entry chaining, steady gating, replay) is
+/// shared so both stay bit-identical to each other by construction.
+trait DynTemplateSource {
+    /// Resolve window `[lo, hi)`'s wave program under the given entry
+    /// execution state.
+    fn resolve(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        entry_prev_dur: f64,
+        entry_any_prev: bool,
+    ) -> Arc<WaveTemplate>;
+}
+
+/// Provider over materialized duration rows (`rows[img·L + node]`).
+struct RowsSource<'a> {
+    dag: &'a LayerDag,
+    rows: &'a [f64],
+    overlap: f64,
+    memoize: bool,
+}
+
+impl DynTemplateSource for RowsSource<'_> {
+    fn resolve(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        entry_prev_dur: f64,
+        entry_any_prev: bool,
+    ) -> Arc<WaveTemplate> {
+        let n = self.dag.len();
+        resolve_dyn(
+            self.dag,
+            &self.rows[lo * n..hi * n],
+            self.overlap,
+            hi - lo,
+            entry_prev_dur,
+            entry_any_prev,
+            self.memoize,
+        )
+    }
+}
+
+/// Provider over a lazily-evaluated [`RowStream`]: each window's level
+/// and duration blocks are regenerated into O(batch·L) scratch, and
+/// templates are cached under the compact alphabet key
+/// ([`wave_key_alphabet`]) in [`WaveCache::global_dyn`].
+struct StreamSource<'a> {
+    dag: &'a LayerDag,
+    src: &'a RowStream,
+    overlap: f64,
+    memoize: bool,
+    lvbuf: Vec<u8>,
+    levels: Vec<u8>,
+    wdur: Vec<f64>,
+}
+
+impl DynTemplateSource for StreamSource<'_> {
+    fn resolve(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        entry_prev_dur: f64,
+        entry_any_prev: bool,
+    ) -> Arc<WaveTemplate> {
+        self.src
+            .fill_window(lo, hi, &mut self.lvbuf, &mut self.levels, &mut self.wdur);
+        let width = hi - lo;
+        if !self.memoize {
+            return Arc::new(build_template_dyn(
+                self.dag, &self.wdur, self.overlap, width, entry_prev_dur, entry_any_prev,
+            ));
+        }
+        let key = wave_key_alphabet(
+            self.dag,
+            self.src.table_id(),
+            &self.levels,
+            self.overlap,
+            width,
+            entry_prev_dur,
+            entry_any_prev,
+        );
+        let cache = WaveCache::global_dyn();
+        if let Some(t) = cache.get(&key) {
+            return t;
+        }
+        let t = Arc::new(build_template_dyn(
+            self.dag, &self.wdur, self.overlap, width, entry_prev_dur, entry_any_prev,
+        ));
+        cache.insert(key, t.clone());
+        t
+    }
+}
+
+/// The shared dynamic scheduling loop: per-window template resolution
+/// chained through the entry execution state, with the *ensemble*
+/// steady-state layer. Unlike the static engines — whose extrapolation
+/// needs a run of windows sharing one template — each dynamic window is
+/// checked against *its own* template's [`SteadyInfo`]: a window is a
+/// pure `F`-shift whenever its own saturation threshold holds, no
+/// matter what its neighbours look like, so a backlog deep enough to
+/// saturate fills window-by-window in closed form (`finish = F + off`,
+/// `busy += Δ_busy`, `F += Δ`) even when every window's level pattern
+/// is distinct. The [`STEADY_MIN_WINDOWS`] floor on *remaining* windows
+/// keeps every small-R suite on the bit-exact path; when the layer is
+/// off or never engages, the replay sequence is bit-identical to
+/// [`PipelineSchedule::build_windows_dynamic`].
+fn drive_dynamic<S: DynTemplateSource>(
+    n_img: usize,
+    n_nodes: usize,
+    arrivals: &[f64],
+    windows: &[(usize, usize)],
+    policy: &SchedPolicy,
+    src: &mut S,
+) -> ScheduleSummary {
+    let n_w = windows.len();
+    let w_max = windows.iter().map(|w| w.1 - w.0).max().unwrap_or(0);
+    let mut finish_times = vec![0.0f64; n_img];
+    let mut wfin = vec![0.0f64; w_max * n_nodes];
+    let mut st = ArrayState {
+        array_free: 0.0,
+        any_prev: false,
+        busy: 0.0,
+        makespan: 0.0,
+    };
+    let mut steady_windows = 0usize;
+    // the execution entering each window: the previous window's last
+    // job (its last image's last topo node at that image's realized
+    // duration) — read off the previous template, which stored the bit
+    let mut entry_prev_dur = 0.0f64;
+    let mut entry_any_prev = false;
+
+    for (w, &(lo, hi)) in windows.iter().enumerate() {
+        // the server waits until the window's last request arrives
+        // (identical fold to the engine: 0-seeded max over the slice)
+        let mut t0 = 0.0f64;
+        for &a in &arrivals[lo..hi] {
+            t0 = t0.max(a);
+        }
+        let tpl = src.resolve(lo, hi, entry_prev_dur, entry_any_prev);
+        let mut filled = false;
+        if policy.steady && w >= 1 && n_w - w >= STEADY_MIN_WINDOWS {
+            if let Some(info) = tpl.steady.as_ref() {
+                if st.array_free - t0 >= info.theta {
+                    for (s, out) in finish_times[lo..hi].iter_mut().enumerate() {
+                        *out = st.array_free + info.off[s];
+                    }
+                    st.busy += info.busy_delta;
+                    st.array_free += info.delta;
+                    st.makespan = st.makespan.max(st.array_free);
+                    steady_windows += 1;
+                    filled = true;
+                }
+            }
+        }
+        if !filled {
+            replay(&tpl, t0, &mut st, &mut wfin, &mut finish_times[lo..hi]);
+        }
+        entry_prev_dur = tpl.dur.last().copied().unwrap_or(0.0);
+        entry_any_prev = n_nodes > 0;
+    }
+
+    ScheduleSummary {
+        finish_times,
+        makespan: st.makespan,
+        busy: st.busy,
+        n_jobs: n_img * n_nodes,
+        steady_windows,
+    }
 }
 
 /// [`evaluate_windows`] under per-request durations: `rows[img ·
 /// dag.len() + node]` is request `img`'s wall time on `node`
 /// ([`crate::serve::density::realized_rows`]). Bit-identical to
 /// [`PipelineSchedule::build_windows_dynamic`] — the replay executes the
-/// same f64 operations in the same order — with the steady-state layer
-/// disengaged unconditionally (`steady_windows` is always 0 here):
-/// windows stop being identical the moment per-request densities vary,
-/// so extrapolation has no invariant to stand on. Template memoization
-/// still applies, keyed on the realized duration block
-/// ([`wave_key_dyn`]), which repeats across windows whenever requests
-/// quantize to the same density levels.
+/// same f64 operations in the same order — until the *ensemble*
+/// steady-state layer engages on a saturated deep backlog
+/// ([`drive_dynamic`]), which is bounded-error (< 1e-9 relative, the
+/// same n·ε contract as the static layer) and gated off for small runs
+/// by [`STEADY_MIN_WINDOWS`]. Template memoization applies per window,
+/// keyed on the realized duration block ([`wave_key_dyn`]), which
+/// repeats across windows whenever requests quantize to the same
+/// density levels.
 pub fn evaluate_windows_dynamic(
     dag: &LayerDag,
     rows: &[f64],
@@ -1081,57 +1407,13 @@ pub fn evaluate_windows_dynamic(
     {
         return exact();
     }
-
-    let last_node = dag.topo_order().last().copied();
-    let mut finish_times = vec![0.0f64; n_img];
-    let mut wfin = vec![0.0f64; w_max * n_nodes];
-    let mut st = ArrayState {
-        array_free: 0.0,
-        any_prev: false,
-        busy: 0.0,
-        makespan: 0.0,
+    let mut src = RowsSource {
+        dag,
+        rows,
+        overlap,
+        memoize: policy.memoize,
     };
-
-    for (w, &(lo, hi)) in windows.iter().enumerate() {
-        let width = hi - lo;
-        // the server waits until the window's last request arrives
-        // (identical fold to the engine: 0-seeded max over the slice)
-        let mut t0 = 0.0f64;
-        for &a in &arrivals[lo..hi] {
-            t0 = t0.max(a);
-        }
-        // the execution entering this window is the previous window's
-        // last job: its last image's last topo node, at that image's own
-        // realized duration
-        let (entry_prev_dur, entry_any_prev) = if w == 0 {
-            (0.0, false)
-        } else {
-            let prev_last_img = windows[w - 1].1 - 1;
-            (
-                last_node.map_or(0.0, |n| rows[prev_last_img * n_nodes + n]),
-                last_node.is_some(),
-            )
-        };
-        let wdur = &rows[lo * n_nodes..hi * n_nodes];
-        let tpl = resolve_dyn(
-            dag,
-            wdur,
-            overlap,
-            width,
-            entry_prev_dur,
-            entry_any_prev,
-            policy.memoize,
-        );
-        replay(&tpl, t0, &mut st, &mut wfin, &mut finish_times[lo..hi]);
-    }
-
-    ScheduleSummary {
-        finish_times,
-        makespan: st.makespan,
-        busy: st.busy,
-        n_jobs: n_img * n_nodes,
-        steady_windows: 0,
-    }
+    drive_dynamic(n_img, n_nodes, arrivals, windows, policy, &mut src)
 }
 
 /// [`evaluate`]'s dynamic twin: fixed arrival-order windows of `batch`
@@ -1156,6 +1438,96 @@ pub fn evaluate_dynamic(
         lo = hi;
     }
     evaluate_windows_dynamic(dag, rows, arrivals, &windows, overlap, policy)
+}
+
+/// [`evaluate_windows_dynamic`] over a lazily-evaluated [`RowStream`]
+/// instead of materialized rows — the million-request dynamic fast
+/// path. Peak allocation is O(batch·L) scratch plus the bounded global
+/// template cache; the schedule is bit-identical to the rows-based
+/// evaluator on `src.materialize(R)` for *every* policy (both run
+/// [`drive_dynamic`] on bit-identical templates — the alphabet cache
+/// key is full-content, so hits never perturb a bit). The exact-engine
+/// opt-out (`--no-fastpath`) materializes the rows, since the exact
+/// engine is O(R·L) by nature.
+pub fn evaluate_windows_streamed(
+    dag: &LayerDag,
+    src: &RowStream,
+    arrivals: &[f64],
+    windows: &[(usize, usize)],
+    overlap: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    let n_img = arrivals.len();
+    let n_nodes = dag.len();
+    assert_eq!(
+        src.n_nodes(),
+        n_nodes,
+        "stream must price one duration per DAG node"
+    );
+    let exact = || {
+        let rows = src.materialize(n_img);
+        ScheduleSummary::from_schedule(&PipelineSchedule::build_windows_dynamic(
+            dag, &rows, arrivals, windows, overlap,
+        ))
+    };
+    if !policy.fastpath {
+        return exact();
+    }
+    debug_assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "arrivals must be sorted"
+    );
+    let overlap = overlap.clamp(0.0, MAX_OVERLAP);
+    if n_img == 0 {
+        return ScheduleSummary {
+            finish_times: Vec::new(),
+            makespan: 0.0,
+            busy: 0.0,
+            n_jobs: 0,
+            steady_windows: 0,
+        };
+    }
+    // template scratch indices are u32 over one window; a window too
+    // wide to index falls back to the exact engine rather than truncate
+    let w_max = windows.iter().map(|w| w.1 - w.0).max().unwrap_or(0);
+    if !w_max
+        .checked_mul(n_nodes)
+        .is_some_and(|x| x <= u32::MAX as usize)
+    {
+        return exact();
+    }
+    let mut stream_src = StreamSource {
+        dag,
+        src,
+        overlap,
+        memoize: policy.memoize,
+        lvbuf: Vec::new(),
+        levels: Vec::new(),
+        wdur: Vec::new(),
+    };
+    drive_dynamic(n_img, n_nodes, arrivals, windows, policy, &mut stream_src)
+}
+
+/// [`evaluate_dynamic`]'s streamed twin: fixed arrival-order windows of
+/// `batch` requests over a [`RowStream`].
+pub fn evaluate_streamed(
+    dag: &LayerDag,
+    src: &RowStream,
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    let batch = batch.max(1);
+    let n_img = arrivals.len();
+    let mut windows = Vec::with_capacity(n_img.div_ceil(batch));
+    let mut lo = 0;
+    while lo < n_img {
+        let hi = (lo + batch).min(n_img);
+        windows.push((lo, hi));
+        lo = hi;
+    }
+    evaluate_windows_streamed(dag, src, arrivals, &windows, overlap, policy)
 }
 
 #[cfg(test)]
@@ -1520,34 +1892,72 @@ mod tests {
                     summary_bits_equal(&exact, &fast),
                     "case {case}: dynamic fast path diverged (policy {policy:?})"
                 );
-                assert_eq!(fast.steady_windows, 0, "dynamic never extrapolates");
+                assert_eq!(
+                    fast.steady_windows, 0,
+                    "small dynamic run must not extrapolate"
+                );
             }
         }
     }
 
     #[test]
-    fn dynamic_steady_layer_never_engages_even_when_saturated() {
-        // a deep zero-arrival backlog with *uniform* rows would satisfy
-        // every static steady-state precondition — the dynamic path must
-        // still refuse to extrapolate and instead stay bit-exact
+    fn dynamic_steady_engages_on_saturated_backlog_within_bound() {
+        // the ensemble steady-state layer: a deep zero-arrival backlog
+        // under *varying* per-request rows must extrapolate window by
+        // window — each against its own template's threshold — and stay
+        // within the n·ε bound of the exact dynamic engine
         let dag = LayerDag::chain(4);
-        let d = [0.3, 0.1, 0.2, 0.15];
+        let base = [0.3, 0.1, 0.2, 0.15];
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_0092);
         let n_img = 2000usize;
-        let rows: Vec<f64> = (0..n_img).flat_map(|_| d.iter().copied()).collect();
+        // 4 quantized duration levels per node, varying per request
+        let rows: Vec<f64> = (0..n_img)
+            .flat_map(|_| {
+                let jit = 1.0 + rng.gen_below(4) as f64 * 0.05;
+                base.iter().map(move |d| d * jit).collect::<Vec<_>>()
+            })
+            .collect();
         let arrivals = vec![0.0; n_img];
-        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build(
-            &dag, &d, &arrivals, 8, 0.6,
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows_dynamic(
+            &dag,
+            &rows,
+            &arrivals,
+            &(0..n_img / 8).map(|w| (w * 8, w * 8 + 8)).collect::<Vec<_>>(),
+            0.6,
         ));
         let fast = evaluate_dynamic(&dag, &rows, &arrivals, 8, 0.6, &SchedPolicy::default());
-        assert_eq!(fast.steady_windows, 0, "dynamic mode must disengage steady");
-        assert!(
-            summary_bits_equal(&exact, &fast),
-            "uniform rows must reproduce the static schedule bit-exactly"
+        assert!(fast.steady_windows > 0, "ensemble steady must engage");
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+        assert!(rel(fast.makespan, exact.makespan) < 1e-9);
+        assert!(rel(fast.busy, exact.busy) < 1e-9);
+        for (f, e) in fast.finish_times.iter().zip(&exact.finish_times) {
+            assert!(rel(*f, *e) < 1e-9, "{f} vs {e}");
+        }
+        assert_eq!(fast.n_jobs, exact.n_jobs);
+        // with the layer off the run is bit-exact again
+        let no_steady = evaluate_dynamic(
+            &dag,
+            &rows,
+            &arrivals,
+            8,
+            0.6,
+            &SchedPolicy::default().with_steady(false),
         );
-        // sanity: the *static* fastpath on the same workload does engage,
-        // proving the dynamic refusal above is load-bearing
-        let st = evaluate(&dag, &d, &arrivals, 8, 0.6, &SchedPolicy::default());
-        assert!(st.steady_windows > 0);
+        assert!(summary_bits_equal(&exact, &no_steady));
+        assert_eq!(no_steady.steady_windows, 0);
+        // spread arrivals keep catching the array up: the run must stay
+        // on the bit-exact path (saturation gate is load-bearing)
+        let spread: Vec<f64> = (0..n_img).map(|i| i as f64 * 2.0).collect();
+        let es = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows_dynamic(
+            &dag,
+            &rows,
+            &spread,
+            &(0..n_img / 8).map(|w| (w * 8, w * 8 + 8)).collect::<Vec<_>>(),
+            0.6,
+        ));
+        let fs = evaluate_dynamic(&dag, &rows, &spread, 8, 0.6, &SchedPolicy::default());
+        assert_eq!(fs.steady_windows, 0);
+        assert!(summary_bits_equal(&es, &fs));
     }
 
     #[test]
@@ -1607,7 +2017,7 @@ mod tests {
         let dag = LayerDag::chain(3);
         let rows: Vec<f64> = (0..8).flat_map(|_| [0.017, 0.029, 0.041]).collect();
         let arrivals = vec![0.0; 8];
-        let g = WaveCache::global();
+        let g = WaveCache::global_dyn();
         let policy = SchedPolicy::default();
         let a = evaluate_dynamic(&dag, &rows, &arrivals, 4, 0.6, &policy);
         let (h0, _) = g.counters();
@@ -1649,5 +2059,203 @@ mod tests {
             assert!(rel(*f, *e) < 1e-9, "{f} vs {e}");
         }
         assert!(rel(fm.makespan, em.makespan) < 1e-9);
+    }
+
+    use crate::serve::density::{DensityModel, RowStream, DENSITY_LEVELS};
+
+    fn test_wall(rng: &mut Rng, n_nodes: usize) -> Vec<Vec<f64>> {
+        (0..n_nodes)
+            .map(|_| {
+                let base = 0.01 + rng.gen_f64() * 0.5;
+                (0..DENSITY_LEVELS)
+                    .map(|lv| base * (1.0 + lv as f64 * 0.07))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn streamed_matches_rows_based_bitwise_for_every_policy() {
+        // the streamed evaluator and the rows-based evaluator share
+        // drive_dynamic and resolve bit-identical templates, so they
+        // must agree bit for bit under every policy — including when
+        // the ensemble steady layer engages
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_00a0);
+        for case in 0..40u64 {
+            let n_nodes = 1 + rng.gen_below(5) as usize;
+            let dag = random_dag(&mut rng, n_nodes);
+            let wall = test_wall(&mut rng, n_nodes);
+            let model = DensityModel::Uniform { lo: 0.1, hi: 0.9 };
+            let src = RowStream::new(model, 1000 + case, &[], &wall);
+            let n_img = 1 + rng.gen_below(40) as usize;
+            let rows = src.materialize(n_img);
+            let mut t = 0.0f64;
+            let arrivals: Vec<f64> = (0..n_img)
+                .map(|_| {
+                    t += rng.gen_f64() * 0.3;
+                    t
+                })
+                .collect();
+            let windows = random_windows(&mut rng, n_img, 6);
+            let overlap = rng.gen_f64();
+            for policy in [
+                SchedPolicy::default(),
+                SchedPolicy::default().with_memoize(false),
+                SchedPolicy::default().with_steady(false),
+                SchedPolicy::exact(),
+            ] {
+                let by_rows = evaluate_windows_dynamic(
+                    &dag, &rows, &arrivals, &windows, overlap, &policy,
+                );
+                let by_stream = evaluate_windows_streamed(
+                    &dag, &src, &arrivals, &windows, overlap, &policy,
+                );
+                assert!(
+                    summary_bits_equal(&by_rows, &by_stream),
+                    "case {case}: streamed diverged from rows (policy {policy:?})"
+                );
+                assert_eq!(by_rows.steady_windows, by_stream.steady_windows);
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_steady_engages_and_matches_exact_within_bound() {
+        // deep closed-loop backlog through the streaming path: the
+        // ensemble steady layer must engage and track the exact dynamic
+        // engine within the documented bound; disengaged it is bit-exact
+        let dag = LayerDag::chain(4);
+        let mut rng = Rng::seed_from_u64(0xc0de_cafe_00a1);
+        let wall = test_wall(&mut rng, 4);
+        let model = DensityModel::Bimodal { lo: 0.15, hi: 0.8, p: 0.35 };
+        let src = RowStream::new(model, 2024, &[], &wall);
+        let n_img = 2000usize;
+        let arrivals = vec![0.0; n_img];
+        let rows = src.materialize(n_img);
+        let windows: Vec<(usize, usize)> =
+            (0..n_img / 8).map(|w| (w * 8, w * 8 + 8)).collect();
+        let exact = ScheduleSummary::from_schedule(&PipelineSchedule::build_windows_dynamic(
+            &dag, &rows, &arrivals, &windows, 0.6,
+        ));
+        let fast = evaluate_streamed(&dag, &src, &arrivals, 8, 0.6, &SchedPolicy::default());
+        assert!(fast.steady_windows > 0, "streamed steady must engage");
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-300);
+        assert!(rel(fast.makespan, exact.makespan) < 1e-9);
+        assert!(rel(fast.busy, exact.busy) < 1e-9);
+        for (f, e) in fast.finish_times.iter().zip(&exact.finish_times) {
+            assert!(rel(*f, *e) < 1e-9, "{f} vs {e}");
+        }
+        let no_steady = evaluate_streamed(
+            &dag,
+            &src,
+            &arrivals,
+            8,
+            0.6,
+            &SchedPolicy::default().with_steady(false),
+        );
+        assert!(summary_bits_equal(&exact, &no_steady));
+        // and the exact opt-out materializes to the same engine output
+        let opt_out = evaluate_streamed(&dag, &src, &arrivals, 8, 0.6, &SchedPolicy::exact());
+        assert!(summary_bits_equal(&exact, &opt_out));
+    }
+
+    #[test]
+    fn alphabet_keys_are_full_content_and_prefix_distinct() {
+        let dag = LayerDag::chain(2);
+        let levels = [3u8, 7, 3, 7];
+        let k = |tid: u64, lv: &[u8], ov: f64, w: usize, pd: f64, ap: bool| {
+            wave_key_alphabet(&dag, tid, lv, ov, w, pd, ap)
+        };
+        let base = k(5, &levels, 0.5, 2, 0.2, true);
+        assert_eq!(base, k(5, &levels, 0.5, 2, 0.2, true));
+        assert_eq!(base.0[0], ALPHABET_MARKER);
+        // prefix-distinct from both other key families
+        let d = [0.1, 0.2];
+        let rows = [0.1, 0.2, 0.1, 0.2];
+        assert_ne!(base.0[0], wave_key(&dag, &d, 0.5, 2, 0.2, true).0[0]);
+        assert_ne!(base.0[0], wave_key_dyn(&dag, &rows, 0.5, 2, 0.2, true).0[0]);
+        // every component is content: table id, any level, width,
+        // overlap, entry state, and the DAG walk
+        assert_ne!(base, k(6, &levels, 0.5, 2, 0.2, true));
+        let mut lv2 = levels;
+        lv2[3] = 8;
+        assert_ne!(base, k(5, &lv2, 0.5, 2, 0.2, true));
+        assert_ne!(base, k(5, &levels[..2], 0.5, 1, 0.2, true));
+        assert_ne!(base, k(5, &levels, 0.6, 2, 0.2, true));
+        assert_ne!(base, k(5, &levels, 0.5, 2, 0.3, true));
+        assert_ne!(base, k(5, &levels, 0.5, 2, 0.2, false));
+        let split = LayerDag::new(vec![vec![], vec![]]).unwrap();
+        assert_ne!(base, wave_key_alphabet(&split, 5, &levels, 0.5, 2, 0.2, true));
+        // packing: 17 levels spill into a second word, all bits kept
+        let chain1 = LayerDag::chain(1);
+        let many: Vec<u8> = (0..17).map(|i| (i % 16) as u8).collect();
+        let ka = wave_key_alphabet(&chain1, 0, &many, 0.5, 17, 0.1, true);
+        let mut many2 = many.clone();
+        many2[16] = 9;
+        assert_ne!(ka, wave_key_alphabet(&chain1, 0, &many2, 0.5, 17, 0.1, true));
+    }
+
+    #[test]
+    fn alphabet_cache_shares_templates_across_streamed_runs() {
+        // two streamed runs over the same stream hit the dynamic global
+        // cache the second time — template + steady built once per
+        // distinct window alphabet
+        let dag = LayerDag::chain(3);
+        let wall = test_wall(&mut Rng::seed_from_u64(0xc0de_cafe_00a2), 3);
+        let model = DensityModel::Bimodal { lo: 0.2, hi: 0.7, p: 0.5 };
+        let src = RowStream::new(model, 31337, &[], &wall);
+        let arrivals = vec![0.0; 64];
+        let policy = SchedPolicy::default();
+        let a = evaluate_streamed(&dag, &src, &arrivals, 4, 0.6, &policy);
+        let g = WaveCache::global_dyn();
+        let (h0, _) = g.counters();
+        let b = evaluate_streamed(&dag, &src, &arrivals, 4, 0.6, &policy);
+        let (h1, _) = g.counters();
+        assert!(summary_bits_equal(&a, &b));
+        assert!(h1 > h0, "repeat run must hit the alphabet template cache");
+    }
+
+    #[test]
+    fn dyn_cache_is_bounded_and_keeps_admitted_alphabet_entries() {
+        // capacity regression for the dynamic cache family: a private
+        // bounded instance fed distinct alphabet keys never exceeds its
+        // ceiling, and admitted entries stay intact
+        let cache = WaveCache::bounded(2, 4);
+        assert_eq!(cache.capacity(), 8);
+        let dag = LayerDag::chain(2);
+        let mut admitted = Vec::new();
+        for i in 0..100u64 {
+            let wdur = [0.1 + i as f64 * 1e-3, 0.2, 0.11, 0.21];
+            let levels = [(i % 16) as u8, ((i / 16) % 16) as u8, 1, 2];
+            let key = wave_key_alphabet(&dag, i, &levels, 0.5, 2, 0.2, true);
+            let tpl = Arc::new(build_template_dyn(&dag, &wdur, 0.5, 2, 0.2, true));
+            cache.insert(key.clone(), tpl);
+            if cache.get(&key).is_some() {
+                admitted.push((key, wdur[0]));
+            }
+            assert!(cache.len() <= cache.capacity());
+        }
+        assert!(!admitted.is_empty());
+        for (key, d0) in &admitted {
+            let t = cache.get(key).expect("admitted entry evaporated");
+            assert_eq!(t.dur[0].to_bits(), d0.to_bits());
+        }
+        // the process-wide instance honours the documented defaults
+        // (sizing knobs are read once at first use)
+        let g = WaveCache::global_dyn();
+        assert!(g.capacity() >= 1);
+    }
+
+    #[test]
+    fn dynamic_templates_now_carry_steady_info() {
+        // the PR-6 recurrence runs per dynamic template: mid-window
+        // templates (entry_any_prev) carry SteadyInfo, first windows
+        // don't (no predecessor to saturate against)
+        let dag = LayerDag::chain(3);
+        let wdur = [0.3, 0.1, 0.2, 0.25, 0.12, 0.18];
+        let mid = build_template_dyn(&dag, &wdur, 0.6, 2, 0.2, true);
+        assert!(mid.steady.is_some(), "mid dynamic template must analyse steady");
+        let first = build_template_dyn(&dag, &wdur, 0.6, 2, 0.0, false);
+        assert!(first.steady.is_none(), "entry window cannot extrapolate");
     }
 }

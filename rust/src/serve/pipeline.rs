@@ -213,6 +213,11 @@ impl PipelineSchedule {
     /// node; with every row equal to the static duration vector the
     /// result is bit-identical to [`PipelineSchedule::build_windows`]
     /// (same operations in the same order — `tests` lock this).
+    ///
+    /// This O(R·L) exact builder is the oracle the streamed dynamic
+    /// fast path ([`crate::serve::fastpath::evaluate_windows_streamed`])
+    /// is gated against: bit-equal at small R, within 1e-9 relative
+    /// once ensemble steady state engages.
     pub fn build_windows_dynamic(
         dag: &LayerDag,
         rows: &[f64],

@@ -205,7 +205,8 @@ impl ArrivalProcess {
                 };
                 if burst >= 2.0 {
                     return Err(format!(
-                        "arrival spec '{spec}': burst must be in (0, 2) so both states keep a positive rate"
+                        "arrival spec '{spec}': burst must be in (0, 2) so both states \
+                         keep a positive rate"
                     ));
                 }
                 let switch = match parts.get(2) {
@@ -460,6 +461,31 @@ pub fn evaluate_with_slo_dynamic(
     }
     let w = windows(arrivals, batch, slo);
     fastpath::evaluate_windows_dynamic(dag, rows, arrivals, &w, overlap, policy)
+}
+
+/// [`evaluate_with_slo_dynamic`] over a lazily-evaluated
+/// [`crate::serve::density::RowStream`] — the O(batch·L)-memory funnel
+/// every serving/cluster dynamic hot path routes through. Same shape:
+/// infinite `slo` takes fixed windows
+/// ([`fastpath::evaluate_streamed`]), finite `slo` forms the identical
+/// [`windows`] partition and streams it through
+/// [`fastpath::evaluate_windows_streamed`]. Bit-identical to the
+/// rows-based funnel on `src.materialize(R)` for every policy.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_with_slo_streamed(
+    dag: &LayerDag,
+    src: &crate::serve::density::RowStream,
+    arrivals: &[f64],
+    batch: usize,
+    overlap: f64,
+    slo: f64,
+    policy: &SchedPolicy,
+) -> ScheduleSummary {
+    if !slo.is_finite() {
+        return fastpath::evaluate_streamed(dag, src, arrivals, batch, overlap, policy);
+    }
+    let w = windows(arrivals, batch, slo);
+    fastpath::evaluate_windows_streamed(dag, src, arrivals, &w, overlap, policy)
 }
 
 /// Closed-loop autoscaler parameters.

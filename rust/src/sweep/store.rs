@@ -484,7 +484,9 @@ mod tests {
         // metric. The key is the independently computed FNV-1a of the
         // historical canonical form "alexnet|avg|16x16|4,4,4|r4|ce1|
         // r16:0000000000000000|seed24301|n2|t4" — the traffic axes must
-        // not perturb it.
+        // not perturb it. (One >100-col line on purpose: the fixture is
+        // a byte-exact historical store line, and rustfmt never splits
+        // string literals.)
         let line = r#"{"key": "66e2f3d3dc218ebf", "job": {"ce": true, "cols": 16, "fifo": [4, 4, 4], "model": "alexnet", "ratio": 4, "ratio16": 0, "rows": 16, "samples": 2, "seed": "24301", "stride": 4, "workload": "avg"}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "naive_wall": 0.0045, "onchip_ee": 1.8, "total_ee": 2.9, "s2_wall": 0.00125, "speedup": 3.6}}"#;
         let rec = SweepRecord::from_json_line(line).unwrap();
         assert!(rec.job.is_default_arrival());
@@ -518,7 +520,9 @@ mod tests {
         // (serving metrics present, no cluster metrics, no arrays/shard
         // job fields). This is the forward-compatibility contract: old
         // stores must keep resuming, with the cluster fields reported as
-        // not-measured rather than as zeros.
+        // not-measured rather than as zeros. (One >100-col line on
+        // purpose: byte-exact historical store line; rustfmt never
+        // splits string literals.)
         let line = r#"{"key": "b6f23c1520d9bff9", "job": {"ce": true, "cols": 8, "fifo": [4, 4, 4], "model": "alexnet", "ratio": 4, "ratio16": 0, "rows": 8, "samples": 2, "seed": "1", "stride": 4, "workload": "avg", "batch": 4, "overlap": 0.5}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "naive_wall": 0.0045, "onchip_ee": 1.8, "total_ee": 2.9, "p50": 0.0013, "p95": 0.0026, "p99": 0.0029, "s2_wall": 0.00125, "speedup": 3.6, "throughput": 812.5, "occupancy": 0.87}}"#;
         let rec = SweepRecord::from_json_line(line).unwrap();
         // the job parses to the cluster defaults and keeps its key
@@ -549,7 +553,9 @@ mod tests {
         // canonical "alexnet|avg|8x8|4,4,4|r4|ce1|r16:0000000000000000|
         // seed1|n2|t4|b4|ov:3fe0000000000000|a4|sh:data|arr:poisson:
         // 4089000000000000|slo:3f947ae147ae147b" — the chaos axes must
-        // not perturb it, so pre-chaos stores keep resuming.
+        // not perturb it, so pre-chaos stores keep resuming. (One
+        // >100-col line on purpose: byte-exact historical store line;
+        // rustfmt never splits string literals.)
         let line = r#"{"key": "013e001f187e2f4b", "job": {"arrays": 4, "arrival": "poisson:800", "batch": 4, "ce": true, "cols": 8, "fifo": [4, 4, 4], "model": "alexnet", "overlap": 0.5, "ratio": 4, "ratio16": 0, "rows": 8, "samples": 2, "seed": "1", "shard": "data", "slo": 0.02, "stride": 4, "workload": "avg"}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "cluster_makespan": 0.0042, "cluster_occ": 0.81, "cluster_p99": 0.0031, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "link_bytes": 2500000, "naive_wall": 0.0045, "occupancy": 0.87, "onchip_ee": 1.8, "p50": 0.0013, "p95": 0.0026, "p99": 0.0029, "s2_wall": 0.00125, "scaleout": 0.93, "speedup": 3.6, "throughput": 812.5, "total_ee": 2.9}}"#;
         let rec = SweepRecord::from_json_line(line).unwrap();
         // the job parses to the chaos defaults and keeps its key

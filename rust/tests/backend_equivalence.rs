@@ -162,6 +162,8 @@ fn default_backend_job_keys_and_legacy_store_line_stay_valid() {
     // `backend` job field; key computed before the axis existed). The
     // forward-compatibility contract: it must parse to backend=s2 and
     // recompute the SAME key, or every pre-backend store stops resuming.
+    // (One >100-col line on purpose: byte-exact historical store line;
+    // rustfmt never splits string literals.)
     let line = r#"{"key": "b6f23c1520d9bff9", "job": {"ce": true, "cols": 8, "fifo": [4, 4, 4], "model": "alexnet", "ratio": 4, "ratio16": 0, "rows": 8, "samples": 2, "seed": "1", "stride": 4, "workload": "avg", "batch": 4, "overlap": 0.5}, "metrics": {"access_reduction": 2.1, "area_eff": 3.3, "e_ce": 100000000, "e_dram": 7000000000, "e_fifo": 300000000, "e_mac": 1000000000, "e_other": 50000000, "e_sram": 2000000000, "layer0_fd": 0.39, "naive_wall": 0.0045, "onchip_ee": 1.8, "total_ee": 2.9, "p50": 0.0013, "p95": 0.0026, "p99": 0.0029, "s2_wall": 0.00125, "speedup": 3.6, "throughput": 812.5, "occupancy": 0.87}}"#;
     let rec = SweepRecord::from_json_line(line).unwrap();
     assert_eq!(rec.job.backend, BackendKind::S2);

@@ -58,6 +58,8 @@ REQUIRED = {
         "scale/fastpath-speedup-r1e6",
         "scale/sim-reqs-per-s-r1e6",
         "scale/steady-gain-r1e6",
+        "model/dyn-sim-reqs-per-s-r1e6",
+        "model/dyn-fastpath-speedup-r1e6",
     ],
     "BENCH_cluster.json": [
         "model/scaleout-eff-data-n4",

@@ -41,15 +41,22 @@ arrivals outrun the array.
 
 And the dynamic-density oracle (`dynamic_density_oracle`): a
 transcription of rust/src/serve/density.rs (salted per-request xoshiro
-streams, 16-level quantization, `realized_rows`) plus the dynamic
-scheduler pair — `PipelineSchedule::build_windows_dynamic` and
-`fastpath::evaluate_windows_dynamic` (per-window templates keyed on the
-realized duration block, steady-state layer disengaged). Fuzzed for
-bit-equality between the exact and fast-path engines across thousands
-of sampled-density cases (every model family, chain and skip DAGs,
-batch and SLO window partitions), and for the degenerate anchor: rows
-that all equal the static duration vector must reproduce the static
-builder bit for bit.
+streams, 16-level quantization, `realized_rows` and the lazily
+evaluated `RowStream`) plus the dynamic scheduler family —
+`PipelineSchedule::build_windows_dynamic`, the shared `drive_dynamic`
+loop behind `fastpath::evaluate_windows_dynamic` (materialized rows)
+and `fastpath::evaluate_windows_streamed` (window-by-window streaming
+with the template-alphabet cache), and the per-template ensemble
+steady-state layer. Fuzzed for bit-equality between the exact engine,
+the rows-based fast path, and the streamed fast path (with the
+alphabet cache both on and off — a too-coarse cache key would diverge
+on some sampled case) across thousands of sampled-density cases
+(every model family, chain and skip DAGs, batch and SLO window
+partitions); for the ensemble steady layer engaging on saturated
+deep backlogs within the documented <1e-9 relative bound while
+spread arrivals and `steady=False` stay bit-exact; and for the
+degenerate anchor: rows that all equal the static duration vector
+must reproduce the static builder bit for bit.
 
 And the traffic-engine oracle (`traffic_oracle`): a transcription of
 rust/src/util/rng.rs (SplitMix64 -> xoshiro256++) and the arrival
@@ -557,10 +564,15 @@ def build_dynamic(n_nodes, deps, topo, rows, arrivals, windows, overlap, sinks):
 
 
 def build_template_dyn(n_nodes, deps, topo, sinks, wdur, overlap, width,
-                       entry_prev_dur):
-    """Transcription of fastpath::build_template_dyn (steady: None —
-    the dynamic path never extrapolates)."""
+                       entry_prev_dur, entry_any_prev):
+    """Transcription of fastpath::build_template_dyn: per-window wave
+    program over the realized duration block, now carrying its own
+    `_steady_info` (the per-template max-plus recurrence the ensemble
+    steady-state layer fills saturated windows with)."""
     dur, cut, depidx, dep_off, slot = [], [], [], [0], []
+    topo_pos = [0] * n_nodes
+    for i, n in enumerate(topo):
+        topo_pos[n] = i
     prev_dur = entry_prev_dur
     for node in topo:
         for s in range(width):
@@ -572,13 +584,60 @@ def build_template_dyn(n_nodes, deps, topo, sinks, wdur, overlap, width,
             dep_off.append(len(depidx))
             slot.append(s * n_nodes + node)
             prev_dur = d
+    steady = _steady_info(
+        n_nodes, deps, topo, width, dur, cut, topo_pos, sinks, entry_any_prev
+    )
     return {"width": width, "n_nodes": n_nodes, "dur": dur, "cut": cut,
             "deps": depidx, "dep_off": dep_off, "slot": slot,
-            "sinks": sinks, "steady": None}
+            "sinks": sinks, "steady": steady}
+
+
+def _drive_dynamic(n_nodes, arrivals, windows, resolve, steady=True):
+    """Transcription of fastpath::drive_dynamic — the shared dynamic
+    scheduling loop behind both evaluate_windows_dynamic (rows) and
+    evaluate_windows_streamed (RowStream): per-window template
+    resolution chained through the entry execution state, with the
+    per-template *ensemble* steady-state layer (a window is a pure
+    F-shift whenever its own saturation threshold holds)."""
+    n_w = len(windows)
+    w_max = max((hi - lo for lo, hi in windows), default=0)
+    n_img = len(arrivals)
+    finish_times = [0.0] * n_img
+    wfin = [0.0] * (w_max * n_nodes)
+    st = [0.0, False, 0.0, 0.0]
+    steady_windows = 0
+    entry_prev_dur = 0.0
+    entry_any_prev = False
+    for w, (lo, hi) in enumerate(windows):
+        t0 = 0.0
+        for a in arrivals[lo:hi]:
+            t0 = max(t0, a)
+        tpl = resolve(lo, hi, entry_prev_dur, entry_any_prev)
+        filled = False
+        if (
+            steady
+            and w >= 1
+            and n_w - w >= STEADY_MIN_WINDOWS
+            and tpl["steady"] is not None
+        ):
+            info = tpl["steady"]
+            if st[0] - t0 >= info["theta"]:
+                for s in range(hi - lo):
+                    finish_times[lo + s] = st[0] + info["off"][s]
+                st[2] += info["busy_delta"]
+                st[0] += info["delta"]
+                st[3] = max(st[3], st[0])
+                steady_windows += 1
+                filled = True
+        if not filled:
+            _replay(tpl, t0, st, wfin, finish_times, lo)
+        entry_prev_dur = tpl["dur"][-1] if tpl["dur"] else 0.0
+        entry_any_prev = n_nodes > 0
+    return finish_times, st[3], st[2], n_img * n_nodes, steady_windows
 
 
 def evaluate_dynamic(n_nodes, deps, topo, rows, arrivals, windows, overlap,
-                     sinks):
+                     sinks, steady=True):
     """Transcription of fastpath::evaluate_windows_dynamic (memoization
     is identity in Python — dynamic templates are pure functions of the
     realized duration block, which is exactly what `wave_key_dyn`
@@ -586,28 +645,57 @@ def evaluate_dynamic(n_nodes, deps, topo, rows, arrivals, windows, overlap,
     overlap = min(max(overlap, 0.0), MAX_OVERLAP)
     n_img = len(arrivals)
     if n_img == 0:
-        return [], 0.0, 0.0, 0
-    w_max = max(hi - lo for lo, hi in windows)
-    last_node = topo[-1] if topo else None
-    finish_times = [0.0] * n_img
-    wfin = [0.0] * (w_max * n_nodes)
-    st = [0.0, False, 0.0, 0.0]
-    for w, (lo, hi) in enumerate(windows):
-        width = hi - lo
-        t0 = 0.0
-        for a in arrivals[lo:hi]:
-            t0 = max(t0, a)
-        if w == 0 or last_node is None:
-            entry_prev_dur = 0.0
-        else:
-            prev_last = windows[w - 1][1] - 1
-            entry_prev_dur = rows[prev_last * n_nodes + last_node]
+        return [], 0.0, 0.0, 0, 0
+
+    def resolve(lo, hi, entry_prev_dur, entry_any_prev):
         wdur = rows[lo * n_nodes : hi * n_nodes]
-        tpl = build_template_dyn(
-            n_nodes, deps, topo, sinks, wdur, overlap, width, entry_prev_dur
+        return build_template_dyn(
+            n_nodes, deps, topo, sinks, wdur, overlap, hi - lo,
+            entry_prev_dur, entry_any_prev,
         )
-        _replay(tpl, t0, st, wfin, finish_times, lo)
-    return finish_times, st[3], st[2], n_img * n_nodes
+
+    return _drive_dynamic(n_nodes, arrivals, windows, resolve, steady)
+
+
+def evaluate_streamed(n_nodes, deps, topo, sinks, model, seed, scale, wall,
+                      arrivals, windows, overlap, steady=True, cache=None):
+    """Transcription of fastpath::evaluate_windows_streamed — each
+    window's levels and durations regenerated on demand from the salted
+    per-request stream (RowStream::fill_window), templates resolved
+    through the alphabet cache when `cache` is a dict (the Python
+    spelling of wave_key_alphabet: within one run the DAG, overlap and
+    interned wall table are fixed, so the key carries the varying parts
+    — width, entry execution state, and the packed level block; a
+    too-coarse key would diverge from the rows-based engine on some
+    fuzzed case)."""
+    overlap = min(max(overlap, 0.0), MAX_OVERLAP)
+    n_img = len(arrivals)
+    if n_img == 0:
+        return [], 0.0, 0.0, 0, 0
+
+    def resolve(lo, hi, entry_prev_dur, entry_any_prev):
+        levels = []
+        wdur = []
+        for r in range(lo, hi):
+            lv = sample_levels(model, seed, r, scale, n_nodes)
+            levels.extend(lv)
+            wdur.extend(wall[j][lv[j]] for j in range(n_nodes))
+        if cache is None:
+            return build_template_dyn(
+                n_nodes, deps, topo, sinks, wdur, overlap, hi - lo,
+                entry_prev_dur, entry_any_prev,
+            )
+        key = (hi - lo, _bits(entry_prev_dur), entry_any_prev, tuple(levels))
+        tpl = cache.get(key)
+        if tpl is None:
+            tpl = build_template_dyn(
+                n_nodes, deps, topo, sinks, wdur, overlap, hi - lo,
+                entry_prev_dur, entry_any_prev,
+            )
+            cache[key] = tpl
+        return tpl
+
+    return _drive_dynamic(n_nodes, arrivals, windows, resolve, steady)
 
 
 def _random_density_model(rng):
@@ -657,9 +745,13 @@ def dynamic_density_oracle():
     assert quantize(1.0) == DENSITY_LEVELS - 1
     cases = 7
 
-    # (b) the acceptance gate: exact dynamic engine vs dynamic fast path,
+    # (b) the acceptance gate: exact dynamic engine vs rows-based fast
+    # path vs streamed fast path (alphabet cache on AND off),
     # bit-identical across >= 1k sampled-density cases (chain and skip
     # DAGs, every model family, fixed-batch and SLO window partitions).
+    # Small R keeps the ensemble steady layer structurally disengaged
+    # (< STEADY_MIN_WINDOWS remaining windows), so everything here is
+    # exact replay.
     rng = random.Random(0xD94517)
     for trial in range(4000):
         n = rng.randint(1, 6)
@@ -688,15 +780,31 @@ def dynamic_density_oracle():
         ft, mk, busy, n_jobs = build_dynamic(
             n, deps, topo, rows, arrivals, windows, overlap, sinks
         )
-        f_ft, f_mk, f_busy, f_jobs = evaluate_dynamic(
+        f_ft, f_mk, f_busy, f_jobs, f_sw = evaluate_dynamic(
             n, deps, topo, rows, arrivals, windows, overlap, sinks
         )
         ctx = (trial, n, model[0], batch, overlap, requests)
+        assert f_sw == 0, (ctx, "small dynamic run must not extrapolate")
         assert f_jobs == n_jobs, ctx
         assert _bits(f_mk) == _bits(mk), (ctx, f_mk, mk)
         assert _bits(f_busy) == _bits(busy), (ctx, f_busy, busy)
         for a, b in zip(f_ft, ft):
             assert _bits(a) == _bits(b), (ctx, a, b)
+        # the streamed engine (levels regenerated per window) must match
+        # the rows-based one bit for bit, with the alphabet cache on and
+        # off — a cache key missing any template-determining input would
+        # surface here as a divergence on some sampled case
+        for cache in (None, {}):
+            s_ft, s_mk, s_busy, s_jobs, s_sw = evaluate_streamed(
+                n, deps, topo, sinks, model, seed, scale, wall,
+                arrivals, windows, overlap, cache=cache,
+            )
+            sctx = (ctx, "cached" if cache is not None else "uncached")
+            assert s_sw == f_sw and s_jobs == f_jobs, sctx
+            assert _bits(s_mk) == _bits(f_mk), (sctx, s_mk, f_mk)
+            assert _bits(s_busy) == _bits(f_busy), (sctx, s_busy, f_busy)
+            for a, b in zip(s_ft, f_ft):
+                assert _bits(a) == _bits(b), (sctx, a, b)
         # dynamic chain floor: a request can never finish before its own
         # realized work, window-gated by its admission
         if all(len(d) <= 1 for d in deps):
@@ -730,7 +838,7 @@ def dynamic_density_oracle():
         d_ft, d_mk, d_busy, _ = build_dynamic(
             n, deps, topo, rows, arrivals, windows, overlap, sinks
         )
-        f_ft, f_mk, f_busy, _ = evaluate_dynamic(
+        f_ft, f_mk, f_busy, _, _ = evaluate_dynamic(
             n, deps, topo, rows, arrivals, windows, overlap, sinks
         )
         ctx = (trial, n, batch, overlap, requests)
@@ -740,8 +848,83 @@ def dynamic_density_oracle():
             assert _bits(a) == _bits(b) == _bits(c), (ctx, a, b, c)
         cases += 1
 
+    # (d) the ensemble steady-state layer: a saturated closed-loop
+    # backlog deep enough to clear STEADY_MIN_WINDOWS must fill windows
+    # in closed form (steady_windows > 0) within the documented <1e-9
+    # relative bound, for both the rows-based and streamed engines; the
+    # steady=False opt-out and spread (unsaturated) arrivals must stay
+    # bit-exact against the exact engine even at the same depth.
+    rng = random.Random(0xD94519)
+    for trial in range(60):
+        n = rng.randint(1, 4)
+        deps, topo, sinks = _random_fuzz_dag(rng, n)
+        model = _random_density_model(rng)
+        scale = []
+        wall = [
+            sorted(rng.uniform(1e-4, 1e-2) for _ in range(DENSITY_LEVELS))
+            for _ in range(n)
+        ]
+        seed = rng.randrange(1 << 32)
+        batch = rng.randint(1, 3)
+        overlap = rng.choice([0.0, 0.5, 0.95])
+        n_windows = STEADY_MIN_WINDOWS + rng.randint(2, 20)
+        requests = batch * n_windows
+        rows = realized_rows(model, seed, requests, scale, wall)
+        windows = _fixed_windows(requests, batch)
+        rel = lambda a, b: abs(a - b) / max(abs(b), 1e-300)
+        ctx = (trial, n, model[0], batch, overlap, requests)
+
+        # saturated: everything queued at t = 0
+        arrivals = [0.0] * requests
+        ft, mk, busy, _ = build_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        f_ft, f_mk, f_busy, _, f_sw = evaluate_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        assert f_sw > 0, (ctx, "ensemble steady must engage on a backlog")
+        assert rel(f_mk, mk) < 1e-9, (ctx, f_mk, mk)
+        assert rel(f_busy, busy) < 1e-9, (ctx, f_busy, busy)
+        for a, b in zip(f_ft, ft):
+            assert rel(a, b) < 1e-9, (ctx, a, b)
+        s_ft, s_mk, s_busy, _, s_sw = evaluate_streamed(
+            n, deps, topo, sinks, model, seed, scale, wall,
+            arrivals, windows, overlap, cache={},
+        )
+        assert s_sw == f_sw, (ctx, s_sw, f_sw)
+        assert _bits(s_mk) == _bits(f_mk), (ctx, s_mk, f_mk)
+        assert _bits(s_busy) == _bits(f_busy), ctx
+        for a, b in zip(s_ft, f_ft):
+            assert _bits(a) == _bits(b), (ctx, a, b)
+        o_ft, o_mk, o_busy, _, o_sw = evaluate_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks,
+            steady=False,
+        )
+        assert o_sw == 0, ctx
+        assert _bits(o_mk) == _bits(mk) and _bits(o_busy) == _bits(busy), ctx
+        for a, b in zip(o_ft, ft):
+            assert _bits(a) == _bits(b), (ctx, a, b)
+        cases += 1
+
+        # spread: arrivals outrun the array, the gate never passes and
+        # the whole run stays bit-exact at full depth
+        gap = max(max(r for r in rows), 1e-6) * (n + batch) * 2.0
+        arrivals = [i * gap for i in range(requests)]
+        ft, mk, busy, _ = build_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        f_ft, f_mk, f_busy, _, f_sw = evaluate_dynamic(
+            n, deps, topo, rows, arrivals, windows, overlap, sinks
+        )
+        assert f_sw == 0, (ctx, "idle array must not extrapolate")
+        assert _bits(f_mk) == _bits(mk) and _bits(f_busy) == _bits(busy), ctx
+        for a, b in zip(f_ft, ft):
+            assert _bits(a) == _bits(b), (ctx, a, b)
+        cases += 1
+
     print(f"all {cases} dynamic-density oracle cases are bit-identical "
-          f"(exact vs fast path, static anchor)")
+          f"(exact vs rows vs streamed fast path, ensemble steady, "
+          f"static anchor)")
 
 
 # --- analytic backend transcriptions (rust/src/baseline/*.rs) ---------

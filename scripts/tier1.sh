@@ -24,6 +24,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+# Structural memory gate: the serve/cluster hot paths must stream
+# dynamic-density rows window-by-window (serve::density::RowStream,
+# O(batch·L) scratch) — a realized_rows(...) call reappearing in any of
+# these files would silently reintroduce the O(R·L) materialization.
+# Doc references ([`...realized_rows`]) carry no '(' and don't trip it.
+if grep -n "realized_rows(" \
+    src/serve/mod.rs src/serve/traffic.rs src/serve/fastpath.rs \
+    src/cluster/mod.rs src/cluster/schedule.rs; then
+    echo "tier1: realized_rows materialization is back on a hot path" >&2
+    exit 1
+fi
+
 cargo build --release
 cargo test -q
 cargo test -q -- --test-threads=1
